@@ -1,0 +1,121 @@
+//! §Perf microbenches: step latency breakdown (upload / execute /
+//! download), per-method step cost, eval-forward throughput, and host-
+//! side pipeline costs (batch assembly, option-row packing, SVD).
+//!
+//! This is the harness behind EXPERIMENTS.md §Perf: run before and after
+//! each optimization to record the deltas.
+
+use quanta_ft::bench::{banner, bench};
+use quanta_ft::coordinator::experiment::require_artifacts;
+use quanta_ft::coordinator::tables::Table;
+use quanta_ft::data::batcher::pack_batch;
+use quanta_ft::data::tasks::{self, Sizes};
+use quanta_ft::data::tokenizer::Tokenizer;
+use quanta_ft::linalg::Svd;
+use quanta_ft::runtime::manifest::Manifest;
+use quanta_ft::runtime::session::Session;
+use quanta_ft::tensor::Tensor;
+use quanta_ft::util::rng::Rng;
+
+fn main() {
+    banner("perf_runtime", "L3 hot-path microbenches");
+    let Some(mut runner) = require_artifacts() else { return };
+    let dir = runner.artifacts_dir.clone();
+    let tok = Tokenizer::new();
+
+    // ---- host-side data pipeline ------------------------------------------
+    let sizes = Sizes { train: 256, val: 32, test: 32 };
+    let data = tasks::generate("drop_syn", &tok, 1, sizes).unwrap();
+    let refs: Vec<&_> = data.train.iter().take(8).collect();
+    let st = bench(10, 200, || {
+        let _ = pack_batch(&refs, 8, 64).unwrap();
+    });
+    println!("batch assembly (8x64):              {st}");
+
+    let mut rng = Rng::new(2);
+    let m = Tensor::randn(&[128, 128], 1.0, &mut rng);
+    let st = bench(1, 5, || {
+        let _ = Svd::compute(&m).unwrap();
+    });
+    println!("Jacobi SVD 128x128:                 {st}");
+
+    // ---- per-method train-step latency --------------------------------------
+    let ckpt_for = |arch: &str| -> Vec<f32> {
+        let path = std::path::PathBuf::from(format!("runs/base_{arch}.bin"));
+        if path.exists() {
+            quanta_ft::coordinator::checkpoint::load(&path).unwrap().1
+        } else {
+            let pre = Manifest::load(&dir.join(format!("pretrain_{arch}"))).unwrap();
+            quanta_ft::runtime::init::init_layout(&pre.theta_layout, 0, None).unwrap()
+        }
+    };
+    let mut table = Table::new(&[
+        "set",
+        "theta params",
+        "step mean (ms)",
+        "upload (us)",
+        "execute (us)",
+        "download (us)",
+    ]);
+    for set in [
+        "tiny_lora_r8",
+        "tiny_quanta_n4",
+        "tiny_quanta_n3",
+        "tiny_mora_r32",
+        "tiny_ft",
+        "small_quanta_n4",
+    ] {
+        let man = Manifest::load(&dir.join(set)).unwrap();
+        let arch = set.split('_').next().unwrap();
+        let base = Session::init_base(&man, 0, Some(&ckpt_for(arch))).unwrap();
+        let mut session =
+            Session::load(&runner.client, &dir, set, &base, &["train_step"]).unwrap();
+        let mut state = session.init_state(0).unwrap();
+        let io = session.man.io.clone();
+        let b = pack_batch(
+            &data.train.iter().take(io.batch).collect::<Vec<_>>(),
+            io.batch,
+            io.seq_len,
+        )
+        .unwrap();
+        let mut timing_acc = (0u64, 0u64, 0u64);
+        let mut iters = 0u64;
+        let st = bench(3, 20, || {
+            session.train_step(&mut state, &b.tokens, &b.mask).unwrap();
+            let t = session.last_timing;
+            timing_acc.0 += t.upload_us;
+            timing_acc.1 += t.execute_us;
+            timing_acc.2 += t.download_us;
+            iters += 1;
+        });
+        table.row(vec![
+            set.into(),
+            session.man.io.theta_len.to_string(),
+            format!("{:.2}", st.mean_us / 1000.0),
+            (timing_acc.0 / iters).to_string(),
+            (timing_acc.1 / iters).to_string(),
+            (timing_acc.2 / iters).to_string(),
+        ]);
+    }
+    table.print();
+
+    // ---- eval forward throughput ------------------------------------------
+    let man = Manifest::load(&dir.join("tiny_quanta_n4")).unwrap();
+    let base = Session::init_base(&man, 0, Some(&ckpt_for("tiny"))).unwrap();
+    let session =
+        Session::load(&runner.client, &dir, "tiny_quanta_n4", &base, &["fwd_logits"]).unwrap();
+    let theta = session.init_state(0).unwrap().theta;
+    let io = session.man.io.clone();
+    let tokens: Vec<i32> = (0..io.eval_batch * io.seq_len).map(|i| (i % 300 + 5) as i32).collect();
+    let st = bench(3, 20, || {
+        let _ = session.fwd_logits(&theta, &tokens).unwrap();
+    });
+    let toks_per_s = (io.eval_batch * io.seq_len) as f64 / (st.mean_us / 1e6);
+    println!(
+        "\neval forward (tiny_quanta_n4, {}x{}): {st}  => {:.0} tokens/s",
+        io.eval_batch, io.seq_len, toks_per_s
+    );
+
+    // keep the runner borrow alive for clarity
+    let _ = &mut runner;
+}

@@ -1,0 +1,55 @@
+//! Table 2 reproduction: DROP F1 across fine-tuning methods and model
+//! scales.  Paper shape: LoRA underperforms FT/adapters at every rank;
+//! QuanTA >= FT with a fraction of the parameters; the QuanTA-vs-LoRA
+//! gap persists (grows) at larger scales (13B, 70B analogs).
+
+use quanta_ft::bench::{banner, std_single};
+use quanta_ft::coordinator::experiment::require_artifacts;
+use quanta_ft::coordinator::tables::{pct, score100_std, Table};
+
+fn main() {
+    banner("Table 2", "DROP-analog F1 by method and model scale");
+    let Some(mut runner) = require_artifacts() else { return };
+
+    let rows: &[(&str, &str)] = &[
+        ("tiny (7B-analog)", "tiny_ft"),
+        ("tiny (7B-analog)", "tiny_series"),
+        ("tiny (7B-analog)", "tiny_parallel"),
+        ("tiny (7B-analog)", "tiny_lora_r8"),
+        ("tiny (7B-analog)", "tiny_lora_r32"),
+        ("tiny (7B-analog)", "tiny_lora_r128"),
+        ("tiny (7B-analog)", "tiny_quanta_n4"),
+        ("tiny (7B-analog)", "tiny_quanta_n3"),
+        ("small (13B-analog)", "small_lora_r8"),
+        ("small (13B-analog)", "small_quanta_n4"),
+        ("large (70B-analog)", "large_lora_r8"),
+        ("large (70B-analog)", "large_quanta_n4"),
+    ];
+
+    let mut table = Table::new(&["Model", "PEFT Method", "# Params (%)", "F1 (mean ± std)"]);
+    for (model, set) in rows {
+        // scale rows are skipped when their base model has not been
+        // pretrained yet (quanta-ft pretrain --arch small|large) so the
+        // bench stays within a CI-sized budget.
+        let arch = set.split('_').next().unwrap();
+        if arch != "tiny" && !std::path::Path::new(&format!("runs/base_{arch}.bin")).exists() {
+            eprintln!("SKIP {set}: base_{arch}.bin not pretrained yet");
+            continue;
+        }
+        let spec = std_single(set, "drop_syn");
+        let r = runner.run(&spec).unwrap();
+        let n = r.per_task.get("drop_syn").map(|v| v.len()).unwrap_or(0);
+        let method = set.split('_').skip(1).collect::<Vec<_>>().join("_");
+        table.row(vec![
+            model.to_string(),
+            method,
+            pct(r.trainable_percent),
+            score100_std(r.mean("drop_syn"), r.std("drop_syn"), n),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nExpected shape (paper Table 2): QuanTA ~ FT > adapters > LoRA at any rank;\n\
+         QuanTA uses the smallest parameter fraction; QuanTA > LoRA at every scale."
+    );
+}

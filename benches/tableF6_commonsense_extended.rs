@@ -1,0 +1,53 @@
+//! Table F.6 reproduction: commonsense suites on the larger base model
+//! (LLaMA3-8B analog = our `small` arch) with the extended method set
+//! (LoRA, DoRA, LoRETTA, KronA, QuanTA).  Paper shape: QuanTA's average
+//! leads at the smallest parameter fraction.
+
+use quanta_ft::bench::{banner, std_mix};
+use quanta_ft::coordinator::experiment::require_artifacts;
+use quanta_ft::coordinator::tables::{pct, score100, Table};
+use quanta_ft::data::tasks::COMMONSENSE_SUITE;
+
+fn main() {
+    banner("Table F.6", "extended commonsense comparison (small / 8B-analog)");
+    let Some(mut runner) = require_artifacts() else { return };
+
+    let rows: &[&str] = &[
+        "small_lora_r8",
+        "small_dora_r16",
+        "small_loretta_r4",
+        "small_krona_16_16",
+        "small_quanta_n4",
+    ];
+
+    let mut headers = vec!["Method", "# Params (%)"];
+    let short: Vec<&str> = COMMONSENSE_SUITE
+        .iter()
+        .map(|t| t.trim_end_matches("_syn"))
+        .collect();
+    headers.extend(short.iter());
+    headers.push("Avg.");
+    let mut table = Table::new(&headers);
+
+    for set in rows {
+        if !std::path::Path::new("runs/base_small.bin").exists() {
+            eprintln!("SKIP {set}: base_small.bin not pretrained yet");
+            continue;
+        }
+        let r = runner.run(&std_mix(set, COMMONSENSE_SUITE)).unwrap();
+        let mut cells = vec![
+            set.trim_start_matches("small_").to_string(),
+            pct(r.trainable_percent),
+        ];
+        for t in COMMONSENSE_SUITE {
+            cells.push(score100(r.mean(t)));
+        }
+        cells.push(score100(r.avg(&[])));
+        table.row(cells);
+    }
+    table.print();
+    println!(
+        "\nExpected shape (paper Table F.6): QuanTA average >= LoRETTA > KronA,\n\
+         DoRA > LoRA, with QuanTA at the smallest trainable fraction."
+    );
+}

@@ -1,0 +1,44 @@
+//! Table F.7 reproduction: five GLUE-analog language-understanding
+//! suites (SST-2, MRPC, CoLA, RTE, STS-B analogs), fine-tuned per task
+//! (the paper's RoBERTa protocol).  Paper shape: QuanTA >= LoRA on every
+//! column with slightly fewer parameters.
+
+use quanta_ft::bench::{banner, std_single};
+use quanta_ft::coordinator::experiment::require_artifacts;
+use quanta_ft::coordinator::tables::{pct, score100, Table};
+use quanta_ft::data::tasks::GLUE_SUITE;
+
+fn main() {
+    banner("Table F.7", "GLUE-analog suites (per-task fine-tune, accuracy)");
+    let Some(mut runner) = require_artifacts() else { return };
+
+    let methods: &[&str] = &["tiny_lora_r8", "tiny_quanta_n4"];
+
+    let mut headers = vec!["Method", "# Params (%)"];
+    let short: Vec<&str> = GLUE_SUITE.iter().map(|t| t.trim_end_matches("_syn")).collect();
+    headers.extend(short.iter());
+    headers.push("Avg.");
+    let mut table = Table::new(&headers);
+
+    for set in methods {
+        let mut cells = vec![String::new(), String::new()];
+        let mut scores = vec![];
+        for task in GLUE_SUITE {
+            let r = runner.run(&std_single(set, task)).unwrap();
+            cells[0] = set.trim_start_matches("tiny_").to_string();
+            cells[1] = pct(r.trainable_percent);
+            let m = r.mean(task);
+            scores.push(m);
+            cells.push(score100(m));
+        }
+        cells.push(score100(
+            scores.iter().sum::<f64>() / scores.len() as f64,
+        ));
+        table.row(cells);
+    }
+    table.print();
+    println!(
+        "\nExpected shape (paper Table F.7): QuanTA >= LoRA on most columns at a\n\
+         comparable-or-smaller trainable fraction."
+    );
+}

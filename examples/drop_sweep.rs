@@ -1,0 +1,39 @@
+//! Scenario example: the paper's headline experiment in miniature — a
+//! method sweep on the DROP-analog (the high-intrinsic-rank task that
+//! motivates QuanTA), printing F1 vs trainable-parameter count.
+//!
+//!     cargo run --release --example drop_sweep [--steps N]
+
+use quanta_ft::bench::std_sizes;
+use quanta_ft::coordinator::experiment::{require_artifacts, RunSpec};
+use quanta_ft::coordinator::tables::{pct, score100, Table};
+
+fn main() {
+    let steps: Option<usize> = std::env::args()
+        .skip_while(|a| a != "--steps")
+        .nth(1)
+        .and_then(|s| s.parse().ok());
+    let Some(mut runner) = require_artifacts() else { return };
+
+    let sets = [
+        "tiny_lora_r8",
+        "tiny_lora_r32",
+        "tiny_quanta_n4",
+        "tiny_quanta_n3",
+        "tiny_ft",
+    ];
+    let mut table = Table::new(&["Method", "# Params", "%", "DROP-syn F1"]);
+    for set in sets {
+        let mut spec = RunSpec::new(set, "drop_syn").with_seeds(&[0, 1]);
+        if let Some(st) = steps { spec = spec.with_steps(st); }
+        spec.sizes = std_sizes();
+        let r = runner.run(&spec).unwrap();
+        table.row(vec![
+            set.trim_start_matches("tiny_").to_string(),
+            r.trainable_params.to_string(),
+            pct(r.trainable_percent),
+            score100(r.mean("drop_syn")),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,44 @@
+//! Quickstart: fine-tune a pretrained tiny model with QuanTA on one
+//! task and evaluate it — the 60-second tour of the public API.
+//!
+//!     make artifacts && cargo build --release
+//!     cargo run --release --example quickstart
+//!
+//! (The first run pretrains and caches the tiny base model.)
+
+use quanta_ft::bench::std_sizes;
+use quanta_ft::coordinator::experiment::{require_artifacts, RunSpec};
+use quanta_ft::coordinator::tables::{pct, score100};
+
+fn main() {
+    let Some(mut runner) = require_artifacts() else { return };
+
+    // 1. A pretrained base model (pretrains + caches on first use).
+    let base = runner.pretrained_base("tiny").unwrap();
+    println!("base model: {} parameters", base.len());
+
+    // 2. Fine-tune QuanTA (paper's method, N=4 decomposition of d=128)
+    //    on the BoolQ-analog task, 2 seeds, best-checkpoint on val.
+    let mut spec = RunSpec::new("tiny_quanta_n4", "boolq_syn").with_steps(120);
+    spec.sizes = std_sizes();
+    let result = runner.run(&spec).unwrap();
+
+    // 3. Report, paper-style.
+    println!(
+        "QuanTA ({} trainable params, {} of the model): boolq_syn accuracy = {}",
+        result.trainable_params,
+        pct(result.trainable_percent),
+        score100(result.mean("boolq_syn")),
+    );
+
+    // 4. Compare against LoRA at ~matched parameter budget.
+    let mut lora = RunSpec::new("tiny_lora_r8", "boolq_syn").with_steps(120);
+    lora.sizes = std_sizes();
+    let lresult = runner.run(&lora).unwrap();
+    println!(
+        "LoRA r=8 ({} trainable params, {}): boolq_syn accuracy = {}",
+        lresult.trainable_params,
+        pct(lresult.trainable_percent),
+        score100(lresult.mean("boolq_syn")),
+    );
+}

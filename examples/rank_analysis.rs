@@ -1,0 +1,74 @@
+//! Scenario example: the paper's "intrinsic rank" analysis toolkit.
+//!
+//! 1. Pure-theory half (no artifacts needed): random QuanTA circuits vs
+//!    the rank-representation bounds (Theorem 6.2), LoRA closure vs
+//!    QuanTA composition openness (Theorem 6.3).
+//! 2. Empirical half (needs artifacts + a trained pair): the Fig. 2
+//!    subspace-similarity probe on RTE-analog vs DROP-analog updates.
+//!
+//!     cargo run --release --example rank_analysis [--empirical]
+
+use quanta_ft::analysis::{render_heatmap, subspace_analysis};
+use quanta_ft::coordinator::experiment::require_artifacts;
+use quanta_ft::coordinator::tables::Table;
+use quanta_ft::linalg::numerical_rank;
+use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit};
+use quanta_ft::quanta::theorems::{
+    check_rank_representation, circuit_with_gate_ranks, lora_product_rank,
+};
+use quanta_ft::util::rng::Rng;
+
+fn main() {
+    // ---- Theorem 6.2: rank representation on random circuits -----------
+    println!("Theorem 6.2 (rank representation, Eq. 10) on random circuits:");
+    let mut table = Table::new(&["dims", "gate ranks", "lower", "rank(chain)", "upper"]);
+    let mut rng = Rng::new(7);
+    for dims in [vec![4usize, 4, 4], vec![2, 4, 2, 2], vec![8, 4, 4]] {
+        let structure = all_pairs_structure(dims.len());
+        let ranks: Vec<usize> = structure
+            .iter()
+            .map(|&(m, n)| 1 + rng.below(dims[m] * dims[n]))
+            .collect();
+        let c = circuit_with_gate_ranks(&dims, &structure, &ranks, &mut rng).unwrap();
+        let (granks, frank, bounds) = check_rank_representation(&c, 1e-6).unwrap();
+        table.row(vec![
+            format!("{dims:?}"),
+            format!("{granks:?}"),
+            bounds.lower.to_string(),
+            frank.to_string(),
+            bounds.upper.to_string(),
+        ]);
+    }
+    table.print();
+
+    // full-rank special case
+    let dims = [4usize, 4, 4];
+    let c = Circuit::random(&dims, &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+    let full = c.full_matrix().unwrap();
+    println!(
+        "\nfull-rank gates => chain rank {} of {} (Thm 6.2 special case)",
+        numerical_rank(&full, 1e-6).unwrap(),
+        c.total_dim()
+    );
+
+    // ---- Theorem 6.3 contrast: LoRA products stay low rank --------------
+    let (r1, rp) = lora_product_rank(4, 32, 99).unwrap();
+    println!("LoRA closure: rank(M1)={r1}, rank(M1*M2)={rp} (<= r=4 always)");
+
+    // ---- Fig. 2 empirical probe -----------------------------------------
+    if std::env::args().any(|a| a == "--empirical") {
+        let Some(mut runner) = require_artifacts() else { return };
+        for task in ["rte_syn", "drop_syn"] {
+            let report =
+                subspace_analysis(&mut runner, task, "tiny_lora_r32", "tiny_lora_r64", 4, 32, 32)
+                    .unwrap();
+            println!(
+                "\n[{task}] mean phi {:.3}, tail phi {:.3}, effective rank {:.1}",
+                report.mean_phi, report.tail_phi, report.effective_rank_r2
+            );
+            print!("{}", render_heatmap(&report.grid, 32));
+        }
+    } else {
+        println!("\n(pass --empirical to run the Fig. 2 subspace probe on trained updates)");
+    }
+}

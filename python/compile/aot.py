@@ -1,0 +1,187 @@
+"""AOT lowering: experiment registry -> HLO-text artifacts + manifests.
+
+Interchange format is HLO **text** (not ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` rust crate binds) rejects; the
+HLO text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --set tiny_quanta_n4 --outdir ../artifacts
+    python -m compile.aot --all --outdir ../artifacts
+
+Incremental: a set is skipped when its manifest exists and records the
+same config fingerprint, so ``make artifacts`` is a no-op when inputs are
+unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from dataclasses import asdict
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .experiments import REGISTRY, ExperimentSet
+from .model import Model
+from .train import TrainHyper, build_train_step, build_eval_loss, build_fwd_logits, build_merge
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def set_fingerprint(es: ExperimentSet) -> str:
+    blob = json.dumps({
+        "arch": asdict(es.arch_cfg()),
+        "method": None if es.method is None else {
+            "name": es.method.name, "hyper": es.method.hyper,
+            "modules": list(es.method.modules)},
+        "hyper": asdict(es.hyper),
+        "batch": es.batch, "eval_batch": es.eval_batch,
+        "pretrain": es.pretrain,
+        "version": 6,  # bump to force re-lowering on codegen changes
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def lower_set(es: ExperimentSet, outdir: str, force: bool = False) -> bool:
+    """Lower one experiment set.  Returns True if work was done."""
+    setdir = os.path.join(outdir, es.name)
+    manifest_path = os.path.join(setdir, "manifest.json")
+    fp = set_fingerprint(es)
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                if json.load(f).get("fingerprint") == fp:
+                    return False
+        except Exception:
+            pass
+    os.makedirs(setdir, exist_ok=True)
+
+    arch = es.arch_cfg()
+    model = Model(arch, es.method, pretrain=es.pretrain)
+    b, s = es.batch, arch.seq_len
+    eb = es.eval_batch
+    pb, pt = model.base_layout.total, model.theta_layout.total
+
+    base_s = _spec((pb,))
+    theta_s = _spec((pt,))
+    mom_s = _spec((pt,))
+    step_s = _spec((), jnp.int32)
+    toks_s = _spec((b, s + 1), jnp.int32)
+    mask_s = _spec((b, s))
+    etoks_s = _spec((eb, s + 1), jnp.int32)
+    emask_s = _spec((eb, s))
+    ltoks_s = _spec((eb, s), jnp.int32)
+
+    artifacts = {}
+
+    step_fn = build_train_step(model, es.hyper)
+    lowered = jax.jit(step_fn, keep_unused=True).lower(base_s, theta_s, mom_s, mom_s, step_s, toks_s, mask_s)
+    artifacts["train_step"] = "train_step.hlo.txt"
+    with open(os.path.join(setdir, artifacts["train_step"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    eval_fn = build_eval_loss(model)
+    lowered = jax.jit(eval_fn, keep_unused=True).lower(base_s, theta_s, etoks_s, emask_s)
+    artifacts["eval_loss"] = "eval_loss.hlo.txt"
+    with open(os.path.join(setdir, artifacts["eval_loss"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    logits_fn = build_fwd_logits(model)
+    lowered = jax.jit(logits_fn, keep_unused=True).lower(base_s, theta_s, ltoks_s)
+    artifacts["fwd_logits"] = "fwd_logits.hlo.txt"
+    with open(os.path.join(setdir, artifacts["fwd_logits"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    merged_modules = model.merged_module_keys()
+    if es.emit_merge and merged_modules:
+        merge_fn = build_merge(model)
+        lowered = jax.jit(merge_fn, keep_unused=True).lower(base_s, theta_s)
+        artifacts["merge"] = "merge.hlo.txt"
+        with open(os.path.join(setdir, artifacts["merge"]), "w") as f:
+            f.write(to_hlo_text(lowered))
+
+    model_total = sum(sp.size for sp in model.model_specs)
+    trainable = pt
+    manifest = {
+        "name": es.name,
+        "fingerprint": fp,
+        "arch": asdict(arch),
+        "method": None if es.method is None else {
+            "name": es.method.name, "hyper": es.method.hyper,
+            "modules": list(es.method.modules)},
+        "hyper": asdict(es.hyper),
+        "pretrain": es.pretrain,
+        "io": {
+            "batch": b, "eval_batch": eb, "seq_len": s, "vocab": arch.vocab,
+            "base_len": pb, "theta_len": pt,
+        },
+        "counts": {
+            "model_params": model_total,
+            "trainable_params": trainable,
+            "trainable_percent": 100.0 * trainable / model_total,
+        },
+        "base_layout": model.base_layout.manifest(),
+        "theta_layout": model.theta_layout.manifest(),
+        "merged_modules": merged_modules,
+        "artifacts": artifacts,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return True
+
+
+def write_index(outdir: str):
+    names = sorted(
+        n for n in os.listdir(outdir)
+        if os.path.exists(os.path.join(outdir, n, "manifest.json"))
+    )
+    with open(os.path.join(outdir, "index.json"), "w") as f:
+        json.dump({"sets": names}, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-lower experiment sets to HLO text")
+    ap.add_argument("--set", action="append", default=[], help="set name (repeatable)")
+    ap.add_argument("--all", action="store_true", help="lower every registered set")
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for name, es in sorted(REGISTRY.items()):
+            m = es.method.name if es.method else "pretrain"
+            print(f"{name:32s} arch={es.arch:6s} method={m}")
+        return
+
+    names = sorted(REGISTRY) if args.all else args.set
+    if not names:
+        ap.error("pass --all or --set NAME")
+    for name in names:
+        es = REGISTRY[name]
+        did = lower_set(es, args.outdir, force=args.force)
+        print(f"{'lowered' if did else 'cached '} {name}", flush=True)
+    write_index(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

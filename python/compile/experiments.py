@@ -1,0 +1,141 @@
+"""Experiment registry — the single source of truth for artifact sets.
+
+Every (architecture x PEFT-method x hyper) combination used by any table
+or figure is registered here by name.  ``aot.py --all`` lowers each set to
+``artifacts/<name>/``; the rust coordinator discovers them through
+``artifacts/index.json`` and never needs python at runtime.
+
+Scale mapping (DESIGN.md §2): tiny=LLaMA2-7B analog, small=13B analog,
+large=70B analog; xlarge=LLaMA3-8B analog (same size as small but a fresh
+pretraining seed, mirroring "different base model").
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .model import ArchConfig
+from .methods import MethodConfig
+from .train import TrainHyper
+
+ARCHS: Dict[str, ArchConfig] = {
+    "tiny": ArchConfig("tiny", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=256, seq_len=64),
+    "small": ArchConfig("small", vocab=512, d_model=256, n_layers=6, n_heads=8, d_ff=512, seq_len=64),
+    "large": ArchConfig("large", vocab=512, d_model=512, n_layers=8, n_heads=8, d_ff=1024, seq_len=64),
+}
+
+# QuanTA axis decompositions per hidden size (paper App. E.1 style labels).
+QUANTA_DIMS: Dict[str, Dict[int, List[int]]] = {
+    "tiny": {3: [8, 4, 4], 4: [8, 4, 2, 2], 5: [4, 2, 4, 2, 2]},
+    "small": {3: [16, 4, 4], 4: [4, 4, 4, 4], 5: [4, 4, 4, 2, 2]},
+    "large": {3: [8, 8, 8], 4: [8, 4, 4, 4], 5: [4, 4, 4, 4, 2]},
+}
+
+
+@dataclass
+class ExperimentSet:
+    """One artifact set: everything needed to lower train/eval graphs."""
+    name: str
+    arch: str
+    method: Optional[MethodConfig]  # None => pretraining
+    hyper: TrainHyper
+    batch: int
+    eval_batch: int = 8
+    pretrain: bool = False
+    emit_merge: bool = True
+
+    def arch_cfg(self) -> ArchConfig:
+        return ARCHS[self.arch]
+
+
+def _ft_hyper(steps=800, lr=1e-3):
+    return TrainHyper(lr=lr, warmup_steps=20, total_steps=steps)
+
+
+def _peft_hyper(steps=800, lr=2e-3):
+    return TrainHyper(lr=lr, warmup_steps=20, total_steps=steps)
+
+
+def build_registry() -> Dict[str, ExperimentSet]:
+    r: Dict[str, ExperimentSet] = {}
+
+    def add(s: ExperimentSet):
+        assert s.name not in r, s.name
+        r[s.name] = s
+
+    # -- pretraining (the base models; method=None => all params trainable)
+    add(ExperimentSet("pretrain_tiny", "tiny", None,
+                      TrainHyper(lr=1e-3, warmup_steps=50, total_steps=4000),
+                      batch=16, pretrain=True, emit_merge=False))
+    add(ExperimentSet("pretrain_small", "small", None,
+                      TrainHyper(lr=8e-4, warmup_steps=50, total_steps=2500),
+                      batch=12, pretrain=True, emit_merge=False))
+    add(ExperimentSet("pretrain_large", "large", None,
+                      TrainHyper(lr=6e-4, warmup_steps=50, total_steps=1200),
+                      batch=8, pretrain=True, emit_merge=False))
+
+    # -- tiny (7B analog): the full method zoo --------------------------------
+    qv = ("wq", "wv")
+    allmods = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+    add(ExperimentSet("tiny_ft", "tiny",
+                      MethodConfig("ft", {}, allmods), _ft_hyper(), batch=8, emit_merge=False))
+    add(ExperimentSet("tiny_series", "tiny",
+                      MethodConfig("series", {"bottleneck": 16}, ()), _peft_hyper(), batch=8, emit_merge=False))
+    add(ExperimentSet("tiny_parallel", "tiny",
+                      MethodConfig("parallel", {"bottleneck": 32}, ()), _peft_hyper(), batch=8, emit_merge=False))
+    add(ExperimentSet("tiny_prefix", "tiny",
+                      MethodConfig("prefix", {"p_len": 8}, ()), _peft_hyper(), batch=8, emit_merge=False))
+    for rank in (2, 8, 32, 64, 128):
+        add(ExperimentSet(f"tiny_lora_r{rank}", "tiny",
+                          MethodConfig("lora", {"r": rank, "alpha": 16}, qv),
+                          _peft_hyper(), batch=8))
+    for rank in (4, 16):
+        add(ExperimentSet(f"tiny_dora_r{rank}", "tiny",
+                          MethodConfig("dora", {"r": rank, "alpha": 16}, qv),
+                          _peft_hyper(), batch=8))
+    for n in (3, 4, 5):
+        add(ExperimentSet(f"tiny_quanta_n{n}", "tiny",
+                          MethodConfig("quanta", {"dims": QUANTA_DIMS["tiny"][n]}, qv),
+                          _peft_hyper(), batch=8))
+    for (ar, br) in ((16, 8), (32, 4), (8, 16)):
+        add(ExperimentSet(f"tiny_krona_{ar}_{br}", "tiny",
+                          MethodConfig("krona", {"a_rows": ar, "a_cols": ar}, qv),
+                          _peft_hyper(), batch=8))
+    for rhat in (16, 32, 64):
+        add(ExperimentSet(f"tiny_mora_r{rhat}", "tiny",
+                          MethodConfig("mora", {"rhat": rhat}, qv),
+                          _peft_hyper(), batch=8))
+    for rank in (2, 4, 8):
+        add(ExperimentSet(f"tiny_loretta_r{rank}", "tiny",
+                          MethodConfig("loretta", {"r": rank, "n_axes": 3}, qv),
+                          _peft_hyper(), batch=8))
+
+    # -- small (13B analog) ----------------------------------------------------
+    add(ExperimentSet("small_ft", "small",
+                      MethodConfig("ft", {}, allmods), _ft_hyper(steps=500), batch=8, emit_merge=False))
+    add(ExperimentSet("small_lora_r8", "small",
+                      MethodConfig("lora", {"r": 8, "alpha": 16}, qv), _peft_hyper(steps=500), batch=8))
+    add(ExperimentSet("small_lora_r32", "small",
+                      MethodConfig("lora", {"r": 32, "alpha": 16}, qv), _peft_hyper(steps=500), batch=8))
+    add(ExperimentSet("small_dora_r16", "small",
+                      MethodConfig("dora", {"r": 16, "alpha": 16}, qv), _peft_hyper(steps=500), batch=8))
+    add(ExperimentSet("small_quanta_n4", "small",
+                      MethodConfig("quanta", {"dims": QUANTA_DIMS["small"][4]}, qv),
+                      _peft_hyper(steps=500), batch=8))
+    add(ExperimentSet("small_loretta_r4", "small",
+                      MethodConfig("loretta", {"r": 4, "n_axes": 3}, qv), _peft_hyper(steps=500), batch=8))
+    add(ExperimentSet("small_krona_16_16", "small",
+                      MethodConfig("krona", {"a_rows": 16, "a_cols": 16}, qv), _peft_hyper(steps=500), batch=8))
+
+    # -- large (70B analog) ------------------------------------------------------
+    add(ExperimentSet("large_lora_r8", "large",
+                      MethodConfig("lora", {"r": 8, "alpha": 16}, qv), _peft_hyper(steps=300), batch=4))
+    add(ExperimentSet("large_quanta_n4", "large",
+                      MethodConfig("quanta", {"dims": QUANTA_DIMS["large"][4]}, qv),
+                      _peft_hyper(steps=300), batch=4))
+
+    return r
+
+
+REGISTRY = build_registry()

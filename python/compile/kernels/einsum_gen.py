@@ -1,0 +1,125 @@
+"""Systematic einsum-expression generation for QuanTA operators (paper App. G).
+
+A QuanTA circuit over an ``N``-axis reshaped hidden vector is a sequence of
+"gates": each gate is a square (or rectangular) tensor applied to two axes
+(paper Eq. 4/5).  This module generates, for an arbitrary circuit structure,
+
+* the einsum expression applying the whole chain to a batched input
+  (``quanta_apply_expr``), and
+* the einsum expression materializing the full ``d x d`` operator
+  (``quanta_full_expr``),
+
+mirroring the systematic construction in Appendix G of the paper (which
+uses ``opt_einsum.get_symbol``); we reuse ``opt_einsum`` the same way.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import List, Sequence, Tuple
+
+import opt_einsum as oe
+
+# A circuit structure is a list of axis pairs; gate alpha acts on axes
+# (m, n) of the reshaped input.  Axes are 0-based, m != n.
+Structure = List[Tuple[int, int]]
+
+
+def all_pairs_structure(n_axes: int) -> Structure:
+    """The paper's default structure (App. E.1): exactly one gate per
+    unordered axis pair, ordered as in Fig. 1 / Fig. E.4.
+
+    The paper applies gates so that the *last* gate in program order acts
+    on the leading axes; we enumerate ``itertools.combinations`` over
+    negative axis indices to match App. G's reference implementation.
+    """
+    pairs = []
+    for (dim1, dim2) in itertools.combinations(range(-1, -n_axes - 1, -1), 2):
+        pairs.append((dim1 % n_axes, dim2 % n_axes))
+    return pairs
+
+
+def validate_structure(structure: Structure, n_axes: int) -> None:
+    for (m, n) in structure:
+        if not (0 <= m < n_axes and 0 <= n < n_axes):
+            raise ValueError(f"gate axes ({m},{n}) out of range for N={n_axes}")
+        if m == n:
+            raise ValueError(f"gate must act on two distinct axes, got ({m},{m})")
+
+
+def gate_shapes(dims: Sequence[int], structure: Structure) -> List[Tuple[int, int]]:
+    """Square gate shapes ``(d_m*d_n, d_m*d_n)`` for each gate."""
+    validate_structure(structure, len(dims))
+    return [(dims[m] * dims[n], dims[m] * dims[n]) for (m, n) in structure]
+
+
+def param_count(dims: Sequence[int], structure: Structure) -> int:
+    """Trainable parameters of one QuanTA layer: sum over gates of
+    ``(d_m d_n)^2`` (paper section 6, memory/computational complexity)."""
+    return sum(s[0] * s[1] for s in gate_shapes(dims, structure))
+
+
+def apply_flops(dims: Sequence[int], structure: Structure) -> int:
+    """Multiply count of one chain application to a single hidden vector:
+    ``d * sum_alpha d_m d_n`` (paper section 6)."""
+    d = 1
+    for dn in dims:
+        d *= dn
+    return d * sum(dims[m] * dims[n] for (m, n) in structure)
+
+
+def _build_exprs(n_axes: int, structure: Structure, batched: bool):
+    """Shared walker: returns (input subscript, gate subscripts, output
+    subscript).  Tracks, per axis, the symbol of its *current* index as
+    gates consume and replace indices (exactly App. G's algorithm,
+    generalized from all-pairs to arbitrary structures)."""
+    current = list(range(n_axes))
+    next_symbol = n_axes
+    gate_subs = []
+    for (m, n) in structure:
+        in_m, in_n = current[m], current[n]
+        out_m, out_n = next_symbol, next_symbol + 1
+        next_symbol += 2
+        # Gate tensor is stored as a matrix of shape (d_m*d_n, d_m*d_n),
+        # viewed as a 4-tensor T[i_m, i_n, j_m, j_n]: (out_m, out_n, in_m, in_n).
+        gate_subs.append(
+            oe.get_symbol(out_m) + oe.get_symbol(out_n) + oe.get_symbol(in_m) + oe.get_symbol(in_n)
+        )
+        current[m], current[n] = out_m, out_n
+    in_sub = ("..." if batched else "") + "".join(oe.get_symbol(i) for i in range(n_axes))
+    out_sub = ("..." if batched else "") + "".join(oe.get_symbol(i) for i in current)
+    return in_sub, gate_subs, out_sub
+
+
+def quanta_apply_expr(n_axes: int, structure: Structure | None = None) -> str:
+    """Einsum expression applying the chain to a (batched) reshaped input.
+
+    Gate operands are passed in *program order* (first-applied first),
+    i.e. ``einsum(expr, x, T1, T2, ...)`` computes ``... T2 T1 x``.
+    """
+    if structure is None:
+        structure = all_pairs_structure(n_axes)
+    validate_structure(structure, n_axes)
+    in_sub, gate_subs, out_sub = _build_exprs(n_axes, structure, batched=True)
+    return in_sub + "," + ",".join(gate_subs) + "->" + out_sub
+
+
+def quanta_full_expr(n_axes: int, structure: Structure | None = None) -> str:
+    """Einsum expression materializing the full operator as a 2N-axis
+    tensor ``T[i_1..i_N; j_1..j_N]`` (reshape to ``(d, d)`` afterwards).
+
+    Requires every axis to be touched by at least one gate (otherwise the
+    operator has an implicit identity factor that einsum cannot express
+    without explicit identity operands — use ``ref.quanta_full_ref``,
+    which falls back to basis application, for such structures)."""
+    if structure is None:
+        structure = all_pairs_structure(n_axes)
+    validate_structure(structure, n_axes)
+    touched = {ax for pair in structure for ax in pair}
+    if touched != set(range(n_axes)):
+        raise ValueError(
+            f"quanta_full_expr requires all axes touched; missing {set(range(n_axes)) - touched}"
+        )
+    in_sub, gate_subs, out_sub = _build_exprs(n_axes, structure, batched=False)
+    # Output carries the free output indices then the original input indices.
+    return ",".join(gate_subs) + "->" + out_sub[len("") :] + in_sub

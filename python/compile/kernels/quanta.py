@@ -1,0 +1,173 @@
+"""L1: fused QuanTA chain-application Pallas kernel.
+
+The paper's compute hot-spot is the sequential application of the gate
+chain to the hidden states (Eq. 5).  Applied naively (one einsum per
+gate), every gate incurs a full HBM read+write of the activations; the
+paper's Limitations section notes exactly this under-utilization.  The
+TPU rethink (DESIGN.md §Hardware-Adaptation): all QuanTA gates together
+are tiny (sum_a (d_m d_n)^2 floats — a few hundred KB at LLaMA scale), so
+the whole chain fits in VMEM simultaneously.  This kernel therefore tiles
+the *token* axis with a Pallas grid and applies the entire chain per tile:
+one HBM read and one HBM write of the activations total, with every gate
+contraction (a batched matmul hitting the MXU) running out of VMEM.
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute.  Numerics are
+identical between interpret and compiled modes; correctness is asserted
+against ``ref.py`` in python/tests.
+
+Autodiff: ``pallas_call`` has no automatic VJP, so ``quanta_apply`` is a
+``jax.custom_vjp`` — Pallas forward, hand-derived backward (the chain is
+linear in both the input and each gate, so the VJP is the transposed
+chain plus one outer-product contraction per gate).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import einsum_gen
+from .einsum_gen import Structure
+
+
+def _apply_gate_block(h, gate, dims: Sequence[int], m: int, n: int):
+    """Apply one two-axis gate to ``h[BT, d1, ..., dN]`` (VMEM-resident).
+
+    Moves the two gate axes last, flattens everything else into a batch,
+    and runs a single ``dot`` — the MXU-native form of Eq. 4 ("a batched
+    matrix-vector multiplication with all other axes as batch dims").
+    """
+    n_axes = len(dims)
+    dm, dn = dims[m], dims[n]
+    # token axis is 0; gate axes in h are 1 + m, 1 + n
+    h2 = jnp.moveaxis(h, (1 + m, 1 + n), (-2, -1))
+    lead = h2.shape[:-2]
+    h2 = h2.reshape((-1, dm * dn))
+    # y[b, i] = sum_j gate[i, j] h[b, j]
+    y = jax.lax.dot_general(
+        h2, gate,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(h.dtype)
+    y = y.reshape(lead + (dm, dn))
+    return jnp.moveaxis(y, (-2, -1), (1 + m, 1 + n))
+
+
+def _chain_kernel(*refs, dims: Sequence[int], structure: Structure):
+    """Pallas kernel body: refs = (x_ref, g_ref_0, ..., g_ref_{A-1}, o_ref)."""
+    x_ref = refs[0]
+    gate_refs = refs[1:-1]
+    o_ref = refs[-1]
+    bt = x_ref.shape[0]
+    h = x_ref[...].reshape((bt,) + tuple(dims))
+    for g_ref, (m, n) in zip(gate_refs, structure):
+        h = _apply_gate_block(h, g_ref[...], dims, m, n)
+    o_ref[...] = h.reshape(bt, -1)
+
+
+def quanta_apply_fwd_pallas(x, gates: Sequence, dims: Sequence[int],
+                            structure: Structure, block_tokens: int = 128):
+    """Forward chain application via the fused Pallas kernel.
+
+    ``x``: [T, d] with d = prod(dims); T must be a multiple of
+    ``block_tokens`` (callers pad).  Gates are (d_m d_n, d_m d_n) matrices.
+    """
+    t, d = x.shape
+    dims = tuple(int(v) for v in dims)
+    assert d == int(np.prod(dims)), (d, dims)
+    bt = min(block_tokens, t)
+    assert t % bt == 0, f"token count {t} not a multiple of block {bt}"
+    grid = (t // bt,)
+    in_specs = [pl.BlockSpec((bt, d), lambda i: (i, 0))]
+    # Gates are broadcast to every grid step: constant index_map keeps the
+    # whole chain VMEM-resident for the life of the kernel.
+    for g in gates:
+        gs = g.shape
+        in_specs.append(pl.BlockSpec(gs, lambda i: (0, 0)))
+    out_specs = pl.BlockSpec((bt, d), lambda i: (i, 0))
+    kernel = functools.partial(_chain_kernel, dims=dims, structure=list(structure))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, *gates)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+def _fwd_intermediates(x, gates, dims, structure):
+    """Recompute the per-gate intermediate activations (jnp; backward pass
+    only).  Returns [h_0, h_1, ..., h_A] with h_0 = x reshaped."""
+    t = x.shape[0]
+    h = x.reshape((t,) + tuple(dims))
+    hs = [h]
+    for g, (m, n) in zip(gates, structure):
+        h = _apply_gate_block(h, g, dims, m, n)
+        hs.append(h)
+    return hs
+
+
+def make_quanta_apply(dims: Sequence[int], structure: Structure | None = None,
+                      block_tokens: int = 128, use_pallas: bool = True):
+    """Build a differentiable ``apply(x, gates) -> y`` closure for a fixed
+    circuit structure.
+
+    ``use_pallas=False`` swaps in the pure-einsum forward (ablation path;
+    see benches/perf_runtime + EXPERIMENTS.md §Perf).
+    """
+    dims = tuple(int(v) for v in dims)
+    if structure is None:
+        structure = einsum_gen.all_pairs_structure(len(dims))
+    structure = [tuple(p) for p in structure]
+    n_axes = len(dims)
+
+    @jax.custom_vjp
+    def apply(x, gates):
+        if use_pallas:
+            return quanta_apply_fwd_pallas(x, gates, dims, structure, block_tokens)
+        from . import ref
+        return ref.quanta_apply_ref(x, gates, dims, structure)
+
+    def apply_fwd(x, gates):
+        return apply(x, gates), (x, gates)
+
+    def apply_bwd(res, gbar):
+        x, gates = res
+        t = x.shape[0]
+        hs = _fwd_intermediates(x, gates, dims, structure)
+        g = gbar.reshape((t,) + dims)
+        gate_grads: List = [None] * len(gates)
+        # Walk the chain backwards: at gate a, the cotangent g is w.r.t.
+        # h_{a+1}; grad_T_a = contract(g, h_a) over all non-gate axes, and
+        # the cotangent propagates through the transposed gate.
+        for a in range(len(gates) - 1, -1, -1):
+            m, n = structure[a]
+            dm, dn = dims[m], dims[n]
+            h_in = hs[a]
+            # axes order: token + N axes; contract all but (1+m, 1+n)
+            batch_axes = [0] + [1 + k for k in range(n_axes) if k not in (m, n)]
+            gg = jax.lax.dot_general(
+                jnp.moveaxis(g, (1 + m, 1 + n), (-2, -1)).reshape(-1, dm * dn),
+                jnp.moveaxis(h_in, (1 + m, 1 + n), (-2, -1)).reshape(-1, dm * dn),
+                dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).astype(x.dtype)
+            gate_grads[a] = gg
+            # propagate: g <- T_a^T g  (apply transposed gate)
+            g = _apply_gate_block(g, gates[a].T, dims, m, n)
+        xbar = g.reshape(t, -1)
+        return xbar, gate_grads
+
+    apply.defvjp(apply_fwd, apply_bwd)
+    return apply

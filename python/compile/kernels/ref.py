@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every kernel / reparameterization in the repo.
+
+These are the correctness references: the Pallas kernel (``quanta.py``)
+and every PEFT delta implementation in ``methods.py`` are asserted against
+these in ``python/tests`` (hypothesis sweeps) and, transitively, the rust
+runtime path is asserted against the same numerics through the lowered
+HLO.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import einsum_gen
+
+
+# ---------------------------------------------------------------------------
+# QuanTA (paper Eq. 4/5/6/7)
+# ---------------------------------------------------------------------------
+
+def quanta_apply_ref(x, gates: Sequence, dims: Sequence[int],
+                     structure: einsum_gen.Structure | None = None):
+    """Apply the QuanTA chain to ``x[..., d]`` with ``d = prod(dims)``.
+
+    ``gates[a]`` is the matrix of gate ``a`` with shape
+    ``(d_m*d_n, d_m*d_n)`` acting on axes ``structure[a]`` of the reshaped
+    input; gates are applied in program order (gates[0] first).
+    """
+    dims = list(dims)
+    if structure is None:
+        structure = einsum_gen.all_pairs_structure(len(dims))
+    batch_shape = x.shape[:-1]
+    xt = x.reshape(batch_shape + tuple(dims))
+    expr = einsum_gen.quanta_apply_expr(len(dims), structure)
+    gts = [
+        g.reshape(dims[m], dims[n], dims[m], dims[n])
+        for g, (m, n) in zip(gates, structure)
+    ]
+    out = jnp.einsum(expr, xt, *gts)
+    return out.reshape(batch_shape + (int(np.prod(dims)),))
+
+
+def quanta_apply_loop_ref(x, gates: Sequence, dims: Sequence[int],
+                          structure: einsum_gen.Structure | None = None):
+    """Second, independent oracle: apply gates one-by-one with explicit
+    axis moves (no generated einsum).  Used to cross-check the expression
+    generator itself."""
+    dims = list(dims)
+    n = len(dims)
+    if structure is None:
+        structure = einsum_gen.all_pairs_structure(n)
+    batch_shape = x.shape[:-1]
+    h = x.reshape(batch_shape + tuple(dims))
+    nb = len(batch_shape)
+    for g, (m, a) in zip(gates, structure):
+        gt = g.reshape(dims[m], dims[a], dims[m], dims[a])
+        # contract gate input indices over axes (m, a) of h
+        h = jnp.tensordot(gt, h, axes=[[2, 3], [nb + m, nb + a]])
+        # result axes: (i_m, i_a, batch..., remaining); move back in place
+        h = jnp.moveaxis(h, [0, 1], [nb + m, nb + a])
+    return h.reshape(batch_shape + (int(np.prod(dims)),))
+
+
+def quanta_full_ref(gates: Sequence, dims: Sequence[int],
+                    structure: einsum_gen.Structure | None = None):
+    """Materialize the full ``(d, d)`` QuanTA operator (paper Eq. 7).
+
+    Uses the generated einsum when every axis is touched by a gate;
+    otherwise falls back to applying the chain to the identity basis
+    (structures with untouched axes have an implicit identity factor)."""
+    dims = list(dims)
+    d = int(np.prod(dims))
+    if structure is None:
+        structure = einsum_gen.all_pairs_structure(len(dims))
+    touched = {ax for pair in structure for ax in pair}
+    if touched != set(range(len(dims))):
+        eye = jnp.eye(d, dtype=gates[0].dtype)
+        cols = quanta_apply_ref(eye, gates, dims, structure)  # row j = T e_j
+        return cols.T
+    expr = einsum_gen.quanta_full_expr(len(dims), structure)
+    gts = [
+        g.reshape(dims[m], dims[n], dims[m], dims[n])
+        for g, (m, n) in zip(gates, structure)
+    ]
+    full = jnp.einsum(expr, *gts)
+    return full.reshape(d, d)
+
+
+# ---------------------------------------------------------------------------
+# Baseline reparameterizations
+# ---------------------------------------------------------------------------
+
+def lora_delta_ref(a, b, scale: float):
+    """LoRA: dW = scale * B @ A with A[r,k], B[d,r]."""
+    return scale * (b @ a)
+
+
+def krona_delta_ref(a, b):
+    """KronA: dW = A kron B."""
+    return jnp.kron(a, b)
+
+
+def mora_apply_ref(x, m):
+    """MoRA-style block-diagonal high-rank update: reshape x[..., d] into
+    groups of size r = m.shape[0], apply the shared square matrix to each
+    group.  Equivalent delta matrix: kron(I_{d/r}, M)."""
+    r = m.shape[0]
+    batch_shape = x.shape[:-1]
+    d = x.shape[-1]
+    assert d % r == 0
+    xg = x.reshape(batch_shape + (d // r, r))
+    yg = jnp.einsum("...gr,sr->...gs", xg, m)
+    return yg.reshape(batch_shape + (d,))
+
+
+def tt_delta_ref(cores: Sequence, d_dims: Sequence[int], k_dims: Sequence[int]):
+    """LoRETTA-style tensor-train delta.  ``cores[i]`` has shape
+    ``(r_{i-1}, d_i, k_i, r_i)`` with r_0 = r_N = 1.  Returns dW[d, k]."""
+    n = len(cores)
+    assert n == len(d_dims) == len(k_dims)
+    # Contract left-to-right: carry tensor of shape (D_i, K_i, r_i)
+    carry = None
+    for core in cores:
+        if carry is None:
+            carry = core[0]  # (d_1, k_1, r_1)
+        else:
+            c = jnp.einsum("DKr,rdks->DdKks", carry, core)
+            D = c.shape[0] * c.shape[1]
+            K = c.shape[2] * c.shape[3]
+            carry = c.reshape(D, K, c.shape[4])
+    d = int(np.prod(list(d_dims)))
+    k = int(np.prod(list(k_dims)))
+    return carry.reshape(d, k)

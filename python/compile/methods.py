@@ -1,0 +1,368 @@
+"""PEFT method implementations (L2).
+
+Every reparameterization the paper evaluates is implemented here as a
+``Method``: QuanTA itself plus the baselines — full fine-tuning (additive
+delta), LoRA, DoRA, KronA, MoRA, LoRETTA (tensor-train), and the
+block-level series/parallel adapters and prefix tuning.
+
+A matrix-level ``Method`` contributes, for each adapted projection matrix
+``W0 [d_out, d_in]``:
+
+  * ``theta_specs``  — trainable parameter specs,
+  * ``base_specs``   — extra *frozen* parameters (QuanTA's shadow chain S),
+  * ``adapted_matmul(x, w0, params)`` — the adapted ``y = x @ W'(theta)^T``,
+  * ``delta_matrix(params, w0)``      — the materialized ``dW = W' - W0``
+    (merge / no-inference-overhead path + Fig.2 analysis).
+
+Block-level methods (series/parallel adapters, prefix) instead hook the
+transformer block; see ``model.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import ParamSpec
+from .kernels import einsum_gen, ref
+from .kernels.quanta import make_quanta_apply
+
+MATRIX_METHODS = ("ft", "lora", "dora", "quanta", "krona", "mora", "loretta")
+BLOCK_METHODS = ("series", "parallel", "prefix")
+
+
+@dataclass
+class MethodConfig:
+    """One PEFT configuration, e.g. LoRA r=8 on (wq, wv).
+
+    hyper keys by method:
+      ft:      {}
+      lora:    {r, alpha}
+      dora:    {r, alpha}
+      quanta:  {dims: [d1..dN], structure?: [[m,n]..], use_pallas?: bool,
+                block_tokens?: int}
+      krona:   {a_rows, a_cols}      # A is (a_rows, a_cols), B fills rest
+      mora:    {rhat}                # shared square matrix size
+      loretta: {r, n_axes}           # TT rank and axes count
+      series:  {bottleneck}
+      parallel:{bottleneck}
+      prefix:  {p_len}
+    """
+    name: str
+    hyper: Dict = field(default_factory=dict)
+    modules: Tuple[str, ...] = ("wq", "wv")
+
+    def is_block_level(self) -> bool:
+        return self.name in BLOCK_METHODS
+
+
+def _factor_dims(n: int, n_axes: int) -> List[int]:
+    """Greedy near-balanced factorization of n into n_axes factors."""
+    dims = []
+    rem = n
+    for i in range(n_axes, 1, -1):
+        target = round(rem ** (1.0 / i))
+        # find a divisor of rem closest to target
+        best = 1
+        for c in range(1, rem + 1):
+            if rem % c == 0 and abs(c - target) < abs(best - target):
+                best = c
+        dims.append(best)
+        rem //= best
+    dims.append(rem)
+    return dims
+
+
+# ---------------------------------------------------------------------------
+# Matrix-level methods
+# ---------------------------------------------------------------------------
+
+class MatrixMethod:
+    """Interface for a reparameterization of a single weight matrix."""
+
+    def __init__(self, cfg: MethodConfig, prefix: str, d_out: int, d_in: int):
+        self.cfg = cfg
+        self.prefix = prefix  # e.g. "L3.wq"
+        self.d_out = d_out
+        self.d_in = d_in
+
+    def theta_specs(self) -> List[ParamSpec]:
+        raise NotImplementedError
+
+    def base_specs(self) -> List[ParamSpec]:
+        return []
+
+    def adapted_matmul(self, x, w0, params: Dict):
+        """y = x @ W'(params)^T given frozen w0 [d_out, d_in]."""
+        raise NotImplementedError
+
+    def delta_matrix(self, params: Dict, w0):
+        """Materialized dW [d_out, d_in] (merge path)."""
+        raise NotImplementedError
+
+
+class FTMethod(MatrixMethod):
+    """Full fine-tuning expressed as an unconstrained additive delta.
+
+    Training dW with dW(0)=0 from base W0 is exactly fine-tuning W from
+    initialization W0 under AdamW (the optimizer state is on the moving
+    part either way)."""
+
+    def theta_specs(self):
+        return [ParamSpec(f"{self.prefix}.dw", (self.d_out, self.d_in), {"kind": "zeros"})]
+
+    def adapted_matmul(self, x, w0, params):
+        return x @ (w0 + params[f"{self.prefix}.dw"]).T
+
+    def delta_matrix(self, params, w0):
+        return params[f"{self.prefix}.dw"]
+
+
+class LoRAMethod(MatrixMethod):
+    def theta_specs(self):
+        r = self.cfg.hyper["r"]
+        std = 1.0 / math.sqrt(self.d_in)
+        return [
+            ParamSpec(f"{self.prefix}.lora_a", (r, self.d_in),
+                      {"kind": "normal", "std": std, "key": f"{self.prefix}.lora_a"}),
+            ParamSpec(f"{self.prefix}.lora_b", (self.d_out, r), {"kind": "zeros"}),
+        ]
+
+    def _scale(self):
+        return self.cfg.hyper.get("alpha", 16) / self.cfg.hyper["r"]
+
+    def adapted_matmul(self, x, w0, params):
+        a = params[f"{self.prefix}.lora_a"]
+        b = params[f"{self.prefix}.lora_b"]
+        return x @ w0.T + (x @ a.T) @ b.T * self._scale()
+
+    def delta_matrix(self, params, w0):
+        return ref.lora_delta_ref(params[f"{self.prefix}.lora_a"],
+                                  params[f"{self.prefix}.lora_b"], self._scale())
+
+
+class DoRAMethod(MatrixMethod):
+    """DoRA: weight-decomposed LoRA.  W' = m * V / ||V||_col with
+    V = W0 + scale * B A; m initialized to ||W0||_col (so W'(0) = W0).
+
+    The column norm is over d_out for each input column (axis 0 of W)."""
+
+    def theta_specs(self):
+        r = self.cfg.hyper["r"]
+        std = 1.0 / math.sqrt(self.d_in)
+        return [
+            ParamSpec(f"{self.prefix}.dora_a", (r, self.d_in),
+                      {"kind": "normal", "std": std, "key": f"{self.prefix}.dora_a"}),
+            ParamSpec(f"{self.prefix}.dora_b", (self.d_out, r), {"kind": "zeros"}),
+            # dm is a multiplicative correction on top of ||W0||_col;
+            # parameterized as m = ||V||_col * (1 + dm) with dm(0)=0 would
+            # not be DoRA; instead m is free with init = ||W0||_col.  Since
+            # rust cannot compute ||W0||_col of a checkpoint at init time
+            # cheaply, we parameterize m = ||V||_col + dm  (dm trainable,
+            # zeros-init) which satisfies W'(0) = W0 exactly.
+            ParamSpec(f"{self.prefix}.dora_dm", (self.d_in,), {"kind": "zeros"}),
+        ]
+
+    def _scale(self):
+        return self.cfg.hyper.get("alpha", 16) / self.cfg.hyper["r"]
+
+    def _wprime(self, params, w0):
+        a = params[f"{self.prefix}.dora_a"]
+        b = params[f"{self.prefix}.dora_b"]
+        dm = params[f"{self.prefix}.dora_dm"]
+        v = w0 + self._scale() * (b @ a)
+        norm = jnp.sqrt(jnp.sum(v * v, axis=0) + 1e-6)
+        m = norm + dm
+        return v * (m / norm)[None, :]
+
+    def adapted_matmul(self, x, w0, params):
+        return x @ self._wprime(params, w0).T
+
+    def delta_matrix(self, params, w0):
+        return self._wprime(params, w0) - w0
+
+
+class QuanTAMethod(MatrixMethod):
+    """The paper's method.  Trainable chain T plus frozen shadow chain S
+    (identical init; paper Eq. 8):  y = x W0^T + chain_T(x) - chain_S(x).
+
+    The shadow chain lives in the *base* vector, so it is frozen by
+    construction and — per Eq. 9 — could equivalently be merged into W0
+    once (the merge path materializes exactly T - S)."""
+
+    def __init__(self, cfg, prefix, d_out, d_in):
+        super().__init__(cfg, prefix, d_out, d_in)
+        assert d_out == d_in, "QuanTA main-path covers square matrices (paper §5)"
+        self.dims = tuple(int(v) for v in cfg.hyper["dims"])
+        assert int(np.prod(self.dims)) == d_in, (self.dims, d_in)
+        self.structure = [tuple(p) for p in cfg.hyper.get(
+            "structure", einsum_gen.all_pairs_structure(len(self.dims)))]
+        self.shapes = einsum_gen.gate_shapes(self.dims, self.structure)
+        self._apply = make_quanta_apply(
+            self.dims, self.structure,
+            block_tokens=cfg.hyper.get("block_tokens", 128),
+            use_pallas=cfg.hyper.get("use_pallas", True))
+
+    def _gate_specs(self, who: str) -> List[ParamSpec]:
+        specs = []
+        for a, (n, _) in enumerate(self.shapes):
+            # Shared PRNG key between T and S gate alpha => identical init.
+            key = f"{self.prefix}.gate{a}"
+            specs.append(ParamSpec(
+                f"{self.prefix}.{who}{a}", (n, n),
+                {"kind": "eye_noise", "n": n, "std": 0.1 / math.sqrt(n), "key": key}))
+        return specs
+
+    def theta_specs(self):
+        return self._gate_specs("T")
+
+    def base_specs(self):
+        return self._gate_specs("S")
+
+    def _chain(self, x, gates):
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+        y = self._apply(flat, list(gates))
+        return y.reshape(lead + (self.d_out,))
+
+    def adapted_matmul(self, x, w0, params):
+        t_gates = [params[f"{self.prefix}.T{a}"] for a in range(len(self.shapes))]
+        s_gates = [params[f"{self.prefix}.S{a}"] for a in range(len(self.shapes))]
+        return x @ w0.T + self._chain(x, t_gates) - self._chain(x, s_gates)
+
+    def delta_matrix(self, params, w0):
+        t_gates = [params[f"{self.prefix}.T{a}"] for a in range(len(self.shapes))]
+        s_gates = [params[f"{self.prefix}.S{a}"] for a in range(len(self.shapes))]
+        full_t = ref.quanta_full_ref(t_gates, self.dims, self.structure)
+        full_s = ref.quanta_full_ref(s_gates, self.dims, self.structure)
+        return full_t - full_s
+
+
+class KronAMethod(MatrixMethod):
+    """KronA: dW = s * (A kron B) — the paper notes this is the special
+    case of QuanTA with a single gate acting on both axes of a 2-axis
+    decomposition (Thm 6.1 remark)."""
+
+    def theta_specs(self):
+        ar, ac = self.cfg.hyper["a_rows"], self.cfg.hyper["a_cols"]
+        assert self.d_out % ar == 0 and self.d_in % ac == 0
+        br, bc = self.d_out // ar, self.d_in // ac
+        std = 1.0 / math.sqrt(ac * bc)
+        return [
+            ParamSpec(f"{self.prefix}.krona_a", (ar, ac),
+                      {"kind": "normal", "std": std, "key": f"{self.prefix}.krona_a"}),
+            ParamSpec(f"{self.prefix}.krona_b", (br, bc), {"kind": "zeros"}),
+        ]
+
+    def adapted_matmul(self, x, w0, params):
+        a = params[f"{self.prefix}.krona_a"]
+        b = params[f"{self.prefix}.krona_b"]
+        ar, ac = a.shape
+        br, bc = b.shape
+        lead = x.shape[:-1]
+        # (A kron B) x == reshape(B @ X @ A^T) with X = x reshaped (ac, bc)
+        xg = x.reshape(lead + (ac, bc))
+        y = jnp.einsum("...cb,rc,sb->...rs", xg, a, b)
+        return x @ w0.T + y.reshape(lead + (self.d_out,))
+
+    def delta_matrix(self, params, w0):
+        return ref.krona_delta_ref(params[f"{self.prefix}.krona_a"],
+                                   params[f"{self.prefix}.krona_b"])
+
+
+class MoRAMethod(MatrixMethod):
+    """MoRA-style high-rank square update: one shared rhat x rhat matrix
+    applied block-diagonally (delta = kron(I_{d/rhat}, M)); zeros init."""
+
+    def theta_specs(self):
+        rhat = self.cfg.hyper["rhat"]
+        assert self.d_in % rhat == 0 and self.d_out == self.d_in
+        return [ParamSpec(f"{self.prefix}.mora_m", (rhat, rhat), {"kind": "zeros"})]
+
+    def adapted_matmul(self, x, w0, params):
+        m = params[f"{self.prefix}.mora_m"]
+        return x @ w0.T + ref.mora_apply_ref(x, m)
+
+    def delta_matrix(self, params, w0):
+        m = params[f"{self.prefix}.mora_m"]
+        g = self.d_in // m.shape[0]
+        return jnp.kron(jnp.eye(g, dtype=m.dtype), m)
+
+
+class LoRETTAMethod(MatrixMethod):
+    """LoRETTA-style tensor-train delta: dW reshaped over n_axes factor
+    pairs, TT-cores of rank r, last core zeros (so dW(0)=0)."""
+
+    def __init__(self, cfg, prefix, d_out, d_in):
+        super().__init__(cfg, prefix, d_out, d_in)
+        n_axes = cfg.hyper.get("n_axes", 3)
+        self.d_dims = _factor_dims(d_out, n_axes)
+        self.k_dims = _factor_dims(d_in, n_axes)
+        r = cfg.hyper["r"]
+        self.ranks = [1] + [r] * (n_axes - 1) + [1]
+
+    def theta_specs(self):
+        specs = []
+        n = len(self.d_dims)
+        for i in range(n):
+            shape = (self.ranks[i], self.d_dims[i], self.k_dims[i], self.ranks[i + 1])
+            if i == n - 1:
+                init = {"kind": "zeros"}
+            else:
+                std = 1.0 / math.sqrt(self.k_dims[i] * self.ranks[i])
+                init = {"kind": "normal", "std": std, "key": f"{self.prefix}.tt{i}"}
+            specs.append(ParamSpec(f"{self.prefix}.tt{i}", shape, init))
+        return specs
+
+    def _delta(self, params):
+        cores = [params[f"{self.prefix}.tt{i}"] for i in range(len(self.d_dims))]
+        return ref.tt_delta_ref(cores, self.d_dims, self.k_dims)
+
+    def adapted_matmul(self, x, w0, params):
+        return x @ (w0 + self._delta(params)).T
+
+    def delta_matrix(self, params, w0):
+        return self._delta(params)
+
+
+def make_matrix_method(cfg: MethodConfig, prefix: str, d_out: int, d_in: int) -> MatrixMethod:
+    cls = {
+        "ft": FTMethod, "lora": LoRAMethod, "dora": DoRAMethod,
+        "quanta": QuanTAMethod, "krona": KronAMethod, "mora": MoRAMethod,
+        "loretta": LoRETTAMethod,
+    }[cfg.name]
+    return cls(cfg, prefix, d_out, d_in)
+
+
+# ---------------------------------------------------------------------------
+# Block-level methods (specs only; application lives in model.py)
+# ---------------------------------------------------------------------------
+
+def block_theta_specs(cfg: MethodConfig, n_layers: int, d: int,
+                      n_heads: int, head_dim: int) -> List[ParamSpec]:
+    specs: List[ParamSpec] = []
+    if cfg.name in ("series", "parallel"):
+        b = cfg.hyper["bottleneck"]
+        std = 1.0 / math.sqrt(d)
+        for l in range(n_layers):
+            for site in (("attn", "mlp") if cfg.name == "series" else ("mlp",)):
+                p = f"L{l}.{cfg.name}_{site}"
+                specs.append(ParamSpec(f"{p}.down", (b, d),
+                                       {"kind": "normal", "std": std, "key": f"{p}.down"}))
+                specs.append(ParamSpec(f"{p}.up", (d, b), {"kind": "zeros"}))
+    elif cfg.name == "prefix":
+        p_len = cfg.hyper["p_len"]
+        std = 0.02
+        for l in range(n_layers):
+            specs.append(ParamSpec(f"L{l}.prefix_k", (n_heads, p_len, head_dim),
+                                   {"kind": "normal", "std": std, "key": f"L{l}.prefix_k"}))
+            specs.append(ParamSpec(f"L{l}.prefix_v", (n_heads, p_len, head_dim),
+                                   {"kind": "normal", "std": std, "key": f"L{l}.prefix_v"}))
+    else:
+        raise ValueError(cfg.name)
+    return specs

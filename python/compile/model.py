@@ -1,0 +1,232 @@
+"""L2: decoder-only transformer with PEFT method injection.
+
+LLaMA-family architecture at reduced scale: token embedding (tied output
+head), RMSNorm, rotary multi-head attention, SwiGLU MLP.  The adapted
+projection matrices (``wq``/``wk``/``wv``/``wo``/``wgate``/``wup``/
+``wdown``) are routed through the active ``MethodConfig``; block-level
+methods (series/parallel adapters, prefix tuning) hook the residual
+stream / attention cache instead.
+
+Everything here is build-time: ``aot.py`` lowers the jitted graphs to HLO
+text once, and the rust coordinator drives them through PJRT.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import methods as M
+from .packing import ParamSpec, Layout
+
+ADAPTABLE = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+
+@dataclass
+class ArchConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def model_param_specs(arch: ArchConfig) -> List[ParamSpec]:
+    """Canonical model parameter order — shared verbatim by the pretrain
+    artifact's theta layout and every fine-tune artifact's base layout, so
+    rust can load a pretraining checkpoint as the fine-tune base."""
+    d, dff, v = arch.d_model, arch.d_ff, arch.vocab
+    specs = [ParamSpec("embed", (v, d), {"kind": "normal", "std": 0.02, "key": "embed"})]
+    for l in range(arch.n_layers):
+        p = f"L{l}"
+        std_attn = 1.0 / math.sqrt(d)
+        std_down = 1.0 / math.sqrt(dff)
+        specs += [
+            ParamSpec(f"{p}.attn_norm", (d,), {"kind": "ones"}),
+            ParamSpec(f"{p}.wq", (d, d), {"kind": "normal", "std": std_attn, "key": f"{p}.wq"}),
+            ParamSpec(f"{p}.wk", (d, d), {"kind": "normal", "std": std_attn, "key": f"{p}.wk"}),
+            ParamSpec(f"{p}.wv", (d, d), {"kind": "normal", "std": std_attn, "key": f"{p}.wv"}),
+            ParamSpec(f"{p}.wo", (d, d), {"kind": "normal", "std": std_attn / math.sqrt(2 * arch.n_layers), "key": f"{p}.wo"}),
+            ParamSpec(f"{p}.mlp_norm", (d,), {"kind": "ones"}),
+            ParamSpec(f"{p}.wgate", (dff, d), {"kind": "normal", "std": std_attn, "key": f"{p}.wgate"}),
+            ParamSpec(f"{p}.wup", (dff, d), {"kind": "normal", "std": std_attn, "key": f"{p}.wup"}),
+            ParamSpec(f"{p}.wdown", (d, dff), {"kind": "normal", "std": std_down / math.sqrt(2 * arch.n_layers), "key": f"{p}.wdown"}),
+        ]
+    specs.append(ParamSpec("final_norm", (arch.d_model,), {"kind": "ones"}))
+    return specs
+
+
+def build_method_specs(arch: ArchConfig, mcfg: Optional[M.MethodConfig]):
+    """(theta_specs, extra_base_specs, matrix_methods dict) for a config.
+
+    matrix_methods maps "L{l}.{module}" -> MatrixMethod.
+    """
+    theta: List[ParamSpec] = []
+    extra_base: List[ParamSpec] = []
+    mms: Dict[str, M.MatrixMethod] = {}
+    if mcfg is None:  # pretraining: theta = all model params
+        return theta, extra_base, mms
+    if mcfg.is_block_level():
+        theta += M.block_theta_specs(mcfg, arch.n_layers, arch.d_model,
+                                     arch.n_heads, arch.head_dim)
+        return theta, extra_base, mms
+    dimmap = {
+        "wq": (arch.d_model, arch.d_model), "wk": (arch.d_model, arch.d_model),
+        "wv": (arch.d_model, arch.d_model), "wo": (arch.d_model, arch.d_model),
+        "wgate": (arch.d_ff, arch.d_model), "wup": (arch.d_ff, arch.d_model),
+        "wdown": (arch.d_model, arch.d_ff),
+    }
+    for l in range(arch.n_layers):
+        for mod in mcfg.modules:
+            d_out, d_in = dimmap[mod]
+            mm = M.make_matrix_method(mcfg, f"L{l}.{mod}", d_out, d_in)
+            mms[f"L{l}.{mod}"] = mm
+            theta += mm.theta_specs()
+            extra_base += mm.base_specs()
+    return theta, extra_base, mms
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rotary(x, positions):
+    """x: [B, H, S, Dh]; standard LLaMA rotary on pairs."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+class Model:
+    """Bound (arch, method) forward graph builder."""
+
+    def __init__(self, arch: ArchConfig, mcfg: Optional[M.MethodConfig], pretrain: bool = False):
+        self.arch = arch
+        self.mcfg = mcfg
+        self.pretrain = pretrain
+        self.model_specs = model_param_specs(arch)
+        m_theta, m_base, self.mms = build_method_specs(arch, mcfg)
+        if pretrain:
+            assert mcfg is None
+            # trainable: everything; base: 1-element dummy (PJRT-friendly)
+            self.theta_layout = Layout(self.model_specs)
+            self.base_layout = Layout([ParamSpec("dummy", (1,), {"kind": "zeros"})])
+        else:
+            self.theta_layout = Layout(m_theta)
+            self.base_layout = Layout(self.model_specs + m_base)
+
+    # -- parameter plumbing -------------------------------------------------
+    def split_params(self, base_flat, theta_flat):
+        if self.pretrain:
+            model_p = self.theta_layout.unflatten(theta_flat)
+            return model_p, {}
+        base = self.base_layout.unflatten(base_flat)
+        theta = self.theta_layout.unflatten(theta_flat)
+        # method params see a merged dict (frozen S lives in base)
+        merged = dict(base)
+        merged.update(theta)
+        return merged, theta
+
+    def _proj(self, params, layer: int, mod: str, x):
+        """Project through (possibly adapted) matrix L{layer}.{mod}."""
+        key = f"L{layer}.{mod}"
+        w0 = params[key]
+        mm = self.mms.get(key)
+        if mm is None:
+            return x @ w0.T
+        return mm.adapted_matmul(x, w0, params)
+
+    # -- forward ------------------------------------------------------------
+    def forward(self, base_flat, theta_flat, tokens):
+        """tokens [B, S] int32 -> logits [B, S, V] f32."""
+        arch = self.arch
+        params, _ = self.split_params(base_flat, theta_flat)
+        mname = self.mcfg.name if self.mcfg else None
+
+        b, s = tokens.shape
+        h = params["embed"][tokens]  # [B, S, D]
+        positions = jnp.arange(s)
+        # causal mask [S, S(+p_len)]
+        neg = jnp.float32(-1e9)
+        causal = jnp.where(positions[:, None] >= positions[None, :], 0.0, neg)
+
+        for l in range(arch.n_layers):
+            p = f"L{l}"
+            hn = _rmsnorm(h, params[f"{p}.attn_norm"])
+            q = self._proj(params, l, "wq", hn)
+            k = self._proj(params, l, "wk", hn)
+            v = self._proj(params, l, "wv", hn)
+            q = q.reshape(b, s, arch.n_heads, arch.head_dim).transpose(0, 2, 1, 3)
+            k = k.reshape(b, s, arch.n_heads, arch.head_dim).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, arch.n_heads, arch.head_dim).transpose(0, 2, 1, 3)
+            q = _rotary(q, positions)
+            k = _rotary(k, positions)
+            mask = causal
+            if mname == "prefix":
+                pk = params[f"{p}.prefix_k"][None].repeat(b, axis=0)  # [B,H,P,Dh]
+                pv = params[f"{p}.prefix_v"][None].repeat(b, axis=0)
+                k = jnp.concatenate([pk, k], axis=2)
+                v = jnp.concatenate([pv, v], axis=2)
+                p_len = pk.shape[2]
+                mask = jnp.concatenate([jnp.zeros((s, p_len)), causal], axis=1)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(arch.head_dim)
+            att = jax.nn.softmax(att + mask[None, None], axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, arch.d_model)
+            attn_out = self._proj(params, l, "wo", ctx)
+            if mname == "series":
+                ad = params[f"{p}.series_attn.down"]
+                au = params[f"{p}.series_attn.up"]
+                attn_out = attn_out + jax.nn.relu(attn_out @ ad.T) @ au.T
+            h = h + attn_out
+
+            hn = _rmsnorm(h, params[f"{p}.mlp_norm"])
+            gate = self._proj(params, l, "wgate", hn)
+            up = self._proj(params, l, "wup", hn)
+            mlp_out = self._proj(params, l, "wdown", jax.nn.silu(gate) * up)
+            if mname == "series":
+                ad = params[f"{p}.series_mlp.down"]
+                au = params[f"{p}.series_mlp.up"]
+                mlp_out = mlp_out + jax.nn.relu(mlp_out @ ad.T) @ au.T
+            elif mname == "parallel":
+                ad = params[f"{p}.parallel_mlp.down"]
+                au = params[f"{p}.parallel_mlp.up"]
+                mlp_out = mlp_out + jax.nn.relu(hn @ ad.T) @ au.T
+            h = h + mlp_out
+
+        h = _rmsnorm(h, params["final_norm"])
+        logits = h @ params["embed"].T  # tied head
+        return logits
+
+    def delta_matrices(self, base_flat, theta_flat):
+        """Materialize dW for every adapted matrix, stacked [M, d_out, d_in]
+        (matrix-level methods only; modules must share shapes)."""
+        params, _ = self.split_params(base_flat, theta_flat)
+        deltas = []
+        for key in sorted(self.mms.keys()):
+            mm = self.mms[key]
+            deltas.append(mm.delta_matrix(params, params[key]))
+        return jnp.stack(deltas)
+
+    def merged_module_keys(self) -> List[str]:
+        return sorted(self.mms.keys())

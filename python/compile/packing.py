@@ -1,0 +1,102 @@
+"""Flat-parameter packing: the L2<->L3 parameter contract.
+
+The rust coordinator owns parameters as flat f32 vectors (one for the
+frozen base, one for the trainable theta).  Every lowered graph receives
+those vectors and unflattens them internally via static slices.  The
+layout — name, shape, offset, and an *init spec* rust can execute — is
+emitted into the artifact manifest so the coordinator can initialize,
+checkpoint, and introspect parameters without python.
+
+Init spec kinds (mirrored by rust/src/runtime/initspec.rs):
+  {"kind": "zeros"}
+  {"kind": "ones"}
+  {"kind": "normal", "std": s, "key": k}       # N(0, s^2), PRNG stream k
+  {"kind": "eye_noise", "n": n, "std": s, "key": k}
+      # identity(n) + N(0, s^2) noise, flattened row-major; the shared
+      # "key" is what makes QuanTA's frozen shadow S identical to the
+      # trainable T at init (paper Eq. 8).
+  {"kind": "checkpoint"}                        # loaded from a model ckpt
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: Dict
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass
+class Layout:
+    specs: List[ParamSpec]
+    offsets: List[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.offsets = []
+        ofs = 0
+        for s in self.specs:
+            self.offsets.append(ofs)
+            ofs += s.size
+        self.total = ofs
+
+    def unflatten(self, flat) -> Dict[str, jnp.ndarray]:
+        """Static-slice a flat vector into the named parameter dict."""
+        out = {}
+        for spec, ofs in zip(self.specs, self.offsets):
+            out[spec.name] = flat[ofs:ofs + spec.size].reshape(spec.shape)
+        return out
+
+    def flatten_np(self, tree: Dict[str, np.ndarray]) -> np.ndarray:
+        """Host-side flatten (tests / init verification)."""
+        parts = []
+        for spec in self.specs:
+            arr = np.asarray(tree[spec.name], dtype=np.float32)
+            assert arr.shape == tuple(spec.shape), (spec.name, arr.shape, spec.shape)
+            parts.append(arr.reshape(-1))
+        return np.concatenate(parts) if parts else np.zeros((0,), np.float32)
+
+    def manifest(self) -> List[Dict]:
+        return [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "offset": o,
+                "size": s.size,
+                "init": s.init,
+            }
+            for s, o in zip(self.specs, self.offsets)
+        ]
+
+
+def init_value(spec: ParamSpec, rng: np.random.Generator) -> np.ndarray:
+    """Python-side reference implementation of the init specs (used by
+    tests to validate the rust implementation and by pure-python smoke
+    training).  Note: values will NOT bit-match rust's PRNG; tests compare
+    distributions and the structural parts (identity, zeros)."""
+    kind = spec.init["kind"]
+    if kind == "zeros":
+        return np.zeros(spec.shape, np.float32)
+    if kind == "ones":
+        return np.ones(spec.shape, np.float32)
+    if kind == "normal":
+        return rng.normal(0.0, spec.init["std"], size=spec.shape).astype(np.float32)
+    if kind == "eye_noise":
+        n = spec.init["n"]
+        base = np.eye(n, dtype=np.float32)
+        noise = rng.normal(0.0, spec.init["std"], size=(n, n)).astype(np.float32)
+        return (base + noise).reshape(spec.shape)
+    if kind == "checkpoint":
+        raise ValueError(f"{spec.name}: checkpoint init has no python value")
+    raise ValueError(f"unknown init kind {kind}")

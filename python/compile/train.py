@@ -1,0 +1,111 @@
+"""L2: loss, AdamW, and the lowered graph builders.
+
+The train step is a *pure function over flat vectors* — base params,
+trainable theta, AdamW moments, step counter, token batch, loss mask —
+returning the updated trainable state plus the scalar loss.  Gradients,
+optimizer update, and the linear LR schedule (paper App. E: AdamW + linear
+scheduler, weight decay 0, dropout 0) are all inside the HLO, so the rust
+coordinator's hot loop is upload → execute → download.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ArchConfig, Model
+from . import methods as M
+
+
+@dataclass
+class TrainHyper:
+    lr: float = 1e-3
+    warmup_steps: int = 20
+    total_steps: int = 300
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+
+
+def lr_at(step, h: TrainHyper):
+    """Linear warmup then linear decay to 0 at total_steps."""
+    stepf = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (stepf + 1.0) / max(1, h.warmup_steps))
+    decay = jnp.maximum(0.0, (h.total_steps - stepf) / max(1, h.total_steps - h.warmup_steps))
+    return h.lr * warm * jnp.minimum(1.0, decay)
+
+
+def masked_ce_loss(logits, targets, mask):
+    """Mean cross-entropy over masked positions.
+
+    logits [B,S,V], targets [B,S] i32, mask [B,S] f32 (1.0 = counted)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def build_train_step(model: Model, h: TrainHyper):
+    """(base, theta, m, v, step, tokens, mask) -> (theta', m', v', loss).
+
+    tokens [B, S+1]: inputs tokens[:, :-1], targets tokens[:, 1:];
+    mask [B, S] applies to target positions."""
+
+    def loss_fn(theta, base, tokens, mask):
+        logits = model.forward(base, theta, tokens[:, :-1])
+        return masked_ce_loss(logits, tokens[:, 1:], mask)
+
+    def step_fn(base, theta, m, v, step, tokens, mask):
+        loss, grad = jax.value_and_grad(loss_fn)(theta, base, tokens, mask)
+        # global-norm clip
+        gnorm = jnp.sqrt(jnp.sum(grad * grad) + 1e-12)
+        scale = jnp.minimum(1.0, h.grad_clip / gnorm)
+        grad = grad * scale
+        # AdamW
+        t = step.astype(jnp.float32) + 1.0
+        m2 = h.beta1 * m + (1.0 - h.beta1) * grad
+        v2 = h.beta2 * v + (1.0 - h.beta2) * grad * grad
+        mhat = m2 / (1.0 - jnp.power(h.beta1, t))
+        vhat = v2 / (1.0 - jnp.power(h.beta2, t))
+        lr = lr_at(step, h)
+        upd = lr * (mhat / (jnp.sqrt(vhat) + h.eps) + h.weight_decay * theta)
+        return theta - upd, m2, v2, loss
+
+    return step_fn
+
+
+def build_eval_loss(model: Model):
+    """(base, theta, tokens, mask) -> (loss_sum, tok_count)."""
+
+    def fn(base, theta, tokens, mask):
+        logits = model.forward(base, theta, tokens[:, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    return fn
+
+
+def build_fwd_logits(model: Model):
+    """(base, theta, tokens) -> logits [B, S, V] (greedy decode / option
+    scoring driven from rust)."""
+
+    def fn(base, theta, tokens):
+        return model.forward(base, theta, tokens)
+
+    return fn
+
+
+def build_merge(model: Model):
+    """(base, theta) -> stacked delta matrices [M, d_out, d_in]."""
+
+    def fn(base, theta):
+        return model.delta_matrices(base, theta)
+
+    return fn

@@ -1,0 +1,149 @@
+"""L1 correctness: the fused Pallas QuanTA kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, axis decompositions, circuit structures, and
+dtypes; gradients of the custom VJP are checked against jnp autodiff.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import einsum_gen, ref
+from compile.kernels.quanta import make_quanta_apply
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def random_gates(rng, dims, structure, dtype=np.float32):
+    shapes = einsum_gen.gate_shapes(dims, structure)
+    return [
+        jnp.asarray(rng.normal(scale=1.0 / np.sqrt(s[0]), size=s).astype(dtype))
+        for s in shapes
+    ]
+
+
+@st.composite
+def circuit_case(draw):
+    n_axes = draw(st.integers(2, 4))
+    dims = tuple(draw(st.integers(2, 4)) for _ in range(n_axes))
+    # structure: all-pairs or a random subset of pairs (>= 1 gate)
+    pairs = einsum_gen.all_pairs_structure(n_axes)
+    use_all = draw(st.booleans())
+    if not use_all:
+        k = draw(st.integers(1, len(pairs)))
+        idx = draw(st.permutations(range(len(pairs))))[:k]
+        pairs = [pairs[i] for i in sorted(idx)]
+    tokens = draw(st.sampled_from([1, 2, 4, 8]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return dims, pairs, tokens, seed
+
+
+@given(circuit_case())
+def test_pallas_kernel_matches_ref(case):
+    dims, structure, tokens, seed = case
+    rng = np.random.default_rng(seed)
+    gates = random_gates(rng, dims, structure)
+    d = int(np.prod(dims))
+    x = jnp.asarray(rng.normal(size=(tokens, d)).astype(np.float32))
+    apply_fn = make_quanta_apply(dims, structure, block_tokens=max(1, tokens // 2))
+    got = apply_fn(x, gates)
+    want = ref.quanta_apply_ref(x, gates, dims, structure)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@given(circuit_case())
+def test_einsum_expr_matches_loop_oracle(case):
+    dims, structure, tokens, seed = case
+    rng = np.random.default_rng(seed)
+    gates = random_gates(rng, dims, structure)
+    d = int(np.prod(dims))
+    x = jnp.asarray(rng.normal(size=(tokens, d)).astype(np.float32))
+    a = ref.quanta_apply_ref(x, gates, dims, structure)
+    b = ref.quanta_apply_loop_ref(x, gates, dims, structure)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+@given(circuit_case())
+def test_full_matrix_consistent_with_apply(case):
+    dims, structure, tokens, seed = case
+    rng = np.random.default_rng(seed)
+    gates = random_gates(rng, dims, structure)
+    d = int(np.prod(dims))
+    x = jnp.asarray(rng.normal(size=(tokens, d)).astype(np.float32))
+    full = ref.quanta_full_ref(gates, dims, structure)
+    want = ref.quanta_apply_ref(x, gates, dims, structure)
+    got = x @ full.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+@given(circuit_case())
+def test_custom_vjp_matches_jnp_grad(case):
+    dims, structure, tokens, seed = case
+    rng = np.random.default_rng(seed)
+    gates = random_gates(rng, dims, structure)
+    d = int(np.prod(dims))
+    x = jnp.asarray(rng.normal(size=(tokens, d)).astype(np.float32))
+    apply_fn = make_quanta_apply(dims, structure, block_tokens=tokens)
+
+    def f_pallas(x, gs):
+        return jnp.sum(jnp.tanh(apply_fn(x, gs)))
+
+    def f_ref(x, gs):
+        return jnp.sum(jnp.tanh(ref.quanta_apply_ref(x, gs, dims, structure)))
+
+    gx1, gg1 = jax.grad(f_pallas, argnums=(0, 1))(x, gates)
+    gx2, gg2 = jax.grad(f_ref, argnums=(0, 1))(x, gates)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2), rtol=1e-3, atol=1e-4)
+    for a, b in zip(gg1, gg2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_identity_gates_are_identity_map():
+    dims = (4, 4, 2)
+    structure = einsum_gen.all_pairs_structure(3)
+    gates = [jnp.eye(s[0], dtype=jnp.float32) for s in einsum_gen.gate_shapes(dims, structure)]
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 32)).astype(np.float32))
+    apply_fn = make_quanta_apply(dims, structure, block_tokens=8)
+    np.testing.assert_allclose(np.asarray(apply_fn(x, gates)), np.asarray(x), rtol=1e-5, atol=1e-6)
+
+
+def test_bf16_path_runs_and_is_close():
+    dims = (4, 4)
+    structure = [(0, 1)]
+    rng = np.random.default_rng(1)
+    gates32 = random_gates(rng, dims, structure)
+    x32 = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    apply_fn = make_quanta_apply(dims, structure, block_tokens=4)
+    y32 = apply_fn(x32, gates32)
+    y16 = apply_fn(x32.astype(jnp.bfloat16), [g.astype(jnp.bfloat16) for g in gates32])
+    np.testing.assert_allclose(
+        np.asarray(y16.astype(jnp.float32)), np.asarray(y32), rtol=0.1, atol=0.1
+    )
+
+
+def test_block_tokens_must_divide():
+    dims = (2, 2)
+    structure = [(0, 1)]
+    gates = [jnp.eye(4)]
+    x = jnp.zeros((6, 4), jnp.float32)
+    apply_fn = make_quanta_apply(dims, structure, block_tokens=4)
+    with pytest.raises(AssertionError):
+        apply_fn(x, gates)
+
+
+def test_einsum_gen_validates_structure():
+    with pytest.raises(ValueError):
+        einsum_gen.quanta_apply_expr(3, [(0, 0)])
+    with pytest.raises(ValueError):
+        einsum_gen.quanta_apply_expr(3, [(0, 5)])
+
+
+def test_param_count_formula():
+    # uniform case (paper §6): N(N-1)/2 * d^{4/N}
+    dims = (4, 4, 4)
+    structure = einsum_gen.all_pairs_structure(3)
+    assert einsum_gen.param_count(dims, structure) == 3 * 16 * 16
+    assert einsum_gen.apply_flops(dims, structure) == 3 * 64 * 16

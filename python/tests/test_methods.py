@@ -1,0 +1,158 @@
+"""L2 method correctness: every PEFT parameterization's invariants.
+
+* zero-init: adapted_matmul == base matmul at init (incl. QuanTA's T-S
+  shadow cancellation, Eq. 8),
+* merge: delta_matrix materialization equals the apply path (Eq. 9 / "no
+  inference overhead"),
+* rank structure: QuanTA updates are high-rank, LoRA rank-capped
+  (Theorem 6.2's practical consequence),
+* parameter counts match the paper's formulas.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import packing
+from compile.methods import MethodConfig, make_matrix_method
+from compile.kernels import einsum_gen
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+D = 16  # hidden size for matrix-method tests
+
+
+def init_params(mm, rng):
+    """Initialize theta+base params for one matrix method, honoring
+    shared keys (the QuanTA S/T trick)."""
+    cache = {}
+    params = {}
+    for spec in mm.theta_specs() + mm.base_specs():
+        key = spec.init.get("key", spec.name)
+        if key not in cache:
+            cache[key] = packing.init_value(spec, rng)
+        params[spec.name] = jnp.asarray(cache[key].reshape(spec.shape))
+    return params
+
+
+METHOD_CASES = [
+    MethodConfig("ft", {}),
+    MethodConfig("lora", {"r": 4, "alpha": 16}),
+    MethodConfig("dora", {"r": 4, "alpha": 16}),
+    MethodConfig("quanta", {"dims": [4, 2, 2]}),
+    MethodConfig("quanta", {"dims": [4, 4]}),
+    MethodConfig("krona", {"a_rows": 4, "a_cols": 4}),
+    MethodConfig("mora", {"rhat": 4}),
+    MethodConfig("loretta", {"r": 2, "n_axes": 2}),
+]
+
+
+@pytest.mark.parametrize("cfg", METHOD_CASES, ids=lambda c: c.name + str(c.hyper.get("dims", "")))
+def test_zero_init(cfg):
+    rng = np.random.default_rng(0)
+    mm = make_matrix_method(cfg, "L0.wq", D, D)
+    params = init_params(mm, rng)
+    w0 = jnp.asarray(rng.normal(size=(D, D)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(3, D)).astype(np.float32))
+    y = mm.adapted_matmul(x, w0, params)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w0.T), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", METHOD_CASES, ids=lambda c: c.name + str(c.hyper.get("dims", "")))
+def test_merge_matches_apply(cfg):
+    """W0 + delta_matrix must reproduce adapted_matmul — the paper's
+    no-inference-overhead property."""
+    rng = np.random.default_rng(1)
+    mm = make_matrix_method(cfg, "L0.wq", D, D)
+    params = init_params(mm, rng)
+    # perturb trainable params away from init
+    for spec in mm.theta_specs():
+        params[spec.name] = params[spec.name] + 0.05 * jnp.asarray(
+            rng.normal(size=spec.shape).astype(np.float32)
+        )
+    w0 = jnp.asarray(rng.normal(size=(D, D)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(5, D)).astype(np.float32))
+    y_apply = mm.adapted_matmul(x, w0, params)
+    dw = mm.delta_matrix(params, w0)
+    y_merged = x @ (w0 + dw).T
+    np.testing.assert_allclose(np.asarray(y_apply), np.asarray(y_merged), rtol=2e-3, atol=2e-4)
+
+
+def test_quanta_update_is_high_rank_lora_is_not():
+    """Theorem 6.2's payoff: same-ish param budget, very different rank."""
+    rng = np.random.default_rng(2)
+    d = 16
+    q = make_matrix_method(MethodConfig("quanta", {"dims": [4, 4]}), "L0.wq", d, d)
+    l = make_matrix_method(MethodConfig("lora", {"r": 2, "alpha": 16}), "L0.wq", d, d)
+    qp = init_params(q, rng)
+    lp = init_params(l, rng)
+    for mm, p in [(q, qp), (l, lp)]:
+        for spec in mm.theta_specs():
+            p[spec.name] = p[spec.name] + 0.3 * jnp.asarray(
+                rng.normal(size=spec.shape).astype(np.float32))
+    w0 = jnp.zeros((d, d), jnp.float32)
+    dq = np.asarray(q.delta_matrix(qp, w0))
+    dl = np.asarray(l.delta_matrix(lp, w0))
+    rq = np.linalg.matrix_rank(dq, tol=1e-4)
+    rl = np.linalg.matrix_rank(dl, tol=1e-4)
+    assert rl <= 2
+    assert rq >= d // 2, f"QuanTA rank {rq}"
+
+
+def test_quanta_param_count_formula():
+    cfg = MethodConfig("quanta", {"dims": [4, 2, 2]})
+    mm = make_matrix_method(cfg, "L0.wq", D, D)
+    total = sum(int(np.prod(s.shape)) for s in mm.theta_specs())
+    assert total == einsum_gen.param_count([4, 2, 2], einsum_gen.all_pairs_structure(3))
+
+
+def test_lora_param_count():
+    cfg = MethodConfig("lora", {"r": 4, "alpha": 16})
+    mm = make_matrix_method(cfg, "L0.wq", D, D)
+    total = sum(int(np.prod(s.shape)) for s in mm.theta_specs())
+    assert total == 2 * 4 * D
+
+
+@given(st.integers(0, 10_000))
+def test_dora_column_norm_property(seed):
+    """DoRA at zero dm: W' has the column norms of V but after the BA
+    perturbation W'(0)=W0 exactly (dm=0, B=0)."""
+    rng = np.random.default_rng(seed)
+    mm = make_matrix_method(MethodConfig("dora", {"r": 2, "alpha": 16}), "L0.wq", 8, 8)
+    params = init_params(mm, rng)
+    w0 = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    y = mm.adapted_matmul(x, w0, params)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w0.T), rtol=1e-4, atol=1e-5)
+
+
+def test_mora_delta_is_block_diagonal():
+    rng = np.random.default_rng(3)
+    mm = make_matrix_method(MethodConfig("mora", {"rhat": 4}), "L0.wq", D, D)
+    params = init_params(mm, rng)
+    params["L0.wq.mora_m"] = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    dw = np.asarray(mm.delta_matrix(params, jnp.zeros((D, D))))
+    for i in range(D):
+        for j in range(D):
+            if i // 4 != j // 4:
+                assert dw[i, j] == 0.0
+    # rank = (d/rhat) * rank(M) — high-rank from few params
+    assert np.linalg.matrix_rank(dw, tol=1e-5) == 4 * 4
+
+
+def test_krona_delta_is_kron():
+    rng = np.random.default_rng(4)
+    mm = make_matrix_method(MethodConfig("krona", {"a_rows": 4, "a_cols": 4}), "L0.wq", D, D)
+    params = init_params(mm, rng)
+    a = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    params["L0.wq.krona_a"] = a
+    params["L0.wq.krona_b"] = b
+    dw = mm.delta_matrix(params, jnp.zeros((D, D)))
+    np.testing.assert_allclose(np.asarray(dw), np.kron(np.asarray(a), np.asarray(b)), rtol=1e-5)
+    # apply path agrees
+    x = jnp.asarray(rng.normal(size=(3, D)).astype(np.float32))
+    y = mm.adapted_matmul(x, jnp.zeros((D, D)), params)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ dw.T), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,164 @@
+"""L2 model tests: shapes, layouts, method injection, and short-horizon
+learning on a toy batch for every method family."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import packing
+from compile.experiments import ARCHS, REGISTRY
+from compile.methods import MethodConfig
+from compile.model import ArchConfig, Model, model_param_specs
+from compile.train import TrainHyper, build_train_step, build_eval_loss
+
+TINY = ArchConfig("t", vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16)
+
+
+def init_flat(layout, rng):
+    cache = {}
+    parts = []
+    for spec in layout.specs:
+        key = spec.init.get("key", spec.name)
+        if key not in cache:
+            cache[key] = packing.init_value(spec, rng)
+        parts.append(cache[key].reshape(-1))
+    return np.concatenate(parts).astype(np.float32) if parts else np.zeros(0, np.float32)
+
+
+METHODS = [
+    None,  # pretrain
+    MethodConfig("ft", {}, ("wq", "wv")),
+    MethodConfig("lora", {"r": 2, "alpha": 16}, ("wq", "wv")),
+    MethodConfig("dora", {"r": 2, "alpha": 16}, ("wq", "wv")),
+    MethodConfig("quanta", {"dims": [4, 4, 2], "block_tokens": 128}, ("wq", "wv")),
+    MethodConfig("krona", {"a_rows": 8, "a_cols": 8}, ("wq", "wv")),
+    MethodConfig("mora", {"rhat": 8}, ("wq", "wv")),
+    MethodConfig("loretta", {"r": 2, "n_axes": 2}, ("wq", "wv")),
+    MethodConfig("series", {"bottleneck": 4}, ()),
+    MethodConfig("parallel", {"bottleneck": 4}, ()),
+    MethodConfig("prefix", {"p_len": 4}, ()),
+]
+
+
+def mname(m):
+    return "pretrain" if m is None else m.name
+
+
+@pytest.mark.parametrize("mcfg", METHODS, ids=mname)
+def test_forward_shapes(mcfg):
+    pretrain = mcfg is None
+    model = Model(TINY, mcfg, pretrain=pretrain)
+    rng = np.random.default_rng(0)
+    base = jnp.asarray(init_flat(model.base_layout, rng))
+    theta = jnp.asarray(init_flat(model.theta_layout, rng))
+    tokens = jnp.asarray(rng.integers(0, 64, size=(2, 16)).astype(np.int32))
+    logits = model.forward(base, theta, tokens)
+    assert logits.shape == (2, 16, 64)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize(
+    "mcfg",
+    [m for m in METHODS if m is not None and m.name != "prefix"],
+    ids=mname,
+)
+def test_zero_init_whole_model(mcfg):
+    """Adapted model at init == frozen model, through the full forward."""
+    rng = np.random.default_rng(1)
+    pre = Model(TINY, None, pretrain=True)
+    model_params = init_flat(pre.theta_layout, rng)
+
+    model = Model(TINY, mcfg)
+    rng2 = np.random.default_rng(2)
+    extra = init_flat(
+        packing.Layout(model.base_layout.specs[len(pre.theta_layout.specs):]), rng2
+    )
+    base = np.concatenate([model_params, extra]) if extra.size else model_params
+    # theta must share the eye_noise cache values with base extras: regen
+    # with the same rng sequence trick — instead init theta via the shared
+    # key cache across BOTH layouts.
+    cache = {}
+    def init_with_cache(layout, rng):
+        parts = []
+        for spec in layout.specs:
+            key = spec.init.get("key", spec.name)
+            if key not in cache:
+                cache[key] = packing.init_value(spec, rng)
+            parts.append(cache[key].reshape(-1))
+        return np.concatenate(parts).astype(np.float32) if parts else np.zeros(0, np.float32)
+
+    rng3 = np.random.default_rng(3)
+    base2 = init_with_cache(model.base_layout, rng3)
+    base2[: model_params.size] = model_params
+    theta = init_with_cache(model.theta_layout, rng3)
+
+    tokens = jnp.asarray(np.random.default_rng(4).integers(0, 64, (2, 16)).astype(np.int32))
+    l_pre = pre.forward(jnp.zeros(1), jnp.asarray(model_params), tokens)
+    l_ad = model.forward(jnp.asarray(base2), jnp.asarray(theta), tokens)
+    np.testing.assert_allclose(np.asarray(l_ad), np.asarray(l_pre), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("mcfg", [m for m in METHODS if m is not None], ids=mname)
+def test_few_steps_reduce_loss(mcfg):
+    model = Model(TINY, mcfg)
+    rng = np.random.default_rng(5)
+    cache = {}
+    def init_with_cache(layout):
+        parts = []
+        for spec in layout.specs:
+            key = spec.init.get("key", spec.name)
+            if key not in cache:
+                cache[key] = packing.init_value(spec, rng)
+            parts.append(cache[key].reshape(-1))
+        return np.concatenate(parts).astype(np.float32)
+
+    base = jnp.asarray(init_with_cache(model.base_layout))
+    theta = jnp.asarray(init_with_cache(model.theta_layout))
+    hyper = TrainHyper(lr=2e-2, warmup_steps=2, total_steps=100)
+    step_fn = jax.jit(build_train_step(model, hyper))
+    tokens = jnp.asarray(rng.integers(0, 64, (4, 17)).astype(np.int32))
+    mask = jnp.ones((4, 16), jnp.float32)
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    losses = []
+    for i in range(40):
+        theta, m, v, loss = step_fn(base, theta, m, v, jnp.int32(i), tokens, mask)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.03, f"{mname(mcfg)}: {losses[0]} -> {losses[-1]}"
+
+
+def test_model_param_spec_order_is_stable():
+    specs = model_param_specs(TINY)
+    names = [s.name for s in specs]
+    assert names[0] == "embed"
+    assert names[-1] == "final_norm"
+    assert "L0.wq" in names and "L1.wdown" in names
+    # pretrain theta layout == finetune base prefix (the checkpoint contract)
+    pre = Model(TINY, None, pretrain=True)
+    ft = Model(TINY, MethodConfig("lora", {"r": 2}, ("wq",)))
+    pre_names = [s.name for s in pre.theta_layout.specs]
+    base_names = [s.name for s in ft.base_layout.specs][: len(pre_names)]
+    assert pre_names == base_names
+
+
+def test_registry_is_consistent():
+    for name, es in REGISTRY.items():
+        arch = es.arch_cfg()
+        assert arch.d_model % arch.n_heads == 0, name
+        if es.method and es.method.name == "quanta":
+            dims = es.method.hyper["dims"]
+            assert int(np.prod(dims)) == arch.d_model, name
+
+
+def test_eval_loss_counts_mask():
+    model = Model(TINY, MethodConfig("lora", {"r": 2}, ("wq",)))
+    rng = np.random.default_rng(7)
+    base = jnp.asarray(init_flat(model.base_layout, rng))
+    theta = jnp.asarray(init_flat(model.theta_layout, rng))
+    fn = jax.jit(build_eval_loss(model))
+    tokens = jnp.asarray(rng.integers(0, 64, (2, 17)).astype(np.int32))
+    mask = np.zeros((2, 16), np.float32)
+    mask[0, :5] = 1.0
+    _, count = fn(base, theta, tokens, jnp.asarray(mask))
+    assert float(count) == 5.0

@@ -1,0 +1,143 @@
+//! Analysis pipelines: the paper's "intrinsic rank" probe (§3 / App. A).
+//!
+//! Fig. 2 methodology: fine-tune LoRA at two ranks r1 < r2 on the same
+//! task, materialize the weight updates dW = B A via the merge artifact,
+//! SVD both, and compute the subspace-similarity grid phi(i, j)
+//! (Eq. A.1).  Low-intrinsic-rank tasks (RTE) show phi collapsing for
+//! i > a few; high-intrinsic-rank tasks (DROP) keep phi high across the
+//! grid.
+
+use crate::coordinator::experiment::{RunSpec, Runner};
+use crate::linalg::{effective_rank, subspace_similarity_grid};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Result of the Fig. 2 analysis for one (task, module) pair.
+#[derive(Debug)]
+pub struct SubspaceReport {
+    pub task: String,
+    pub module: String,
+    /// phi(i, j) grid, i over r1 directions, j over r2 directions.
+    pub grid: Vec<Vec<f64>>,
+    /// effective rank of the r2 update (soft rank measure).
+    pub effective_rank_r2: f64,
+    /// mean phi over the full grid — the scalar "intrinsic rank" signal.
+    pub mean_phi: f64,
+    /// mean phi restricted to i > k1/2 (the tail the paper highlights:
+    /// ~0 for RTE, high for DROP).
+    pub tail_phi: f64,
+}
+
+/// Train LoRA at two ranks on `task` and compare update subspaces for
+/// the module at `module_idx` (index into manifest merged_modules).
+pub fn subspace_analysis(
+    runner: &mut Runner,
+    task: &str,
+    set_r1: &str,
+    set_r2: &str,
+    module_idx: usize,
+    k1: usize,
+    k2: usize,
+) -> Result<SubspaceReport> {
+    let spec1 = RunSpec::new(set_r1, task);
+    let spec2 = RunSpec::new(set_r2, task);
+    let (theta1, session1) = runner.run_for_theta(&spec1)?;
+    let (theta2, session2) = runner.run_for_theta(&spec2)?;
+    let d1 = session1.merge_deltas(&theta1)?;
+    let d2 = session2.merge_deltas(&theta2)?;
+    if module_idx >= d1.len() || module_idx >= d2.len() {
+        return Err(Error::msg("module_idx out of range"));
+    }
+    let module = session1.man.merged_modules[module_idx].clone();
+    report_from_deltas(task, &module, &d1[module_idx], &d2[module_idx], k1, k2)
+}
+
+/// Pure computation from two delta matrices (testable without PJRT).
+pub fn report_from_deltas(
+    task: &str,
+    module: &str,
+    dw1: &Tensor,
+    dw2: &Tensor,
+    k1: usize,
+    k2: usize,
+) -> Result<SubspaceReport> {
+    let grid = subspace_similarity_grid(dw1, dw2, k1, k2)?;
+    let k1 = grid.len();
+    let flat: Vec<f64> = grid.iter().flatten().copied().collect();
+    let mean_phi = crate::util::stats::mean(&flat);
+    let tail: Vec<f64> = grid[k1 / 2..].iter().flatten().copied().collect();
+    let tail_phi = crate::util::stats::mean(&tail);
+    Ok(SubspaceReport {
+        task: task.to_string(),
+        module: module.to_string(),
+        grid,
+        effective_rank_r2: effective_rank(dw2)?,
+        mean_phi,
+        tail_phi,
+    })
+}
+
+/// Render a phi grid as a coarse ASCII heatmap (rows i, cols j), the
+/// terminal stand-in for Fig. 2's color plots.
+pub fn render_heatmap(grid: &[Vec<f64>], max_cells: usize) -> String {
+    let chars = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let k1 = grid.len();
+    let k2 = grid.first().map(|r| r.len()).unwrap_or(0);
+    let step1 = (k1 + max_cells - 1) / max_cells.max(1);
+    let step2 = (k2 + max_cells - 1) / max_cells.max(1);
+    let mut out = String::new();
+    out.push_str(&format!("phi(i,j) heatmap ({k1}x{k2}), darker = higher:\n"));
+    for i in (0..k1).step_by(step1.max(1)) {
+        out.push_str("  ");
+        for j in (0..k2).step_by(step2.max(1)) {
+            let v = grid[i][j].clamp(0.0, 1.0);
+            let idx = ((v * 9.0).round() as usize).min(9);
+            out.push(chars[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_updates_full_phi() {
+        let mut rng = Rng::new(60);
+        let dw = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let r = report_from_deltas("t", "m", &dw, &dw, 8, 8).unwrap();
+        assert!(r.mean_phi > 0.99, "{}", r.mean_phi);
+        assert!(r.tail_phi > 0.99);
+    }
+
+    #[test]
+    fn low_rank_vs_highrank_signal() {
+        // dw1/dw2 sharing only a rank-2 subspace => tail phi low;
+        // dw1 == dw2 full-rank => tail phi high.  The discriminator the
+        // paper uses must separate these.
+        let mut rng = Rng::new(61);
+        let n = 16;
+        let shared = Tensor::randn(&[n, 2], 1.0, &mut rng)
+            .matmul(&Tensor::randn(&[2, n], 1.0, &mut rng))
+            .unwrap();
+        let noise1 = Tensor::randn(&[n, n], 0.05, &mut rng);
+        let noise2 = Tensor::randn(&[n, n], 0.05, &mut rng);
+        let dw1 = shared.add(&noise1).unwrap();
+        let dw2 = shared.add(&noise2).unwrap();
+        let low = report_from_deltas("low", "m", &dw1, &dw2, 8, 8).unwrap();
+        let full = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let high = report_from_deltas("high", "m", &full, &full, 8, 8).unwrap();
+        assert!(high.tail_phi > low.tail_phi + 0.2,
+            "high {} vs low {}", high.tail_phi, low.tail_phi);
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let grid = vec![vec![0.0, 0.5], vec![1.0, 0.25]];
+        let s = render_heatmap(&grid, 4);
+        assert!(s.contains("@"));
+    }
+}

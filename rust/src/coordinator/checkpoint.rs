@@ -1,0 +1,85 @@
+//! Flat-parameter checkpoints: a small self-describing binary format
+//! (magic, version, name, f32 payload), used for pretrained bases and
+//! best fine-tuned thetas.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"QFTCKPT1";
+
+/// Save a named flat parameter vector.
+pub fn save(path: &Path, name: &str, params: &[f32]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    let name_bytes = name.as_bytes();
+    f.write_all(&(name_bytes.len() as u32).to_le_bytes())?;
+    f.write_all(name_bytes)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    // bulk-write the payload
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(params.as_ptr() as *const u8, params.len() * 4)
+    };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (name, params).
+pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())));
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let name_len = u32::from_le_bytes(len4) as usize;
+    if name_len > 4096 {
+        return Err(Error::msg("checkpoint name too long"));
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    f.read_exact(&mut name_bytes)?;
+    let name = String::from_utf8(name_bytes).map_err(|_| Error::msg("bad checkpoint name"))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let mut params = vec![0.0f32; n];
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        params[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok((name, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qft_ckpt_test");
+        let path = dir.join("a.bin");
+        let params: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        save(&path, "test_model", &params).unwrap();
+        let (name, loaded) = load(&path).unwrap();
+        assert_eq!(name, "test_model");
+        assert_eq!(loaded, params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("qft_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

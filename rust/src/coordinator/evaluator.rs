@@ -1,0 +1,224 @@
+//! Test-set evaluation: option scoring ("highest probability choice",
+//! paper App. H) and greedy decoding with the paper's answer-parsing
+//! rules (App. D): token F1 for DROP phrases, last-number match for
+//! arithmetic.
+
+
+use crate::data::example::Example;
+use crate::data::metrics::{clean_generation, parse_last_number, token_f1};
+use crate::data::tasks::Metric;
+use crate::data::vocab::{BOS, EOS, PAD, SEP};
+use crate::runtime::session::Session;
+use crate::util::error::{Error, Result};
+
+/// Log-softmax value of `target` within one `[vocab]` logit row.
+fn logprob_of(logits_row: &[f32], target: usize) -> f64 {
+    let mx = logits_row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits_row.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    logits_row[target] as f64 - lse
+}
+
+/// Score one option row: sum of answer-token log-probs.  `row` is the
+/// packed sequence; positions `a0..a_end` hold the answer tokens.
+fn score_row(logits: &[f32], row: &[i32], a0: usize, a_end: usize, vocab: usize) -> f64 {
+    let mut sum = 0.0;
+    for t in (a0 - 1)..(a_end - 1) {
+        let lrow = &logits[t * vocab..(t + 1) * vocab];
+        sum += logprob_of(lrow, row[t + 1] as usize);
+    }
+    sum
+}
+
+/// Evaluate accuracy of choice tasks by option scoring.
+pub fn eval_choice(session: &Session, theta: &[f32], examples: &[Example]) -> Result<f64> {
+    let io = &session.man.io;
+    let (eb, s, vocab) = (io.eval_batch, io.seq_len, io.vocab);
+    // Flatten (example, option) pairs into rows.
+    struct Row {
+        ex: usize,
+        opt: usize,
+        tokens: Vec<i32>,
+        a0: usize,
+        a_end: usize,
+    }
+    let mut rows = vec![];
+    for (ei, ex) in examples.iter().enumerate() {
+        if !ex.is_choice() {
+            return Err(Error::Data("eval_choice on generation example".into()));
+        }
+        for (oi, opt) in ex.options.iter().enumerate() {
+            let mut r = vec![BOS as i32];
+            r.extend(ex.prompt.iter().map(|&t| t as i32));
+            r.push(SEP as i32);
+            let a0 = r.len();
+            r.extend(opt.iter().map(|&t| t as i32));
+            let a_end = r.len();
+            if r.len() > s {
+                return Err(Error::Data("option row too long".into()));
+            }
+            r.resize(s, PAD as i32);
+            rows.push(Row { ex: ei, opt: oi, tokens: r, a0, a_end });
+        }
+    }
+    // Batched forward + scoring.
+    let mut scores: Vec<Vec<f64>> = examples.iter().map(|e| vec![0.0; e.options.len()]).collect();
+    let mut i = 0;
+    while i < rows.len() {
+        let chunk = &rows[i..(i + eb).min(rows.len())];
+        let mut tokens = Vec::with_capacity(eb * s);
+        for r in chunk {
+            tokens.extend(&r.tokens);
+        }
+        // pad the batch with the last row (scores discarded)
+        for _ in chunk.len()..eb {
+            tokens.extend(&chunk[chunk.len() - 1].tokens);
+        }
+        let logits = session.fwd_logits(theta, &tokens)?;
+        for (k, r) in chunk.iter().enumerate() {
+            let l = &logits[k * s * vocab..(k + 1) * s * vocab];
+            scores[r.ex][r.opt] = score_row(l, &r.tokens, r.a0, r.a_end, vocab);
+        }
+        i += eb;
+    }
+    let mut correct = 0usize;
+    for (ei, ex) in examples.iter().enumerate() {
+        let best = scores[ei]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == ex.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / examples.len() as f64)
+}
+
+/// Greedy-decode continuations for a slice of generation examples.
+/// Returns the generated token streams (EOS-trimmed).
+pub fn greedy_decode(
+    session: &Session,
+    theta: &[f32],
+    examples: &[Example],
+    max_new: usize,
+) -> Result<Vec<Vec<u16>>> {
+    let io = &session.man.io;
+    let (eb, s, vocab) = (io.eval_batch, io.seq_len, io.vocab);
+    let mut outputs: Vec<Vec<u16>> = vec![vec![]; examples.len()];
+    let mut i = 0;
+    while i < examples.len() {
+        let chunk = &examples[i..(i + eb).min(examples.len())];
+        // current sequences: BOS prompt SEP
+        let mut seqs: Vec<Vec<i32>> = chunk
+            .iter()
+            .map(|ex| {
+                let mut r = vec![BOS as i32];
+                r.extend(ex.prompt.iter().map(|&t| t as i32));
+                r.push(SEP as i32);
+                r
+            })
+            .collect();
+        let mut done = vec![false; chunk.len()];
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let mut tokens = Vec::with_capacity(eb * s);
+            for sq in &seqs {
+                let mut row = sq.clone();
+                row.truncate(s);
+                row.resize(s, PAD as i32);
+                tokens.extend(row);
+            }
+            for _ in seqs.len()..eb {
+                tokens.extend(std::iter::repeat(PAD as i32).take(s));
+            }
+            let logits = session.fwd_logits(theta, &tokens)?;
+            for (k, sq) in seqs.iter_mut().enumerate() {
+                if done[k] || sq.len() >= s {
+                    done[k] = true;
+                    continue;
+                }
+                let pos = sq.len() - 1;
+                let lrow = &logits[(k * s + pos) * vocab..(k * s + pos + 1) * vocab];
+                let next = lrow
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                sq.push(next);
+                if next == EOS as i32 {
+                    done[k] = true;
+                } else {
+                    outputs[i + k].push(next as u16);
+                }
+            }
+        }
+        i += eb;
+    }
+    Ok(outputs.into_iter().map(|o| clean_generation(&o)).collect())
+}
+
+/// Evaluate generation examples with the given metric.
+pub fn eval_generation(
+    session: &Session,
+    theta: &[f32],
+    examples: &[Example],
+    metric: Metric,
+    max_new: usize,
+) -> Result<f64> {
+    let outs = greedy_decode(session, theta, examples, max_new)?;
+    let mut total = 0.0;
+    for (ex, out) in examples.iter().zip(&outs) {
+        total += match metric {
+            Metric::F1 => token_f1(out, &ex.answer),
+            Metric::Accuracy => {
+                let pred = parse_last_number(out);
+                let gold = parse_last_number(&ex.answer);
+                if pred.is_some() && pred == gold {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        };
+    }
+    Ok(total / examples.len() as f64)
+}
+
+/// Dispatch on example kind + metric.
+pub fn evaluate(
+    session: &Session,
+    theta: &[f32],
+    examples: &[Example],
+    metric: Metric,
+) -> Result<f64> {
+    if examples.is_empty() {
+        return Ok(f64::NAN);
+    }
+    if examples[0].is_choice() {
+        eval_choice(session, theta, examples)
+    } else {
+        eval_generation(session, theta, examples, metric, 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logprob_is_normalized() {
+        let logits = vec![1.0f32, 2.0, 3.0, 0.5];
+        let total: f64 = (0..4).map(|t| logprob_of(&logits, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn logprob_prefers_larger_logit() {
+        let logits = vec![0.0f32, 5.0, 1.0];
+        assert!(logprob_of(&logits, 1) > logprob_of(&logits, 0));
+    }
+}

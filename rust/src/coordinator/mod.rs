@@ -1,0 +1,16 @@
+//! L3 coordinator: the fine-tuning orchestrator.
+//!
+//! Implements the paper's experimental protocol (App. E): pretrain the
+//! base model in-repo, fine-tune with the selected PEFT method under
+//! AdamW + linear LR schedule (inside the HLO), track the best
+//! checkpoint on a validation split carved from train, evaluate that
+//! checkpoint on held-out test suites, and aggregate over seeds.
+
+pub mod checkpoint;
+pub mod trainer;
+pub mod evaluator;
+pub mod experiment;
+pub mod tables;
+
+pub use experiment::{RunResult, RunSpec, Runner, TrainTask};
+pub use trainer::{FinetuneConfig, TrainOutcome};

@@ -1,0 +1,113 @@
+//! Markdown table rendering for the bench harness — every bench target
+//! prints the same rows the paper's table/figure reports.
+
+/// Simple column-aligned markdown table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:width$} |", cells[i], width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a fraction as the paper's percent style ("0.041%").
+pub fn pct(p: f64) -> String {
+    if p >= 10.0 {
+        format!("{p:.0}%")
+    } else if p >= 1.0 {
+        format!("{p:.2}%")
+    } else {
+        format!("{p:.3}%")
+    }
+}
+
+/// Format a 0..1 metric as the paper's 0..100 scale with 1 decimal.
+pub fn score100(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+/// score ± std on the 0..100 scale.
+pub fn score100_std(mean: f64, std: f64, n: usize) -> String {
+    if n <= 1 {
+        score100(mean)
+    } else {
+        format!("{:.1} ± {:.1}", 100.0 * mean, 100.0 * std)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Method", "Score"]);
+        t.row(vec!["LoRA".into(), "54.0".into()]);
+        t.row(vec!["QuanTA (Ours)".into(), "59.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| Method "));
+        assert!(s.lines().count() == 4);
+        // all lines same length
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.iter().all(|&l| l == lens[0]));
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(100.0), "100%");
+        assert_eq!(pct(0.041), "0.041%");
+        assert_eq!(pct(2.89), "2.89%");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Training loops: pretraining (full LM on the synthetic corpus) and
+//! supervised fine-tuning with best-checkpoint selection on validation
+//! loss (paper App. E: "we choose the best checkpoint obtained during
+//! fine-tuning ... on the validation set").
+
+use crate::data::batcher::{pack_batch, Batch, Sampler};
+use crate::data::corpus;
+use crate::data::example::TaskData;
+use crate::data::tokenizer::Tokenizer;
+use crate::info;
+use crate::runtime::session::Session;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Fine-tuning loop configuration (steps default to the schedule baked
+/// into the artifact's train_step HLO).
+#[derive(Clone, Debug)]
+pub struct FinetuneConfig {
+    pub seed: u64,
+    pub steps: Option<usize>,
+    pub eval_every: usize,
+    pub log_every: usize,
+    /// stop after this many evals without val improvement (None = never)
+    pub patience: Option<usize>,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig { seed: 0, steps: None, eval_every: 50, log_every: 50, patience: None }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub best_theta: Vec<f32>,
+    pub best_val_loss: f64,
+    pub final_theta: Vec<f32>,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub val_curve: Vec<(usize, f64)>,
+    pub steps_run: usize,
+    pub wallclock_s: f64,
+}
+
+/// Compute mean validation loss over (up to) `max_batches` eval batches.
+pub fn val_loss(session: &Session, theta: &[f32], data: &TaskData) -> Result<f64> {
+    let io = &session.man.io;
+    let eb = io.eval_batch;
+    let examples = &data.val;
+    if examples.is_empty() {
+        return Ok(f64::NAN);
+    }
+    let mut loss_sum = 0.0f64;
+    let mut tok_sum = 0.0f64;
+    let mut i = 0;
+    while i < examples.len() {
+        let chunk: Vec<&_> = examples[i..(i + eb).min(examples.len())].iter().collect();
+        let b: Batch = pack_batch(&chunk, eb, io.seq_len)?;
+        // mask out the repeated tail rows so they don't bias the loss
+        let mut mask = b.mask.clone();
+        for r in chunk.len()..eb {
+            for t in 0..io.seq_len {
+                mask[r * io.seq_len + t] = 0.0;
+            }
+        }
+        let (ls, tc) = session.eval_loss(theta, &b.tokens, &mask)?;
+        loss_sum += ls as f64;
+        tok_sum += tc as f64;
+        i += eb;
+    }
+    Ok(loss_sum / tok_sum.max(1.0))
+}
+
+/// Supervised fine-tuning on a task's train split.
+pub fn finetune(
+    session: &mut Session,
+    data: &TaskData,
+    cfg: &FinetuneConfig,
+) -> Result<TrainOutcome> {
+    let start = std::time::Instant::now();
+    let io = session.man.io.clone();
+    let total_steps = cfg.steps.unwrap_or(session.man.hyper.total_steps);
+    let mut state = session.init_state(cfg.seed)?;
+    let mut sampler = Sampler::new(data.train.len(), cfg.seed);
+
+    let mut best_theta = state.theta.clone();
+    let mut best_val = f64::INFINITY;
+    let mut loss_curve = vec![];
+    let mut val_curve = vec![];
+    let mut since_best = 0usize;
+    let mut steps_run = 0usize;
+
+    for step in 0..total_steps {
+        let idx = sampler.next_indices(io.batch);
+        let exs: Vec<&_> = idx.iter().map(|&i| &data.train[i]).collect();
+        let b = pack_batch(&exs, io.batch, io.seq_len)?;
+        let loss = session.train_step(&mut state, &b.tokens, &b.mask)?;
+        steps_run = step + 1;
+        if step % cfg.log_every == 0 || step + 1 == total_steps {
+            loss_curve.push((step, loss as f64));
+        }
+        let is_eval = (step + 1) % cfg.eval_every == 0 || step + 1 == total_steps;
+        if is_eval && !data.val.is_empty() {
+            let vl = val_loss(session, &state.theta, data)?;
+            val_curve.push((step + 1, vl));
+            if vl < best_val {
+                best_val = vl;
+                best_theta.copy_from_slice(&state.theta);
+                since_best = 0;
+            } else {
+                since_best += 1;
+                if let Some(p) = cfg.patience {
+                    if since_best >= p {
+                        info!("early stop at step {} (no val gain for {} evals)", step + 1, p);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    if !best_val.is_finite() {
+        best_theta.copy_from_slice(&state.theta);
+    }
+    Ok(TrainOutcome {
+        best_theta,
+        best_val_loss: best_val,
+        final_theta: state.theta,
+        loss_curve,
+        val_curve,
+        steps_run,
+        wallclock_s: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// Pretraining: causal LM on the synthetic corpus (all parameters
+/// trainable; the artifact's base input is a dummy scalar).
+pub fn pretrain(
+    session: &mut Session,
+    tok: &Tokenizer,
+    seed: u64,
+    steps: Option<usize>,
+) -> Result<TrainOutcome> {
+    let start = std::time::Instant::now();
+    let io = session.man.io.clone();
+    let total = steps.unwrap_or(session.man.hyper.total_steps);
+    let mut state = session.init_state(seed)?;
+    let mut rng = Rng::stream(seed, "pretrain-data");
+    let mut loss_curve = vec![];
+    for step in 0..total {
+        let (tokens, mask) = corpus::pretrain_batch(tok, &mut rng, io.batch, io.seq_len);
+        let loss = session.train_step(&mut state, &tokens, &mask)?;
+        if step % 50 == 0 || step + 1 == total {
+            loss_curve.push((step, loss as f64));
+            info!("pretrain[{}] step {:4}/{} loss {:.4}", session.man.name, step, total, loss);
+        }
+    }
+    Ok(TrainOutcome {
+        best_theta: state.theta.clone(),
+        best_val_loss: f64::NAN,
+        final_theta: state.theta,
+        loss_curve,
+        val_curve: vec![],
+        steps_run: total,
+        wallclock_s: start.elapsed().as_secs_f64(),
+    })
+}

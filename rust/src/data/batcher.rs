@@ -1,0 +1,146 @@
+//! Batch assembly for training and evaluation.
+//!
+//! Row layout (paper-style supervised fine-tuning): `BOS prompt SEP
+//! answer EOS PAD...`, with the loss mask covering exactly the target
+//! positions that predict the answer tokens and the closing EOS — the
+//! model is trained to produce the answer given the prompt, not to model
+//! the prompt.
+
+use crate::data::example::Example;
+use crate::data::vocab::{BOS, EOS, PAD, SEP};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// A training/eval batch in the exact layout the HLO artifacts expect:
+/// `tokens` is `[batch, seq+1]` i32, `mask` is `[batch, seq]` f32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Assemble one row: returns (row[seq+1], mask[seq]).
+pub fn pack_example(ex: &Example, seq: usize) -> Result<(Vec<i32>, Vec<f32>)> {
+    let mut row = Vec::with_capacity(seq + 1);
+    row.push(BOS);
+    row.extend_from_slice(&ex.prompt);
+    row.push(SEP);
+    let answer_start = row.len(); // first answer token position
+    row.extend_from_slice(&ex.answer);
+    row.push(EOS);
+    if row.len() > seq + 1 {
+        return Err(Error::Data(format!(
+            "example too long: {} tokens > seq+1 = {}",
+            row.len(),
+            seq + 1
+        )));
+    }
+    let end = row.len();
+    row.resize(seq + 1, PAD);
+    let mut mask = vec![0.0f32; seq];
+    // target position t predicts token t+1; answer tokens + EOS live at
+    // positions answer_start..end, so mask targets answer_start-1..end-1.
+    for t in (answer_start - 1)..(end - 1) {
+        mask[t] = 1.0;
+    }
+    Ok((row.into_iter().map(|t| t as i32).collect(), mask))
+}
+
+/// Pack a fixed-size batch from examples (repeats examples if fewer than
+/// `batch` are given — used for the tail of an epoch).
+pub fn pack_batch(examples: &[&Example], batch: usize, seq: usize) -> Result<Batch> {
+    if examples.is_empty() {
+        return Err(Error::Data("empty batch".into()));
+    }
+    let mut tokens = Vec::with_capacity(batch * (seq + 1));
+    let mut mask = Vec::with_capacity(batch * seq);
+    for i in 0..batch {
+        let ex = examples[i % examples.len()];
+        let (row, m) = pack_example(ex, seq)?;
+        tokens.extend(row);
+        mask.extend(m);
+    }
+    Ok(Batch { tokens, mask, batch, seq })
+}
+
+/// Infinite shuffled-epoch sampler over a training split.
+pub struct Sampler {
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::stream(seed, "sampler");
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Sampler { order, pos: 0, rng }
+    }
+
+    /// Next `k` example indices, reshuffling at epoch boundaries.
+    pub fn next_indices(&mut self, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            if self.pos >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+            }
+            out.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(prompt: Vec<u16>, answer: Vec<u16>) -> Example {
+        Example::generation(prompt, answer)
+    }
+
+    #[test]
+    fn mask_covers_exactly_answer_targets() {
+        let e = ex(vec![10, 11, 12], vec![20, 21]);
+        let (row, mask) = pack_example(&e, 12).unwrap();
+        // row: BOS 10 11 12 SEP 20 21 EOS PAD...
+        assert_eq!(&row[..8], &[BOS as i32, 10, 11, 12, SEP as i32, 20, 21, EOS as i32]);
+        // answer tokens at positions 5,6; EOS at 7 => mask targets 4,5,6
+        let expect: Vec<f32> = (0..12).map(|t| if (4..=6).contains(&t) { 1.0 } else { 0.0 }).collect();
+        assert_eq!(mask, expect);
+    }
+
+    #[test]
+    fn mask_sum_equals_answer_len_plus_one() {
+        let e = ex(vec![9; 7], vec![8; 3]);
+        let (_, mask) = pack_example(&e, 20).unwrap();
+        assert_eq!(mask.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn too_long_rejected() {
+        let e = ex(vec![9; 30], vec![8; 30]);
+        assert!(pack_example(&e, 32).is_err());
+    }
+
+    #[test]
+    fn batch_repeats_when_short() {
+        let e1 = ex(vec![1], vec![2]);
+        let b = pack_batch(&[&e1], 4, 8).unwrap();
+        assert_eq!(b.tokens.len(), 4 * 9);
+        assert_eq!(&b.tokens[..9], &b.tokens[9..18]);
+    }
+
+    #[test]
+    fn sampler_covers_epoch() {
+        let mut s = Sampler::new(10, 1);
+        let first: Vec<usize> = s.next_indices(10);
+        let mut sorted = first.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+}

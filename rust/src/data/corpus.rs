@@ -1,0 +1,236 @@
+//! Synthetic pretraining corpus.
+//!
+//! The base models are pretrained in-repo on this corpus (by the same
+//! rust driver, method = full training).  The mixture is designed the
+//! way real LLM pretraining data is: it covers downstream *surface
+//! forms* — including QA-format documents that use the literal `SEP`
+//! answer marker, so answer-token embeddings (yes/no, digits, option
+//! words) are trained — while the downstream *task mappings*
+//! (entailment judgment, cross-entity aggregation, polarity, two-hop
+//! composition, ...) never appear and must be learned at fine-tune
+//! time.  This is what makes the paper's low-vs-high intrinsic-rank
+//! dichotomy reproducible: tasks close to pretraining behaviour (RTE
+//! analog) need low-rank touch-ups, tasks that re-bind the
+//! representation space (DROP analog) need high-rank updates.
+
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vocab::{self, EOS, SEP};
+use crate::util::rng::Rng;
+
+/// Generate one corpus "document" (a few sentences / one QA) as tokens.
+pub fn gen_document(tok: &Tokenizer, rng: &mut Rng) -> Vec<u16> {
+    // QA-format documents get double weight (they are what downstream
+    // fine-tuning retargets).
+    let t = match rng.below(16) {
+        v @ 0..=6 => v,
+        v @ 7..=10 => v,
+        11 => 7 + rng.below(4),
+        12 => 9, // extra equality QA (the hardest circuit to learn)
+        13 => 9,
+        _ => 11,
+    };
+    match t {
+        // ---- plain statements (world knowledge surface forms) -----------
+        0 => {
+            // possession: "<name> has <n> <noun> ."
+            tok.encode(&format!(
+                "{} has {} {} .",
+                rng.choose(vocab::NAMES),
+                rng.range(1, 99),
+                rng.choose(vocab::NOUNS)
+            ))
+        }
+        1 => tok.encode(&format!(
+            "the {} is {} .",
+            rng.choose(vocab::NOUNS),
+            rng.choose(vocab::ADJS)
+        )),
+        2 => {
+            let a = rng.range(0, 99);
+            let b = rng.range(0, 99);
+            if rng.below(2) == 0 {
+                tok.encode(&format!("{} plus {} equals {} .", a, b, a + b))
+            } else {
+                let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+                tok.encode(&format!("{} minus {} equals {} .", hi, lo, hi - lo))
+            }
+        }
+        3 => tok.encode(&format!(
+            "{} {} the {} {} .",
+            rng.choose(vocab::NAMES),
+            rng.choose(vocab::VERBS),
+            rng.choose(vocab::ADJS),
+            rng.choose(vocab::NOUNS)
+        )),
+        4 => {
+            let i = rng.below(vocab::TOOLS.len());
+            tok.encode(&format!("use the {} to {} .", vocab::TOOLS[i], vocab::TOOL_TASKS[i]))
+        }
+        5 => tok.encode(&format!(
+            "the {} is made of {} .",
+            rng.choose(vocab::NOUNS),
+            rng.choose(vocab::MATERIALS)
+        )),
+        6 => tok.encode(&format!(
+            "{} {} {} .",
+            rng.choose(vocab::NAMES),
+            rng.choose(&vocab::VERBS[16..24]),
+            rng.choose(vocab::NAMES)
+        )),
+
+        // ---- QA-format documents (teach the answer format + answer-token
+        //      embeddings, with mappings DIFFERENT from every downstream
+        //      task) ------------------------------------------------------
+        7 => {
+            // attribute recall QA (open answer — the attribute is read
+            // back verbatim; downstream yes/no judgment is never shown)
+            let noun = *rng.choose(vocab::NOUNS);
+            let adj = *rng.choose(vocab::ADJS);
+            let mut doc = tok.encode(&format!(
+                "the {noun} is {adj} . question what sort is the {noun} ?"
+            ));
+            doc.push(SEP);
+            doc.extend(tok.encode(&format!("{adj} .")));
+            doc
+        }
+        8 => {
+            // count read-back QA (single entity; no aggregation)
+            let name = *rng.choose(vocab::NAMES);
+            let noun = *rng.choose(vocab::NOUNS);
+            let k = rng.range(1, 40);
+            let mut doc = tok.encode(&format!(
+                "{name} has {k} {noun} . question how many {noun} ?"
+            ));
+            doc.push(SEP);
+            doc.extend(tok.encode(&format!("{k} .")));
+            doc
+        }
+        9 => {
+            // token-identity verification QA (trains yes/no embeddings
+            // and a *general* equality circuit over mixed word pools;
+            // the downstream judgments — entailment, polarity,
+            // acceptability — are never shown)
+            let pool: &[&str] = match rng.below(4) {
+                0 => vocab::NOUNS,
+                1 => vocab::ADJS,
+                2 => vocab::NAMES,
+                _ => vocab::TOOLS,
+            };
+            let a = *rng.choose(pool);
+            let same = rng.below(2) == 0;
+            let b = if same {
+                a
+            } else {
+                let mut other = *rng.choose(pool);
+                while other == a {
+                    other = *rng.choose(pool);
+                }
+                other
+            };
+            let mut doc = tok.encode(&format!("question is {a} the same as {b} ?"));
+            doc.push(SEP);
+            doc.extend(tok.encode(if same { "yes ." } else { "no ." }));
+            doc
+        }
+        10 => {
+            // arithmetic QA (echoes doc-type 2 in QA format; small sums
+            // so digit addition is learnable at this scale)
+            let a = rng.range(0, 20);
+            let b = rng.range(0, 20);
+            let mut doc = tok.encode(&format!("question {a} plus {b} ?"));
+            doc.push(SEP);
+            doc.extend(tok.encode(&format!("{} .", a + b)));
+            doc
+        }
+        _ => {
+            // counting sequence
+            let a = rng.range(0, 6);
+            tok.encode(&format!("{} {} {} {} .", a, a + 1, a + 2, a + 3))
+        }
+    }
+}
+
+/// Build a pretraining batch: `[batch, seq+1]` token rows (BOS + packed
+/// documents separated by EOS) and `[batch, seq]` loss mask over
+/// non-pad targets.
+pub fn pretrain_batch(
+    tok: &Tokenizer,
+    rng: &mut Rng,
+    batch: usize,
+    seq: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut tokens = vec![vocab::PAD as i32; batch * (seq + 1)];
+    let mut mask = vec![0.0f32; batch * seq];
+    for b in 0..batch {
+        let mut row = vec![vocab::BOS];
+        while row.len() < seq + 1 {
+            row.extend(gen_document(tok, rng));
+            row.push(EOS);
+        }
+        row.truncate(seq + 1);
+        for (i, &t) in row.iter().enumerate() {
+            tokens[b * (seq + 1) + i] = t as i32;
+        }
+        for i in 0..seq {
+            mask[b * seq + i] = 1.0; // every target position is real text
+        }
+    }
+    (tokens, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::UNK;
+
+    #[test]
+    fn documents_are_in_vocab() {
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let doc = gen_document(&tok, &mut rng);
+            assert!(!doc.is_empty());
+            assert!(!doc.contains(&UNK), "OOV in: {}", tok.decode(&doc));
+        }
+    }
+
+    #[test]
+    fn qa_documents_contain_sep_and_answers() {
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(7);
+        let mut saw_sep = 0;
+        let mut saw_yes = 0;
+        for _ in 0..500 {
+            let doc = gen_document(&tok, &mut rng);
+            if doc.contains(&SEP) {
+                saw_sep += 1;
+                // SEP must be followed by at least one answer token
+                let pos = doc.iter().position(|&t| t == SEP).unwrap();
+                assert!(pos + 1 < doc.len(), "SEP at end: {}", tok.decode(&doc));
+            }
+            if doc.contains(&tok.id("yes")) || doc.contains(&tok.id("no")) {
+                saw_yes += 1;
+            }
+        }
+        assert!(saw_sep > 100, "QA docs too rare: {saw_sep}");
+        assert!(saw_yes > 20, "yes/no answers too rare: {saw_yes}");
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(1);
+        let (tokens, mask) = pretrain_batch(&tok, &mut rng, 4, 32);
+        assert_eq!(tokens.len(), 4 * 33);
+        assert_eq!(mask.len(), 4 * 32);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let tok = Tokenizer::new();
+        let a = gen_document(&tok, &mut Rng::new(7));
+        let b = gen_document(&tok, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,68 @@
+//! Core dataset types shared by every task generator.
+
+/// One supervised example.
+///
+/// * Generation tasks: `options` is empty; the target is `answer`.
+/// * Option tasks (yes/no or multiple choice): `options` holds the
+///   candidate answer token sequences and `correct` the gold index; the
+///   evaluator scores each option by sequence log-probability (the
+///   paper's "highest probability choice" protocol, App. H).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub prompt: Vec<u16>,
+    pub answer: Vec<u16>,
+    pub options: Vec<Vec<u16>>,
+    pub correct: usize,
+}
+
+impl Example {
+    pub fn generation(prompt: Vec<u16>, answer: Vec<u16>) -> Self {
+        Example { prompt, answer, options: vec![], correct: 0 }
+    }
+
+    pub fn choice(prompt: Vec<u16>, options: Vec<Vec<u16>>, correct: usize) -> Self {
+        let answer = options[correct].clone();
+        Example { prompt, answer, options, correct }
+    }
+
+    pub fn is_choice(&self) -> bool {
+        !self.options.is_empty()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// A generated dataset with disjoint splits.
+#[derive(Clone, Debug, Default)]
+pub struct TaskData {
+    pub train: Vec<Example>,
+    pub val: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+impl TaskData {
+    pub fn split(&self, s: Split) -> &[Example] {
+        match s {
+            Split::Train => &self.train,
+            Split::Val => &self.val,
+            Split::Test => &self.test,
+        }
+    }
+
+    /// Concatenate several datasets (mixed fine-tuning sets like the
+    /// COMMONSENSE170K analog).
+    pub fn concat(parts: Vec<TaskData>) -> TaskData {
+        let mut out = TaskData::default();
+        for p in parts {
+            out.train.extend(p.train);
+            out.val.extend(p.val);
+            out.test.extend(p.test);
+        }
+        out
+    }
+}

@@ -1,0 +1,132 @@
+//! Evaluation metrics, mirroring the paper's App. D protocol:
+//!
+//! * **token F1** for DROP-style phrase answers,
+//! * **exact numeric match on the last parsed number** for free-form
+//!   arithmetic answers,
+//! * **accuracy** for option tasks (the option index with the highest
+//!   sequence log-probability).
+
+use crate::data::vocab::{DIGIT0, EOS, PAD, SEP};
+
+/// Token-level F1 between predicted and gold token sequences (bag
+/// overlap, DROP protocol).
+pub fn token_f1(pred: &[u16], gold: &[u16]) -> f64 {
+    if pred.is_empty() || gold.is_empty() {
+        return if pred.is_empty() && gold.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut gold_counts = std::collections::HashMap::new();
+    for &t in gold {
+        *gold_counts.entry(t).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for &t in pred {
+        if let Some(c) = gold_counts.get_mut(&t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / pred.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Parse the *last* number from a generated token stream (the paper's
+/// arithmetic answer rule): the final maximal run of digit tokens.
+pub fn parse_last_number(tokens: &[u16]) -> Option<i64> {
+    let is_digit = |t: u16| (DIGIT0..DIGIT0 + 10).contains(&t);
+    let mut best: Option<i64> = None;
+    let mut cur: Option<i64> = None;
+    for &t in tokens {
+        if is_digit(t) {
+            let d = (t - DIGIT0) as i64;
+            cur = Some(cur.unwrap_or(0) * 10 + d);
+        } else {
+            if let Some(v) = cur.take() {
+                best = Some(v);
+            }
+        }
+    }
+    if let Some(v) = cur {
+        best = Some(v);
+    }
+    best
+}
+
+/// Strip generation control tokens (everything from EOS on, plus
+/// PAD/SEP) from a decoded continuation.
+pub fn clean_generation(tokens: &[u16]) -> Vec<u16> {
+    let mut out = vec![];
+    for &t in tokens {
+        if t == EOS {
+            break;
+        }
+        if t == PAD || t == SEP {
+            continue;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_exact_match() {
+        assert_eq!(token_f1(&[1, 2, 3], &[1, 2, 3]), 1.0);
+    }
+
+    #[test]
+    fn f1_no_overlap() {
+        assert_eq!(token_f1(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn f1_partial() {
+        // pred {1,2}, gold {2,3}: overlap 1, p=r=0.5 -> f1=0.5
+        assert!((token_f1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_respects_counts() {
+        // pred has 2 ; gold has only one "2": overlap capped at 1
+        let f1 = token_f1(&[2, 2], &[2]);
+        let expect = 2.0 * 0.5 * 1.0 / 1.5;
+        assert!((f1 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_order_invariant() {
+        assert_eq!(token_f1(&[3, 1, 2], &[1, 2, 3]), 1.0);
+    }
+
+    #[test]
+    fn parse_last_number_basic() {
+        // tokens: "4" "2" noun "7" => last number is 7
+        let toks = [DIGIT0 + 4, DIGIT0 + 2, 100, DIGIT0 + 7];
+        assert_eq!(parse_last_number(&toks), Some(7));
+    }
+
+    #[test]
+    fn parse_multidigit() {
+        let toks = [100, DIGIT0 + 4, DIGIT0 + 2];
+        assert_eq!(parse_last_number(&toks), Some(42));
+    }
+
+    #[test]
+    fn parse_no_number() {
+        assert_eq!(parse_last_number(&[100, 101]), None);
+    }
+
+    #[test]
+    fn clean_stops_at_eos() {
+        let toks = [10, 11, EOS, 12];
+        assert_eq!(clean_generation(&toks), vec![10, 11]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Data pipeline: vocabulary, tokenizer, synthetic pretraining corpus,
+//! the 19 downstream task generators (paper App. D analogs), batching,
+//! and metrics.
+//!
+//! Every dataset is a deterministic function of a seed; train/val/test
+//! splits are disjoint by construction (distinct seed streams), matching
+//! the paper's protocol of carving a validation set out of train and
+//! never touching test for tuning (App. E).
+
+pub mod vocab;
+pub mod tokenizer;
+pub mod corpus;
+pub mod example;
+pub mod batcher;
+pub mod metrics;
+pub mod tasks;
+
+pub use example::{Example, Split, TaskData};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,212 @@
+//! Arithmetic-reasoning suites (Table 4 columns): synthetic analogs of
+//! AQuA (multiple choice), GSM8K (two-step), MAWPS (one-step), and SVAMP
+//! (one-step with distractors).  Generation tasks parse the *last
+//! number* of the model output, exactly the paper's protocol (App. D);
+//! AQuA is excluded from the average like the paper does.
+
+use crate::data::example::TaskData;
+use crate::data::tasks::{gen_splits, Sizes};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vocab;
+use crate::data::Example;
+use crate::util::rng::Rng;
+
+/// MAWPS analog: one-step add/subtract word problem.
+pub fn mawps(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let name = *rng.choose(vocab::NAMES);
+        let noun = *rng.choose(&vocab::NOUNS[..24]);
+        let a = rng.range(3, 30);
+        let add = rng.below(2) == 0;
+        let (verb, b, ans) = if add {
+            let b = rng.range(2, 20);
+            ("buys", b, a + b)
+        } else {
+            let b = rng.range(1, a - 1);
+            ("gives", b, a - b)
+        };
+        let prompt = tok.encode(&format!(
+            "{name} has {a} {noun} . {name} {verb} {b} {noun} . question how many {noun} does {name} have ?"
+        ));
+        Example::generation(prompt, tok.encode_number(ans as u64))
+    })
+}
+
+/// SVAMP analog: one-step problem with an irrelevant distractor entity.
+pub fn svamp(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let name = *rng.choose(vocab::NAMES);
+        let mut other = *rng.choose(vocab::NAMES);
+        while other == name {
+            other = *rng.choose(vocab::NAMES);
+        }
+        let noun = *rng.choose(&vocab::NOUNS[..24]);
+        let mut noun2 = *rng.choose(&vocab::NOUNS[..24]);
+        while noun2 == noun {
+            noun2 = *rng.choose(&vocab::NOUNS[..24]);
+        }
+        let a = rng.range(3, 30);
+        let c = rng.range(1, 30); // distractor count
+        let add = rng.below(2) == 0;
+        let (verb, b, ans) = if add {
+            let b = rng.range(2, 20);
+            ("buys", b, a + b)
+        } else {
+            let b = rng.range(1, a - 1);
+            ("gives", b, a - b)
+        };
+        let prompt = tok.encode(&format!(
+            "{name} has {a} {noun} . {other} has {c} {noun2} . {name} {verb} {b} {noun} . question how many {noun} does {name} have ?"
+        ));
+        Example::generation(prompt, tok.encode_number(ans as u64))
+    })
+}
+
+/// GSM8K analog: two-step reasoning (add/subtract then add/double).
+pub fn gsm(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let name = *rng.choose(vocab::NAMES);
+        let noun = *rng.choose(&vocab::NOUNS[..24]);
+        let a = rng.range(2, 15);
+        let b = rng.range(2, 15);
+        let mid = a + b;
+        let (second, ans) = match rng.below(3) {
+            0 => ("then it doubles .".to_string(), mid * 2),
+            1 => {
+                let c = rng.range(1, mid - 1);
+                (format!("then {name} gives {c} {noun} ."), mid - c)
+            }
+            _ => {
+                let c = rng.range(2, 10);
+                (format!("then {name} finds {c} more {noun} ."), mid + c)
+            }
+        };
+        let prompt = tok.encode(&format!(
+            "{name} has {a} {noun} . {name} buys {b} more {noun} . {second} question how many {noun} does {name} have ?"
+        ));
+        Example::generation(prompt, tok.encode_number(ans as u64))
+    })
+}
+
+/// AQuA analog: multiple-choice arithmetic with 5 numeric options.  Like
+/// the paper's AQuA, this is hard at our scale (all models ~chance) and
+/// is excluded from the Table-4 average.
+pub fn aqua(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let a = rng.range(3, 40);
+        let b = rng.range(3, 40);
+        let mul = rng.below(2) == 0;
+        let ans = if mul { a * 2 + b } else { a + b * 2 };
+        let prompt = tok.encode(&format!(
+            "question {} times 2 plus {} equals ? choose the best option",
+            if mul { a } else { b },
+            if mul { b } else { a },
+        ));
+        let correct = rng.below(5);
+        let mut opts = vec![];
+        let mut used = vec![ans];
+        for slot in 0..5 {
+            if slot == correct {
+                opts.push(tok.encode_number(ans as u64));
+            } else {
+                let mut w = ans + rng.range(-9, 9);
+                while used.contains(&w) || w < 0 {
+                    w = ans + rng.range(-15, 15);
+                }
+                used.push(w);
+                opts.push(tok.encode_number(w as u64));
+            }
+        }
+        Example::choice(prompt, opts, correct)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_nums(text: &str) -> Vec<i64> {
+        let mut nums = vec![];
+        let mut cur = String::new();
+        for w in text.split_whitespace() {
+            if w.len() == 1 && w.chars().all(|c| c.is_ascii_digit()) {
+                cur.push_str(w);
+            } else {
+                if !cur.is_empty() {
+                    nums.push(cur.parse().unwrap());
+                    cur.clear();
+                }
+            }
+        }
+        if !cur.is_empty() {
+            nums.push(cur.parse().unwrap());
+        }
+        nums
+    }
+
+    #[test]
+    fn mawps_answers_correct() {
+        let tok = Tokenizer::new();
+        let d = mawps(&tok, 41, Sizes { train: 80, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let nums = parse_nums(&text);
+            assert_eq!(nums.len(), 2, "{text}");
+            let ans: i64 = tok.decode(&ex.answer).replace(' ', "").parse().unwrap();
+            if text.contains("buys") {
+                assert_eq!(ans, nums[0] + nums[1], "{text}");
+            } else {
+                assert_eq!(ans, nums[0] - nums[1], "{text}");
+            }
+            assert!(ans >= 0);
+        }
+    }
+
+    #[test]
+    fn gsm_two_step_correct() {
+        let tok = Tokenizer::new();
+        let d = gsm(&tok, 42, Sizes { train: 80, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let nums = parse_nums(&text);
+            let ans: i64 = tok.decode(&ex.answer).replace(' ', "").parse().unwrap();
+            let mid = nums[0] + nums[1];
+            if text.contains("doubles") {
+                assert_eq!(ans, mid * 2, "{text}");
+            } else if text.contains("gives") {
+                assert_eq!(ans, mid - nums[2], "{text}");
+            } else {
+                assert_eq!(ans, mid + nums[2], "{text}");
+            }
+        }
+    }
+
+    #[test]
+    fn aqua_has_five_distinct_options() {
+        let tok = Tokenizer::new();
+        let d = aqua(&tok, 43, Sizes { train: 40, val: 0, test: 0 });
+        for ex in &d.train {
+            assert_eq!(ex.options.len(), 5);
+            let set: std::collections::HashSet<_> = ex.options.iter().collect();
+            assert_eq!(set.len(), 5);
+        }
+    }
+
+    #[test]
+    fn svamp_distractor_does_not_change_answer() {
+        let tok = Tokenizer::new();
+        let d = svamp(&tok, 44, Sizes { train: 60, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let nums = parse_nums(&text);
+            // nums: [a, c(distractor), b]
+            assert_eq!(nums.len(), 3, "{text}");
+            let ans: i64 = tok.decode(&ex.answer).replace(' ', "").parse().unwrap();
+            if text.contains("buys") {
+                assert_eq!(ans, nums[0] + nums[2], "{text}");
+            } else {
+                assert_eq!(ans, nums[0] - nums[2], "{text}");
+            }
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! The eight commonsense-reasoning suites (Table 3 columns): synthetic
+//! analogs of BoolQ, PIQA, SIQA, HellaSwag, WinoGrande, ARC-easy,
+//! ARC-challenge, and OpenBookQA.  All are option tasks evaluated by the
+//! paper's "highest probability choice" protocol (App. H).
+
+use crate::data::example::TaskData;
+use crate::data::tasks::{gen_splits, Sizes};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vocab;
+use crate::data::Example;
+use crate::util::rng::Rng;
+
+/// BoolQ analog: yes/no verification of a stated attribute.
+pub fn boolq(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    let yes = vec![tok.id("yes")];
+    let no = vec![tok.id("no")];
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let adj = *rng.choose(vocab::ADJS);
+        let truthful = rng.below(2) == 0;
+        let q_adj = if truthful {
+            adj
+        } else {
+            let mut other = *rng.choose(vocab::ADJS);
+            while other == adj {
+                other = *rng.choose(vocab::ADJS);
+            }
+            other
+        };
+        let prompt =
+            tok.encode(&format!("the {noun} is {adj} . question is the {noun} {q_adj} ?"));
+        Example::choice(prompt, vec![yes.clone(), no.clone()], if truthful { 0 } else { 1 })
+    })
+}
+
+/// PIQA analog: physical tool selection.  The tool->task mapping is seen
+/// in pretraining ("use the scissors to cut ."), so the suite tests
+/// physical-knowledge *recall* under a new question form.
+pub fn piqa(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let i = rng.below(vocab::TOOLS.len());
+        let mut j = rng.below(vocab::TOOLS.len());
+        while j == i {
+            j = rng.below(vocab::TOOLS.len());
+        }
+        let task = vocab::TOOL_TASKS[i];
+        let prompt = tok.encode(&format!("question to {task} which thing is best ?"));
+        let opts = vec![
+            vec![tok.id(vocab::TOOLS[i])],
+            vec![tok.id(vocab::TOOLS[j])],
+        ];
+        let correct_first = rng.below(2) == 0;
+        if correct_first {
+            Example::choice(prompt, opts, 0)
+        } else {
+            Example::choice(prompt, vec![opts[1].clone(), opts[0].clone()], 1)
+        }
+    })
+}
+
+/// SIQA analog: social reaction inference.  Verbs index 16..24 of VERBS
+/// are social; the first four are positive, the last four negative.
+pub fn siqa(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let a = *rng.choose(vocab::NAMES);
+        let mut b = *rng.choose(vocab::NAMES);
+        while b == a {
+            b = *rng.choose(vocab::NAMES);
+        }
+        let positive = rng.below(2) == 0;
+        let verb = if positive {
+            vocab::VERBS[16 + rng.below(4)]
+        } else {
+            vocab::VERBS[20 + rng.below(4)]
+        };
+        // EMOTIONS alternate positive/negative: [grateful, upset, proud,
+        // ashamed, glad, annoyed]
+        let pos_emotions = [vocab::EMOTIONS[0], vocab::EMOTIONS[2], vocab::EMOTIONS[4]];
+        let neg_emotions = [vocab::EMOTIONS[1], vocab::EMOTIONS[3], vocab::EMOTIONS[5]];
+        let (gold, distract) = if positive {
+            (*rng.choose(&pos_emotions), *rng.choose(&neg_emotions))
+        } else {
+            (*rng.choose(&neg_emotions), *rng.choose(&pos_emotions))
+        };
+        let prompt = tok.encode(&format!("{a} {verb} {b} . question how does {b} feel ?"));
+        let correct_first = rng.below(2) == 0;
+        let (opts, correct) = if correct_first {
+            (vec![vec![tok.id(gold)], vec![tok.id(distract)]], 0)
+        } else {
+            (vec![vec![tok.id(distract)], vec![tok.id(gold)]], 1)
+        };
+        Example::choice(prompt, opts, correct)
+    })
+}
+
+/// HellaSwag analog: story-continuation with 4 endings; only one is
+/// numerically consistent with the story.
+pub fn hellaswag(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let name = *rng.choose(vocab::NAMES);
+        let noun = *rng.choose(vocab::NOUNS);
+        let a = rng.range(2, 9);
+        let b = rng.range(2, 9);
+        let total = a + b;
+        let prompt = tok.encode(&format!(
+            "story {name} has {a} {noun} . {name} buys {b} more {noun} . question the story ends with ?"
+        ));
+        let ending = |n: i64| tok.encode(&format!("{name} has {n} {noun}"));
+        // distractors: off-by-one, the difference, and a random other
+        let mut wrongs = vec![total + 1, (a - b).abs().max(1), total + rng.range(2, 5)];
+        wrongs.dedup();
+        while wrongs.len() < 3 {
+            wrongs.push(total + rng.range(5, 9));
+        }
+        let correct = rng.below(4);
+        let mut opts = vec![];
+        let mut wi = 0;
+        for slot in 0..4 {
+            if slot == correct {
+                opts.push(ending(total));
+            } else {
+                opts.push(ending(wrongs[wi]));
+                wi += 1;
+            }
+        }
+        Example::choice(prompt, opts, correct)
+    })
+}
+
+/// WinoGrande analog: pronoun resolution keyed on the adjective ("too
+/// big" -> the contained object; "too small" -> the container).
+pub fn winogrande(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let n1 = *rng.choose(&vocab::NOUNS[..24]);
+        let mut n2 = *rng.choose(&vocab::NOUNS[..24]);
+        while n2 == n1 {
+            n2 = *rng.choose(&vocab::NOUNS[..24]);
+        }
+        let big = rng.below(2) == 0;
+        let adj = if big { "big" } else { "small" };
+        let prompt = tok.encode(&format!(
+            "the {n1} does not fit into the {n2} because it is too {adj} . question what is too {adj} ?"
+        ));
+        let opts = vec![vec![tok.id(n1)], vec![tok.id(n2)]];
+        // big => the thing that doesn't fit (n1); small => container (n2)
+        Example::choice(prompt, opts, if big { 0 } else { 1 })
+    })
+}
+
+/// ARC-easy analog: single-hop material recall with 4 options.
+pub fn arc_easy(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let mat_i = rng.below(vocab::MATERIALS.len());
+        let prompt = tok.encode(&format!(
+            "the {noun} is made of {} . question what is the {noun} made of ?",
+            vocab::MATERIALS[mat_i]
+        ));
+        let correct = rng.below(4);
+        let mut opts = vec![];
+        let mut used = vec![mat_i];
+        for slot in 0..4 {
+            if slot == correct {
+                opts.push(vec![tok.id(vocab::MATERIALS[mat_i])]);
+            } else {
+                let mut k = rng.below(vocab::MATERIALS.len());
+                while used.contains(&k) {
+                    k = rng.below(vocab::MATERIALS.len());
+                }
+                used.push(k);
+                opts.push(vec![tok.id(vocab::MATERIALS[k])]);
+            }
+        }
+        Example::choice(prompt, opts, correct)
+    })
+}
+
+/// ARC-challenge analog: two-hop inference (object -> material ->
+/// property); requires composing two facts from the prompt.
+pub fn arc_challenge(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let mat_i = rng.below(vocab::MATERIALS.len());
+        let prop_i = rng.below(vocab::PROPS.len());
+        let prompt = tok.encode(&format!(
+            "the {noun} is made of {} . {} is {} . question the {noun} is therefore ?",
+            vocab::MATERIALS[mat_i], vocab::MATERIALS[mat_i], vocab::PROPS[prop_i]
+        ));
+        let correct = rng.below(4);
+        let mut opts = vec![];
+        let mut used = vec![prop_i];
+        for slot in 0..4 {
+            if slot == correct {
+                opts.push(vec![tok.id(vocab::PROPS[prop_i])]);
+            } else {
+                let mut k = rng.below(vocab::PROPS.len());
+                while used.contains(&k) {
+                    k = rng.below(vocab::PROPS.len());
+                }
+                used.push(k);
+                opts.push(vec![tok.id(vocab::PROPS[k])]);
+            }
+        }
+        Example::choice(prompt, opts, correct)
+    })
+}
+
+/// OpenBookQA analog: a "book" fact plus a paraphrased which-question.
+pub fn obqa(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let adj = *rng.choose(vocab::ADJS);
+        let gold = *rng.choose(vocab::NOUNS);
+        let prompt = tok.encode(&format!(
+            "the {gold} is {adj} . question which thing is {adj} ?"
+        ));
+        let correct = rng.below(4);
+        let mut opts = vec![];
+        let mut used = vec![gold];
+        for slot in 0..4 {
+            if slot == correct {
+                opts.push(vec![tok.id(gold)]);
+            } else {
+                let mut other = *rng.choose(vocab::NOUNS);
+                while used.contains(&other) {
+                    other = *rng.choose(vocab::NOUNS);
+                }
+                used.push(other);
+                opts.push(vec![tok.id(other)]);
+            }
+        }
+        Example::choice(prompt, opts, correct)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn piqa_gold_matches_pretraining_mapping() {
+        let tok = Tokenizer::new();
+        let d = piqa(&tok, 31, Sizes { train: 60, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let task = text.split_whitespace().nth(2).unwrap();
+            let ti = vocab::TOOL_TASKS.iter().position(|t| *t == task).unwrap();
+            let gold = tok.decode(&ex.options[ex.correct]);
+            assert_eq!(gold, vocab::TOOLS[ti], "{text}");
+        }
+    }
+
+    #[test]
+    fn hellaswag_gold_is_consistent_sum() {
+        let tok = Tokenizer::new();
+        let d = hellaswag(&tok, 32, Sizes { train: 40, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt).replace(' ', "");
+            let gold = tok.decode(&ex.options[ex.correct]).replace(' ', "");
+            // extract a and b from "has{a}{noun}.{name}buys{b}more"
+            // simpler: gold total must appear nowhere else in options
+            let others: Vec<String> = ex
+                .options
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != ex.correct)
+                .map(|(_, o)| tok.decode(o).replace(' ', ""))
+                .collect();
+            assert!(!others.contains(&gold), "{text}: duplicate option");
+        }
+    }
+
+    #[test]
+    fn winogrande_key_rule() {
+        let tok = Tokenizer::new();
+        let d = winogrande(&tok, 33, Sizes { train: 40, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            if text.contains("too big") {
+                assert_eq!(ex.correct, 0, "{text}");
+            } else {
+                assert_eq!(ex.correct, 1, "{text}");
+            }
+        }
+    }
+
+    #[test]
+    fn four_option_tasks_have_four_distinct_options() {
+        let tok = Tokenizer::new();
+        for gen in [hellaswag, arc_easy, arc_challenge, obqa] {
+            let d = gen(&tok, 34, Sizes { train: 30, val: 0, test: 0 });
+            for ex in &d.train {
+                assert_eq!(ex.options.len(), 4);
+                let set: std::collections::HashSet<_> =
+                    ex.options.iter().map(|o| o.clone()).collect();
+                assert_eq!(set.len(), 4, "duplicate options");
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! GLUE-analog suites (Table F.7 columns): SST-2, MRPC, CoLA, STS-B
+//! (RTE reuses `tasks::rte`).  All are scored as option tasks; STS-B's
+//! 0–5 similarity becomes a 6-way digit choice (accuracy reported, as in
+//! the paper's table).
+
+use crate::data::example::TaskData;
+use crate::data::tasks::{gen_splits, Sizes};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vocab;
+use crate::data::Example;
+use crate::util::rng::Rng;
+
+/// Fixed adjective polarity: ADJS indices with positive affect.
+pub const POS_ADJS: &[&str] = &["happy", "kind", "brave", "bright", "clean", "warm", "new", "calm"];
+pub const NEG_ADJS: &[&str] = &["sad", "angry", "rude", "dark", "dirty", "cold", "old", "shy"];
+
+/// SST-2 analog: sentiment of an attribute sentence.
+pub fn sst2(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    let yes = vec![tok.id("yes")]; // "positive?" yes/no framing
+    let no = vec![tok.id("no")];
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let positive = rng.below(2) == 0;
+        let (a1, a2) = if positive {
+            (*rng.choose(POS_ADJS), *rng.choose(POS_ADJS))
+        } else {
+            (*rng.choose(NEG_ADJS), *rng.choose(NEG_ADJS))
+        };
+        let prompt = tok.encode(&format!(
+            "the {noun} is {a1} and {a2} . question is the statement happy ?"
+        ));
+        Example::choice(prompt, vec![yes.clone(), no.clone()], if positive { 0 } else { 1 })
+    })
+}
+
+/// MRPC analog: paraphrase detection — same content words, different
+/// template vs different content.
+pub fn mrpc(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    let yes = vec![tok.id("yes")];
+    let no = vec![tok.id("no")];
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let adj = *rng.choose(vocab::ADJS);
+        let same = rng.below(2) == 0;
+        let s1 = format!("the {noun} is {adj} .");
+        let s2 = if same {
+            // paraphrase: re-order with "a ... thing" template
+            format!("a {adj} {noun} .")
+        } else if rng.below(2) == 0 {
+            let mut other = *rng.choose(vocab::ADJS);
+            while other == adj {
+                other = *rng.choose(vocab::ADJS);
+            }
+            format!("a {other} {noun} .")
+        } else {
+            let mut other = *rng.choose(vocab::NOUNS);
+            while other == noun {
+                other = *rng.choose(vocab::NOUNS);
+            }
+            format!("a {adj} {other} .")
+        };
+        let prompt = tok.encode(&format!("{s1} {s2} question same ?"));
+        Example::choice(prompt, vec![yes.clone(), no.clone()], if same { 0 } else { 1 })
+    })
+}
+
+/// CoLA analog: linguistic acceptability — canonical word order vs a
+/// deterministic scramble.
+pub fn cola(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    let yes = vec![tok.id("yes")];
+    let no = vec![tok.id("no")];
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let adj = *rng.choose(vocab::ADJS);
+        let name = *rng.choose(vocab::NAMES);
+        let verb = *rng.choose(&vocab::VERBS[..16]);
+        let acceptable = rng.below(2) == 0;
+        let sent = if acceptable {
+            match rng.below(2) {
+                0 => format!("the {noun} is {adj} ."),
+                _ => format!("{name} {verb} the {noun} ."),
+            }
+        } else {
+            match rng.below(3) {
+                0 => format!("{adj} the is {noun} ."),
+                1 => format!("the {verb} {name} {noun} ."),
+                _ => format!("is {noun} {adj} the ."),
+            }
+        };
+        let prompt = tok.encode(&format!("{sent} question correct ?"));
+        Example::choice(prompt, vec![yes.clone(), no.clone()], if acceptable { 0 } else { 1 })
+    })
+}
+
+/// STS-B analog: semantic similarity 0..5 = number of shared content
+/// slots between two five-slot sentences, answered as a digit.
+pub fn stsb(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        // five content slots: name, verb, adjective, noun, second noun
+        let pick = |rng: &mut Rng| -> [&'static str; 5] {
+            [
+                *rng.choose(vocab::NAMES),
+                *rng.choose(&vocab::VERBS[..16]),
+                *rng.choose(vocab::ADJS),
+                *rng.choose(&vocab::NOUNS[..24]),
+                *rng.choose(&vocab::NOUNS[24..]),
+            ]
+        };
+        let s1 = pick(rng);
+        let mut s2 = s1;
+        let shared = rng.range(0, 5) as usize;
+        // change (5 - shared) slots
+        let mut slots: Vec<usize> = (0..5).collect();
+        rng.shuffle(&mut slots);
+        for &slot in slots.iter().take(5 - shared) {
+            loop {
+                let cand = pick(rng)[slot];
+                if cand != s1[slot] {
+                    s2[slot] = cand;
+                    break;
+                }
+            }
+        }
+        let sent = |s: &[&str; 5]| format!("{} {} the {} {} in the {}", s[0], s[1], s[2], s[3], s[4]);
+        let prompt = tok.encode(&format!(
+            "{} . {} . question similar score ?",
+            sent(&s1),
+            sent(&s2)
+        ));
+        let opts: Vec<Vec<u16>> = (0..6u64).map(|d| tok.encode_number(d)).collect();
+        Example::choice(prompt, opts, shared)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sst2_polarity_consistent() {
+        let tok = Tokenizer::new();
+        let d = sst2(&tok, 51, Sizes { train: 60, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let w: Vec<&str> = text.split_whitespace().collect();
+            let a1 = w[3];
+            let pos = POS_ADJS.contains(&a1);
+            assert_eq!(ex.correct == 0, pos, "{text}");
+        }
+    }
+
+    #[test]
+    fn stsb_shared_count_matches_label() {
+        let tok = Tokenizer::new();
+        let d = stsb(&tok, 52, Sizes { train: 60, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let parts: Vec<&str> = text.split(" . ").collect();
+            let w1: Vec<&str> = parts[0].split_whitespace().collect();
+            let w2: Vec<&str> = parts[1].split_whitespace().collect();
+            // slots at positions 0,1,3,4,7 of "name verb the adj noun in the noun2"
+            let idx = [0usize, 1, 3, 4, 7];
+            let shared = idx.iter().filter(|&&i| w1[i] == w2[i]).count();
+            assert_eq!(ex.correct, shared, "{text}");
+        }
+    }
+
+    #[test]
+    fn cola_unacceptable_differs_from_acceptable() {
+        let tok = Tokenizer::new();
+        let d = cola(&tok, 53, Sizes { train: 100, val: 0, test: 0 });
+        let acc = d.train.iter().filter(|e| e.correct == 0).count();
+        assert!(acc > 30 && acc < 70);
+    }
+}

@@ -1,0 +1,201 @@
+//! Downstream task generators — synthetic analogs of every dataset in
+//! the paper's App. D table, sharing the pretraining vocabulary:
+//!
+//! | paper dataset        | analog        | module      | metric   |
+//! |----------------------|---------------|-------------|----------|
+//! | RTE                  | rte_syn       | rte         | accuracy |
+//! | DROP                 | drop_syn      | drop        | token F1 |
+//! | BoolQ..OBQA (8)      | *_syn         | commonsense | accuracy |
+//! | AQuA/GSM8K/MAWPS/SVAMP| *_syn        | arithmetic  | accuracy |
+//! | GLUE (5)             | *_syn         | glue        | accuracy |
+//!
+//! Mixed fine-tuning sets (`commonsense_mix`, `math_mix`) mirror
+//! COMMONSENSE170K / MATH10K: train on the union, evaluate per-suite.
+
+pub mod rte;
+pub mod drop;
+pub mod commonsense;
+pub mod arithmetic;
+pub mod glue;
+
+use crate::data::example::TaskData;
+use crate::data::tokenizer::Tokenizer;
+use crate::data::Example;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Evaluation metric for a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Option scoring (choice tasks) or parsed-answer match (generation).
+    Accuracy,
+    /// Token-overlap F1 on the generated answer (DROP protocol).
+    F1,
+}
+
+/// Split sizes (train, val, test).
+#[derive(Clone, Copy, Debug)]
+pub struct Sizes {
+    pub train: usize,
+    pub val: usize,
+    pub test: usize,
+}
+
+impl Default for Sizes {
+    fn default() -> Self {
+        Sizes { train: 400, val: 100, test: 200 }
+    }
+}
+
+/// Generate disjoint splits from per-split seed streams.
+pub fn gen_splits<F>(seed: u64, sizes: Sizes, mut gen_one: F) -> TaskData
+where
+    F: FnMut(&mut Rng) -> Example,
+{
+    let mut make = |stream: &str, n: usize| -> Vec<Example> {
+        let mut rng = Rng::stream(seed, stream);
+        (0..n).map(|_| gen_one(&mut rng)).collect()
+    };
+    TaskData {
+        train: make("train", sizes.train),
+        val: make("val", sizes.val),
+        test: make("test", sizes.test),
+    }
+}
+
+/// All registered task names.
+pub const TASKS: &[&str] = &[
+    "rte_syn", "drop_syn",
+    "boolq_syn", "piqa_syn", "siqa_syn", "hellas_syn", "winog_syn",
+    "arce_syn", "arcc_syn", "obqa_syn",
+    "aqua_syn", "gsm_syn", "mawps_syn", "svamp_syn",
+    "sst2_syn", "mrpc_syn", "cola_syn", "stsb_syn",
+];
+
+/// Commonsense suite (Table 3 columns, in paper order).
+pub const COMMONSENSE_SUITE: &[&str] = &[
+    "boolq_syn", "piqa_syn", "siqa_syn", "hellas_syn", "winog_syn",
+    "arce_syn", "arcc_syn", "obqa_syn",
+];
+
+/// Arithmetic suite (Table 4 columns, in paper order).
+pub const ARITHMETIC_SUITE: &[&str] = &["aqua_syn", "gsm_syn", "mawps_syn", "svamp_syn"];
+
+/// GLUE suite (Table F.7 columns, in paper order).
+pub const GLUE_SUITE: &[&str] = &["sst2_syn", "mrpc_syn", "cola_syn", "rte_syn", "stsb_syn"];
+
+pub fn metric_for(task: &str) -> Metric {
+    match task {
+        "drop_syn" => Metric::F1,
+        _ => Metric::Accuracy,
+    }
+}
+
+/// Generate a task by name.
+pub fn generate(task: &str, tok: &Tokenizer, seed: u64, sizes: Sizes) -> Result<TaskData> {
+    Ok(match task {
+        "rte_syn" => rte::generate(tok, seed, sizes),
+        "drop_syn" => drop::generate(tok, seed, sizes),
+        "boolq_syn" => commonsense::boolq(tok, seed, sizes),
+        "piqa_syn" => commonsense::piqa(tok, seed, sizes),
+        "siqa_syn" => commonsense::siqa(tok, seed, sizes),
+        "hellas_syn" => commonsense::hellaswag(tok, seed, sizes),
+        "winog_syn" => commonsense::winogrande(tok, seed, sizes),
+        "arce_syn" => commonsense::arc_easy(tok, seed, sizes),
+        "arcc_syn" => commonsense::arc_challenge(tok, seed, sizes),
+        "obqa_syn" => commonsense::obqa(tok, seed, sizes),
+        "aqua_syn" => arithmetic::aqua(tok, seed, sizes),
+        "gsm_syn" => arithmetic::gsm(tok, seed, sizes),
+        "mawps_syn" => arithmetic::mawps(tok, seed, sizes),
+        "svamp_syn" => arithmetic::svamp(tok, seed, sizes),
+        "sst2_syn" => glue::sst2(tok, seed, sizes),
+        "mrpc_syn" => glue::mrpc(tok, seed, sizes),
+        "cola_syn" => glue::cola(tok, seed, sizes),
+        "stsb_syn" => glue::stsb(tok, seed, sizes),
+        _ => return Err(Error::Data(format!("unknown task '{task}'"))),
+    })
+}
+
+/// Mixed training set over a suite (train/val merged across tasks,
+/// shuffled; per-task tests remain separate for evaluation).
+pub fn generate_mix(suite: &[&str], tok: &Tokenizer, seed: u64, sizes: Sizes) -> Result<TaskData> {
+    let parts: Result<Vec<TaskData>> = suite
+        .iter()
+        .map(|t| generate(t, tok, seed, sizes))
+        .collect();
+    let mut mix = TaskData::concat(parts?);
+    let mut rng = Rng::stream(seed, "mix-shuffle");
+    rng.shuffle(&mut mix.train);
+    rng.shuffle(&mut mix.val);
+    mix.test.clear(); // evaluation is per-suite
+    Ok(mix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::UNK;
+
+    #[test]
+    fn all_tasks_generate_clean_examples() {
+        let tok = Tokenizer::new();
+        let sizes = Sizes { train: 8, val: 4, test: 4 };
+        for task in TASKS {
+            let data = generate(task, &tok, 123, sizes).unwrap();
+            assert_eq!(data.train.len(), 8, "{task}");
+            assert_eq!(data.test.len(), 4, "{task}");
+            for ex in data.train.iter().chain(&data.test) {
+                assert!(!ex.prompt.is_empty(), "{task}");
+                assert!(!ex.answer.is_empty(), "{task}");
+                assert!(!ex.prompt.contains(&UNK), "{task}: {}", tok.decode(&ex.prompt));
+                assert!(!ex.answer.contains(&UNK), "{task}: {}", tok.decode(&ex.answer));
+                assert!(
+                    ex.prompt.len() + ex.answer.len() <= 62,
+                    "{task} too long: {} + {}",
+                    ex.prompt.len(),
+                    ex.answer.len()
+                );
+                if ex.is_choice() {
+                    assert!(ex.correct < ex.options.len(), "{task}");
+                    assert_eq!(ex.options[ex.correct], ex.answer, "{task}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let tok = Tokenizer::new();
+        let sizes = Sizes { train: 4, val: 2, test: 2 };
+        let a = generate("drop_syn", &tok, 5, sizes).unwrap();
+        let b = generate("drop_syn", &tok, 5, sizes).unwrap();
+        for (x, y) in a.train.iter().zip(&b.train) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn splits_differ() {
+        let tok = Tokenizer::new();
+        let sizes = Sizes { train: 20, val: 20, test: 20 };
+        let d = generate("mawps_syn", &tok, 9, sizes).unwrap();
+        // at least one example differs between train and test prefixes
+        let same = d
+            .train
+            .iter()
+            .zip(&d.test)
+            .filter(|(a, b)| a.prompt == b.prompt)
+            .count();
+        assert!(same < d.train.len() / 2);
+    }
+
+    #[test]
+    fn mix_shuffles_and_combines() {
+        let tok = Tokenizer::new();
+        let sizes = Sizes { train: 10, val: 5, test: 5 };
+        let mix = generate_mix(&["boolq_syn", "piqa_syn"], &tok, 3, sizes).unwrap();
+        assert_eq!(mix.train.len(), 20);
+        assert!(mix.test.is_empty());
+    }
+}

@@ -1,0 +1,77 @@
+//! `rte_syn` — the paper's canonical *low intrinsic-rank* task (Table 1,
+//! Fig. 2 left).
+//!
+//! Entailment verification over attribute statements: the label is a
+//! near-linear readout of features the pretrained model already
+//! represents (does the hypothesis restate the premise's attribute of
+//! the same entity?), so a low-rank weight update suffices — mirroring
+//! the paper's observation that LoRA r=64 and r=128 tie on RTE.
+
+use crate::data::example::TaskData;
+use crate::data::tasks::{gen_splits, Sizes};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vocab;
+use crate::data::Example;
+use crate::util::rng::Rng;
+
+pub fn generate(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
+    let yes = vec![tok.id("yes")];
+    let no = vec![tok.id("no")];
+    gen_splits(seed, sizes, |rng: &mut Rng| {
+        let noun = *rng.choose(vocab::NOUNS);
+        let adj = *rng.choose(vocab::ADJS);
+        let entails = rng.below(2) == 0;
+        let (h_noun, h_adj) = if entails {
+            (noun, adj)
+        } else if rng.below(2) == 0 {
+            // different attribute, same entity
+            let mut other = *rng.choose(vocab::ADJS);
+            while other == adj {
+                other = *rng.choose(vocab::ADJS);
+            }
+            (noun, other)
+        } else {
+            // same attribute, different entity
+            let mut other = *rng.choose(vocab::NOUNS);
+            while other == noun {
+                other = *rng.choose(vocab::NOUNS);
+            }
+            (other, adj)
+        };
+        let prompt = tok.encode(&format!(
+            "the {noun} is {adj} . statement the {h_noun} is {h_adj} . entails ?"
+        ));
+        Example::choice(
+            prompt,
+            vec![yes.clone(), no.clone()],
+            if entails { 0 } else { 1 },
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_balanced() {
+        let tok = Tokenizer::new();
+        let d = generate(&tok, 11, Sizes { train: 200, val: 0, test: 0 });
+        let yeses = d.train.iter().filter(|e| e.correct == 0).count();
+        assert!(yeses > 60 && yeses < 140, "yes count {yeses}");
+    }
+
+    #[test]
+    fn entailed_pairs_match_premise() {
+        let tok = Tokenizer::new();
+        let d = generate(&tok, 12, Sizes { train: 50, val: 0, test: 0 });
+        for ex in &d.train {
+            let text = tok.decode(&ex.prompt);
+            let words: Vec<&str> = text.split_whitespace().collect();
+            // "the N is A . statement the HN is HA . entails ?"
+            let (n, a, hn, ha) = (words[1], words[3], words[7], words[9]);
+            let entails = n == hn && a == ha;
+            assert_eq!(ex.correct == 0, entails, "{text}");
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Word-level tokenizer over the static vocabulary.  Numbers are encoded
+//! digit-wise (so arithmetic answers of any magnitude stay in-vocab).
+
+use std::collections::HashMap;
+
+use crate::data::vocab::{self, DIGIT0, UNK};
+
+#[derive(Clone)]
+pub struct Tokenizer {
+    words: Vec<String>,
+    ids: HashMap<String, u16>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let words = vocab::build_words();
+        let ids = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u16))
+            .collect();
+        Tokenizer { words, ids }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        vocab::VOCAB_SIZE
+    }
+
+    /// Encode a whitespace-separated template string.  Multi-digit
+    /// numbers expand into digit tokens.
+    pub fn encode(&self, text: &str) -> Vec<u16> {
+        let mut out = vec![];
+        for word in text.split_whitespace() {
+            if !word.is_empty() && word.bytes().all(|b| b.is_ascii_digit()) && word.len() > 1 {
+                for b in word.bytes() {
+                    out.push(DIGIT0 + (b - b'0') as u16);
+                }
+            } else if let Some(&id) = self.ids.get(word) {
+                out.push(id);
+            } else {
+                out.push(UNK);
+            }
+        }
+        out
+    }
+
+    /// Encode an integer digit-wise.
+    pub fn encode_number(&self, n: u64) -> Vec<u16> {
+        n.to_string()
+            .bytes()
+            .map(|b| DIGIT0 + (b - b'0') as u16)
+            .collect()
+    }
+
+    pub fn decode(&self, tokens: &[u16]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                self.words
+                    .get(t as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<oob>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn id(&self, word: &str) -> u16 {
+        *self.ids.get(word).unwrap_or(&UNK)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::{DIGIT0, UNK};
+
+    #[test]
+    fn roundtrip_words() {
+        let tok = Tokenizer::new();
+        let ids = tok.encode("alice has 3 apple .");
+        assert!(!ids.contains(&UNK), "{:?}", tok.decode(&ids));
+        assert_eq!(tok.decode(&ids), "alice has 3 apple .");
+    }
+
+    #[test]
+    fn multidigit_numbers_split() {
+        let tok = Tokenizer::new();
+        let ids = tok.encode("47");
+        assert_eq!(ids, vec![DIGIT0 + 4, DIGIT0 + 7]);
+        assert_eq!(tok.encode_number(470), vec![DIGIT0 + 4, DIGIT0 + 7, DIGIT0]);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tok = Tokenizer::new();
+        assert_eq!(tok.encode("zzzzz"), vec![UNK]);
+    }
+
+    #[test]
+    fn all_vocab_words_encode_to_self() {
+        let tok = Tokenizer::new();
+        for w in vocab::build_words().iter().skip(15) {
+            // skip specials + single digits (digit handling is special)
+            let ids = tok.encode(w);
+            assert_eq!(ids.len(), 1, "{w}");
+            assert_eq!(tok.decode(&ids), *w);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Static word-level vocabulary (512 slots) shared by the pretraining
+//! corpus and every downstream task, so fine-tuning never sees
+//! out-of-vocabulary tokens.
+
+/// Special token ids.
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const EOS: u16 = 2;
+/// Separator between prompt and answer ("Answer:" in the paper's prompts).
+pub const SEP: u16 = 3;
+pub const UNK: u16 = 4;
+/// Digits 0..=9 occupy ids 5..=14 (numbers are tokenized digit-wise).
+pub const DIGIT0: u16 = 5;
+
+pub const VOCAB_SIZE: usize = 512;
+
+pub const NAMES: &[&str] = &[
+    "alice", "bob", "carol", "dave", "erin", "frank", "grace", "henry",
+    "ivy", "jack", "kate", "liam", "mona", "nina", "oscar", "paula",
+    "quinn", "rosa", "sam", "tara", "umar", "vera", "wade", "xena",
+];
+
+pub const NOUNS: &[&str] = &[
+    "apple", "pear", "book", "coin", "stone", "ball", "cup", "box",
+    "key", "leaf", "shell", "ring", "card", "doll", "kite", "lamp",
+    "map", "nail", "pen", "rope", "seed", "tent", "vase", "wheel",
+    "cat", "dog", "bird", "fish", "horse", "mouse", "sheep", "goat",
+    "table", "chair", "door", "window", "wall", "roof", "floor", "garden",
+    "river", "hill", "road", "bridge", "field", "forest", "lake", "cave",
+];
+
+pub const VERBS: &[&str] = &[
+    "has", "finds", "buys", "sells", "gives", "takes", "makes", "breaks",
+    "sees", "hears", "holds", "drops", "lifts", "moves", "opens", "closes",
+    "helped", "hurt", "praised", "blamed", "thanked", "ignored", "greeted", "pushed",
+    "eats", "drinks", "reads", "writes", "draws", "paints",
+];
+
+pub const ADJS: &[&str] = &[
+    "red", "blue", "green", "small", "big", "old", "new", "fast",
+    "slow", "warm", "cold", "bright", "dark", "heavy", "light", "round",
+    "happy", "sad", "angry", "calm", "brave", "shy", "kind", "rude",
+    "clean", "dirty", "sharp", "dull", "soft", "hard",
+];
+
+pub const TOOLS: &[&str] = &[
+    "scissors", "hammer", "spoon", "brush", "needle", "ladder", "bucket", "broom",
+    "knife", "shovel", "towel", "sponge",
+];
+
+pub const TOOL_TASKS: &[&str] = &[
+    "cut", "pound", "stir", "sweep", "sew", "climb", "carry", "dust",
+    "slice", "dig", "dry", "scrub",
+];
+
+pub const EMOTIONS: &[&str] = &["grateful", "upset", "proud", "ashamed", "glad", "annoyed"];
+
+pub const MATERIALS: &[&str] = &["metal", "wood", "glass", "cloth", "paper", "clay"];
+
+pub const PROPS: &[&str] = &["shiny", "flammable", "fragile", "flexible", "foldable", "brittle"];
+
+pub const FUNCTION_WORDS: &[&str] = &[
+    "the", "a", "and", "then", "is", "are", "was", "in", "on", "to", "of",
+    "more", "fewer", "than", "how", "many", "who", "what", "which", "most",
+    "altogether", "left", "first", "second", "because", "it", "too", "does",
+    "not", "fit", "into", "use", "feels", "feel", "after", "true", "false", "yes",
+    "no", "option", "same", "different", "as", "plus", "minus", "times", "equals",
+    "each", "all", "some", "every", "made", "can", "cannot", "so", "therefore",
+    "doubles", "half", "question", "passage", "answer", "choose", "best",
+    "next", "story", "ends", "with", "similar", "score", "entails", "statement",
+    "correct", "about", "have", "sort", "thing", "animal", "object", "place",
+];
+
+/// Build the full vocabulary word list (index = token id).
+pub fn build_words() -> Vec<String> {
+    let mut words: Vec<String> = vec![
+        "<pad>".into(), "<bos>".into(), "<eos>".into(), "<sep>".into(), "<unk>".into(),
+    ];
+    for d in 0..10 {
+        words.push(d.to_string());
+    }
+    for group in [
+        NAMES, NOUNS, VERBS, ADJS, TOOLS, TOOL_TASKS, EMOTIONS, MATERIALS, PROPS,
+        FUNCTION_WORDS,
+    ] {
+        for w in group {
+            words.push((*w).to_string());
+        }
+    }
+    words.push(".".into());
+    words.push("?".into());
+    words.push(",".into());
+    assert!(words.len() <= VOCAB_SIZE, "vocab overflow: {}", words.len());
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_and_is_unique() {
+        let words = build_words();
+        assert!(words.len() <= VOCAB_SIZE);
+        let mut set = std::collections::HashSet::new();
+        for w in &words {
+            assert!(set.insert(w.clone()), "duplicate vocab word: {w}");
+        }
+    }
+
+    #[test]
+    fn digits_at_expected_ids() {
+        let words = build_words();
+        for d in 0..10u16 {
+            assert_eq!(words[(DIGIT0 + d) as usize], d.to_string());
+        }
+    }
+}

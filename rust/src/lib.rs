@@ -1,0 +1,28 @@
+//! # quanta-ft — QuanTA high-rank fine-tuning, reproduced as a rust+JAX+Pallas stack
+//!
+//! Reproduction of *QuanTA: Efficient High-Rank Fine-Tuning of LLMs with
+//! Quantum-Informed Tensor Adaptation* (NeurIPS 2024).
+//!
+//! Layering (see `DESIGN.md`):
+//! - **L1** (build-time python): fused QuanTA chain-application Pallas kernel.
+//! - **L2** (build-time python): JAX transformer + 10 PEFT methods, lowered
+//!   once to HLO text under `artifacts/`.
+//! - **L3** (this crate): the fine-tuning coordinator — config, data
+//!   pipeline, PJRT runtime, training loop, evaluation, analysis, and the
+//!   benchmark harness regenerating every paper table/figure.
+//!
+//! The crate also contains a *pure-rust* QuanTA reference ([`quanta`])
+//! used to property-test the paper's theorems (universality, rank
+//! representation, composition openness) independently of the HLO path.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod quanta;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod analysis;
+pub mod bench;
+
+pub use util::error::{Error, Result};

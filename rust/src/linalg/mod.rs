@@ -1,0 +1,9 @@
+//! Numerical linear algebra for the analysis pipeline: one-sided Jacobi
+//! SVD, numerical rank, and the paper's subspace-similarity measure
+//! (Eq. A.1).  All f64 internally for robustness.
+
+mod svd;
+mod subspace;
+
+pub use subspace::{subspace_similarity, subspace_similarity_grid};
+pub use svd::{effective_rank, numerical_rank, Svd};

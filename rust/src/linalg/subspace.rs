@@ -1,0 +1,157 @@
+//! Subspace similarity (paper Eq. A.1):
+//!
+//!   phi(r1, r2, i, j) = || V1[:, :i]^T V2[:, :j] ||_F^2 / min(i, j)
+//!
+//! where `V1`/`V2` are the right singular vectors of two weight updates.
+//! This is the paper's "intrinsic rank" probe (Fig. 2, A.1, A.2): phi
+//! stays high across the grid for high-intrinsic-rank tasks (DROP) and
+//! decays immediately for low-rank tasks (RTE).
+
+use crate::linalg::svd::Svd;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+
+/// phi for a single (i, j): first `i` columns of v1 vs first `j` of v2.
+/// `v1`, `v2` are (n x k) matrices of right singular vectors (columns
+/// ordered by descending singular value).
+pub fn subspace_similarity(v1: &Tensor, v2: &Tensor, i: usize, j: usize) -> f64 {
+    assert!(i >= 1 && j >= 1);
+    assert_eq!(v1.shape[0], v2.shape[0]);
+    let n = v1.shape[0];
+    let (k1, k2) = (v1.shape[1], v2.shape[1]);
+    assert!(i <= k1 && j <= k2);
+    // ||V1_i^T V2_j||_F^2 = sum_{a<i, b<j} (v1_a . v2_b)^2
+    let mut acc = 0.0f64;
+    for a in 0..i {
+        for b in 0..j {
+            let mut dot = 0.0f64;
+            for r in 0..n {
+                dot += v1.data[r * k1 + a] as f64 * v2.data[r * k2 + b] as f64;
+            }
+            acc += dot * dot;
+        }
+    }
+    acc / i.min(j) as f64
+}
+
+/// Full phi(i, j) grid (1-based i, j up to k1/k2) between the right
+/// singular subspaces of two weight-update matrices.  Returns
+/// `(grid[k1][k2], k1, k2)` where grid[i-1][j-1] = phi(i, j).
+///
+/// Computed incrementally: phi numerator at (i, j) is a 2D prefix sum of
+/// squared dot products, so the full grid costs one `k1 x k2` Gram
+/// matrix rather than `k1*k2` Frobenius norms.
+pub fn subspace_similarity_grid(dw1: &Tensor, dw2: &Tensor, k1: usize, k2: usize) -> Result<Vec<Vec<f64>>> {
+    let svd1 = Svd::compute(dw1)?;
+    let svd2 = Svd::compute(dw2)?;
+    let k1 = k1.min(svd1.v.shape[1]);
+    let k2 = k2.min(svd2.v.shape[1]);
+    let n = svd1.v.shape[0];
+    let (c1, c2) = (svd1.v.shape[1], svd2.v.shape[1]);
+    // gram[a][b] = (v1_a . v2_b)^2
+    let mut gram = vec![vec![0.0f64; k2]; k1];
+    for (a, row) in gram.iter_mut().enumerate() {
+        for (b, cell) in row.iter_mut().enumerate() {
+            let mut dot = 0.0f64;
+            for r in 0..n {
+                dot += svd1.v.data[r * c1 + a] as f64 * svd2.v.data[r * c2 + b] as f64;
+            }
+            *cell = dot * dot;
+        }
+    }
+    // prefix-sum -> phi
+    let mut grid = vec![vec![0.0f64; k2]; k1];
+    let mut prefix = vec![vec![0.0f64; k2 + 1]; k1 + 1];
+    for i in 1..=k1 {
+        for j in 1..=k2 {
+            prefix[i][j] = gram[i - 1][j - 1] + prefix[i - 1][j] + prefix[i][j - 1]
+                - prefix[i - 1][j - 1];
+            grid[i - 1][j - 1] = (prefix[i][j] / i.min(j) as f64).min(1.0);
+        }
+    }
+    Ok(grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_subspaces_give_one() {
+        let mut rng = Rng::new(20);
+        let a = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let grid = subspace_similarity_grid(&a, &a, 8, 8).unwrap();
+        for i in 0..8 {
+            // phi(i+1, i+1) of identical subspaces = 1
+            assert!((grid[i][i] - 1.0).abs() < 1e-5, "phi({},{}) = {}", i + 1, i + 1, grid[i][i]);
+        }
+    }
+
+    #[test]
+    fn contained_subspace_gives_one() {
+        // phi(i, j) == 1 whenever one subspace contains the other
+        let mut rng = Rng::new(21);
+        let a = Tensor::randn(&[12, 12], 1.0, &mut rng);
+        let grid = subspace_similarity_grid(&a, &a, 6, 6).unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!(grid[i][j] <= 1.0 + 1e-9);
+                if i <= j {
+                    // same matrix: first i vectors always inside first j
+                    assert!(grid[i.min(j)][i.max(j)] > 1.0 - 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn orthogonal_updates_give_zero() {
+        // dw1 acts on rows 0..4 of input space, dw2 on rows 8..12
+        let n = 16;
+        let mut dw1 = Tensor::zeros(&[n, n]);
+        let mut dw2 = Tensor::zeros(&[n, n]);
+        let mut rng = Rng::new(22);
+        for i in 0..n {
+            for j in 0..4 {
+                *dw1.at2_mut(i, j) = rng.normal() as f32;
+                *dw2.at2_mut(i, j + 8) = rng.normal() as f32;
+            }
+        }
+        let grid = subspace_similarity_grid(&dw1, &dw2, 4, 4).unwrap();
+        for row in &grid {
+            for &v in row {
+                assert!(v < 1e-6, "expected orthogonal, got {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn phi_in_unit_interval() {
+        let mut rng = Rng::new(23);
+        let a = Tensor::randn(&[10, 10], 1.0, &mut rng);
+        let b = Tensor::randn(&[10, 10], 1.0, &mut rng);
+        let grid = subspace_similarity_grid(&a, &b, 10, 10).unwrap();
+        for row in &grid {
+            for &v in row {
+                assert!((0.0..=1.0 + 1e-9).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn single_direction_matches_pointwise() {
+        let mut rng = Rng::new(24);
+        let a = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let b = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let s1 = Svd::compute(&a).unwrap();
+        let s2 = Svd::compute(&b).unwrap();
+        let grid = subspace_similarity_grid(&a, &b, 4, 4).unwrap();
+        for i in 1..=4usize {
+            for j in 1..=4usize {
+                let direct = subspace_similarity(&s1.v, &s2.v, i, j);
+                assert!((grid[i - 1][j - 1] - direct).abs() < 1e-9);
+            }
+        }
+    }
+}

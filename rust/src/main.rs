@@ -1,0 +1,180 @@
+//! quanta-ft CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   list                         — show artifact sets and tasks
+//!   pretrain --arch tiny         — pretrain (and cache) a base model
+//!   train --set S --task T       — fine-tune one config, report metric
+//!   eval-base --set S --task T   — score the un-fine-tuned base model
+//!   analyze --task T             — Fig.2 subspace-similarity analysis
+//!   info --set S                 — print a manifest summary
+//!
+//! (Argument parsing is hand-rolled: clap is not in the offline vendor
+//! set.)
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use quanta_ft::analysis;
+use quanta_ft::coordinator::experiment::{require_artifacts, RunSpec};
+use quanta_ft::coordinator::tables::{pct, score100, Table};
+use quanta_ft::data::tasks;
+use quanta_ft::runtime::manifest::Manifest;
+use quanta_ft::util::error::Result;
+
+fn parse_args(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut positional = vec![];
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (positional, flags)
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: quanta-ft <list|info|pretrain|train|eval-base|analyze> [--set S] [--task T] \
+         [--arch A] [--seeds N] [--steps N]"
+    );
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_args(&args);
+    let cmd = match pos.first() {
+        Some(c) => c.as_str(),
+        None => return usage(),
+    };
+    match run(cmd, &flags) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
+    match cmd {
+        "list" => {
+            let root = std::env::current_dir()?;
+            println!("artifact sets:");
+            for s in Manifest::list_sets(&root.join("artifacts"))? {
+                let man = Manifest::load(&root.join("artifacts").join(&s))?;
+                let method = man.method.as_ref().map(|m| m.name.clone()).unwrap_or("pretrain".into());
+                println!(
+                    "  {s:28} arch={:6} method={:8} trainable={} ({})",
+                    man.arch.name,
+                    method,
+                    man.counts.trainable_params,
+                    pct(man.counts.trainable_percent),
+                );
+            }
+            println!("\ntasks: {}", tasks::TASKS.join(", "));
+            Ok(())
+        }
+        "info" => {
+            let set = flags.get("set").ok_or_else(|| quanta_ft::Error::msg("--set required"))?;
+            let root = std::env::current_dir()?;
+            let man = Manifest::load(&root.join("artifacts").join(set))?;
+            println!("set:        {}", man.name);
+            println!("arch:       {} (d={}, layers={}, heads={}, vocab={}, seq={})",
+                man.arch.name, man.arch.d_model, man.arch.n_layers, man.arch.n_heads,
+                man.arch.vocab, man.arch.seq_len);
+            if let Some(m) = &man.method {
+                println!("method:     {} on {:?}", m.name, m.modules);
+            } else {
+                println!("method:     (pretraining)");
+            }
+            println!("trainable:  {} / {} ({})",
+                man.counts.trainable_params, man.counts.model_params,
+                pct(man.counts.trainable_percent));
+            println!("schedule:   lr={} warmup={} total={}", man.hyper.lr,
+                man.hyper.warmup_steps, man.hyper.total_steps);
+            println!("artifacts:  {:?}", man.artifacts.keys().collect::<Vec<_>>());
+            Ok(())
+        }
+        "pretrain" => {
+            let arch = flags.get("arch").map(|s| s.as_str()).unwrap_or("tiny");
+            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let base = runner.pretrained_base(arch)?;
+            println!("base model '{arch}' ready: {} params", base.len());
+            Ok(())
+        }
+        "train" => {
+            let set = flags.get("set").ok_or_else(|| quanta_ft::Error::msg("--set required"))?;
+            let task = flags.get("task").ok_or_else(|| quanta_ft::Error::msg("--task required"))?;
+            let seeds: Vec<u64> = flags
+                .get("seeds")
+                .map(|s| s.parse::<u64>().unwrap_or(2))
+                .map(|n| (0..n).collect())
+                .unwrap_or_else(|| vec![0, 1]);
+            let mut spec = if task.ends_with("_mix") {
+                let suite: &[&str] = match task.as_str() {
+                    "commonsense_mix" => tasks::COMMONSENSE_SUITE,
+                    "math_mix" => tasks::ARITHMETIC_SUITE,
+                    other => return Err(quanta_ft::Error::msg(format!("unknown mix '{other}'"))),
+                };
+                RunSpec::mix(set, suite)
+            } else {
+                RunSpec::new(set, task)
+            }
+            .with_seeds(&seeds);
+            if let Some(steps) = flags.get("steps") {
+                spec = spec.with_steps(steps.parse().map_err(|_| quanta_ft::Error::msg("bad --steps"))?);
+            }
+            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let result = runner.run(&spec)?;
+            let mut t = Table::new(&["Task", "Metric", "Score (mean over seeds)"]);
+            for (task, vals) in &result.per_task {
+                let metric = match tasks::metric_for(task) {
+                    tasks::Metric::F1 => "F1",
+                    tasks::Metric::Accuracy => "Acc",
+                };
+                t.row(vec![
+                    task.clone(),
+                    metric.into(),
+                    format!("{} (n={})", score100(result.mean(task)), vals.len()),
+                ]);
+            }
+            t.print();
+            println!("trainable params: {} ({})", result.trainable_params, pct(result.trainable_percent));
+            Ok(())
+        }
+        "eval-base" => {
+            let set = flags.get("set").ok_or_else(|| quanta_ft::Error::msg("--set required"))?;
+            let task = flags.get("task").ok_or_else(|| quanta_ft::Error::msg("--task required"))?;
+            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let score = runner.eval_base(set, task, Default::default())?;
+            println!("base model on {task}: {}", score100(score));
+            Ok(())
+        }
+        "analyze" => {
+            let task = flags.get("task").map(|s| s.as_str()).unwrap_or("drop_syn");
+            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let report = analysis::subspace_analysis(
+                &mut runner, task, "tiny_lora_r32", "tiny_lora_r64", 0, 24, 24)?;
+            println!("task={} module={}", report.task, report.module);
+            println!("mean phi = {:.3}, tail phi = {:.3}, effective rank(r2 dW) = {:.1}",
+                report.mean_phi, report.tail_phi, report.effective_rank_r2);
+            print!("{}", analysis::render_heatmap(&report.grid, 24));
+            Ok(())
+        }
+        _ => {
+            usage();
+            Err(quanta_ft::Error::msg(format!("unknown command '{cmd}'")))
+        }
+    }
+}

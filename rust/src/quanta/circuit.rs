@@ -1,0 +1,241 @@
+//! QuanTA circuits on the host: gates, chain application, full-matrix
+//! materialization (paper Eq. 4–7).
+
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One two-axis gate: a `(d_m*d_n, d_m*d_n)` matrix acting on axes
+/// `(m, n)` of the reshaped hidden vector (paper Eq. 4).
+#[derive(Clone, Debug)]
+pub struct Gate {
+    pub m: usize,
+    pub n: usize,
+    pub mat: Tensor,
+}
+
+/// A QuanTA circuit: axis dimensions + ordered gates (applied first to
+/// last, paper Eq. 5).
+#[derive(Clone, Debug)]
+pub struct Circuit {
+    pub dims: Vec<usize>,
+    pub gates: Vec<Gate>,
+}
+
+/// The paper's default structure (App. E.1): one gate per unordered axis
+/// pair, enumerated to match `einsum_gen.all_pairs_structure` on the
+/// python side.
+pub fn all_pairs_structure(n_axes: usize) -> Vec<(usize, usize)> {
+    let mut pairs = vec![];
+    // combinations over negative indices (-1, -2, ..., -N), matching App. G
+    let neg: Vec<i64> = (1..=n_axes as i64).map(|k| -k).collect();
+    for a in 0..neg.len() {
+        for b in (a + 1)..neg.len() {
+            let m = ((neg[a] + n_axes as i64) % n_axes as i64) as usize;
+            let n = ((neg[b] + n_axes as i64) % n_axes as i64) as usize;
+            pairs.push((m, n));
+        }
+    }
+    pairs
+}
+
+impl Circuit {
+    /// Random circuit over `dims` with the given structure; each gate is
+    /// `eye + N(0, std^2)` like the training init.
+    pub fn random(dims: &[usize], structure: &[(usize, usize)], std: f32, rng: &mut Rng) -> Result<Circuit> {
+        let mut gates = vec![];
+        for &(m, n) in structure {
+            if m >= dims.len() || n >= dims.len() || m == n {
+                return Err(Error::Shape(format!("bad gate axes ({m},{n}) for dims {dims:?}")));
+            }
+            let sz = dims[m] * dims[n];
+            let mat = Tensor::eye(sz).add(&Tensor::randn(&[sz, sz], std, rng))?;
+            gates.push(Gate { m, n, mat });
+        }
+        Ok(Circuit { dims: dims.to_vec(), gates })
+    }
+
+    pub fn total_dim(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Trainable parameter count of this circuit (paper §6):
+    /// `sum_alpha (d_m d_n)^2`.
+    pub fn param_count(&self) -> usize {
+        self.gates.iter().map(|g| g.mat.numel()).collect::<Vec<_>>().iter().sum()
+    }
+
+    /// Multiply count of one chain application (paper §6):
+    /// `d * sum_alpha d_m d_n`.
+    pub fn apply_flops(&self) -> usize {
+        let d = self.total_dim();
+        d * self.gates.iter().map(|g| self.dims[g.m] * self.dims[g.n]).sum::<usize>()
+    }
+
+    /// Apply the chain to a single hidden vector `x` of length `d`
+    /// (paper Eq. 4/5): per gate, a batched matvec over the two gate
+    /// axes with every other axis as a batch dimension.
+    pub fn apply(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let d = self.total_dim();
+        if x.len() != d {
+            return Err(Error::Shape(format!("apply: x len {} != d {}", x.len(), d)));
+        }
+        let mut h = x.to_vec();
+        for g in &self.gates {
+            h = self.apply_gate(&h, g)?;
+        }
+        Ok(h)
+    }
+
+    /// Strides of the reshaped hidden tensor (row-major).
+    fn strides(&self) -> Vec<usize> {
+        let n = self.dims.len();
+        let mut s = vec![1usize; n];
+        for i in (0..n - 1).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    fn apply_gate(&self, h: &[f32], g: &Gate) -> Result<Vec<f32>> {
+        let d = self.total_dim();
+        let (dm, dn) = (self.dims[g.m], self.dims[g.n]);
+        let strides = self.strides();
+        let (sm, sn) = (strides[g.m], strides[g.n]);
+        let mut out = vec![0.0f32; d];
+        // Enumerate "rest" multi-indices: all flat offsets with axes m, n
+        // fixed to zero; iterate flat indices and skip those whose m/n
+        // component is nonzero.
+        let mut rest_offsets = Vec::with_capacity(d / (dm * dn));
+        for flat in 0..d {
+            let im = (flat / sm) % dm;
+            let in_ = (flat / sn) % dn;
+            if im == 0 && in_ == 0 {
+                rest_offsets.push(flat);
+            }
+        }
+        let gm = &g.mat;
+        for &base in &rest_offsets {
+            // gather the (dm*dn) sub-vector, matvec, scatter back
+            for i_m in 0..dm {
+                for i_n in 0..dn {
+                    let row = i_m * dn + i_n;
+                    let mut acc = 0.0f32;
+                    for j_m in 0..dm {
+                        for j_n in 0..dn {
+                            let col = j_m * dn + j_n;
+                            acc += gm.data[row * (dm * dn) + col]
+                                * h[base + j_m * sm + j_n * sn];
+                        }
+                    }
+                    out[base + i_m * sm + i_n * sn] = acc;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Materialize the full `(d, d)` operator (paper Eq. 7) by applying
+    /// the chain to basis vectors.
+    pub fn full_matrix(&self) -> Result<Tensor> {
+        let d = self.total_dim();
+        let mut out = Tensor::zeros(&[d, d]);
+        let mut e = vec![0.0f32; d];
+        for j in 0..d {
+            e[j] = 1.0;
+            let col = self.apply(&e)?;
+            e[j] = 0.0;
+            for i in 0..d {
+                out.data[i * d + j] = col[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Compose: the matrix of `self` applied after `other`
+    /// (`full(self) @ full(other)`).
+    pub fn compose_matrix(&self, other: &Circuit) -> Result<Tensor> {
+        self.full_matrix()?.matmul(&other.full_matrix()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_pairs_counts() {
+        assert_eq!(all_pairs_structure(3).len(), 3);
+        assert_eq!(all_pairs_structure(4).len(), 6);
+        assert_eq!(all_pairs_structure(5).len(), 10);
+    }
+
+    #[test]
+    fn identity_circuit_is_identity() {
+        let dims = [2usize, 3, 2];
+        let structure = all_pairs_structure(3);
+        let mut rng = Rng::new(1);
+        let mut c = Circuit::random(&dims, &structure, 0.1, &mut rng).unwrap();
+        for g in &mut c.gates {
+            g.mat = Tensor::eye(g.mat.shape[0]);
+        }
+        let full = c.full_matrix().unwrap();
+        assert!(full.max_abs_diff(&Tensor::eye(12)) < 1e-6);
+    }
+
+    #[test]
+    fn apply_matches_full_matrix() {
+        let dims = [2usize, 2, 3];
+        let structure = all_pairs_structure(3);
+        let mut rng = Rng::new(2);
+        let c = Circuit::random(&dims, &structure, 0.3, &mut rng).unwrap();
+        let full = c.full_matrix().unwrap();
+        let mut x = vec![0.0f32; 12];
+        rng.fill_normal(&mut x, 1.0);
+        let y1 = c.apply(&x).unwrap();
+        let y2 = full.matvec(&x).unwrap();
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn single_gate_two_axes_is_kron_structure() {
+        // One gate on both axes of a 2-axis decomposition == the full
+        // matrix itself (the KronA remark under Thm 6.1: N=2 single gate
+        // covers everything).
+        let dims = [3usize, 4];
+        let structure = [(0usize, 1usize)];
+        let mut rng = Rng::new(3);
+        let c = Circuit::random(&dims, &structure, 0.5, &mut rng).unwrap();
+        let full = c.full_matrix().unwrap();
+        assert!(full.max_abs_diff(&c.gates[0].mat) < 1e-6);
+    }
+
+    #[test]
+    fn param_and_flop_formulas() {
+        // uniform case from paper §6: d_m = d^{1/N}, one gate per pair
+        let dims = [4usize, 4, 4];
+        let structure = all_pairs_structure(3);
+        let mut rng = Rng::new(4);
+        let c = Circuit::random(&dims, &structure, 0.1, &mut rng).unwrap();
+        let d = 64usize;
+        let n = 3usize;
+        assert_eq!(c.param_count(), n * (n - 1) / 2 * 16 * 16); // N(N-1)/2 * d^{4/N}
+        assert_eq!(c.apply_flops(), n * (n - 1) / 2 * d * 16); // N(N-1)/2 * d^{1+2/N}
+    }
+
+    #[test]
+    fn gate_order_matters() {
+        // non-commuting gates: T1 then T2 differs from T2 then T1
+        let dims = [2usize, 2];
+        let mut rng = Rng::new(5);
+        let g0 = Gate { m: 0, n: 1, mat: Tensor::randn(&[4, 4], 1.0, &mut rng) };
+        let g1 = Gate { m: 0, n: 1, mat: Tensor::randn(&[4, 4], 1.0, &mut rng) };
+        let c01 = Circuit { dims: dims.to_vec(), gates: vec![g0.clone(), g1.clone()] };
+        let c10 = Circuit { dims: dims.to_vec(), gates: vec![g1, g0] };
+        let f01 = c01.full_matrix().unwrap();
+        let f10 = c10.full_matrix().unwrap();
+        assert!(f01.max_abs_diff(&f10) > 1e-3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Pure-rust QuanTA reference implementation.
+//!
+//! Mirrors `python/compile/kernels/ref.py` with no JAX dependency; used
+//! to (a) property-test the paper's theorems (rank representation,
+//! universality, composition openness) inside `cargo test`, (b) provide
+//! an independent oracle for the HLO merge path, and (c) compute the
+//! paper's complexity formulas for reporting.
+
+pub mod circuit;
+pub mod theorems;
+
+pub use circuit::{all_pairs_structure, Circuit, Gate};
+pub use theorems::{rank_bounds, RankBounds};

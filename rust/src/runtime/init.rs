@@ -1,0 +1,118 @@
+//! Parameter initialization from manifest layouts.
+//!
+//! Each entry draws from a PRNG stream keyed by `(seed, entry.key)`, so
+//! (a) inits are independent of layout order, and (b) entries sharing a
+//! key get *identical* values — the mechanism behind QuanTA's exact
+//! zero-init (trainable chain T and frozen shadow S share per-gate keys;
+//! paper Eq. 8).
+
+use crate::runtime::manifest::{InitSpec, ParamEntry};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Initialize a flat parameter vector from a layout.
+///
+/// `checkpoint`: optional prefix of pretrained model parameters (the
+/// pretraining run's theta vector).  Entries fully inside the prefix are
+/// copied verbatim; the rest (PEFT extras such as QuanTA's shadow chain)
+/// are generated from their init specs.
+pub fn init_layout(layout: &[ParamEntry], seed: u64, checkpoint: Option<&[f32]>) -> Result<Vec<f32>> {
+    let total: usize = layout.iter().map(|e| e.size).sum();
+    let mut out = vec![0.0f32; total];
+    if let Some(ckpt) = checkpoint {
+        // checkpoint must cover a whole prefix of entries
+        let covered: usize = layout
+            .iter()
+            .take_while(|e| e.offset + e.size <= ckpt.len())
+            .map(|e| e.size)
+            .sum();
+        if covered != ckpt.len() {
+            return Err(Error::Manifest(format!(
+                "checkpoint len {} does not align with layout prefix (covered {covered})",
+                ckpt.len()
+            )));
+        }
+        out[..ckpt.len()].copy_from_slice(ckpt);
+    }
+    let skip = checkpoint.map(|c| c.len()).unwrap_or(0);
+    for e in layout {
+        if e.offset < skip {
+            continue; // came from the checkpoint
+        }
+        init_entry(e, seed, &mut out[e.offset..e.offset + e.size]);
+    }
+    Ok(out)
+}
+
+/// Initialize a single entry in place.
+pub fn init_entry(e: &ParamEntry, seed: u64, out: &mut [f32]) {
+    match &e.init {
+        InitSpec::Zeros => out.fill(0.0),
+        InitSpec::Ones => out.fill(1.0),
+        InitSpec::Normal { std, key } => {
+            let mut rng = Rng::stream(seed, key);
+            rng.fill_normal(out, *std as f32);
+        }
+        InitSpec::EyeNoise { n, std, key } => {
+            let mut rng = Rng::stream(seed, key);
+            rng.fill_normal(out, *std as f32);
+            for i in 0..*n {
+                out[i * n + i] += 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, size: usize, offset: usize, init: InitSpec) -> ParamEntry {
+        ParamEntry { name: name.into(), shape: vec![size], offset, size, init }
+    }
+
+    #[test]
+    fn shared_keys_give_identical_values() {
+        let e1 = entry("t", 16, 0, InitSpec::EyeNoise { n: 4, std: 0.1, key: "g0".into() });
+        let e2 = entry("s", 16, 16, InitSpec::EyeNoise { n: 4, std: 0.1, key: "g0".into() });
+        let out = init_layout(&[e1, e2], 7, None).unwrap();
+        assert_eq!(&out[..16], &out[16..32]);
+        // and the diagonal carries the +1
+        assert!((out[0] - 1.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let e = entry("w", 8, 0, InitSpec::Normal { std: 1.0, key: "w".into() });
+        let a = init_layout(std::slice::from_ref(&e), 1, None).unwrap();
+        let b = init_layout(std::slice::from_ref(&e), 2, None).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn checkpoint_prefix_copied() {
+        let e1 = entry("model", 4, 0, InitSpec::Normal { std: 1.0, key: "m".into() });
+        let e2 = entry("extra", 4, 4, InitSpec::Zeros);
+        let ckpt = vec![9.0f32, 8.0, 7.0, 6.0];
+        let out = init_layout(&[e1, e2], 3, Some(&ckpt)).unwrap();
+        assert_eq!(&out[..4], &ckpt[..]);
+        assert_eq!(&out[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn misaligned_checkpoint_rejected() {
+        let e1 = entry("model", 4, 0, InitSpec::Zeros);
+        let ckpt = vec![1.0f32; 3];
+        assert!(init_layout(std::slice::from_ref(&e1), 3, Some(&ckpt)).is_err());
+    }
+
+    #[test]
+    fn ones_and_zeros() {
+        let layout = [
+            entry("a", 3, 0, InitSpec::Ones),
+            entry("b", 2, 3, InitSpec::Zeros),
+        ];
+        let out = init_layout(&layout, 0, None).unwrap();
+        assert_eq!(out, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,258 @@
+//! Artifact manifest: the L2->L3 contract emitted by `aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Parameter initialization spec (mirrors `python/compile/packing.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Ones,
+    Normal { std: f64, key: String },
+    /// identity(n) + N(0, std^2), via PRNG stream `key` — the shared key
+    /// is what makes QuanTA's frozen shadow S equal the trainable T at
+    /// init (paper Eq. 8).
+    EyeNoise { n: usize, std: f64, key: String },
+}
+
+impl InitSpec {
+    fn parse(v: &Value) -> Result<InitSpec> {
+        let kind = v.req("kind")?.as_str()?;
+        Ok(match kind {
+            "zeros" => InitSpec::Zeros,
+            "ones" => InitSpec::Ones,
+            "normal" => InitSpec::Normal {
+                std: v.req("std")?.as_f64()?,
+                key: v.req("key")?.as_str()?.to_string(),
+            },
+            "eye_noise" => InitSpec::EyeNoise {
+                n: v.req("n")?.as_usize()?,
+                std: v.req("std")?.as_f64()?,
+                key: v.req("key")?.as_str()?.to_string(),
+            },
+            other => return Err(Error::Manifest(format!("unknown init kind '{other}'"))),
+        })
+    }
+}
+
+/// One entry of a flat parameter layout.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: InitSpec,
+}
+
+fn parse_layout(v: &Value) -> Result<Vec<ParamEntry>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(ParamEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                offset: e.req("offset")?.as_usize()?,
+                size: e.req("size")?.as_usize()?,
+                init: InitSpec::parse(e.req("init")?)?,
+            })
+        })
+        .collect()
+}
+
+/// Architecture block of the manifest.
+#[derive(Clone, Debug)]
+pub struct ArchInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+/// Training hyperparameters baked into the train_step HLO.
+#[derive(Clone, Debug)]
+pub struct HyperInfo {
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+/// IO shapes of the lowered graphs.
+#[derive(Clone, Debug)]
+pub struct IoInfo {
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub base_len: usize,
+    pub theta_len: usize,
+}
+
+/// Parameter-count block (paper's "# Params (%)" column).
+#[derive(Clone, Debug)]
+pub struct CountsInfo {
+    pub model_params: usize,
+    pub trainable_params: usize,
+    pub trainable_percent: f64,
+}
+
+/// PEFT method descriptor.
+#[derive(Clone, Debug)]
+pub struct MethodInfo {
+    pub name: String,
+    pub modules: Vec<String>,
+    pub hyper: Value,
+}
+
+/// Full manifest for one artifact set.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub arch: ArchInfo,
+    pub method: Option<MethodInfo>,
+    pub hyper: HyperInfo,
+    pub pretrain: bool,
+    pub io: IoInfo,
+    pub counts: CountsInfo,
+    pub base_layout: Vec<ParamEntry>,
+    pub theta_layout: Vec<ParamEntry>,
+    pub merged_modules: Vec<String>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(set_dir: &Path) -> Result<Manifest> {
+        let v = Value::parse_file(&set_dir.join("manifest.json"))?;
+        let arch_v = v.req("arch")?;
+        let arch = ArchInfo {
+            name: arch_v.req("name")?.as_str()?.to_string(),
+            vocab: arch_v.req("vocab")?.as_usize()?,
+            d_model: arch_v.req("d_model")?.as_usize()?,
+            n_layers: arch_v.req("n_layers")?.as_usize()?,
+            n_heads: arch_v.req("n_heads")?.as_usize()?,
+            d_ff: arch_v.req("d_ff")?.as_usize()?,
+            seq_len: arch_v.req("seq_len")?.as_usize()?,
+        };
+        let hyper_v = v.req("hyper")?;
+        let hyper = HyperInfo {
+            lr: hyper_v.req("lr")?.as_f64()?,
+            warmup_steps: hyper_v.req("warmup_steps")?.as_usize()?,
+            total_steps: hyper_v.req("total_steps")?.as_usize()?,
+        };
+        let io_v = v.req("io")?;
+        let io = IoInfo {
+            batch: io_v.req("batch")?.as_usize()?,
+            eval_batch: io_v.req("eval_batch")?.as_usize()?,
+            seq_len: io_v.req("seq_len")?.as_usize()?,
+            vocab: io_v.req("vocab")?.as_usize()?,
+            base_len: io_v.req("base_len")?.as_usize()?,
+            theta_len: io_v.req("theta_len")?.as_usize()?,
+        };
+        let counts_v = v.req("counts")?;
+        let counts = CountsInfo {
+            model_params: counts_v.req("model_params")?.as_usize()?,
+            trainable_params: counts_v.req("trainable_params")?.as_usize()?,
+            trainable_percent: counts_v.req("trainable_percent")?.as_f64()?,
+        };
+        let method = match v.req("method")? {
+            Value::Null => None,
+            m => Some(MethodInfo {
+                name: m.req("name")?.as_str()?.to_string(),
+                modules: m
+                    .req("modules")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| Ok(x.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+                hyper: m.req("hyper")?.clone(),
+            }),
+        };
+        let base_layout = parse_layout(v.req("base_layout")?)?;
+        let theta_layout = parse_layout(v.req("theta_layout")?)?;
+        // layout sanity
+        for (layout, total, who) in [
+            (&base_layout, io.base_len, "base"),
+            (&theta_layout, io.theta_len, "theta"),
+        ] {
+            let mut expect = 0usize;
+            for e in layout.iter() {
+                if e.offset != expect {
+                    return Err(Error::Manifest(format!(
+                        "{who} layout gap at '{}': offset {} != {}",
+                        e.name, e.offset, expect
+                    )));
+                }
+                let shape_size: usize = e.shape.iter().product::<usize>().max(1);
+                if shape_size != e.size {
+                    return Err(Error::Manifest(format!(
+                        "{who} layout size mismatch at '{}'",
+                        e.name
+                    )));
+                }
+                expect += e.size;
+            }
+            if expect != total {
+                return Err(Error::Manifest(format!(
+                    "{who} layout total {expect} != {total}"
+                )));
+            }
+        }
+        let merged_modules = v
+            .req("merged_modules")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, val)| Ok((k.clone(), val.as_str()?.to_string())))
+            .collect::<Result<_>>()?;
+        Ok(Manifest {
+            name: v.req("name")?.as_str()?.to_string(),
+            dir: set_dir.to_path_buf(),
+            arch,
+            method,
+            hyper,
+            pretrain: v.req("pretrain")?.as_bool()?,
+            io,
+            counts,
+            base_layout,
+            theta_layout,
+            merged_modules,
+            artifacts,
+        })
+    }
+
+    /// Absolute path of one artifact HLO file.
+    pub fn artifact_path(&self, kind: &str) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| Error::Manifest(format!("{}: no '{kind}' artifact", self.name)))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// List available set names under an artifacts directory.
+    pub fn list_sets(artifacts_dir: &Path) -> Result<Vec<String>> {
+        let idx = Value::parse_file(&artifacts_dir.join("index.json"))?;
+        idx.req("sets")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect()
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 runtime: loads the AOT artifacts (HLO text + manifest) produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client via
+//! the `xla` crate.  Python is never on this path.
+//!
+//! Execution model (validated empirically, DESIGN.md §3): PJRT returns
+//! one *tuple* buffer per call, so trainable state round-trips through
+//! the host each step while the frozen base parameters stay resident on
+//! device as an input buffer.  For PEFT methods the round-trip is tiny
+//! (theta is 0.01–1% of the model); for full fine-tuning it is the whole
+//! model — an honest operational reason PEFT wins, which we report in
+//! the perf benches.
+
+pub mod manifest;
+pub mod init;
+pub mod session;
+
+pub use manifest::{InitSpec, Manifest, ParamEntry};
+pub use session::{Session, TrainState};

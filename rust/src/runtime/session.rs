@@ -1,0 +1,247 @@
+//! PJRT execution session for one artifact set.
+//!
+//! Owns the compiled executables and the device-resident frozen base
+//! buffer; exposes typed calls for the four lowered graphs.  The
+//! trainable state round-trips through the host each step (PJRT returns
+//! one tuple buffer per call — see DESIGN.md §3); for PEFT methods this
+//! is 0.01–1% of the model per step.
+
+use std::path::Path;
+
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::init::init_layout;
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Trainable optimizer state held on the host between steps.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn new(theta: Vec<f32>) -> Self {
+        let n = theta.len();
+        TrainState { theta, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// Timing breakdown of the last `train_step` call (perf instrumentation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    pub upload_us: u64,
+    pub execute_us: u64,
+    pub download_us: u64,
+}
+
+pub struct Session {
+    pub man: Manifest,
+    client: PjRtClient,
+    train: Option<PjRtLoadedExecutable>,
+    eval: Option<PjRtLoadedExecutable>,
+    logits: Option<PjRtLoadedExecutable>,
+    merge: Option<PjRtLoadedExecutable>,
+    base_buf: PjRtBuffer,
+    pub last_timing: StepTiming,
+}
+
+fn now_us() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_micros() as u64
+}
+
+impl Session {
+    /// Load a set: compile requested executables and upload the base.
+    ///
+    /// `kinds` selects which graphs to compile (compilation is the
+    /// dominant startup cost); e.g. `&["train_step", "eval_loss"]`.
+    pub fn load(
+        client: &PjRtClient,
+        artifacts_dir: &Path,
+        set_name: &str,
+        base: &[f32],
+        kinds: &[&str],
+    ) -> Result<Session> {
+        let man = Manifest::load(&artifacts_dir.join(set_name))?;
+        if base.len() != man.io.base_len {
+            return Err(Error::Shape(format!(
+                "{set_name}: base len {} != manifest {}",
+                base.len(),
+                man.io.base_len
+            )));
+        }
+        let compile = |kind: &str| -> Result<Option<PjRtLoadedExecutable>> {
+            if !kinds.contains(&kind) || !man.artifacts.contains_key(kind) {
+                return Ok(None);
+            }
+            let path = man.artifact_path(kind)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::msg("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(Some(client.compile(&comp)?))
+        };
+        let train = compile("train_step")?;
+        let eval = compile("eval_loss")?;
+        let logits = compile("fwd_logits")?;
+        let merge = compile("merge")?;
+        let base_buf = client.buffer_from_host_buffer(base, &[base.len()], None)?;
+        Ok(Session {
+            man,
+            client: client.clone(),
+            train,
+            eval,
+            logits,
+            merge,
+            base_buf,
+            last_timing: StepTiming::default(),
+        })
+    }
+
+    /// Convenience: initialize the base vector for this set from a
+    /// pretrained checkpoint (or from specs when `ckpt` is None).
+    pub fn init_base(man: &Manifest, seed: u64, ckpt: Option<&[f32]>) -> Result<Vec<f32>> {
+        init_layout(&man.base_layout, seed, ckpt)
+    }
+
+    /// Initialize a fresh trainable state for this set.
+    pub fn init_state(&self, seed: u64) -> Result<TrainState> {
+        Ok(TrainState::new(init_layout(&self.man.theta_layout, seed, None)?))
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// One optimizer step.  `tokens`: `[batch, seq+1]`, `mask`:
+    /// `[batch, seq]`.  Updates `state` in place and returns the loss.
+    pub fn train_step(&mut self, state: &mut TrainState, tokens: &[i32], mask: &[f32]) -> Result<f32> {
+        let exe = self.train.as_ref().ok_or_else(|| Error::msg("train_step not compiled"))?;
+        let io = &self.man.io;
+        if tokens.len() != io.batch * (io.seq_len + 1) || mask.len() != io.batch * io.seq_len {
+            return Err(Error::Shape(format!(
+                "train_step: tokens {} mask {} vs batch {} seq {}",
+                tokens.len(),
+                mask.len(),
+                io.batch,
+                io.seq_len
+            )));
+        }
+        let t0 = now_us();
+        let pt = state.theta.len();
+        let theta = self.buf_f32(&state.theta, &[pt])?;
+        let m = self.buf_f32(&state.m, &[pt])?;
+        let v = self.buf_f32(&state.v, &[pt])?;
+        let step = self.buf_i32(&[state.step], &[])?;
+        let toks = self.buf_i32(tokens, &[io.batch, io.seq_len + 1])?;
+        let msk = self.buf_f32(mask, &[io.batch, io.seq_len])?;
+        let t1 = now_us();
+        let outs = exe.execute_b::<&PjRtBuffer>(&[
+            &self.base_buf,
+            &theta,
+            &m,
+            &v,
+            &step,
+            &toks,
+            &msk,
+        ])?;
+        let t2 = now_us();
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != 4 {
+            return Err(Error::msg(format!("train_step returned {} outputs", parts.len())));
+        }
+        parts[0].copy_raw_to(&mut state.theta)?;
+        parts[1].copy_raw_to(&mut state.m)?;
+        parts[2].copy_raw_to(&mut state.v)?;
+        let loss = parts[3].get_first_element::<f32>()?;
+        state.step += 1;
+        let t3 = now_us();
+        self.last_timing = StepTiming {
+            upload_us: t1 - t0,
+            execute_us: t2 - t1,
+            download_us: t3 - t2,
+        };
+        Ok(loss)
+    }
+
+    /// Masked eval loss over one eval batch.  Returns (loss_sum, tok_count).
+    pub fn eval_loss(&self, theta: &[f32], tokens: &[i32], mask: &[f32]) -> Result<(f32, f32)> {
+        let exe = self.eval.as_ref().ok_or_else(|| Error::msg("eval_loss not compiled"))?;
+        let io = &self.man.io;
+        let th = self.buf_f32(theta, &[theta.len()])?;
+        let toks = self.buf_i32(tokens, &[io.eval_batch, io.seq_len + 1])?;
+        let msk = self.buf_f32(mask, &[io.eval_batch, io.seq_len])?;
+        let outs = exe.execute_b::<&PjRtBuffer>(&[&self.base_buf, &th, &toks, &msk])?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        Ok((
+            parts[0].get_first_element::<f32>()?,
+            parts[1].get_first_element::<f32>()?,
+        ))
+    }
+
+    /// Forward logits for an eval batch of `[eval_batch, seq]` tokens.
+    /// Returns a flat `[eval_batch * seq * vocab]` vector.
+    pub fn fwd_logits(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let exe = self.logits.as_ref().ok_or_else(|| Error::msg("fwd_logits not compiled"))?;
+        let io = &self.man.io;
+        if tokens.len() != io.eval_batch * io.seq_len {
+            return Err(Error::Shape(format!(
+                "fwd_logits: tokens {} != {}",
+                tokens.len(),
+                io.eval_batch * io.seq_len
+            )));
+        }
+        let th = self.buf_f32(theta, &[theta.len()])?;
+        let toks = self.buf_i32(tokens, &[io.eval_batch, io.seq_len])?;
+        let outs = exe.execute_b::<&PjRtBuffer>(&[&self.base_buf, &th, &toks])?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    /// Materialize the delta matrices of every adapted module
+    /// (`[n_modules, d_out, d_in]` stacked), in `merged_modules` order.
+    pub fn merge_deltas(&self, theta: &[f32]) -> Result<Vec<Tensor>> {
+        let exe = self.merge.as_ref().ok_or_else(|| Error::msg("merge not compiled"))?;
+        let th = self.buf_f32(theta, &[theta.len()])?;
+        let outs = exe.execute_b::<&PjRtBuffer>(&[&self.base_buf, &th])?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let data = parts[0].to_vec::<f32>()?;
+        let shape = parts[0].array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        if dims.len() != 3 {
+            return Err(Error::Shape(format!("merge output dims {dims:?}")));
+        }
+        let (n, d_out, d_in) = (dims[0], dims[1], dims[2]);
+        let mut out = vec![];
+        for k in 0..n {
+            let slice = data[k * d_out * d_in..(k + 1) * d_out * d_in].to_vec();
+            out.push(Tensor::from_vec(&[d_out, d_in], slice)?);
+        }
+        Ok(out)
+    }
+
+    /// Replace the device-resident base (e.g. after merging deltas).
+    pub fn set_base(&mut self, base: &[f32]) -> Result<()> {
+        if base.len() != self.man.io.base_len {
+            return Err(Error::Shape("set_base: wrong length".into()));
+        }
+        self.base_buf = self.client.buffer_from_host_buffer(base, &[base.len()], None)?;
+        Ok(())
+    }
+}

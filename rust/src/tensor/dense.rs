@@ -1,0 +1,232 @@
+//! Dense row-major f32 tensor.
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Dense row-major tensor of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} -> {shape:?}",
+                self.shape
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// 2D element access.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Matrix multiply: self [m,k] @ other [k,n] -> [m,n].
+    /// Blocked i-k-j loop order (cache-friendly; j innermost vectorizes).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
+            return Err(Error::Shape(format!(
+                "matmul {:?} @ {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Transpose a 2D tensor.
+    pub fn t(&self) -> Result<Tensor> {
+        if self.rank() != 2 {
+            return Err(Error::Shape(format!("t() needs 2D, got {:?}", self.shape)));
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matrix-vector: self [m,k] @ v [k] -> [m].
+    pub fn matvec(&self, v: &[f32]) -> Result<Vec<f32>> {
+        if self.rank() != 2 || self.shape[1] != v.len() {
+            return Err(Error::Shape(format!(
+                "matvec {:?} @ [{}]",
+                self.shape,
+                v.len()
+            )));
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; m];
+        for i in 0..m {
+            let row = &self.data[i * k..(i + 1) * k];
+            out[i] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        Ok(out)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!("add {:?} + {:?}", self.shape, other.shape)));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!("sub {:?} - {:?}", self.shape, other.shape)));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let i7 = Tensor::eye(7);
+        let out = a.matmul(&i7).unwrap();
+        assert!(a.max_abs_diff(&out) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[4, 9], 1.0, &mut rng);
+        assert_eq!(a, a.t().unwrap().t().unwrap());
+    }
+
+    #[test]
+    fn matmul_transpose_consistency() {
+        // (A B)^T == B^T A^T
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let lhs = a.matmul(&b).unwrap().t().unwrap();
+        let rhs = b.t().unwrap().matmul(&a.t().unwrap()).unwrap();
+        assert!(lhs.max_abs_diff(&rhs) < 1e-5);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[6, 3], 1.0, &mut rng);
+        let v = vec![1.0, -2.0, 0.5];
+        let mv = a.matvec(&v).unwrap();
+        let vm = Tensor::from_vec(&[3, 1], v).unwrap();
+        let mm = a.matmul(&vm).unwrap();
+        for i in 0..6 {
+            assert!((mv[i] - mm.data[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+        assert!(a.reshape(&[7]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Host tensor: a shape + contiguous `Vec<f32>` with the operations the
+//! analysis / reference paths need (matmul, transpose, axis moves).
+//! Not a performance-critical path — the heavy math runs in XLA — but
+//! implemented carefully enough for the SVD/analysis pipeline.
+
+mod dense;
+
+pub use dense::Tensor;

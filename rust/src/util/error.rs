@@ -1,0 +1,38 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,11 @@
+//! Infrastructure utilities: error type, PRNG, JSON, logging, statistics,
+//! and a minimal property-testing harness (external crates like `serde`,
+//! `proptest`, and `criterion` are unavailable in the offline vendor set,
+//! so the pieces we need are implemented and tested here).
+
+pub mod error;
+pub mod rng;
+pub mod json;
+pub mod logging;
+pub mod stats;
+pub mod proptest;

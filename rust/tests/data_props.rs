@@ -1,0 +1,301 @@
+//! Property tests over the data pipeline, batcher, metrics, JSON, and
+//! init-spec subsystems (proptest-lite).
+
+use quanta_ft::data::batcher::{pack_batch, pack_example, Sampler};
+use quanta_ft::data::metrics::{parse_last_number, token_f1};
+use quanta_ft::data::tasks::{self, Sizes};
+use quanta_ft::data::tokenizer::Tokenizer;
+use quanta_ft::data::vocab::{DIGIT0, PAD, UNK};
+use quanta_ft::data::Example;
+use quanta_ft::runtime::manifest::{InitSpec, ParamEntry};
+use quanta_ft::util::json::Value;
+use quanta_ft::util::proptest::for_all;
+use quanta_ft::util::rng::Rng;
+
+#[test]
+fn prop_every_task_every_seed_is_clean() {
+    let tok = Tokenizer::new();
+    let sizes = Sizes { train: 6, val: 3, test: 3 };
+    for_all(
+        12,
+        |rng| (tasks::TASKS[rng.below(tasks::TASKS.len())], rng.next_u64()),
+        |&(task, seed)| {
+            let data = tasks::generate(task, &tok, seed, sizes).map_err(|e| e.to_string())?;
+            for ex in data.train.iter().chain(&data.val).chain(&data.test) {
+                if ex.prompt.contains(&UNK) || ex.answer.contains(&UNK) {
+                    return Err(format!("{task}: OOV token (seed {seed})"));
+                }
+                if ex.prompt.len() + ex.answer.len() > 62 {
+                    return Err(format!("{task}: too long (seed {seed})"));
+                }
+                if ex.is_choice() {
+                    if ex.correct >= ex.options.len() {
+                        return Err(format!("{task}: bad correct index"));
+                    }
+                    if ex.options[ex.correct] != ex.answer {
+                        return Err(format!("{task}: answer != gold option"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pack_example_mask_invariants() {
+    for_all(
+        100,
+        |rng| {
+            let plen = 1 + rng.below(20);
+            let alen = 1 + rng.below(6);
+            let prompt: Vec<u16> = (0..plen).map(|_| 20 + rng.below(100) as u16).collect();
+            let answer: Vec<u16> = (0..alen).map(|_| 20 + rng.below(100) as u16).collect();
+            Example::generation(prompt, answer)
+        },
+        |ex| {
+            let seq = 32;
+            let (row, mask) = pack_example(ex, seq).map_err(|e| e.to_string())?;
+            if row.len() != seq + 1 || mask.len() != seq {
+                return Err("bad shapes".into());
+            }
+            // mask sum == answer len + 1 (EOS)
+            let msum: f32 = mask.iter().sum();
+            if msum as usize != ex.answer.len() + 1 {
+                return Err(format!("mask sum {msum} != {}", ex.answer.len() + 1));
+            }
+            // masked targets are exactly the answer tokens + EOS
+            for (t, &m) in mask.iter().enumerate() {
+                let target = row[t + 1];
+                if m == 1.0 {
+                    let a0 = 1 + ex.prompt.len() + 1;
+                    let rel = t + 1 - a0;
+                    let expect = if rel < ex.answer.len() {
+                        ex.answer[rel] as i32
+                    } else {
+                        quanta_ft::data::vocab::EOS as i32
+                    };
+                    if target != expect {
+                        return Err(format!("masked target {target} != {expect}"));
+                    }
+                } else if t + 1 > 1 + ex.prompt.len() + 1 + ex.answer.len() + 1 {
+                    // beyond EOS everything is PAD
+                    if target != PAD as i32 {
+                        return Err("pad region not PAD".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pack_batch_is_row_concat() {
+    for_all(
+        30,
+        |rng| {
+            let n = 1 + rng.below(5);
+            (0..n)
+                .map(|_| {
+                    let plen = 1 + rng.below(10);
+                    Example::generation(
+                        (0..plen).map(|_| 30 + rng.below(50) as u16).collect(),
+                        vec![40 + rng.below(20) as u16],
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |exs| {
+            let refs: Vec<&Example> = exs.iter().collect();
+            let b = pack_batch(&refs, 6, 24).map_err(|e| e.to_string())?;
+            for i in 0..6 {
+                let (row, mask) = pack_example(&exs[i % exs.len()], 24).map_err(|e| e.to_string())?;
+                if b.tokens[i * 25..(i + 1) * 25] != row[..] {
+                    return Err(format!("row {i} mismatch"));
+                }
+                if b.mask[i * 24..(i + 1) * 24] != mask[..] {
+                    return Err(format!("mask {i} mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sampler_epochs_are_permutations() {
+    for_all(
+        20,
+        |rng| (2 + rng.below(50), rng.next_u64()),
+        |&(n, seed)| {
+            let mut s = Sampler::new(n, seed);
+            for _ in 0..3 {
+                let epoch = s.next_indices(n);
+                let mut sorted = epoch.clone();
+                sorted.sort_unstable();
+                if sorted != (0..n).collect::<Vec<_>>() {
+                    return Err("epoch is not a permutation".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_f1_bounds_and_exactness() {
+    for_all(
+        200,
+        |rng| {
+            let n1 = rng.below(6);
+            let n2 = 1 + rng.below(5);
+            let a: Vec<u16> = (0..n1).map(|_| rng.below(8) as u16).collect();
+            let b: Vec<u16> = (0..n2).map(|_| rng.below(8) as u16).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let f = token_f1(a, b);
+            if !(0.0..=1.0).contains(&f) {
+                return Err(format!("f1 {f} out of bounds"));
+            }
+            if a == b && token_f1(a, b) < 1.0 - 1e-12 {
+                return Err("exact match must give 1.0".into());
+            }
+            // symmetry of bag-F1
+            let g = token_f1(b, a);
+            if (f - g).abs() > 1e-12 {
+                return Err(format!("asymmetric: {f} vs {g}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parse_last_number_roundtrip() {
+    let tok = Tokenizer::new();
+    for_all(
+        100,
+        |rng| rng.below(100_000) as u64,
+        |&n| {
+            let toks = tok.encode_number(n);
+            match parse_last_number(&toks) {
+                Some(v) if v as u64 == n => Ok(()),
+                other => Err(format!("{n} parsed as {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_parse_last_number_takes_last() {
+    for_all(
+        50,
+        |rng| (rng.below(99) as i64, rng.below(99) as i64),
+        |&(a, b)| {
+            // "a <word> b" parses to b
+            let tok = Tokenizer::new();
+            let mut toks = tok.encode_number(a as u64);
+            toks.push(200);
+            toks.extend(tok.encode_number(b as u64));
+            if parse_last_number(&toks) != Some(b) {
+                return Err(format!("expected {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::Num((rng.range(-1_000_000, 1_000_000) as f64) / 64.0),
+            3 => {
+                let n = rng.below(8);
+                Value::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => Value::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_all(
+        100,
+        |rng| gen_value(rng, 0),
+        |v| {
+            let compact = Value::parse(&v.to_string_compact()).map_err(|e| e.to_string())?;
+            let pretty = Value::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+            if &compact != v || &pretty != v {
+                return Err(format!("roundtrip mismatch for {v:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_init_shared_keys_are_identical_across_layouts() {
+    // The QuanTA S/T mechanism: same (seed, key) => same values, no
+    // matter the entry order, offsets, or surrounding entries.
+    for_all(
+        50,
+        |rng| (rng.next_u64(), 2 + rng.below(5)),
+        |&(seed, n)| {
+            let e_t = ParamEntry {
+                name: "T".into(),
+                shape: vec![n * n],
+                offset: 0,
+                size: n * n,
+                init: InitSpec::EyeNoise { n, std: 0.1, key: "shared".into() },
+            };
+            let mut e_s = e_t.clone();
+            e_s.name = "S".into();
+            e_s.offset = n * n + 3;
+            let filler = ParamEntry {
+                name: "f".into(),
+                shape: vec![3],
+                offset: n * n,
+                size: 3,
+                init: InitSpec::Normal { std: 1.0, key: "f".into() },
+            };
+            let layout = vec![e_t, filler, e_s];
+            let v = quanta_ft::runtime::init::init_layout(&layout, seed, None)
+                .map_err(|e| e.to_string())?;
+            let t = &v[0..n * n];
+            let s = &v[n * n + 3..2 * (n * n) + 3];
+            if t != s {
+                return Err("shared-key entries differ".into());
+            }
+            // diagonal dominated by the +1
+            for i in 0..n {
+                if (t[i * n + i] - 1.0).abs() > 0.9 {
+                    return Err("identity part missing".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_digits_roundtrip_through_tokenizer() {
+    let tok = Tokenizer::new();
+    for_all(
+        50,
+        |rng| rng.below(10u64 as usize) as u16,
+        |&d| {
+            let ids = tok.encode(&d.to_string());
+            if ids != vec![DIGIT0 + d] {
+                return Err(format!("digit {d} -> {ids:?}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,107 @@
+//! Cross-language oracle test: the lowered HLO merge path (python L1/L2
+//! through PJRT) vs the pure-rust QuanTA reference (`quanta::circuit`).
+//!
+//! The trainable chain T and frozen shadow S are reconstructed host-side
+//! from the manifest layout, materialized with the rust reference, and
+//! compared against the `merge` artifact's output — pinning the L2
+//! einsum/kernels and the rust circuit semantics to each other.
+
+use std::path::PathBuf;
+
+use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit, Gate};
+use quanta_ft::runtime::manifest::Manifest;
+use quanta_ft::runtime::session::Session;
+use quanta_ft::tensor::Tensor;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = std::env::current_dir().unwrap().join("artifacts");
+    if p.join("index.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing");
+        None
+    }
+}
+
+/// Extract the gates named `prefix.T0..` / `prefix.S0..` from a flat
+/// vector using a manifest layout.
+fn extract_gates(
+    layout: &[quanta_ft::runtime::manifest::ParamEntry],
+    flat: &[f32],
+    prefix: &str,
+    who: &str,
+) -> Vec<Tensor> {
+    let mut gates = vec![];
+    for a in 0.. {
+        let name = format!("{prefix}.{who}{a}");
+        match layout.iter().find(|e| e.name == name) {
+            Some(e) => {
+                let data = flat[e.offset..e.offset + e.size].to_vec();
+                gates.push(Tensor::from_vec(&e.shape, data).unwrap());
+            }
+            None => break,
+        }
+    }
+    gates
+}
+
+#[test]
+fn hlo_merge_matches_rust_circuit_reference() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let man = Manifest::load(&dir.join("tiny_quanta_n4")).unwrap();
+    let dims: Vec<usize> = man
+        .method
+        .as_ref()
+        .unwrap()
+        .hyper
+        .req("dims")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let structure = all_pairs_structure(dims.len());
+
+    // random-but-reproducible base and theta (seeds must match so S = T
+    // at init; then we perturb theta so the delta is nonzero)
+    let pre_man = Manifest::load(&dir.join("pretrain_tiny")).unwrap();
+    let ckpt = quanta_ft::runtime::init::init_layout(&pre_man.theta_layout, 21, None).unwrap();
+    let base = Session::init_base(&man, 21, Some(&ckpt)).unwrap();
+    let session = Session::load(&client, &dir, "tiny_quanta_n4", &base, &["merge"]).unwrap();
+    let mut state = session.init_state(21).unwrap();
+    let mut rng = quanta_ft::util::rng::Rng::new(99);
+    for v in state.theta.iter_mut() {
+        *v += 0.05 * rng.normal() as f32;
+    }
+
+    // HLO path
+    let hlo_deltas = session.merge_deltas(&state.theta).unwrap();
+
+    // rust reference path, module by module
+    for (idx, module) in session.man.merged_modules.iter().enumerate() {
+        let t_gates = extract_gates(&man.theta_layout, &state.theta, module, "T");
+        let s_gates = extract_gates(&man.base_layout, &base, module, "S");
+        assert_eq!(t_gates.len(), structure.len(), "{module}");
+        assert_eq!(s_gates.len(), structure.len(), "{module}");
+        let mk = |gates: Vec<Tensor>| Circuit {
+            dims: dims.clone(),
+            gates: gates
+                .into_iter()
+                .zip(&structure)
+                .map(|(mat, &(m, n))| Gate { m, n, mat })
+                .collect(),
+        };
+        let full_t = mk(t_gates).full_matrix().unwrap();
+        let full_s = mk(s_gates).full_matrix().unwrap();
+        let want = full_t.sub(&full_s).unwrap();
+        let got = &hlo_deltas[idx];
+        let scale = want.frobenius_norm().max(1e-6);
+        let err = got.max_abs_diff(&want) / scale;
+        assert!(
+            err < 1e-3,
+            "{module}: HLO merge vs rust reference relative error {err}"
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have been run; they skip (pass
+//! trivially with a SKIP note) when `artifacts/` is absent so that
+//! `cargo test` works on a fresh checkout.
+
+use std::path::PathBuf;
+
+use quanta_ft::coordinator::trainer::{self, FinetuneConfig};
+use quanta_ft::data::tasks::{self, Sizes};
+use quanta_ft::data::tokenizer::Tokenizer;
+use quanta_ft::data::corpus;
+use quanta_ft::linalg::numerical_rank;
+use quanta_ft::runtime::manifest::Manifest;
+use quanta_ft::runtime::session::Session;
+use quanta_ft::util::rng::Rng;
+
+fn root() -> PathBuf {
+    std::env::current_dir().unwrap()
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let p = root().join("artifacts");
+    if p.join("index.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing");
+        None
+    }
+}
+
+fn client() -> xla::PjRtClient {
+    xla::PjRtClient::cpu().unwrap()
+}
+
+#[test]
+fn manifests_all_load_and_validate() {
+    let Some(dir) = artifacts() else { return };
+    let sets = Manifest::list_sets(&dir).unwrap();
+    assert!(sets.len() >= 30, "expected full registry, got {}", sets.len());
+    for s in &sets {
+        let man = Manifest::load(&dir.join(s)).unwrap();
+        assert_eq!(&man.name, s);
+        assert!(man.io.theta_len > 0);
+        assert!(man.artifacts.contains_key("train_step"), "{s}");
+        // PEFT sets must be parameter-efficient
+        if let Some(m) = &man.method {
+            // QuanTA configs must be extremely parameter-efficient; other
+            // PEFT baselines just have to stay below full fine-tuning.
+            if m.name == "quanta" {
+                assert!(
+                    man.counts.trainable_percent < 5.0,
+                    "{s}: {}%",
+                    man.counts.trainable_percent
+                );
+            } else if m.name != "ft" {
+                assert!(
+                    man.counts.trainable_percent < 60.0,
+                    "{s}: {}%",
+                    man.counts.trainable_percent
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pretrain_step_reduces_loss() {
+    let Some(dir) = artifacts() else { return };
+    let c = client();
+    let man = Manifest::load(&dir.join("pretrain_tiny")).unwrap();
+    let base = Session::init_base(&man, 0, None).unwrap();
+    let mut session = Session::load(&c, &dir, "pretrain_tiny", &base, &["train_step"]).unwrap();
+    let tok = Tokenizer::new();
+    let mut rng = Rng::new(0);
+    let mut state = session.init_state(0).unwrap();
+    let io = session.man.io.clone();
+    let mut losses = vec![];
+    for _ in 0..30 {
+        let (tokens, mask) = corpus::pretrain_batch(&tok, &mut rng, io.batch, io.seq_len);
+        let loss = session.train_step(&mut state, &tokens, &mask).unwrap();
+        assert!(loss.is_finite(), "loss diverged");
+        losses.push(loss);
+    }
+    // loss at init ~ ln(512) ~ 6.24; must drop measurably in 30 steps
+    assert!(losses[0] > 5.0, "initial loss {} too low", losses[0]);
+    let late: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(late < losses[0] - 0.5, "no learning: first {} late {}", losses[0], late);
+}
+
+#[test]
+fn quanta_zero_init_matches_base_logits() {
+    // The QuanTA-adapted model at init must equal the frozen model
+    // (paper Eq. 8): verify through the *compiled HLO* by comparing
+    // fwd_logits of the adapted set at theta0 with the raw base model's
+    // logits through the FT set at zero delta.
+    let Some(dir) = artifacts() else { return };
+    let c = client();
+    // base params: random-init model (no pretraining needed for identity check)
+    let man_q = Manifest::load(&dir.join("tiny_quanta_n4")).unwrap();
+    let man_ft = Manifest::load(&dir.join("tiny_ft")).unwrap();
+    let model_len = man_q.counts.model_params;
+    let pre_man = Manifest::load(&dir.join("pretrain_tiny")).unwrap();
+    let model_ckpt = {
+        // pretrain base is a dummy scalar; its theta layout is the model
+        let theta = quanta_ft::runtime::init::init_layout(&pre_man.theta_layout, 3, None).unwrap();
+        assert_eq!(theta.len(), model_len);
+        theta
+    };
+    let base_q = Session::init_base(&man_q, 7, Some(&model_ckpt)).unwrap();
+    let base_ft = Session::init_base(&man_ft, 7, Some(&model_ckpt)).unwrap();
+    let sq = Session::load(&c, &dir, "tiny_quanta_n4", &base_q, &["fwd_logits"]).unwrap();
+    let sf = Session::load(&c, &dir, "tiny_ft", &base_ft, &["fwd_logits"]).unwrap();
+    let theta_q = sq.init_state(7).unwrap().theta;
+    let theta_ft = sf.init_state(7).unwrap().theta; // zeros (FT delta)
+    assert!(theta_ft.iter().all(|&v| v == 0.0));
+    let io = sq.man.io.clone();
+    let mut rng = Rng::new(9);
+    let tokens: Vec<i32> = (0..io.eval_batch * io.seq_len)
+        .map(|_| rng.range(5, 300) as i32)
+        .collect();
+    let lq = sq.fwd_logits(&theta_q, &tokens).unwrap();
+    let lf = sf.fwd_logits(&theta_ft, &tokens).unwrap();
+    let max_diff = lq
+        .iter()
+        .zip(&lf)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "zero-init violated: max logit diff {max_diff}");
+}
+
+#[test]
+fn merge_deltas_zero_at_init_and_nonzero_after_training() {
+    let Some(dir) = artifacts() else { return };
+    let c = client();
+    let man = Manifest::load(&dir.join("tiny_quanta_n4")).unwrap();
+    let pre_man = Manifest::load(&dir.join("pretrain_tiny")).unwrap();
+    let ckpt = quanta_ft::runtime::init::init_layout(&pre_man.theta_layout, 5, None).unwrap();
+    let base = Session::init_base(&man, 11, Some(&ckpt)).unwrap();
+    let mut session = Session::load(
+        &c,
+        &dir,
+        "tiny_quanta_n4",
+        &base,
+        &["train_step", "eval_loss", "merge"],
+    )
+    .unwrap();
+    let state0 = session.init_state(11).unwrap();
+    let deltas0 = session.merge_deltas(&state0.theta).unwrap();
+    assert_eq!(deltas0.len(), session.man.merged_modules.len());
+    for d in &deltas0 {
+        assert!(d.frobenius_norm() < 1e-4, "delta at init not ~0: {}", d.frobenius_norm());
+    }
+    // few steps of fine-tuning on drop_syn -> deltas move and are HIGH RANK
+    let tok = Tokenizer::new();
+    let sizes = Sizes { train: 64, val: 8, test: 8 };
+    let data = tasks::generate("drop_syn", &tok, 77, sizes).unwrap();
+    let cfg = FinetuneConfig { seed: 11, steps: Some(20), eval_every: 1000, ..Default::default() };
+    let out = trainer::finetune(&mut session, &data, &cfg).unwrap();
+    let deltas = session.merge_deltas(&out.final_theta).unwrap();
+    let d0 = &deltas[0];
+    assert!(d0.frobenius_norm() > 1e-4, "delta did not move");
+    // Theorem 6.2 in action through the whole stack: the QuanTA update
+    // of a (128,128) matrix should have rank >> any small LoRA r.
+    let rank = numerical_rank(d0, 1e-4).unwrap();
+    assert!(rank > 32, "QuanTA update rank {rank} unexpectedly low");
+}
+
+#[test]
+fn finetune_improves_val_loss() {
+    let Some(dir) = artifacts() else { return };
+    let c = client();
+    let man = Manifest::load(&dir.join("tiny_lora_r8")).unwrap();
+    let pre_man = Manifest::load(&dir.join("pretrain_tiny")).unwrap();
+    let ckpt = quanta_ft::runtime::init::init_layout(&pre_man.theta_layout, 5, None).unwrap();
+    let base = Session::init_base(&man, 5, Some(&ckpt)).unwrap();
+    let mut session = Session::load(
+        &c,
+        &dir,
+        "tiny_lora_r8",
+        &base,
+        &["train_step", "eval_loss"],
+    )
+    .unwrap();
+    let tok = Tokenizer::new();
+    let sizes = Sizes { train: 64, val: 16, test: 8 };
+    let data = tasks::generate("rte_syn", &tok, 88, sizes).unwrap();
+    let state0 = session.init_state(0).unwrap();
+    let vl0 = trainer::val_loss(&session, &state0.theta, &data).unwrap();
+    let cfg = FinetuneConfig { seed: 0, steps: Some(40), eval_every: 20, ..Default::default() };
+    let out = trainer::finetune(&mut session, &data, &cfg).unwrap();
+    let vl1 = trainer::val_loss(&session, &out.best_theta, &data).unwrap();
+    assert!(vl1 < vl0, "val loss did not improve: {vl0} -> {vl1}");
+}

@@ -1,0 +1,58 @@
+//! End-to-end pipeline test: the full Runner path (pretrained base ->
+//! fine-tune -> evaluate) on a quick configuration.  Requires artifacts
+//! AND a cached pretrained tiny base (`quanta-ft pretrain --arch tiny`,
+//! or any bench run); skips otherwise to keep `cargo test` fast on a
+//! fresh checkout.
+
+use quanta_ft::coordinator::experiment::{RunSpec, Runner};
+use quanta_ft::data::tasks::Sizes;
+
+fn runner_with_base() -> Option<Runner> {
+    let root = std::env::current_dir().ok()?;
+    if !root.join("artifacts/index.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return None;
+    }
+    if !root.join("runs/base_tiny.bin").exists() {
+        eprintln!("SKIP: pretrained tiny base missing (run `quanta-ft pretrain --arch tiny`)");
+        return None;
+    }
+    Runner::new(&root).ok()
+}
+
+#[test]
+fn quick_finetune_beats_chance_on_choice_task() {
+    let Some(mut runner) = runner_with_base() else { return };
+    let mut spec = RunSpec::new("tiny_quanta_n4", "boolq_syn").with_seeds(&[0]);
+    spec.sizes = Sizes { train: 200, val: 40, test: 60 };
+    spec.steps = Some(120);
+    let result = runner.run(&spec).unwrap();
+    let acc = result.mean("boolq_syn");
+    assert!(acc > 0.55, "quanta fine-tune stuck at chance: {acc}");
+}
+
+#[test]
+fn results_cache_roundtrip() {
+    let Some(mut runner) = runner_with_base() else { return };
+    let mut spec = RunSpec::new("tiny_lora_r8", "rte_syn").with_seeds(&[0]);
+    spec.sizes = Sizes { train: 120, val: 30, test: 40 };
+    spec.steps = Some(60);
+    let r1 = runner.run(&spec).unwrap();
+    // second call must come from the results/ cache and agree exactly
+    let t0 = std::time::Instant::now();
+    let r2 = runner.run(&spec).unwrap();
+    assert!(t0.elapsed().as_secs_f64() < 2.0, "cache miss on identical spec");
+    assert_eq!(r1.per_task, r2.per_task);
+    assert_eq!(r1.trainable_params, r2.trainable_params);
+}
+
+#[test]
+fn base_model_near_chance_before_finetune() {
+    let Some(mut runner) = runner_with_base() else { return };
+    // rte_syn is a 2-way choice; the pretrained-but-not-finetuned model
+    // should sit near 50% (the Table-1 "Base" row behaviour).
+    let acc = runner
+        .eval_base("tiny_lora_r8", "rte_syn", Sizes { train: 10, val: 10, test: 80 })
+        .unwrap();
+    assert!(acc > 0.2 && acc < 0.8, "base acc {acc} implausible");
+}

@@ -1,0 +1,233 @@
+//! Property-based tests for the paper's theorems (§6 / App. C), via the
+//! pure-rust QuanTA reference and the proptest-lite harness.
+
+use quanta_ft::linalg::{numerical_rank, Svd};
+use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit};
+use quanta_ft::quanta::theorems::{
+    check_rank_representation, circuit_with_gate_ranks, cnot_layer_fit_residual,
+    cnot_layer_member, lora_product_rank, rank_bounds, universality_residual,
+};
+use quanta_ft::tensor::Tensor;
+use quanta_ft::util::proptest::for_all;
+use quanta_ft::util::rng::Rng;
+
+/// Random circuit generator: 2-4 axes of dim 2-4, random non-empty
+/// gate structure drawn from the all-pairs set.
+fn gen_circuit(rng: &mut Rng) -> Circuit {
+    let n_axes = 2 + rng.below(3);
+    let dims: Vec<usize> = (0..n_axes).map(|_| 2 + rng.below(3)).collect();
+    let all = all_pairs_structure(n_axes);
+    let mut structure: Vec<(usize, usize)> = all
+        .iter()
+        .filter(|_| rng.below(2) == 0)
+        .copied()
+        .collect();
+    if structure.is_empty() {
+        structure.push(all[rng.below(all.len())]);
+    }
+    Circuit::random(&dims, &structure, 0.4, rng).unwrap()
+}
+
+#[test]
+fn prop_rank_representation_bounds_hold() {
+    // Theorem 6.2 (Eq. 10) on random circuits with random gate-rank
+    // truncations.
+    for_all(
+        60,
+        |rng| {
+            let c = gen_circuit(rng);
+            let ranks: Vec<usize> = c
+                .gates
+                .iter()
+                .map(|g| 1 + rng.below(g.mat.shape[0]))
+                .collect();
+            let dims = c.dims.clone();
+            let structure: Vec<(usize, usize)> = c.gates.iter().map(|g| (g.m, g.n)).collect();
+            let mut r2 = Rng::new(rng.next_u64());
+            circuit_with_gate_ranks(&dims, &structure, &ranks, &mut r2).unwrap()
+        },
+        |c| {
+            let (granks, frank, bounds) =
+                check_rank_representation(c, 1e-6).map_err(|e| e.to_string())?;
+            let b2 = rank_bounds(c, &granks);
+            if b2 != bounds {
+                return Err("bounds not deterministic".into());
+            }
+            if (frank as i64) > bounds.upper {
+                return Err(format!(
+                    "rank {frank} above upper bound {} (gate ranks {granks:?}, dims {:?})",
+                    bounds.upper, c.dims
+                ));
+            }
+            if (frank as i64) < bounds.lower {
+                return Err(format!(
+                    "rank {frank} below lower bound {} (gate ranks {granks:?}, dims {:?})",
+                    bounds.lower, c.dims
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_full_rank_gates_full_rank_chain() {
+    // Theorem 6.2 special case: all gates full rank => chain full rank.
+    for_all(40, gen_circuit, |c| {
+        let full = c.full_matrix().map_err(|e| e.to_string())?;
+        let d = c.total_dim();
+        let r = numerical_rank(&full, 1e-6).map_err(|e| e.to_string())?;
+        if r != d {
+            return Err(format!("full-rank chain has rank {r} < {d}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_apply_equals_full_matrix() {
+    // Eq. 5 vs Eq. 7 consistency on random circuits + random inputs.
+    for_all(
+        40,
+        |rng| {
+            let c = gen_circuit(rng);
+            let d = c.total_dim();
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x, 1.0);
+            (c, x)
+        },
+        |(c, x)| {
+            let y1 = c.apply(x).map_err(|e| e.to_string())?;
+            let full = c.full_matrix().map_err(|e| e.to_string())?;
+            let y2 = full.matvec(x).map_err(|e| e.to_string())?;
+            for (a, b) in y1.iter().zip(&y2) {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("apply/full mismatch: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_universality_svd_residual() {
+    // Theorem 6.1's constructive core: random matrices decompose exactly.
+    for_all(
+        30,
+        |rng| {
+            let m = [4usize, 8, 16][rng.below(3)];
+            Tensor::randn(&[m, m], 1.0, rng)
+        },
+        |w| {
+            let r = universality_residual(w).map_err(|e| e.to_string())?;
+            if r > 1e-4 {
+                return Err(format!("SVD residual {r}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lora_composition_closed() {
+    // The contrast in Theorem 6.3's discussion: products of rank<=r
+    // updates stay rank<=r (closure), for random r and sizes.
+    for_all(
+        30,
+        |rng| (1 + rng.below(4), 8 + rng.below(8), rng.next_u64()),
+        |&(r, n, seed)| {
+            let (r1, rp) = lora_product_rank(r, n, seed).map_err(|e| e.to_string())?;
+            if r1 > r {
+                return Err(format!("factor rank {r1} > {r}"));
+            }
+            if rp > r {
+                return Err(format!("product rank {rp} escaped the LoRA set (r={r})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quanta_composition_open() {
+    // Theorem 6.3: products of random single-CNOT-layer members are
+    // (generically) OUTSIDE the single-layer family, while members fit
+    // themselves.  Grid-search fit at 2 qubits.
+    for_all(
+        6,
+        |rng| {
+            let angles: Vec<f32> = (0..8)
+                .map(|_| (rng.uniform() * std::f64::consts::TAU) as f32)
+                .collect();
+            angles
+        },
+        |angles| {
+            let m1 = cnot_layer_member(angles[0], angles[1], angles[2], angles[3]);
+            let m2 = cnot_layer_member(angles[4], angles[5], angles[6], angles[7]);
+            let prod = m1.matmul(&m2).map_err(|e| e.to_string())?;
+            let self_fit = cnot_layer_fit_residual(&m1, 16);
+            let prod_fit = cnot_layer_fit_residual(&prod, 16);
+            // members fit to grid resolution; products generically do not
+            if self_fit > 0.6 {
+                return Err(format!("member did not fit its own family: {self_fit}"));
+            }
+            if prod_fit < self_fit {
+                return Err(format!(
+                    "product fit better than member: {prod_fit} < {self_fit}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_svd_reconstruction() {
+    for_all(
+        40,
+        |rng| {
+            let m = 3 + rng.below(14);
+            let n = 3 + rng.below(14);
+            Tensor::randn(&[m, n], 1.0, rng)
+        },
+        |a| {
+            let svd = Svd::compute(a).map_err(|e| e.to_string())?;
+            let rec = svd.reconstruct().map_err(|e| e.to_string())?;
+            let err = a.max_abs_diff(&rec) / a.frobenius_norm().max(1e-6);
+            if err > 1e-4 {
+                return Err(format!("reconstruction error {err}"));
+            }
+            for w in svd.s.windows(2) {
+                if w[0] < w[1] {
+                    return Err("singular values unsorted".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_param_count_formula_uniform() {
+    // paper §6: uniform axes, all pairs => N(N-1)/2 * d^{4/N} params.
+    for_all(
+        20,
+        |rng| {
+            let n = 2 + rng.below(3);
+            let d_axis = 2 + rng.below(3);
+            (n, d_axis, rng.next_u64())
+        },
+        |&(n, d_axis, seed)| {
+            let dims = vec![d_axis; n];
+            let structure = all_pairs_structure(n);
+            let mut rng = Rng::new(seed);
+            let c = Circuit::random(&dims, &structure, 0.1, &mut rng).unwrap();
+            let expect = n * (n - 1) / 2 * (d_axis as u64).pow(4) as usize;
+            if c.param_count() != expect {
+                return Err(format!("{} != {expect}", c.param_count()));
+            }
+            Ok(())
+        },
+    );
+}
