@@ -1,9 +1,14 @@
-//! §Perf microbenches: step latency breakdown (upload / execute /
-//! download), per-method step cost, eval-forward throughput, and host-
-//! side pipeline costs (batch assembly, option-row packing, SVD).
+//! §Perf microbenches: circuit-engine micro-comparison (plan-cached
+//! batched engine vs the seed basis-vector reference), step latency
+//! breakdown (upload / execute / download), per-method step cost,
+//! eval-forward throughput, and host-side pipeline costs (batch
+//! assembly, option-row packing, SVD).
 //!
 //! This is the harness behind EXPERIMENTS.md §Perf: run before and after
-//! each optimization to record the deltas.
+//! each optimization to record the deltas.  The circuit-engine section
+//! needs no artifacts and always runs; it writes a machine-readable
+//! `BENCH_quanta_engine.json` at the repository root so the engine's
+//! perf trajectory is tracked from PR to PR.
 
 use quanta_ft::bench::{banner, bench};
 use quanta_ft::coordinator::experiment::require_artifacts;
@@ -12,13 +17,199 @@ use quanta_ft::data::batcher::pack_batch;
 use quanta_ft::data::tasks::{self, Sizes};
 use quanta_ft::data::tokenizer::Tokenizer;
 use quanta_ft::linalg::Svd;
+use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit};
 use quanta_ft::runtime::manifest::Manifest;
 use quanta_ft::runtime::session::Session;
 use quanta_ft::tensor::Tensor;
+use quanta_ft::util::json::Value;
 use quanta_ft::util::rng::Rng;
+
+/// The seed implementation, kept verbatim as the perf baseline and
+/// correctness oracle: per-gate offset tables re-derived by scanning all
+/// `d` flat indices on every call, one vector at a time, full matrix by
+/// `d` sequential basis-vector applications.
+mod seed_ref {
+    use quanta_ft::quanta::circuit::Circuit;
+    use quanta_ft::tensor::Tensor;
+
+    fn strides(dims: &[usize]) -> Vec<usize> {
+        let n = dims.len();
+        let mut s = vec![1usize; n];
+        for i in (0..n.saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * dims[i + 1];
+        }
+        s
+    }
+
+    pub fn apply(c: &Circuit, x: &[f32]) -> Vec<f32> {
+        let d: usize = c.dims.iter().product();
+        let strides = strides(&c.dims);
+        let mut h = x.to_vec();
+        for g in &c.gates {
+            let (dm, dn) = (c.dims[g.m], c.dims[g.n]);
+            let (sm, sn) = (strides[g.m], strides[g.n]);
+            let mut out = vec![0.0f32; d];
+            let mut rest_offsets = Vec::with_capacity(d / (dm * dn));
+            for flat in 0..d {
+                let im = (flat / sm) % dm;
+                let in_ = (flat / sn) % dn;
+                if im == 0 && in_ == 0 {
+                    rest_offsets.push(flat);
+                }
+            }
+            for &base in &rest_offsets {
+                for i_m in 0..dm {
+                    for i_n in 0..dn {
+                        let row = i_m * dn + i_n;
+                        let mut acc = 0.0f32;
+                        for j_m in 0..dm {
+                            for j_n in 0..dn {
+                                acc += g.mat.data[row * (dm * dn) + j_m * dn + j_n]
+                                    * h[base + j_m * sm + j_n * sn];
+                            }
+                        }
+                        out[base + i_m * sm + i_n * sn] = acc;
+                    }
+                }
+            }
+            h = out;
+        }
+        h
+    }
+
+    pub fn full_matrix(c: &Circuit) -> Tensor {
+        let d: usize = c.dims.iter().product();
+        let mut out = Tensor::zeros(&[d, d]);
+        let mut e = vec![0.0f32; d];
+        for j in 0..d {
+            e[j] = 1.0;
+            let col = apply(c, &e);
+            e[j] = 0.0;
+            for i in 0..d {
+                out.data[i * d + j] = col[i];
+            }
+        }
+        out
+    }
+}
+
+/// Circuit-engine microbench: the acceptance workload of the engine PR
+/// (d=1024, dims [8,8,16], all-pairs) — `full_matrix` and a 64-vector
+/// panel, engine vs seed reference, parity asserted at 1e-4.
+fn engine_bench() {
+    banner("quanta_engine", "plan-cached batched circuit engine vs seed reference");
+    let dims = vec![8usize, 8, 16];
+    let structure = all_pairs_structure(dims.len());
+    let batch = 64usize;
+    let mut rng = Rng::new(0xE46);
+    let c = Circuit::random(&dims, &structure, 0.02, &mut rng).unwrap();
+    let d = c.total_dim();
+    let plan = c.plan().unwrap();
+
+    // -- parity gates --------------------------------------------------
+    let full_engine = plan.full_matrix().unwrap();
+    let full_seed = seed_ref::full_matrix(&c);
+    let full_diff = full_seed.max_abs_diff(&full_engine);
+    assert!(full_diff < 1e-4, "full_matrix diverged from seed path: {full_diff}");
+
+    let mut xs = vec![0.0f32; batch * d];
+    rng.fill_normal(&mut xs, 1.0);
+    let ys = plan.apply_batch(&xs, batch).unwrap();
+    let mut batch_diff = 0.0f32;
+    for b in 0..batch {
+        let y = seed_ref::apply(&c, &xs[b * d..(b + 1) * d]);
+        for (got, want) in ys[b * d..(b + 1) * d].iter().zip(&y) {
+            batch_diff = batch_diff.max((got - want).abs());
+        }
+    }
+    assert!(batch_diff < 1e-4, "apply_batch diverged from seed path: {batch_diff}");
+
+    // -- timings -------------------------------------------------------
+    let st_plan = bench(2, 50, || {
+        let _ = c.plan().unwrap();
+    });
+    let st_full_seed = bench(0, 3, || {
+        let _ = seed_ref::full_matrix(&c);
+    });
+    let st_full_engine = bench(1, 10, || {
+        let _ = plan.full_matrix().unwrap();
+    });
+    let st_batch_seed = bench(1, 5, || {
+        for b in 0..batch {
+            let _ = seed_ref::apply(&c, &xs[b * d..(b + 1) * d]);
+        }
+    });
+    let st_batch_engine = bench(2, 20, || {
+        let _ = plan.apply_batch(&xs, batch).unwrap();
+    });
+
+    let full_speedup = st_full_seed.mean_us / st_full_engine.mean_us;
+    let batch_speedup = st_batch_seed.mean_us / st_batch_engine.mean_us;
+    println!(
+        "circuit: d={d} dims {dims:?}, {} gates, {} multiplies/vector",
+        plan.gates.len(),
+        plan.apply_flops()
+    );
+    println!("plan build:                          {st_plan}");
+    println!("full_matrix seed (d matvecs):        {st_full_seed}");
+    println!("full_matrix engine (identity panels):{st_full_engine}");
+    println!("  => speedup {full_speedup:.1}x, max|diff| {full_diff:.2e}");
+    println!("apply x{batch} seed (sequential):       {st_batch_seed}");
+    println!("apply_batch({batch}) engine:            {st_batch_engine}");
+    println!("  => speedup {batch_speedup:.1}x, max|diff| {batch_diff:.2e}");
+
+    // -- machine-readable record ---------------------------------------
+    let record = Value::obj(vec![
+        ("bench", Value::Str("quanta_engine".into())),
+        ("schema_version", Value::Num(1.0)),
+        ("substrate", Value::Str("rust".into())),
+        (
+            "config",
+            Value::obj(vec![
+                ("dims", Value::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+                ("structure", Value::Str("all_pairs".into())),
+                ("d", Value::Num(d as f64)),
+                ("batch", Value::Num(batch as f64)),
+                ("gates", Value::Num(plan.gates.len() as f64)),
+                ("apply_flops", Value::Num(plan.apply_flops() as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Value::obj(vec![
+                ("plan_build_us", Value::Num(st_plan.mean_us)),
+                (
+                    "full_matrix",
+                    Value::obj(vec![
+                        ("seed_us", Value::Num(st_full_seed.mean_us)),
+                        ("engine_us", Value::Num(st_full_engine.mean_us)),
+                        ("speedup", Value::Num(full_speedup)),
+                        ("max_abs_diff", Value::Num(full_diff as f64)),
+                    ]),
+                ),
+                (
+                    "apply_batch",
+                    Value::obj(vec![
+                        ("seed_sequential_us", Value::Num(st_batch_seed.mean_us)),
+                        ("engine_us", Value::Num(st_batch_engine.mean_us)),
+                        ("speedup", Value::Num(batch_speedup)),
+                        ("max_abs_diff", Value::Num(batch_diff as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+    ]);
+    // land next to the workspace root regardless of bench CWD
+    let out_path = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|m| std::path::PathBuf::from(m).join("..").join("BENCH_quanta_engine.json"))
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_quanta_engine.json"));
+    std::fs::write(&out_path, record.to_string_pretty() + "\n").unwrap();
+    println!("wrote {}", out_path.display());
+}
 
 fn main() {
     banner("perf_runtime", "L3 hot-path microbenches");
+    engine_bench();
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();
     let tok = Tokenizer::new();

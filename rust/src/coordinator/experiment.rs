@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use xla::PjRtClient;
+use crate::runtime::pjrt::PjRtClient;
 
 use crate::coordinator::checkpoint;
 use crate::coordinator::evaluator;

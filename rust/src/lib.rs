@@ -13,7 +13,14 @@
 //!
 //! The crate also contains a *pure-rust* QuanTA reference ([`quanta`])
 //! used to property-test the paper's theorems (universality, rank
-//! representation, composition openness) independently of the HLO path.
+//! representation, composition openness) independently of the HLO path,
+//! executed through a plan-cached batched circuit engine
+//! ([`quanta::plan`], DESIGN.md §4).
+
+// The numerical kernels index multiple flat buffers with explicit
+// arithmetic by design (DESIGN.md §4); iterator rewrites obscure the
+// stride math without changing the generated code.
+#![allow(clippy::needless_range_loop)]
 
 pub mod util;
 pub mod tensor;

@@ -41,20 +41,46 @@ pub fn subspace_similarity(v1: &Tensor, v2: &Tensor, i: usize, j: usize) -> f64 
 /// Computed incrementally: phi numerator at (i, j) is a 2D prefix sum of
 /// squared dot products, so the full grid costs one `k1 x k2` Gram
 /// matrix rather than `k1*k2` Frobenius norms.
-pub fn subspace_similarity_grid(dw1: &Tensor, dw2: &Tensor, k1: usize, k2: usize) -> Result<Vec<Vec<f64>>> {
+pub fn subspace_similarity_grid(
+    dw1: &Tensor,
+    dw2: &Tensor,
+    k1: usize,
+    k2: usize,
+) -> Result<Vec<Vec<f64>>> {
     let svd1 = Svd::compute(dw1)?;
     let svd2 = Svd::compute(dw2)?;
     let k1 = k1.min(svd1.v.shape[1]);
     let k2 = k2.min(svd2.v.shape[1]);
     let n = svd1.v.shape[0];
     let (c1, c2) = (svd1.v.shape[1], svd2.v.shape[1]);
+    // Pre-transpose the leading singular directions into contiguous f64
+    // rows (`vXt[a*n + r] = VX[r, a]`): the k1·k2 Gram dots then stream
+    // two contiguous buffers instead of striding the (n, k) tensors by
+    // k per element.  Accumulation stays f64 over ascending r, matching
+    // `subspace_similarity` bit-for-bit.
+    let mut v1t = vec![0.0f64; k1 * n];
+    for a in 0..k1 {
+        let row = &mut v1t[a * n..(a + 1) * n];
+        for (r, slot) in row.iter_mut().enumerate() {
+            *slot = svd1.v.data[r * c1 + a] as f64;
+        }
+    }
+    let mut v2t = vec![0.0f64; k2 * n];
+    for b in 0..k2 {
+        let row = &mut v2t[b * n..(b + 1) * n];
+        for (r, slot) in row.iter_mut().enumerate() {
+            *slot = svd2.v.data[r * c2 + b] as f64;
+        }
+    }
     // gram[a][b] = (v1_a . v2_b)^2
     let mut gram = vec![vec![0.0f64; k2]; k1];
     for (a, row) in gram.iter_mut().enumerate() {
+        let va = &v1t[a * n..(a + 1) * n];
         for (b, cell) in row.iter_mut().enumerate() {
+            let vb = &v2t[b * n..(b + 1) * n];
             let mut dot = 0.0f64;
-            for r in 0..n {
-                dot += svd1.v.data[r * c1 + a] as f64 * svd2.v.data[r * c2 + b] as f64;
+            for (x, y) in va.iter().zip(vb) {
+                dot += x * y;
             }
             *cell = dot * dot;
         }

@@ -29,13 +29,21 @@ impl Svd {
             let svd_t = Svd::compute(&a.t()?)?;
             return Ok(Svd { u: svd_t.v, s: svd_t.s, v: svd_t.u });
         }
-        // Work in f64, column-major columns.
-        let mut cols: Vec<Vec<f64>> = (0..n)
-            .map(|j| (0..m).map(|i| a.data[i * n + j] as f64).collect())
-            .collect();
-        let mut v = vec![vec![0.0f64; n]; n];
-        for (j, row) in v.iter_mut().enumerate() {
-            row[j] = 1.0;
+        // Work in f64 on one flat column-major buffer (column j at
+        // `cols[j*m .. (j+1)*m]`): the Jacobi inner loop then rotates
+        // two contiguous slices instead of chasing `Vec<Vec<f64>>`
+        // pointers, which vectorizes and stays cache-resident.
+        let mut cols = vec![0.0f64; m * n];
+        for j in 0..n {
+            let col = &mut cols[j * m..(j + 1) * m];
+            for (i, slot) in col.iter_mut().enumerate() {
+                *slot = a.data[i * n + j] as f64;
+            }
+        }
+        // accumulated right vectors, V column j at `v[j*n .. (j+1)*n]`
+        let mut v = vec![0.0f64; n * n];
+        for j in 0..n {
+            v[j * n + j] = 1.0;
         }
 
         let eps = 1e-14;
@@ -44,11 +52,15 @@ impl Svd {
             let mut off = 0.0f64;
             for p in 0..n {
                 for q in (p + 1)..n {
+                    // q > p, so split_at_mut yields disjoint column slices
+                    let (lo, hi) = cols.split_at_mut(q * m);
+                    let colp = &mut lo[p * m..(p + 1) * m];
+                    let colq = &mut hi[..m];
                     let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
-                    for i in 0..m {
-                        app += cols[p][i] * cols[p][i];
-                        aqq += cols[q][i] * cols[q][i];
-                        apq += cols[p][i] * cols[q][i];
+                    for (xp, xq) in colp.iter().zip(colq.iter()) {
+                        app += xp * xp;
+                        aqq += xq * xq;
+                        apq += xp * xq;
                     }
                     if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
                         continue;
@@ -59,15 +71,18 @@ impl Svd {
                     let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
                     let c = 1.0 / (1.0 + t * t).sqrt();
                     let s = c * t;
-                    for i in 0..m {
-                        let (xp, xq) = (cols[p][i], cols[q][i]);
-                        cols[p][i] = c * xp - s * xq;
-                        cols[q][i] = s * xp + c * xq;
+                    for (xp, xq) in colp.iter_mut().zip(colq.iter_mut()) {
+                        let (op, oq) = (*xp, *xq);
+                        *xp = c * op - s * oq;
+                        *xq = s * op + c * oq;
                     }
-                    for i in 0..n {
-                        let (vp, vq) = (v[p][i], v[q][i]);
-                        v[p][i] = c * vp - s * vq;
-                        v[q][i] = s * vp + c * vq;
+                    let (vlo, vhi) = v.split_at_mut(q * n);
+                    let vp = &mut vlo[p * n..(p + 1) * n];
+                    let vq = &mut vhi[..n];
+                    for (yp, yq) in vp.iter_mut().zip(vq.iter_mut()) {
+                        let (ov, oq) = (*yp, *yq);
+                        *yp = c * ov - s * oq;
+                        *yq = s * ov + c * oq;
                     }
                 }
             }
@@ -78,9 +93,8 @@ impl Svd {
 
         // Extract singular values (column norms) and sort descending.
         let mut order: Vec<usize> = (0..n).collect();
-        let norms: Vec<f64> = cols
-            .iter()
-            .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        let norms: Vec<f64> = (0..n)
+            .map(|j| cols[j * m..(j + 1) * m].iter().map(|x| x * x).sum::<f64>().sqrt())
             .collect();
         order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
 
@@ -92,12 +106,14 @@ impl Svd {
             let norm = norms[oldj];
             s.push(norm);
             if norm > 1e-300 {
-                for i in 0..m {
-                    u.data[i * k + newj] = (cols[oldj][i] / norm) as f32;
+                let col = &cols[oldj * m..(oldj + 1) * m];
+                for (i, &x) in col.iter().enumerate() {
+                    u.data[i * k + newj] = (x / norm) as f32;
                 }
             }
-            for i in 0..n {
-                vt.data[i * k + newj] = v[oldj][i] as f32;
+            let vcol = &v[oldj * n..(oldj + 1) * n];
+            for (i, &x) in vcol.iter().enumerate() {
+                vt.data[i * k + newj] = x as f32;
             }
         }
         Ok(Svd { u, s, v: vt })
@@ -199,6 +215,24 @@ mod tests {
             let a = b.matmul(&c).unwrap();
             assert_eq!(numerical_rank(&a, 1e-6).unwrap(), r);
         }
+    }
+
+    #[test]
+    fn rank_deficient_reconstruction() {
+        // rank-3 12x9 matrix: the thin SVD must reconstruct it, report
+        // (near-)zero trailing singular values, and keep U orthonormal
+        // on the numerically nonzero columns.
+        let mut rng = Rng::new(14);
+        let b = Tensor::randn(&[12, 3], 1.0, &mut rng);
+        let c = Tensor::randn(&[3, 9], 1.0, &mut rng);
+        let a = b.matmul(&c).unwrap();
+        let svd = Svd::compute(&a).unwrap();
+        assert!(reconstruct_err(&a) < 1e-5);
+        let smax = svd.s[0];
+        for &s in &svd.s[3..] {
+            assert!(s < 1e-8 * smax, "trailing singular value {s} vs smax {smax}");
+        }
+        assert_eq!(numerical_rank(&a, 1e-6).unwrap(), 3);
     }
 
     #[test]

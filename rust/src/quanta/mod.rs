@@ -7,7 +7,9 @@
 //! paper's complexity formulas for reporting.
 
 pub mod circuit;
+pub mod plan;
 pub mod theorems;
 
 pub use circuit::{all_pairs_structure, Circuit, Gate};
+pub use plan::CircuitPlan;
 pub use theorems::{rank_bounds, RankBounds};

@@ -1,0 +1,474 @@
+//! Plan-cached batched circuit execution engine.
+//!
+//! The seed implementation re-derived per-gate offset tables by scanning
+//! all `d` flat indices on every `apply`, and materialized the full
+//! operator by `d` sequential matvecs.  This module precomputes, once
+//! per circuit, everything that depends only on the circuit *structure*:
+//!
+//! * row-major strides of the reshaped hidden tensor,
+//! * per-gate **rest-offset tables** — the flat base offset of every
+//!   multi-index over the non-gate axes, enumerated in
+//!   `O(d / (d_m d_n))` by mixed-radix odometer stepping instead of an
+//!   `O(d)` scan-and-filter,
+//! * per-gate **gather tables** — the `d_m·d_n` offsets of the gate-axis
+//!   positions relative to a rest base (row `i_m·d_n + i_n`, matching
+//!   the gate matrix layout of paper Eq. 4),
+//! * a snapshot of each gate matrix.
+//!
+//! On top of the plan, [`CircuitPlan::apply_batch`] runs the whole gate
+//! chain over a panel of vectors as blocked
+//! `(d_m·d_n) × (rest·batch)` GEMMs: gather a block of columns into
+//! scratch, multiply by the gate matrix with a vectorizable
+//! i-p-c kernel, scatter back — double-buffered scratch, zero per-gate
+//! allocation.  Panels are split across threads per vector (vectors are
+//! independent through the chain), so results are bitwise identical for
+//! any thread count or chunking.  [`CircuitPlan::full_matrix`] drives
+//! `apply_batch` over identity panels (paper Eq. 7) instead of `d`
+//! sequential matvecs.
+
+use crate::quanta::circuit::Circuit;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Column-block width of the gather/GEMM/scatter pipeline.  With the
+/// largest gate of a `d=1024` all-pairs circuit (`d_m·d_n = 128`) the
+/// two scratch panels occupy `2 · 128 · 64 · 4 B = 64 KiB` — inside L2.
+const BLOCK_COLS: usize = 64;
+
+/// Column count of one `full_matrix` identity panel (bounds peak memory
+/// at `2 · PANEL_COLS · d` floats while keeping enough columns per GEMM).
+const PANEL_COLS: usize = 256;
+
+/// Serial cutoff: chains cheaper than this many multiplies
+/// (`batch · d · Σ d_m d_n`, the paper §6 apply cost) run single-threaded.
+const PAR_MIN_FLOPS: usize = 1 << 20;
+
+/// Precomputed execution state for one gate.
+#[derive(Clone, Debug)]
+pub struct GatePlan {
+    /// Gate matrix snapshot, `(dmn, dmn)` row-major.
+    pub mat: Vec<f32>,
+    /// `d_m · d_n` — rows/cols of the gate matrix.
+    pub dmn: usize,
+    /// Flat base offset of every rest multi-index (gate axes zeroed).
+    pub rest: Vec<usize>,
+    /// Offset of gate row `i_m·d_n + i_n` relative to a rest base:
+    /// `i_m·s_m + i_n·s_n`.
+    pub gather: Vec<usize>,
+}
+
+/// Precomputed execution plan for a circuit: build once with
+/// [`CircuitPlan::new`] (or [`Circuit::plan`]), reuse across any number
+/// of `apply` / `apply_batch` / `full_matrix` calls.  The plan snapshots
+/// the gate matrices — rebuild it after mutating the circuit.
+#[derive(Clone, Debug)]
+pub struct CircuitPlan {
+    pub d: usize,
+    pub dims: Vec<usize>,
+    /// Row-major strides of the reshaped hidden tensor.
+    pub strides: Vec<usize>,
+    pub gates: Vec<GatePlan>,
+    max_dmn: usize,
+    /// `Σ_α d_m d_n` — per-element chain cost (paper §6).
+    sum_dmn: usize,
+}
+
+/// Reusable gather/product buffers for one worker; sized for the widest
+/// gate so no allocation happens inside the gate loop.  Internal to the
+/// engine: workers create one via [`CircuitPlan::scratch`].
+struct Scratch {
+    gathered: Vec<f32>,
+    product: Vec<f32>,
+    bases: Vec<usize>,
+}
+
+/// Row-major strides for `dims`.
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let n = dims.len();
+    let mut s = vec![1usize; n];
+    for i in (0..n.saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Enumerate the flat offsets of all multi-indices over the axes *not*
+/// in `{m, n}` by mixed-radix odometer stepping — `O(d/(d_m d_n))`
+/// total, never touching the other `d - d/(d_m d_n)` flat indices.
+fn rest_offsets(dims: &[usize], strides: &[usize], m: usize, n: usize) -> Vec<usize> {
+    let axes: Vec<usize> = (0..dims.len()).filter(|&a| a != m && a != n).collect();
+    let count: usize = axes.iter().map(|&a| dims[a]).product();
+    let mut out = Vec::with_capacity(count);
+    let mut idx = vec![0usize; axes.len()];
+    let mut flat = 0usize;
+    loop {
+        out.push(flat);
+        // increment the odometer from the last (fastest) axis
+        let mut k = axes.len();
+        loop {
+            if k == 0 {
+                debug_assert_eq!(out.len(), count);
+                return out;
+            }
+            k -= 1;
+            let a = axes[k];
+            idx[k] += 1;
+            flat += strides[a];
+            if idx[k] < dims[a] {
+                break;
+            }
+            flat -= strides[a] * dims[a];
+            idx[k] = 0;
+        }
+    }
+}
+
+impl CircuitPlan {
+    pub fn new(circuit: &Circuit) -> Result<CircuitPlan> {
+        let dims = circuit.dims.clone();
+        let d: usize = dims.iter().product();
+        let strides = strides_of(&dims);
+        let mut gates = Vec::with_capacity(circuit.gates.len());
+        for g in &circuit.gates {
+            if g.m >= dims.len() || g.n >= dims.len() || g.m == g.n {
+                return Err(Error::Shape(format!(
+                    "plan: bad gate axes ({}, {}) for dims {dims:?}",
+                    g.m, g.n
+                )));
+            }
+            let (dm, dn) = (dims[g.m], dims[g.n]);
+            let dmn = dm * dn;
+            if g.mat.shape != [dmn, dmn] {
+                return Err(Error::Shape(format!(
+                    "plan: gate ({}, {}) matrix shape {:?}, want [{dmn}, {dmn}]",
+                    g.m, g.n, g.mat.shape
+                )));
+            }
+            let (sm, sn) = (strides[g.m], strides[g.n]);
+            let mut gather = Vec::with_capacity(dmn);
+            for i_m in 0..dm {
+                for i_n in 0..dn {
+                    gather.push(i_m * sm + i_n * sn);
+                }
+            }
+            gates.push(GatePlan {
+                mat: g.mat.data.clone(),
+                dmn,
+                rest: rest_offsets(&dims, &strides, g.m, g.n),
+                gather,
+            });
+        }
+        let max_dmn = gates.iter().map(|g| g.dmn).max().unwrap_or(0);
+        let sum_dmn = gates.iter().map(|g| g.dmn).sum();
+        Ok(CircuitPlan { d, dims, strides, gates, max_dmn, sum_dmn })
+    }
+
+    /// Fresh scratch sized for this plan's widest gate.
+    fn scratch(&self) -> Scratch {
+        Scratch {
+            gathered: vec![0.0; self.max_dmn * BLOCK_COLS],
+            product: vec![0.0; self.max_dmn * BLOCK_COLS],
+            bases: vec![0; BLOCK_COLS],
+        }
+    }
+
+    /// Multiply count of one chain application (paper §6).
+    pub fn apply_flops(&self) -> usize {
+        self.d * self.sum_dmn
+    }
+
+    /// Apply the chain to a single vector.
+    pub fn apply(&self, x: &[f32]) -> Result<Vec<f32>> {
+        self.apply_batch(x, 1)
+    }
+
+    /// Apply the chain to `batch` vectors stored row-major in `xs`
+    /// (`xs[b*d .. (b+1)*d]` is vector `b`); returns the same layout.
+    pub fn apply_batch(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if xs.len() != batch * self.d {
+            return Err(Error::Shape(format!(
+                "apply_batch: xs len {} != batch {batch} * d {}",
+                xs.len(),
+                self.d
+            )));
+        }
+        let mut h = xs.to_vec();
+        self.apply_batch_in_place(&mut h, batch);
+        Ok(h)
+    }
+
+    /// In-place variant of [`CircuitPlan::apply_batch`] (the `full_matrix`
+    /// panel driver uses this to avoid a copy per panel).
+    pub fn apply_batch_in_place(&self, h: &mut [f32], batch: usize) {
+        debug_assert_eq!(h.len(), batch * self.d);
+        if self.d == 0 || batch == 0 || self.gates.is_empty() {
+            return;
+        }
+        let workers = if batch * self.apply_flops() < PAR_MIN_FLOPS {
+            1
+        } else {
+            crate::tensor::num_threads(batch)
+        };
+        if workers <= 1 {
+            let mut scratch = self.scratch();
+            self.apply_chain_chunk(h, batch, &mut scratch);
+            return;
+        }
+        // Vectors are independent through the whole chain, so the panel
+        // splits into per-thread chunks of whole vectors; each worker
+        // owns its scratch.  Per-vector arithmetic does not depend on
+        // the chunking, so results are identical for any worker count.
+        let chunk_vecs = (batch + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for chunk in h.chunks_mut(chunk_vecs * self.d) {
+                s.spawn(move || {
+                    let cb = chunk.len() / self.d;
+                    let mut scratch = self.scratch();
+                    self.apply_chain_chunk(chunk, cb, &mut scratch);
+                });
+            }
+        });
+    }
+
+    /// Run the whole gate chain over `cb` contiguous vectors.
+    fn apply_chain_chunk(&self, h: &mut [f32], cb: usize, scratch: &mut Scratch) {
+        for g in &self.gates {
+            self.apply_gate_chunk(g, h, cb, scratch);
+        }
+    }
+
+    /// One gate over `cb` vectors: blocked gather → GEMM → scatter.
+    /// Columns of the implicit `(dmn) × (rest·cb)` matrix are `(vector,
+    /// rest-offset)` pairs; their gate-axis footprints are disjoint, so
+    /// scattering back in place is safe.
+    fn apply_gate_chunk(&self, g: &GatePlan, h: &mut [f32], cb: usize, scratch: &mut Scratch) {
+        let d = self.d;
+        let dmn = g.dmn;
+        let rest_len = g.rest.len();
+        let ncols = cb * rest_len;
+        let bw = BLOCK_COLS;
+        let mut c0 = 0;
+        while c0 < ncols {
+            let w = bw.min(ncols - c0);
+            // base offset of each column in this block
+            for ci in 0..w {
+                let col = c0 + ci;
+                let b = col / rest_len;
+                let r = col - b * rest_len;
+                scratch.bases[ci] = b * d + g.rest[r];
+            }
+            let bases = &scratch.bases[..w];
+            // gather: contiguous writes per row, strided reads from h
+            for (k, &off) in g.gather.iter().enumerate() {
+                let row = &mut scratch.gathered[k * bw..k * bw + w];
+                for (slot, &base) in row.iter_mut().zip(bases) {
+                    *slot = h[base + off];
+                }
+            }
+            // GEMM: product[i, :] = Σ_p mat[i, p] · gathered[p, :]
+            for i in 0..dmn {
+                let orow = &mut scratch.product[i * bw..i * bw + w];
+                orow.fill(0.0);
+                let mrow = &g.mat[i * dmn..(i + 1) * dmn];
+                for (p, &a) in mrow.iter().enumerate() {
+                    let grow = &scratch.gathered[p * bw..p * bw + w];
+                    for (o, &x) in orow.iter_mut().zip(grow) {
+                        *o += a * x;
+                    }
+                }
+            }
+            // scatter
+            for (k, &off) in g.gather.iter().enumerate() {
+                let row = &scratch.product[k * bw..k * bw + w];
+                for (&val, &base) in row.iter().zip(bases) {
+                    h[base + off] = val;
+                }
+            }
+            c0 += w;
+        }
+    }
+
+    /// Materialize the full `(d, d)` operator (paper Eq. 7) by running
+    /// `apply_batch` over identity panels — one GEMM chain per
+    /// `PANEL_COLS` basis vectors instead of `d` sequential matvecs.
+    pub fn full_matrix(&self) -> Result<Tensor> {
+        let d = self.d;
+        let mut out = Tensor::zeros(&[d, d]);
+        let pw = PANEL_COLS.min(d.max(1));
+        let mut panel = vec![0.0f32; pw * d];
+        let mut j0 = 0;
+        while j0 < d {
+            let w = pw.min(d - j0);
+            let p = &mut panel[..w * d];
+            p.fill(0.0);
+            for j in 0..w {
+                p[j * d + j0 + j] = 1.0;
+            }
+            self.apply_batch_in_place(p, w);
+            // panel row j is the chain applied to e_{j0+j} = column
+            // j0+j of the full operator
+            for j in 0..w {
+                let row = &p[j * d..(j + 1) * d];
+                for (i, &v) in row.iter().enumerate() {
+                    out.data[i * d + j0 + j] = v;
+                }
+            }
+            j0 += w;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quanta::circuit::{all_pairs_structure, Circuit};
+    use crate::util::rng::Rng;
+
+    /// Seed-style reference: per-gate offset tables by O(d) flat-index
+    /// scanning, one vector at a time (the pre-engine implementation,
+    /// kept as the correctness oracle).
+    fn apply_reference(c: &Circuit, x: &[f32]) -> Vec<f32> {
+        let dims = &c.dims;
+        let d: usize = dims.iter().product();
+        let strides = strides_of(dims);
+        let mut h = x.to_vec();
+        for g in &c.gates {
+            let (dm, dn) = (dims[g.m], dims[g.n]);
+            let (sm, sn) = (strides[g.m], strides[g.n]);
+            let mut out = vec![0.0f32; d];
+            let mut rest = vec![];
+            for flat in 0..d {
+                if (flat / sm) % dm == 0 && (flat / sn) % dn == 0 {
+                    rest.push(flat);
+                }
+            }
+            for &base in &rest {
+                for i_m in 0..dm {
+                    for i_n in 0..dn {
+                        let row = i_m * dn + i_n;
+                        let mut acc = 0.0f32;
+                        for j_m in 0..dm {
+                            for j_n in 0..dn {
+                                acc += g.mat.data[row * (dm * dn) + (j_m * dn + j_n)]
+                                    * h[base + j_m * sm + j_n * sn];
+                            }
+                        }
+                        out[base + i_m * sm + i_n * sn] = acc;
+                    }
+                }
+            }
+            h = out;
+        }
+        h
+    }
+
+    #[test]
+    fn rest_offsets_match_scan() {
+        for dims in [vec![2usize, 3, 2], vec![4, 4], vec![2, 2, 3, 2]] {
+            let strides = strides_of(&dims);
+            let d: usize = dims.iter().product();
+            for m in 0..dims.len() {
+                for n in 0..dims.len() {
+                    if m == n {
+                        continue;
+                    }
+                    let (dm, dn) = (dims[m], dims[n]);
+                    let (sm, sn) = (strides[m], strides[n]);
+                    let mut scan: Vec<usize> = (0..d)
+                        .filter(|flat| (flat / sm) % dm == 0 && (flat / sn) % dn == 0)
+                        .collect();
+                    let mut stepped = rest_offsets(&dims, &strides, m, n);
+                    scan.sort_unstable();
+                    stepped.sort_unstable();
+                    assert_eq!(stepped, scan, "dims {dims:?} gate ({m},{n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rest_offsets_two_axis_gate_is_single_block() {
+        let dims = [3usize, 4];
+        let strides = strides_of(&dims);
+        assert_eq!(rest_offsets(&dims, &strides, 0, 1), vec![0]);
+    }
+
+    #[test]
+    fn plan_apply_matches_reference() {
+        let mut rng = Rng::new(40);
+        for dims in [vec![2usize, 3, 2], vec![4, 4], vec![2, 2, 2, 2]] {
+            let structure = all_pairs_structure(dims.len());
+            let c = Circuit::random(&dims, &structure, 0.4, &mut rng).unwrap();
+            let d = c.total_dim();
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x, 1.0);
+            let plan = CircuitPlan::new(&c).unwrap();
+            let y = plan.apply(&x).unwrap();
+            let y_ref = apply_reference(&c, &x);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 1e-4, "dims {dims:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_batch_matches_per_vector() {
+        let mut rng = Rng::new(41);
+        let dims = [2usize, 3, 4];
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+        let d = c.total_dim();
+        let batch = 7;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let plan = CircuitPlan::new(&c).unwrap();
+        let ys = plan.apply_batch(&xs, batch).unwrap();
+        for b in 0..batch {
+            let y1 = plan.apply(&xs[b * d..(b + 1) * d]).unwrap();
+            assert_eq!(y1, ys[b * d..(b + 1) * d].to_vec(), "vector {b}");
+        }
+    }
+
+    #[test]
+    fn full_matrix_matches_basis_reference() {
+        let mut rng = Rng::new(42);
+        let dims = [2usize, 2, 3];
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.5, &mut rng).unwrap();
+        let d = c.total_dim();
+        let plan = CircuitPlan::new(&c).unwrap();
+        let full = plan.full_matrix().unwrap();
+        let mut e = vec![0.0f32; d];
+        for j in 0..d {
+            e[j] = 1.0;
+            let col = apply_reference(&c, &e);
+            e[j] = 0.0;
+            for i in 0..d {
+                assert!(
+                    (full.data[i * d + j] - col[i]).abs() < 1e-4,
+                    "({i},{j}): {} vs {}",
+                    full.data[i * d + j],
+                    col[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_deterministic() {
+        let mut rng = Rng::new(43);
+        let dims = [3usize, 2, 2];
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.4, &mut rng).unwrap();
+        let d = c.total_dim();
+        let mut x = vec![0.0f32; 4 * d];
+        rng.fill_normal(&mut x, 1.0);
+        let plan = CircuitPlan::new(&c).unwrap();
+        let y1 = plan.apply_batch(&x, 4).unwrap();
+        let y2 = plan.apply_batch(&x, 4).unwrap();
+        assert_eq!(y1, y2, "same plan, same input, different output");
+        let plan2 = CircuitPlan::new(&c).unwrap();
+        assert_eq!(y1, plan2.apply_batch(&x, 4).unwrap(), "fresh plan differs");
+        let f1 = plan.full_matrix().unwrap();
+        let f2 = plan2.full_matrix().unwrap();
+        assert_eq!(f1.data, f2.data);
+    }
+}

@@ -39,7 +39,10 @@ pub fn rank_bounds(circuit: &Circuit, gate_ranks: &[usize]) -> RankBounds {
 
 /// Measure gate ranks and full-chain rank numerically, and verify Eq. 10.
 /// Returns (gate_ranks, full_rank, bounds).
-pub fn check_rank_representation(circuit: &Circuit, tol: f64) -> Result<(Vec<usize>, usize, RankBounds)> {
+pub fn check_rank_representation(
+    circuit: &Circuit,
+    tol: f64,
+) -> Result<(Vec<usize>, usize, RankBounds)> {
     let gate_ranks: Vec<usize> = circuit
         .gates
         .iter()
@@ -51,21 +54,32 @@ pub fn check_rank_representation(circuit: &Circuit, tol: f64) -> Result<(Vec<usi
     Ok((gate_ranks, full_rank, bounds))
 }
 
-/// Project a gate matrix to a fixed rank by SVD truncation.
+/// Project a gate matrix to a fixed rank by SVD truncation:
+/// `U_r diag(s_r) V_r^T` as one blocked matmul instead of `r` dense
+/// outer-product accumulations.
 pub fn truncate_rank(mat: &Tensor, rank: usize) -> Result<Tensor> {
     let svd = Svd::compute(mat)?;
     let k = svd.u.shape[1];
     let (m, n) = (mat.shape[0], mat.shape[1]);
-    let mut out = Tensor::zeros(&[m, n]);
-    for r in 0..rank.min(k) {
-        let s = svd.s[r] as f32;
-        for i in 0..m {
-            for j in 0..n {
-                out.data[i * n + j] += s * svd.u.data[i * k + r] * svd.v.data[j * k + r];
-            }
+    let r = rank.min(k);
+    if r == 0 {
+        return Ok(Tensor::zeros(&[m, n]));
+    }
+    // U_r scaled by the singular values, (m, r)
+    let mut us = Tensor::zeros(&[m, r]);
+    for i in 0..m {
+        for p in 0..r {
+            us.data[i * r + p] = svd.u.data[i * k + p] * svd.s[p] as f32;
         }
     }
-    Ok(out)
+    // V_r^T, (r, n)
+    let mut vt = Tensor::zeros(&[r, n]);
+    for j in 0..n {
+        for p in 0..r {
+            vt.data[p * n + j] = svd.v.data[j * k + p];
+        }
+    }
+    us.matmul(&vt)
 }
 
 /// Theorem 6.1 (universality), constructive at 2^M dims: decompose an

@@ -12,6 +12,7 @@
 
 pub mod manifest;
 pub mod init;
+pub mod pjrt;
 pub mod session;
 
 pub use manifest::{InitSpec, Manifest, ParamEntry};

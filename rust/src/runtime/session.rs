@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use crate::runtime::pjrt::{self as xla, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use crate::runtime::init::init_layout;
 use crate::runtime::manifest::Manifest;

@@ -3,6 +3,38 @@
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+/// Serial cutoff for `matmul`: products below this many multiplies are
+/// cheaper than a thread spawn.
+const PAR_MIN_MULS: usize = 1 << 20;
+
+/// `k`-block width of the matmul kernel: the active `B` panel is
+/// `MM_KB × n` floats, resident in L1/L2 across the row sweep.
+const MM_KB: usize = 64;
+
+/// Multiply a row panel: `a` is `rows × k`, `b` is `k × n`, `out` is
+/// `rows × n` (pre-zeroed).  Accumulation order over `p` is ascending
+/// regardless of blocking, so results match the naive i-p-j loop
+/// bit-for-bit.
+fn mm_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = a.len() / k;
+    let mut p0 = 0;
+    while p0 < k {
+        let pe = (p0 + MM_KB).min(k);
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in p0..pe {
+                let av = arow[p];
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        p0 = pe;
+    }
+}
+
 /// Dense row-major tensor of f32.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -74,7 +106,12 @@ impl Tensor {
     }
 
     /// Matrix multiply: self [m,k] @ other [k,n] -> [m,n].
-    /// Blocked i-k-j loop order (cache-friendly; j innermost vectorizes).
+    ///
+    /// Blocked over `k` so the active `B` panel stays cache-resident,
+    /// row-parallel across threads for large products; `j` innermost
+    /// vectorizes.  No zero-skip shortcut: `0 × NaN` must propagate NaN
+    /// (IEEE 754), and a data-dependent branch in the inner loop defeats
+    /// vectorization anyway.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
             return Err(Error::Shape(format!(
@@ -84,18 +121,28 @@ impl Tensor {
         }
         let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
         let mut out = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
+        if m == 0 || k == 0 || n == 0 {
+            return Ok(out);
+        }
+        let workers = if m * k * n < PAR_MIN_MULS {
+            1
+        } else {
+            crate::tensor::num_threads(m)
+        };
+        if workers <= 1 {
+            mm_rows(&self.data, &other.data, &mut out.data, k, n);
+        } else {
+            let rows_per = (m + workers - 1) / workers;
+            let b = &other.data;
+            std::thread::scope(|s| {
+                for (a_chunk, o_chunk) in self
+                    .data
+                    .chunks(rows_per * k)
+                    .zip(out.data.chunks_mut(rows_per * n))
+                {
+                    s.spawn(move || mm_rows(a_chunk, b, o_chunk, k, n));
                 }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
+            });
         }
         Ok(out)
     }
@@ -219,6 +266,29 @@ mod tests {
         for i in 0..6 {
             assert!((mv[i] - mm.data[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn matmul_propagates_nan() {
+        // 0 × NaN must be NaN (the seed's `a == 0.0` skip silently
+        // dropped such terms)
+        let a = Tensor::from_vec(&[1, 2], vec![0.0, 0.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 1], vec![f32::NAN, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert!(c.data[0].is_nan());
+    }
+
+    #[test]
+    fn matmul_large_parallel_matches_serial() {
+        // above the parallel threshold the row-chunked path must agree
+        // with the serial kernel bit-for-bit
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[160, 96], 1.0, &mut rng);
+        let b = Tensor::randn(&[96, 128], 1.0, &mut rng);
+        let par = a.matmul(&b).unwrap();
+        let mut serial = Tensor::zeros(&[160, 128]);
+        super::mm_rows(&a.data, &b.data, &mut serial.data, 96, 128);
+        assert_eq!(par.data, serial.data);
     }
 
     #[test]

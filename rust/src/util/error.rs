@@ -1,32 +1,62 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls (the `thiserror` crate is
+//! not in the offline vendor set, and the crate builds dependency-free
+//! by default).  The `Xla` variant wraps whichever PJRT backend is
+//! compiled in — the real `xla::Error` under the `pjrt` feature, the
+//! inert stub's error otherwise (see `runtime::pjrt`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("json parse error at byte {offset}: {message}")]
+    Io(std::io::Error),
+    Xla(crate::runtime::pjrt::Error),
     Json { offset: usize, message: String },
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::runtime::pjrt::Error> for Error {
+    fn from(e: crate::runtime::pjrt::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 impl Error {

@@ -1,0 +1,159 @@
+//! Property tests for the plan-cached batched circuit engine
+//! (`quanta::plan`): batched execution must agree with per-vector
+//! application and with the materialized operator on random circuits,
+//! plan reuse must be deterministic, and the flat-buffer Jacobi SVD must
+//! handle rank-deficient inputs.
+
+use quanta_ft::linalg::{numerical_rank, Svd};
+use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit};
+use quanta_ft::quanta::plan::CircuitPlan;
+use quanta_ft::tensor::Tensor;
+use quanta_ft::util::proptest::for_all;
+use quanta_ft::util::rng::Rng;
+
+/// Random circuit: 2-4 axes of dim 2-5, random non-empty gate structure
+/// drawn from the all-pairs set (possibly with repeated pairs, which
+/// exercises non-commuting chains).
+fn gen_circuit(rng: &mut Rng) -> Circuit {
+    let n_axes = 2 + rng.below(3);
+    let dims: Vec<usize> = (0..n_axes).map(|_| 2 + rng.below(4)).collect();
+    let all = all_pairs_structure(n_axes);
+    let mut structure: Vec<(usize, usize)> = all
+        .iter()
+        .filter(|_| rng.below(2) == 0)
+        .copied()
+        .collect();
+    structure.push(all[rng.below(all.len())]);
+    Circuit::random(&dims, &structure, 0.4, rng).unwrap()
+}
+
+#[test]
+fn prop_apply_batch_equals_per_vector_apply() {
+    for_all(
+        40,
+        |rng| {
+            let c = gen_circuit(rng);
+            let d = c.total_dim();
+            let batch = 1 + rng.below(6);
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            (c, xs, batch)
+        },
+        |(c, xs, batch)| {
+            let d = c.total_dim();
+            let plan = c.plan().map_err(|e| e.to_string())?;
+            let ys = plan.apply_batch(xs, *batch).map_err(|e| e.to_string())?;
+            for b in 0..*batch {
+                let y = plan.apply(&xs[b * d..(b + 1) * d]).map_err(|e| e.to_string())?;
+                if y != ys[b * d..(b + 1) * d] {
+                    return Err(format!("vector {b} of batch {batch} differs from apply"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_apply_batch_equals_full_matrix_matvec() {
+    for_all(
+        40,
+        |rng| {
+            let c = gen_circuit(rng);
+            let d = c.total_dim();
+            let batch = 1 + rng.below(4);
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            (c, xs, batch)
+        },
+        |(c, xs, batch)| {
+            let d = c.total_dim();
+            let plan = c.plan().map_err(|e| e.to_string())?;
+            let full = plan.full_matrix().map_err(|e| e.to_string())?;
+            let ys = plan.apply_batch(xs, *batch).map_err(|e| e.to_string())?;
+            for b in 0..*batch {
+                let want = full.matvec(&xs[b * d..(b + 1) * d]).map_err(|e| e.to_string())?;
+                for (i, (got, want)) in ys[b * d..(b + 1) * d].iter().zip(&want).enumerate() {
+                    if (got - want).abs() > 1e-3 {
+                        return Err(format!(
+                            "dims {:?}, vector {b}, element {i}: engine {got} vs matvec {want}",
+                            c.dims
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_reuse_deterministic_across_calls() {
+    for_all(
+        30,
+        |rng| {
+            let c = gen_circuit(rng);
+            let d = c.total_dim();
+            let batch = 1 + rng.below(4);
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            (c, xs, batch)
+        },
+        |(c, xs, batch)| {
+            let plan = c.plan().map_err(|e| e.to_string())?;
+            let y1 = plan.apply_batch(xs, *batch).map_err(|e| e.to_string())?;
+            let y2 = plan.apply_batch(xs, *batch).map_err(|e| e.to_string())?;
+            if y1 != y2 {
+                return Err("same plan, same input, different output".into());
+            }
+            // an independently built plan must agree bit-for-bit
+            let plan2 = CircuitPlan::new(c).map_err(|e| e.to_string())?;
+            let y3 = plan2.apply_batch(xs, *batch).map_err(|e| e.to_string())?;
+            if y1 != y3 {
+                return Err("fresh plan disagrees with cached plan".into());
+            }
+            let f1 = plan.full_matrix().map_err(|e| e.to_string())?;
+            let f2 = plan.full_matrix().map_err(|e| e.to_string())?;
+            if f1.data != f2.data {
+                return Err("full_matrix not deterministic under plan reuse".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_svd_rank_deficient() {
+    // the flat-buffer Jacobi SVD on random rank-deficient matrices:
+    // exact numerical rank, small reconstruction error, near-zero
+    // trailing singular values.
+    for_all(
+        25,
+        |rng| {
+            let n = 6 + rng.below(10);
+            let r = 1 + rng.below(n - 2);
+            let b = Tensor::randn(&[n, r], 1.0, rng);
+            let c = Tensor::randn(&[r, n], 1.0, rng);
+            (b.matmul(&c).unwrap(), r)
+        },
+        |(a, r)| {
+            let svd = Svd::compute(a).map_err(|e| e.to_string())?;
+            let rec = svd.reconstruct().map_err(|e| e.to_string())?;
+            let err = a.max_abs_diff(&rec) / a.frobenius_norm().max(1e-6);
+            if err > 1e-4 {
+                return Err(format!("reconstruction error {err}"));
+            }
+            let smax = svd.s[0].max(1e-300);
+            for &s in &svd.s[*r..] {
+                if s > 1e-6 * smax {
+                    return Err(format!("trailing singular value {s} (smax {smax}, r {r})"));
+                }
+            }
+            let nr = numerical_rank(a, 1e-6).map_err(|e| e.to_string())?;
+            if nr != *r {
+                return Err(format!("numerical rank {nr} != constructed rank {r}"));
+            }
+            Ok(())
+        },
+    );
+}

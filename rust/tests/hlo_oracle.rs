@@ -10,6 +10,7 @@ use std::path::PathBuf;
 
 use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit, Gate};
 use quanta_ft::runtime::manifest::Manifest;
+use quanta_ft::runtime::pjrt as xla;
 use quanta_ft::runtime::session::Session;
 use quanta_ft::tensor::Tensor;
 

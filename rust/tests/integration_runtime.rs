@@ -12,6 +12,7 @@ use quanta_ft::data::tokenizer::Tokenizer;
 use quanta_ft::data::corpus;
 use quanta_ft::linalg::numerical_rank;
 use quanta_ft::runtime::manifest::Manifest;
+use quanta_ft::runtime::pjrt as xla;
 use quanta_ft::runtime::session::Session;
 use quanta_ft::util::rng::Rng;
 
