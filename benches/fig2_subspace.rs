@@ -14,7 +14,8 @@ fn main() {
     banner("Figure 2", "LoRA update subspace similarity: RTE-analog vs DROP-analog");
     let Some(mut runner) = require_artifacts() else { return };
 
-    let mut table = Table::new(&["Task", "Module", "mean phi", "tail phi (i>k/2)", "eff. rank dW(r2)"]);
+    let mut table =
+        Table::new(&["Task", "Module", "mean phi", "tail phi (i>k/2)", "eff. rank dW(r2)"]);
     // paper uses the query projection of a middle layer (layer 16 of 32);
     // merged_modules sort as (L0.wq, L0.wv, L1.wq, ...) => index 4 = L2.wq
     // for the 4-layer tiny model.

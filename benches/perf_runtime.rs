@@ -42,11 +42,11 @@ mod seed_ref {
     }
 
     pub fn apply(c: &Circuit, x: &[f32]) -> Vec<f32> {
-        let d: usize = c.dims.iter().product();
-        let strides = strides(&c.dims);
+        let d: usize = c.dims().iter().product();
+        let strides = strides(c.dims());
         let mut h = x.to_vec();
-        for g in &c.gates {
-            let (dm, dn) = (c.dims[g.m], c.dims[g.n]);
+        for g in c.gates() {
+            let (dm, dn) = (c.dims()[g.m], c.dims()[g.n]);
             let (sm, sn) = (strides[g.m], strides[g.n]);
             let mut out = vec![0.0f32; d];
             let mut rest_offsets = Vec::with_capacity(d / (dm * dn));
@@ -78,7 +78,7 @@ mod seed_ref {
     }
 
     pub fn full_matrix(c: &Circuit) -> Tensor {
-        let d: usize = c.dims.iter().product();
+        let d: usize = c.dims().iter().product();
         let mut out = Tensor::zeros(&[d, d]);
         let mut e = vec![0.0f32; d];
         for j in 0..d {
@@ -95,8 +95,9 @@ mod seed_ref {
 
 /// Circuit-engine microbench: the acceptance workload of the engine PR
 /// (d=1024, dims [8,8,16], all-pairs) — `full_matrix` and a 64-vector
-/// panel, engine vs seed reference, parity asserted at 1e-4.
-fn engine_bench() {
+/// panel, engine vs seed reference, parity asserted at 1e-4.  Returns
+/// the `(config, results)` fragments of the perf record.
+fn engine_bench() -> (Value, Vec<(&'static str, Value)>) {
     banner("quanta_engine", "plan-cached batched circuit engine vs seed reference");
     let dims = vec![8usize, 8, 16];
     let structure = all_pairs_structure(dims.len());
@@ -125,8 +126,9 @@ fn engine_bench() {
     assert!(batch_diff < 1e-4, "apply_batch diverged from seed path: {batch_diff}");
 
     // -- timings -------------------------------------------------------
+    // time real plan construction, not the circuit's OnceLock cache hit
     let st_plan = bench(2, 50, || {
-        let _ = c.plan().unwrap();
+        let _ = quanta_ft::quanta::CircuitPlan::new(&c).unwrap();
     });
     let st_full_seed = bench(0, 3, || {
         let _ = seed_ref::full_matrix(&c);
@@ -158,46 +160,135 @@ fn engine_bench() {
     println!("apply_batch({batch}) engine:            {st_batch_engine}");
     println!("  => speedup {batch_speedup:.1}x, max|diff| {batch_diff:.2e}");
 
-    // -- machine-readable record ---------------------------------------
+    // -- machine-readable record fragments ------------------------------
+    let config = Value::obj(vec![
+        ("dims", Value::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+        ("structure", Value::Str("all_pairs".into())),
+        ("d", Value::Num(d as f64)),
+        ("batch", Value::Num(batch as f64)),
+        ("gates", Value::Num(plan.gates.len() as f64)),
+        ("apply_flops", Value::Num(plan.apply_flops() as f64)),
+    ]);
+    let results = vec![
+        ("plan_build_us", Value::Num(st_plan.mean_us)),
+        (
+            "full_matrix",
+            Value::obj(vec![
+                ("seed_us", Value::Num(st_full_seed.mean_us)),
+                ("engine_us", Value::Num(st_full_engine.mean_us)),
+                ("speedup", Value::Num(full_speedup)),
+                ("max_abs_diff", Value::Num(full_diff as f64)),
+            ]),
+        ),
+        (
+            "apply_batch",
+            Value::obj(vec![
+                ("seed_sequential_us", Value::Num(st_batch_seed.mean_us)),
+                ("engine_us", Value::Num(st_batch_engine.mean_us)),
+                ("speedup", Value::Num(batch_speedup)),
+                ("max_abs_diff", Value::Num(batch_diff as f64)),
+            ]),
+        ),
+    ];
+    (config, results)
+}
+
+/// Host-trainer microbench: forward-with-tape / backward / full Adam
+/// step latency on a d=128 adapter, plus the loss reduction of a short
+/// 100-step fit (the same teacher–student task as the CI train-smoke
+/// job, one size up).  Appends the `train_smoke` section of the perf
+/// record.
+fn train_bench() -> (&'static str, Value) {
+    use quanta_ft::coordinator::host_trainer::{
+        clip_global_norm, finetune_host, mse, mse_grad, Adam, HostTrainConfig,
+    };
+    use quanta_ft::data::synth::{teacher_student, SynthConfig};
+
+    banner("train_smoke", "gradient engine fwd/bwd/step + loss reduction");
+    let cfg = SynthConfig {
+        dims: vec![4, 4, 8],
+        n_train: 256,
+        n_val: 64,
+        teacher_std: 0.3,
+        noise_std: 0.01,
+        alpha: 1.0,
+        seed: 0,
+    };
+    let task = teacher_student(&cfg).unwrap();
+    let d = task.d;
+    let batch = 32usize;
+    let tcfg = HostTrainConfig { batch, ..Default::default() };
+    let adapter = task.student().unwrap();
+    let params = adapter.params_flat();
+    let xs = &task.train_x[..batch * d];
+    let ys = &task.train_y[..batch * d];
+
+    let st_fwd = bench(3, 50, || {
+        let _ = adapter.forward_with_tape(xs, batch).unwrap();
+    });
+    let (pred, tape) = adapter.forward_with_tape(xs, batch).unwrap();
+    let (_, dpred) = mse_grad(&pred, ys);
+    let st_bwd = bench(3, 50, || {
+        let _ = adapter.backward_gates(&tape, &dpred, batch).unwrap();
+    });
+    let mut step_adapter = task.student().unwrap();
+    let mut step_params = params.clone();
+    let mut adam = Adam::new(step_params.len(), &tcfg);
+    let st_step = bench(3, 50, || {
+        let (pred, tape) = step_adapter.forward_with_tape(xs, batch).unwrap();
+        let (_, dpred) = mse_grad(&pred, ys);
+        let mut grads = step_adapter.backward_gates(&tape, &dpred, batch).unwrap();
+        clip_global_norm(&mut grads, tcfg.clip);
+        adam.step(&mut step_params, &grads);
+        step_adapter.set_params(&step_params).unwrap();
+    });
+
+    // short fit for the loss-reduction gate
+    let mut student = task.student().unwrap();
+    let init = {
+        let pred = student.apply_batch(&task.train_x, task.n_train).unwrap();
+        mse(&pred, &task.train_y)
+    };
+    let fit_cfg = HostTrainConfig { steps: 100, batch, eval_every: 25, ..Default::default() };
+    let out = finetune_host(&mut student, &task, &fit_cfg).unwrap();
+    let fin = {
+        let pred = student.apply_batch(&task.train_x, task.n_train).unwrap();
+        mse(&pred, &task.train_y)
+    };
+    let reduction = init / fin.max(1e-300);
+    println!("adapter: d={d}, {} params, batch {batch}", params.len());
+    println!("forward_with_tape:                  {st_fwd}");
+    println!("backward:                           {st_bwd}");
+    println!("full Adam step:                     {st_step}");
+    println!(
+        "100-step fit: train mse {init:.5} -> {fin:.5}  => {reduction:.1}x \
+         ({} steps, best val {:.5})",
+        out.steps_run, out.best_val_loss
+    );
+
+    (
+        "train_smoke",
+        Value::obj(vec![
+            ("dims", Value::arr_f64(&cfg.dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            ("batch", Value::Num(batch as f64)),
+            ("params", Value::Num(params.len() as f64)),
+            ("steps", Value::Num(fit_cfg.steps as f64)),
+            ("fwd_us", Value::Num(st_fwd.mean_us)),
+            ("bwd_us", Value::Num(st_bwd.mean_us)),
+            ("step_us", Value::Num(st_step.mean_us)),
+            ("loss_reduction", Value::Num(reduction)),
+        ]),
+    )
+}
+
+/// Assemble and write `BENCH_quanta_engine.json` at the repository root.
+fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(1.0)),
-        ("substrate", Value::Str("rust".into())),
-        (
-            "config",
-            Value::obj(vec![
-                ("dims", Value::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
-                ("structure", Value::Str("all_pairs".into())),
-                ("d", Value::Num(d as f64)),
-                ("batch", Value::Num(batch as f64)),
-                ("gates", Value::Num(plan.gates.len() as f64)),
-                ("apply_flops", Value::Num(plan.apply_flops() as f64)),
-            ]),
-        ),
-        (
-            "results",
-            Value::obj(vec![
-                ("plan_build_us", Value::Num(st_plan.mean_us)),
-                (
-                    "full_matrix",
-                    Value::obj(vec![
-                        ("seed_us", Value::Num(st_full_seed.mean_us)),
-                        ("engine_us", Value::Num(st_full_engine.mean_us)),
-                        ("speedup", Value::Num(full_speedup)),
-                        ("max_abs_diff", Value::Num(full_diff as f64)),
-                    ]),
-                ),
-                (
-                    "apply_batch",
-                    Value::obj(vec![
-                        ("seed_sequential_us", Value::Num(st_batch_seed.mean_us)),
-                        ("engine_us", Value::Num(st_batch_engine.mean_us)),
-                        ("speedup", Value::Num(batch_speedup)),
-                        ("max_abs_diff", Value::Num(batch_diff as f64)),
-                    ]),
-                ),
-            ]),
-        ),
+        ("schema_version", Value::Num(2.0)),
+        ("substrate", Value::Str("rust-native".into())),
+        ("config", config),
+        ("results", Value::obj(results)),
     ]);
     // land next to the workspace root regardless of bench CWD
     let out_path = std::env::var("CARGO_MANIFEST_DIR")
@@ -209,7 +300,9 @@ fn engine_bench() {
 
 fn main() {
     banner("perf_runtime", "L3 hot-path microbenches");
-    engine_bench();
+    let (config, mut results) = engine_bench();
+    results.push(train_bench());
+    write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();
     let tok = Tokenizer::new();

@@ -1,0 +1,618 @@
+"""NumPy mirror of the rust gradient engine + host trainer.
+
+Transcribes, at the granularity of the rust loop structure, the new
+training stack added on top of the circuit engine:
+
+* ``quanta::plan`` tables (row-major strides, odometer rest-offsets,
+  gather tables) and the blocked forward ``apply_gate_chunk``;
+* ``quanta::grad`` — ``apply_batch_with_tape`` and the reverse sweep
+  (gather gy/gx, ``dA += gy @ gx^T``, transpose-gate GEMM, scatter);
+* ``quanta::adapter`` — ``W x + alpha * (circuit(x) - x)``, ``merge()``;
+* ``coordinator::host_trainer`` — bias-corrected Adam, global-norm
+  clipping, the minibatch loop with best-on-val checkpointing;
+* ``util::rng`` — an exact integer port of splitmix64 + xoshiro256++ +
+  Box-Muller, so data, init, and batch order match the rust tests
+  bit-for-bit and the mirror *predicts* the rust assertions.
+
+Run directly to (1) gradcheck the backward against central finite
+differences in f64 (formula exactness) and f32 (the tolerance the rust
+property tests use), (2) verify merge()/apply equivalence margins,
+(3) run the exact host-trainer configurations asserted in
+``rust/tests/train_smoke.rs`` and report their loss-reduction factors,
+and (4) measure the ``train_smoke`` timings for
+``BENCH_quanta_engine.json`` (vectorized variant; the rust bench
+overwrites with native numbers).
+
+Usage:  python python/bench/train_mirror.py [--bench-out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+BLOCK_COLS = 64
+
+
+# ---------------------------------------------------------------------------
+# util::rng — exact integer port
+# ---------------------------------------------------------------------------
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+def _hash_str(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in s.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256++ with Box-Muller normals (mirrors util::rng::Rng)."""
+
+    def __init__(self, seed: int):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare = None
+
+    @classmethod
+    def stream(cls, seed: int, name: str) -> "Rng":
+        return cls((seed ^ _rotl(_hash_str(name), 17)) & MASK)
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        return int(self.uniform() * n) % n
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            v, self.spare = self.spare, None
+            return v
+        while True:
+            u1 = self.uniform()
+            if u1 <= 2.2250738585072014e-308:
+                continue
+            u2 = self.uniform()
+            r = np.sqrt(-2.0 * np.log(u1))
+            th = 2.0 * np.pi * u2
+            self.spare = float(r * np.sin(th))
+            return float(r * np.cos(th))
+
+    def fill_normal(self, n: int, std: float) -> np.ndarray:
+        return np.array(
+            [np.float32(self.normal()) * np.float32(std) for _ in range(n)], dtype=np.float32
+        )
+
+    def shuffle(self, items: list) -> None:
+        for i in range(len(items) - 1, 0, -1):
+            j = self.below(i + 1)
+            items[i], items[j] = items[j], items[i]
+
+
+class Sampler:
+    """Mirrors data::batcher::Sampler (shuffled epochs)."""
+
+    def __init__(self, n: int, seed: int):
+        self.rng = Rng.stream(seed, "sampler")
+        self.order = list(range(n))
+        self.rng.shuffle(self.order)
+        self.pos = 0
+
+    def next_indices(self, k: int) -> list[int]:
+        out = []
+        for _ in range(k):
+            if self.pos >= len(self.order):
+                self.rng.shuffle(self.order)
+                self.pos = 0
+            out.append(self.order[self.pos])
+            self.pos += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# quanta::plan tables + blocked forward
+# ---------------------------------------------------------------------------
+
+def all_pairs_structure(n_axes: int) -> list[tuple[int, int]]:
+    neg = [-k for k in range(1, n_axes + 1)]
+    return [
+        ((neg[a] + n_axes) % n_axes, (neg[b] + n_axes) % n_axes)
+        for a in range(n_axes)
+        for b in range(a + 1, n_axes)
+    ]
+
+
+def strides_of(dims: list[int]) -> list[int]:
+    s = [1] * len(dims)
+    for i in range(len(dims) - 2, -1, -1):
+        s[i] = s[i + 1] * dims[i + 1]
+    return s
+
+
+def rest_offsets(dims, strides, m, n) -> np.ndarray:
+    """Odometer enumeration, transcribed from plan.rs::rest_offsets."""
+    axes = [a for a in range(len(dims)) if a not in (m, n)]
+    count = int(np.prod([dims[a] for a in axes])) if axes else 1
+    out = []
+    idx = [0] * len(axes)
+    flat = 0
+    while True:
+        out.append(flat)
+        k = len(axes)
+        while True:
+            if k == 0:
+                assert len(out) == count
+                return np.array(out, dtype=np.int64)
+            k -= 1
+            a = axes[k]
+            idx[k] += 1
+            flat += strides[a]
+            if idx[k] < dims[a]:
+                break
+            flat -= strides[a] * dims[a]
+            idx[k] = 0
+
+
+class Plan:
+    """Mirrors CircuitPlan: per-gate (mat, dmn, rest, gather)."""
+
+    def __init__(self, dims: list[int], gates: list[tuple[int, int, np.ndarray]]):
+        self.dims = list(dims)
+        self.d = int(np.prod(dims))
+        strides = strides_of(dims)
+        self.gates = []
+        for m, n, mat in gates:
+            dm, dn = dims[m], dims[n]
+            dmn = dm * dn
+            assert mat.shape == (dmn, dmn)
+            gather = (
+                np.arange(dm)[:, None] * strides[m] + np.arange(dn)[None, :] * strides[n]
+            ).reshape(-1)
+            self.gates.append(
+                {
+                    "mat": mat.copy(),
+                    "dmn": dmn,
+                    "rest": rest_offsets(dims, strides, m, n),
+                    "gather": gather,
+                }
+            )
+
+    def _bases(self, g, cb: int) -> np.ndarray:
+        """Column base offsets for the full (rest*cb) panel: column
+        (b, r) -> b*d + rest[r], in the rust column order."""
+        rest = g["rest"]
+        return (np.arange(cb)[:, None] * self.d + rest[None, :]).reshape(-1)
+
+    def apply_gate(self, g, h: np.ndarray, cb: int) -> None:
+        """Blocked gather -> GEMM -> scatter, in BLOCK_COLS blocks like
+        apply_gate_chunk (block boundaries affect nothing: each column
+        is independent through one gate)."""
+        bases = self._bases(g, cb)
+        gather = g["gather"]
+        mat = g["mat"]
+        ncols = bases.shape[0]
+        for c0 in range(0, ncols, BLOCK_COLS):
+            blk = bases[c0 : c0 + BLOCK_COLS]
+            seg = gather[:, None] + blk[None, :]  # (dmn, w)
+            panel = h.reshape(-1)[seg]
+            h.reshape(-1)[seg] = mat @ panel
+
+    def apply_batch(self, xs: np.ndarray, cb: int) -> np.ndarray:
+        h = xs.copy()
+        for g in self.gates:
+            self.apply_gate(g, h, cb)
+        return h
+
+    def apply_batch_with_tape(self, xs: np.ndarray, cb: int):
+        h = xs.copy()
+        tape = []
+        for g in self.gates:
+            tape.append(h.copy())
+            self.apply_gate(g, h, cb)
+        return h, tape
+
+    def backward(self, tape, grad_out: np.ndarray, cb: int):
+        """Reverse sweep, transcribed from grad.rs::backward_gate_chunk:
+        gather gy (upstream grad) and gx (taped input), accumulate
+        dA += gy @ gx^T, transform g with A^T, scatter back."""
+        g = grad_out.copy()
+        gate_grads = [np.zeros_like(gp["mat"]) for gp in self.gates]
+        for ai in range(len(self.gates) - 1, -1, -1):
+            gp = self.gates[ai]
+            hin = tape[ai]
+            bases = self._bases(gp, cb)
+            gather = gp["gather"]
+            mat = gp["mat"]
+            for c0 in range(0, bases.shape[0], BLOCK_COLS):
+                blk = bases[c0 : c0 + BLOCK_COLS]
+                seg = gather[:, None] + blk[None, :]
+                gy = g.reshape(-1)[seg]  # (dmn, w)
+                gx = hin.reshape(-1)[seg]  # (dmn, w)
+                gate_grads[ai] += gy @ gx.T
+                g.reshape(-1)[seg] = mat.T @ gy
+        return gate_grads, g
+
+    def full_matrix(self) -> np.ndarray:
+        eye = np.eye(self.d, dtype=self.gates[0]["mat"].dtype if self.gates else np.float32)
+        return self.apply_batch(eye, self.d).T
+
+
+def random_gates(dims, structure, std, rng: Rng, dtype=np.float32):
+    """Mirrors Circuit::random: eye + N(0, std²), rust fill order."""
+    gates = []
+    for m, n in structure:
+        sz = dims[m] * dims[n]
+        noise = rng.fill_normal(sz * sz, std).reshape(sz, sz)
+        gates.append((m, n, (np.eye(sz, dtype=np.float32) + noise).astype(dtype)))
+    return gates
+
+
+def identity_gates(dims, structure, dtype=np.float32):
+    return [(m, n, np.eye(dims[m] * dims[n], dtype=dtype)) for m, n in structure]
+
+
+# ---------------------------------------------------------------------------
+# quanta::adapter + coordinator::host_trainer mirrors
+# ---------------------------------------------------------------------------
+
+class Adapter:
+    def __init__(self, base: np.ndarray, dims, gates, alpha: float):
+        self.base = base
+        self.dims = list(dims)
+        self.structure = [(m, n) for m, n, _ in gates]
+        self.mats = [mat for _, _, mat in gates]
+        self.alpha = np.float32(alpha)
+
+    def plan(self) -> Plan:
+        return Plan(self.dims, [(m, n, mat) for (m, n), mat in zip(self.structure, self.mats)])
+
+    def apply_batch(self, xs: np.ndarray) -> np.ndarray:
+        cx = self.plan().apply_batch(xs, xs.shape[0])
+        return xs @ self.base.T + self.alpha * (cx - xs)
+
+    def forward_with_tape(self, xs: np.ndarray):
+        plan = self.plan()
+        cx, tape = plan.apply_batch_with_tape(xs, xs.shape[0])
+        return xs @ self.base.T + self.alpha * (cx - xs), tape, plan
+
+    def backward(self, plan: Plan, tape, grad_out: np.ndarray):
+        gate_grads, _ = plan.backward(tape, self.alpha * grad_out, grad_out.shape[0])
+        return gate_grads
+
+    def merge(self) -> np.ndarray:
+        full = self.plan().full_matrix()
+        return self.base + self.alpha * (full - np.eye(full.shape[0], dtype=full.dtype))
+
+    def params_flat(self) -> np.ndarray:
+        return np.concatenate([m.reshape(-1) for m in self.mats])
+
+    def set_params(self, flat: np.ndarray) -> None:
+        off = 0
+        for i, m in enumerate(self.mats):
+            n = m.size
+            self.mats[i] = flat[off : off + n].reshape(m.shape).copy()
+            off += n
+
+
+def mse(pred, target) -> float:
+    diff = pred.astype(np.float64) - target.astype(np.float64)
+    return float((diff * diff).mean())
+
+
+def mse_grad(pred, target):
+    n = np.float32(pred.size)
+    return mse(pred, target), (2.0 / n * (pred - target)).astype(pred.dtype)
+
+
+def clip_global_norm(grads: np.ndarray, max_norm: float) -> np.ndarray:
+    norm = float(np.sqrt((grads.astype(np.float64) ** 2).sum()))
+    if max_norm > 0 and norm > max_norm:
+        return (grads * np.float32(max_norm / norm)).astype(grads.dtype)
+    return grads
+
+
+class Adam:
+    def __init__(self, n, lr=2e-2, beta1=0.9, beta2=0.999, eps=1e-8, dtype=np.float32):
+        self.m = np.zeros(n, dtype)
+        self.v = np.zeros(n, dtype)
+        self.t = 0
+        self.lr, self.beta1, self.beta2, self.eps = (
+            dtype(lr),
+            dtype(beta1),
+            dtype(beta2),
+            dtype(eps),
+        )
+
+    def step(self, params, grads):
+        self.t += 1
+        bc1 = 1.0 - self.beta1**self.t
+        bc2 = 1.0 - self.beta2**self.t
+        self.m = self.beta1 * self.m + (1 - self.beta1) * grads
+        self.v = self.beta2 * self.v + (1 - self.beta2) * grads * grads
+        return params - self.lr * (self.m / bc1) / (np.sqrt(self.v / bc2) + self.eps)
+
+
+def teacher_student(dims, n_train, n_val, teacher_std, noise_std, alpha, seed, dtype=np.float32):
+    """Mirrors data::synth::teacher_student, including stream names."""
+    d = int(np.prod(dims))
+    structure = all_pairs_structure(len(dims))
+    base = (
+        Rng.stream(seed, "synth-base").fill_normal(d * d, 1.0 / np.sqrt(d)).reshape(d, d)
+    ).astype(dtype)
+    tg = random_gates(dims, structure, teacher_std, Rng.stream(seed, "synth-teacher"), dtype)
+    teacher = Adapter(base, dims, tg, alpha)
+
+    def split(sx, se, n):
+        xs = Rng.stream(seed, sx).fill_normal(n * d, 1.0).reshape(n, d).astype(dtype)
+        ys = teacher.apply_batch(xs)
+        if noise_std > 0:
+            ys = ys + Rng.stream(seed, se).fill_normal(n * d, noise_std).reshape(n, d).astype(dtype)
+        return xs, ys
+
+    tx, ty = split("synth-train-x", "synth-train-eps", n_train)
+    vx, vy = split("synth-val-x", "synth-val-eps", n_val)
+    return base, structure, (tx, ty), (vx, vy)
+
+
+def finetune_host(adapter: Adapter, tx, ty, vx, vy, steps, batch, seed, lr=2e-2, clip=1.0):
+    d = tx.shape[1]
+    params = adapter.params_flat()
+    adam = Adam(params.size, lr=lr)
+    sampler = Sampler(tx.shape[0], seed)
+    curve = []
+    for _ in range(steps):
+        idx = sampler.next_indices(batch)
+        xs, ys = tx[idx], ty[idx]
+        pred, tape, plan = adapter.forward_with_tape(xs)
+        loss, dpred = mse_grad(pred, ys)
+        grads = np.concatenate(
+            [g.reshape(-1) for g in adapter.backward(plan, tape, dpred)]
+        ).astype(np.float32)
+        grads = clip_global_norm(grads, clip)
+        params = adam.step(params, grads)
+        adapter.set_params(params)
+        curve.append(loss)
+    val = mse(adapter.apply_batch(vx), vy)
+    return curve, val
+
+
+# ---------------------------------------------------------------------------
+# validation checks
+# ---------------------------------------------------------------------------
+
+GRADCHECK_CASES = [
+    # (dims, structure, std, batch) — must match rust/tests/grad_props.rs
+    ([2, 3, 2], None, 0.3, 3),
+    ([4, 4], [(0, 1)], 0.4, 2),
+    ([2, 2, 2, 2], None, 0.2, 3),
+    ([3, 2], [(0, 1), (0, 1)], 0.3, 4),
+]
+
+
+def gradcheck(dtype, eps, seed0=71):
+    """Analytic vs central FD for loss = sum(w * out); returns the worst
+    relative error over all gate entries, input entries, and cases.
+    Gates AND probe data reproduce rust/tests/grad_props.rs bit-for-bit:
+    gates from Rng(71+ci) (Circuit::random inside the test), xs/w from
+    Rng::stream(100+ci, "gradcheck") (the gradcheck helper)."""
+    worst = 0.0
+    for ci, (dims, structure, std, batch) in enumerate(GRADCHECK_CASES):
+        if structure is None:
+            structure = all_pairs_structure(len(dims))
+        gates = random_gates(dims, structure, std, Rng(seed0 + ci), dtype)
+        d = int(np.prod(dims))
+        prng = Rng.stream(100 + ci, "gradcheck")
+        xs = prng.fill_normal(batch * d, 1.0).reshape(batch, d).astype(dtype)
+        w = prng.fill_normal(batch * d, 1.0).reshape(batch, d).astype(dtype)
+        plan = Plan(dims, gates)
+        _, tape = plan.apply_batch_with_tape(xs, batch)
+        gate_grads, input_grad = plan.backward(tape, w, batch)
+        # gate-entry FD
+        for gi, (m, n, mat) in enumerate(gates):
+            for k in range(mat.size):
+                up_mat = mat.copy().reshape(-1)
+                up_mat[k] += dtype(eps)
+                g_up = gates.copy()
+                g_up[gi] = (m, n, up_mat.reshape(mat.shape))
+                dn_mat = mat.copy().reshape(-1)
+                dn_mat[k] -= dtype(eps)
+                g_dn = gates.copy()
+                g_dn[gi] = (m, n, dn_mat.reshape(mat.shape))
+                # loss reduction in f64 (matches the rust test's
+                # f64-accumulated dot product; the forward stays f32)
+                lu = float(
+                    (Plan(dims, g_up).apply_batch(xs, batch) * w).sum(dtype=np.float64)
+                )
+                ld = float(
+                    (Plan(dims, g_dn).apply_batch(xs, batch) * w).sum(dtype=np.float64)
+                )
+                fd = (lu - ld) / (2 * eps)
+                an = float(gate_grads[gi].reshape(-1)[k])
+                rel = abs(fd - an) / max(abs(fd), abs(an), 1e-3)
+                worst = max(worst, rel)
+        # input-gradient check vs full_matrix^T
+        full_t = plan.full_matrix().T
+        want = w @ full_t.T  # (full^T w_b) rows
+        rel = np.abs(input_grad - want).max() / max(np.abs(want).max(), 1e-6)
+        worst = max(worst, float(rel))
+    return worst
+
+
+def merge_equivalence_margin():
+    """f32 max|merge @ x − apply(x)| on the rust adapter-test config."""
+    dims = [2, 3, 2]
+    rng = Rng(51)
+    gates = random_gates(dims, all_pairs_structure(3), 0.2, rng)
+    d = int(np.prod(dims))
+    base = rng.fill_normal(d * d, 1.0 / np.sqrt(d)).reshape(d, d)
+    a = Adapter(base, dims, gates, 0.6)
+    xs = rng.fill_normal(3 * d, 1.0).reshape(3, d)
+    y = a.apply_batch(xs)
+    merged = a.merge()
+    want = xs @ merged.T
+    return float(np.abs(y - want).max())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--bench-out",
+        default=str(Path(__file__).resolve().parents[2] / "BENCH_quanta_engine.json"),
+        help="merge the train_smoke section into this perf record "
+        "(created if missing); pass 'none' to skip writing",
+    )
+    args = ap.parse_args()
+
+    print("== gradcheck (f64, formula exactness) ==")
+    w64 = gradcheck(np.float64, eps=1e-4)
+    print(f"   worst rel err: {w64:.3e}")
+    assert w64 < 1e-7, w64
+
+    print("== gradcheck (f32, rust test tolerance) ==")
+    w32 = gradcheck(np.float32, eps=0.5)
+    print(f"   worst rel err: {w32:.3e}  (rust asserts < 1e-3)")
+    assert w32 < 5e-4, w32
+
+    print("== merge equivalence (f32) ==")
+    m = merge_equivalence_margin()
+    print(f"   max |merge@x - apply(x)|: {m:.3e}  (rust asserts < 1e-5)")
+    assert m < 1e-6, m
+
+    print("== host trainer: rust train_smoke.rs configs ==")
+    # tiny_task() in host_trainer.rs unit tests
+    base, structure, (tx, ty), (vx, vy) = teacher_student(
+        [2, 2, 2], 48, 16, 0.3, 0.0, 1.0, seed=7
+    )
+    student = Adapter(base, [2, 2, 2], identity_gates([2, 2, 2], structure), 1.0)
+    init = mse(student.apply_batch(tx), ty)
+    curve, val = finetune_host(student, tx, ty, vx, vy, steps=120, batch=16, seed=0)
+    fin = mse(student.apply_batch(tx), ty)
+    print(f"   dims [2,2,2]: train mse {init:.5f} -> {fin:.5f}  ({init / fin:.1f}x, val {val:.5f})")
+    assert fin < 0.25 * init, (init, fin)
+
+    # the CI train-smoke task (rust/tests/train_smoke.rs)
+    base, structure, (tx, ty), (vx, vy) = teacher_student(
+        [4, 4, 4], 128, 32, 0.3, 0.01, 1.0, seed=0
+    )
+    student = Adapter(base, [4, 4, 4], identity_gates([4, 4, 4], structure), 1.0)
+    init = mse(student.apply_batch(tx), ty)
+    curve, val = finetune_host(student, tx, ty, vx, vy, steps=150, batch=32, seed=0)
+    fin = mse(student.apply_batch(tx), ty)
+    print(f"   dims [4,4,4]: train mse {init:.5f} -> {fin:.5f}  ({init / fin:.1f}x, val {val:.5f})")
+    assert fin < 0.25 * init, (init, fin)
+
+    # bench config timings (vectorized; the rust bench is the real record)
+    dims, batch, steps = [4, 4, 8], 32, 100
+    base, structure, (tx, ty), (vx, vy) = teacher_student(dims, 256, 64, 0.3, 0.01, 1.0, seed=0)
+    student = Adapter(base, dims, identity_gates(dims, structure), 1.0)
+    xs, ys = tx[:batch], ty[:batch]
+
+    def timeit_us(f, iters, warmup=2):
+        for _ in range(warmup):
+            f()
+        samples = []
+        for _ in range(iters):
+            t = time.perf_counter()
+            f()
+            samples.append((time.perf_counter() - t) * 1e6)
+        return float(np.median(samples))
+
+    fwd_us = timeit_us(lambda: student.forward_with_tape(xs), 30)
+    pred, tape, plan = student.forward_with_tape(xs)
+    _, dpred = mse_grad(pred, ys)
+    bwd_us = timeit_us(lambda: student.backward(plan, tape, dpred), 30)
+
+    adam = Adam(student.params_flat().size)
+    sampler = Sampler(tx.shape[0], 0)
+
+    def full_step():
+        idx = sampler.next_indices(batch)
+        xb, yb = tx[idx], ty[idx]
+        p, tp, pl = student.forward_with_tape(xb)
+        _, dp = mse_grad(p, yb)
+        g = np.concatenate([q.reshape(-1) for q in student.backward(pl, tp, dp)])
+        g = clip_global_norm(g.astype(np.float32), 1.0)
+        student.set_params(adam.step(student.params_flat(), g))
+
+    step_us = timeit_us(full_step, 30)
+
+    # fresh student: the timing loop above already trained `student`
+    student2 = Adapter(base, dims, identity_gates(dims, structure), 1.0)
+    init = mse(student2.apply_batch(tx), ty)
+    curve, val = finetune_host(student2, tx, ty, vx, vy, steps=steps, batch=batch, seed=0)
+    fin = curve[-1]
+    reduction = init / max(fin, 1e-300)
+    print(f"== bench train_smoke: fwd {fwd_us:.0f}us bwd {bwd_us:.0f}us step {step_us:.0f}us "
+          f"loss_reduction {reduction:.1f}x ==")
+
+    if args.bench_out != "none":
+        # merge into the shared perf record so engine_mirror.py +
+        # train_mirror.py (in either order) produce the full schema-2
+        # record the CI perf-smoke gates read
+        out_path = Path(args.bench_out)
+        record = {
+            "bench": "quanta_engine",
+            "schema_version": 2,
+            "substrate": "python-numpy-mirror",
+            "results": {},
+        }
+        if out_path.exists():
+            try:
+                prev = json.loads(out_path.read_text())
+                # never inject mirror timings into a rust-native record
+                # (mirrors engine_mirror.py's provenance guard)
+                if prev.get("substrate") == "python-numpy-mirror":
+                    record = prev
+            except (json.JSONDecodeError, OSError):
+                pass
+        record["schema_version"] = 2
+        record.setdefault("results", {})["train_smoke"] = {
+            "dims": dims,
+            "batch": batch,
+            "params": int(student.params_flat().size),
+            "steps": steps,
+            "fwd_us": round(fwd_us, 1),
+            "bwd_us": round(bwd_us, 1),
+            "step_us": round(step_us, 1),
+            "loss_reduction": round(reduction, 2),
+        }
+        out_path.write_text(json.dumps(record, indent=2) + "\n")
+        print(f"merged train_smoke into {out_path}")
+    print("ALL MIRROR CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -214,7 +214,8 @@ impl Runner {
         let set = format!("pretrain_{arch}");
         let man = Manifest::load(&self.artifacts_dir.join(&set))?;
         let base = Session::init_base(&man, 0, None)?; // dummy scalar
-        let mut session = Session::load(&self.client, &self.artifacts_dir, &set, &base, &["train_step"])?;
+        let mut session =
+            Session::load(&self.client, &self.artifacts_dir, &set, &base, &["train_step"])?;
         let out = trainer::pretrain(&mut session, &self.tok, 0, None)?;
         checkpoint::save(&path, &set, &out.final_theta)?;
         self.base_cache.insert(arch.to_string(), out.final_theta.clone());
@@ -245,7 +246,11 @@ impl Runner {
         // final `cargo bench` capture so it stays within a CI-sized
         // budget; run the individual bench target to fill a row in).
         if std::env::var("QFT_CACHED_ONLY").is_ok() {
-            eprintln!("SKIP (QFT_CACHED_ONLY): {} on {} not cached", spec.set, spec.train.cache_tag());
+            eprintln!(
+                "SKIP (QFT_CACHED_ONLY): {} on {} not cached",
+                spec.set,
+                spec.train.cache_tag()
+            );
             let per_task = spec
                 .eval_tasks
                 .iter()

@@ -1,0 +1,333 @@
+//! Artifact-free fine-tuning: Adam + gradient clipping over the
+//! pure-rust gradient engine (`quanta::grad`), no PJRT required.
+//!
+//! Mirrors the PJRT trainer's contract (`coordinator::trainer`): train
+//! on minibatches from the train split, periodically evaluate on the
+//! validation split, keep the **best checkpoint on validation loss**
+//! (paper App. E), optionally early-stop on patience, and return the
+//! same [`TrainOutcome`] shape — so downstream reporting treats host
+//! and PJRT runs uniformly.  The trainable state is the adapter's flat
+//! gate-parameter vector; the base weight stays frozen by construction
+//! (the backward never produces a gradient for it).
+
+use crate::coordinator::trainer::TrainOutcome;
+use crate::data::batcher::Sampler;
+use crate::data::synth::SynthTask;
+use crate::info;
+use crate::quanta::QuantaAdapter;
+use crate::util::error::{Error, Result};
+
+/// Host fine-tuning configuration (Adam hyper-parameters follow the
+/// paper's App. E defaults; `clip` is the global-norm ceiling, 0
+/// disables clipping).
+#[derive(Clone, Debug)]
+pub struct HostTrainConfig {
+    pub seed: u64,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Global-norm gradient clip (0 = off).
+    pub clip: f32,
+    pub eval_every: usize,
+    pub log_every: usize,
+    /// Stop after this many evals without val improvement (None = never).
+    pub patience: Option<usize>,
+}
+
+impl Default for HostTrainConfig {
+    fn default() -> Self {
+        HostTrainConfig {
+            seed: 0,
+            steps: 200,
+            batch: 32,
+            lr: 2e-2,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            clip: 1.0,
+            eval_every: 20,
+            log_every: 20,
+            patience: None,
+        }
+    }
+}
+
+/// Adam optimizer state over a flat parameter vector (bias-corrected,
+/// Kingma & Ba 2015 — the same update the train_step HLO bakes in).
+pub struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+}
+
+impl Adam {
+    pub fn new(n: usize, cfg: &HostTrainConfig) -> Adam {
+        Adam {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+            lr: cfg.lr,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+        }
+    }
+
+    /// One update step: `params ← params − lr · m̂ / (√v̂ + ε)`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+            *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+            let mh = *m / bc1;
+            let vh = *v / bc2;
+            *p -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Scale `grads` so its global L2 norm is at most `max_norm`; returns
+/// the pre-clip norm.  No-op when `max_norm <= 0`.
+pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = grads.iter().map(|g| (*g as f64).powi(2)).sum::<f64>().sqrt() as f32;
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+/// Mean-squared error over flat panels (f64 accumulation).
+pub fn mse(pred: &[f32], target: &[f32]) -> f64 {
+    debug_assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(target)
+        .map(|(p, y)| ((p - y) as f64).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// MSE plus its gradient w.r.t. `pred` (`2 (pred − target) / n`).
+pub fn mse_grad(pred: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
+    let n = pred.len().max(1) as f32;
+    let grad = pred.iter().zip(target).map(|(p, y)| 2.0 * (p - y) / n).collect();
+    (mse(pred, target), grad)
+}
+
+/// Mean validation loss of the adapter on the task's val split.
+pub fn val_loss_host(adapter: &QuantaAdapter, task: &SynthTask) -> Result<f64> {
+    if task.n_val == 0 {
+        return Ok(f64::NAN);
+    }
+    let pred = adapter.apply_batch(&task.val_x, task.n_val)?;
+    Ok(mse(&pred, &task.val_y))
+}
+
+/// Fine-tune the adapter's circuit on a synthetic task with Adam +
+/// global-norm gradient clipping.  The adapter is left at the **final**
+/// parameters; `TrainOutcome::best_theta` holds the best-on-validation
+/// checkpoint (load it with [`QuantaAdapter::set_params`]).
+pub fn finetune_host(
+    adapter: &mut QuantaAdapter,
+    task: &SynthTask,
+    cfg: &HostTrainConfig,
+) -> Result<TrainOutcome> {
+    let start = std::time::Instant::now();
+    let d = adapter.d();
+    if task.d != d {
+        return Err(Error::Config(format!("task d {} != adapter d {d}", task.d)));
+    }
+    let degenerate = cfg.batch == 0
+        || cfg.steps == 0
+        || task.n_train == 0
+        || cfg.eval_every == 0
+        || cfg.log_every == 0;
+    if degenerate {
+        return Err(Error::Config(format!(
+            "degenerate run: steps {} batch {} n_train {} eval_every {} log_every {}",
+            cfg.steps, cfg.batch, task.n_train, cfg.eval_every, cfg.log_every
+        )));
+    }
+    let mut params = adapter.params_flat();
+    let mut adam = Adam::new(params.len(), cfg);
+    let mut sampler = Sampler::new(task.n_train, cfg.seed);
+    let mut xs = vec![0.0f32; cfg.batch * d];
+    let mut ys = vec![0.0f32; cfg.batch * d];
+
+    let mut best_theta = params.clone();
+    let mut best_val = f64::INFINITY;
+    let mut loss_curve = vec![];
+    let mut val_curve = vec![];
+    let mut since_best = 0usize;
+    let mut steps_run = 0usize;
+
+    for step in 0..cfg.steps {
+        for (slot, &i) in sampler.next_indices(cfg.batch).iter().enumerate() {
+            xs[slot * d..(slot + 1) * d].copy_from_slice(&task.train_x[i * d..(i + 1) * d]);
+            ys[slot * d..(slot + 1) * d].copy_from_slice(&task.train_y[i * d..(i + 1) * d]);
+        }
+        let (pred, tape) = adapter.forward_with_tape(&xs, cfg.batch)?;
+        let (loss, dpred) = mse_grad(&pred, &ys);
+        // gate gradients only — the input gradient is never used here
+        let mut grads = adapter.backward_gates(&tape, &dpred, cfg.batch)?;
+        clip_global_norm(&mut grads, cfg.clip);
+        adam.step(&mut params, &grads);
+        adapter.set_params(&params)?;
+        steps_run = step + 1;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            loss_curve.push((step, loss));
+        }
+        let is_eval = (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps;
+        if is_eval && task.n_val > 0 {
+            let vl = val_loss_host(adapter, task)?;
+            val_curve.push((step + 1, vl));
+            if vl < best_val {
+                best_val = vl;
+                best_theta.copy_from_slice(&params);
+                since_best = 0;
+            } else {
+                since_best += 1;
+                if let Some(p) = cfg.patience {
+                    if since_best >= p {
+                        info!("host early stop at step {} (no val gain for {} evals)", step + 1, p);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    if !best_val.is_finite() {
+        best_theta.copy_from_slice(&params);
+    }
+    Ok(TrainOutcome {
+        best_theta,
+        best_val_loss: best_val,
+        final_theta: params,
+        loss_curve,
+        val_curve,
+        steps_run,
+        wallclock_s: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{teacher_student, SynthConfig};
+
+    fn tiny_task() -> SynthTask {
+        teacher_student(&SynthConfig {
+            dims: vec![2, 2, 2],
+            n_train: 48,
+            n_val: 16,
+            teacher_std: 0.3,
+            noise_std: 0.0,
+            alpha: 1.0,
+            seed: 7,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn adam_descends_a_quadratic() {
+        // minimize ||p - c||² — Adam must make steady progress
+        let c = [3.0f32, -1.0, 0.5];
+        let mut p = [0.0f32; 3];
+        let cfg = HostTrainConfig { lr: 0.1, ..Default::default() };
+        let mut adam = Adam::new(3, &cfg);
+        let f = |p: &[f32]| -> f32 { p.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum() };
+        let f0 = f(&p);
+        for _ in 0..200 {
+            let g: Vec<f32> = p.iter().zip(&c).map(|(a, b)| 2.0 * (a - b)).collect();
+            adam.step(&mut p, &g);
+        }
+        assert!(f(&p) < 0.01 * f0, "Adam failed to descend: {} -> {}", f0, f(&p));
+    }
+
+    #[test]
+    fn clip_preserves_direction_and_caps_norm() {
+        let mut g = [3.0f32, 4.0];
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((g[0] - 0.6).abs() < 1e-6 && (g[1] - 0.8).abs() < 1e-6);
+        let mut h = [0.3f32, 0.4];
+        clip_global_norm(&mut h, 1.0);
+        assert_eq!(h, [0.3, 0.4], "norms under the ceiling must pass through");
+        let mut u = [3.0f32, 4.0];
+        clip_global_norm(&mut u, 0.0);
+        assert_eq!(u, [3.0, 4.0], "clip 0 disables clipping");
+    }
+
+    #[test]
+    fn host_trainer_learns_the_teacher_delta() {
+        let task = tiny_task();
+        let mut student = task.student().unwrap();
+        let init = {
+            let pred = student.apply_batch(&task.train_x, task.n_train).unwrap();
+            mse(&pred, &task.train_y)
+        };
+        let cfg = HostTrainConfig { steps: 120, batch: 16, eval_every: 20, ..Default::default() };
+        let out = finetune_host(&mut student, &task, &cfg).unwrap();
+        let fin = {
+            let pred = student.apply_batch(&task.train_x, task.n_train).unwrap();
+            mse(&pred, &task.train_y)
+        };
+        assert!(
+            fin < 0.5 * init,
+            "train loss did not halve: {init} -> {fin} (curve {:?})",
+            out.loss_curve
+        );
+        assert!(out.best_val_loss.is_finite());
+        assert_eq!(out.steps_run, 120);
+    }
+
+    #[test]
+    fn best_checkpoint_contract_matches_pjrt_trainer() {
+        // best_theta must correspond to the best recorded val loss, and
+        // loading it must reproduce that loss exactly.
+        let task = tiny_task();
+        let mut student = task.student().unwrap();
+        let cfg = HostTrainConfig { steps: 60, batch: 16, eval_every: 10, ..Default::default() };
+        let out = finetune_host(&mut student, &task, &cfg).unwrap();
+        let min_curve = out
+            .val_curve
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(out.best_val_loss, min_curve);
+        student.set_params(&out.best_theta).unwrap();
+        let reloaded = val_loss_host(&student, &task).unwrap();
+        assert!((reloaded - out.best_val_loss).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let task = tiny_task();
+        let cfg = HostTrainConfig { steps: 30, batch: 8, ..Default::default() };
+        let mut s1 = task.student().unwrap();
+        let mut s2 = task.student().unwrap();
+        let o1 = finetune_host(&mut s1, &task, &cfg).unwrap();
+        let o2 = finetune_host(&mut s2, &task, &cfg).unwrap();
+        assert_eq!(o1.final_theta, o2.final_theta);
+        assert_eq!(o1.loss_curve, o2.loss_curve);
+    }
+}

@@ -8,9 +8,11 @@
 
 pub mod checkpoint;
 pub mod trainer;
+pub mod host_trainer;
 pub mod evaluator;
 pub mod experiment;
 pub mod tables;
 
 pub use experiment::{RunResult, RunSpec, Runner, TrainTask};
+pub use host_trainer::{finetune_host, HostTrainConfig};
 pub use trainer::{FinetuneConfig, TrainOutcome};

@@ -110,7 +110,8 @@ mod tests {
         // row: BOS 10 11 12 SEP 20 21 EOS PAD...
         assert_eq!(&row[..8], &[BOS as i32, 10, 11, 12, SEP as i32, 20, 21, EOS as i32]);
         // answer tokens at positions 5,6; EOS at 7 => mask targets 4,5,6
-        let expect: Vec<f32> = (0..12).map(|t| if (4..=6).contains(&t) { 1.0 } else { 0.0 }).collect();
+        let expect: Vec<f32> =
+            (0..12).map(|t| if (4..=6).contains(&t) { 1.0 } else { 0.0 }).collect();
         assert_eq!(mask, expect);
     }
 

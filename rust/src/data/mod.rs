@@ -1,6 +1,7 @@
 //! Data pipeline: vocabulary, tokenizer, synthetic pretraining corpus,
 //! the 19 downstream task generators (paper App. D analogs), batching,
-//! and metrics.
+//! metrics, and the vector-regression tasks ([`synth`]) driving the
+//! artifact-free host trainer.
 //!
 //! Every dataset is a deterministic function of a seed; train/val/test
 //! splits are disjoint by construction (distinct seed streams), matching
@@ -13,6 +14,7 @@ pub mod corpus;
 pub mod example;
 pub mod batcher;
 pub mod metrics;
+pub mod synth;
 pub mod tasks;
 
 pub use example::{Example, Split, TaskData};

@@ -121,7 +121,8 @@ pub fn stsb(tok: &Tokenizer, seed: u64, sizes: Sizes) -> TaskData {
                 }
             }
         }
-        let sent = |s: &[&str; 5]| format!("{} {} the {} {} in the {}", s[0], s[1], s[2], s[3], s[4]);
+        let sent =
+            |s: &[&str; 5]| format!("{} {} the {} {} in the {}", s[0], s[1], s[2], s[3], s[4]);
         let prompt = tok.encode(&format!(
             "{} . {} . question similar score ?",
             sent(&s1),

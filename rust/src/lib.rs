@@ -15,12 +15,13 @@
 //! used to property-test the paper's theorems (universality, rank
 //! representation, composition openness) independently of the HLO path,
 //! executed through a plan-cached batched circuit engine
-//! ([`quanta::plan`], DESIGN.md §4).
+//! ([`quanta::plan`], DESIGN.md §4) with an analytic backward pass
+//! ([`quanta::grad`]) feeding an artifact-free host trainer
+//! ([`coordinator::host_trainer`], DESIGN.md §5).
 
-// The numerical kernels index multiple flat buffers with explicit
-// arithmetic by design (DESIGN.md §4); iterator rewrites obscure the
-// stride math without changing the generated code.
-#![allow(clippy::needless_range_loop)]
+// Crate-wide lint policy (needless_range_loop etc.) lives in the
+// `[lints]` table of rust/Cargo.toml so it covers tests, benches, and
+// examples as well as the library.
 
 pub mod util;
 pub mod tensor;

@@ -73,7 +73,8 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             println!("artifact sets:");
             for s in Manifest::list_sets(&root.join("artifacts"))? {
                 let man = Manifest::load(&root.join("artifacts").join(&s))?;
-                let method = man.method.as_ref().map(|m| m.name.clone()).unwrap_or("pretrain".into());
+                let method =
+                    man.method.as_ref().map(|m| m.name.clone()).unwrap_or("pretrain".into());
                 println!(
                     "  {s:28} arch={:6} method={:8} trainable={} ({})",
                     man.arch.name,
@@ -90,25 +91,37 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             let root = std::env::current_dir()?;
             let man = Manifest::load(&root.join("artifacts").join(set))?;
             println!("set:        {}", man.name);
-            println!("arch:       {} (d={}, layers={}, heads={}, vocab={}, seq={})",
-                man.arch.name, man.arch.d_model, man.arch.n_layers, man.arch.n_heads,
-                man.arch.vocab, man.arch.seq_len);
+            println!(
+                "arch:       {} (d={}, layers={}, heads={}, vocab={}, seq={})",
+                man.arch.name,
+                man.arch.d_model,
+                man.arch.n_layers,
+                man.arch.n_heads,
+                man.arch.vocab,
+                man.arch.seq_len
+            );
             if let Some(m) = &man.method {
                 println!("method:     {} on {:?}", m.name, m.modules);
             } else {
                 println!("method:     (pretraining)");
             }
-            println!("trainable:  {} / {} ({})",
-                man.counts.trainable_params, man.counts.model_params,
-                pct(man.counts.trainable_percent));
-            println!("schedule:   lr={} warmup={} total={}", man.hyper.lr,
-                man.hyper.warmup_steps, man.hyper.total_steps);
+            println!(
+                "trainable:  {} / {} ({})",
+                man.counts.trainable_params,
+                man.counts.model_params,
+                pct(man.counts.trainable_percent)
+            );
+            println!(
+                "schedule:   lr={} warmup={} total={}",
+                man.hyper.lr, man.hyper.warmup_steps, man.hyper.total_steps
+            );
             println!("artifacts:  {:?}", man.artifacts.keys().collect::<Vec<_>>());
             Ok(())
         }
         "pretrain" => {
             let arch = flags.get("arch").map(|s| s.as_str()).unwrap_or("tiny");
-            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let mut runner =
+                require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
             let base = runner.pretrained_base(arch)?;
             println!("base model '{arch}' ready: {} params", base.len());
             Ok(())
@@ -133,9 +146,11 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             }
             .with_seeds(&seeds);
             if let Some(steps) = flags.get("steps") {
-                spec = spec.with_steps(steps.parse().map_err(|_| quanta_ft::Error::msg("bad --steps"))?);
+                spec = spec
+                    .with_steps(steps.parse().map_err(|_| quanta_ft::Error::msg("bad --steps"))?);
             }
-            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let mut runner =
+                require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
             let result = runner.run(&spec)?;
             let mut t = Table::new(&["Task", "Metric", "Score (mean over seeds)"]);
             for (task, vals) in &result.per_task {
@@ -150,25 +165,40 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 ]);
             }
             t.print();
-            println!("trainable params: {} ({})", result.trainable_params, pct(result.trainable_percent));
+            println!(
+                "trainable params: {} ({})",
+                result.trainable_params,
+                pct(result.trainable_percent)
+            );
             Ok(())
         }
         "eval-base" => {
             let set = flags.get("set").ok_or_else(|| quanta_ft::Error::msg("--set required"))?;
             let task = flags.get("task").ok_or_else(|| quanta_ft::Error::msg("--task required"))?;
-            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let mut runner =
+                require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
             let score = runner.eval_base(set, task, Default::default())?;
             println!("base model on {task}: {}", score100(score));
             Ok(())
         }
         "analyze" => {
             let task = flags.get("task").map(|s| s.as_str()).unwrap_or("drop_syn");
-            let mut runner = require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
+            let mut runner =
+                require_artifacts().ok_or_else(|| quanta_ft::Error::msg("no artifacts"))?;
             let report = analysis::subspace_analysis(
-                &mut runner, task, "tiny_lora_r32", "tiny_lora_r64", 0, 24, 24)?;
+                &mut runner,
+                task,
+                "tiny_lora_r32",
+                "tiny_lora_r64",
+                0,
+                24,
+                24,
+            )?;
             println!("task={} module={}", report.task, report.module);
-            println!("mean phi = {:.3}, tail phi = {:.3}, effective rank(r2 dW) = {:.1}",
-                report.mean_phi, report.tail_phi, report.effective_rank_r2);
+            println!(
+                "mean phi = {:.3}, tail phi = {:.3}, effective rank(r2 dW) = {:.1}",
+                report.mean_phi, report.tail_phi, report.effective_rank_r2
+            );
             print!("{}", analysis::render_heatmap(&report.grid, 24));
             Ok(())
         }

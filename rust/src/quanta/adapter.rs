@@ -1,0 +1,330 @@
+//! QuanTA adapter: a trainable circuit delta on a frozen base weight.
+//!
+//! The paper's fine-tuned weight is `W' = W + ΔW` with `ΔW` the
+//! materialized circuit minus identity (Eq. 7–8); applied to an
+//! activation this is
+//!
+//! ```text
+//! y = W x + α · (circuit(x) − x)
+//! ```
+//!
+//! so with identity-initialized gates the adapter starts as an exact
+//! no-op on top of `W` (the QuanTA training init).  The circuit part
+//! runs through the plan-cached engine without ever materializing
+//! `ΔW`; [`QuantaAdapter::merge`] folds the trained delta into a dense
+//! matrix once at the end — the paper's zero-inference-overhead claim.
+//!
+//! Gradients: `∂y/∂(circuit out) = α`, so the adapter backward scales
+//! the upstream gradient by `α` and hands it to
+//! [`CircuitPlan::backward`]; `W` is frozen by construction (no
+//! gradient is ever computed for it).
+
+use crate::quanta::circuit::Circuit;
+use crate::quanta::grad::{CircuitGrads, CircuitTape};
+use crate::quanta::plan::CircuitPlan;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// A frozen base weight plus a trainable QuanTA circuit delta.
+///
+/// The adapter owns a [`CircuitPlan`] built once at construction; the
+/// only mutable path to the gates is [`QuantaAdapter::set_params`],
+/// which refreshes the plan's gate-matrix snapshots in place
+/// ([`CircuitPlan::refresh_gate_mats`]) — so per-optimizer-step
+/// parameter writes cost a memcpy, never a rebuild of the
+/// stride/rest-offset/gather tables.
+#[derive(Clone, Debug)]
+pub struct QuantaAdapter {
+    /// Frozen base weight, `(d, d)` row-major.
+    base: Tensor,
+    /// Cached transpose of `base` (row-major batched apply is
+    /// `X · Wᵀ`, so the transpose is the matmul operand).
+    base_t: Tensor,
+    /// Trainable circuit (private: mutating it outside `set_params`
+    /// would desync the owned plan).
+    circuit: Circuit,
+    /// Execution plan kept in lock-step with `circuit`.
+    plan: CircuitPlan,
+    /// Delta scale `α` (paper's scaling hyper-parameter).
+    pub alpha: f32,
+}
+
+impl QuantaAdapter {
+    /// Wrap `base` with a circuit delta.  `base` must be square with
+    /// side `circuit.total_dim()`.
+    pub fn new(base: Tensor, circuit: Circuit, alpha: f32) -> Result<QuantaAdapter> {
+        let d = circuit.total_dim();
+        if base.shape != [d, d] {
+            return Err(Error::Shape(format!(
+                "adapter: base shape {:?}, want [{d}, {d}] from dims {:?}",
+                base.shape,
+                circuit.dims()
+            )));
+        }
+        let base_t = base.t()?;
+        let plan = CircuitPlan::new(&circuit)?;
+        Ok(QuantaAdapter { base, base_t, circuit, plan, alpha })
+    }
+
+    /// Adapter with identity-initialized gates over `structure` — the
+    /// training init: `apply_batch == base` exactly at step 0.
+    pub fn identity_init(
+        base: Tensor,
+        dims: &[usize],
+        structure: &[(usize, usize)],
+        alpha: f32,
+    ) -> Result<QuantaAdapter> {
+        QuantaAdapter::new(base, Circuit::identity(dims, structure)?, alpha)
+    }
+
+    pub fn d(&self) -> usize {
+        self.circuit.total_dim()
+    }
+
+    pub fn base(&self) -> &Tensor {
+        &self.base
+    }
+
+    /// Read-only view of the trainable circuit (mutation goes through
+    /// [`QuantaAdapter::set_params`], which keeps the plan in sync).
+    pub fn circuit(&self) -> &Circuit {
+        &self.circuit
+    }
+
+    /// Trainable parameter count (`Σ (d_m d_n)²`, paper §6).
+    pub fn param_count(&self) -> usize {
+        self.circuit.param_count()
+    }
+
+    /// Flatten the gate matrices into one parameter vector (gate 0
+    /// row-major, then gate 1, …) — the optimizer layout, matching
+    /// [`CircuitGrads::flat_gates`].
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for g in self.circuit.gates() {
+            out.extend_from_slice(&g.mat.data);
+        }
+        out
+    }
+
+    /// Write a flat parameter vector back into the gate matrices and
+    /// refresh the owned plan's snapshots in place (memcpy cost — the
+    /// plan's index tables are untouched).
+    pub fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.param_count() {
+            return Err(Error::Shape(format!(
+                "set_params: got {} values, adapter has {} parameters",
+                flat.len(),
+                self.param_count()
+            )));
+        }
+        let mut off = 0;
+        for g in self.circuit.gates_mut() {
+            let n = g.mat.data.len();
+            g.mat.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        self.plan.refresh_gate_mats(&self.circuit)
+    }
+
+    /// `y = W x + α (circuit(x) − x)` over a row-major `[batch, d]`
+    /// panel.
+    pub fn apply_batch(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let cx = self.plan.apply_batch(xs, batch)?;
+        self.combine(xs, &cx, batch)
+    }
+
+    /// Forward pass that also records the circuit tape for
+    /// [`QuantaAdapter::backward`].
+    pub fn forward_with_tape(&self, xs: &[f32], batch: usize) -> Result<(Vec<f32>, CircuitTape)> {
+        let (cx, tape) = self.plan.apply_batch_with_tape(xs, batch)?;
+        Ok((self.combine(xs, &cx, batch)?, tape))
+    }
+
+    /// Gate gradients only, given `∂loss/∂y` — the training hot path.
+    /// The base path and the `−α x` term carry no gate dependence, so
+    /// this is the circuit backward of `α · grad_out` (whose transpose
+    /// sweep is what chains gradients to earlier gates); the dense
+    /// base-path input-gradient GEMM that optimizers discard is
+    /// skipped.  Returns the flat optimizer layout
+    /// ([`CircuitGrads::flat_gates`]: gate 0 row-major, then gate 1,
+    /// …), matching [`QuantaAdapter::params_flat`]; see
+    /// [`QuantaAdapter::backward`] for the full `∂loss/∂x`.
+    pub fn backward_gates(
+        &self,
+        tape: &CircuitTape,
+        grad_out: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        Ok(self.circuit_backward(tape, grad_out, batch)?.flat_gates())
+    }
+
+    /// Full backward given `∂loss/∂y`: gate gradients plus the complete
+    /// input gradient `∂loss/∂x = Wᵀ g + α (circuitᵀ g − g)` through
+    /// all three forward terms.
+    pub fn backward(
+        &self,
+        tape: &CircuitTape,
+        grad_out: &[f32],
+        batch: usize,
+    ) -> Result<CircuitGrads> {
+        let d = self.d();
+        let mut grads = self.circuit_backward(tape, grad_out, batch)?;
+        // ∂loss/∂x: Wᵀ g (base path: Y = X Wᵀ ⇒ dX = dY W) plus the
+        // circuit-path input gradient minus the α·x passthrough.
+        let g_t = Tensor::from_vec(&[batch, d], grad_out.to_vec())?;
+        let base_part = g_t.matmul(&self.base)?;
+        for ((gi, &bp), &go) in grads.input.iter_mut().zip(&base_part.data).zip(grad_out) {
+            *gi += bp - self.alpha * go;
+        }
+        Ok(grads)
+    }
+
+    /// Circuit-path backward of `α · grad_out`: gate gradients are
+    /// final; `.input` holds only the circuit-path term `α circuitᵀ g`.
+    fn circuit_backward(
+        &self,
+        tape: &CircuitTape,
+        grad_out: &[f32],
+        batch: usize,
+    ) -> Result<CircuitGrads> {
+        let d = self.d();
+        if grad_out.len() != batch * d {
+            return Err(Error::Shape(format!(
+                "adapter backward: grad_out len {} != batch {batch} * d {d}",
+                grad_out.len()
+            )));
+        }
+        let scaled: Vec<f32> = grad_out.iter().map(|g| g * self.alpha).collect();
+        self.plan.backward(tape, &scaled)
+    }
+
+    /// Fold the delta into a dense matrix: `W + α (full_matrix − I)`
+    /// (paper Eq. 7 — the merged weight has zero inference overhead).
+    pub fn merge(&self) -> Result<Tensor> {
+        let d = self.d();
+        let full = self.plan.full_matrix()?;
+        let mut out = self.base.clone();
+        for i in 0..d {
+            for j in 0..d {
+                let delta = full.data[i * d + j] - if i == j { 1.0 } else { 0.0 };
+                out.data[i * d + j] += self.alpha * delta;
+            }
+        }
+        Ok(out)
+    }
+
+    /// `W x + α (cx − x)` given the already-computed circuit output.
+    fn combine(&self, xs: &[f32], cx: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let d = self.d();
+        if xs.len() != batch * d {
+            return Err(Error::Shape(format!(
+                "adapter apply: xs len {} != batch {batch} * d {d}",
+                xs.len()
+            )));
+        }
+        let x_t = Tensor::from_vec(&[batch, d], xs.to_vec())?;
+        let mut y = x_t.matmul(&self.base_t)?.data;
+        for ((yv, &cv), &xv) in y.iter_mut().zip(cx).zip(xs) {
+            *yv += self.alpha * (cv - xv);
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quanta::circuit::all_pairs_structure;
+    use crate::util::rng::Rng;
+
+    fn mk_adapter(rng: &mut Rng, std: f32, alpha: f32) -> QuantaAdapter {
+        let dims = [2usize, 3, 2];
+        let structure = all_pairs_structure(3);
+        let c = Circuit::random(&dims, &structure, std, rng).unwrap();
+        let d = c.total_dim();
+        let base = Tensor::randn(&[d, d], 1.0 / (d as f32).sqrt(), rng);
+        QuantaAdapter::new(base, c, alpha).unwrap()
+    }
+
+    #[test]
+    fn identity_init_is_exactly_base() {
+        let mut rng = Rng::new(50);
+        let dims = [2usize, 2, 3];
+        let d = 12;
+        let base = Tensor::randn(&[d, d], 0.3, &mut rng);
+        let a =
+            QuantaAdapter::identity_init(base.clone(), &dims, &all_pairs_structure(3), 0.7)
+                .unwrap();
+        let mut xs = vec![0.0f32; 4 * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let y = a.apply_batch(&xs, 4).unwrap();
+        let x_t = Tensor::from_vec(&[4, d], xs).unwrap();
+        let want = x_t.matmul(&base.t().unwrap()).unwrap();
+        for (got, want) in y.iter().zip(&want.data) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_apply() {
+        let mut rng = Rng::new(51);
+        let a = mk_adapter(&mut rng, 0.2, 0.6);
+        let d = a.d();
+        let merged = a.merge().unwrap();
+        let mut xs = vec![0.0f32; 3 * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let y = a.apply_batch(&xs, 3).unwrap();
+        for b in 0..3 {
+            let want = merged.matvec(&xs[b * d..(b + 1) * d]).unwrap();
+            for (i, (got, want)) in y[b * d..(b + 1) * d].iter().zip(&want).enumerate() {
+                assert!((got - want).abs() < 1e-5, "vector {b} elem {i}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_and_invalidate() {
+        let mut rng = Rng::new(52);
+        let mut a = mk_adapter(&mut rng, 0.3, 1.0);
+        let p = a.params_flat();
+        assert_eq!(p.len(), a.param_count());
+        let d = a.d();
+        let mut xs = vec![0.0f32; 2 * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let y0 = a.apply_batch(&xs, 2).unwrap();
+        // perturb one parameter; output must change (cache invalidated)
+        let mut p2 = p.clone();
+        p2[0] += 0.5;
+        a.set_params(&p2).unwrap();
+        let y1 = a.apply_batch(&xs, 2).unwrap();
+        assert!(y0.iter().zip(&y1).any(|(a, b)| (a - b).abs() > 1e-6));
+        // restore; output must match the original exactly
+        a.set_params(&p).unwrap();
+        assert_eq!(a.apply_batch(&xs, 2).unwrap(), y0);
+    }
+
+    #[test]
+    fn forward_with_tape_matches_apply() {
+        let mut rng = Rng::new(53);
+        let a = mk_adapter(&mut rng, 0.25, 0.9);
+        let d = a.d();
+        let mut xs = vec![0.0f32; 5 * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let y = a.apply_batch(&xs, 5).unwrap();
+        let (yt, tape) = a.forward_with_tape(&xs, 5).unwrap();
+        assert_eq!(y, yt);
+        assert_eq!(tape.inputs.len(), a.circuit().gates().len());
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut rng = Rng::new(54);
+        let c = Circuit::random(&[2, 2], &[(0, 1)], 0.1, &mut rng).unwrap();
+        let bad = Tensor::zeros(&[3, 3]);
+        assert!(QuantaAdapter::new(bad, c.clone(), 1.0).is_err());
+        let a = QuantaAdapter::new(Tensor::eye(4), c, 1.0).unwrap();
+        assert!(a.apply_batch(&[0.0; 7], 2).is_err());
+        assert!(a.set_params(&[0.0; 3]).is_err());
+    }
+}

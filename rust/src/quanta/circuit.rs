@@ -2,10 +2,16 @@
 //! materialization (paper Eq. 4–7).
 //!
 //! Execution is delegated to the plan-cached engine in
-//! [`crate::quanta::plan`]: the convenience methods here build a
-//! [`CircuitPlan`] per call, which is already `O(d/(d_m d_n))` setup per
-//! gate; callers applying the same circuit repeatedly (benches, the
-//! theorem property sweeps) should hold a [`Circuit::plan`] and reuse it.
+//! [`crate::quanta::plan`].  The circuit owns its plan: [`Circuit::plan`]
+//! builds it on first use and caches it (`OnceLock<Arc<CircuitPlan>>`),
+//! and every mutable path to the gates goes through
+//! [`Circuit::gates_mut`], which drops the cache — so a plan can never
+//! silently go stale, and repeated `apply`/`full_matrix` calls (theorem
+//! sweeps, tests) no longer pay per-call setup.  Handles obtained from
+//! `plan()` before a mutation keep the old snapshot, matching the
+//! plan's documented copy semantics.
+
+use std::sync::{Arc, OnceLock};
 
 use crate::quanta::plan::CircuitPlan;
 use crate::tensor::Tensor;
@@ -22,11 +28,16 @@ pub struct Gate {
 }
 
 /// A QuanTA circuit: axis dimensions + ordered gates (applied first to
-/// last, paper Eq. 5).
+/// last, paper Eq. 5).  Both fields are private so the cached execution
+/// plan is invalidated exactly when the circuit changes — read with
+/// [`Circuit::dims`] / [`Circuit::gates`], mutate gates through
+/// [`Circuit::gates_mut`] (dims are fixed at construction).
 #[derive(Clone, Debug)]
 pub struct Circuit {
-    pub dims: Vec<usize>,
-    pub gates: Vec<Gate>,
+    dims: Vec<usize>,
+    gates: Vec<Gate>,
+    /// Lazily built execution plan; cleared by `gates_mut`.
+    cache: OnceLock<Arc<CircuitPlan>>,
 }
 
 /// The paper's default structure (App. E.1): one gate per unordered axis
@@ -47,6 +58,40 @@ pub fn all_pairs_structure(n_axes: usize) -> Vec<(usize, usize)> {
 }
 
 impl Circuit {
+    /// Build a circuit from explicit gates, validating axes and matrix
+    /// shapes up front (the same invariants the plan relies on).
+    pub fn new(dims: Vec<usize>, gates: Vec<Gate>) -> Result<Circuit> {
+        for g in &gates {
+            if g.m >= dims.len() || g.n >= dims.len() || g.m == g.n {
+                return Err(Error::Shape(format!(
+                    "bad gate axes ({}, {}) for dims {dims:?}",
+                    g.m, g.n
+                )));
+            }
+            let sz = dims[g.m] * dims[g.n];
+            if g.mat.shape != [sz, sz] {
+                return Err(Error::Shape(format!(
+                    "gate ({}, {}) matrix shape {:?}, want [{sz}, {sz}]",
+                    g.m, g.n, g.mat.shape
+                )));
+            }
+        }
+        Ok(Circuit { dims, gates, cache: OnceLock::new() })
+    }
+
+    /// Identity circuit over `dims` with the given structure (every gate
+    /// `eye` — the QuanTA training init, so the chain starts as a no-op).
+    pub fn identity(dims: &[usize], structure: &[(usize, usize)]) -> Result<Circuit> {
+        let gates = structure
+            .iter()
+            .map(|&(m, n)| {
+                let sz = dims.get(m).copied().unwrap_or(0) * dims.get(n).copied().unwrap_or(0);
+                Gate { m, n, mat: Tensor::eye(sz) }
+            })
+            .collect();
+        Circuit::new(dims.to_vec(), gates)
+    }
+
     /// Random circuit over `dims` with the given structure; each gate is
     /// `eye + N(0, std^2)` like the training init.
     pub fn random(
@@ -64,7 +109,25 @@ impl Circuit {
             let mat = Tensor::eye(sz).add(&Tensor::randn(&[sz, sz], std, rng))?;
             gates.push(Gate { m, n, mat });
         }
-        Ok(Circuit { dims: dims.to_vec(), gates })
+        Circuit::new(dims.to_vec(), gates)
+    }
+
+    /// Axis dimensions of the reshaped hidden tensor.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Read-only view of the gate chain.
+    pub fn gates(&self) -> &[Gate] {
+        &self.gates
+    }
+
+    /// Mutable access to the gate chain.  Dropping into this accessor
+    /// invalidates the cached plan, so the next [`Circuit::plan`] (or
+    /// `apply`/`full_matrix`) rebuilds from the mutated gates.
+    pub fn gates_mut(&mut self) -> &mut Vec<Gate> {
+        self.cache = OnceLock::new();
+        &mut self.gates
     }
 
     pub fn total_dim(&self) -> usize {
@@ -84,15 +147,23 @@ impl Circuit {
         d * self.gates.iter().map(|g| self.dims[g.m] * self.dims[g.n]).sum::<usize>()
     }
 
-    /// Build the cached execution plan for this circuit (strides,
-    /// rest-offset tables, gather tables, gate-matrix snapshots).
-    pub fn plan(&self) -> Result<CircuitPlan> {
-        CircuitPlan::new(self)
+    /// The cached execution plan for this circuit (strides, rest-offset
+    /// tables, gather tables, gate-matrix snapshots), built on first use
+    /// and reused until the gates are mutated through
+    /// [`Circuit::gates_mut`].
+    pub fn plan(&self) -> Result<Arc<CircuitPlan>> {
+        if let Some(p) = self.cache.get() {
+            return Ok(p.clone());
+        }
+        let p = Arc::new(CircuitPlan::new(self)?);
+        // a racing builder may have set it first; either value is
+        // equivalent (both snapshot the same gates)
+        let _ = self.cache.set(p.clone());
+        Ok(p)
     }
 
     /// Apply the chain to a single hidden vector `x` of length `d`
-    /// (paper Eq. 4/5).  Convenience wrapper; hold a [`Circuit::plan`]
-    /// to amortize setup over repeated applications.
+    /// (paper Eq. 4/5), through the cached plan.
     pub fn apply(&self, x: &[f32]) -> Result<Vec<f32>> {
         self.plan()?.apply(x)
     }
@@ -132,11 +203,7 @@ mod tests {
     fn identity_circuit_is_identity() {
         let dims = [2usize, 3, 2];
         let structure = all_pairs_structure(3);
-        let mut rng = Rng::new(1);
-        let mut c = Circuit::random(&dims, &structure, 0.1, &mut rng).unwrap();
-        for g in &mut c.gates {
-            g.mat = Tensor::eye(g.mat.shape[0]);
-        }
+        let c = Circuit::identity(&dims, &structure).unwrap();
         let full = c.full_matrix().unwrap();
         assert!(full.max_abs_diff(&Tensor::eye(12)) < 1e-6);
     }
@@ -184,7 +251,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let c = Circuit::random(&dims, &structure, 0.5, &mut rng).unwrap();
         let full = c.full_matrix().unwrap();
-        assert!(full.max_abs_diff(&c.gates[0].mat) < 1e-6);
+        assert!(full.max_abs_diff(&c.gates()[0].mat) < 1e-6);
     }
 
     #[test]
@@ -204,29 +271,40 @@ mod tests {
     #[test]
     fn gate_order_matters() {
         // non-commuting gates: T1 then T2 differs from T2 then T1
-        let dims = [2usize, 2];
+        let dims = vec![2usize, 2];
         let mut rng = Rng::new(5);
         let g0 = Gate { m: 0, n: 1, mat: Tensor::randn(&[4, 4], 1.0, &mut rng) };
         let g1 = Gate { m: 0, n: 1, mat: Tensor::randn(&[4, 4], 1.0, &mut rng) };
-        let c01 = Circuit { dims: dims.to_vec(), gates: vec![g0.clone(), g1.clone()] };
-        let c10 = Circuit { dims: dims.to_vec(), gates: vec![g1, g0] };
+        let c01 = Circuit::new(dims.clone(), vec![g0.clone(), g1.clone()]).unwrap();
+        let c10 = Circuit::new(dims, vec![g1, g0]).unwrap();
         let f01 = c01.full_matrix().unwrap();
         let f10 = c10.full_matrix().unwrap();
         assert!(f01.max_abs_diff(&f10) > 1e-3);
     }
 
     #[test]
-    fn stale_plan_vs_fresh_plan() {
-        // the plan snapshots gate matrices: mutating the circuit after
-        // planning must not change the plan's output, and a fresh plan
-        // must pick the mutation up.
+    fn bad_gates_rejected_at_construction() {
+        let eye4 = Tensor::eye(4);
+        assert!(Circuit::new(vec![2, 2], vec![Gate { m: 0, n: 0, mat: eye4.clone() }]).is_err());
+        assert!(Circuit::new(vec![2, 2], vec![Gate { m: 0, n: 2, mat: eye4.clone() }]).is_err());
+        assert!(Circuit::new(vec![2, 3], vec![Gate { m: 0, n: 1, mat: eye4 }]).is_err());
+    }
+
+    #[test]
+    fn plan_cache_reused_and_invalidated_on_mutation() {
         let dims = [2usize, 2];
         let mut rng = Rng::new(8);
         let mut c = Circuit::random(&dims, &[(0, 1)], 0.5, &mut rng).unwrap();
-        let plan = c.plan().unwrap();
-        let before = plan.full_matrix().unwrap();
-        c.gates[0].mat = Tensor::eye(4);
-        assert!(plan.full_matrix().unwrap().max_abs_diff(&before) < 1e-9);
-        assert!(c.plan().unwrap().full_matrix().unwrap().max_abs_diff(&Tensor::eye(4)) < 1e-9);
+        let p1 = c.plan().unwrap();
+        let p2 = c.plan().unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "repeated plan() must hit the cache");
+        let before = p1.full_matrix().unwrap();
+        // mutation through gates_mut drops the cache...
+        c.gates_mut()[0].mat = Tensor::eye(4);
+        let p3 = c.plan().unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3), "plan cache must be invalidated by gates_mut");
+        assert!(p3.full_matrix().unwrap().max_abs_diff(&Tensor::eye(4)) < 1e-9);
+        // ...while previously obtained handles keep their snapshot
+        assert!(p1.full_matrix().unwrap().max_abs_diff(&before) < 1e-9);
     }
 }

@@ -1,0 +1,460 @@
+//! Analytic backward pass for the plan-cached circuit engine.
+//!
+//! The chain `h_L = T_L(… T_1(h_0) …)` (paper Eq. 5) is linear in the
+//! hidden state and linear in each gate matrix individually, so both
+//! gradients have closed forms that reuse the forward plan's machinery:
+//!
+//! * **input gradient** — each gate application is `out = A · in` on the
+//!   gathered `(d_m·d_n) × (rest·batch)` panels, so
+//!   `∂loss/∂in = Aᵀ · ∂loss/∂out`: the *transpose-gate trick* (Eq. 4 is
+//!   symmetric in the gate axes), run through the identical blocked
+//!   gather → GEMM → scatter pipeline with `Aᵀ`, gates visited in
+//!   reverse order.  No new index machinery: the same rest-offset and
+//!   gather tables drive both directions.
+//! * **gate gradient** — on the same panels,
+//!   `∂loss/∂A = (∂loss/∂out) · inᵀ`, an outer-product GEMM of the
+//!   gathered upstream-gradient panel against the gathered *forward
+//!   input* panel of that gate, accumulated over all `(rest, vector)`
+//!   columns.
+//!
+//! The forward inputs are recorded by [`CircuitPlan::apply_batch_with_tape`]
+//! into a [`CircuitTape`]: one `[batch, d]` snapshot of the hidden state
+//! per gate (`N_T · batch · d` floats — the chain analog of activation
+//! checkpointing at gate granularity).  [`CircuitPlan::backward`] then
+//! sweeps gates in reverse with the same per-vector panel chunking as
+//! the forward: input gradients are bitwise identical for any worker
+//! count (per-vector arithmetic is chunk-independent); gate gradients
+//! sum over vectors and are reduced in fixed chunk order, so they are
+//! deterministic for a fixed worker count (`QFT_THREADS`).
+
+use crate::quanta::plan::{CircuitPlan, GatePlan, BLOCK_COLS, PAR_MIN_FLOPS};
+use crate::util::error::{Error, Result};
+
+/// Per-gate forward activations recorded by
+/// [`CircuitPlan::apply_batch_with_tape`]: `inputs[α]` is the hidden
+/// panel *entering* gate `α`, row-major `[batch, d]` (so `inputs[0]` is
+/// the original input panel).
+#[derive(Clone, Debug)]
+pub struct CircuitTape {
+    pub batch: usize,
+    pub inputs: Vec<Vec<f32>>,
+}
+
+/// Gradients returned by [`CircuitPlan::backward`].
+#[derive(Clone, Debug)]
+pub struct CircuitGrads {
+    /// `∂loss/∂A_α` per gate, `(d_m·d_n, d_m·d_n)` row-major — the same
+    /// layout as [`GatePlan::mat`].
+    pub gates: Vec<Vec<f32>>,
+    /// `∂loss/∂xs`, row-major `[batch, d]`.
+    pub input: Vec<f32>,
+}
+
+impl CircuitGrads {
+    /// Total number of gate-gradient entries (the trainable parameter
+    /// count of the circuit).
+    pub fn param_count(&self) -> usize {
+        self.gates.iter().map(|g| g.len()).sum()
+    }
+
+    /// Flatten the per-gate gradients into one parameter-ordered vector
+    /// (gate 0 row-major, then gate 1, …) — the layout optimizers use.
+    pub fn flat_gates(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for g in &self.gates {
+            out.extend_from_slice(g);
+        }
+        out
+    }
+}
+
+impl CircuitPlan {
+    /// Forward pass that records the per-gate input panels needed by
+    /// [`CircuitPlan::backward`].  Identical arithmetic to
+    /// [`CircuitPlan::apply_batch`] (same blocked GEMMs, same per-vector
+    /// chunking), plus one `[batch, d]` copy per gate into the tape.
+    pub fn apply_batch_with_tape(
+        &self,
+        xs: &[f32],
+        batch: usize,
+    ) -> Result<(Vec<f32>, CircuitTape)> {
+        if xs.len() != batch * self.d {
+            return Err(Error::Shape(format!(
+                "apply_batch_with_tape: xs len {} != batch {batch} * d {}",
+                xs.len(),
+                self.d
+            )));
+        }
+        let mut h = xs.to_vec();
+        let mut tape: Vec<Vec<f32>> =
+            self.gates.iter().map(|_| vec![0.0f32; batch * self.d]).collect();
+        if self.d == 0 || batch == 0 || self.gates.is_empty() {
+            return Ok((h, CircuitTape { batch, inputs: tape }));
+        }
+        let workers = self.grad_workers(batch);
+        if workers <= 1 {
+            let mut scratch = self.scratch();
+            for (g, dst) in self.gates.iter().zip(tape.iter_mut()) {
+                dst.copy_from_slice(&h);
+                self.apply_gate_chunk(g, &mut h, batch, &mut scratch);
+            }
+        } else {
+            let chunk_vecs = batch.div_ceil(workers);
+            let chunk_len = chunk_vecs * self.d;
+            std::thread::scope(|s| {
+                let mut tape_chunks: Vec<_> =
+                    tape.iter_mut().map(|t| t.chunks_mut(chunk_len)).collect();
+                for chunk in h.chunks_mut(chunk_len) {
+                    let mut slots: Vec<&mut [f32]> =
+                        tape_chunks.iter_mut().map(|it| it.next().unwrap()).collect();
+                    s.spawn(move || {
+                        let cb = chunk.len() / self.d;
+                        let mut scratch = self.scratch();
+                        for (g, dst) in self.gates.iter().zip(slots.iter_mut()) {
+                            dst.copy_from_slice(chunk);
+                            self.apply_gate_chunk(g, chunk, cb, &mut scratch);
+                        }
+                    });
+                }
+            });
+        }
+        Ok((h, CircuitTape { batch, inputs: tape }))
+    }
+
+    /// Backward pass: given `∂loss/∂output` over the taped panel, return
+    /// `∂loss/∂A_α` for every gate and `∂loss/∂input`.
+    pub fn backward(&self, tape: &CircuitTape, grad_out: &[f32]) -> Result<CircuitGrads> {
+        let batch = tape.batch;
+        if grad_out.len() != batch * self.d {
+            return Err(Error::Shape(format!(
+                "backward: grad_out len {} != batch {batch} * d {}",
+                grad_out.len(),
+                self.d
+            )));
+        }
+        if tape.inputs.len() != self.gates.len() {
+            return Err(Error::Shape(format!(
+                "backward: tape has {} gate panels, plan has {} gates",
+                tape.inputs.len(),
+                self.gates.len()
+            )));
+        }
+        for (a, t) in tape.inputs.iter().enumerate() {
+            if t.len() != batch * self.d {
+                return Err(Error::Shape(format!(
+                    "backward: tape panel {a} len {} != batch {batch} * d {}",
+                    t.len(),
+                    self.d
+                )));
+            }
+        }
+        let mut g = grad_out.to_vec();
+        let mut gate_grads: Vec<Vec<f32>> =
+            self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect();
+        if self.d == 0 || batch == 0 || self.gates.is_empty() {
+            return Ok(CircuitGrads { gates: gate_grads, input: g });
+        }
+        let workers = self.grad_workers(batch);
+        if workers <= 1 {
+            let mut scratch = GradScratch::new(self);
+            let tape_refs: Vec<&[f32]> = tape.inputs.iter().map(|t| t.as_slice()).collect();
+            self.backward_chunk(&mut g, &tape_refs, batch, &mut gate_grads, &mut scratch);
+            return Ok(CircuitGrads { gates: gate_grads, input: g });
+        }
+        // Vectors stay independent through the reverse chain, so the
+        // input gradient uses the same per-vector chunking as the
+        // forward.  Gate gradients sum over vectors: each worker
+        // accumulates into a private buffer, reduced afterwards in
+        // chunk order (deterministic for a fixed worker count).
+        let chunk_vecs = batch.div_ceil(workers);
+        let chunk_len = chunk_vecs * self.d;
+        let n_chunks = g.len().div_ceil(chunk_len);
+        let mut partials: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            partials.push(self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect());
+        }
+        std::thread::scope(|s| {
+            for ((ci, chunk), partial) in
+                g.chunks_mut(chunk_len).enumerate().zip(partials.iter_mut())
+            {
+                let tape_chunks: Vec<&[f32]> = tape
+                    .inputs
+                    .iter()
+                    .map(|t| &t[ci * chunk_len..(ci * chunk_len + chunk.len())])
+                    .collect();
+                s.spawn(move || {
+                    let cb = chunk.len() / self.d;
+                    let mut scratch = GradScratch::new(self);
+                    self.backward_chunk(chunk, &tape_chunks, cb, partial, &mut scratch);
+                });
+            }
+        });
+        for partial in &partials {
+            for (acc, p) in gate_grads.iter_mut().zip(partial) {
+                for (a, &v) in acc.iter_mut().zip(p) {
+                    *a += v;
+                }
+            }
+        }
+        Ok(CircuitGrads { gates: gate_grads, input: g })
+    }
+
+    /// Worker count shared by the tape forward and the backward sweep
+    /// (the backward does ~2× the forward GEMM work per gate, but the
+    /// same cutoff keeps fwd/bwd chunking — and input-grad bit
+    /// patterns — aligned).
+    fn grad_workers(&self, batch: usize) -> usize {
+        if batch * self.apply_flops() < PAR_MIN_FLOPS {
+            1
+        } else {
+            crate::tensor::num_threads(batch)
+        }
+    }
+
+    /// Reverse sweep over one chunk of `cb` vectors: for gate `α` (last
+    /// to first), accumulate `∂A_α` from the gathered upstream-gradient
+    /// and forward-input panels, then transform the upstream gradient
+    /// with `A_αᵀ` in place.
+    fn backward_chunk(
+        &self,
+        g: &mut [f32],
+        tape_chunks: &[&[f32]],
+        cb: usize,
+        gate_grads: &mut [Vec<f32>],
+        scratch: &mut GradScratch,
+    ) {
+        for ai in (0..self.gates.len()).rev() {
+            let gp = &self.gates[ai];
+            self.backward_gate_chunk(gp, g, tape_chunks[ai], cb, &mut gate_grads[ai], scratch);
+        }
+    }
+
+    /// One gate's backward over `cb` vectors, blocked like the forward:
+    /// gather `gy` (upstream grad) and `gx` (taped forward input), then
+    /// `∂A[i,p] += Σ_c gy[i,c]·gx[p,c]` (outer-product GEMM) and
+    /// `g ← scatter(Aᵀ · gy)` (transpose-gate GEMM).
+    fn backward_gate_chunk(
+        &self,
+        gp: &GatePlan,
+        g: &mut [f32],
+        hin: &[f32],
+        cb: usize,
+        dmat: &mut [f32],
+        scratch: &mut GradScratch,
+    ) {
+        let d = self.d;
+        let dmn = gp.dmn;
+        let rest_len = gp.rest.len();
+        let ncols = cb * rest_len;
+        let bw = BLOCK_COLS;
+        let mut c0 = 0;
+        while c0 < ncols {
+            let w = bw.min(ncols - c0);
+            for ci in 0..w {
+                let col = c0 + ci;
+                let b = col / rest_len;
+                let r = col - b * rest_len;
+                scratch.bases[ci] = b * d + gp.rest[r];
+            }
+            let bases = &scratch.bases[..w];
+            // gather gy from the upstream gradient and gx from the
+            // taped forward input (contiguous writes per gate row)
+            for (k, &off) in gp.gather.iter().enumerate() {
+                let gy_row = &mut scratch.gy[k * bw..k * bw + w];
+                for (slot, &base) in gy_row.iter_mut().zip(bases) {
+                    *slot = g[base + off];
+                }
+                let gx_row = &mut scratch.gx[k * bw..k * bw + w];
+                for (slot, &base) in gx_row.iter_mut().zip(bases) {
+                    *slot = hin[base + off];
+                }
+            }
+            // ∂A += gy · gxᵀ over this block (i-p-c, c innermost)
+            for i in 0..dmn {
+                let gy_row = &scratch.gy[i * bw..i * bw + w];
+                let drow = &mut dmat[i * dmn..(i + 1) * dmn];
+                for (p, dv) in drow.iter_mut().enumerate() {
+                    let gx_row = &scratch.gx[p * bw..p * bw + w];
+                    let mut acc = 0.0f32;
+                    for (a, b) in gy_row.iter().zip(gx_row) {
+                        acc += a * b;
+                    }
+                    *dv += acc;
+                }
+            }
+            // product = Aᵀ · gy: accumulate row i of A into every p
+            // (i-p-c with c innermost so the panel sweep vectorizes)
+            scratch.prod[..dmn * bw].fill(0.0);
+            for i in 0..dmn {
+                let gy_row = &scratch.gy[i * bw..i * bw + w];
+                let arow = &gp.mat[i * dmn..(i + 1) * dmn];
+                for (p, &a) in arow.iter().enumerate() {
+                    let prow = &mut scratch.prod[p * bw..p * bw + w];
+                    for (o, &x) in prow.iter_mut().zip(gy_row) {
+                        *o += a * x;
+                    }
+                }
+            }
+            // scatter the transformed gradient back in place
+            for (k, &off) in gp.gather.iter().enumerate() {
+                let row = &scratch.prod[k * bw..k * bw + w];
+                for (&val, &base) in row.iter().zip(bases) {
+                    g[base + off] = val;
+                }
+            }
+            c0 += w;
+        }
+    }
+}
+
+/// Per-worker backward buffers, sized for the plan's widest gate (same
+/// no-allocation-in-the-gate-loop contract as the forward `Scratch`).
+struct GradScratch {
+    /// Gathered upstream-gradient panel, `(dmn, BLOCK_COLS)`.
+    gy: Vec<f32>,
+    /// Gathered forward-input panel, `(dmn, BLOCK_COLS)`.
+    gx: Vec<f32>,
+    /// `Aᵀ · gy` product panel, `(dmn, BLOCK_COLS)`.
+    prod: Vec<f32>,
+    bases: Vec<usize>,
+}
+
+impl GradScratch {
+    fn new(plan: &CircuitPlan) -> GradScratch {
+        GradScratch {
+            gy: vec![0.0; plan.max_dmn * BLOCK_COLS],
+            gx: vec![0.0; plan.max_dmn * BLOCK_COLS],
+            prod: vec![0.0; plan.max_dmn * BLOCK_COLS],
+            bases: vec![0; BLOCK_COLS],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::quanta::circuit::{all_pairs_structure, Circuit};
+    use crate::util::rng::Rng;
+
+    /// Central finite difference of `loss(apply_batch(xs))` w.r.t. one
+    /// gate entry, where `loss = Σ w ⊙ out` is linear in `out` *and* in
+    /// the single perturbed entry — so a large step (`eps = 0.5`) has no
+    /// truncation error and suppresses f32 rounding; the dot product
+    /// accumulates in f64 for the same reason.
+    fn fd_gate(c: &Circuit, xs: &[f32], batch: usize, w: &[f32], gi: usize, k: usize) -> f32 {
+        let eps = 0.5f32;
+        let loss = |c: &Circuit| -> f64 {
+            c.plan()
+                .unwrap()
+                .apply_batch(xs, batch)
+                .unwrap()
+                .iter()
+                .zip(w)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        };
+        let mut cp = c.clone();
+        cp.gates_mut()[gi].mat.data[k] += eps;
+        let mut cm = c.clone();
+        cm.gates_mut()[gi].mat.data[k] -= eps;
+        ((loss(&cp) - loss(&cm)) / (2.0 * eps as f64)) as f32
+    }
+
+    #[test]
+    fn tape_forward_matches_plain_forward() {
+        let mut rng = Rng::new(70);
+        for dims in [vec![2usize, 3, 2], vec![4, 4], vec![2, 2, 2, 2]] {
+            let c = Circuit::random(&dims, &all_pairs_structure(dims.len()), 0.4, &mut rng)
+                .unwrap();
+            let d = c.total_dim();
+            let batch = 5;
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            let plan = c.plan().unwrap();
+            let y = plan.apply_batch(&xs, batch).unwrap();
+            let (yt, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+            assert_eq!(y, yt, "dims {dims:?}: taped forward diverged");
+            assert_eq!(tape.inputs.len(), c.gates().len());
+            assert_eq!(tape.inputs[0], xs, "tape[0] must be the input panel");
+        }
+    }
+
+    #[test]
+    fn backward_gate_grads_match_finite_differences() {
+        let mut rng = Rng::new(71);
+        let dims = vec![2usize, 3, 2];
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+        let d = c.total_dim();
+        let batch = 3;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut w, 1.0);
+        let plan = c.plan().unwrap();
+        let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+        let grads = plan.backward(&tape, &w).unwrap();
+        for gi in 0..c.gates().len() {
+            for k in 0..grads.gates[gi].len() {
+                let fd = fd_gate(&c, &xs, batch, &w, gi, k);
+                let an = grads.gates[gi][k];
+                let denom = fd.abs().max(an.abs()).max(1e-3);
+                assert!(
+                    (fd - an).abs() / denom < 1e-3,
+                    "gate {gi} entry {k}: analytic {an} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_input_grad_is_transpose_chain() {
+        // loss = w·out, out = full_matrix · x per vector, so
+        // ∂loss/∂x = full_matrixᵀ · w exactly.
+        let mut rng = Rng::new(72);
+        let dims = vec![2usize, 2, 3];
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.4, &mut rng).unwrap();
+        let d = c.total_dim();
+        let batch = 2;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut w, 1.0);
+        let plan = c.plan().unwrap();
+        let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+        let grads = plan.backward(&tape, &w).unwrap();
+        let full_t = plan.full_matrix().unwrap().t().unwrap();
+        for b in 0..batch {
+            let want = full_t.matvec(&w[b * d..(b + 1) * d]).unwrap();
+            for (i, (got, want)) in grads.input[b * d..(b + 1) * d].iter().zip(&want).enumerate()
+            {
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "vector {b} element {i}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_empty_chain_passes_gradient_through() {
+        let c = Circuit::new(vec![2, 2], vec![]).unwrap();
+        let plan = c.plan().unwrap();
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        let (y, tape) = plan.apply_batch_with_tape(&xs, 1).unwrap();
+        assert_eq!(y.as_slice(), xs.as_slice());
+        let g = [0.5f32, -1.0, 0.25, 2.0];
+        let grads = plan.backward(&tape, &g).unwrap();
+        assert!(grads.gates.is_empty());
+        assert_eq!(grads.input.as_slice(), g.as_slice());
+    }
+
+    #[test]
+    fn backward_shape_errors() {
+        let mut rng = Rng::new(73);
+        let c = Circuit::random(&[2, 3], &[(0, 1)], 0.3, &mut rng).unwrap();
+        let plan = c.plan().unwrap();
+        let xs = vec![0.0f32; 12];
+        assert!(plan.apply_batch_with_tape(&xs, 3).is_err());
+        let (_, tape) = plan.apply_batch_with_tape(&xs, 2).unwrap();
+        assert!(plan.backward(&tape, &xs[..6]).is_err());
+    }
+}

@@ -3,13 +3,20 @@
 //! Mirrors `python/compile/kernels/ref.py` with no JAX dependency; used
 //! to (a) property-test the paper's theorems (rank representation,
 //! universality, composition openness) inside `cargo test`, (b) provide
-//! an independent oracle for the HLO merge path, and (c) compute the
-//! paper's complexity formulas for reporting.
+//! an independent oracle for the HLO merge path, (c) compute the
+//! paper's complexity formulas for reporting, and (d) — through the
+//! gradient engine ([`grad`]) and the adapter wrapper ([`adapter`]) —
+//! *train* QuanTA circuits natively on the host (see
+//! `coordinator::host_trainer`), with no PJRT artifacts.
 
+pub mod adapter;
 pub mod circuit;
+pub mod grad;
 pub mod plan;
 pub mod theorems;
 
+pub use adapter::QuantaAdapter;
 pub use circuit::{all_pairs_structure, Circuit, Gate};
+pub use grad::{CircuitGrads, CircuitTape};
 pub use plan::CircuitPlan;
 pub use theorems::{rank_bounds, RankBounds};

@@ -33,7 +33,9 @@ use crate::util::error::{Error, Result};
 /// Column-block width of the gather/GEMM/scatter pipeline.  With the
 /// largest gate of a `d=1024` all-pairs circuit (`d_m·d_n = 128`) the
 /// two scratch panels occupy `2 · 128 · 64 · 4 B = 64 KiB` — inside L2.
-const BLOCK_COLS: usize = 64;
+/// Shared with the backward pass (`quanta::grad`), whose GEMMs run over
+/// the same `(d_m·d_n) × (rest·batch)` column blocks.
+pub(crate) const BLOCK_COLS: usize = 64;
 
 /// Column count of one `full_matrix` identity panel (bounds peak memory
 /// at `2 · PANEL_COLS · d` floats while keeping enough columns per GEMM).
@@ -41,11 +43,16 @@ const PANEL_COLS: usize = 256;
 
 /// Serial cutoff: chains cheaper than this many multiplies
 /// (`batch · d · Σ d_m d_n`, the paper §6 apply cost) run single-threaded.
-const PAR_MIN_FLOPS: usize = 1 << 20;
+pub(crate) const PAR_MIN_FLOPS: usize = 1 << 20;
 
 /// Precomputed execution state for one gate.
 #[derive(Clone, Debug)]
 pub struct GatePlan {
+    /// Gate axes `(m, n)` this plan was built from — kept so
+    /// [`CircuitPlan::refresh_gate_mats`] can reject a circuit whose
+    /// structure drifted even when the matrix sizes still match.
+    pub m: usize,
+    pub n: usize,
     /// Gate matrix snapshot, `(dmn, dmn)` row-major.
     pub mat: Vec<f32>,
     /// `d_m · d_n` — rows/cols of the gate matrix.
@@ -68,15 +75,16 @@ pub struct CircuitPlan {
     /// Row-major strides of the reshaped hidden tensor.
     pub strides: Vec<usize>,
     pub gates: Vec<GatePlan>,
-    max_dmn: usize,
+    pub(crate) max_dmn: usize,
     /// `Σ_α d_m d_n` — per-element chain cost (paper §6).
     sum_dmn: usize,
 }
 
 /// Reusable gather/product buffers for one worker; sized for the widest
 /// gate so no allocation happens inside the gate loop.  Internal to the
-/// engine: workers create one via [`CircuitPlan::scratch`].
-struct Scratch {
+/// engine: workers (including the tape forward in `quanta::grad`)
+/// create one via [`CircuitPlan::scratch`].
+pub(crate) struct Scratch {
     gathered: Vec<f32>,
     product: Vec<f32>,
     bases: Vec<usize>,
@@ -125,11 +133,11 @@ fn rest_offsets(dims: &[usize], strides: &[usize], m: usize, n: usize) -> Vec<us
 
 impl CircuitPlan {
     pub fn new(circuit: &Circuit) -> Result<CircuitPlan> {
-        let dims = circuit.dims.clone();
+        let dims = circuit.dims().to_vec();
         let d: usize = dims.iter().product();
         let strides = strides_of(&dims);
-        let mut gates = Vec::with_capacity(circuit.gates.len());
-        for g in &circuit.gates {
+        let mut gates = Vec::with_capacity(circuit.gates().len());
+        for g in circuit.gates() {
             if g.m >= dims.len() || g.n >= dims.len() || g.m == g.n {
                 return Err(Error::Shape(format!(
                     "plan: bad gate axes ({}, {}) for dims {dims:?}",
@@ -152,6 +160,8 @@ impl CircuitPlan {
                 }
             }
             gates.push(GatePlan {
+                m: g.m,
+                n: g.n,
                 mat: g.mat.data.clone(),
                 dmn,
                 rest: rest_offsets(&dims, &strides, g.m, g.n),
@@ -164,7 +174,7 @@ impl CircuitPlan {
     }
 
     /// Fresh scratch sized for this plan's widest gate.
-    fn scratch(&self) -> Scratch {
+    pub(crate) fn scratch(&self) -> Scratch {
         Scratch {
             gathered: vec![0.0; self.max_dmn * BLOCK_COLS],
             product: vec![0.0; self.max_dmn * BLOCK_COLS],
@@ -175,6 +185,39 @@ impl CircuitPlan {
     /// Multiply count of one chain application (paper §6).
     pub fn apply_flops(&self) -> usize {
         self.d * self.sum_dmn
+    }
+
+    /// Re-snapshot the gate matrices from `circuit` without rebuilding
+    /// the stride/rest-offset/gather tables (which depend only on
+    /// dims + gate structure).  Dims, gate count, per-gate axes, and
+    /// matrix sizes are all checked, so a structurally different
+    /// circuit is rejected; per-step optimizers use this to update
+    /// parameters at memcpy cost instead of full plan setup.
+    pub fn refresh_gate_mats(&mut self, circuit: &Circuit) -> Result<()> {
+        if circuit.dims() != self.dims.as_slice() || circuit.gates().len() != self.gates.len() {
+            return Err(Error::Shape(format!(
+                "refresh_gate_mats: circuit ({:?}, {} gates) does not match plan ({:?}, {})",
+                circuit.dims(),
+                circuit.gates().len(),
+                self.dims,
+                self.gates.len()
+            )));
+        }
+        for (gp, g) in self.gates.iter_mut().zip(circuit.gates()) {
+            if g.m != gp.m || g.n != gp.n || g.mat.data.len() != gp.mat.len() {
+                return Err(Error::Shape(format!(
+                    "refresh_gate_mats: gate ({}, {}) with {} entries, plan has ({}, {}) with {}",
+                    g.m,
+                    g.n,
+                    g.mat.data.len(),
+                    gp.m,
+                    gp.n,
+                    gp.mat.len()
+                )));
+            }
+            gp.mat.copy_from_slice(&g.mat.data);
+        }
+        Ok(())
     }
 
     /// Apply the chain to a single vector.
@@ -218,7 +261,7 @@ impl CircuitPlan {
         // splits into per-thread chunks of whole vectors; each worker
         // owns its scratch.  Per-vector arithmetic does not depend on
         // the chunking, so results are identical for any worker count.
-        let chunk_vecs = (batch + workers - 1) / workers;
+        let chunk_vecs = batch.div_ceil(workers);
         std::thread::scope(|s| {
             for chunk in h.chunks_mut(chunk_vecs * self.d) {
                 s.spawn(move || {
@@ -241,7 +284,13 @@ impl CircuitPlan {
     /// Columns of the implicit `(dmn) × (rest·cb)` matrix are `(vector,
     /// rest-offset)` pairs; their gate-axis footprints are disjoint, so
     /// scattering back in place is safe.
-    fn apply_gate_chunk(&self, g: &GatePlan, h: &mut [f32], cb: usize, scratch: &mut Scratch) {
+    pub(crate) fn apply_gate_chunk(
+        &self,
+        g: &GatePlan,
+        h: &mut [f32],
+        cb: usize,
+        scratch: &mut Scratch,
+    ) {
         let d = self.d;
         let dmn = g.dmn;
         let rest_len = g.rest.len();
@@ -329,11 +378,11 @@ mod tests {
     /// scanning, one vector at a time (the pre-engine implementation,
     /// kept as the correctness oracle).
     fn apply_reference(c: &Circuit, x: &[f32]) -> Vec<f32> {
-        let dims = &c.dims;
+        let dims = c.dims();
         let d: usize = dims.iter().product();
         let strides = strides_of(dims);
         let mut h = x.to_vec();
-        for g in &c.gates {
+        for g in c.gates() {
             let (dm, dn) = (dims[g.m], dims[g.n]);
             let (sm, sn) = (strides[g.m], strides[g.n]);
             let mut out = vec![0.0f32; d];
@@ -451,6 +500,34 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn refresh_gate_mats_matches_fresh_plan() {
+        let mut rng = Rng::new(44);
+        let dims = [2usize, 3, 2];
+        let mut c = Circuit::random(&dims, &all_pairs_structure(3), 0.4, &mut rng).unwrap();
+        let mut plan = CircuitPlan::new(&c).unwrap();
+        // mutate the gates, refresh in place, compare against a rebuild
+        for g in c.gates_mut() {
+            let sz = g.mat.shape[0];
+            g.mat = Tensor::randn(&[sz, sz], 0.5, &mut rng);
+        }
+        plan.refresh_gate_mats(&c).unwrap();
+        let fresh = CircuitPlan::new(&c).unwrap();
+        let mut x = vec![0.0f32; plan.d * 3];
+        rng.fill_normal(&mut x, 1.0);
+        assert_eq!(plan.apply_batch(&x, 3).unwrap(), fresh.apply_batch(&x, 3).unwrap());
+        // structure mismatch is rejected
+        let other = Circuit::random(&[2usize, 2], &[(0, 1)], 0.1, &mut rng).unwrap();
+        assert!(plan.refresh_gate_mats(&other).is_err());
+        // ...including same-size gates on different axes
+        let dims3 = [2usize, 2, 2];
+        let c01 = Circuit::random(&dims3, &[(0, 1)], 0.2, &mut rng).unwrap();
+        let c12 = Circuit::random(&dims3, &[(1, 2)], 0.2, &mut rng).unwrap();
+        let mut p01 = CircuitPlan::new(&c01).unwrap();
+        assert!(p01.refresh_gate_mats(&c12).is_err(), "axis drift must be rejected");
+        assert!(p01.refresh_gate_mats(&c01).is_ok());
     }
 
     #[test]

@@ -25,11 +25,11 @@ pub struct RankBounds {
 /// upper = min_a d*R_a/d_a, where R_a = rank(T_a), d_a = d_m*d_n.
 pub fn rank_bounds(circuit: &Circuit, gate_ranks: &[usize]) -> RankBounds {
     let d = circuit.total_dim() as i64;
-    let nt = circuit.gates.len() as i64;
+    let nt = circuit.gates().len() as i64;
     let mut lower = -d * (nt - 1);
     let mut upper = i64::MAX;
-    for (g, &r) in circuit.gates.iter().zip(gate_ranks) {
-        let da = (circuit.dims[g.m] * circuit.dims[g.n]) as i64;
+    for (g, &r) in circuit.gates().iter().zip(gate_ranks) {
+        let da = (circuit.dims()[g.m] * circuit.dims()[g.n]) as i64;
         let lifted = d * r as i64 / da; // rank of gate lifted to full space
         lower += lifted;
         upper = upper.min(lifted);
@@ -44,7 +44,7 @@ pub fn check_rank_representation(
     tol: f64,
 ) -> Result<(Vec<usize>, usize, RankBounds)> {
     let gate_ranks: Vec<usize> = circuit
-        .gates
+        .gates()
         .iter()
         .map(|g| numerical_rank(&g.mat, tol))
         .collect::<Result<_>>()?;
@@ -200,17 +200,14 @@ pub fn circuit_with_gate_ranks(
     ranks: &[usize],
     rng: &mut crate::util::rng::Rng,
 ) -> Result<Circuit> {
-    let mut c = Circuit::random(dims, structure, 0.5, rng)?;
+    let c = Circuit::random(dims, structure, 0.5, rng)?;
     let gates: Vec<Gate> = c
-        .gates
+        .gates()
         .iter()
         .zip(ranks)
-        .map(|(g, &r)| {
-            Ok(Gate { m: g.m, n: g.n, mat: truncate_rank(&g.mat, r)? })
-        })
+        .map(|(g, &r)| Ok(Gate { m: g.m, n: g.n, mat: truncate_rank(&g.mat, r)? }))
         .collect::<Result<_>>()?;
-    c.gates = gates;
-    Ok(c)
+    Circuit::new(dims.to_vec(), gates)
 }
 
 #[cfg(test)]
@@ -227,7 +224,7 @@ mod tests {
         let mut rng = Rng::new(30);
         let c = Circuit::random(&dims, &structure, 0.4, &mut rng).unwrap();
         let (granks, frank, bounds) = check_rank_representation(&c, 1e-7).unwrap();
-        assert!(granks.iter().zip(&c.gates).all(|(&r, g)| r == g.mat.shape[0]));
+        assert!(granks.iter().zip(c.gates()).all(|(&r, g)| r == g.mat.shape[0]));
         assert_eq!(frank, 12);
         assert_eq!(bounds.lower, 12);
         assert_eq!(bounds.upper, 12);

@@ -16,7 +16,11 @@ use crate::util::rng::Rng;
 /// pretraining run's theta vector).  Entries fully inside the prefix are
 /// copied verbatim; the rest (PEFT extras such as QuanTA's shadow chain)
 /// are generated from their init specs.
-pub fn init_layout(layout: &[ParamEntry], seed: u64, checkpoint: Option<&[f32]>) -> Result<Vec<f32>> {
+pub fn init_layout(
+    layout: &[ParamEntry],
+    seed: u64,
+    checkpoint: Option<&[f32]>,
+) -> Result<Vec<f32>> {
     let total: usize = layout.iter().map(|e| e.size).sum();
     let mut out = vec![0.0f32; total];
     if let Some(ckpt) = checkpoint {

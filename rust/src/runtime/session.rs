@@ -127,7 +127,12 @@ impl Session {
 
     /// One optimizer step.  `tokens`: `[batch, seq+1]`, `mask`:
     /// `[batch, seq]`.  Updates `state` in place and returns the loss.
-    pub fn train_step(&mut self, state: &mut TrainState, tokens: &[i32], mask: &[f32]) -> Result<f32> {
+    pub fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<f32> {
         let exe = self.train.as_ref().ok_or_else(|| Error::msg("train_step not compiled"))?;
         let io = &self.man.io;
         if tokens.len() != io.batch * (io.seq_len + 1) || mask.len() != io.batch * io.seq_len {

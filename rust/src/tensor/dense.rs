@@ -132,7 +132,7 @@ impl Tensor {
         if workers <= 1 {
             mm_rows(&self.data, &other.data, &mut out.data, k, n);
         } else {
-            let rows_per = (m + workers - 1) / workers;
+            let rows_per = m.div_ceil(workers);
             let b = &other.data;
             std::thread::scope(|s| {
                 for (a_chunk, o_chunk) in self

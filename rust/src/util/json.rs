@@ -316,7 +316,8 @@ impl<'a> Parser<'a> {
                     while self.i < self.b.len() && (self.b[self.i] & 0xC0) == 0x80 {
                         self.i += 1;
                     }
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad utf8"))?);
+                    let bytes = &self.b[start..self.i];
+                    s.push_str(std::str::from_utf8(bytes).map_err(|_| self.err("bad utf8"))?);
                 }
             }
         }

@@ -77,7 +77,7 @@ fn prop_apply_batch_equals_full_matrix_matvec() {
                     if (got - want).abs() > 1e-3 {
                         return Err(format!(
                             "dims {:?}, vector {b}, element {i}: engine {got} vs matvec {want}",
-                            c.dims
+                            c.dims()
                         ));
                     }
                 }

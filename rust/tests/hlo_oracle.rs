@@ -86,13 +86,16 @@ fn hlo_merge_matches_rust_circuit_reference() {
         let s_gates = extract_gates(&man.base_layout, &base, module, "S");
         assert_eq!(t_gates.len(), structure.len(), "{module}");
         assert_eq!(s_gates.len(), structure.len(), "{module}");
-        let mk = |gates: Vec<Tensor>| Circuit {
-            dims: dims.clone(),
-            gates: gates
-                .into_iter()
-                .zip(&structure)
-                .map(|(mat, &(m, n))| Gate { m, n, mat })
-                .collect(),
+        let mk = |gates: Vec<Tensor>| {
+            Circuit::new(
+                dims.clone(),
+                gates
+                    .into_iter()
+                    .zip(&structure)
+                    .map(|(mat, &(m, n))| Gate { m, n, mat })
+                    .collect(),
+            )
+            .unwrap()
         };
         let full_t = mk(t_gates).full_matrix().unwrap();
         let full_s = mk(s_gates).full_matrix().unwrap();

@@ -37,12 +37,12 @@ fn prop_rank_representation_bounds_hold() {
         |rng| {
             let c = gen_circuit(rng);
             let ranks: Vec<usize> = c
-                .gates
+                .gates()
                 .iter()
                 .map(|g| 1 + rng.below(g.mat.shape[0]))
                 .collect();
-            let dims = c.dims.clone();
-            let structure: Vec<(usize, usize)> = c.gates.iter().map(|g| (g.m, g.n)).collect();
+            let dims = c.dims().to_vec();
+            let structure: Vec<(usize, usize)> = c.gates().iter().map(|g| (g.m, g.n)).collect();
             let mut r2 = Rng::new(rng.next_u64());
             circuit_with_gate_ranks(&dims, &structure, &ranks, &mut r2).unwrap()
         },
@@ -56,13 +56,13 @@ fn prop_rank_representation_bounds_hold() {
             if (frank as i64) > bounds.upper {
                 return Err(format!(
                     "rank {frank} above upper bound {} (gate ranks {granks:?}, dims {:?})",
-                    bounds.upper, c.dims
+                    bounds.upper, c.dims()
                 ));
             }
             if (frank as i64) < bounds.lower {
                 return Err(format!(
                     "rank {frank} below lower bound {} (gate ranks {granks:?}, dims {:?})",
-                    bounds.lower, c.dims
+                    bounds.lower, c.dims()
                 ));
             }
             Ok(())
