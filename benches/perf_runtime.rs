@@ -166,7 +166,8 @@ fn engine_bench() -> (Value, Vec<(&'static str, Value)>) {
         ("structure", Value::Str("all_pairs".into())),
         ("d", Value::Num(d as f64)),
         ("batch", Value::Num(batch as f64)),
-        ("gates", Value::Num(plan.gates.len() as f64)),
+        ("gates", Value::Num(c.gates().len() as f64)),
+        ("fused_gates", Value::Num(plan.gates.len() as f64)),
         ("apply_flops", Value::Num(plan.apply_flops() as f64)),
     ]);
     let results = vec![
@@ -281,11 +282,142 @@ fn train_bench() -> (&'static str, Value) {
     )
 }
 
+/// Pool-vs-spawn dispatch comparison on the train_smoke step.  Both
+/// dispatchers execute the *same* problem-shaped chunks (the pool's
+/// determinism contract), so arithmetic is bitwise identical — asserted
+/// on the first 10 step losses — and the measured ratio isolates pure
+/// dispatch overhead: parked-worker wakeup vs `std::thread::scope`
+/// spawn+join per parallel region (3–4 regions per step: tape forward,
+/// backward, base matmul, optimizer).
+fn pool_vs_spawn_bench() -> (&'static str, Value) {
+    use quanta_ft::coordinator::host_trainer::{
+        clip_global_norm, finetune_host, mse_grad, Adam, HostTrainConfig,
+    };
+    use quanta_ft::data::synth::{teacher_student, SynthConfig};
+
+    banner("pool_vs_spawn", "persistent pool vs per-call thread spawn, same chunks");
+    let cfg = SynthConfig {
+        dims: vec![4, 4, 8],
+        n_train: 256,
+        n_val: 64,
+        teacher_std: 0.3,
+        noise_std: 0.01,
+        alpha: 1.0,
+        seed: 0,
+    };
+    let task = teacher_student(&cfg).unwrap();
+    let d = task.d;
+    let batch = 32usize;
+    let tcfg = HostTrainConfig { batch, ..Default::default() };
+
+    // identical loss trajectories under both dispatchers (first 10 steps)
+    let losses = |dispatch: Option<&str>| -> Vec<(usize, f64)> {
+        match dispatch {
+            Some(mode) => std::env::set_var("QFT_DISPATCH", mode),
+            None => std::env::remove_var("QFT_DISPATCH"),
+        }
+        let mut student = task.student().unwrap();
+        let run_cfg = HostTrainConfig {
+            steps: 10,
+            batch,
+            eval_every: 10,
+            log_every: 1,
+            ..Default::default()
+        };
+        finetune_host(&mut student, &task, &run_cfg).unwrap().loss_curve
+    };
+    let l_pool = losses(None);
+    let l_spawn = losses(Some("spawn"));
+    std::env::remove_var("QFT_DISPATCH");
+    assert_eq!(l_pool, l_spawn, "dispatch mode changed the loss trajectory");
+
+    let time_step = || {
+        let mut adapter = task.student().unwrap();
+        let mut params = adapter.params_flat();
+        let mut adam = Adam::new(params.len(), &tcfg);
+        let xs = &task.train_x[..batch * d];
+        let ys = &task.train_y[..batch * d];
+        bench(3, 50, || {
+            let (pred, tape) = adapter.forward_with_tape(xs, batch).unwrap();
+            let (_, dpred) = mse_grad(&pred, ys);
+            let mut grads = adapter.backward_gates(&tape, &dpred, batch).unwrap();
+            clip_global_norm(&mut grads, tcfg.clip);
+            adam.step(&mut params, &grads);
+            adapter.set_params(&params).unwrap();
+        })
+    };
+    std::env::set_var("QFT_DISPATCH", "spawn");
+    let st_spawn = time_step();
+    std::env::remove_var("QFT_DISPATCH");
+    let st_pool = time_step();
+    let speedup = st_spawn.mean_us / st_pool.mean_us;
+    println!("train step, spawn dispatch:         {st_spawn}");
+    println!("train step, pool dispatch:          {st_pool}");
+    println!("  => pool speedup {speedup:.2}x (losses bitwise equal over 10 steps)");
+
+    (
+        "pool_vs_spawn",
+        Value::obj(vec![
+            ("dims", Value::arr_f64(&[4.0, 4.0, 8.0])),
+            ("batch", Value::Num(batch as f64)),
+            ("spawn_step_us", Value::Num(st_spawn.mean_us)),
+            ("pool_step_us", Value::Num(st_pool.mean_us)),
+            ("step_speedup", Value::Num(speedup)),
+            ("losses_bitwise_equal", Value::Bool(true)),
+            ("steps_compared", Value::Num(10.0)),
+        ]),
+    )
+}
+
+/// Scaling sweep: `apply_batch` under pool vs spawn dispatch across
+/// d ∈ {256, 1024, 4096}.  Dispatch overhead matters most at small d
+/// (many short regions) and washes out at large d — both ends recorded
+/// so regressions in either regime are visible PR over PR.
+fn scaling_bench() -> (&'static str, Value) {
+    banner("scaling_sweep", "apply_batch pool vs spawn across problem sizes");
+    let batch = 32usize;
+    let mut entries = vec![];
+    for (dims, warm, iters) in [
+        (vec![4usize, 8, 8], 3usize, 40usize),
+        (vec![8, 8, 16], 2, 20),
+        (vec![16, 16, 16], 1, 5),
+    ] {
+        let mut rng = Rng::new(0x5CA1E);
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.02, &mut rng).unwrap();
+        let plan = c.plan().unwrap();
+        let d = plan.d;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        std::env::set_var("QFT_DISPATCH", "spawn");
+        let st_spawn = bench(warm, iters, || {
+            let _ = plan.apply_batch(&xs, batch).unwrap();
+        });
+        std::env::remove_var("QFT_DISPATCH");
+        let st_pool = bench(warm, iters, || {
+            let _ = plan.apply_batch(&xs, batch).unwrap();
+        });
+        let speedup = st_spawn.mean_us / st_pool.mean_us;
+        println!(
+            "d={d:5} apply_batch({batch}): spawn {:9.1}us  pool {:9.1}us  => {speedup:.2}x",
+            st_spawn.mean_us, st_pool.mean_us
+        );
+        entries.push(Value::obj(vec![
+            ("d", Value::Num(d as f64)),
+            ("dims", Value::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            ("batch", Value::Num(batch as f64)),
+            ("spawn_us", Value::Num(st_spawn.mean_us)),
+            ("pool_us", Value::Num(st_pool.mean_us)),
+            ("speedup", Value::Num(speedup)),
+        ]));
+    }
+    ("scaling_sweep", Value::Arr(entries))
+}
+
 /// Assemble and write `BENCH_quanta_engine.json` at the repository root.
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(2.0)),
+        ("schema_version", Value::Num(3.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -302,6 +434,8 @@ fn main() {
     banner("perf_runtime", "L3 hot-path microbenches");
     let (config, mut results) = engine_bench();
     results.push(train_bench());
+    results.push(pool_vs_spawn_bench());
+    results.push(scaling_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();

@@ -7,9 +7,17 @@ plan-cached batched engine (offset tables built once, whole panels
 applied as (d_m*d_n) x (rest*batch) GEMMs) — implemented with the same
 NumPy primitives for both, so the measured ratio isolates the
 *algorithmic* change (plan caching + panel batching) rather than
-language constant factors.
+language constant factors.  The engine plan applies the PR 3 **gate
+fusion** pass (imported from ``train_mirror``) before executing; on the
+bench circuit (dims [8,8,16], all-pairs) every union spans the whole
+space, so nothing fuses and parity with the seed path is unchanged.
 
-Emits ``BENCH_quanta_engine.json`` (schema_version 1, the same schema
+Also measures the ``scaling_sweep`` section: chunked ``apply_batch``
+(pool-style whole-vector chunks) under a persistent thread pool vs
+per-region thread spawn, at d in {256, 1024, 4096} — the NumPy analog
+of the rust ``QFT_DISPATCH=spawn`` comparison.
+
+Emits ``BENCH_quanta_engine.json`` (schema_version 3, the same schema
 as the rust bench, ``substrate`` marks the producer).  Used to seed the
 perf record in containers without a rust toolchain; running the rust
 bench overwrites the file with native numbers.
@@ -26,10 +34,19 @@ from pathlib import Path
 
 import numpy as np
 
+from train_mirror import (
+    PoolDispatcher,
+    SpawnDispatcher,
+    chunk_ranges,
+    fused_gate_specs,
+)
+
 DIMS = [8, 8, 16]
 BATCH = 64
 STD = 0.02
 SEED = 0xE46
+SWEEP_DIMS = [[4, 8, 8], [8, 8, 16], [16, 16, 16]]
+SWEEP_BATCH = 32
 
 
 def all_pairs_structure(n_axes: int) -> list[tuple[int, int]]:
@@ -101,24 +118,24 @@ def seed_full_matrix(dims, gates):
 
 
 # ---------------------------------------------------------------------------
-# engine path: plan built once, panels applied as batched GEMMs
+# engine path: fused plan built once, panels applied as batched GEMMs
 # ---------------------------------------------------------------------------
 
 def build_plan(dims, gates):
-    """Precompute per-gate axis moves (the numpy analog of the rust
-    plan's stride/rest/gather tables: gather = one transpose-copy to
-    (rest*batch, dmn) panels, scatter = the inverse write-through)."""
-    plan = []
-    for m, n, mat in gates:
-        plan.append((m, n, dims[m] * dims[n], mat))
-    return plan
+    """Precompute per-gate axis moves after the PR 3 fusion pass (the
+    numpy analog of the rust plan: fused (axes, mat) gates; gather =
+    one transpose-copy to (rest*batch, dmn) panels, scatter = the
+    inverse write-through)."""
+    return [(axes, dmn, mat) for axes, dmn, mat, _members in fused_gate_specs(dims, gates)]
 
 
 def plan_apply_batch(plan, xs, dims):
     batch = xs.shape[0]
     h = xs.copy().reshape(batch, *dims)
-    for m, n, dmn, mat in plan:
-        hm = np.moveaxis(h, [1 + m, 1 + n], [-2, -1])  # view
+    for axes, dmn, mat in plan:
+        src = [1 + a for a in axes]
+        dst = list(range(-len(axes), 0))
+        hm = np.moveaxis(h, src, dst)  # view
         sub = np.ascontiguousarray(hm).reshape(-1, dmn)  # gather: (rest*batch, dmn)
         hm[...] = (sub @ mat.T).reshape(hm.shape)  # GEMM + scatter back
     return h.reshape(batch, -1)
@@ -146,6 +163,72 @@ def timeit_us(f, iters, warmup=1):
     return float(np.median(samples))
 
 
+def scaling_sweep():
+    """Chunked apply_batch at d in {256, 1024, 4096}: persistent pool vs
+    per-region thread spawn, same whole-vector chunks (outputs asserted
+    identical) — mirrors the rust scaling_bench."""
+    # 2 dispatch workers: see train_mirror's pool_vs_spawn note — the
+    # GIL serializes the index-heavy chunk jobs, so this measures
+    # dispatch overhead (the quantity of interest) with minimal noise
+    workers = 2
+    pool = PoolDispatcher(workers)
+    entries = []
+    for dims in SWEEP_DIMS:
+        rng = np.random.default_rng(0x5CA1E)
+        gates = random_circuit(dims, all_pairs_structure(len(dims)), STD, rng)
+        plan = build_plan(dims, gates)
+        d = int(np.prod(dims))
+        flops_per_vec = d * sum(dmn for _axes, dmn, _mat in plan)
+        xs = rng.standard_normal((SWEEP_BATCH, d)).astype(np.float32)
+        # rust chunks cost one atomic bump to claim; a python job costs
+        # ~100us of interpreter overhead, so the mirror floors the
+        # per-job size at batch/(2*workers) vectors (dispatch-overhead
+        # ratios stay meaningful, and chunk boundaries are still
+        # dispatcher-independent so outputs remain bitwise equal)
+        ranges = chunk_ranges(SWEEP_BATCH, flops_per_vec)
+        max_jobs = 2 * workers
+        if len(ranges) > max_jobs:
+            cu = -(-SWEEP_BATCH // max_jobs)
+            ranges = [(s, min(s + cu, SWEEP_BATCH)) for s in range(0, SWEEP_BATCH, cu)]
+
+        def chunked_apply(dispatcher, out):
+            def job(s, e):
+                def run():
+                    out[s:e] = plan_apply_batch(plan, xs[s:e], dims)
+
+                return run
+
+            dispatcher.run([job(s, e) for s, e in ranges])
+
+        out_pool = np.empty_like(xs)
+        out_spawn = np.empty_like(xs)
+        chunked_apply(pool, out_pool)
+        chunked_apply(SpawnDispatcher(workers), out_spawn)
+        assert np.array_equal(out_pool, out_spawn), "dispatchers diverged"
+
+        iters = 5 if d >= 4096 else 20
+        spawn_us = timeit_us(
+            lambda: chunked_apply(SpawnDispatcher(workers), out_spawn), iters, warmup=1
+        )
+        pool_us = timeit_us(lambda: chunked_apply(pool, out_pool), iters, warmup=1)
+        speedup = spawn_us / pool_us
+        print(
+            f"scaling d={d:5}: spawn {spawn_us:9.1f}us  pool {pool_us:9.1f}us  "
+            f"=> {speedup:.2f}x ({len(ranges)} chunks)"
+        )
+        entries.append(
+            {
+                "d": d,
+                "dims": dims,
+                "batch": SWEEP_BATCH,
+                "spawn_us": round(spawn_us, 1),
+                "pool_us": round(pool_us, 1),
+                "speedup": round(speedup, 2),
+            }
+        )
+    return entries
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[2] / "BENCH_quanta_engine.json"))
@@ -156,6 +239,7 @@ def main():
     gates = random_circuit(DIMS, structure, STD, rng)
     d = int(np.prod(DIMS))
     plan = build_plan(DIMS, gates)
+    assert len(plan) == len(gates), "[8,8,16] all-pairs must not fuse"
 
     # parity gates
     full_seed = seed_full_matrix(DIMS, gates)
@@ -179,21 +263,26 @@ def main():
     )
     batch_engine_us = timeit_us(lambda: plan_apply_batch(plan, xs, DIMS), 50, warmup=5)
 
+    sweep = scaling_sweep()
+
     apply_flops = d * sum(DIMS[m] * DIMS[n] for m, n, _ in gates)
     record = {
         "bench": "quanta_engine",
-        "schema_version": 2,
+        "schema_version": 3,
         "substrate": "python-numpy-mirror",
         "note": (
             "Seed record measured by the NumPy mirrors "
-            "(python/bench/engine_mirror.py for the engine sections, "
-            "python/bench/train_mirror.py for results.train_smoke), each "
+            "(python/bench/engine_mirror.py for the engine sections + "
+            "results.scaling_sweep, python/bench/train_mirror.py for "
+            "results.train_smoke + results.pool_vs_spawn), each "
             "transcribing the rust loop structure of "
             "benches/perf_runtime.rs: seed = O(d) offset scan per gate per "
             "call + one gather/matvec/scatter per rest offset per vector; "
-            "engine = plan cached once + one (rest*batch, dm*dn) GEMM per "
-            "gate per panel.  Produced because the build container ships no "
-            "rust toolchain; the CI perf-smoke job re-measures natively "
+            "engine = fused plan cached once + one (rest*batch, dm*dn) GEMM "
+            "per gate per panel; pool_vs_spawn/scaling = the same chunked "
+            "jobs under a persistent thread pool vs per-region thread "
+            "spawn.  Produced because the build container ships no rust "
+            "toolchain; the CI perf-smoke job re-measures natively "
             "(`cargo bench --bench perf_runtime`), which overwrites this "
             "file with a substrate=rust-native record and gates on it."
         ),
@@ -203,6 +292,7 @@ def main():
             "d": d,
             "batch": BATCH,
             "gates": len(gates),
+            "fused_gates": len(plan),
             "apply_flops": apply_flops,
         },
         "results": {
@@ -218,25 +308,26 @@ def main():
                 "speedup": round(batch_seed_us / batch_engine_us, 2),
                 "max_abs_diff": batch_diff,
             },
+            "scaling_sweep": sweep,
         },
     }
-    # carry over a train_smoke section measured by train_mirror.py, so
-    # the two mirrors compose into one schema-2 record in either order —
-    # but only from a mirror-produced record (never relabel rust-native
+    # carry over the sections measured by train_mirror.py, so the two
+    # mirrors compose into one schema-3 record in either order — but
+    # only from a mirror-produced record (never relabel rust-native
     # timings as mirror provenance)
     out_path = Path(args.out)
     if out_path.exists():
         try:
             prev = json.loads(out_path.read_text())
-            if (
-                prev.get("substrate") == "python-numpy-mirror"
-                and "train_smoke" in prev.get("results", {})
-            ):
-                record["results"]["train_smoke"] = prev["results"]["train_smoke"]
+            if prev.get("substrate") == "python-numpy-mirror":
+                for key in ("train_smoke", "pool_vs_spawn"):
+                    if key in prev.get("results", {}):
+                        record["results"][key] = prev["results"][key]
         except (json.JSONDecodeError, OSError):
             pass
     out_path.write_text(json.dumps(record, indent=2) + "\n")
-    print(json.dumps(record["results"], indent=2))
+    print(json.dumps({k: v for k, v in record["results"].items() if k != "scaling_sweep"},
+                     indent=2))
     print(f"wrote {args.out}")
 
 

@@ -1,27 +1,43 @@
 """NumPy mirror of the rust gradient engine + host trainer.
 
-Transcribes, at the granularity of the rust loop structure, the new
-training stack added on top of the circuit engine:
+Transcribes, at the granularity of the rust loop structure, the
+training stack built on the circuit engine:
 
 * ``quanta::plan`` tables (row-major strides, odometer rest-offsets,
-  gather tables) and the blocked forward ``apply_gate_chunk``;
-* ``quanta::grad`` — ``apply_batch_with_tape`` and the reverse sweep
-  (gather gy/gx, ``dA += gy @ gx^T``, transpose-gate GEMM, scatter);
+  gather tables) and the blocked forward, **including PR 3 gate
+  fusion**: adjacent gates with overlapping axis pairs merge into one
+  fused gate over the union axes when the union dimension is within
+  ``MAX_FUSED_DMN`` and the per-element GEMM cost does not grow
+  (``d_union <= d_a + d_b``) — member matrices are embedded
+  (``E[r,c] = A[prow_r, prow_c]`` iff ``prest_r == prest_c``) and
+  composed ``F = E_k .. E_1``;
+* ``quanta::grad`` — the tape over *fused* gates, the reverse sweep
+  (``dF += gy @ gx^T``, transpose-gate GEMM), and the **unfuse** step
+  ``dA_i = L_i^T dF R_i^T`` restricted to identity-embedded positions,
+  returning per-*original*-gate gradients;
 * ``quanta::adapter`` — ``W x + alpha * (circuit(x) - x)``, ``merge()``;
-* ``coordinator::host_trainer`` — bias-corrected Adam, global-norm
-  clipping, the minibatch loop with best-on-val checkpointing;
+* ``coordinator::host_trainer`` — bias-corrected Adam (+ decoupled
+  weight decay), the warmup+cosine ``LrSchedule`` (pinned values
+  asserted against the rust unit test), global-norm clipping, the
+  minibatch loop with best-on-val checkpointing;
+* ``compute::pool`` chunking (``PAR_MIN_FLOPS``-sized chunks of whole
+  vectors) and the two dispatchers the ``pool_vs_spawn`` bench section
+  compares: a persistent thread pool vs per-region thread spawn, both
+  draining the same job list so results are bitwise identical;
 * ``util::rng`` — an exact integer port of splitmix64 + xoshiro256++ +
   Box-Muller, so data, init, and batch order match the rust tests
   bit-for-bit and the mirror *predicts* the rust assertions.
 
-Run directly to (1) gradcheck the backward against central finite
-differences in f64 (formula exactness) and f32 (the tolerance the rust
-property tests use), (2) verify merge()/apply equivalence margins,
-(3) run the exact host-trainer configurations asserted in
-``rust/tests/train_smoke.rs`` and report their loss-reduction factors,
-and (4) measure the ``train_smoke`` timings for
-``BENCH_quanta_engine.json`` (vectorized variant; the rust bench
-overwrites with native numbers).
+Run directly to (1) gradcheck the backward — including fused chains —
+against central finite differences in f64 (formula exactness) and f32
+(the tolerance the rust property tests use), (2) verify merge()/apply
+equivalence margins and the fused-vs-unfused forward parity, (3) run
+the exact host-trainer configurations asserted in
+``rust/tests/train_smoke.rs`` (dims [2,2,2] now executes a fused
+chain), (4) pin the LR-schedule values, and (5) measure the
+``train_smoke`` + ``pool_vs_spawn`` sections for
+``BENCH_quanta_engine.json`` (the rust bench overwrites with native
+numbers).
 
 Usage:  python python/bench/train_mirror.py [--bench-out PATH]
 """
@@ -29,14 +45,19 @@ Usage:  python python/bench/train_mirror.py [--bench-out PATH]
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 
 import numpy as np
 
 MASK = (1 << 64) - 1
 BLOCK_COLS = 64
+MAX_FUSED_DMN = 64
+PAR_MIN_FLOPS = 1 << 17
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +164,7 @@ class Sampler:
 
 
 # ---------------------------------------------------------------------------
-# quanta::plan tables + blocked forward
+# quanta::plan tables: fusion, blocked forward
 # ---------------------------------------------------------------------------
 
 def all_pairs_structure(n_axes: int) -> list[tuple[int, int]]:
@@ -162,9 +183,10 @@ def strides_of(dims: list[int]) -> list[int]:
     return s
 
 
-def rest_offsets(dims, strides, m, n) -> np.ndarray:
-    """Odometer enumeration, transcribed from plan.rs::rest_offsets."""
-    axes = [a for a in range(len(dims)) if a not in (m, n)]
+def rest_offsets(dims, strides, excluded) -> np.ndarray:
+    """Odometer enumeration, transcribed from plan.rs::rest_offsets
+    (generalized to an arbitrary excluded-axis set for fused gates)."""
+    axes = [a for a in range(len(dims)) if a not in excluded]
     count = int(np.prod([dims[a] for a in axes])) if axes else 1
     out = []
     idx = [0] * len(axes)
@@ -186,29 +208,125 @@ def rest_offsets(dims, strides, m, n) -> np.ndarray:
             idx[k] = 0
 
 
-class Plan:
-    """Mirrors CircuitPlan: per-gate (mat, dmn, rest, gather)."""
+def gather_for(dims, strides, axes) -> np.ndarray:
+    """Mixed-radix gather table over `axes` (first axis major) —
+    plan.rs::gather_table."""
+    g = np.zeros(1, dtype=np.int64)
+    for a in axes:
+        g = np.add.outer(g, np.arange(dims[a], dtype=np.int64) * strides[a]).reshape(-1)
+    return g
 
-    def __init__(self, dims: list[int], gates: list[tuple[int, int, np.ndarray]]):
+
+def member_maps(dims, union, m, n):
+    """plan.rs member maps: fused row -> member row (i_m*d_n + i_n) and
+    fused row -> rest-of-union id."""
+    dims_u = [dims[a] for a in union]
+    rs = strides_of(dims_u)
+    df = int(np.prod(dims_u))
+    pm, pn = union.index(m), union.index(n)
+    r = np.arange(df)
+    im = (r // rs[pm]) % dims_u[pm]
+    inn = (r // rs[pn]) % dims_u[pn]
+    prow = im * dims[n] + inn
+    prest = np.zeros(df, dtype=np.int64)
+    for j in range(len(union)):
+        if j not in (pm, pn):
+            prest = prest * dims_u[j] + (r // rs[j]) % dims_u[j]
+    return prow, prest
+
+
+def embed_member(mat: np.ndarray, prow: np.ndarray, prest: np.ndarray) -> np.ndarray:
+    """E[r,c] = A[prow_r, prow_c] iff prest_r == prest_c, else 0."""
+    mask = prest[:, None] == prest[None, :]
+    return np.where(mask, mat[prow[:, None], prow[None, :]], mat.dtype.type(0))
+
+
+def fuse_groups(dims, gates, max_fused=MAX_FUSED_DMN):
+    """Greedy adjacent grouping, transcribing CircuitPlan::with_max_fused:
+    merge when the axis sets overlap, the union dmn is within the cap,
+    and the per-element GEMM cost does not grow."""
+    groups = []  # (sorted axes, dmn, [gate indices])
+    for gi, (m, n, _mat) in enumerate(gates):
+        gdmn = dims[m] * dims[n]
+        if groups:
+            axes, dmn, members = groups[-1]
+            if m in axes or n in axes:
+                union = sorted(set(axes) | {m, n})
+                union_dmn = int(np.prod([dims[a] for a in union]))
+                if union_dmn <= max_fused and union_dmn <= dmn + gdmn:
+                    groups[-1] = (union, union_dmn, members + [gi])
+                    continue
+        groups.append((sorted((m, n)), gdmn, [gi]))
+    return groups
+
+
+def fused_gate_specs(dims, gates, max_fused=MAX_FUSED_DMN):
+    """[(axes, dmn, mat, members)] after fusion.  `axes` keeps the
+    original (m, n) order for single-member gates (bit-compatible with
+    the unfused layout); fused gates use ascending union order.  Each
+    member dict carries the unfuse maps (prow/prest) and the prefix /
+    suffix embedding products R / L."""
+    specs = []
+    for union, union_dmn, member_ids in fuse_groups(dims, gates, max_fused):
+        if len(member_ids) == 1:
+            m, n, mat = gates[member_ids[0]]
+            specs.append(
+                (
+                    [m, n],
+                    union_dmn,
+                    mat.copy(),
+                    [dict(gate_idx=member_ids[0], m=m, n=n, dmn=union_dmn)],
+                )
+            )
+            continue
+        members = []
+        embeds = []
+        for gi in member_ids:
+            m, n, mat = gates[gi]
+            prow, prest = member_maps(dims, union, m, n)
+            members.append(
+                dict(gate_idx=gi, m=m, n=n, dmn=dims[m] * dims[n], prow=prow, prest=prest)
+            )
+            embeds.append(embed_member(mat, prow, prest))
+        k = len(embeds)
+        prefix = [np.eye(union_dmn, dtype=embeds[0].dtype)]
+        for i in range(1, k):
+            prefix.append(embeds[i - 1] @ prefix[i - 1])
+        fused_mat = embeds[k - 1] @ prefix[k - 1]
+        suffix = [None] * k
+        suffix[k - 1] = np.eye(union_dmn, dtype=embeds[0].dtype)
+        for i in range(k - 2, -1, -1):
+            suffix[i] = suffix[i + 1] @ embeds[i + 1]
+        for mem, r, l in zip(members, prefix, suffix):
+            mem["R"] = r
+            mem["L"] = l
+        specs.append((union, union_dmn, fused_mat, members))
+    return specs
+
+
+class Plan:
+    """Mirrors CircuitPlan: per (fused) gate (mat, dmn, rest, gather,
+    members)."""
+
+    def __init__(self, dims, gates, max_fused=MAX_FUSED_DMN):
         self.dims = list(dims)
         self.d = int(np.prod(dims))
+        self.n_source_gates = len(gates)
         strides = strides_of(dims)
         self.gates = []
-        for m, n, mat in gates:
-            dm, dn = dims[m], dims[n]
-            dmn = dm * dn
-            assert mat.shape == (dmn, dmn)
-            gather = (
-                np.arange(dm)[:, None] * strides[m] + np.arange(dn)[None, :] * strides[n]
-            ).reshape(-1)
+        for axes, dmn, mat, members in fused_gate_specs(dims, gates, max_fused):
             self.gates.append(
                 {
-                    "mat": mat.copy(),
+                    "mat": mat,
                     "dmn": dmn,
-                    "rest": rest_offsets(dims, strides, m, n),
-                    "gather": gather,
+                    "rest": rest_offsets(dims, strides, set(axes)),
+                    "gather": gather_for(dims, strides, axes),
+                    "members": members,
                 }
             )
+
+    def apply_flops(self) -> int:
+        return self.d * sum(g["dmn"] for g in self.gates)
 
     def _bases(self, g, cb: int) -> np.ndarray:
         """Column base offsets for the full (rest*cb) panel: column
@@ -236,6 +354,23 @@ class Plan:
             self.apply_gate(g, h, cb)
         return h
 
+    def apply_batch_residual_into(self, xs, cb, alpha, out) -> None:
+        """plan.rs::apply_batch_residual_into — gates 0..L-1 in place,
+        the final gate's scatter becomes out += alpha*(val - x)."""
+        if not self.gates:
+            return
+        h = xs.copy() if len(self.gates) > 1 else xs
+        for g in self.gates[:-1]:
+            self.apply_gate(g, h, cb)
+        g = self.gates[-1]
+        bases = self._bases(g, cb)
+        gather = g["gather"]
+        for c0 in range(0, bases.shape[0], BLOCK_COLS):
+            blk = bases[c0 : c0 + BLOCK_COLS]
+            seg = gather[:, None] + blk[None, :]
+            val = g["mat"] @ h.reshape(-1)[seg]
+            out.reshape(-1)[seg] += alpha * (val - xs.reshape(-1)[seg])
+
     def apply_batch_with_tape(self, xs: np.ndarray, cb: int):
         h = xs.copy()
         tape = []
@@ -245,11 +380,10 @@ class Plan:
         return h, tape
 
     def backward(self, tape, grad_out: np.ndarray, cb: int):
-        """Reverse sweep, transcribed from grad.rs::backward_gate_chunk:
-        gather gy (upstream grad) and gx (taped input), accumulate
-        dA += gy @ gx^T, transform g with A^T, scatter back."""
+        """Reverse sweep over the fused gates (grad.rs), then unfuse
+        dF back onto the original gates."""
         g = grad_out.copy()
-        gate_grads = [np.zeros_like(gp["mat"]) for gp in self.gates]
+        fused_grads = [np.zeros_like(gp["mat"]) for gp in self.gates]
         for ai in range(len(self.gates) - 1, -1, -1):
             gp = self.gates[ai]
             hin = tape[ai]
@@ -261,12 +395,30 @@ class Plan:
                 seg = gather[:, None] + blk[None, :]
                 gy = g.reshape(-1)[seg]  # (dmn, w)
                 gx = hin.reshape(-1)[seg]  # (dmn, w)
-                gate_grads[ai] += gy @ gx.T
+                fused_grads[ai] += gy @ gx.T
                 g.reshape(-1)[seg] = mat.T @ gy
-        return gate_grads, g
+        return self._unfuse(fused_grads), g
+
+    def _unfuse(self, fused_grads):
+        """GatePlan::unfuse_grads: dA_i = L_i^T dF R_i^T restricted to
+        the identity-embedded positions."""
+        out = [None] * self.n_source_gates
+        for gp, dF in zip(self.gates, fused_grads):
+            mems = gp["members"]
+            if len(mems) == 1:
+                out[mems[0]["gate_idx"]] = dF
+                continue
+            for mem in mems:
+                dE = mem["L"].T @ dF @ mem["R"].T
+                dA = np.zeros((mem["dmn"], mem["dmn"]), dtype=dF.dtype)
+                rr, cc = np.nonzero(mem["prest"][:, None] == mem["prest"][None, :])
+                np.add.at(dA, (mem["prow"][rr], mem["prow"][cc]), dE[rr, cc])
+                out[mem["gate_idx"]] = dA
+        return out
 
     def full_matrix(self) -> np.ndarray:
-        eye = np.eye(self.d, dtype=self.gates[0]["mat"].dtype if self.gates else np.float32)
+        dt = self.gates[0]["mat"].dtype if self.gates else np.float32
+        eye = np.eye(self.d, dtype=dt)
         return self.apply_batch(eye, self.d).T
 
 
@@ -285,6 +437,73 @@ def identity_gates(dims, structure, dtype=np.float32):
 
 
 # ---------------------------------------------------------------------------
+# compute::pool mirror: chunking + the two dispatchers
+# ---------------------------------------------------------------------------
+
+def chunk_ranges(batch: int, flops_per_vec: int) -> list[tuple[int, int]]:
+    """pool::chunks over whole vectors."""
+    cu = max(1, min(batch, PAR_MIN_FLOPS // max(1, flops_per_vec)))
+    return [(s, min(s + cu, batch)) for s in range(0, batch, cu)]
+
+
+class PoolDispatcher:
+    """Persistent worker pool (mirrors compute::pool: threads outlive
+    regions and drain a shared chunk counter; per region only a wakeup
+    is paid — the per-chunk cost is one counter bump, exactly like the
+    rust workers' atomic fetch_add)."""
+
+    def __init__(self, workers: int = 4):
+        self.workers = workers
+        self.ex = ThreadPoolExecutor(max_workers=max(1, workers - 1))
+
+    def run(self, jobs) -> None:
+        counter = itertools.count()
+
+        def drain():
+            while True:
+                i = next(counter)
+                if i >= len(jobs):
+                    return
+                jobs[i]()
+
+        # the submitting thread participates, like the rust submitter
+        futures = [
+            self.ex.submit(drain) for _ in range(min(self.workers, len(jobs)) - 1)
+        ]
+        drain()
+        for f in futures:
+            f.result()
+
+
+class SpawnDispatcher:
+    """Per-region thread spawn (mirrors QFT_DISPATCH=spawn / the PR 2
+    cost model): fresh threads every region, draining the same shared
+    job counter, joined before returning."""
+
+    def __init__(self, workers: int = 4):
+        self.workers = workers
+
+    def run(self, jobs) -> None:
+        counter = itertools.count()
+
+        def drain():
+            while True:
+                i = next(counter)
+                if i >= len(jobs):
+                    return
+                jobs[i]()
+
+        threads = [
+            threading.Thread(target=drain) for _ in range(min(self.workers, len(jobs)) - 1)
+        ]
+        for t in threads:
+            t.start()
+        drain()
+        for t in threads:
+            t.join()
+
+
+# ---------------------------------------------------------------------------
 # quanta::adapter + coordinator::host_trainer mirrors
 # ---------------------------------------------------------------------------
 
@@ -300,8 +519,11 @@ class Adapter:
         return Plan(self.dims, [(m, n, mat) for (m, n), mat in zip(self.structure, self.mats)])
 
     def apply_batch(self, xs: np.ndarray) -> np.ndarray:
-        cx = self.plan().apply_batch(xs, xs.shape[0])
-        return xs @ self.base.T + self.alpha * (cx - xs)
+        """Residual-fused forward (adapter.rs::apply_batch): y = x@W^T,
+        then the circuit residual scattered into y by the final gate."""
+        y = xs @ self.base.T
+        self.plan().apply_batch_residual_into(xs, xs.shape[0], self.alpha, y)
+        return y
 
     def forward_with_tape(self, xs: np.ndarray):
         plan = self.plan()
@@ -344,8 +566,24 @@ def clip_global_norm(grads: np.ndarray, max_norm: float) -> np.ndarray:
     return grads
 
 
+def lr_schedule_at(step, base, warmup, decay_steps, min_lr):
+    """host_trainer.rs::LrSchedule::at (f32 semantics via np.float32)."""
+    base, min_lr = np.float32(base), np.float32(min_lr)
+    if warmup > 0 and step < warmup:
+        return np.float32(base * np.float32(step + 1) / np.float32(warmup))
+    if decay_steps == 0:
+        return base
+    done = np.float32(min(step - warmup, decay_steps))
+    progress = done / np.float32(decay_steps)
+    return np.float32(
+        min_lr
+        + np.float32(0.5) * (base - min_lr) * (np.float32(1.0) + np.cos(np.float32(np.pi) * progress))
+    )
+
+
 class Adam:
-    def __init__(self, n, lr=2e-2, beta1=0.9, beta2=0.999, eps=1e-8, dtype=np.float32):
+    def __init__(self, n, lr=2e-2, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+                 dtype=np.float32):
         self.m = np.zeros(n, dtype)
         self.v = np.zeros(n, dtype)
         self.t = 0
@@ -355,14 +593,19 @@ class Adam:
             dtype(beta2),
             dtype(eps),
         )
+        self.weight_decay = dtype(weight_decay)
 
-    def step(self, params, grads):
+    def step(self, params, grads, lr=None):
         self.t += 1
+        lr = self.lr if lr is None else lr
         bc1 = 1.0 - self.beta1**self.t
         bc2 = 1.0 - self.beta2**self.t
         self.m = self.beta1 * self.m + (1 - self.beta1) * grads
         self.v = self.beta2 * self.v + (1 - self.beta2) * grads * grads
-        return params - self.lr * (self.m / bc1) / (np.sqrt(self.v / bc2) + self.eps)
+        upd = lr * (self.m / bc1) / (np.sqrt(self.v / bc2) + self.eps)
+        if self.weight_decay > 0:
+            upd = upd + lr * self.weight_decay * params
+        return params - upd
 
 
 def teacher_student(dims, n_train, n_val, teacher_std, noise_std, alpha, seed, dtype=np.float32):
@@ -388,7 +631,6 @@ def teacher_student(dims, n_train, n_val, teacher_std, noise_std, alpha, seed, d
 
 
 def finetune_host(adapter: Adapter, tx, ty, vx, vy, steps, batch, seed, lr=2e-2, clip=1.0):
-    d = tx.shape[1]
     params = adapter.params_flat()
     adam = Adam(params.size, lr=lr)
     sampler = Sampler(tx.shape[0], seed)
@@ -410,11 +652,85 @@ def finetune_host(adapter: Adapter, tx, ty, vx, vy, steps, batch, seed, lr=2e-2,
 
 
 # ---------------------------------------------------------------------------
+# chunked train step under exchangeable dispatchers (pool_vs_spawn)
+# ---------------------------------------------------------------------------
+
+def refresh_plan(plan: Plan, adapter) -> None:
+    """CircuitPlan::refresh_gate_mats: re-snapshot gate matrices into
+    the persistent plan instead of rebuilding the index tables (the
+    train_smoke config has no fused gates, so this is pure memcpy; a
+    fused gate would recompose via fused_gate_specs)."""
+    if any(len(g["members"]) > 1 for g in plan.gates):
+        fresh = fused_gate_specs(
+            plan.dims, [(m, n, mat) for (m, n), mat in zip(adapter.structure, adapter.mats)]
+        )
+        for g, (_axes, _dmn, mat, members) in zip(plan.gates, fresh):
+            g["mat"] = mat
+            g["members"] = members
+        return
+    for g in plan.gates:
+        g["mat"] = adapter.mats[g["members"][0]["gate_idx"]]
+
+
+def chunked_step(adapter, plan, tx, ty, sampler, adam, params, dispatcher, batch):
+    """One train step with the rust region structure — base matmul,
+    tape forward (+fused residual), backward — each split into
+    pool-style chunks of whole vectors and executed by `dispatcher`.
+    Chunk boundaries and the chunk-order gate-grad reduction are fixed,
+    so any dispatcher produces bitwise-identical results (the rust
+    pool's determinism contract)."""
+    idx = sampler.next_indices(batch)
+    xs, ys = tx[idx], ty[idx]
+    ranges = chunk_ranges(batch, plan.apply_flops())
+    pred = np.empty_like(xs)
+
+    def mm_job(s, e):
+        def job():
+            pred[s:e] = xs[s:e] @ adapter.base.T
+
+        return job
+
+    dispatcher.run([mm_job(s, e) for s, e in ranges])
+    tapes = [None] * len(ranges)
+
+    def fwd_job(i, s, e):
+        def job():
+            cx, tape = plan.apply_batch_with_tape(xs[s:e], e - s)
+            pred[s:e] += adapter.alpha * (cx - xs[s:e])
+            tapes[i] = tape
+
+        return job
+
+    dispatcher.run([fwd_job(i, s, e) for i, (s, e) in enumerate(ranges)])
+    loss, dpred = mse_grad(pred, ys)
+    partials = [None] * len(ranges)
+
+    def bwd_job(i, s, e):
+        def job():
+            gg, _ = plan.backward(tapes[i], adapter.alpha * dpred[s:e], e - s)
+            partials[i] = gg
+
+        return job
+
+    dispatcher.run([bwd_job(i, s, e) for i, (s, e) in enumerate(ranges)])
+    gate_grads = partials[0]
+    for p in partials[1:]:  # ascending chunk order — deterministic
+        gate_grads = [a + b for a, b in zip(gate_grads, p)]
+    g = np.concatenate([q.reshape(-1) for q in gate_grads]).astype(np.float32)
+    g = clip_global_norm(g, 1.0)
+    params = adam.step(params, g)
+    adapter.set_params(params)
+    refresh_plan(plan, adapter)
+    return loss, params
+
+
+# ---------------------------------------------------------------------------
 # validation checks
 # ---------------------------------------------------------------------------
 
 GRADCHECK_CASES = [
-    # (dims, structure, std, batch) — must match rust/tests/grad_props.rs
+    # (dims, structure, std, batch) — must match rust/tests/grad_props.rs;
+    # cases 2 and 3 execute FUSED chains under the PR 3 plan
     ([2, 3, 2], None, 0.3, 3),
     ([4, 4], [(0, 1)], 0.4, 2),
     ([2, 2, 2, 2], None, 0.2, 3),
@@ -427,7 +743,9 @@ def gradcheck(dtype, eps, seed0=71):
     relative error over all gate entries, input entries, and cases.
     Gates AND probe data reproduce rust/tests/grad_props.rs bit-for-bit:
     gates from Rng(71+ci) (Circuit::random inside the test), xs/w from
-    Rng::stream(100+ci, "gradcheck") (the gradcheck helper)."""
+    Rng::stream(100+ci, "gradcheck") (the gradcheck helper).  FD
+    perturbs ORIGINAL gate entries and rebuilds the plan, so fusion
+    (composition + unfuse) is inside the differentiated path."""
     worst = 0.0
     for ci, (dims, structure, std, batch) in enumerate(GRADCHECK_CASES):
         if structure is None:
@@ -471,6 +789,23 @@ def gradcheck(dtype, eps, seed0=71):
     return worst
 
 
+def fused_forward_parity():
+    """max |fused apply − unfused apply| over the gradcheck circuits
+    (f32) — the fusion counterpart of the rust plan unit tests."""
+    worst = 0.0
+    for ci, (dims, structure, std, batch) in enumerate(GRADCHECK_CASES):
+        if structure is None:
+            structure = all_pairs_structure(len(dims))
+        gates = random_gates(dims, structure, std, Rng(71 + ci), np.float32)
+        d = int(np.prod(dims))
+        xs = Rng.stream(100 + ci, "gradcheck").fill_normal(batch * d, 1.0)
+        xs = xs.reshape(batch, d)
+        yf = Plan(dims, gates).apply_batch(xs, batch)
+        yu = Plan(dims, gates, max_fused=0).apply_batch(xs, batch)
+        worst = max(worst, float(np.abs(yf - yu).max()))
+    return worst
+
+
 def merge_equivalence_margin():
     """f32 max|merge @ x − apply(x)| on the rust adapter-test config."""
     dims = [2, 3, 2]
@@ -491,17 +826,22 @@ def main():
     ap.add_argument(
         "--bench-out",
         default=str(Path(__file__).resolve().parents[2] / "BENCH_quanta_engine.json"),
-        help="merge the train_smoke section into this perf record "
-        "(created if missing); pass 'none' to skip writing",
+        help="merge the train_smoke + pool_vs_spawn sections into this perf "
+        "record (created if missing); pass 'none' to skip writing",
     )
     args = ap.parse_args()
 
-    print("== gradcheck (f64, formula exactness) ==")
+    print("== fused vs unfused forward parity (f32) ==")
+    fp = fused_forward_parity()
+    print(f"   max |fused - unfused|: {fp:.3e}")
+    assert fp < 1e-4, fp
+
+    print("== gradcheck incl. fused chains (f64, formula exactness) ==")
     w64 = gradcheck(np.float64, eps=1e-4)
     print(f"   worst rel err: {w64:.3e}")
     assert w64 < 1e-7, w64
 
-    print("== gradcheck (f32, rust test tolerance) ==")
+    print("== gradcheck incl. fused chains (f32, rust test tolerance) ==")
     w32 = gradcheck(np.float32, eps=0.5)
     print(f"   worst rel err: {w32:.3e}  (rust asserts < 1e-3)")
     assert w32 < 5e-4, w32
@@ -511,11 +851,37 @@ def main():
     print(f"   max |merge@x - apply(x)|: {m:.3e}  (rust asserts < 1e-5)")
     assert m < 1e-6, m
 
+    print("== lr schedule pinned values (host_trainer.rs unit test) ==")
+    pins = [
+        (0, 0.01),
+        (9, 0.1),
+        (10, 0.1),
+        (60, 0.055),
+        (110, 0.01),
+        (500, 0.01),
+    ]
+    for step, want in pins:
+        got = float(lr_schedule_at(step, 0.1, 10, 100, 0.01))
+        assert abs(got - want) < 1e-6, (step, got, want)
+        print(f"   step {step:3}: lr {got:.6f} (pin {want})")
+    assert float(lr_schedule_at(12345, 2e-2, 0, 0, 0.0)) == np.float32(2e-2)
+
+    print("== decoupled weight decay (zero grads -> p*(1-lr*wd)) ==")
+    ad = Adam(2, lr=0.1, weight_decay=0.5)
+    p = np.array([2.0, -4.0], dtype=np.float32)
+    p2 = ad.step(p, np.zeros(2, dtype=np.float32))
+    want = p * (np.float32(1.0) - np.float32(0.1) * np.float32(0.5))
+    assert np.array_equal(p2, want), (p2, want)
+    print(f"   ok: {p} -> {p2}")
+
     print("== host trainer: rust train_smoke.rs configs ==")
-    # tiny_task() in host_trainer.rs unit tests
+    # tiny_task() in host_trainer.rs unit tests — dims [2,2,2] all-pairs
+    # now fuses into a single 8x8 gate; training must still converge
     base, structure, (tx, ty), (vx, vy) = teacher_student(
         [2, 2, 2], 48, 16, 0.3, 0.0, 1.0, seed=7
     )
+    n_fused = len(Plan([2, 2, 2], identity_gates([2, 2, 2], structure)).gates)
+    print(f"   dims [2,2,2]: {len(structure)} gates -> {n_fused} fused")
     student = Adapter(base, [2, 2, 2], identity_gates([2, 2, 2], structure), 1.0)
     init = mse(student.apply_batch(tx), ty)
     curve, val = finetune_host(student, tx, ty, vx, vy, steps=120, batch=16, seed=0)
@@ -523,7 +889,7 @@ def main():
     print(f"   dims [2,2,2]: train mse {init:.5f} -> {fin:.5f}  ({init / fin:.1f}x, val {val:.5f})")
     assert fin < 0.25 * init, (init, fin)
 
-    # the CI train-smoke task (rust/tests/train_smoke.rs)
+    # the CI train-smoke task (rust/tests/train_smoke.rs) — no fusion
     base, structure, (tx, ty), (vx, vy) = teacher_student(
         [4, 4, 4], 128, 32, 0.3, 0.01, 1.0, seed=0
     )
@@ -578,14 +944,71 @@ def main():
     print(f"== bench train_smoke: fwd {fwd_us:.0f}us bwd {bwd_us:.0f}us step {step_us:.0f}us "
           f"loss_reduction {reduction:.1f}x ==")
 
+    # -- pool_vs_spawn: same chunked step, exchangeable dispatchers ------
+    # Two dispatch workers: the chunk jobs are index-heavy and hold the
+    # GIL, so more python threads only add contention noise — the
+    # section isolates DISPATCH overhead (persistent pool wakeup vs
+    # per-region thread create/join), which 2 workers measure cleanly.
+    print("== pool_vs_spawn: chunked step, persistent pool vs thread spawn ==")
+    workers = 2
+
+    def run_losses(dispatcher, n_steps=10):
+        st = Adapter(base, dims, identity_gates(dims, structure), 1.0)
+        plan2 = st.plan()
+        pr = st.params_flat()
+        ad2 = Adam(pr.size)
+        sm = Sampler(tx.shape[0], 0)
+        losses = []
+        for _ in range(n_steps):
+            loss, pr = chunked_step(st, plan2, tx, ty, sm, ad2, pr, dispatcher, batch)
+            losses.append(loss)
+        return losses
+
+    pool_disp = PoolDispatcher(workers)
+    l_pool = run_losses(pool_disp)
+    l_spawn = run_losses(SpawnDispatcher(workers))
+    assert l_pool == l_spawn, "dispatchers must be arithmetically exchangeable"
+
+    # paired interleaved timing: one spawn step, one pool step,
+    # alternating — container-level drift (scheduler, thermal) hits
+    # both series equally, so the medians compare cleanly
+    def mk_state(dispatcher):
+        st = Adapter(base, dims, identity_gates(dims, structure), 1.0)
+        plan2 = st.plan()
+        pr = st.params_flat()
+        return [st, plan2, Adam(pr.size), Sampler(tx.shape[0], 0), pr, dispatcher]
+
+    def one_step(state):
+        st, plan2, ad2, sm, pr, dispatcher = state
+        t0 = time.perf_counter()
+        _, state[4] = chunked_step(st, plan2, tx, ty, sm, ad2, pr, dispatcher, batch)
+        return (time.perf_counter() - t0) * 1e6
+
+    s_state = mk_state(SpawnDispatcher(workers))
+    p_state = mk_state(pool_disp)
+    for _ in range(5):
+        one_step(s_state)
+        one_step(p_state)
+    s_samples, p_samples = [], []
+    for _ in range(60):
+        s_samples.append(one_step(s_state))
+        p_samples.append(one_step(p_state))
+    spawn_step_us = float(np.median(s_samples))
+    pool_step_us = float(np.median(p_samples))
+    step_speedup = spawn_step_us / pool_step_us
+    print(
+        f"   spawn {spawn_step_us:.0f}us  pool {pool_step_us:.0f}us  "
+        f"=> {step_speedup:.2f}x (losses bitwise equal over 10 steps)"
+    )
+
     if args.bench_out != "none":
         # merge into the shared perf record so engine_mirror.py +
-        # train_mirror.py (in either order) produce the full schema-2
+        # train_mirror.py (in either order) produce the full schema-3
         # record the CI perf-smoke gates read
         out_path = Path(args.bench_out)
         record = {
             "bench": "quanta_engine",
-            "schema_version": 2,
+            "schema_version": 3,
             "substrate": "python-numpy-mirror",
             "results": {},
         }
@@ -598,7 +1021,7 @@ def main():
                     record = prev
             except (json.JSONDecodeError, OSError):
                 pass
-        record["schema_version"] = 2
+        record["schema_version"] = 3
         record.setdefault("results", {})["train_smoke"] = {
             "dims": dims,
             "batch": batch,
@@ -609,8 +1032,17 @@ def main():
             "step_us": round(step_us, 1),
             "loss_reduction": round(reduction, 2),
         }
+        record["results"]["pool_vs_spawn"] = {
+            "dims": dims,
+            "batch": batch,
+            "spawn_step_us": round(spawn_step_us, 1),
+            "pool_step_us": round(pool_step_us, 1),
+            "step_speedup": round(step_speedup, 2),
+            "losses_bitwise_equal": True,
+            "steps_compared": 10,
+        }
         out_path.write_text(json.dumps(record, indent=2) + "\n")
-        print(f"merged train_smoke into {out_path}")
+        print(f"merged train_smoke + pool_vs_spawn into {out_path}")
     print("ALL MIRROR CHECKS PASSED")
 
 

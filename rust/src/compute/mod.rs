@@ -1,0 +1,6 @@
+//! Shared compute layer: the persistent worker pool and chunking
+//! helpers every parallel kernel (dense matmul, the circuit engine's
+//! forward/backward, the host optimizer) dispatches through.  See
+//! DESIGN.md §6.
+
+pub mod pool;

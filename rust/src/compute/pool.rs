@@ -1,0 +1,405 @@
+//! Persistent compute pool shared by every parallel kernel.
+//!
+//! PR 1/2 parallelized the hot paths with `std::thread::scope`, which
+//! pays a full thread spawn + join per call — a training step crossed
+//! that cost three to four times (tape forward, backward, the base
+//! matmul, and potentially the optimizer).  This module replaces all of
+//! those spawn sites with one fixed set of worker threads, parked on a
+//! condvar and woken per parallel region.
+//!
+//! ## Job / chunk model
+//!
+//! A parallel region is `run(n_chunks, f)`: `f(i)` is called exactly
+//! once for every chunk index `i < n_chunks`, by whichever thread
+//! (workers or the submitter, which always participates) claims `i`
+//! from a shared atomic counter.  **Chunk boundaries are a function of
+//! the problem only** — [`chunks`] sizes them so each chunk carries
+//! roughly [`PAR_MIN_FLOPS`] worth of work — never of the worker
+//! count.  Chunks write disjoint output slices ([`DisjointChunks`])
+//! and any cross-chunk reduction is performed by the caller in
+//! ascending chunk order after `run` returns, so results are **bitwise
+//! identical for any `QFT_THREADS`**: the thread count only changes
+//! who executes a chunk, never what a chunk computes or the order
+//! partial results are combined.  (The PR 2 scope-based kernels
+//! derived chunk sizes from the worker count, so gate-gradient bit
+//! patterns were only stable for a *fixed* `QFT_THREADS`.)
+//!
+//! ## Scheduling & shutdown semantics
+//!
+//! Submissions are serialized by a mutex (one region in flight; others
+//! block — regions are short).  A region submitted from inside a pool
+//! chunk (e.g. a `matmul` called by a trainer chunk) runs inline and
+//! serial on the calling thread, so nesting can never deadlock.
+//! Workers are spawned detached on first use and never join: they park
+//! on the condvar between regions and die with the process.  A panic
+//! inside a chunk is caught on the worker, the region completes, and
+//! the submitter re-raises — a worker thread is never lost.
+//!
+//! `QFT_THREADS` caps how many workers participate per region (read at
+//! submission, so tests can sweep it); `QFT_DISPATCH=spawn` routes
+//! regions through a scoped-spawn dispatcher with the *same* chunk
+//! claims — the PR 2 cost model on the PR 3 chunking — which is what
+//! the `pool_vs_spawn` bench section measures.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Work quantum: one chunk of a parallel region carries roughly this
+/// many multiplies, and totals below ~one quantum run serial inline.
+/// Replaces the per-call worker clamp (`tensor::num_threads`) and the
+/// old 1M-multiply serial cutoffs: with parked workers the dispatch
+/// cost is a condvar wake, so regions an eighth the old size are worth
+/// splitting.
+pub const PAR_MIN_FLOPS: usize = 1 << 17;
+
+thread_local! {
+    /// Set while this thread executes pool chunks (worker or
+    /// participating submitter); nested regions run inline.
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Chunk sizing for `units` independent work items of
+/// `flops_per_unit` multiplies each: returns `(chunk_units,
+/// n_chunks)` with chunks of `⌊PAR_MIN_FLOPS / flops_per_unit⌋` whole
+/// units — i.e. *at most* about one [`PAR_MIN_FLOPS`] quantum each,
+/// never fewer than one unit (so a unit wider than the quantum becomes
+/// its own chunk).  Depends only on the problem shape — never on
+/// thread count — which is what makes pooled results
+/// `QFT_THREADS`-invariant.
+pub fn chunks(units: usize, flops_per_unit: usize) -> (usize, usize) {
+    if units == 0 {
+        return (1, 0);
+    }
+    let chunk_units = (PAR_MIN_FLOPS / flops_per_unit.max(1)).clamp(1, units);
+    (chunk_units, units.div_ceil(chunk_units))
+}
+
+/// Worker budget for one region: `QFT_THREADS` if set, else hardware
+/// parallelism.  Only affects scheduling (who runs chunks), never
+/// results.
+fn target_workers() -> usize {
+    std::env::var("QFT_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// `QFT_DISPATCH=spawn` selects the scoped-spawn dispatcher (PR 2 cost
+/// model, identical chunk claims) — the bench baseline.
+fn spawn_dispatch() -> bool {
+    matches!(std::env::var("QFT_DISPATCH").as_deref(), Ok("spawn"))
+}
+
+/// Run `job(i)` once per chunk index `0..n_chunks`, in parallel when
+/// the pool has workers and the region is not nested.  Returns after
+/// every chunk completed.  Panics (after completion) if any chunk
+/// panicked.
+pub fn run<F: Fn(usize) + Sync>(n_chunks: usize, job: F) {
+    if n_chunks == 0 {
+        return;
+    }
+    let nested = IN_PARALLEL.with(|f| f.get());
+    let workers = target_workers();
+    if n_chunks == 1 || workers <= 1 || nested {
+        for i in 0..n_chunks {
+            job(i);
+        }
+        return;
+    }
+    if spawn_dispatch() {
+        run_spawn(n_chunks, &job, workers);
+    } else {
+        global().run(n_chunks, &job, workers);
+    }
+}
+
+/// One submitted parallel region.  `func` borrows the submitter's
+/// stack; safety rests on `ComputePool::run` not returning until all
+/// `n_chunks` chunks completed, and on late-waking workers bailing out
+/// on the exhausted `next` counter before ever dereferencing `func`.
+struct Job {
+    func: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    done: AtomicUsize,
+    n_chunks: usize,
+    /// First caught chunk-panic payload; re-raised by the submitter
+    /// with `resume_unwind` so the original message/location survive.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+// SAFETY: `func` points at a `Sync` closure and is only dereferenced
+// while the submitting call frame is alive (see `Job` docs).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Slot {
+    epoch: u64,
+    job: Option<Arc<Job>>,
+    /// Workers with index < limit participate in the current epoch.
+    active_limit: usize,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// The process-wide pool: `available_parallelism() - 1` parked workers
+/// (the submitter is the remaining lane).
+struct ComputePool {
+    shared: Arc<Shared>,
+    submit_lock: Mutex<()>,
+}
+
+fn global() -> &'static ComputePool {
+    static POOL: OnceLock<ComputePool> = OnceLock::new();
+    POOL.get_or_init(ComputePool::new)
+}
+
+impl ComputePool {
+    fn new() -> ComputePool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { epoch: 0, job: None, active_limit: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        for idx in 0..hw.saturating_sub(1) {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("qft-pool-{idx}"))
+                .spawn(move || worker_loop(&sh, idx))
+                .expect("compute pool: worker spawn failed");
+        }
+        ComputePool { shared, submit_lock: Mutex::new(()) }
+    }
+
+    fn run(&self, n_chunks: usize, func: &(dyn Fn(usize) + Sync), workers: usize) {
+        // recover from poisoning: the re-raise below unwinds with this
+        // guard held, and the slot state it protects is always left
+        // valid (job retired, counters exhausted) — later regions must
+        // keep working after a caught panic
+        let _submit = self.submit_lock.lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: the pointee outlives this call; `Job` is retired
+        // (counter exhausted, slot cleared) before we return.
+        let func = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(func)
+        };
+        let job = Arc::new(Job {
+            func,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            n_chunks,
+            panic_payload: Mutex::new(None),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.epoch += 1;
+            slot.job = Some(job.clone());
+            // never more executors than chunks: the submitter is one
+            // lane, so at most n_chunks - 1 workers join this region
+            // (a woken worker above the limit re-parks without touching
+            // the job)
+            slot.active_limit = (workers - 1).min(n_chunks - 1);
+            self.shared.work_cv.notify_all();
+        }
+        execute(&self.shared, &job);
+        let mut slot = self.shared.slot.lock().unwrap();
+        while job.done.load(Ordering::Acquire) < n_chunks {
+            slot = self.shared.done_cv.wait(slot).unwrap();
+        }
+        slot.job = None;
+        drop(slot);
+        let payload = job.panic_payload.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            while slot.epoch == seen {
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+            seen = slot.epoch;
+            if idx < slot.active_limit { slot.job.clone() } else { None }
+        };
+        if let Some(job) = job {
+            execute(shared, &job);
+        }
+    }
+}
+
+/// Drain chunk indices from `job` on the current thread.
+fn execute(shared: &Shared, job: &Job) {
+    IN_PARALLEL.with(|f| f.set(true));
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_chunks {
+            break;
+        }
+        // SAFETY: the counter handed us an unclaimed chunk, so the
+        // submitter is still inside `ComputePool::run` and `func` is
+        // alive.
+        let func = unsafe { &*job.func };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| func(i))) {
+            let mut slot = job.panic_payload.lock().unwrap_or_else(|p| p.into_inner());
+            slot.get_or_insert(payload);
+        }
+        if job.done.fetch_add(1, Ordering::Release) + 1 == job.n_chunks {
+            let _slot = shared.slot.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+    IN_PARALLEL.with(|f| f.set(false));
+}
+
+/// The PR 2 cost model as a dispatcher: scoped threads spawned per
+/// region, draining the same chunk counter — used by the
+/// `pool_vs_spawn` bench to price the spawn overhead the pool removes.
+/// Arithmetic is identical to the pooled path (same chunks, same
+/// claim-any order) by construction.
+fn run_spawn(n_chunks: usize, func: &(dyn Fn(usize) + Sync), workers: usize) {
+    let next = AtomicUsize::new(0);
+    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    // same panic contract as the pooled path: chunks are caught, the
+    // region drains, the submitter re-raises the first payload — so
+    // the IN_PARALLEL reset below always runs
+    let drain = || {
+        IN_PARALLEL.with(|f| f.set(true));
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n_chunks {
+                break;
+            }
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| func(i))) {
+                let mut slot = panic_payload.lock().unwrap_or_else(|p| p.into_inner());
+                slot.get_or_insert(payload);
+            }
+        }
+        IN_PARALLEL.with(|f| f.set(false));
+    };
+    std::thread::scope(|s| {
+        for _ in 1..workers.min(n_chunks) {
+            s.spawn(&drain);
+        }
+        drain();
+    });
+    let payload = panic_payload.lock().unwrap_or_else(|p| p.into_inner()).take();
+    if let Some(payload) = payload {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Hands out non-overlapping `&mut` sub-slices of one buffer by chunk
+/// index, so a `Fn(usize)` pool job can write its own chunk without a
+/// lock.  `slice(i)` covers `[i·chunk_len, min((i+1)·chunk_len, len))`
+/// — together the chunks tile the buffer exactly.
+pub struct DisjointChunks<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    chunk_len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: chunks are disjoint and each index is claimed by exactly one
+// executor (the pool's chunk counter), so no two threads alias.
+unsafe impl<T: Send> Send for DisjointChunks<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointChunks<'_, T> {}
+
+impl<'a, T> DisjointChunks<'a, T> {
+    pub fn new(data: &'a mut [T], chunk_len: usize) -> DisjointChunks<'a, T> {
+        assert!(chunk_len > 0, "DisjointChunks: zero chunk length");
+        DisjointChunks {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            chunk_len,
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.len.div_ceil(self.chunk_len)
+    }
+
+    /// Mutable view of chunk `i`.
+    ///
+    /// # Safety
+    /// Each chunk index must be claimed by at most one live borrower —
+    /// guaranteed when `i` comes from a [`run`] chunk counter and the
+    /// borrow ends with the job closure.
+    #[allow(clippy::mut_from_ref)] // disjointness contract documented above
+    pub unsafe fn slice(&self, i: usize) -> &'a mut [T] {
+        let start = i * self.chunk_len;
+        debug_assert!(start < self.len, "chunk {i} out of range");
+        let end = (start + self.chunk_len).min(self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_sizing_is_problem_shaped() {
+        // one quantum per chunk, clamped to whole units
+        assert_eq!(chunks(0, 1000), (1, 0));
+        assert_eq!(chunks(10, PAR_MIN_FLOPS), (1, 10));
+        assert_eq!(chunks(10, PAR_MIN_FLOPS * 2), (1, 10));
+        let (cu, n) = chunks(32, 10_240);
+        assert_eq!(cu, PAR_MIN_FLOPS / 10_240);
+        assert_eq!(n, 32usize.div_ceil(cu));
+        // tiny problems collapse to one chunk (serial inline)
+        assert_eq!(chunks(4, 100), (4, 1));
+    }
+
+    #[test]
+    fn run_covers_every_chunk_exactly_once() {
+        let mut out = vec![0u32; 103];
+        let chunked = DisjointChunks::new(&mut out, 10);
+        let n = chunked.n_chunks();
+        run(n, |i| {
+            // SAFETY: each chunk index claimed once by the pool.
+            let c = unsafe { chunked.slice(i) };
+            for (k, v) in c.iter_mut().enumerate() {
+                *v += (i * 10 + k) as u32 + 1;
+            }
+        });
+        for (k, v) in out.iter().enumerate() {
+            assert_eq!(*v, k as u32 + 1, "element {k} written {v} times/NE");
+        }
+    }
+
+    #[test]
+    fn nested_runs_execute_inline() {
+        let mut out = vec![0u32; 64];
+        let chunked = DisjointChunks::new(&mut out, 8);
+        run(8, |i| {
+            // SAFETY: disjoint per chunk index.
+            let c = unsafe { chunked.slice(i) };
+            let inner = std::sync::atomic::AtomicU32::new(0);
+            run(4, |_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+            let add = inner.load(Ordering::Relaxed);
+            for v in c.iter_mut() {
+                *v = add;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 4));
+    }
+
+    // NOTE: spawn-vs-pool dispatch equality is covered by
+    // rust/tests/pool_props.rs, which owns a whole test binary so its
+    // QFT_DISPATCH / QFT_THREADS env sweeps cannot race other tests —
+    // do not add env-mutating tests to this (parallel) lib binary.
+}

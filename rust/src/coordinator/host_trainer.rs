@@ -10,6 +10,7 @@
 //! gate-parameter vector; the base weight stays frozen by construction
 //! (the backward never produces a gradient for it).
 
+use crate::compute::pool;
 use crate::coordinator::trainer::TrainOutcome;
 use crate::data::batcher::Sampler;
 use crate::data::synth::SynthTask;
@@ -17,9 +18,15 @@ use crate::info;
 use crate::quanta::QuantaAdapter;
 use crate::util::error::{Error, Result};
 
+/// Approximate multiply-equivalent cost of one Adam parameter update
+/// (EMAs, bias correction, rsqrt) — sizes the pool chunks so only
+/// genuinely large parameter vectors fan out.
+const ADAM_FLOPS_PER_PARAM: usize = 16;
+
 /// Host fine-tuning configuration (Adam hyper-parameters follow the
 /// paper's App. E defaults; `clip` is the global-norm ceiling, 0
-/// disables clipping).
+/// disables clipping).  The schedule fields default to the PR 2
+/// behavior — constant `lr`, no decay, no weight decay — bit-for-bit.
 #[derive(Clone, Debug)]
 pub struct HostTrainConfig {
     pub seed: u64,
@@ -31,6 +38,16 @@ pub struct HostTrainConfig {
     pub eps: f32,
     /// Global-norm gradient clip (0 = off).
     pub clip: f32,
+    /// Linear warmup from `lr/warmup_steps` to `lr` over this many
+    /// steps (0 = no warmup).
+    pub warmup_steps: usize,
+    /// Cosine decay from `lr` to `min_lr` over this many post-warmup
+    /// steps (0 = constant after warmup).
+    pub lr_decay_steps: usize,
+    /// Cosine floor (only meaningful with `lr_decay_steps > 0`).
+    pub min_lr: f32,
+    /// Decoupled (AdamW-style) weight decay coefficient (0 = off).
+    pub weight_decay: f32,
     pub eval_every: usize,
     pub log_every: usize,
     /// Stop after this many evals without val improvement (None = never).
@@ -48,6 +65,10 @@ impl Default for HostTrainConfig {
             beta2: 0.999,
             eps: 1e-8,
             clip: 1.0,
+            warmup_steps: 0,
+            lr_decay_steps: 0,
+            min_lr: 0.0,
+            weight_decay: 0.0,
             eval_every: 20,
             log_every: 20,
             patience: None,
@@ -55,8 +76,52 @@ impl Default for HostTrainConfig {
     }
 }
 
+/// Linear-warmup + cosine-decay learning-rate schedule (the paper's
+/// App. E recipe).  `at(step)` for a 0-indexed step:
+///
+/// * `step < warmup`: `base · (step+1) / warmup` (ramps *to* `base` at
+///   the last warmup step);
+/// * then cosine from `base` to `min_lr` over `decay_steps`, clamped at
+///   `min_lr` afterwards;
+/// * `warmup == 0 && decay_steps == 0`: exactly `base` (no float ops —
+///   the PR 2 constant-lr trajectory stays bitwise identical).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub warmup: usize,
+    pub decay_steps: usize,
+    pub min_lr: f32,
+}
+
+impl LrSchedule {
+    pub fn from_config(cfg: &HostTrainConfig) -> LrSchedule {
+        LrSchedule {
+            base: cfg.lr,
+            warmup: cfg.warmup_steps,
+            decay_steps: cfg.lr_decay_steps,
+            min_lr: cfg.min_lr,
+        }
+    }
+
+    /// Learning rate for 0-indexed `step`.
+    pub fn at(&self, step: usize) -> f32 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.base * (step + 1) as f32 / self.warmup as f32;
+        }
+        if self.decay_steps == 0 {
+            return self.base;
+        }
+        let done = (step - self.warmup).min(self.decay_steps) as f32;
+        let progress = done / self.decay_steps as f32;
+        self.min_lr
+            + 0.5 * (self.base - self.min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
+    }
+}
+
 /// Adam optimizer state over a flat parameter vector (bias-corrected,
-/// Kingma & Ba 2015 — the same update the train_step HLO bakes in).
+/// Kingma & Ba 2015 — the same update the train_step HLO bakes in),
+/// with optional decoupled (AdamW) weight decay.  Updates are
+/// elementwise, so the pooled chunk split below cannot change any bit.
 pub struct Adam {
     m: Vec<f32>,
     v: Vec<f32>,
@@ -65,6 +130,36 @@ pub struct Adam {
     beta1: f32,
     beta2: f32,
     eps: f32,
+    weight_decay: f32,
+}
+
+/// One chunk of the Adam update (shared by the serial and pooled
+/// paths; `wd > 0` adds the decoupled decay term `lr·wd·p`).
+#[allow(clippy::too_many_arguments)]
+fn adam_chunk(
+    params: &mut [f32],
+    grads: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    bc1: f32,
+    bc2: f32,
+) {
+    for ((p, g), (m, v)) in params.iter_mut().zip(grads).zip(m.iter_mut().zip(v.iter_mut())) {
+        *m = beta1 * *m + (1.0 - beta1) * g;
+        *v = beta2 * *v + (1.0 - beta2) * g * g;
+        let mh = *m / bc1;
+        let vh = *v / bc2;
+        let step = lr * mh / (vh.sqrt() + eps);
+        // decoupled decay (Loshchilov & Hutter): applied to the
+        // parameter, not routed through the moments; guarded so wd = 0
+        // reproduces the PR 2 update bit-for-bit
+        *p -= if wd > 0.0 { step + lr * wd * *p } else { step };
+    }
 }
 
 impl Adam {
@@ -77,26 +172,52 @@ impl Adam {
             beta1: cfg.beta1,
             beta2: cfg.beta2,
             eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
         }
     }
 
-    /// One update step: `params ← params − lr · m̂ / (√v̂ + ε)`.
+    /// One update step at the configured base `lr`.
     pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        let lr = self.lr;
+        self.step_at(params, grads, lr);
+    }
+
+    /// One update step at an explicit learning rate (the scheduled
+    /// path): `params ← params − lr · (m̂ / (√v̂ + ε) + wd · params)`,
+    /// parallelized over parameter chunks on the compute pool.
+    pub fn step_at(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), grads.len());
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        for ((p, g), (m, v)) in params
-            .iter_mut()
-            .zip(grads)
-            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
-            *m = self.beta1 * *m + (1.0 - self.beta1) * g;
-            *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
-            let mh = *m / bc1;
-            let vh = *v / bc2;
-            *p -= self.lr * mh / (vh.sqrt() + self.eps);
+        let (b1, b2, eps, wd) = (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let (chunk, n_chunks) = pool::chunks(params.len(), ADAM_FLOPS_PER_PARAM);
+        if n_chunks <= 1 {
+            adam_chunk(params, grads, &mut self.m, &mut self.v, lr, b1, b2, eps, wd, bc1, bc2);
+            return;
         }
+        let pc = pool::DisjointChunks::new(params, chunk);
+        let mc = pool::DisjointChunks::new(&mut self.m, chunk);
+        let vc = pool::DisjointChunks::new(&mut self.v, chunk);
+        pool::run(n_chunks, |i| {
+            // SAFETY: params/m/v are chunked identically and each chunk
+            // index is claimed exactly once.
+            let p = unsafe { pc.slice(i) };
+            let g = &grads[i * chunk..i * chunk + p.len()];
+            adam_chunk(
+                p,
+                g,
+                unsafe { mc.slice(i) },
+                unsafe { vc.slice(i) },
+                lr,
+                b1,
+                b2,
+                eps,
+                wd,
+                bc1,
+                bc2,
+            );
+        });
     }
 }
 
@@ -169,6 +290,7 @@ pub fn finetune_host(
     }
     let mut params = adapter.params_flat();
     let mut adam = Adam::new(params.len(), cfg);
+    let sched = LrSchedule::from_config(cfg);
     let mut sampler = Sampler::new(task.n_train, cfg.seed);
     let mut xs = vec![0.0f32; cfg.batch * d];
     let mut ys = vec![0.0f32; cfg.batch * d];
@@ -190,7 +312,7 @@ pub fn finetune_host(
         // gate gradients only — the input gradient is never used here
         let mut grads = adapter.backward_gates(&tape, &dpred, cfg.batch)?;
         clip_global_norm(&mut grads, cfg.clip);
-        adam.step(&mut params, &grads);
+        adam.step_at(&mut params, &grads, sched.at(step));
         adapter.set_params(&params)?;
         steps_run = step + 1;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
@@ -261,6 +383,70 @@ mod tests {
             adam.step(&mut p, &g);
         }
         assert!(f(&p) < 0.01 * f0, "Adam failed to descend: {} -> {}", f0, f(&p));
+    }
+
+    #[test]
+    fn lr_schedule_pinned_values() {
+        // warmup 10, cosine over 100 to min 0.01 — values pinned at
+        // steps {0, warmup, mid, end} and past the end (mirrored by
+        // train_mirror.py::lr_schedule_at with the same constants)
+        let s = LrSchedule { base: 0.1, warmup: 10, decay_steps: 100, min_lr: 0.01 };
+        assert!((s.at(0) - 0.01).abs() < 1e-7, "step 0: {}", s.at(0));
+        assert!((s.at(9) - 0.1).abs() < 1e-7, "last warmup step: {}", s.at(9));
+        assert!((s.at(10) - 0.1).abs() < 1e-7, "step warmup: {}", s.at(10));
+        assert!((s.at(60) - 0.055).abs() < 1e-6, "mid decay: {}", s.at(60));
+        assert!((s.at(110) - 0.01).abs() < 1e-7, "end: {}", s.at(110));
+        assert!((s.at(500) - 0.01).abs() < 1e-7, "past end clamps: {}", s.at(500));
+        // disabled schedule returns base exactly (bitwise PR 2 path)
+        let c = LrSchedule { base: 2e-2, warmup: 0, decay_steps: 0, min_lr: 0.0 };
+        assert_eq!(c.at(0), 2e-2);
+        assert_eq!(c.at(12345), 2e-2);
+    }
+
+    #[test]
+    fn decoupled_weight_decay_shrinks_without_gradients() {
+        // zero gradients → zero Adam step, so the only motion is the
+        // decoupled decay p ← p·(1 − lr·wd) per step (exactly)
+        let cfg = HostTrainConfig { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        let mut adam = Adam::new(2, &cfg);
+        let mut p = [2.0f32, -4.0];
+        let g = [0.0f32, 0.0];
+        adam.step(&mut p, &g);
+        assert_eq!(p, [2.0 * (1.0 - 0.1 * 0.5), -4.0 * (1.0 - 0.1 * 0.5)]);
+        // wd = 0 leaves zero-grad params exactly in place
+        let cfg0 = HostTrainConfig { lr: 0.1, ..Default::default() };
+        let mut adam0 = Adam::new(2, &cfg0);
+        let mut q = [2.0f32, -4.0];
+        adam0.step(&mut q, &g);
+        assert_eq!(q, [2.0, -4.0]);
+    }
+
+    #[test]
+    fn scheduled_run_still_learns() {
+        // warmup + cosine + mild weight decay on the tiny task must
+        // still cut the loss (end-to-end wiring of the schedule path)
+        let task = tiny_task();
+        let mut student = task.student().unwrap();
+        let init = {
+            let pred = student.apply_batch(&task.train_x, task.n_train).unwrap();
+            mse(&pred, &task.train_y)
+        };
+        let cfg = HostTrainConfig {
+            steps: 120,
+            batch: 16,
+            warmup_steps: 10,
+            lr_decay_steps: 110,
+            min_lr: 1e-3,
+            weight_decay: 1e-4,
+            ..Default::default()
+        };
+        let out = finetune_host(&mut student, &task, &cfg).unwrap();
+        let fin = {
+            let pred = student.apply_batch(&task.train_x, task.n_train).unwrap();
+            mse(&pred, &task.train_y)
+        };
+        assert!(fin < 0.5 * init, "scheduled run failed to learn: {init} -> {fin}");
+        assert_eq!(out.steps_run, 120);
     }
 
     #[test]

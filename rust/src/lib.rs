@@ -24,6 +24,7 @@
 // examples as well as the library.
 
 pub mod util;
+pub mod compute;
 pub mod tensor;
 pub mod linalg;
 pub mod quanta;

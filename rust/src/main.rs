@@ -4,6 +4,8 @@
 //!   list                         — show artifact sets and tasks
 //!   pretrain --arch tiny         — pretrain (and cache) a base model
 //!   train --set S --task T       — fine-tune one config, report metric
+//!   train-host [--dims 4,4,8 …]  — artifact-free fine-tune on the pure
+//!                                  rust gradient engine (synthetic task)
 //!   eval-base --set S --task T   — score the un-fine-tuned base model
 //!   analyze --task T             — Fig.2 subspace-similarity analysis
 //!   info --set S                 — print a manifest summary
@@ -44,10 +46,28 @@ fn parse_args(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: quanta-ft <list|info|pretrain|train|eval-base|analyze> [--set S] [--task T] \
-         [--arch A] [--seeds N] [--steps N]"
+        "usage: quanta-ft <list|info|pretrain|train|train-host|eval-base|analyze> [--set S] \
+         [--task T] [--arch A] [--seeds N] [--steps N]\n\
+         train-host flags: [--dims 4,4,8] [--steps N] [--batch N] [--lr F] [--seed N]\n\
+                           [--n-train N] [--n-val N] [--teacher-std F] [--noise-std F]\n\
+                           [--alpha F] [--clip F] [--warmup N] [--decay N] [--min-lr F]\n\
+                           [--weight-decay F] [--patience N] [--eval-every N]"
     );
     ExitCode::FAILURE
+}
+
+/// Parse a required-typed flag with a default (`--steps 200`-style).
+fn flag_or<T: std::str::FromStr>(
+    flags: &BTreeMap<String, String>,
+    name: &str,
+    default: T,
+) -> Result<T> {
+    match flags.get(name) {
+        None => Ok(default),
+        Some(raw) => raw
+            .parse::<T>()
+            .map_err(|_| quanta_ft::Error::msg(format!("bad --{name} '{raw}'"))),
+    }
 }
 
 fn main() -> ExitCode {
@@ -170,6 +190,80 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 result.trainable_params,
                 pct(result.trainable_percent)
             );
+            Ok(())
+        }
+        "train-host" => {
+            use quanta_ft::coordinator::host_trainer::{finetune_host, mse, HostTrainConfig};
+            use quanta_ft::data::synth::{teacher_student, SynthConfig};
+            let dims: Vec<usize> = flags
+                .get("dims")
+                .map(|s| s.as_str())
+                .unwrap_or("4,4,8")
+                .split(',')
+                .map(|p| p.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
+            let scfg = SynthConfig {
+                dims,
+                n_train: flag_or(flags, "n-train", 256)?,
+                n_val: flag_or(flags, "n-val", 64)?,
+                teacher_std: flag_or(flags, "teacher-std", 0.3)?,
+                noise_std: flag_or(flags, "noise-std", 0.01)?,
+                alpha: flag_or(flags, "alpha", 1.0)?,
+                seed: flag_or(flags, "seed", 0)?,
+            };
+            let tcfg = HostTrainConfig {
+                seed: scfg.seed,
+                steps: flag_or(flags, "steps", 200)?,
+                batch: flag_or(flags, "batch", 32)?,
+                lr: flag_or(flags, "lr", 2e-2)?,
+                clip: flag_or(flags, "clip", 1.0)?,
+                warmup_steps: flag_or(flags, "warmup", 0)?,
+                lr_decay_steps: flag_or(flags, "decay", 0)?,
+                min_lr: flag_or(flags, "min-lr", 0.0)?,
+                weight_decay: flag_or(flags, "weight-decay", 0.0)?,
+                eval_every: flag_or(flags, "eval-every", 20)?,
+                patience: flags
+                    .get("patience")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()
+                    .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
+                ..Default::default()
+            };
+            let task = teacher_student(&scfg)?;
+            let mut student = task.student()?;
+            println!(
+                "train-host: d={} dims {:?}, {} gates, {} trainable params, {} train / {} val",
+                task.d,
+                task.dims,
+                task.structure.len(),
+                student.param_count(),
+                task.n_train,
+                task.n_val
+            );
+            let init = {
+                let pred = student.apply_batch(&task.train_x, task.n_train)?;
+                mse(&pred, &task.train_y)
+            };
+            let out = finetune_host(&mut student, &task, &tcfg)?;
+            let fin = {
+                let pred = student.apply_batch(&task.train_x, task.n_train)?;
+                mse(&pred, &task.train_y)
+            };
+            let mut t = Table::new(&["metric", "value"]);
+            t.row(vec!["steps run".into(), out.steps_run.to_string()]);
+            t.row(vec!["train mse (init)".into(), format!("{init:.6}")]);
+            t.row(vec!["train mse (final)".into(), format!("{fin:.6}")]);
+            t.row(vec![
+                "loss reduction".into(),
+                format!("{:.1}x", init / fin.max(1e-300)),
+            ]);
+            t.row(vec!["best val mse".into(), format!("{:.6}", out.best_val_loss)]);
+            t.row(vec!["wallclock (s)".into(), format!("{:.3}", out.wallclock_s)]);
+            t.print();
+            if let Some(&(step, loss)) = out.loss_curve.last() {
+                println!("last logged train loss: step {step} -> {loss:.6}");
+            }
             Ok(())
         }
         "eval-base" => {

@@ -108,8 +108,9 @@ impl QuantaAdapter {
     }
 
     /// Write a flat parameter vector back into the gate matrices and
-    /// refresh the owned plan's snapshots in place (memcpy cost — the
-    /// plan's index tables are untouched).
+    /// refresh the owned plan's snapshots in place (memcpy cost, plus
+    /// small-matrix recomposition where gates were fused — the plan's
+    /// index tables are untouched).
     pub fn set_params(&mut self, flat: &[f32]) -> Result<()> {
         if flat.len() != self.param_count() {
             return Err(Error::Shape(format!(
@@ -128,17 +129,24 @@ impl QuantaAdapter {
     }
 
     /// `y = W x + α (circuit(x) − x)` over a row-major `[batch, d]`
-    /// panel.
+    /// panel: one pooled GEMM for the frozen base, then the circuit
+    /// chain with the `α(· − x)` residual fused into the final gate's
+    /// scatter ([`CircuitPlan::apply_batch_residual_into`]) — no
+    /// materialized circuit output, no separate axpy pass.
     pub fn apply_batch(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let cx = self.plan.apply_batch(xs, batch)?;
-        self.combine(xs, &cx, batch)
+        let mut y = self.base_product(xs, batch)?;
+        self.plan.apply_batch_residual_into(xs, batch, self.alpha, &mut y)?;
+        Ok(y)
     }
 
     /// Forward pass that also records the circuit tape for
-    /// [`QuantaAdapter::backward`].
+    /// [`QuantaAdapter::backward`] — same fused-residual single pass as
+    /// [`QuantaAdapter::apply_batch`].
     pub fn forward_with_tape(&self, xs: &[f32], batch: usize) -> Result<(Vec<f32>, CircuitTape)> {
-        let (cx, tape) = self.plan.apply_batch_with_tape(xs, batch)?;
-        Ok((self.combine(xs, &cx, batch)?, tape))
+        let mut y = self.base_product(xs, batch)?;
+        let tape =
+            self.plan.apply_batch_with_tape_residual_into(xs, batch, self.alpha, &mut y)?;
+        Ok((y, tape))
     }
 
     /// Gate gradients only, given `∂loss/∂y` — the training hot path.
@@ -195,8 +203,9 @@ impl QuantaAdapter {
                 grad_out.len()
             )));
         }
-        let scaled: Vec<f32> = grad_out.iter().map(|g| g * self.alpha).collect();
-        self.plan.backward(tape, &scaled)
+        // the α factor is fused into the backward's initial gradient
+        // copy — no separately allocated scaled panel
+        self.plan.backward_scaled(tape, grad_out, self.alpha)
     }
 
     /// Fold the delta into a dense matrix: `W + α (full_matrix − I)`
@@ -214,8 +223,8 @@ impl QuantaAdapter {
         Ok(out)
     }
 
-    /// `W x + α (cx − x)` given the already-computed circuit output.
-    fn combine(&self, xs: &[f32], cx: &[f32], batch: usize) -> Result<Vec<f32>> {
+    /// Frozen-base product `X · Wᵀ` (the row-major batched `W x`).
+    fn base_product(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
         let d = self.d();
         if xs.len() != batch * d {
             return Err(Error::Shape(format!(
@@ -224,11 +233,7 @@ impl QuantaAdapter {
             )));
         }
         let x_t = Tensor::from_vec(&[batch, d], xs.to_vec())?;
-        let mut y = x_t.matmul(&self.base_t)?.data;
-        for ((yv, &cv), &xv) in y.iter_mut().zip(cx).zip(xs) {
-            *yv += self.alpha * (cv - xv);
-        }
-        Ok(y)
+        Ok(x_t.matmul(&self.base_t)?.data)
     }
 }
 

@@ -17,23 +17,30 @@
 //!   input* panel of that gate, accumulated over all `(rest, vector)`
 //!   columns.
 //!
-//! The forward inputs are recorded by [`CircuitPlan::apply_batch_with_tape`]
-//! into a [`CircuitTape`]: one `[batch, d]` snapshot of the hidden state
-//! per gate (`N_T · batch · d` floats — the chain analog of activation
-//! checkpointing at gate granularity).  [`CircuitPlan::backward`] then
-//! sweeps gates in reverse with the same per-vector panel chunking as
-//! the forward: input gradients are bitwise identical for any worker
-//! count (per-vector arithmetic is chunk-independent); gate gradients
-//! sum over vectors and are reduced in fixed chunk order, so they are
-//! deterministic for a fixed worker count (`QFT_THREADS`).
+//! The chain runs over the plan's **fused** gates: the tape records one
+//! `[batch, d]` snapshot per *fused* gate (fewer, wider panels than the
+//! per-original-gate PR 2 tape), the reverse sweep accumulates `∂F` per
+//! fused gate, and [`GatePlan::unfuse_grads`] distributes
+//! `∂A_i = L_iᵀ ∂F R_iᵀ` (restricted to the identity-embedded
+//! positions) back onto the original gates — so [`CircuitGrads::gates`]
+//! stays indexed by *original* gate, matching the optimizer layout.
+//!
+//! Parallelism goes through the compute pool with **problem-shaped
+//! chunks** (`CircuitPlan::chunking`, shared with the forward): input
+//! gradients are per-vector and chunk-independent, and per-chunk gate
+//! gradients reduce in ascending chunk order — since chunk boundaries
+//! no longer depend on the worker count, all gradients are bitwise
+//! identical for any `QFT_THREADS` (PR 2 only guaranteed this for a
+//! fixed thread count).
 
-use crate::quanta::plan::{CircuitPlan, GatePlan, BLOCK_COLS, PAR_MIN_FLOPS};
+use crate::compute::pool;
+use crate::quanta::plan::{CircuitPlan, GatePlan, Scratch, BLOCK_COLS};
 use crate::util::error::{Error, Result};
 
 /// Per-gate forward activations recorded by
 /// [`CircuitPlan::apply_batch_with_tape`]: `inputs[α]` is the hidden
-/// panel *entering* gate `α`, row-major `[batch, d]` (so `inputs[0]` is
-/// the original input panel).
+/// panel *entering* fused gate `α`, row-major `[batch, d]` (so
+/// `inputs[0]` is the original input panel).
 #[derive(Clone, Debug)]
 pub struct CircuitTape {
     pub batch: usize,
@@ -43,8 +50,9 @@ pub struct CircuitTape {
 /// Gradients returned by [`CircuitPlan::backward`].
 #[derive(Clone, Debug)]
 pub struct CircuitGrads {
-    /// `∂loss/∂A_α` per gate, `(d_m·d_n, d_m·d_n)` row-major — the same
-    /// layout as [`GatePlan::mat`].
+    /// `∂loss/∂A_α` per **original** circuit gate, `(d_m·d_n, d_m·d_n)`
+    /// row-major — the same layout as `Gate::mat` (fused-gate gradients
+    /// are unfused before they land here).
     pub gates: Vec<Vec<f32>>,
     /// `∂loss/∂xs`, row-major `[batch, d]`.
     pub input: Vec<f32>,
@@ -69,10 +77,10 @@ impl CircuitGrads {
 }
 
 impl CircuitPlan {
-    /// Forward pass that records the per-gate input panels needed by
-    /// [`CircuitPlan::backward`].  Identical arithmetic to
-    /// [`CircuitPlan::apply_batch`] (same blocked GEMMs, same per-vector
-    /// chunking), plus one `[batch, d]` copy per gate into the tape.
+    /// Forward pass that records the per-fused-gate input panels needed
+    /// by [`CircuitPlan::backward`].  Identical arithmetic to
+    /// [`CircuitPlan::apply_batch`] (same blocked GEMMs, same chunking),
+    /// plus one `[batch, d]` copy per fused gate into the tape.
     pub fn apply_batch_with_tape(
         &self,
         xs: &[f32],
@@ -91,39 +99,146 @@ impl CircuitPlan {
         if self.d == 0 || batch == 0 || self.gates.is_empty() {
             return Ok((h, CircuitTape { batch, inputs: tape }));
         }
-        let workers = self.grad_workers(batch);
-        if workers <= 1 {
+        let (chunk_vecs, n_chunks) = self.chunking(batch);
+        if n_chunks <= 1 {
             let mut scratch = self.scratch();
             for (g, dst) in self.gates.iter().zip(tape.iter_mut()) {
                 dst.copy_from_slice(&h);
                 self.apply_gate_chunk(g, &mut h, batch, &mut scratch);
             }
         } else {
-            let chunk_vecs = batch.div_ceil(workers);
             let chunk_len = chunk_vecs * self.d;
-            std::thread::scope(|s| {
-                let mut tape_chunks: Vec<_> =
-                    tape.iter_mut().map(|t| t.chunks_mut(chunk_len)).collect();
-                for chunk in h.chunks_mut(chunk_len) {
-                    let mut slots: Vec<&mut [f32]> =
-                        tape_chunks.iter_mut().map(|it| it.next().unwrap()).collect();
-                    s.spawn(move || {
-                        let cb = chunk.len() / self.d;
-                        let mut scratch = self.scratch();
-                        for (g, dst) in self.gates.iter().zip(slots.iter_mut()) {
-                            dst.copy_from_slice(chunk);
-                            self.apply_gate_chunk(g, chunk, cb, &mut scratch);
-                        }
-                    });
+            let h_chunks = pool::DisjointChunks::new(&mut h, chunk_len);
+            let tape_chunks: Vec<pool::DisjointChunks<f32>> =
+                tape.iter_mut().map(|t| pool::DisjointChunks::new(t, chunk_len)).collect();
+            pool::run(n_chunks, |i| {
+                // SAFETY: each chunk index is claimed exactly once, and
+                // the per-gate tape chunks are disjoint the same way.
+                let chunk = unsafe { h_chunks.slice(i) };
+                let cb = chunk.len() / self.d;
+                let mut scratch = self.scratch();
+                for (g, t) in self.gates.iter().zip(&tape_chunks) {
+                    let dst = unsafe { t.slice(i) };
+                    dst.copy_from_slice(chunk);
+                    self.apply_gate_chunk(g, chunk, cb, &mut scratch);
                 }
             });
         }
         Ok((h, CircuitTape { batch, inputs: tape }))
     }
 
+    /// Tape forward with the adapter residual fused into the final
+    /// gate's scatter: records the same tape as
+    /// [`CircuitPlan::apply_batch_with_tape`], but instead of returning
+    /// the circuit output it accumulates `alpha · (chain(xs) − xs)`
+    /// into `out` (which typically holds the frozen-base product) — the
+    /// training-forward twin of
+    /// [`CircuitPlan::apply_batch_residual_into`].
+    pub fn apply_batch_with_tape_residual_into(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        alpha: f32,
+        out: &mut [f32],
+    ) -> Result<CircuitTape> {
+        if xs.len() != batch * self.d || out.len() != batch * self.d {
+            return Err(Error::Shape(format!(
+                "apply_batch_with_tape_residual_into: xs {} / out {} != batch {batch} * d {}",
+                xs.len(),
+                out.len(),
+                self.d
+            )));
+        }
+        let mut tape: Vec<Vec<f32>> =
+            self.gates.iter().map(|_| vec![0.0f32; batch * self.d]).collect();
+        if self.d == 0 || batch == 0 || self.gates.is_empty() {
+            return Ok(CircuitTape { batch, inputs: tape }); // identity: zero residual
+        }
+        let (chunk_vecs, n_chunks) = self.chunking(batch);
+        if n_chunks <= 1 {
+            let mut scratch = self.scratch();
+            self.tape_residual_chunk(xs, out, batch, alpha, &mut tape, 0, &mut scratch);
+        } else {
+            let chunk_len = chunk_vecs * self.d;
+            let out_chunks = pool::DisjointChunks::new(out, chunk_len);
+            let tape_chunks: Vec<pool::DisjointChunks<f32>> =
+                tape.iter_mut().map(|t| pool::DisjointChunks::new(t, chunk_len)).collect();
+            pool::run(n_chunks, |i| {
+                // SAFETY: each chunk index is claimed exactly once.
+                let o = unsafe { out_chunks.slice(i) };
+                let x0 = i * chunk_len;
+                let x = &xs[x0..x0 + o.len()];
+                let cb = o.len() / self.d;
+                let mut scratch = self.scratch();
+                let mut slots: Vec<&mut [f32]> =
+                    tape_chunks.iter().map(|t| unsafe { t.slice(i) }).collect();
+                self.tape_residual_slots(x, o, cb, alpha, &mut slots, &mut scratch);
+            });
+        }
+        Ok(CircuitTape { batch, inputs: tape })
+    }
+
+    /// Serial-path helper: tape into whole-panel slots.
+    #[allow(clippy::too_many_arguments)]
+    fn tape_residual_chunk(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        cb: usize,
+        alpha: f32,
+        tape: &mut [Vec<f32>],
+        off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let mut slots: Vec<&mut [f32]> =
+            tape.iter_mut().map(|t| &mut t[off..off + x.len()]).collect();
+        self.tape_residual_slots(x, out, cb, alpha, &mut slots, scratch);
+    }
+
+    /// One chunk of the residual tape forward: gates `0..L−1` run in
+    /// place on a scratch hidden buffer (each gate's input snapshotted
+    /// first), the final gate reads its taped input and scatters
+    /// `α(val − x)` into `out` — the final circuit output is never
+    /// materialized.
+    fn tape_residual_slots(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        cb: usize,
+        alpha: f32,
+        slots: &mut [&mut [f32]],
+        scratch: &mut Scratch,
+    ) {
+        let last = self.gates.len() - 1;
+        if last == 0 {
+            slots[0].copy_from_slice(x);
+            self.apply_gate_chunk_residual(&self.gates[0], x, x, out, cb, alpha, scratch);
+            return;
+        }
+        let mut h = x.to_vec();
+        for (gi, dst) in slots[..last].iter_mut().enumerate() {
+            dst.copy_from_slice(&h);
+            self.apply_gate_chunk(&self.gates[gi], &mut h, cb, scratch);
+        }
+        slots[last].copy_from_slice(&h);
+        self.apply_gate_chunk_residual(&self.gates[last], &h, x, out, cb, alpha, scratch);
+    }
+
     /// Backward pass: given `∂loss/∂output` over the taped panel, return
-    /// `∂loss/∂A_α` for every gate and `∂loss/∂input`.
+    /// `∂loss/∂A_α` for every original gate and `∂loss/∂input`.
     pub fn backward(&self, tape: &CircuitTape, grad_out: &[f32]) -> Result<CircuitGrads> {
+        self.backward_scaled(tape, grad_out, 1.0)
+    }
+
+    /// Backward of `scale · grad_out` with the scaling fused into the
+    /// initial gradient copy (the adapter uses this for its `α` factor
+    /// — one pass instead of scale-then-copy).
+    pub fn backward_scaled(
+        &self,
+        tape: &CircuitTape,
+        grad_out: &[f32],
+        scale: f32,
+    ) -> Result<CircuitGrads> {
         let batch = tape.batch;
         if grad_out.len() != batch * self.d {
             return Err(Error::Shape(format!(
@@ -134,7 +249,7 @@ impl CircuitPlan {
         }
         if tape.inputs.len() != self.gates.len() {
             return Err(Error::Shape(format!(
-                "backward: tape has {} gate panels, plan has {} gates",
+                "backward: tape has {} gate panels, plan has {} (fused) gates",
                 tape.inputs.len(),
                 self.gates.len()
             )));
@@ -148,91 +263,103 @@ impl CircuitPlan {
                 )));
             }
         }
-        let mut g = grad_out.to_vec();
-        let mut gate_grads: Vec<Vec<f32>> =
-            self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect();
+        let mut g = if scale == 1.0 {
+            grad_out.to_vec()
+        } else {
+            grad_out.iter().map(|v| v * scale).collect()
+        };
+        let mut gate_grads: Vec<Vec<f32>> = vec![Vec::new(); self.source_gate_count()];
         if self.d == 0 || batch == 0 || self.gates.is_empty() {
+            for gp in &self.gates {
+                for mem in gp.members.iter() {
+                    gate_grads[mem.gate_idx] = vec![0.0f32; mem.dmn * mem.dmn];
+                }
+            }
             return Ok(CircuitGrads { gates: gate_grads, input: g });
         }
-        let workers = self.grad_workers(batch);
-        if workers <= 1 {
+        // zero-init only the slots unfuse_grads accumulates into (`+=`,
+        // multi-member gates); single-member slots are moved in
+        // wholesale, so pre-filling them would be a wasted alloc+memset
+        // per gate per step on the (dominant) unfused hot path
+        for gp in &self.gates {
+            if gp.members.len() > 1 {
+                for mem in gp.members.iter() {
+                    gate_grads[mem.gate_idx] = vec![0.0f32; mem.dmn * mem.dmn];
+                }
+            }
+        }
+        // per-fused-gate ∂F accumulators
+        let mut fused_grads: Vec<Vec<f32>> =
+            self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect();
+        let (chunk_vecs, n_chunks) = self.chunking(batch);
+        if n_chunks <= 1 {
             let mut scratch = GradScratch::new(self);
             let tape_refs: Vec<&[f32]> = tape.inputs.iter().map(|t| t.as_slice()).collect();
-            self.backward_chunk(&mut g, &tape_refs, batch, &mut gate_grads, &mut scratch);
-            return Ok(CircuitGrads { gates: gate_grads, input: g });
-        }
-        // Vectors stay independent through the reverse chain, so the
-        // input gradient uses the same per-vector chunking as the
-        // forward.  Gate gradients sum over vectors: each worker
-        // accumulates into a private buffer, reduced afterwards in
-        // chunk order (deterministic for a fixed worker count).
-        let chunk_vecs = batch.div_ceil(workers);
-        let chunk_len = chunk_vecs * self.d;
-        let n_chunks = g.len().div_ceil(chunk_len);
-        let mut partials: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_chunks);
-        for _ in 0..n_chunks {
-            partials.push(self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect());
-        }
-        std::thread::scope(|s| {
-            for ((ci, chunk), partial) in
-                g.chunks_mut(chunk_len).enumerate().zip(partials.iter_mut())
-            {
+            self.backward_chunk(&mut g, &tape_refs, batch, &mut fused_grads, &mut scratch);
+        } else {
+            // Vectors stay independent through the reverse chain, so the
+            // input gradient uses the same fixed chunks as the forward.
+            // Fused-gate gradients sum over vectors: each chunk owns a
+            // private accumulator, reduced afterwards in ascending chunk
+            // order — chunk boundaries are problem-shaped, so the
+            // reduction (and every output bit) is QFT_THREADS-invariant.
+            let chunk_len = chunk_vecs * self.d;
+            let mut partials: Vec<Vec<Vec<f32>>> = (0..n_chunks)
+                .map(|_| self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect())
+                .collect();
+            let g_chunks = pool::DisjointChunks::new(&mut g, chunk_len);
+            let partial_slots = pool::DisjointChunks::new(&mut partials, 1);
+            pool::run(n_chunks, |i| {
+                // SAFETY: each chunk index is claimed exactly once.
+                let chunk = unsafe { g_chunks.slice(i) };
+                let slot = unsafe { partial_slots.slice(i) };
+                let partial = &mut slot[0];
+                let cb = chunk.len() / self.d;
                 let tape_chunks: Vec<&[f32]> = tape
                     .inputs
                     .iter()
-                    .map(|t| &t[ci * chunk_len..(ci * chunk_len + chunk.len())])
+                    .map(|t| &t[i * chunk_len..i * chunk_len + chunk.len()])
                     .collect();
-                s.spawn(move || {
-                    let cb = chunk.len() / self.d;
-                    let mut scratch = GradScratch::new(self);
-                    self.backward_chunk(chunk, &tape_chunks, cb, partial, &mut scratch);
-                });
-            }
-        });
-        for partial in &partials {
-            for (acc, p) in gate_grads.iter_mut().zip(partial) {
-                for (a, &v) in acc.iter_mut().zip(p) {
-                    *a += v;
+                let mut scratch = GradScratch::new(self);
+                self.backward_chunk(chunk, &tape_chunks, cb, partial, &mut scratch);
+            });
+            for partial in &partials {
+                for (acc, p) in fused_grads.iter_mut().zip(partial) {
+                    for (a, &v) in acc.iter_mut().zip(p) {
+                        *a += v;
+                    }
                 }
             }
+        }
+        // unfuse ∂F back onto the original gates (serial, deterministic)
+        for (gp, dmat) in self.gates.iter().zip(fused_grads) {
+            gp.unfuse_grads(dmat, &mut gate_grads);
         }
         Ok(CircuitGrads { gates: gate_grads, input: g })
     }
 
-    /// Worker count shared by the tape forward and the backward sweep
-    /// (the backward does ~2× the forward GEMM work per gate, but the
-    /// same cutoff keeps fwd/bwd chunking — and input-grad bit
-    /// patterns — aligned).
-    fn grad_workers(&self, batch: usize) -> usize {
-        if batch * self.apply_flops() < PAR_MIN_FLOPS {
-            1
-        } else {
-            crate::tensor::num_threads(batch)
-        }
-    }
-
-    /// Reverse sweep over one chunk of `cb` vectors: for gate `α` (last
-    /// to first), accumulate `∂A_α` from the gathered upstream-gradient
-    /// and forward-input panels, then transform the upstream gradient
-    /// with `A_αᵀ` in place.
+    /// Reverse sweep over one chunk of `cb` vectors: for fused gate `α`
+    /// (last to first), accumulate `∂F_α` from the gathered
+    /// upstream-gradient and forward-input panels, then transform the
+    /// upstream gradient with `F_αᵀ` in place.
     fn backward_chunk(
         &self,
         g: &mut [f32],
         tape_chunks: &[&[f32]],
         cb: usize,
-        gate_grads: &mut [Vec<f32>],
+        fused_grads: &mut [Vec<f32>],
         scratch: &mut GradScratch,
     ) {
         for ai in (0..self.gates.len()).rev() {
             let gp = &self.gates[ai];
-            self.backward_gate_chunk(gp, g, tape_chunks[ai], cb, &mut gate_grads[ai], scratch);
+            self.backward_gate_chunk(gp, g, tape_chunks[ai], cb, &mut fused_grads[ai], scratch);
         }
     }
 
     /// One gate's backward over `cb` vectors, blocked like the forward:
     /// gather `gy` (upstream grad) and `gx` (taped forward input), then
-    /// `∂A[i,p] += Σ_c gy[i,c]·gx[p,c]` (outer-product GEMM) and
-    /// `g ← scatter(Aᵀ · gy)` (transpose-gate GEMM).
+    /// `∂F[i,p] += Σ_c gy[i,c]·gx[p,c]` (outer-product GEMM) and
+    /// `g ← scatter(Fᵀ · gy)` (transpose-gate GEMM).
     fn backward_gate_chunk(
         &self,
         gp: &GatePlan,
@@ -269,7 +396,7 @@ impl CircuitPlan {
                     *slot = hin[base + off];
                 }
             }
-            // ∂A += gy · gxᵀ over this block (i-p-c, c innermost)
+            // ∂F += gy · gxᵀ over this block (i-p-c, c innermost)
             for i in 0..dmn {
                 let gy_row = &scratch.gy[i * bw..i * bw + w];
                 let drow = &mut dmat[i * dmn..(i + 1) * dmn];
@@ -282,7 +409,7 @@ impl CircuitPlan {
                     *dv += acc;
                 }
             }
-            // product = Aᵀ · gy: accumulate row i of A into every p
+            // product = Fᵀ · gy: accumulate row i of F into every p
             // (i-p-c with c innermost so the panel sweep vectorizes)
             scratch.prod[..dmn * bw].fill(0.0);
             for i in 0..dmn {
@@ -314,7 +441,7 @@ struct GradScratch {
     gy: Vec<f32>,
     /// Gathered forward-input panel, `(dmn, BLOCK_COLS)`.
     gx: Vec<f32>,
-    /// `Aᵀ · gy` product panel, `(dmn, BLOCK_COLS)`.
+    /// `Fᵀ · gy` product panel, `(dmn, BLOCK_COLS)`.
     prod: Vec<f32>,
     bases: Vec<usize>,
 }
@@ -373,34 +500,71 @@ mod tests {
             let y = plan.apply_batch(&xs, batch).unwrap();
             let (yt, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
             assert_eq!(y, yt, "dims {dims:?}: taped forward diverged");
-            assert_eq!(tape.inputs.len(), c.gates().len());
+            // one tape panel per *fused* gate ([2,2,2,2] fuses)
+            assert_eq!(tape.inputs.len(), plan.gates.len());
+            assert_eq!(plan.source_gate_count(), c.gates().len());
             assert_eq!(tape.inputs[0], xs, "tape[0] must be the input panel");
+        }
+    }
+
+    #[test]
+    fn residual_tape_matches_plain_tape() {
+        let mut rng = Rng::new(74);
+        for dims in [vec![2usize, 3, 2], vec![3, 2], vec![2, 2, 2, 2]] {
+            let c = Circuit::random(&dims, &all_pairs_structure(dims.len()), 0.3, &mut rng)
+                .unwrap();
+            let plan = c.plan().unwrap();
+            let d = plan.d;
+            let batch = 4;
+            let alpha = 0.8f32;
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            let mut base = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut base, 1.0);
+            let (cx, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+            let mut want = base.clone();
+            for ((o, &cv), &xv) in want.iter_mut().zip(&cx).zip(&xs) {
+                *o += alpha * (cv - xv);
+            }
+            let mut got = base.clone();
+            let tape_r = plan
+                .apply_batch_with_tape_residual_into(&xs, batch, alpha, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "dims {dims:?}: residual tape output diverged");
+            assert_eq!(tape_r.inputs, tape.inputs, "dims {dims:?}: tapes diverged");
         }
     }
 
     #[test]
     fn backward_gate_grads_match_finite_differences() {
         let mut rng = Rng::new(71);
-        let dims = vec![2usize, 3, 2];
-        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.3, &mut rng).unwrap();
-        let d = c.total_dim();
-        let batch = 3;
-        let mut xs = vec![0.0f32; batch * d];
-        rng.fill_normal(&mut xs, 1.0);
-        let mut w = vec![0.0f32; batch * d];
-        rng.fill_normal(&mut w, 1.0);
-        let plan = c.plan().unwrap();
-        let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
-        let grads = plan.backward(&tape, &w).unwrap();
-        for gi in 0..c.gates().len() {
-            for k in 0..grads.gates[gi].len() {
-                let fd = fd_gate(&c, &xs, batch, &w, gi, k);
-                let an = grads.gates[gi][k];
-                let denom = fd.abs().max(an.abs()).max(1e-3);
-                assert!(
-                    (fd - an).abs() / denom < 1e-3,
-                    "gate {gi} entry {k}: analytic {an} vs fd {fd}"
-                );
+        // [2,3,2] all-pairs stays unfused; the repeated pair fuses —
+        // the unfuse path must reproduce per-original-gate FD grads.
+        for (dims, structure) in [
+            (vec![2usize, 3, 2], all_pairs_structure(3)),
+            (vec![3usize, 2], vec![(0, 1), (0, 1)]),
+        ] {
+            let c = Circuit::random(&dims, &structure, 0.3, &mut rng).unwrap();
+            let d = c.total_dim();
+            let batch = 3;
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            let mut w = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut w, 1.0);
+            let plan = c.plan().unwrap();
+            let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+            let grads = plan.backward(&tape, &w).unwrap();
+            assert_eq!(grads.gates.len(), c.gates().len());
+            for gi in 0..c.gates().len() {
+                for k in 0..grads.gates[gi].len() {
+                    let fd = fd_gate(&c, &xs, batch, &w, gi, k);
+                    let an = grads.gates[gi][k];
+                    let denom = fd.abs().max(an.abs()).max(1e-3);
+                    assert!(
+                        (fd - an).abs() / denom < 1e-3,
+                        "dims {dims:?} gate {gi} entry {k}: analytic {an} vs fd {fd}"
+                    );
+                }
             }
         }
     }
@@ -432,6 +596,27 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn backward_scaled_matches_prescaled_gradient() {
+        let mut rng = Rng::new(75);
+        let c = Circuit::random(&[2usize, 3, 2], &all_pairs_structure(3), 0.3, &mut rng)
+            .unwrap();
+        let plan = c.plan().unwrap();
+        let d = plan.d;
+        let batch = 3;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut w, 1.0);
+        let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+        let alpha = 0.7f32;
+        let scaled: Vec<f32> = w.iter().map(|v| v * alpha).collect();
+        let g1 = plan.backward(&tape, &scaled).unwrap();
+        let g2 = plan.backward_scaled(&tape, &w, alpha).unwrap();
+        assert_eq!(g1.input, g2.input);
+        assert_eq!(g1.gates, g2.gates);
     }
 
     #[test]

@@ -10,73 +10,140 @@
 //!   multi-index over the non-gate axes, enumerated in
 //!   `O(d / (d_m d_n))` by mixed-radix odometer stepping instead of an
 //!   `O(d)` scan-and-filter,
-//! * per-gate **gather tables** — the `d_m·d_n` offsets of the gate-axis
-//!   positions relative to a rest base (row `i_m·d_n + i_n`, matching
-//!   the gate matrix layout of paper Eq. 4),
+//! * per-gate **gather tables** — the offsets of the gate-axis
+//!   positions relative to a rest base (row `i_m·d_n + i_n` for a plain
+//!   two-axis gate, matching the gate matrix layout of paper Eq. 4),
 //! * a snapshot of each gate matrix.
+//!
+//! **Gate fusion** (this PR): adjacent gates whose axis pairs overlap
+//! are merged at plan-build time into one *fused* gate over the union
+//! axes — the two matrices are embedded into the union space and
+//! composed, so one gather → GEMM → scatter pass replaces two full
+//! panel sweeps.  A fusion is accepted only when the union dimension
+//! stays within a `max_fused_dmn` cap **and** does not increase the
+//! per-element GEMM cost (`d_union ≤ d_a + d_b`), so e.g. a repeated
+//! axis pair always fuses (half the GEMM work, half the passes) while
+//! the all-pairs gates of a [8,8,16] circuit never do.  Each
+//! [`GatePlan`] keeps its [`GateMember`] bookkeeping — embedding maps
+//! and prefix/suffix products — so [`CircuitPlan::refresh_gate_mats`]
+//! can recompose fused matrices from updated parameters and the
+//! backward (`quanta::grad`) can *unfuse* a fused-gate gradient back to
+//! per-original-gate `∂A` layout.
 //!
 //! On top of the plan, [`CircuitPlan::apply_batch`] runs the whole gate
 //! chain over a panel of vectors as blocked
 //! `(d_m·d_n) × (rest·batch)` GEMMs: gather a block of columns into
 //! scratch, multiply by the gate matrix with a vectorizable
 //! i-p-c kernel, scatter back — double-buffered scratch, zero per-gate
-//! allocation.  Panels are split across threads per vector (vectors are
-//! independent through the chain), so results are bitwise identical for
-//! any thread count or chunking.  [`CircuitPlan::full_matrix`] drives
-//! `apply_batch` over identity panels (paper Eq. 7) instead of `d`
-//! sequential matvecs.
+//! allocation.  Panels split into per-*chunk* runs of whole vectors
+//! sized by `compute::pool::chunks` (problem-shaped, never
+//! thread-count-shaped) and dispatched on the persistent worker pool,
+//! so results are bitwise identical for any `QFT_THREADS`.
+//! [`CircuitPlan::full_matrix`] drives `apply_batch` over identity
+//! panels (paper Eq. 7) instead of `d` sequential matvecs, and
+//! [`CircuitPlan::apply_batch_residual_into`] fuses the adapter's
+//! `α·(circuit(x) − x)` residual into the final gate's scatter so the
+//! adapter forward makes one pass instead of apply-then-axpy.
 
+use crate::compute::pool;
 use crate::quanta::circuit::Circuit;
 use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
 
 /// Column-block width of the gather/GEMM/scatter pipeline.  With the
-/// largest gate of a `d=1024` all-pairs circuit (`d_m·d_n = 128`) the
-/// two scratch panels occupy `2 · 128 · 64 · 4 B = 64 KiB` — inside L2.
-/// Shared with the backward pass (`quanta::grad`), whose GEMMs run over
-/// the same `(d_m·d_n) × (rest·batch)` column blocks.
+/// widest fused gate allowed by the default cap (`d_m·d_n = 64`) the
+/// two scratch panels occupy `2 · 64 · 64 · 4 B = 32 KiB` — inside L2
+/// (an unfused `d=1024` all-pairs gate at 128 doubles that, still
+/// fine).  Shared with the backward pass (`quanta::grad`), whose GEMMs
+/// run over the same `(d_m·d_n) × (rest·batch)` column blocks.
 pub(crate) const BLOCK_COLS: usize = 64;
 
 /// Column count of one `full_matrix` identity panel (bounds peak memory
 /// at `2 · PANEL_COLS · d` floats while keeping enough columns per GEMM).
 const PANEL_COLS: usize = 256;
 
-/// Serial cutoff: chains cheaper than this many multiplies
-/// (`batch · d · Σ d_m d_n`, the paper §6 apply cost) run single-threaded.
-pub(crate) const PAR_MIN_FLOPS: usize = 1 << 20;
+/// Default cap on the fused-gate dimension `Π d_axes`: fusions above
+/// this are rejected even when the GEMM-cost rule would accept them.
+/// Override per plan with [`CircuitPlan::with_max_fused`] or globally
+/// with `QFT_MAX_FUSED_DMN` (0 disables fusion).
+pub const MAX_FUSED_DMN: usize = 64;
 
-/// Precomputed execution state for one gate.
+fn default_max_fused() -> usize {
+    std::env::var("QFT_MAX_FUSED_DMN")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(MAX_FUSED_DMN)
+}
+
+/// One original circuit gate inside a (possibly fused) [`GatePlan`].
+///
+/// For a single-member gate the maps and factor products are empty —
+/// the plan matrix *is* the gate matrix.  For a fused gate, `prow` /
+/// `prest` describe how the member's matrix embeds into the fused
+/// space, and `rmat` / `lmat` are the products of the *other* members'
+/// embeddings applied before / after this one — exactly what the
+/// backward needs to unfuse `∂F` into this member's `∂A`.
 #[derive(Clone, Debug)]
-pub struct GatePlan {
-    /// Gate axes `(m, n)` this plan was built from — kept so
-    /// [`CircuitPlan::refresh_gate_mats`] can reject a circuit whose
-    /// structure drifted even when the matrix sizes still match.
+pub struct GateMember {
+    /// Index of the source gate in the original circuit.
+    pub gate_idx: usize,
+    /// Original gate axes (kept so
+    /// [`CircuitPlan::refresh_gate_mats`] can reject structure drift).
     pub m: usize,
     pub n: usize,
-    /// Gate matrix snapshot, `(dmn, dmn)` row-major.
+    /// `d_m · d_n` of the original gate.
+    pub dmn: usize,
+    /// Fused row → member row `i_m·d_n + i_n`.
+    prow: Vec<u32>,
+    /// Fused row → id of the non-member union components; two fused
+    /// indices are coupled by the member's matrix iff their ids match
+    /// (identity-embedded elsewhere).
+    prest: Vec<u32>,
+    /// Prefix product `E_{i−1}···E_1` of earlier members' embeddings.
+    rmat: Vec<f32>,
+    /// Suffix product `E_k···E_{i+1}` of later members' embeddings.
+    lmat: Vec<f32>,
+}
+
+/// Precomputed execution state for one (possibly fused) gate.
+#[derive(Clone, Debug)]
+pub struct GatePlan {
+    /// Axes this gate acts on: the original `[m, n]` order for a
+    /// single-member gate (bit-compatible with the PR 2 layout),
+    /// ascending union order for a fused gate.
+    pub axes: Vec<usize>,
+    /// Gate matrix, `(dmn, dmn)` row-major — the member matrix itself,
+    /// or the composed embedding product for a fused gate.
     pub mat: Vec<f32>,
-    /// `d_m · d_n` — rows/cols of the gate matrix.
+    /// `Π_axes d_axis` — rows/cols of the gate matrix.
     pub dmn: usize,
     /// Flat base offset of every rest multi-index (gate axes zeroed).
     pub rest: Vec<usize>,
-    /// Offset of gate row `i_m·d_n + i_n` relative to a rest base:
-    /// `i_m·s_m + i_n·s_n`.
+    /// Offset of gate row (mixed-radix index over `axes`) relative to a
+    /// rest base.
     pub gather: Vec<usize>,
+    /// The original gates composed into this plan gate (length 1 when
+    /// nothing fused).
+    pub members: Vec<GateMember>,
 }
 
 /// Precomputed execution plan for a circuit: build once with
 /// [`CircuitPlan::new`] (or [`Circuit::plan`]), reuse across any number
 /// of `apply` / `apply_batch` / `full_matrix` calls.  The plan snapshots
-/// the gate matrices — rebuild it after mutating the circuit.
+/// the gate matrices — rebuild it (or [`CircuitPlan::refresh_gate_mats`])
+/// after mutating the circuit.
 #[derive(Clone, Debug)]
 pub struct CircuitPlan {
     pub d: usize,
     pub dims: Vec<usize>,
     /// Row-major strides of the reshaped hidden tensor.
     pub strides: Vec<usize>,
+    /// Execution gates after fusion; `Σ members.len()` equals the
+    /// original gate count.
     pub gates: Vec<GatePlan>,
     pub(crate) max_dmn: usize,
-    /// `Σ_α d_m d_n` — per-element chain cost (paper §6).
+    /// `Σ_α d_m d_n` over the *fused* chain — per-element chain cost
+    /// (paper §6, reduced by fusion).
     sum_dmn: usize,
 }
 
@@ -101,10 +168,10 @@ fn strides_of(dims: &[usize]) -> Vec<usize> {
 }
 
 /// Enumerate the flat offsets of all multi-indices over the axes *not*
-/// in `{m, n}` by mixed-radix odometer stepping — `O(d/(d_m d_n))`
-/// total, never touching the other `d - d/(d_m d_n)` flat indices.
-fn rest_offsets(dims: &[usize], strides: &[usize], m: usize, n: usize) -> Vec<usize> {
-    let axes: Vec<usize> = (0..dims.len()).filter(|&a| a != m && a != n).collect();
+/// in `excluded` by mixed-radix odometer stepping — `O(d/Π d_excl)`
+/// total, never touching the other flat indices.
+fn rest_offsets(dims: &[usize], strides: &[usize], excluded: &[usize]) -> Vec<usize> {
+    let axes: Vec<usize> = (0..dims.len()).filter(|a| !excluded.contains(a)).collect();
     let count: usize = axes.iter().map(|&a| dims[a]).product();
     let mut out = Vec::with_capacity(count);
     let mut idx = vec![0usize; axes.len()];
@@ -131,42 +198,288 @@ fn rest_offsets(dims: &[usize], strides: &[usize], m: usize, n: usize) -> Vec<us
     }
 }
 
+/// Gather table over `axes` (first axis major): entry `r` is the flat
+/// offset `Σ_j i_j · stride(axes_j)` of gate row `r`.
+fn gather_table(dims: &[usize], strides: &[usize], axes: &[usize]) -> Vec<usize> {
+    let sizes: Vec<usize> = axes.iter().map(|&a| dims[a]).collect();
+    let count: usize = sizes.iter().product();
+    let mut out = Vec::with_capacity(count);
+    let mut idx = vec![0usize; axes.len()];
+    for _ in 0..count {
+        out.push(idx.iter().zip(axes).map(|(&i, &a)| i * strides[a]).sum());
+        for j in (0..axes.len()).rev() {
+            idx[j] += 1;
+            if idx[j] < sizes[j] {
+                break;
+            }
+            idx[j] = 0;
+        }
+    }
+    out
+}
+
+/// Square row-major `A @ B` with ascending-`p` accumulation (bitwise
+/// deterministic; no zero-skip so NaN propagates).
+pub(crate) fn mm_small(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..n {
+        for p in 0..n {
+            let av = a[i * n + p];
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Square row-major `A @ Bᵀ`.
+pub(crate) fn mm_small_abt(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let arow = &a[i * n..(i + 1) * n];
+            let brow = &b[j * n..(j + 1) * n];
+            out[i * n + j] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+    out
+}
+
+/// Square row-major `Aᵀ @ B`.
+pub(crate) fn mm_small_atb(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * n];
+    for p in 0..n {
+        let arow = &a[p * n..(p + 1) * n];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn eye_small(n: usize) -> Vec<f32> {
+    let mut e = vec![0.0f32; n * n];
+    for i in 0..n {
+        e[i * n + i] = 1.0;
+    }
+    e
+}
+
+/// Embed a member matrix into the fused space:
+/// `E[r,c] = A[prow_r, prow_c]` when the non-member components match
+/// (`prest_r == prest_c`), 0 otherwise.
+fn embed_member(mat: &[f32], dmn: usize, prow: &[u32], prest: &[u32]) -> Vec<f32> {
+    let df = prow.len();
+    let mut e = vec![0.0f32; df * df];
+    for r in 0..df {
+        for c in 0..df {
+            if prest[r] == prest[c] {
+                e[r * df + c] = mat[prow[r] as usize * dmn + prow[c] as usize];
+            }
+        }
+    }
+    e
+}
+
+/// Recompose a fused gate from its members' *current* matrices in
+/// `gates`: rebuild embeddings, the composed matrix
+/// `F = E_k ··· E_1`, and each member's prefix/suffix products.
+/// Single-member gates copy the matrix verbatim (bitwise PR 2 layout).
+fn recompose_gate(gp: &mut GatePlan, gates: &[crate::quanta::circuit::Gate]) {
+    if gp.members.len() == 1 {
+        gp.mat.clear();
+        gp.mat.extend_from_slice(&gates[gp.members[0].gate_idx].mat.data);
+        return;
+    }
+    let df = gp.dmn;
+    let embeds: Vec<Vec<f32>> = gp
+        .members
+        .iter()
+        .map(|mem| embed_member(&gates[mem.gate_idx].mat.data, mem.dmn, &mem.prow, &mem.prest))
+        .collect();
+    let k = embeds.len();
+    // prefix[i] = E_{i-1}···E_1 (identity for the first member)
+    let mut prefix: Vec<Vec<f32>> = Vec::with_capacity(k);
+    prefix.push(eye_small(df));
+    for i in 1..k {
+        let p = mm_small(&embeds[i - 1], &prefix[i - 1], df);
+        prefix.push(p);
+    }
+    gp.mat = mm_small(&embeds[k - 1], &prefix[k - 1], df);
+    // suffix[i] = E_k···E_{i+1} (identity for the last member)
+    let mut suffix: Vec<Vec<f32>> = vec![Vec::new(); k];
+    suffix[k - 1] = eye_small(df);
+    for i in (0..k - 1).rev() {
+        suffix[i] = mm_small(&suffix[i + 1], &embeds[i + 1], df);
+    }
+    for ((mem, r), l) in gp.members.iter_mut().zip(prefix).zip(suffix) {
+        mem.rmat = r;
+        mem.lmat = l;
+    }
+}
+
+impl GatePlan {
+    /// Distribute a fused-gate gradient `∂F` onto the original gates:
+    /// for member `i`, `∂E_i = L_iᵀ · ∂F · R_iᵀ`, then the
+    /// identity-embedded positions sum back into the member's
+    /// `(dmn, dmn)` gradient (`gate_grads[gate_idx]`).  Single-member
+    /// gates take `∂F` verbatim.  Deterministic: fixed iteration order,
+    /// no data-dependent reduction.
+    pub(crate) fn unfuse_grads(&self, dmat: Vec<f32>, gate_grads: &mut [Vec<f32>]) {
+        if self.members.len() == 1 {
+            gate_grads[self.members[0].gate_idx] = dmat;
+            return;
+        }
+        let df = self.dmn;
+        for mem in &self.members {
+            let tmp = mm_small_abt(&dmat, &mem.rmat, df); // ∂F · R_iᵀ
+            let de = mm_small_atb(&mem.lmat, &tmp, df); // L_iᵀ · (∂F R_iᵀ)
+            let dst = &mut gate_grads[mem.gate_idx];
+            for r in 0..df {
+                for c in 0..df {
+                    if mem.prest[r] == mem.prest[c] {
+                        dst[mem.prow[r] as usize * mem.dmn + mem.prow[c] as usize] +=
+                            de[r * df + c];
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl CircuitPlan {
+    /// Plan with the default fusion cap ([`MAX_FUSED_DMN`], or the
+    /// `QFT_MAX_FUSED_DMN` env override).
     pub fn new(circuit: &Circuit) -> Result<CircuitPlan> {
+        CircuitPlan::with_max_fused(circuit, default_max_fused())
+    }
+
+    /// Plan with an explicit fusion cap (`0` disables fusion entirely —
+    /// the PR 2 one-plan-gate-per-circuit-gate layout).
+    pub fn with_max_fused(circuit: &Circuit, max_fused_dmn: usize) -> Result<CircuitPlan> {
         let dims = circuit.dims().to_vec();
         let d: usize = dims.iter().product();
         let strides = strides_of(&dims);
-        let mut gates = Vec::with_capacity(circuit.gates().len());
-        for g in circuit.gates() {
+        // validate, then group adjacent gates greedily: merge when the
+        // axis sets overlap, the union dimension is within the cap, and
+        // the per-element GEMM cost does not grow (d_u ≤ d_a + d_b).
+        let mut groups: Vec<(Vec<usize>, usize, Vec<usize>)> = Vec::new();
+        for (gi, g) in circuit.gates().iter().enumerate() {
             if g.m >= dims.len() || g.n >= dims.len() || g.m == g.n {
                 return Err(Error::Shape(format!(
                     "plan: bad gate axes ({}, {}) for dims {dims:?}",
                     g.m, g.n
                 )));
             }
-            let (dm, dn) = (dims[g.m], dims[g.n]);
-            let dmn = dm * dn;
-            if g.mat.shape != [dmn, dmn] {
+            let gdmn = dims[g.m] * dims[g.n];
+            if g.mat.shape != [gdmn, gdmn] {
                 return Err(Error::Shape(format!(
-                    "plan: gate ({}, {}) matrix shape {:?}, want [{dmn}, {dmn}]",
+                    "plan: gate ({}, {}) matrix shape {:?}, want [{gdmn}, {gdmn}]",
                     g.m, g.n, g.mat.shape
                 )));
             }
-            let (sm, sn) = (strides[g.m], strides[g.n]);
-            let mut gather = Vec::with_capacity(dmn);
-            for i_m in 0..dm {
-                for i_n in 0..dn {
-                    gather.push(i_m * sm + i_n * sn);
+            if let Some((axes, dmn, members)) = groups.last_mut() {
+                if axes.contains(&g.m) || axes.contains(&g.n) {
+                    let mut union = axes.clone();
+                    for a in [g.m, g.n] {
+                        if !union.contains(&a) {
+                            union.push(a);
+                        }
+                    }
+                    union.sort_unstable();
+                    let union_dmn: usize = union.iter().map(|&a| dims[a]).product();
+                    if union_dmn <= max_fused_dmn && union_dmn <= *dmn + gdmn {
+                        *axes = union;
+                        *dmn = union_dmn;
+                        members.push(gi);
+                        continue;
+                    }
                 }
             }
-            gates.push(GatePlan {
-                m: g.m,
-                n: g.n,
-                mat: g.mat.data.clone(),
-                dmn,
-                rest: rest_offsets(&dims, &strides, g.m, g.n),
-                gather,
-            });
+            let mut set = vec![g.m, g.n];
+            set.sort_unstable();
+            groups.push((set, gdmn, vec![gi]));
+        }
+
+        let circuit_gates = circuit.gates();
+        let mut gates = Vec::with_capacity(groups.len());
+        for (union, union_dmn, member_ids) in groups {
+            let gp = if member_ids.len() == 1 {
+                // bit-compatible with the unfused PR 2 gate plan
+                let g = &circuit_gates[member_ids[0]];
+                let axes = vec![g.m, g.n];
+                GatePlan {
+                    gather: gather_table(&dims, &strides, &axes),
+                    rest: rest_offsets(&dims, &strides, &axes),
+                    mat: g.mat.data.clone(),
+                    dmn: union_dmn,
+                    members: vec![GateMember {
+                        gate_idx: member_ids[0],
+                        m: g.m,
+                        n: g.n,
+                        dmn: union_dmn,
+                        prow: vec![],
+                        prest: vec![],
+                        rmat: vec![],
+                        lmat: vec![],
+                    }],
+                    axes,
+                }
+            } else {
+                let dims_u: Vec<usize> = union.iter().map(|&a| dims[a]).collect();
+                let row_strides = strides_of(&dims_u);
+                let members = member_ids
+                    .into_iter()
+                    .map(|gi| {
+                        let g = &circuit_gates[gi];
+                        let pos_m = union.iter().position(|&a| a == g.m).unwrap();
+                        let pos_n = union.iter().position(|&a| a == g.n).unwrap();
+                        let (dn, dmn) = (dims[g.n], dims[g.m] * dims[g.n]);
+                        let mut prow = Vec::with_capacity(union_dmn);
+                        let mut prest = Vec::with_capacity(union_dmn);
+                        for r in 0..union_dmn {
+                            let im = (r / row_strides[pos_m]) % dims_u[pos_m];
+                            let i_n = (r / row_strides[pos_n]) % dims_u[pos_n];
+                            let mut rid = 0usize;
+                            for j in 0..union.len() {
+                                if j != pos_m && j != pos_n {
+                                    rid = rid * dims_u[j] + (r / row_strides[j]) % dims_u[j];
+                                }
+                            }
+                            prow.push((im * dn + i_n) as u32);
+                            prest.push(rid as u32);
+                        }
+                        GateMember {
+                            gate_idx: gi,
+                            m: g.m,
+                            n: g.n,
+                            dmn,
+                            prow,
+                            prest,
+                            rmat: vec![],
+                            lmat: vec![],
+                        }
+                    })
+                    .collect();
+                let mut gp = GatePlan {
+                    gather: gather_table(&dims, &strides, &union),
+                    rest: rest_offsets(&dims, &strides, &union),
+                    mat: vec![],
+                    dmn: union_dmn,
+                    members,
+                    axes: union,
+                };
+                recompose_gate(&mut gp, circuit_gates);
+                gp
+            };
+            gates.push(gp);
         }
         let max_dmn = gates.iter().map(|g| g.dmn).max().unwrap_or(0);
         let sum_dmn = gates.iter().map(|g| g.dmn).sum();
@@ -182,9 +495,23 @@ impl CircuitPlan {
         }
     }
 
-    /// Multiply count of one chain application (paper §6).
+    /// Multiply count of one chain application (paper §6; fused gates
+    /// lower it relative to `Circuit::apply_flops`).
     pub fn apply_flops(&self) -> usize {
         self.d * self.sum_dmn
+    }
+
+    /// Number of original circuit gates behind this plan (`Σ` members).
+    pub fn source_gate_count(&self) -> usize {
+        self.gates.iter().map(|g| g.members.len()).sum()
+    }
+
+    /// Chunking of a `batch`-vector panel for the compute pool: whole
+    /// vectors per chunk, each chunk ≥ one `PAR_MIN_FLOPS` quantum.
+    /// Shared by the forward, tape forward, and backward so their chunk
+    /// boundaries (and gate-gradient reduction order) always align.
+    pub(crate) fn chunking(&self, batch: usize) -> (usize, usize) {
+        pool::chunks(batch, self.apply_flops())
     }
 
     /// Re-snapshot the gate matrices from `circuit` without rebuilding
@@ -192,30 +519,41 @@ impl CircuitPlan {
     /// dims + gate structure).  Dims, gate count, per-gate axes, and
     /// matrix sizes are all checked, so a structurally different
     /// circuit is rejected; per-step optimizers use this to update
-    /// parameters at memcpy cost instead of full plan setup.
+    /// parameters at memcpy cost (plus fused-matrix recomposition where
+    /// gates were fused) instead of full plan setup.
     pub fn refresh_gate_mats(&mut self, circuit: &Circuit) -> Result<()> {
-        if circuit.dims() != self.dims.as_slice() || circuit.gates().len() != self.gates.len() {
+        if circuit.dims() != self.dims.as_slice()
+            || circuit.gates().len() != self.source_gate_count()
+        {
             return Err(Error::Shape(format!(
                 "refresh_gate_mats: circuit ({:?}, {} gates) does not match plan ({:?}, {})",
                 circuit.dims(),
                 circuit.gates().len(),
                 self.dims,
-                self.gates.len()
+                self.source_gate_count()
             )));
         }
-        for (gp, g) in self.gates.iter_mut().zip(circuit.gates()) {
-            if g.m != gp.m || g.n != gp.n || g.mat.data.len() != gp.mat.len() {
-                return Err(Error::Shape(format!(
-                    "refresh_gate_mats: gate ({}, {}) with {} entries, plan has ({}, {}) with {}",
-                    g.m,
-                    g.n,
-                    g.mat.data.len(),
-                    gp.m,
-                    gp.n,
-                    gp.mat.len()
-                )));
+        let gates = circuit.gates();
+        for gp in &self.gates {
+            for mem in &gp.members {
+                let g = &gates[mem.gate_idx];
+                if g.m != mem.m || g.n != mem.n || g.mat.data.len() != mem.dmn * mem.dmn {
+                    return Err(Error::Shape(format!(
+                        "refresh_gate_mats: gate {} is ({}, {}) with {} entries, plan member \
+                         has ({}, {}) with {}",
+                        mem.gate_idx,
+                        g.m,
+                        g.n,
+                        g.mat.data.len(),
+                        mem.m,
+                        mem.n,
+                        mem.dmn * mem.dmn
+                    )));
+                }
             }
-            gp.mat.copy_from_slice(&g.mat.data);
+        }
+        for gp in &mut self.gates {
+            recompose_gate(gp, gates);
         }
         Ok(())
     }
@@ -247,36 +585,107 @@ impl CircuitPlan {
         if self.d == 0 || batch == 0 || self.gates.is_empty() {
             return;
         }
-        let workers = if batch * self.apply_flops() < PAR_MIN_FLOPS {
-            1
-        } else {
-            crate::tensor::num_threads(batch)
-        };
-        if workers <= 1 {
+        let (chunk_vecs, n_chunks) = self.chunking(batch);
+        if n_chunks <= 1 {
             let mut scratch = self.scratch();
             self.apply_chain_chunk(h, batch, &mut scratch);
             return;
         }
         // Vectors are independent through the whole chain, so the panel
-        // splits into per-thread chunks of whole vectors; each worker
-        // owns its scratch.  Per-vector arithmetic does not depend on
-        // the chunking, so results are identical for any worker count.
-        let chunk_vecs = batch.div_ceil(workers);
-        std::thread::scope(|s| {
-            for chunk in h.chunks_mut(chunk_vecs * self.d) {
-                s.spawn(move || {
-                    let cb = chunk.len() / self.d;
-                    let mut scratch = self.scratch();
-                    self.apply_chain_chunk(chunk, cb, &mut scratch);
-                });
-            }
+        // splits into fixed chunks of whole vectors; each executor owns
+        // its scratch.  Per-vector arithmetic does not depend on the
+        // chunking, so results are identical for any worker count.
+        let chunks = pool::DisjointChunks::new(h, chunk_vecs * self.d);
+        pool::run(n_chunks, |i| {
+            // SAFETY: each chunk index is claimed exactly once.
+            let chunk = unsafe { chunks.slice(i) };
+            let cb = chunk.len() / self.d;
+            let mut scratch = self.scratch();
+            self.apply_chain_chunk(chunk, cb, &mut scratch);
         });
     }
 
+    /// Fused adapter residual: `out[p] += alpha · (chain(xs)[p] − xs[p])`
+    /// over a row-major `[batch, d]` panel, with the `− x` / `·α` folded
+    /// into the **final gate's scatter** — one panel pass fewer than
+    /// apply-then-axpy, and no materialized circuit output.  `out`
+    /// typically arrives holding the frozen-base product `W x`.
+    pub fn apply_batch_residual_into(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        alpha: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if xs.len() != batch * self.d || out.len() != batch * self.d {
+            return Err(Error::Shape(format!(
+                "apply_batch_residual_into: xs {} / out {} != batch {batch} * d {}",
+                xs.len(),
+                out.len(),
+                self.d
+            )));
+        }
+        if self.d == 0 || batch == 0 || self.gates.is_empty() {
+            return Ok(()); // empty chain is the identity: zero residual
+        }
+        let (chunk_vecs, n_chunks) = self.chunking(batch);
+        if n_chunks <= 1 {
+            let mut scratch = self.scratch();
+            self.residual_chain_chunk(xs, out, batch, alpha, &mut scratch);
+            return Ok(());
+        }
+        let out_chunks = pool::DisjointChunks::new(out, chunk_vecs * self.d);
+        pool::run(n_chunks, |i| {
+            // SAFETY: each chunk index is claimed exactly once.
+            let o = unsafe { out_chunks.slice(i) };
+            let x0 = i * chunk_vecs * self.d;
+            let x = &xs[x0..x0 + o.len()];
+            let cb = o.len() / self.d;
+            let mut scratch = self.scratch();
+            self.residual_chain_chunk(x, o, cb, alpha, &mut scratch);
+        });
+        Ok(())
+    }
+
+    /// One chunk of the residual-fused chain: gates `0..L−1` run in
+    /// place on a scratch copy (skipped entirely for a single-gate
+    /// chain), the final gate scatters `α(out_val − x)` into `out`.
+    pub(crate) fn residual_chain_chunk(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        cb: usize,
+        alpha: f32,
+        scratch: &mut Scratch,
+    ) {
+        let last = self.gates.len() - 1;
+        if last == 0 {
+            self.apply_gate_chunk_residual(&self.gates[0], x, x, out, cb, alpha, scratch);
+            return;
+        }
+        let mut h = x.to_vec();
+        for g in &self.gates[..last] {
+            self.apply_gate_chunk(g, &mut h, cb, scratch);
+        }
+        self.apply_gate_chunk_residual(&self.gates[last], &h, x, out, cb, alpha, scratch);
+    }
+
     /// Run the whole gate chain over `cb` contiguous vectors.
-    fn apply_chain_chunk(&self, h: &mut [f32], cb: usize, scratch: &mut Scratch) {
+    pub(crate) fn apply_chain_chunk(&self, h: &mut [f32], cb: usize, scratch: &mut Scratch) {
         for g in &self.gates {
             self.apply_gate_chunk(g, h, cb, scratch);
+        }
+    }
+
+    /// Fill the column-base table for block `[c0, c0+w)` of gate `g`.
+    #[inline]
+    fn fill_bases(&self, g: &GatePlan, c0: usize, w: usize, bases: &mut [usize]) {
+        let rest_len = g.rest.len();
+        for (ci, slot) in bases.iter_mut().enumerate().take(w) {
+            let col = c0 + ci;
+            let b = col / rest_len;
+            let r = col - b * rest_len;
+            *slot = b * self.d + g.rest[r];
         }
     }
 
@@ -291,21 +700,13 @@ impl CircuitPlan {
         cb: usize,
         scratch: &mut Scratch,
     ) {
-        let d = self.d;
         let dmn = g.dmn;
-        let rest_len = g.rest.len();
-        let ncols = cb * rest_len;
+        let ncols = cb * g.rest.len();
         let bw = BLOCK_COLS;
         let mut c0 = 0;
         while c0 < ncols {
             let w = bw.min(ncols - c0);
-            // base offset of each column in this block
-            for ci in 0..w {
-                let col = c0 + ci;
-                let b = col / rest_len;
-                let r = col - b * rest_len;
-                scratch.bases[ci] = b * d + g.rest[r];
-            }
+            self.fill_bases(g, c0, w, &mut scratch.bases);
             let bases = &scratch.bases[..w];
             // gather: contiguous writes per row, strided reads from h
             for (k, &off) in g.gather.iter().enumerate() {
@@ -331,6 +732,58 @@ impl CircuitPlan {
                 let row = &scratch.product[k * bw..k * bw + w];
                 for (&val, &base) in row.iter().zip(bases) {
                     h[base + off] = val;
+                }
+            }
+            c0 += w;
+        }
+    }
+
+    /// Final-gate variant: gather from `src` (the hidden state entering
+    /// the last gate), and instead of scattering the product back,
+    /// accumulate `alpha · (product − x)` into `out`.  The gate's
+    /// `(rest × gather)` footprint tiles `[0, d)` exactly, so every
+    /// output element receives its residual term exactly once.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn apply_gate_chunk_residual(
+        &self,
+        g: &GatePlan,
+        src: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+        cb: usize,
+        alpha: f32,
+        scratch: &mut Scratch,
+    ) {
+        let dmn = g.dmn;
+        let ncols = cb * g.rest.len();
+        let bw = BLOCK_COLS;
+        let mut c0 = 0;
+        while c0 < ncols {
+            let w = bw.min(ncols - c0);
+            self.fill_bases(g, c0, w, &mut scratch.bases);
+            let bases = &scratch.bases[..w];
+            for (k, &off) in g.gather.iter().enumerate() {
+                let row = &mut scratch.gathered[k * bw..k * bw + w];
+                for (slot, &base) in row.iter_mut().zip(bases) {
+                    *slot = src[base + off];
+                }
+            }
+            for i in 0..dmn {
+                let orow = &mut scratch.product[i * bw..i * bw + w];
+                orow.fill(0.0);
+                let mrow = &g.mat[i * dmn..(i + 1) * dmn];
+                for (p, &a) in mrow.iter().enumerate() {
+                    let grow = &scratch.gathered[p * bw..p * bw + w];
+                    for (o, &xv) in orow.iter_mut().zip(grow) {
+                        *o += a * xv;
+                    }
+                }
+            }
+            // residual scatter: out += α(chain_out − x)
+            for (k, &off) in g.gather.iter().enumerate() {
+                let row = &scratch.product[k * bw..k * bw + w];
+                for (&val, &base) in row.iter().zip(bases) {
+                    out[base + off] += alpha * (val - x[base + off]);
                 }
             }
             c0 += w;
@@ -427,7 +880,7 @@ mod tests {
                     let mut scan: Vec<usize> = (0..d)
                         .filter(|flat| (flat / sm) % dm == 0 && (flat / sn) % dn == 0)
                         .collect();
-                    let mut stepped = rest_offsets(&dims, &strides, m, n);
+                    let mut stepped = rest_offsets(&dims, &strides, &[m, n]);
                     scan.sort_unstable();
                     stepped.sort_unstable();
                     assert_eq!(stepped, scan, "dims {dims:?} gate ({m},{n})");
@@ -440,7 +893,7 @@ mod tests {
     fn rest_offsets_two_axis_gate_is_single_block() {
         let dims = [3usize, 4];
         let strides = strides_of(&dims);
-        assert_eq!(rest_offsets(&dims, &strides, 0, 1), vec![0]);
+        assert_eq!(rest_offsets(&dims, &strides, &[0, 1]), vec![0]);
     }
 
     #[test]
@@ -479,6 +932,86 @@ mod tests {
     }
 
     #[test]
+    fn fusion_merges_overlapping_gates_and_matches_unfused() {
+        let mut rng = Rng::new(45);
+        // repeated pair: two (0,1) gates on [3,2] must fuse into one
+        let c = Circuit::random(&[3usize, 2], &[(0, 1), (0, 1)], 0.4, &mut rng).unwrap();
+        let fused = CircuitPlan::new(&c).unwrap();
+        let unfused = CircuitPlan::with_max_fused(&c, 0).unwrap();
+        assert_eq!(fused.gates.len(), 1, "repeated pair must fuse");
+        assert_eq!(fused.gates[0].members.len(), 2);
+        assert_eq!(fused.source_gate_count(), 2);
+        assert_eq!(unfused.gates.len(), 2, "cap 0 must disable fusion");
+        assert!(fused.apply_flops() < unfused.apply_flops());
+        let mut xs = vec![0.0f32; 5 * fused.d];
+        rng.fill_normal(&mut xs, 1.0);
+        let yf = fused.apply_batch(&xs, 5).unwrap();
+        let yu = unfused.apply_batch(&xs, 5).unwrap();
+        for (a, b) in yf.iter().zip(&yu) {
+            assert!((a - b).abs() < 1e-4, "fused {a} vs unfused {b}");
+        }
+        // 4-axis all-pairs chain: overlapping unions fuse under the cap
+        let c4 = Circuit::random(&[2usize, 2, 2, 2], &all_pairs_structure(4), 0.3, &mut rng)
+            .unwrap();
+        let p4 = CircuitPlan::new(&c4).unwrap();
+        assert!(p4.gates.len() < 6, "expected fusion on [2,2,2,2] all-pairs");
+        assert_eq!(p4.source_gate_count(), 6);
+        let mut x4 = vec![0.0f32; p4.d];
+        rng.fill_normal(&mut x4, 1.0);
+        let got = p4.apply(&x4).unwrap();
+        let want = apply_reference(&c4, &x4);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "fused {a} vs reference {b}");
+        }
+    }
+
+    #[test]
+    fn fusion_cost_rule_skips_expensive_unions() {
+        // [4,4,8] all-pairs: every union is the whole space (d=128),
+        // above both the cap and the cost rule — nothing may fuse, so
+        // fusion leaves the train_smoke workload's arithmetic
+        // untouched (per-step chunking still changed vs PR 2).
+        let mut rng = Rng::new(46);
+        let c = Circuit::random(&[4usize, 4, 8], &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+        let plan = CircuitPlan::new(&c).unwrap();
+        assert_eq!(plan.gates.len(), 3);
+        assert!(plan.gates.iter().all(|g| g.members.len() == 1));
+    }
+
+    #[test]
+    fn residual_apply_matches_apply_then_axpy() {
+        let mut rng = Rng::new(47);
+        for dims in [vec![2usize, 3, 2], vec![3, 2], vec![2, 2, 2, 2]] {
+            let structure = all_pairs_structure(dims.len());
+            let c = Circuit::random(&dims, &structure, 0.3, &mut rng).unwrap();
+            let plan = CircuitPlan::new(&c).unwrap();
+            let d = plan.d;
+            let batch = 4;
+            let alpha = 0.7f32;
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            let mut base = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut base, 1.0);
+            // reference: apply, then axpy
+            let cx = plan.apply_batch(&xs, batch).unwrap();
+            let mut want = base.clone();
+            for ((w, &cv), &xv) in want.iter_mut().zip(&cx).zip(&xs) {
+                *w += alpha * (cv - xv);
+            }
+            let mut got = base.clone();
+            plan.apply_batch_residual_into(&xs, batch, alpha, &mut got).unwrap();
+            assert_eq!(got, want, "dims {dims:?}: residual fusion changed results");
+        }
+        // empty chain: residual must be exactly zero
+        let c = Circuit::new(vec![2, 2], vec![]).unwrap();
+        let plan = CircuitPlan::new(&c).unwrap();
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = [5.0f32, 6.0, 7.0, 8.0];
+        plan.apply_batch_residual_into(&xs, 1, 0.9, &mut out).unwrap();
+        assert_eq!(out, [5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
     fn full_matrix_matches_basis_reference() {
         let mut rng = Rng::new(42);
         let dims = [2usize, 2, 3];
@@ -505,20 +1038,29 @@ mod tests {
     #[test]
     fn refresh_gate_mats_matches_fresh_plan() {
         let mut rng = Rng::new(44);
-        let dims = [2usize, 3, 2];
-        let mut c = Circuit::random(&dims, &all_pairs_structure(3), 0.4, &mut rng).unwrap();
-        let mut plan = CircuitPlan::new(&c).unwrap();
-        // mutate the gates, refresh in place, compare against a rebuild
-        for g in c.gates_mut() {
-            let sz = g.mat.shape[0];
-            g.mat = Tensor::randn(&[sz, sz], 0.5, &mut rng);
+        // [2,3,2] all-pairs does not fuse; the repeated pair does — the
+        // refresh path must recompose fused matrices in both cases.
+        for structure in [all_pairs_structure(3), vec![(0, 1), (0, 1)]] {
+            let dims = [2usize, 3, 2];
+            let mut c = Circuit::random(&dims, &structure, 0.4, &mut rng).unwrap();
+            let mut plan = CircuitPlan::new(&c).unwrap();
+            // mutate the gates, refresh in place, compare against a rebuild
+            for g in c.gates_mut() {
+                let sz = g.mat.shape[0];
+                g.mat = Tensor::randn(&[sz, sz], 0.5, &mut rng);
+            }
+            plan.refresh_gate_mats(&c).unwrap();
+            let fresh = CircuitPlan::new(&c).unwrap();
+            let mut x = vec![0.0f32; plan.d * 3];
+            rng.fill_normal(&mut x, 1.0);
+            assert_eq!(
+                plan.apply_batch(&x, 3).unwrap(),
+                fresh.apply_batch(&x, 3).unwrap()
+            );
         }
-        plan.refresh_gate_mats(&c).unwrap();
-        let fresh = CircuitPlan::new(&c).unwrap();
-        let mut x = vec![0.0f32; plan.d * 3];
-        rng.fill_normal(&mut x, 1.0);
-        assert_eq!(plan.apply_batch(&x, 3).unwrap(), fresh.apply_batch(&x, 3).unwrap());
         // structure mismatch is rejected
+        let c = Circuit::random(&[2usize, 3, 2], &all_pairs_structure(3), 0.4, &mut rng).unwrap();
+        let mut plan = CircuitPlan::new(&c).unwrap();
         let other = Circuit::random(&[2usize, 2], &[(0, 1)], 0.1, &mut rng).unwrap();
         assert!(plan.refresh_gate_mats(&other).is_err());
         // ...including same-size gates on different axes

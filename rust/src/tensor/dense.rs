@@ -1,11 +1,8 @@
 //! Dense row-major f32 tensor.
 
+use crate::compute::pool;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
-
-/// Serial cutoff for `matmul`: products below this many multiplies are
-/// cheaper than a thread spawn.
-const PAR_MIN_MULS: usize = 1 << 20;
 
 /// `k`-block width of the matmul kernel: the active `B` panel is
 /// `MM_KB × n` floats, resident in L1/L2 across the row sweep.
@@ -108,10 +105,12 @@ impl Tensor {
     /// Matrix multiply: self [m,k] @ other [k,n] -> [m,n].
     ///
     /// Blocked over `k` so the active `B` panel stays cache-resident,
-    /// row-parallel across threads for large products; `j` innermost
-    /// vectorizes.  No zero-skip shortcut: `0 × NaN` must propagate NaN
-    /// (IEEE 754), and a data-dependent branch in the inner loop defeats
-    /// vectorization anyway.
+    /// row-chunked over the compute pool for large products (each row's
+    /// accumulation order is ascending in `p` regardless of chunking,
+    /// so any chunk split is bitwise identical to serial); `j`
+    /// innermost vectorizes.  No zero-skip shortcut: `0 × NaN` must
+    /// propagate NaN (IEEE 754), and a data-dependent branch in the
+    /// inner loop defeats vectorization anyway.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
             return Err(Error::Shape(format!(
@@ -124,24 +123,19 @@ impl Tensor {
         if m == 0 || k == 0 || n == 0 {
             return Ok(out);
         }
-        let workers = if m * k * n < PAR_MIN_MULS {
-            1
-        } else {
-            crate::tensor::num_threads(m)
-        };
-        if workers <= 1 {
+        let (chunk_rows, n_chunks) = pool::chunks(m, k * n);
+        if n_chunks <= 1 {
             mm_rows(&self.data, &other.data, &mut out.data, k, n);
         } else {
-            let rows_per = m.div_ceil(workers);
+            let a = &self.data;
             let b = &other.data;
-            std::thread::scope(|s| {
-                for (a_chunk, o_chunk) in self
-                    .data
-                    .chunks(rows_per * k)
-                    .zip(out.data.chunks_mut(rows_per * n))
-                {
-                    s.spawn(move || mm_rows(a_chunk, b, o_chunk, k, n));
-                }
+            let out_chunks = pool::DisjointChunks::new(&mut out.data, chunk_rows * n);
+            pool::run(n_chunks, |i| {
+                // SAFETY: each chunk index is claimed exactly once.
+                let o = unsafe { out_chunks.slice(i) };
+                let rows = o.len() / n;
+                let a0 = i * chunk_rows * k;
+                mm_rows(&a[a0..a0 + rows * k], b, o, k, n);
             });
         }
         Ok(out)

@@ -1,27 +1,17 @@
 //! Host tensor: a shape + contiguous `Vec<f32>` with the operations the
 //! analysis / reference paths need (matmul, transpose, axis moves).
 //! The compute layer is shared with the pure-Rust QuanTA circuit engine
-//! (`quanta::plan`), so the hot kernels (matmul, the gate GEMMs) are
-//! blocked and multi-threaded — see DESIGN.md §Circuit-engine.
+//! (`quanta::plan`): the hot kernels (matmul, the gate GEMMs) are
+//! blocked and dispatched through the persistent worker pool
+//! (`crate::compute::pool`) in problem-sized chunks — see DESIGN.md §6.
+//!
+//! The PR 1/2 per-call worker clamp (`num_threads`, "never pay
+//! thread-spawn overhead") is gone: nothing here spawns threads any
+//! more.  Parallel work is split into `PAR_MIN_FLOPS`-sized chunks and
+//! handed to already-parked workers; `QFT_THREADS` still caps how many
+//! workers participate, but — because chunk boundaries depend only on
+//! the problem shape — no longer affects any result bit.
 
 mod dense;
 
 pub use dense::Tensor;
-
-/// Worker count for the parallel kernels: `available_parallelism`,
-/// overridable with `QFT_THREADS`, and clamped so tiny problems never
-/// pay thread-spawn overhead (callers pass an upper bound, usually the
-/// number of independent work chunks).
-pub(crate) fn num_threads(max_useful: usize) -> usize {
-    if max_useful <= 1 {
-        return 1;
-    }
-    let hw = std::env::var("QFT_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        });
-    hw.min(max_useful).max(1)
-}

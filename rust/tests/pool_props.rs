@@ -1,0 +1,85 @@
+//! Thread-count invariance of the pooled compute paths.
+//!
+//! The PR 3 pool sizes chunks by problem shape only (`PAR_MIN_FLOPS`
+//! quanta), and every cross-chunk reduction happens in ascending chunk
+//! order — so `QFT_THREADS` must not change ANY output bit: not the
+//! forward panel, not the input/gate gradients (whose partial sums
+//! depend on chunk boundaries, which are now fixed), not a whole train
+//! step, not the dense matmul.
+//!
+//! Everything lives in ONE `#[test]`: `QFT_THREADS` is process-global
+//! env state, so sweeping it from parallel test threads would race.
+//! (This binary contains only this test; other test binaries are
+//! separate processes.)
+
+use quanta_ft::coordinator::host_trainer::{finetune_host, HostTrainConfig};
+use quanta_ft::data::synth::{teacher_student, SynthConfig};
+use quanta_ft::quanta::circuit::{all_pairs_structure, Circuit};
+use quanta_ft::tensor::Tensor;
+use quanta_ft::util::rng::Rng;
+
+/// One full exercise of the pooled paths at a size that actually fans
+/// out (d = 128, batch 48 → multiple chunks on the circuit paths;
+/// 96×256 @ 256×128 → multiple matmul chunks).
+fn run_everything() -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<(usize, f64)>) {
+    let dims = vec![4usize, 4, 8];
+    let mut rng = Rng::new(900);
+    let c = Circuit::random(&dims, &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+    let plan = c.plan().unwrap();
+    let d = plan.d;
+    let batch = 48;
+    let mut xs = vec![0.0f32; batch * d];
+    rng.fill_normal(&mut xs, 1.0);
+    let mut w = vec![0.0f32; batch * d];
+    rng.fill_normal(&mut w, 1.0);
+
+    let fwd = plan.apply_batch(&xs, batch).unwrap();
+    let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+    let grads = plan.backward(&tape, &w).unwrap();
+
+    let a = Tensor::randn(&[96, 256], 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 128], 1.0, &mut rng);
+    let mm = a.matmul(&b).unwrap();
+
+    let task = teacher_student(&SynthConfig {
+        dims,
+        n_train: 96,
+        n_val: 16,
+        teacher_std: 0.3,
+        noise_std: 0.01,
+        alpha: 1.0,
+        seed: 3,
+    })
+    .unwrap();
+    let mut student = task.student().unwrap();
+    let cfg = HostTrainConfig { steps: 5, batch: 32, eval_every: 5, ..Default::default() };
+    let out = finetune_host(&mut student, &task, &cfg).unwrap();
+
+    (fwd, grads.flat_gates(), grads.input, mm.data, out.final_theta, out.loss_curve)
+}
+
+#[test]
+fn outputs_bitwise_identical_for_any_qft_threads() {
+    let baseline = {
+        std::env::set_var("QFT_THREADS", "1");
+        run_everything()
+    };
+    for threads in ["2", "8"] {
+        std::env::set_var("QFT_THREADS", threads);
+        let got = run_everything();
+        assert_eq!(baseline.0, got.0, "apply_batch differs at QFT_THREADS={threads}");
+        assert_eq!(baseline.1, got.1, "gate grads differ at QFT_THREADS={threads}");
+        assert_eq!(baseline.2, got.2, "input grads differ at QFT_THREADS={threads}");
+        assert_eq!(baseline.3, got.3, "matmul differs at QFT_THREADS={threads}");
+        assert_eq!(baseline.4, got.4, "trained params differ at QFT_THREADS={threads}");
+        assert_eq!(baseline.5, got.5, "loss curve differs at QFT_THREADS={threads}");
+    }
+    // spawn dispatch shares the chunk claims, so it cannot differ either
+    std::env::set_var("QFT_THREADS", "8");
+    std::env::set_var("QFT_DISPATCH", "spawn");
+    let spawned = run_everything();
+    std::env::remove_var("QFT_DISPATCH");
+    std::env::remove_var("QFT_THREADS");
+    assert_eq!(baseline.4, spawned.4, "spawn dispatch changed the train trajectory");
+    assert_eq!(baseline.1, spawned.1, "spawn dispatch changed gate grads");
+}
