@@ -369,6 +369,153 @@ fn pool_vs_spawn_bench() -> (&'static str, Value) {
     )
 }
 
+/// Block-train microbench: fwd-with-tape / backward / full Adam step of
+/// the 4-adapter transformer block (d=128, heads 4, seq 8), plus the
+/// loss reduction of a 100-step fit — the `block-train-smoke` CI gate
+/// reads the `loss_reduction` field.
+fn block_train_bench() -> (&'static str, Value) {
+    use quanta_ft::coordinator::host_trainer::{
+        clip_global_norm, finetune_host, mse, mse_grad, Adam, HostTrainConfig,
+    };
+    use quanta_ft::data::synth::{block_teacher_student, BlockSynthConfig};
+    use quanta_ft::model::TrainableModel;
+
+    banner("block_train", "multi-adapter transformer block fwd/bwd/step + loss reduction");
+    let cfg = BlockSynthConfig {
+        dims: vec![4, 4, 8],
+        n_heads: 4,
+        seq: 8,
+        d_ff: 256,
+        n_train: 64,
+        n_val: 16,
+        teacher_std: 0.2,
+        noise_std: 0.01,
+        alpha: 1.0,
+        seed: 0,
+    };
+    let task = block_teacher_student(&cfg).unwrap();
+    let batch = 8usize; // sequences per step (64 panel rows)
+    let tcfg = HostTrainConfig { batch, ..Default::default() };
+    let model = task.student();
+    let ex = model.io_len();
+    let xs = &task.train_x[..batch * ex];
+    let ys = &task.train_y[..batch * ex];
+
+    let st_fwd = bench(3, 30, || {
+        let _ = model.forward_with_tape(xs, batch).unwrap();
+    });
+    let (pred, tape) = model.forward_with_tape(xs, batch).unwrap();
+    let (_, dpred) = mse_grad(&pred, ys);
+    let st_bwd = bench(3, 30, || {
+        let _ = model.backward_flat(&tape, &dpred, batch).unwrap();
+    });
+    let mut step_model = task.student();
+    let mut params = step_model.params_flat();
+    let mut adam = Adam::new(params.len(), &tcfg);
+    let st_step = bench(3, 30, || {
+        let (pred, tape) = step_model.forward_with_tape(xs, batch).unwrap();
+        let (_, dpred) = mse_grad(&pred, ys);
+        let mut grads = step_model.backward_flat(&tape, &dpred, batch).unwrap();
+        clip_global_norm(&mut grads, tcfg.clip);
+        adam.step(&mut params, &grads);
+        step_model.set_params(&params).unwrap();
+    });
+
+    let mut student = task.student();
+    let init = {
+        let pred = student.forward(&task.train_x, task.n_train).unwrap();
+        mse(&pred, &task.train_y)
+    };
+    let fit_cfg = HostTrainConfig { steps: 100, batch, eval_every: 25, ..Default::default() };
+    let out = finetune_host(&mut student, &task, &fit_cfg).unwrap();
+    let fin = {
+        let pred = student.forward(&task.train_x, task.n_train).unwrap();
+        mse(&pred, &task.train_y)
+    };
+    let reduction = init / fin.max(1e-300);
+    println!(
+        "block: d={} heads={} seq={} d_ff={}, {} params over 4 adapters, batch {batch} seqs",
+        task.d,
+        cfg.n_heads,
+        cfg.seq,
+        cfg.d_ff,
+        params.len()
+    );
+    println!("block forward_with_tape:            {st_fwd}");
+    println!("block backward:                     {st_bwd}");
+    println!("block full Adam step:               {st_step}");
+    println!(
+        "100-step block fit: train mse {init:.5} -> {fin:.5}  => {reduction:.1}x \
+         ({} steps, best val {:.5})",
+        out.steps_run, out.best_val_loss
+    );
+
+    (
+        "block_train",
+        Value::obj(vec![
+            ("dims", Value::arr_f64(&cfg.dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            ("n_heads", Value::Num(cfg.n_heads as f64)),
+            ("seq", Value::Num(cfg.seq as f64)),
+            ("d_ff", Value::Num(cfg.d_ff as f64)),
+            ("adapters", Value::Num(4.0)),
+            ("batch_seqs", Value::Num(batch as f64)),
+            ("params", Value::Num(params.len() as f64)),
+            ("steps", Value::Num(fit_cfg.steps as f64)),
+            ("fwd_us", Value::Num(st_fwd.mean_us)),
+            ("bwd_us", Value::Num(st_bwd.mean_us)),
+            ("step_us", Value::Num(st_step.mean_us)),
+            ("loss_reduction", Value::Num(reduction)),
+        ]),
+    )
+}
+
+/// Shard sweep: bulk vs gate-sharded backward at d ∈ {1024, 4096},
+/// gradients asserted bitwise equal — the recorded ratio prices the
+/// extra per-gate region dispatch the sharded sweep pays for its
+/// one-gate-at-a-time accumulator footprint.
+fn shard_sweep_bench() -> (&'static str, Value) {
+    banner("shard_sweep", "gate-sharded vs bulk backward across problem sizes");
+    let batch = 32usize;
+    let mut entries = vec![];
+    for (dims, warm, iters) in [(vec![8usize, 8, 16], 2usize, 20usize), (vec![16, 16, 16], 1, 5)] {
+        let mut rng = Rng::new(0x5AAD);
+        let c = Circuit::random(&dims, &all_pairs_structure(3), 0.05, &mut rng).unwrap();
+        let plan = c.plan().unwrap();
+        let d = plan.d;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut w, 1.0);
+        let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+        let bulk = plan.backward_with_shard(&tape, &w, 1.0, usize::MAX).unwrap();
+        let sharded = plan.backward_with_shard(&tape, &w, 1.0, 1).unwrap();
+        assert_eq!(bulk.gates, sharded.gates, "shard sweep: gate grads diverged at d={d}");
+        assert_eq!(bulk.input, sharded.input, "shard sweep: input grads diverged at d={d}");
+        let st_bulk = bench(warm, iters, || {
+            let _ = plan.backward_with_shard(&tape, &w, 1.0, usize::MAX).unwrap();
+        });
+        let st_shard = bench(warm, iters, || {
+            let _ = plan.backward_with_shard(&tape, &w, 1.0, 1).unwrap();
+        });
+        let ratio = st_shard.mean_us / st_bulk.mean_us;
+        println!(
+            "d={d:5} backward({batch}): bulk {:9.1}us  sharded {:9.1}us  => {ratio:.2}x \
+             (grads bitwise equal)",
+            st_bulk.mean_us, st_shard.mean_us
+        );
+        entries.push(Value::obj(vec![
+            ("d", Value::Num(d as f64)),
+            ("dims", Value::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            ("batch", Value::Num(batch as f64)),
+            ("bulk_us", Value::Num(st_bulk.mean_us)),
+            ("sharded_us", Value::Num(st_shard.mean_us)),
+            ("sharded_over_bulk", Value::Num(ratio)),
+            ("grads_bitwise_equal", Value::Bool(true)),
+        ]));
+    }
+    ("shard_sweep", Value::Arr(entries))
+}
+
 /// Scaling sweep: `apply_batch` under pool vs spawn dispatch across
 /// d ∈ {256, 1024, 4096}.  Dispatch overhead matters most at small d
 /// (many short regions) and washes out at large d — both ends recorded
@@ -417,7 +564,7 @@ fn scaling_bench() -> (&'static str, Value) {
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(3.0)),
+        ("schema_version", Value::Num(4.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -434,8 +581,10 @@ fn main() {
     banner("perf_runtime", "L3 hot-path microbenches");
     let (config, mut results) = engine_bench();
     results.push(train_bench());
+    results.push(block_train_bench());
     results.push(pool_vs_spawn_bench());
     results.push(scaling_bench());
+    results.push(shard_sweep_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();

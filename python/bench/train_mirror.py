@@ -534,6 +534,13 @@ class Adapter:
         gate_grads, _ = plan.backward(tape, self.alpha * grad_out, grad_out.shape[0])
         return gate_grads
 
+    def backward_full(self, plan: Plan, tape, grad_out: np.ndarray):
+        """adapter.rs::backward — gate grads plus the full input grad
+        `Wᵀ g + α (circuitᵀ g − g)` (row-major: `g @ W + …`)."""
+        gate_grads, gin = plan.backward(tape, self.alpha * grad_out, grad_out.shape[0])
+        dx = grad_out @ self.base + gin - self.alpha * grad_out
+        return gate_grads, dx
+
     def merge(self) -> np.ndarray:
         full = self.plan().full_matrix()
         return self.base + self.alpha * (full - np.eye(full.shape[0], dtype=full.dtype))
@@ -821,6 +828,373 @@ def merge_equivalence_margin():
     return float(np.abs(y - want).max())
 
 
+# ---------------------------------------------------------------------------
+# quanta::grad sharded backward mirror (bulk vs gate-major, same chunks)
+# ---------------------------------------------------------------------------
+
+def _gate_blocks(plan: Plan, gp, cb: int):
+    """(dmn, w) index segments per BLOCK_COLS block — the shared walk of
+    backward_gate_chunk / accumulate_gate_dmat_chunk / transform_gate_chunk."""
+    bases = plan._bases(gp, cb)
+    gather = gp["gather"]
+    for c0 in range(0, bases.shape[0], BLOCK_COLS):
+        blk = bases[c0 : c0 + BLOCK_COLS]
+        yield gather[:, None] + blk[None, :]
+
+
+def _gate_bwd(plan, gp, g, hin, cb, dmat):
+    """Combined dF accumulation + transpose-gate transform (the bulk
+    path's per-gate visit)."""
+    mat = gp["mat"]
+    for seg in _gate_blocks(plan, gp, cb):
+        gy = g.reshape(-1)[seg]
+        gx = hin.reshape(-1)[seg]
+        dmat += gy @ gx.T
+        g.reshape(-1)[seg] = mat.T @ gy
+
+
+def _gate_dmat(plan, gp, g, hin, cb, dmat):
+    """dF accumulation only (sharded region A)."""
+    for seg in _gate_blocks(plan, gp, cb):
+        dmat += g.reshape(-1)[seg] @ hin.reshape(-1)[seg].T
+
+
+def _gate_transform(plan, gp, g, cb):
+    """Transpose-gate transform only (sharded region B)."""
+    mat = gp["mat"]
+    for seg in _gate_blocks(plan, gp, cb):
+        g.reshape(-1)[seg] = mat.T @ g.reshape(-1)[seg]
+
+
+def backward_chunked(plan: Plan, tape, grad_out, cb, mode):
+    """grad.rs parallel backward at chunk granularity.  ``bulk`` keeps a
+    per-chunk partial for every gate and reduces them in ascending chunk
+    order after the sweep; ``sharded`` is the gate-major (gate,
+    column-block) sweep — identical chunk boundaries, identical per-gate
+    reduction order, so the two must agree bit for bit."""
+    ranges = chunk_ranges(cb, plan.apply_flops())
+    g = grad_out.copy()
+    fused = [np.zeros_like(gp["mat"]) for gp in plan.gates]
+    if mode == "bulk":
+        partials = []
+        for s, e in ranges:
+            pf = [np.zeros_like(gp["mat"]) for gp in plan.gates]
+            gc = g[s:e]
+            for ai in range(len(plan.gates) - 1, -1, -1):
+                _gate_bwd(plan, plan.gates[ai], gc, tape[ai][s:e], e - s, pf[ai])
+            partials.append(pf)
+        for pf in partials:
+            for acc, p in zip(fused, pf):
+                acc += p
+    else:
+        for ai in range(len(plan.gates) - 1, -1, -1):
+            gp = plan.gates[ai]
+            partials = []
+            for s, e in ranges:
+                pf = np.zeros_like(gp["mat"])
+                _gate_dmat(plan, gp, g[s:e], tape[ai][s:e], e - s, pf)
+                partials.append(pf)
+            for s, e in ranges:
+                _gate_transform(plan, gp, g[s:e], e - s)
+            for p in partials:  # ascending shard order
+                fused[ai] += p
+    return plan._unfuse(fused), g
+
+
+# ---------------------------------------------------------------------------
+# model:: mirrors — AdapterSet layout, pre-LN transformer block
+# ---------------------------------------------------------------------------
+
+LN_EPS = 1e-5
+GELU_C = 0.7978846  # block.rs f32 literals
+GELU_A = 0.044715
+
+
+def gelu(u):
+    g = u.dtype.type(GELU_C) * (u + u.dtype.type(GELU_A) * u * u * u)
+    return u.dtype.type(0.5) * u * (u.dtype.type(1.0) + np.tanh(g))
+
+
+def gelu_prime(u):
+    dt = u.dtype.type
+    g = dt(GELU_C) * (u + dt(GELU_A) * u * u * u)
+    t = np.tanh(g)
+    return dt(0.5) * (1 + t) + dt(0.5) * u * (1 - t * t) * dt(GELU_C) * (
+        1 + dt(3.0) * dt(GELU_A) * u * u
+    )
+
+
+class Block:
+    """Mirrors model::block::TransformerBlock: frozen pre-LN block
+    (Q/K/V/O + GELU MLP + layernorms, causal softmax attention) with a
+    QuantaAdapter per projection, same RNG draw order as
+    ``TransformerBlock::init`` (+ ``randomize_circuits``)."""
+
+    def __init__(self, dims, n_heads, seq, d_ff, alpha, rng: Rng, dtype=np.float32):
+        d = int(np.prod(dims))
+        assert d % n_heads == 0
+        self.dims, self.d, self.n_heads, self.hd = list(dims), d, n_heads, d // n_heads
+        self.seq, self.d_ff, self.dtype = seq, d_ff, dtype
+        self.structure = all_pairs_structure(len(dims))
+        proj_std = float(np.float32(1.0) / np.sqrt(np.float32(d)))
+        self.adapters = []
+        for _name in ("wq", "wk", "wv", "wo"):
+            base = rng.fill_normal(d * d, proj_std).reshape(d, d).astype(dtype)
+            self.adapters.append(
+                Adapter(base, dims, identity_gates(dims, self.structure, dtype), alpha)
+            )
+        self.w1 = rng.fill_normal(d_ff * d, proj_std).reshape(d_ff, d).astype(dtype)
+        w2_std = float(np.float32(1.0) / np.sqrt(np.float32(d_ff)))
+        self.w2 = rng.fill_normal(d * d_ff, w2_std).reshape(d, d_ff).astype(dtype)
+        self.b1 = np.zeros(d_ff, dtype)
+        self.b2 = np.zeros(d, dtype)
+        self.ln1_g = np.ones(d, dtype)
+        self.ln1_b = np.zeros(d, dtype)
+        self.ln2_g = np.ones(d, dtype)
+        self.ln2_b = np.zeros(d, dtype)
+
+    def clone(self) -> "Block":
+        out = Block.__new__(Block)
+        out.__dict__.update(self.__dict__)
+        out.adapters = [
+            Adapter(a.base, a.dims, list(zip([m for m, _ in a.structure],
+                                             [n for _, n in a.structure], a.mats)), float(a.alpha))
+            for a in self.adapters
+        ]
+        for oa, a in zip(out.adapters, self.adapters):
+            oa.mats = [m.copy() for m in a.mats]
+        return out
+
+    def randomize_circuits(self, std, rng: Rng):
+        for a in self.adapters:
+            a.mats = [m for _, _, m in random_gates(self.dims, self.structure, std, rng,
+                                                    self.dtype)]
+
+    def io_len(self) -> int:
+        return self.seq * self.d
+
+    def params_flat(self) -> np.ndarray:
+        return np.concatenate([a.params_flat() for a in self.adapters])
+
+    def set_params(self, flat: np.ndarray) -> None:
+        off = 0
+        for a in self.adapters:
+            n = a.params_flat().size
+            a.set_params(flat[off : off + n])
+            off += n
+
+    def _ln(self, x, gamma, beta):
+        dt = self.dtype
+        mean = x.mean(axis=1, keepdims=True, dtype=dt)
+        var = ((x - mean) ** 2).mean(axis=1, keepdims=True, dtype=dt)
+        rstd = (dt(1.0) / np.sqrt(var + dt(LN_EPS))).astype(dt)
+        xhat = ((x - mean) * rstd).astype(dt)
+        return gamma * xhat + beta, xhat, rstd
+
+    @staticmethod
+    def _ln_backward(dy, xhat, rstd, gamma):
+        dt = dy.dtype.type
+        dxh = dy * gamma
+        m1 = dxh.mean(axis=1, keepdims=True, dtype=dt)
+        m2 = (dxh * xhat).mean(axis=1, keepdims=True, dtype=dt)
+        return (rstd * (dxh - m1 - xhat * m2)).astype(dy.dtype)
+
+    def _heads(self, x, n_seqs):
+        return x.reshape(n_seqs, self.seq, self.n_heads, self.hd).transpose(0, 2, 1, 3)
+
+    def _unheads(self, x4, n_seqs):
+        return x4.transpose(0, 2, 1, 3).reshape(n_seqs * self.seq, self.d)
+
+    def attention(self, q, k, v, n_seqs):
+        dt = self.dtype
+        scale = dt(float(np.float32(1.0) / np.sqrt(np.float32(self.hd))))
+        q4, k4, v4 = (self._heads(x, n_seqs) for x in (q, k, v))
+        scores = (q4 @ k4.transpose(0, 1, 3, 2)) * scale
+        causal = np.triu(np.ones((self.seq, self.seq), dtype=bool), k=1)
+        scores = np.where(causal, dt(-np.inf), scores)
+        m = scores.max(axis=-1, keepdims=True)
+        e = np.exp(scores - m)  # exp(-inf) = 0: future positions vanish
+        probs = (e / e.sum(axis=-1, keepdims=True)).astype(dt)
+        return self._unheads(probs @ v4, n_seqs), probs
+
+    def attention_backward(self, dctx, probs, q, k, v, n_seqs):
+        dt = self.dtype
+        scale = dt(float(np.float32(1.0) / np.sqrt(np.float32(self.hd))))
+        d4 = self._heads(dctx, n_seqs)
+        q4, k4, v4 = (self._heads(x, n_seqs) for x in (q, k, v))
+        dp = d4 @ v4.transpose(0, 1, 3, 2)
+        dv4 = probs.transpose(0, 1, 3, 2) @ d4
+        dot = (dp * probs).sum(axis=-1, keepdims=True, dtype=dt)
+        ds = (probs * (dp - dot) * scale).astype(dt)
+        dq4 = ds @ k4
+        dk4 = ds.transpose(0, 1, 3, 2) @ q4
+        return (self._unheads(x, n_seqs) for x in (dq4, dk4, dv4))
+
+    def forward_with_tape(self, xs, n_seqs):
+        h1, xhat1, rstd1 = self._ln(xs, self.ln1_g, self.ln1_b)
+        q, tq, pq = self.adapters[0].forward_with_tape(h1)
+        k, tk, pk = self.adapters[1].forward_with_tape(h1)
+        v, tv, pv = self.adapters[2].forward_with_tape(h1)
+        ctx, probs = self.attention(q, k, v, n_seqs)
+        attn, to, po = self.adapters[3].forward_with_tape(ctx)
+        x1 = xs + attn
+        h2, xhat2, rstd2 = self._ln(x1, self.ln2_g, self.ln2_b)
+        u = (h2 @ self.w1.T + self.b1).astype(self.dtype)
+        mlp = (gelu(u) @ self.w2.T + self.b2).astype(self.dtype)
+        out = x1 + mlp
+        tape = dict(
+            n_seqs=n_seqs, xhat1=xhat1, rstd1=rstd1,
+            tq=tq, pq=pq, tk=tk, pk=pk, tv=tv, pv=pv, to=to, po=po,
+            q=q, k=k, v=v, probs=probs, xhat2=xhat2, rstd2=rstd2, u=u,
+        )
+        return out, tape
+
+    def forward(self, xs, n_seqs):
+        return self.forward_with_tape(xs, n_seqs)[0]
+
+    def backward(self, tape, grad_out, n_seqs):
+        du = ((grad_out @ self.w2) * gelu_prime(tape["u"])).astype(self.dtype)
+        dh2 = (du @ self.w1).astype(self.dtype)
+        dx1 = self._ln_backward(dh2, tape["xhat2"], tape["rstd2"], self.ln2_g) + grad_out
+        go, dctx = self.adapters[3].backward_full(tape["po"], tape["to"], dx1)
+        dq, dk, dv = self.attention_backward(
+            dctx, tape["probs"], tape["q"], tape["k"], tape["v"], n_seqs
+        )
+        gq, dh1q = self.adapters[0].backward_full(tape["pq"], tape["tq"], dq)
+        gk, dh1k = self.adapters[1].backward_full(tape["pk"], tape["tk"], dk)
+        gv, dh1v = self.adapters[2].backward_full(tape["pv"], tape["tv"], dv)
+        dh1 = dh1q + (dh1k + dh1v)
+        dx = self._ln_backward(dh1, tape["xhat1"], tape["rstd1"], self.ln1_g) + dx1
+        flat = np.concatenate(
+            [np.concatenate([g.reshape(-1) for g in gg]) for gg in (gq, gk, gv, go)]
+        )
+        return flat, dx
+
+    def merged(self) -> "Block":
+        out = self.clone()
+        for a in out.adapters:
+            a.base = a.merge()
+            a.mats = [np.eye(m.shape[0], dtype=self.dtype) for m in a.mats]
+        return out
+
+
+def block_teacher_student(dims, n_heads, seq, d_ff, n_train, n_val, teacher_std,
+                          noise_std, alpha, seed, dtype=np.float32):
+    """Mirrors data::synth::block_teacher_student, stream names included."""
+    base = Block(dims, n_heads, seq, d_ff, alpha, Rng.stream(seed, "block-base"), dtype)
+    teacher = base.clone()
+    teacher.randomize_circuits(teacher_std, Rng.stream(seed, "block-teacher"))
+    ex = base.io_len()
+    d = base.d
+
+    def split(sx, se, n):
+        xs = Rng.stream(seed, sx).fill_normal(n * ex, 1.0).astype(dtype)
+        ys = teacher.forward(xs.reshape(n * seq, d), n).reshape(-1)
+        if noise_std > 0:
+            ys = ys + Rng.stream(seed, se).fill_normal(n * ex, noise_std).astype(dtype)
+        return xs.reshape(n, ex), ys.reshape(n, ex).astype(dtype)
+
+    tx, ty = split("block-train-x", "block-train-eps", n_train)
+    vx, vy = split("block-val-x", "block-val-eps", n_val)
+    return base, (tx, ty), (vx, vy)
+
+
+def block_finetune(block: Block, tx, ty, vx, vy, steps, batch, seed, lr, clip=1.0):
+    """finetune_host over the TrainableModel impl of the block — the
+    same Adam / clipping / sampler loop as the adapter path."""
+    seq, d = block.seq, block.d
+    params = block.params_flat()
+    adam = Adam(params.size, lr=lr)
+    sampler = Sampler(tx.shape[0], seed)
+    curve = []
+    for _ in range(steps):
+        idx = sampler.next_indices(batch)
+        xs = tx[idx].reshape(batch * seq, d)
+        ys = ty[idx].reshape(batch * seq, d)
+        pred, tape = block.forward_with_tape(xs, batch)
+        loss, dpred = mse_grad(pred, ys)
+        flat, _ = block.backward(tape, dpred, batch)
+        flat = clip_global_norm(flat.astype(np.float32).copy(), clip)
+        params = adam.step(params, flat)
+        block.set_params(params)
+        curve.append(loss)
+    val = mse(block.forward(vx.reshape(-1, d), vx.shape[0]), vy.reshape(-1, d))
+    return curve, val
+
+
+def block_analytic_grads(dtype, seed=22, probe_seed=23):
+    """Analytic block gradients on the rust model_props.rs draws
+    (tiny_trained_block(22, 0.3, 0.7), probes from Rng::new(23))."""
+    rng = Rng(seed)
+    block = Block([2, 2], 2, 3, 8, 0.7, rng, dtype)
+    block.randomize_circuits(0.3, rng)
+    n_seqs = 2
+    prng = Rng(probe_seed)
+    xs = prng.fill_normal(n_seqs * block.io_len(), 1.0).astype(dtype).reshape(-1, block.d)
+    w = prng.fill_normal(n_seqs * block.io_len(), 1.0).astype(dtype).reshape(-1, block.d)
+    _, tape = block.forward_with_tape(xs, n_seqs)
+    flat, dx = block.backward(tape, w, n_seqs)
+    return np.asarray(flat, np.float64), np.asarray(dx, np.float64).reshape(-1)
+
+
+def block_gradcheck(dtype, eps, seed=22, probe_seed=23):
+    """Central-FD gradcheck through the full block, reproducing the
+    rust model_props.rs draws (tiny_trained_block(22, 0.3, 0.7), probes
+    from Rng::new(23)).  Returns the worst relative error over every
+    gate parameter and every 5th input entry."""
+    rng = Rng(seed)
+    block = Block([2, 2], 2, 3, 8, 0.7, rng, dtype)
+    block.randomize_circuits(0.3, rng)
+    n_seqs = 2
+    prng = Rng(probe_seed)
+    xs = prng.fill_normal(n_seqs * block.io_len(), 1.0).astype(dtype).reshape(-1, block.d)
+    w = prng.fill_normal(n_seqs * block.io_len(), 1.0).astype(dtype).reshape(-1, block.d)
+
+    def loss(b, x):
+        return float((b.forward(x, n_seqs).astype(np.float64) * w.astype(np.float64)).sum())
+
+    _, tape = block.forward_with_tape(xs, n_seqs)
+    flat, dx = block.backward(tape, w, n_seqs)
+    p0 = block.params_flat()
+    worst = 0.0
+    bp = block.clone()
+    for kk in range(p0.size):
+        p = p0.copy()
+        p[kk] += dtype(eps)
+        bp.set_params(p)
+        lp = loss(bp, xs)
+        p[kk] = p0[kk] - dtype(eps)
+        bp.set_params(p)
+        lm = loss(bp, xs)
+        fd = (lp - lm) / (2 * float(eps))
+        an = float(flat[kk])
+        worst = max(worst, abs(fd - an) / max(abs(fd), abs(an), 0.05))
+    bp.set_params(p0)
+    for jj in range(0, xs.size, 5):
+        xp = xs.copy().reshape(-1)
+        xp[jj] += dtype(eps)
+        lp = loss(block, xp.reshape(-1, block.d))
+        xp[jj] = xs.reshape(-1)[jj] - dtype(eps)
+        lm = loss(block, xp.reshape(-1, block.d))
+        fd = (lp - lm) / (2 * float(eps))
+        an = float(dx.reshape(-1)[jj])
+        worst = max(worst, abs(fd - an) / max(abs(fd), abs(an), 0.05))
+    return worst
+
+
+def block_merge_parity():
+    """max |streaming forward − merged-block forward| (f32, α = 0.7) —
+    the merge_all() 1e-5 contract of model_props.rs."""
+    rng = Rng(25)
+    block = Block([2, 2], 2, 3, 8, 0.7, rng, np.float32)
+    block.randomize_circuits(0.25, rng)
+    merged = block.merged()
+    xs = Rng(26).fill_normal(4 * block.io_len(), 1.0).reshape(-1, block.d)
+    y = block.forward(xs, 4)
+    ym = merged.forward(xs, 4)
+    return float(np.abs(y - ym).max())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -1001,14 +1375,169 @@ def main():
         f"=> {step_speedup:.2f}x (losses bitwise equal over 10 steps)"
     )
 
+    # -- sharded backward: bitwise equality vs the bulk path -------------
+    print("== gate-sharded backward vs bulk (bitwise, incl. fused chain) ==")
+    for dims2, structure2, batch2 in [
+        ([4, 4, 8], None, 48),
+        ([3, 2], [(0, 1), (0, 1)], 40),  # fused: unfuse inside the shard sweep
+    ]:
+        if structure2 is None:
+            structure2 = all_pairs_structure(len(dims2))
+        gates2 = random_gates(dims2, structure2, 0.3, Rng(76))
+        d2 = int(np.prod(dims2))
+        plan2 = Plan(dims2, gates2)
+        prng = Rng.stream(900, "shard-probe")
+        xs2 = prng.fill_normal(batch2 * d2, 1.0).reshape(batch2, d2)
+        w2 = prng.fill_normal(batch2 * d2, 1.0).reshape(batch2, d2)
+        _, tape2 = plan2.apply_batch_with_tape(xs2, batch2)
+        gg_b, gi_b = backward_chunked(plan2, tape2, w2, batch2, "bulk")
+        gg_s, gi_s = backward_chunked(plan2, tape2, w2, batch2, "sharded")
+        assert all(np.array_equal(a, b) for a, b in zip(gg_b, gg_s)), dims2
+        assert np.array_equal(gi_b, gi_s), dims2
+        n_chunks2 = len(chunk_ranges(batch2, plan2.apply_flops()))
+        print(f"   dims {dims2}: {n_chunks2} chunks, gate+input grads bitwise equal")
+
+    # -- block: gradcheck, merge parity, training configs ----------------
+    print("== block gradcheck (f64, formula exactness) ==")
+    bw64 = block_gradcheck(np.float64, eps=1e-4)
+    print(f"   worst rel err: {bw64:.3e}")
+    assert bw64 < 1e-6, bw64
+
+    # The block is nonlinear (softmax, tanh, layernorm), so unlike the
+    # circuit chain there is no exact-FD trick: raw f32 central FD
+    # bottoms out ~2e-3 (f32 forward rounding across the ± cancellation,
+    # eps-swept) — that number is what the rust model_props test
+    # measures, and its 2e-2 gate keeps ~9x headroom over it.  The
+    # 1e-3 certification of the f32 *gradient* is against the f64
+    # analytic gradient, itself FD-certified above at <1e-6.
+    print("== block gradcheck (f32 FD — the rust model_props measurement) ==")
+    bw32 = block_gradcheck(np.float32, eps=1e-2)
+    print(f"   worst rel err: {bw32:.3e}  (rust asserts < 2e-2)")
+    assert bw32 < 1e-2, bw32
+
+    print("== block f32 analytic vs FD-certified f64 gradient (<= 1e-3) ==")
+    f32f, f32x = block_analytic_grads(np.float32)
+    f64f, f64x = block_analytic_grads(np.float64)
+
+    def _rel(a, b):
+        return float(np.max(np.abs(a - b) / np.maximum(np.maximum(np.abs(a), np.abs(b)), 0.05)))
+
+    gp_rel, gi_rel = _rel(f32f, f64f), _rel(f32x, f64x)
+    print(f"   params rel: {gp_rel:.3e}   input rel: {gi_rel:.3e}")
+    assert gp_rel < 1e-3 and gi_rel < 1e-3, (gp_rel, gi_rel)
+
+    print("== block merge_all parity (f32, alpha=0.7) ==")
+    bm = block_merge_parity()
+    print(f"   max |stream - merged|: {bm:.3e}  (rust asserts < 1e-5)")
+    assert bm < 1e-5, bm
+
+    print("== block training: rust test configs ==")
+    # coordinator::host_trainer::tests::generic_trainer_drives_the_block
+    base_b, (btx, bty), (bvx, bvy) = block_teacher_student(
+        [2, 2], 2, 3, 8, 24, 8, 0.3, 0.0, 1.0, seed=5
+    )
+    student_b = base_b.clone()
+    init_b = mse(student_b.forward(btx.reshape(-1, student_b.d), btx.shape[0]),
+                 bty.reshape(-1, student_b.d))
+    curve_b, val_b = block_finetune(student_b, btx, bty, bvx, bvy,
+                                    steps=120, batch=8, seed=0, lr=2e-2)
+    fin_b = mse(student_b.forward(btx.reshape(-1, student_b.d), btx.shape[0]),
+                bty.reshape(-1, student_b.d))
+    print(f"   tiny block [2,2]: train mse {init_b:.5f} -> {fin_b:.5f} "
+          f"({init_b / fin_b:.1f}x, val {val_b:.5f})")
+    assert fin_b < 0.25 * init_b, (init_b, fin_b)
+
+    # rust/tests/model_props.rs section (e): 40 steps on the d=128 task
+    base_m, (mtx, mty), (mvx, mvy) = block_teacher_student(
+        [4, 4, 8], 4, 8, 256, 16, 4, 0.2, 0.01, 1.0, seed=7
+    )
+    student_m = base_m.clone()
+    init_m = mse(student_m.forward(mtx.reshape(-1, 128), 16), mty.reshape(-1, 128))
+    block_finetune(student_m, mtx, mty, mvx, mvy, steps=80, batch=8, seed=0, lr=2e-2)
+    fin_m = mse(student_m.forward(mtx.reshape(-1, 128), 16), mty.reshape(-1, 128))
+    print(f"   block [4,4,8] 80 steps: train mse {init_m:.5f} -> {fin_m:.5f} "
+          f"({init_m / fin_m:.1f}x)")
+    assert fin_m < 0.4 * init_m, (init_m, fin_m)
+
+    # -- block_train bench section (benches/perf_runtime.rs config) ------
+    print("== bench block_train: d=128 heads=4 seq=8, 4 adapters ==")
+    base_t, (ttx, tty), (tvx, tvy) = block_teacher_student(
+        [4, 4, 8], 4, 8, 256, 64, 16, 0.2, 0.01, 1.0, seed=0
+    )
+    bbatch = 8
+    model_t = base_t.clone()
+    bxs = ttx[:bbatch].reshape(-1, 128)
+    bys = tty[:bbatch].reshape(-1, 128)
+    blk_fwd_us = timeit_us(lambda: model_t.forward_with_tape(bxs, bbatch), 20)
+    bpred, btape = model_t.forward_with_tape(bxs, bbatch)
+    _, bdpred = mse_grad(bpred, bys)
+    blk_bwd_us = timeit_us(lambda: model_t.backward(btape, bdpred, bbatch), 20)
+    badam = Adam(model_t.params_flat().size, lr=2e-2)
+    bsampler = Sampler(64, 0)
+    bparams = [model_t.params_flat()]
+
+    def blk_step():
+        idx = bsampler.next_indices(bbatch)
+        xb = ttx[idx].reshape(-1, 128)
+        yb = tty[idx].reshape(-1, 128)
+        p, tp = model_t.forward_with_tape(xb, bbatch)
+        _, dp = mse_grad(p, yb)
+        fl, _ = model_t.backward(tp, dp, bbatch)
+        fl = clip_global_norm(fl.astype(np.float32).copy(), 1.0)
+        bparams[0] = badam.step(bparams[0], fl)
+        model_t.set_params(bparams[0])
+
+    blk_step_us = timeit_us(blk_step, 20)
+    student_t = base_t.clone()
+    binit = mse(student_t.forward(ttx.reshape(-1, 128), 64), tty.reshape(-1, 128))
+    block_finetune(student_t, ttx, tty, tvx, tvy, steps=100, batch=bbatch, seed=0, lr=2e-2)
+    bfin = mse(student_t.forward(ttx.reshape(-1, 128), 64), tty.reshape(-1, 128))
+    block_reduction = binit / max(bfin, 1e-300)
+    block_params = int(base_t.params_flat().size)
+    print(f"   fwd {blk_fwd_us:.0f}us bwd {blk_bwd_us:.0f}us step {blk_step_us:.0f}us "
+          f"loss_reduction {block_reduction:.1f}x (gate >= 2)")
+    assert block_reduction >= 2.0, block_reduction
+
+    # -- shard_sweep bench section ---------------------------------------
+    print("== bench shard_sweep: bulk vs gate-sharded backward ==")
+    shard_entries = []
+    for dims3, iters3 in [([8, 8, 16], 10), ([16, 16, 16], 3)]:
+        gates3 = random_gates(dims3, all_pairs_structure(3), 0.05, Rng(0x5AAD))
+        d3 = int(np.prod(dims3))
+        plan3 = Plan(dims3, gates3)
+        prng = Rng.stream(901, "shard-bench")
+        xs3 = prng.fill_normal(32 * d3, 1.0).reshape(32, d3)
+        w3 = prng.fill_normal(32 * d3, 1.0).reshape(32, d3)
+        _, tape3 = plan3.apply_batch_with_tape(xs3, 32)
+        gg_b, gi_b = backward_chunked(plan3, tape3, w3, 32, "bulk")
+        gg_s, gi_s = backward_chunked(plan3, tape3, w3, 32, "sharded")
+        assert all(np.array_equal(a, b) for a, b in zip(gg_b, gg_s)) and np.array_equal(
+            gi_b, gi_s
+        ), dims3
+        bulk_us = timeit_us(lambda: backward_chunked(plan3, tape3, w3, 32, "bulk"), iters3)
+        shard_us = timeit_us(
+            lambda: backward_chunked(plan3, tape3, w3, 32, "sharded"), iters3
+        )
+        print(f"   d={d3:5}: bulk {bulk_us:.0f}us sharded {shard_us:.0f}us "
+              f"({shard_us / bulk_us:.2f}x, grads bitwise equal)")
+        shard_entries.append({
+            "d": d3,
+            "dims": dims3,
+            "batch": 32,
+            "bulk_us": round(bulk_us, 1),
+            "sharded_us": round(shard_us, 1),
+            "sharded_over_bulk": round(shard_us / bulk_us, 2),
+            "grads_bitwise_equal": True,
+        })
+
     if args.bench_out != "none":
         # merge into the shared perf record so engine_mirror.py +
-        # train_mirror.py (in either order) produce the full schema-3
+        # train_mirror.py (in either order) produce the full schema-4
         # record the CI perf-smoke gates read
         out_path = Path(args.bench_out)
         record = {
             "bench": "quanta_engine",
-            "schema_version": 3,
+            "schema_version": 4,
             "substrate": "python-numpy-mirror",
             "results": {},
         }
@@ -1021,7 +1550,7 @@ def main():
                     record = prev
             except (json.JSONDecodeError, OSError):
                 pass
-        record["schema_version"] = 3
+        record["schema_version"] = 4
         record.setdefault("results", {})["train_smoke"] = {
             "dims": dims,
             "batch": batch,
@@ -1041,8 +1570,24 @@ def main():
             "losses_bitwise_equal": True,
             "steps_compared": 10,
         }
+        record["results"]["block_train"] = {
+            "dims": [4, 4, 8],
+            "n_heads": 4,
+            "seq": 8,
+            "d_ff": 256,
+            "adapters": 4,
+            "batch_seqs": bbatch,
+            "params": block_params,
+            "steps": 100,
+            "fwd_us": round(blk_fwd_us, 1),
+            "bwd_us": round(blk_bwd_us, 1),
+            "step_us": round(blk_step_us, 1),
+            "loss_reduction": round(block_reduction, 2),
+        }
+        record["results"]["shard_sweep"] = shard_entries
         out_path.write_text(json.dumps(record, indent=2) + "\n")
-        print(f"merged train_smoke + pool_vs_spawn into {out_path}")
+        print(f"merged train_smoke + pool_vs_spawn + block_train + shard_sweep "
+              f"into {out_path}")
     print("ALL MIRROR CHECKS PASSED")
 
 

@@ -6,16 +6,22 @@
 //! validation split, keep the **best checkpoint on validation loss**
 //! (paper App. E), optionally early-stop on patience, and return the
 //! same [`TrainOutcome`] shape — so downstream reporting treats host
-//! and PJRT runs uniformly.  The trainable state is the adapter's flat
-//! gate-parameter vector; the base weight stays frozen by construction
-//! (the backward never produces a gradient for it).
+//! and PJRT runs uniformly.
+//!
+//! The loop is generic over [`TrainableModel`] × [`RegressionTask`]
+//! (this PR): the trainable state is whatever flat parameter vector
+//! the model exposes — a single adapter's gates, or a whole
+//! transformer block's per-projection [`crate::model::AdapterSet`] —
+//! and examples are whatever panel width the task declares (one hidden
+//! vector, or a whole sequence).  Frozen weights stay frozen by
+//! construction: the backward never produces gradients for them.
 
 use crate::compute::pool;
 use crate::coordinator::trainer::TrainOutcome;
 use crate::data::batcher::Sampler;
-use crate::data::synth::SynthTask;
+use crate::data::synth::RegressionTask;
 use crate::info;
-use crate::quanta::QuantaAdapter;
+use crate::model::TrainableModel;
 use crate::util::error::{Error, Result};
 
 /// Approximate multiply-equivalent cost of one Adam parameter update
@@ -254,46 +260,58 @@ pub fn mse_grad(pred: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
     (mse(pred, target), grad)
 }
 
-/// Mean validation loss of the adapter on the task's val split.
-pub fn val_loss_host(adapter: &QuantaAdapter, task: &SynthTask) -> Result<f64> {
-    if task.n_val == 0 {
+/// Mean validation loss of a model on the task's val split.
+pub fn val_loss_host<M: TrainableModel>(model: &M, task: &impl RegressionTask) -> Result<f64> {
+    if task.n_val() == 0 {
         return Ok(f64::NAN);
     }
-    let pred = adapter.apply_batch(&task.val_x, task.n_val)?;
-    Ok(mse(&pred, &task.val_y))
+    let (vx, vy) = task.val_xy();
+    let pred = model.forward(vx, task.n_val())?;
+    Ok(mse(&pred, vy))
 }
 
-/// Fine-tune the adapter's circuit on a synthetic task with Adam +
-/// global-norm gradient clipping.  The adapter is left at the **final**
-/// parameters; `TrainOutcome::best_theta` holds the best-on-validation
-/// checkpoint (load it with [`QuantaAdapter::set_params`]).
-pub fn finetune_host(
-    adapter: &mut QuantaAdapter,
-    task: &SynthTask,
+/// Fine-tune a model's flat parameters on a regression task with Adam +
+/// global-norm gradient clipping.  Generic over [`TrainableModel`]
+/// (single adapter or the full transformer block — same Adam, LR
+/// schedule, clipping, and best-checkpoint contract).  The model is
+/// left at the **final** parameters; `TrainOutcome::best_theta` holds
+/// the best-on-validation checkpoint (load it with
+/// [`TrainableModel::set_params`]).
+pub fn finetune_host<M: TrainableModel>(
+    model: &mut M,
+    task: &impl RegressionTask,
     cfg: &HostTrainConfig,
 ) -> Result<TrainOutcome> {
     let start = std::time::Instant::now();
-    let d = adapter.d();
-    if task.d != d {
-        return Err(Error::Config(format!("task d {} != adapter d {d}", task.d)));
+    let ex = model.io_len();
+    if task.example_len() != ex {
+        return Err(Error::Config(format!(
+            "task example_len {} != model io_len {ex}",
+            task.example_len()
+        )));
     }
     let degenerate = cfg.batch == 0
         || cfg.steps == 0
-        || task.n_train == 0
+        || task.n_train() == 0
         || cfg.eval_every == 0
         || cfg.log_every == 0;
     if degenerate {
         return Err(Error::Config(format!(
             "degenerate run: steps {} batch {} n_train {} eval_every {} log_every {}",
-            cfg.steps, cfg.batch, task.n_train, cfg.eval_every, cfg.log_every
+            cfg.steps,
+            cfg.batch,
+            task.n_train(),
+            cfg.eval_every,
+            cfg.log_every
         )));
     }
-    let mut params = adapter.params_flat();
+    let (train_x, train_y) = task.train_xy();
+    let mut params = model.params_flat();
     let mut adam = Adam::new(params.len(), cfg);
     let sched = LrSchedule::from_config(cfg);
-    let mut sampler = Sampler::new(task.n_train, cfg.seed);
-    let mut xs = vec![0.0f32; cfg.batch * d];
-    let mut ys = vec![0.0f32; cfg.batch * d];
+    let mut sampler = Sampler::new(task.n_train(), cfg.seed);
+    let mut xs = vec![0.0f32; cfg.batch * ex];
+    let mut ys = vec![0.0f32; cfg.batch * ex];
 
     let mut best_theta = params.clone();
     let mut best_val = f64::INFINITY;
@@ -304,23 +322,23 @@ pub fn finetune_host(
 
     for step in 0..cfg.steps {
         for (slot, &i) in sampler.next_indices(cfg.batch).iter().enumerate() {
-            xs[slot * d..(slot + 1) * d].copy_from_slice(&task.train_x[i * d..(i + 1) * d]);
-            ys[slot * d..(slot + 1) * d].copy_from_slice(&task.train_y[i * d..(i + 1) * d]);
+            xs[slot * ex..(slot + 1) * ex].copy_from_slice(&train_x[i * ex..(i + 1) * ex]);
+            ys[slot * ex..(slot + 1) * ex].copy_from_slice(&train_y[i * ex..(i + 1) * ex]);
         }
-        let (pred, tape) = adapter.forward_with_tape(&xs, cfg.batch)?;
+        let (pred, tape) = model.forward_with_tape(&xs, cfg.batch)?;
         let (loss, dpred) = mse_grad(&pred, &ys);
-        // gate gradients only — the input gradient is never used here
-        let mut grads = adapter.backward_gates(&tape, &dpred, cfg.batch)?;
+        // parameter gradients only — the input gradient is never used here
+        let mut grads = model.backward_flat(&tape, &dpred, cfg.batch)?;
         clip_global_norm(&mut grads, cfg.clip);
         adam.step_at(&mut params, &grads, sched.at(step));
-        adapter.set_params(&params)?;
+        model.set_params(&params)?;
         steps_run = step + 1;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             loss_curve.push((step, loss));
         }
         let is_eval = (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps;
-        if is_eval && task.n_val > 0 {
-            let vl = val_loss_host(adapter, task)?;
+        if is_eval && task.n_val() > 0 {
+            let vl = val_loss_host(model, task)?;
             val_curve.push((step + 1, vl));
             if vl < best_val {
                 best_val = vl;
@@ -354,7 +372,7 @@ pub fn finetune_host(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synth::{teacher_student, SynthConfig};
+    use crate::data::synth::{teacher_student, SynthConfig, SynthTask};
 
     fn tiny_task() -> SynthTask {
         teacher_student(&SynthConfig {
@@ -500,6 +518,43 @@ mod tests {
             .map(|&(_, v)| v)
             .fold(f64::INFINITY, f64::min);
         assert_eq!(out.best_val_loss, min_curve);
+        student.set_params(&out.best_theta).unwrap();
+        let reloaded = val_loss_host(&student, &task).unwrap();
+        assert!((reloaded - out.best_val_loss).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generic_trainer_drives_the_block() {
+        // the same loop that trains a single adapter trains the full
+        // multi-adapter transformer block through TrainableModel
+        use crate::data::synth::{block_teacher_student, BlockSynthConfig};
+        let task = block_teacher_student(&BlockSynthConfig {
+            dims: vec![2, 2],
+            n_heads: 2,
+            seq: 3,
+            d_ff: 8,
+            n_train: 24,
+            n_val: 8,
+            teacher_std: 0.3,
+            noise_std: 0.0,
+            alpha: 1.0,
+            seed: 5,
+        })
+        .unwrap();
+        let mut student = task.student();
+        let init = {
+            let pred = student.forward(&task.train_x, task.n_train).unwrap();
+            mse(&pred, &task.train_y)
+        };
+        let cfg = HostTrainConfig { steps: 120, batch: 8, eval_every: 20, ..Default::default() };
+        let out = finetune_host(&mut student, &task, &cfg).unwrap();
+        let fin = {
+            let pred = student.forward(&task.train_x, task.n_train).unwrap();
+            mse(&pred, &task.train_y)
+        };
+        assert!(fin < 0.5 * init, "block failed to learn: {init} -> {fin}");
+        assert!(out.best_val_loss.is_finite());
+        // best-checkpoint contract holds for the block too
         student.set_params(&out.best_theta).unwrap();
         let reloaded = val_loss_host(&student, &task).unwrap();
         assert!((reloaded - out.best_val_loss).abs() < 1e-12);

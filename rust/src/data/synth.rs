@@ -15,11 +15,29 @@
 //! `(seed, stream)`, matching the repo's data protocol: train/val are
 //! disjoint by construction.
 
+use crate::model::{BlockConfig, TransformerBlock};
 use crate::quanta::circuit::{all_pairs_structure, Circuit};
 use crate::quanta::QuantaAdapter;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
+
+/// The regression-panel view the host trainer consumes: row-major
+/// `[n, example_len]` feature/target panels with disjoint train/val
+/// splits.  Both the single-adapter task ([`SynthTask`], one hidden
+/// vector per example) and the block task ([`BlockSynthTask`], one
+/// whole sequence per example) implement it, so
+/// `coordinator::host_trainer::finetune_host` drives either unchanged.
+pub trait RegressionTask {
+    /// Floats per example (= the model's `io_len`).
+    fn example_len(&self) -> usize;
+    fn n_train(&self) -> usize;
+    fn n_val(&self) -> usize;
+    /// `(features, targets)` of the train split.
+    fn train_xy(&self) -> (&[f32], &[f32]);
+    /// `(features, targets)` of the val split.
+    fn val_xy(&self) -> (&[f32], &[f32]);
+}
 
 /// Generation knobs for [`teacher_student`].
 #[derive(Clone, Debug)]
@@ -77,6 +95,28 @@ impl SynthTask {
     }
 }
 
+impl RegressionTask for SynthTask {
+    fn example_len(&self) -> usize {
+        self.d
+    }
+
+    fn n_train(&self) -> usize {
+        self.n_train
+    }
+
+    fn n_val(&self) -> usize {
+        self.n_val
+    }
+
+    fn train_xy(&self) -> (&[f32], &[f32]) {
+        (&self.train_x, &self.train_y)
+    }
+
+    fn val_xy(&self) -> (&[f32], &[f32]) {
+        (&self.val_x, &self.val_y)
+    }
+}
+
 /// Generate a teacher–student regression task over `dims` with the
 /// paper's all-pairs gate structure.
 pub fn teacher_student(cfg: &SynthConfig) -> Result<SynthTask> {
@@ -126,6 +166,135 @@ pub fn teacher_student(cfg: &SynthConfig) -> Result<SynthTask> {
     })
 }
 
+/// Generation knobs for [`block_teacher_student`].
+#[derive(Clone, Debug)]
+pub struct BlockSynthConfig {
+    /// Per-projection circuit tensorization (`d = Π dims`).
+    pub dims: Vec<usize>,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub d_ff: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    /// Per-gate perturbation of the teacher circuits (`eye + N(0, std²)`).
+    pub teacher_std: f32,
+    /// Observation noise on the targets (0 = noiseless).
+    pub noise_std: f32,
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for BlockSynthConfig {
+    fn default() -> Self {
+        BlockSynthConfig {
+            dims: vec![4, 4, 8],
+            n_heads: 4,
+            seq: 8,
+            d_ff: 256,
+            n_train: 64,
+            n_val: 16,
+            teacher_std: 0.2,
+            noise_std: 0.01,
+            alpha: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// A sequence-level regression task: the teacher is the *same frozen
+/// block* the student gets, but with every projection circuit
+/// perturbed (`eye + N(0, std²)`); targets are whole teacher output
+/// sequences.  The identity-initialized student therefore starts at
+/// the frozen block's forward, and training must recover four circuit
+/// deltas at once through attention, layernorms, and the MLP.
+#[derive(Clone, Debug)]
+pub struct BlockSynthTask {
+    pub d: usize,
+    pub seq: usize,
+    /// The frozen block with identity circuits — the student template.
+    pub base_block: TransformerBlock,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<f32>,
+    pub val_x: Vec<f32>,
+    pub val_y: Vec<f32>,
+    pub n_train: usize,
+    pub n_val: usize,
+}
+
+impl BlockSynthTask {
+    /// Fresh student: the frozen base block with identity circuits.
+    pub fn student(&self) -> TransformerBlock {
+        self.base_block.clone()
+    }
+}
+
+impl RegressionTask for BlockSynthTask {
+    fn example_len(&self) -> usize {
+        self.seq * self.d
+    }
+
+    fn n_train(&self) -> usize {
+        self.n_train
+    }
+
+    fn n_val(&self) -> usize {
+        self.n_val
+    }
+
+    fn train_xy(&self) -> (&[f32], &[f32]) {
+        (&self.train_x, &self.train_y)
+    }
+
+    fn val_xy(&self) -> (&[f32], &[f32]) {
+        (&self.val_x, &self.val_y)
+    }
+}
+
+/// Generate a block-level teacher–student task (deterministic in
+/// `(seed, stream)` like every other dataset in the repo).
+pub fn block_teacher_student(cfg: &BlockSynthConfig) -> Result<BlockSynthTask> {
+    let bcfg = BlockConfig {
+        dims: cfg.dims.clone(),
+        n_heads: cfg.n_heads,
+        seq: cfg.seq,
+        d_ff: cfg.d_ff,
+        structure: all_pairs_structure(cfg.dims.len()),
+        alpha: cfg.alpha,
+    };
+    let base_block = TransformerBlock::init(&bcfg, &mut Rng::stream(cfg.seed, "block-base"))?;
+    let mut teacher = base_block.clone();
+    teacher.randomize_circuits(cfg.teacher_std, &mut Rng::stream(cfg.seed, "block-teacher"))?;
+    let ex = cfg.seq * base_block.d();
+
+    let mut gen_split =
+        |stream_x: &str, stream_eps: &str, n: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            let mut xs = vec![0.0f32; n * ex];
+            Rng::stream(cfg.seed, stream_x).fill_normal(&mut xs, 1.0);
+            let mut ys = teacher.forward(&xs, n)?;
+            if cfg.noise_std > 0.0 {
+                let mut eps = vec![0.0f32; n * ex];
+                Rng::stream(cfg.seed, stream_eps).fill_normal(&mut eps, cfg.noise_std);
+                for (y, e) in ys.iter_mut().zip(&eps) {
+                    *y += e;
+                }
+            }
+            Ok((xs, ys))
+        };
+    let (train_x, train_y) = gen_split("block-train-x", "block-train-eps", cfg.n_train)?;
+    let (val_x, val_y) = gen_split("block-val-x", "block-val-eps", cfg.n_val)?;
+    Ok(BlockSynthTask {
+        d: base_block.d(),
+        seq: cfg.seq,
+        base_block,
+        train_x,
+        train_y,
+        val_x,
+        val_y,
+        n_train: cfg.n_train,
+        n_val: cfg.n_val,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +309,38 @@ mod tests {
         assert_eq!(a.val_y, b.val_y);
         assert_ne!(&a.train_x[..a.d], &a.val_x[..a.d], "train/val streams must differ");
         let c = teacher_student(&SynthConfig { seed: 1, ..cfg }).unwrap();
+        assert_ne!(a.train_y, c.train_y, "different seeds must differ");
+    }
+
+    #[test]
+    fn block_task_deterministic_and_student_starts_at_frozen_forward() {
+        let cfg = BlockSynthConfig {
+            dims: vec![2, 2],
+            n_heads: 2,
+            seq: 3,
+            d_ff: 8,
+            n_train: 6,
+            n_val: 3,
+            noise_std: 0.0,
+            ..Default::default()
+        };
+        let a = block_teacher_student(&cfg).unwrap();
+        let b = block_teacher_student(&cfg).unwrap();
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.train_y, b.train_y);
+        assert_eq!(a.example_len(), 3 * 4);
+        // identity-init student predicts the frozen forward, which must
+        // differ from the teacher (nonzero circuit deltas)
+        let student = a.student();
+        let pred = student.forward(&a.train_x, a.n_train).unwrap();
+        let mse: f64 = pred
+            .iter()
+            .zip(&a.train_y)
+            .map(|(p, y)| ((p - y) as f64).powi(2))
+            .sum::<f64>()
+            / pred.len() as f64;
+        assert!(mse > 1e-5, "teacher delta unexpectedly tiny: {mse}");
+        let c = block_teacher_student(&BlockSynthConfig { seed: 1, ..cfg }).unwrap();
         assert_ne!(a.train_y, c.train_y, "different seeds must differ");
     }
 

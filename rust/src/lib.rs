@@ -17,7 +17,12 @@
 //! executed through a plan-cached batched circuit engine
 //! ([`quanta::plan`], DESIGN.md §4) with an analytic backward pass
 //! ([`quanta::grad`]) feeding an artifact-free host trainer
-//! ([`coordinator::host_trainer`], DESIGN.md §5).
+//! ([`coordinator::host_trainer`], DESIGN.md §5).  On top of the
+//! engine sits a host-model layer ([`model`], DESIGN.md §9): an
+//! [`model::AdapterSet`] of per-projection circuits behind one flat
+//! optimizer layout and a QuanTA-adapted pre-LN transformer block
+//! ([`model::TransformerBlock`]), both driven by the same trainer
+//! through the [`model::TrainableModel`] trait.
 
 // Crate-wide lint policy (needless_range_loop etc.) lives in the
 // `[lints]` table of rust/Cargo.toml so it covers tests, benches, and
@@ -28,6 +33,7 @@ pub mod compute;
 pub mod tensor;
 pub mod linalg;
 pub mod quanta;
+pub mod model;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;

@@ -6,6 +6,10 @@
 //!   train --set S --task T       — fine-tune one config, report metric
 //!   train-host [--dims 4,4,8 …]  — artifact-free fine-tune on the pure
 //!                                  rust gradient engine (synthetic task)
+//!   train-block [--dims 4,4,8 --heads 4 --seq 8 …]
+//!                                — fine-tune a full transformer block
+//!                                  (one circuit per Q/K/V/O projection)
+//!                                  on the host engine
 //!   eval-base --set S --task T   — score the un-fine-tuned base model
 //!   analyze --task T             — Fig.2 subspace-similarity analysis
 //!   info --set S                 — print a manifest summary
@@ -46,12 +50,14 @@ fn parse_args(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: quanta-ft <list|info|pretrain|train|train-host|eval-base|analyze> [--set S] \
-         [--task T] [--arch A] [--seeds N] [--steps N]\n\
+        "usage: quanta-ft <list|info|pretrain|train|train-host|train-block|eval-base|analyze> \
+         [--set S] [--task T] [--arch A] [--seeds N] [--steps N]\n\
          train-host flags: [--dims 4,4,8] [--steps N] [--batch N] [--lr F] [--seed N]\n\
                            [--n-train N] [--n-val N] [--teacher-std F] [--noise-std F]\n\
                            [--alpha F] [--clip F] [--warmup N] [--decay N] [--min-lr F]\n\
-                           [--weight-decay F] [--patience N] [--eval-every N]"
+                           [--weight-decay F] [--patience N] [--eval-every N]\n\
+         train-block flags: train-host flags plus [--heads N] [--seq N] [--d-ff N]\n\
+                           (--batch counts sequences; --dims shapes each projection circuit)"
     );
     ExitCode::FAILURE
 }
@@ -264,6 +270,104 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             if let Some(&(step, loss)) = out.loss_curve.last() {
                 println!("last logged train loss: step {step} -> {loss:.6}");
             }
+            Ok(())
+        }
+        "train-block" => {
+            use quanta_ft::coordinator::host_trainer::{finetune_host, mse, HostTrainConfig};
+            use quanta_ft::data::synth::{block_teacher_student, BlockSynthConfig};
+            use quanta_ft::model::TrainableModel;
+            let dims: Vec<usize> = flags
+                .get("dims")
+                .map(|s| s.as_str())
+                .unwrap_or("4,4,8")
+                .split(',')
+                .map(|p| p.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
+            let d: usize = dims.iter().product();
+            let scfg = BlockSynthConfig {
+                dims,
+                n_heads: flag_or(flags, "heads", 4)?,
+                seq: flag_or(flags, "seq", 8)?,
+                d_ff: flag_or(flags, "d-ff", 2 * d)?,
+                n_train: flag_or(flags, "n-train", 64)?,
+                n_val: flag_or(flags, "n-val", 16)?,
+                teacher_std: flag_or(flags, "teacher-std", 0.2)?,
+                noise_std: flag_or(flags, "noise-std", 0.01)?,
+                alpha: flag_or(flags, "alpha", 1.0)?,
+                seed: flag_or(flags, "seed", 0)?,
+            };
+            let tcfg = HostTrainConfig {
+                seed: scfg.seed,
+                steps: flag_or(flags, "steps", 100)?,
+                batch: flag_or(flags, "batch", 8)?,
+                lr: flag_or(flags, "lr", 2e-2)?,
+                clip: flag_or(flags, "clip", 1.0)?,
+                warmup_steps: flag_or(flags, "warmup", 0)?,
+                lr_decay_steps: flag_or(flags, "decay", 0)?,
+                min_lr: flag_or(flags, "min-lr", 0.0)?,
+                weight_decay: flag_or(flags, "weight-decay", 0.0)?,
+                eval_every: flag_or(flags, "eval-every", 20)?,
+                patience: flags
+                    .get("patience")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()
+                    .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
+                ..Default::default()
+            };
+            let task = block_teacher_student(&scfg)?;
+            let mut student = task.student();
+            println!(
+                "train-block: d={} heads={} seq={} d_ff={}, {} adapters ({:?}), \
+                 {} trainable params, {} train / {} val sequences",
+                task.d,
+                scfg.n_heads,
+                scfg.seq,
+                scfg.d_ff,
+                student.adapters().len(),
+                student.adapters().names(),
+                student.param_count(),
+                task.n_train,
+                task.n_val
+            );
+            let init = {
+                let pred = student.forward(&task.train_x, task.n_train)?;
+                mse(&pred, &task.train_y)
+            };
+            let out = finetune_host(&mut student, &task, &tcfg)?;
+            let fin = {
+                let pred = student.forward(&task.train_x, task.n_train)?;
+                mse(&pred, &task.train_y)
+            };
+            let mut t = Table::new(&["metric", "value"]);
+            t.row(vec!["steps run".into(), out.steps_run.to_string()]);
+            t.row(vec!["train mse (init)".into(), format!("{init:.6}")]);
+            t.row(vec!["train mse (final)".into(), format!("{fin:.6}")]);
+            t.row(vec![
+                "loss reduction".into(),
+                format!("{:.1}x", init / fin.max(1e-300)),
+            ]);
+            t.row(vec!["best val mse".into(), format!("{:.6}", out.best_val_loss)]);
+            t.row(vec!["wallclock (s)".into(), format!("{:.3}", out.wallclock_s)]);
+            t.print();
+            // the zero-overhead deployment: merged weights must
+            // reproduce the streaming forward (1e-5 contract) — checked
+            // on the train split, which the degenerate-run guard
+            // guarantees is non-empty (val may be --n-val 0)
+            let merged = student.merged()?;
+            let y_stream = student.forward(&task.train_x, task.n_train)?;
+            let y_merged = merged.forward(&task.train_x, task.n_train)?;
+            let max_diff = y_stream
+                .iter()
+                .zip(&y_merged)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if max_diff >= 1e-5 {
+                return Err(quanta_ft::Error::msg(format!(
+                    "merge_all parity violated: max |stream - merged| = {max_diff:e}"
+                )));
+            }
+            println!("merged-block parity: max |stream - merged| = {max_diff:.2e} (< 1e-5)");
             Ok(())
         }
         "eval-base" => {

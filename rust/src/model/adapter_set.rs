@@ -1,0 +1,266 @@
+//! A set of named [`QuantaAdapter`]s behind one flat optimizer layout.
+//!
+//! The paper fine-tunes *one circuit per attention projection*
+//! (Q/K/V/O), so the unit the optimizer sees is not a single adapter
+//! but a stack of them.  `AdapterSet` owns the per-projection circuits
+//! and exposes them as a single parameter vector with **stable
+//! offsets**: entry order is fixed at construction, each adapter's
+//! span is `offsets[i] .. offsets[i+1]`, and
+//! `params_flat` / `set_params` / `flat_from_parts` all agree on that
+//! layout — so Adam state, checkpoints, and gradient vectors never
+//! need to know which projection a parameter belongs to.
+//!
+//! [`AdapterSet::merge_all`] folds every trained delta into its frozen
+//! base (`W + α(full − I)` per adapter, paper Eq. 7) — the
+//! zero-inference-overhead deployment of the whole stack.  The merged
+//! set is pinned against the streaming adapter forward at `1e-5`
+//! (including the α-residual fold path) by `rust/tests/model_props.rs`.
+
+use crate::quanta::QuantaAdapter;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Named adapters + the prefix-sum table of their parameter spans.
+#[derive(Clone, Debug)]
+pub struct AdapterSet {
+    entries: Vec<(String, QuantaAdapter)>,
+    /// `offsets[i]` is where entry `i`'s parameters start in the flat
+    /// layout; `offsets.last()` is the total count.  Computed once at
+    /// construction — gate structure is fixed, so the spans are stable
+    /// for the life of the set.
+    offsets: Vec<usize>,
+}
+
+impl AdapterSet {
+    /// Build a set from `(name, adapter)` pairs; flat-layout order is
+    /// the given entry order.  Names must be unique (they key
+    /// [`AdapterSet::get`] and the `merge_all` output).
+    pub fn new(entries: Vec<(String, QuantaAdapter)>) -> Result<AdapterSet> {
+        for (i, (name, _)) in entries.iter().enumerate() {
+            if entries[..i].iter().any(|(n, _)| n == name) {
+                return Err(Error::Config(format!("adapter set: duplicate name '{name}'")));
+            }
+        }
+        let mut offsets = Vec::with_capacity(entries.len() + 1);
+        let mut off = 0usize;
+        offsets.push(0);
+        for (_, a) in &entries {
+            off += a.param_count();
+            offsets.push(off);
+        }
+        Ok(AdapterSet { entries, offsets })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entry names in flat-layout order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QuantaAdapter> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, a)| a)
+    }
+
+    /// Adapter by flat-layout index.
+    pub fn adapter(&self, idx: usize) -> &QuantaAdapter {
+        &self.entries[idx].1
+    }
+
+    /// Stable parameter span `[start, end)` of entry `idx` in the flat
+    /// layout.
+    pub fn span(&self, idx: usize) -> (usize, usize) {
+        (self.offsets[idx], self.offsets[idx + 1])
+    }
+
+    /// Total trainable parameter count (`Σ` per-adapter circuit params).
+    pub fn param_count(&self) -> usize {
+        *self.offsets.last().unwrap_or(&0)
+    }
+
+    /// Concatenated per-adapter parameter vectors (entry 0 first) — the
+    /// optimizer layout.
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for (_, a) in &self.entries {
+            out.extend_from_slice(&a.params_flat());
+        }
+        out
+    }
+
+    /// Write a flat parameter vector back through every adapter's
+    /// `set_params` (plan snapshots refresh in place; memcpy cost).
+    pub fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.param_count() {
+            return Err(Error::Shape(format!(
+                "adapter set set_params: got {} values, set has {}",
+                flat.len(),
+                self.param_count()
+            )));
+        }
+        for (i, (_, a)) in self.entries.iter_mut().enumerate() {
+            let (s, e) = (self.offsets[i], self.offsets[i + 1]);
+            a.set_params(&flat[s..e])?;
+        }
+        Ok(())
+    }
+
+    /// Assemble a flat gradient vector from per-adapter parts (one
+    /// `Vec` per entry, in layout order) — the backward's counterpart
+    /// of [`AdapterSet::params_flat`].
+    pub fn flat_from_parts(&self, parts: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if parts.len() != self.entries.len() {
+            return Err(Error::Shape(format!(
+                "adapter set: {} gradient parts for {} adapters",
+                parts.len(),
+                self.entries.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(self.param_count());
+        for (i, p) in parts.iter().enumerate() {
+            let (s, e) = self.span(i);
+            if p.len() != e - s {
+                return Err(Error::Shape(format!(
+                    "adapter set: part {i} has {} values, span wants {}",
+                    p.len(),
+                    e - s
+                )));
+            }
+            out.extend_from_slice(p);
+        }
+        Ok(out)
+    }
+
+    /// Fold every adapter's delta into a dense weight:
+    /// `(name, W + α(full − I))` per entry, in layout order.
+    pub fn merge_all(&self) -> Result<Vec<(String, Tensor)>> {
+        self.entries
+            .iter()
+            .map(|(n, a)| Ok((n.clone(), a.merge()?)))
+            .collect()
+    }
+
+    /// The merged set: every base replaced by its merged weight, every
+    /// circuit reset to identity gates — so the same streaming forward
+    /// code path runs the zero-overhead deployment (identity gates make
+    /// the residual exactly zero).
+    pub fn merged(&self) -> Result<AdapterSet> {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(n, a)| {
+                let structure: Vec<(usize, usize)> =
+                    a.circuit().gates().iter().map(|g| (g.m, g.n)).collect();
+                let merged = QuantaAdapter::identity_init(
+                    a.merge()?,
+                    a.circuit().dims(),
+                    &structure,
+                    a.alpha,
+                )?;
+                Ok((n.clone(), merged))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        AdapterSet::new(entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quanta::circuit::{all_pairs_structure, Circuit};
+    use crate::util::rng::Rng;
+
+    fn mk_set(rng: &mut Rng) -> AdapterSet {
+        let dims = [2usize, 3];
+        let structure = all_pairs_structure(2);
+        let entries = ["wq", "wk", "wv", "wo"]
+            .iter()
+            .map(|name| {
+                let c = Circuit::random(&dims, &structure, 0.3, rng).unwrap();
+                let base = Tensor::randn(&[6, 6], 0.4, rng);
+                (name.to_string(), QuantaAdapter::new(base, c, 0.8).unwrap())
+            })
+            .collect();
+        AdapterSet::new(entries).unwrap()
+    }
+
+    #[test]
+    fn flat_layout_roundtrip_with_stable_offsets() {
+        let mut rng = Rng::new(60);
+        let mut set = mk_set(&mut rng);
+        assert_eq!(set.len(), 4);
+        assert_eq!(set.param_count(), 4 * 36);
+        for i in 0..4 {
+            assert_eq!(set.span(i), (i * 36, (i + 1) * 36));
+        }
+        let p = set.params_flat();
+        assert_eq!(p.len(), set.param_count());
+        // perturb one adapter's span; only that adapter changes
+        let mut p2 = p.clone();
+        p2[40] += 1.0; // inside span 1 ("wk")
+        set.set_params(&p2).unwrap();
+        assert_eq!(set.params_flat(), p2);
+        let (s1, e1) = set.span(1);
+        assert_eq!(&set.adapter(0).params_flat(), &p[..36]);
+        assert_eq!(&set.adapter(1).params_flat(), &p2[s1..e1]);
+        // round-trip back
+        set.set_params(&p).unwrap();
+        assert_eq!(set.params_flat(), p);
+    }
+
+    #[test]
+    fn flat_from_parts_matches_spans() {
+        let mut rng = Rng::new(61);
+        let set = mk_set(&mut rng);
+        let parts: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 36]).collect();
+        let flat = set.flat_from_parts(&parts).unwrap();
+        for i in 0..4 {
+            let (s, e) = set.span(i);
+            assert!(flat[s..e].iter().all(|&v| v == i as f32));
+        }
+        assert!(set.flat_from_parts(&parts[..3]).is_err());
+        let mut bad = parts.clone();
+        bad[2].pop();
+        assert!(set.flat_from_parts(&bad).is_err());
+    }
+
+    #[test]
+    fn merged_set_matches_streaming_forward() {
+        let mut rng = Rng::new(62);
+        let set = mk_set(&mut rng);
+        let merged = set.merged().unwrap();
+        let mut xs = vec![0.0f32; 5 * 6];
+        rng.fill_normal(&mut xs, 1.0);
+        for i in 0..set.len() {
+            let y_stream = set.adapter(i).apply_batch(&xs, 5).unwrap();
+            let y_merged = merged.adapter(i).apply_batch(&xs, 5).unwrap();
+            for (a, b) in y_stream.iter().zip(&y_merged) {
+                assert!((a - b).abs() < 1e-5, "adapter {i}: {a} vs {b}");
+            }
+        }
+        // merge_all names/weights line up with merged() bases
+        let weights = set.merge_all().unwrap();
+        assert_eq!(
+            weights.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            set.names()
+        );
+        for (i, (_, w)) in weights.iter().enumerate() {
+            assert_eq!(&merged.adapter(i).base().data, &w.data);
+        }
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut rng = Rng::new(63);
+        let c = Circuit::random(&[2usize, 2], &[(0, 1)], 0.1, &mut rng).unwrap();
+        let a = QuantaAdapter::new(Tensor::eye(4), c, 1.0).unwrap();
+        let entries = vec![("wq".to_string(), a.clone()), ("wq".to_string(), a)];
+        assert!(AdapterSet::new(entries).is_err());
+    }
+}

@@ -1,0 +1,702 @@
+//! A minimal pre-LN transformer block hosting per-projection QuanTA
+//! circuits — the paper's headline fine-tuning target (one circuit per
+//! attention projection), reduced to the smallest host model the pure
+//! rust engine can train end to end.
+//!
+//! ```text
+//! x1  = x  + O(attn(Q(h), K(h), V(h))),   h = LN1(x)
+//! out = x1 + W2 · gelu(W1 · LN2(x1) + b1) + b2
+//! ```
+//!
+//! Every base weight — the Q/K/V/O projections, the 2-layer MLP, the
+//! layernorm affines — is **frozen**; the only trainable state is the
+//! [`AdapterSet`] wrapping the four projections
+//! (`y = W x + α (circuit(x) − x)` per projection, identity-initialized
+//! so the block starts exactly at its frozen forward).  Attention is
+//! causal softmax over short sequences; activations flow as row-major
+//! `[n_seqs · seq, d]` panels so the adapters' batched circuit engine
+//! (and its pooled, `QFT_THREADS`-invariant kernels) does all the heavy
+//! lifting.  Attention/layernorm/GELU loops are serial with fixed
+//! ascending accumulation order — `seq` is small by construction, and
+//! serial order keeps the whole block bitwise thread-invariant.
+//!
+//! [`TransformerBlock::backward`] is a full hand-derived reverse pass
+//! (MLP → LN2 → O-adapter → softmax attention → Q/K/V adapters → LN1)
+//! returning flat gate gradients in the [`AdapterSet`] layout plus the
+//! input gradient; `rust/tests/model_props.rs` checks it against
+//! central finite differences through the entire block.
+
+use crate::model::adapter_set::AdapterSet;
+use crate::model::TrainableModel;
+use crate::quanta::circuit::{all_pairs_structure, Circuit};
+use crate::quanta::{CircuitTape, QuantaAdapter};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Layernorm variance floor (the usual 1e-5).
+const LN_EPS: f32 = 1e-5;
+
+/// GELU tanh-approximation constants (`√(2/π)`, the cubic coefficient).
+const GELU_C: f32 = 0.797_884_6;
+const GELU_A: f32 = 0.044_715;
+
+/// Shape of a block: circuit tensorization of the model width, head
+/// count, sequence length, MLP width, and the shared adapter
+/// hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct BlockConfig {
+    /// Tensorization of `d_model` (`d = Π dims`), shared by all four
+    /// projection circuits.
+    pub dims: Vec<usize>,
+    pub n_heads: usize,
+    /// Sequence length; one training example is a whole sequence
+    /// (`seq · d` floats).
+    pub seq: usize,
+    /// MLP hidden width.
+    pub d_ff: usize,
+    /// Gate structure per projection circuit.
+    pub structure: Vec<(usize, usize)>,
+    /// Adapter delta scale `α`, shared by all projections.
+    pub alpha: f32,
+}
+
+impl BlockConfig {
+    /// The paper-default shape: all-pairs structure, `d_ff = 2 d`.
+    pub fn standard(dims: Vec<usize>, n_heads: usize, seq: usize) -> BlockConfig {
+        let d: usize = dims.iter().product();
+        BlockConfig {
+            structure: all_pairs_structure(dims.len()),
+            dims,
+            n_heads,
+            seq,
+            d_ff: 2 * d,
+            alpha: 1.0,
+        }
+    }
+}
+
+/// Everything [`TransformerBlock::backward`] needs: the activations
+/// entering each nonlinearity plus the four adapters' circuit tapes.
+#[derive(Clone, Debug)]
+pub struct BlockTape {
+    pub n_seqs: usize,
+    /// LN1 normalized activations + reciprocal stds.
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    /// Per-projection circuit tapes (Q, K, V on LN1 output; O on ctx).
+    tq: CircuitTape,
+    tk: CircuitTape,
+    tv: CircuitTape,
+    t_o: CircuitTape,
+    /// Projection outputs `[B, d]`.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Softmax rows, `[n_seqs, n_heads, seq, seq]` (strictly causal:
+    /// `probs[t, t'] = 0` for `t' > t`).
+    probs: Vec<f32>,
+    /// LN2 normalized activations + reciprocal stds.
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    /// MLP pre-activation `[B, d_ff]` (GELU and its derivative are
+    /// recomputed from it).
+    u: Vec<f32>,
+}
+
+/// The host model: frozen block weights + the trainable adapter set.
+#[derive(Clone, Debug)]
+pub struct TransformerBlock {
+    d: usize,
+    n_heads: usize,
+    head_dim: usize,
+    seq: usize,
+    d_ff: usize,
+    /// Q/K/V/O adapters, flat-layout order `["wq","wk","wv","wo"]`.
+    adapters: AdapterSet,
+    /// MLP weights (`w1: [d_ff, d]`, `w2: [d, d_ff]`) with cached
+    /// transposes for the row-major batched forward.
+    w1: Tensor,
+    w1_t: Tensor,
+    b1: Vec<f32>,
+    w2: Tensor,
+    w2_t: Tensor,
+    b2: Vec<f32>,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+}
+
+/// Rowwise layernorm over a `[rows, d]` panel; returns `(y, xhat,
+/// rstd)` — the normalized activations and reciprocal stds feed the
+/// backward.  Serial ascending sums: deterministic and thread-free.
+fn layer_norm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut xhat = vec![0.0f32; x.len()];
+    let mut rstd = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            var += (v - mean) * (v - mean);
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            xh[j] = (xr[j] - mean) * rs;
+            yr[j] = gamma[j] * xh[j] + beta[j];
+        }
+    }
+    (y, xhat, rstd)
+}
+
+/// Layernorm backward (frozen affine — no `γ`/`β` gradients):
+/// `dx = rstd · (dŷ − mean(dŷ) − x̂ · mean(dŷ ⊙ x̂))`, `dŷ = dy ⊙ γ`.
+fn layer_norm_backward(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    gamma: &[f32],
+    d: usize,
+) -> Vec<f32> {
+    let rows = dy.len() / d;
+    let mut dx = vec![0.0f32; dy.len()];
+    let mut dxh = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            dxh[j] = dyr[j] * gamma[j];
+            m1 += dxh[j];
+            m2 += dxh[j] * xh[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            dxr[j] = rstd[r] * (dxh[j] - m1 - xh[j] * m2);
+        }
+    }
+    dx
+}
+
+/// GELU (tanh approximation) — smooth, so central finite differences
+/// through the block converge cleanly.
+#[inline]
+fn gelu(u: f32) -> f32 {
+    let g = GELU_C * (u + GELU_A * u * u * u);
+    0.5 * u * (1.0 + g.tanh())
+}
+
+#[inline]
+fn gelu_prime(u: f32) -> f32 {
+    let g = GELU_C * (u + GELU_A * u * u * u);
+    let t = g.tanh();
+    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+impl TransformerBlock {
+    /// Fresh block with random frozen bases (scaled `1/√fan_in`) and
+    /// identity-initialized adapters — the training init: the block's
+    /// step-0 forward is exactly its frozen forward.
+    pub fn init(cfg: &BlockConfig, rng: &mut Rng) -> Result<TransformerBlock> {
+        let d: usize = cfg.dims.iter().product();
+        if cfg.n_heads == 0 || d % cfg.n_heads != 0 {
+            return Err(Error::Config(format!(
+                "block: d {d} not divisible by n_heads {}",
+                cfg.n_heads
+            )));
+        }
+        if cfg.seq == 0 || cfg.d_ff == 0 {
+            return Err(Error::Config(format!(
+                "block: degenerate seq {} / d_ff {}",
+                cfg.seq, cfg.d_ff
+            )));
+        }
+        let proj_std = 1.0 / (d as f32).sqrt();
+        let entries = ["wq", "wk", "wv", "wo"]
+            .iter()
+            .map(|name| {
+                let base = Tensor::randn(&[d, d], proj_std, rng);
+                let a = QuantaAdapter::identity_init(base, &cfg.dims, &cfg.structure, cfg.alpha)?;
+                Ok((name.to_string(), a))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let w1 = Tensor::randn(&[cfg.d_ff, d], proj_std, rng);
+        let w2 = Tensor::randn(&[d, cfg.d_ff], 1.0 / (cfg.d_ff as f32).sqrt(), rng);
+        Ok(TransformerBlock {
+            d,
+            n_heads: cfg.n_heads,
+            head_dim: d / cfg.n_heads,
+            seq: cfg.seq,
+            d_ff: cfg.d_ff,
+            adapters: AdapterSet::new(entries)?,
+            w1_t: w1.t()?,
+            w1,
+            b1: vec![0.0; cfg.d_ff],
+            w2_t: w2.t()?,
+            w2,
+            b2: vec![0.0; d],
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+        })
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    /// The per-projection adapter set (read-only; mutate through
+    /// [`TransformerBlock::set_params`]).
+    pub fn adapters(&self) -> &AdapterSet {
+        &self.adapters
+    }
+
+    /// Re-draw every projection circuit as `eye + N(0, std²)` — how the
+    /// synthetic teacher is built from the shared frozen bases.
+    pub fn randomize_circuits(&mut self, std: f32, rng: &mut Rng) -> Result<()> {
+        let mut parts = Vec::with_capacity(self.adapters.len());
+        for i in 0..self.adapters.len() {
+            let a = self.adapters.adapter(i);
+            let structure: Vec<(usize, usize)> =
+                a.circuit().gates().iter().map(|g| (g.m, g.n)).collect();
+            let c = Circuit::random(a.circuit().dims(), &structure, std, rng)?;
+            let mut flat = Vec::with_capacity(a.param_count());
+            for g in c.gates() {
+                flat.extend_from_slice(&g.mat.data);
+            }
+            parts.push(flat);
+        }
+        let flat = self.adapters.flat_from_parts(&parts)?;
+        self.adapters.set_params(&flat)
+    }
+
+    /// Fold every projection delta into its frozen base
+    /// (`AdapterSet::merge_all`), in flat-layout order.
+    pub fn merge_all(&self) -> Result<Vec<(String, Tensor)>> {
+        self.adapters.merge_all()
+    }
+
+    /// The zero-inference-overhead block: merged projection weights,
+    /// identity circuits — same forward code path, pinned against the
+    /// streaming forward at `1e-5` by `rust/tests/model_props.rs`.
+    pub fn merged(&self) -> Result<TransformerBlock> {
+        let mut out = self.clone();
+        out.adapters = self.adapters.merged()?;
+        Ok(out)
+    }
+
+    fn check_panel(&self, xs: &[f32], n_seqs: usize, what: &str) -> Result<usize> {
+        let want = n_seqs * self.seq * self.d;
+        if xs.len() != want {
+            return Err(Error::Shape(format!(
+                "block {what}: panel len {} != n_seqs {n_seqs} * seq {} * d {}",
+                xs.len(),
+                self.seq,
+                self.d
+            )));
+        }
+        Ok(n_seqs * self.seq)
+    }
+
+    /// Causal softmax attention over per-head slices of `q`/`k`/`v`
+    /// (`[B, d]` panels); returns `(ctx, probs)`.
+    fn attention(&self, q: &[f32], k: &[f32], v: &[f32], n_seqs: usize) -> (Vec<f32>, Vec<f32>) {
+        let (d, hd, seq) = (self.d, self.head_dim, self.seq);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut probs = vec![0.0f32; n_seqs * self.n_heads * seq * seq];
+        let mut ctx = vec![0.0f32; q.len()];
+        let mut scores = vec![0.0f32; seq];
+        for s in 0..n_seqs {
+            for h in 0..self.n_heads {
+                let pbase = (s * self.n_heads + h) * seq * seq;
+                for t in 0..seq {
+                    let row = (s * seq + t) * d + h * hd;
+                    let qrow = &q[row..row + hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (t2, slot) in scores.iter_mut().enumerate().take(t + 1) {
+                        let kr = (s * seq + t2) * d + h * hd;
+                        let krow = &k[kr..kr + hd];
+                        let mut dot = 0.0f32;
+                        for (a, b) in qrow.iter().zip(krow) {
+                            dot += a * b;
+                        }
+                        *slot = dot * scale;
+                        maxv = maxv.max(*slot);
+                    }
+                    let mut denom = 0.0f32;
+                    for slot in scores.iter_mut().take(t + 1) {
+                        *slot = (*slot - maxv).exp();
+                        denom += *slot;
+                    }
+                    let prow = &mut probs[pbase + t * seq..pbase + t * seq + t + 1];
+                    for (p, &e) in prow.iter_mut().zip(scores.iter()) {
+                        *p = e / denom;
+                    }
+                    let crow = &mut ctx[row..row + hd];
+                    for (t2, &p) in prow.iter().enumerate() {
+                        let vr = (s * seq + t2) * d + h * hd;
+                        let vrow = &v[vr..vr + hd];
+                        for (c, &vv) in crow.iter_mut().zip(vrow) {
+                            *c += p * vv;
+                        }
+                    }
+                }
+            }
+        }
+        (ctx, probs)
+    }
+
+    /// Backward through the causal softmax attention: `dctx → (dq, dk,
+    /// dv)` given the taped `probs`/`q`/`k`/`v`.  Same serial loop nest
+    /// as the forward, so gradients are deterministic by construction.
+    fn attention_backward(&self, dctx: &[f32], tape: &BlockTape) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (d, hd, seq) = (self.d, self.head_dim, self.seq);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let (q, k, v, probs) = (&tape.q, &tape.k, &tape.v, &tape.probs);
+        let mut dq = vec![0.0f32; dctx.len()];
+        let mut dk = vec![0.0f32; dctx.len()];
+        let mut dv = vec![0.0f32; dctx.len()];
+        let mut dp = vec![0.0f32; seq];
+        for s in 0..tape.n_seqs {
+            for h in 0..self.n_heads {
+                let pbase = (s * self.n_heads + h) * seq * seq;
+                for t in 0..seq {
+                    let row = (s * seq + t) * d + h * hd;
+                    let drow = &dctx[row..row + hd];
+                    let prow = &probs[pbase + t * seq..pbase + t * seq + t + 1];
+                    // dprobs[t2] = dctx · v(t2); dot = Σ dprobs ⊙ probs
+                    let mut dot = 0.0f32;
+                    for (t2, (slot, &p)) in dp.iter_mut().zip(prow).enumerate() {
+                        let vr = (s * seq + t2) * d + h * hd;
+                        let vrow = &v[vr..vr + hd];
+                        let mut acc = 0.0f32;
+                        for (a, b) in drow.iter().zip(vrow) {
+                            acc += a * b;
+                        }
+                        *slot = acc;
+                        dot += acc * p;
+                    }
+                    for (t2, &p) in prow.iter().enumerate() {
+                        // softmax backward, with the score scale folded in
+                        let ds = p * (dp[t2] - dot) * scale;
+                        let kr = (s * seq + t2) * d + h * hd;
+                        let qrow = &q[row..row + hd];
+                        let krow = &k[kr..kr + hd];
+                        let dqrow = &mut dq[row..row + hd];
+                        for (g, &kv) in dqrow.iter_mut().zip(krow) {
+                            *g += ds * kv;
+                        }
+                        let dkrow = &mut dk[kr..kr + hd];
+                        for (g, &qv) in dkrow.iter_mut().zip(qrow) {
+                            *g += ds * qv;
+                        }
+                        let dvrow = &mut dv[kr..kr + hd];
+                        for (g, &dd) in dvrow.iter_mut().zip(drow) {
+                            *g += p * dd;
+                        }
+                    }
+                }
+            }
+        }
+        (dq, dk, dv)
+    }
+
+    /// MLP forward: `gelu(h2 · W1ᵀ + b1) · W2ᵀ + b2`; returns `(m, u)`
+    /// with `u` the pre-activation the backward differentiates through.
+    fn mlp(&self, h2: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let h2t = Tensor::from_vec(&[rows, self.d], h2.to_vec())?;
+        let mut u = h2t.matmul(&self.w1_t)?.data;
+        for r in 0..rows {
+            let urow = &mut u[r * self.d_ff..(r + 1) * self.d_ff];
+            for (uv, &b) in urow.iter_mut().zip(&self.b1) {
+                *uv += b;
+            }
+        }
+        let a: Vec<f32> = u.iter().map(|&x| gelu(x)).collect();
+        let at = Tensor::from_vec(&[rows, self.d_ff], a)?;
+        let mut m = at.matmul(&self.w2_t)?.data;
+        for r in 0..rows {
+            let mrow = &mut m[r * self.d..(r + 1) * self.d];
+            for (mv, &b) in mrow.iter_mut().zip(&self.b2) {
+                *mv += b;
+            }
+        }
+        Ok((m, u))
+    }
+
+    /// Block forward over `n_seqs` sequences (`xs` row-major
+    /// `[n_seqs · seq, d]`), recording the tape for
+    /// [`TransformerBlock::backward`].
+    pub fn forward_with_tape(&self, xs: &[f32], n_seqs: usize) -> Result<(Vec<f32>, BlockTape)> {
+        let rows = self.check_panel(xs, n_seqs, "forward")?;
+        let (h1, xhat1, rstd1) = layer_norm(xs, &self.ln1_g, &self.ln1_b, self.d);
+        let (q, tq) = self.adapters.adapter(0).forward_with_tape(&h1, rows)?;
+        let (k, tk) = self.adapters.adapter(1).forward_with_tape(&h1, rows)?;
+        let (v, tv) = self.adapters.adapter(2).forward_with_tape(&h1, rows)?;
+        let (ctx, probs) = self.attention(&q, &k, &v, n_seqs);
+        let (attn_out, t_o) = self.adapters.adapter(3).forward_with_tape(&ctx, rows)?;
+        let mut x1 = xs.to_vec();
+        for (o, &a) in x1.iter_mut().zip(&attn_out) {
+            *o += a;
+        }
+        let (h2, xhat2, rstd2) = layer_norm(&x1, &self.ln2_g, &self.ln2_b, self.d);
+        let (m, u) = self.mlp(&h2, rows)?;
+        let mut out = x1; // x1 is not taped (backward rebuilds it from grad_out)
+        for (o, &mv) in out.iter_mut().zip(&m) {
+            *o += mv;
+        }
+        let tape = BlockTape {
+            n_seqs,
+            xhat1,
+            rstd1,
+            tq,
+            tk,
+            tv,
+            t_o,
+            q,
+            k,
+            v,
+            probs,
+            xhat2,
+            rstd2,
+            u,
+        };
+        Ok((out, tape))
+    }
+
+    /// Tape-free forward (validation / parity checks): identical
+    /// arithmetic to [`TransformerBlock::forward_with_tape`] — the
+    /// adapters' tape twins are arithmetic-identical by contract — but
+    /// no activation panels are recorded or kept.
+    pub fn forward(&self, xs: &[f32], n_seqs: usize) -> Result<Vec<f32>> {
+        let rows = self.check_panel(xs, n_seqs, "forward")?;
+        let (h1, _, _) = layer_norm(xs, &self.ln1_g, &self.ln1_b, self.d);
+        let q = self.adapters.adapter(0).apply_batch(&h1, rows)?;
+        let k = self.adapters.adapter(1).apply_batch(&h1, rows)?;
+        let v = self.adapters.adapter(2).apply_batch(&h1, rows)?;
+        let (ctx, _) = self.attention(&q, &k, &v, n_seqs);
+        let attn_out = self.adapters.adapter(3).apply_batch(&ctx, rows)?;
+        let mut x1 = xs.to_vec();
+        for (o, &a) in x1.iter_mut().zip(&attn_out) {
+            *o += a;
+        }
+        let (h2, _, _) = layer_norm(&x1, &self.ln2_g, &self.ln2_b, self.d);
+        let (m, _) = self.mlp(&h2, rows)?;
+        for (o, &mv) in x1.iter_mut().zip(&m) {
+            *o += mv;
+        }
+        Ok(x1)
+    }
+
+    /// Full reverse pass: flat gate gradients (the [`AdapterSet`]
+    /// layout, matching [`TransformerBlock::params_flat`]) plus the
+    /// input gradient `∂loss/∂xs`.
+    pub fn backward(
+        &self,
+        tape: &BlockTape,
+        grad_out: &[f32],
+        n_seqs: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let rows = self.check_panel(grad_out, n_seqs, "backward")?;
+        if tape.n_seqs != n_seqs {
+            return Err(Error::Shape(format!(
+                "block backward: tape has {} sequences, got {n_seqs}",
+                tape.n_seqs
+            )));
+        }
+        // MLP: out = x1 + m(LN2(x1))
+        let dm = Tensor::from_vec(&[rows, self.d], grad_out.to_vec())?;
+        let mut du = dm.matmul(&self.w2)?.data; // da, scaled next by gelu'
+        for (g, &uv) in du.iter_mut().zip(&tape.u) {
+            *g *= gelu_prime(uv);
+        }
+        let dut = Tensor::from_vec(&[rows, self.d_ff], du)?;
+        let dh2 = dut.matmul(&self.w1)?.data;
+        let mut dx1 = layer_norm_backward(&dh2, &tape.xhat2, &tape.rstd2, &self.ln2_g, self.d);
+        for (g, &go) in dx1.iter_mut().zip(grad_out) {
+            *g += go;
+        }
+        // attention branch: x1 = x + O(ctx)
+        let g_o = self.adapters.adapter(3).backward(&tape.t_o, &dx1, rows)?;
+        let (dq, dk, dv) = self.attention_backward(&g_o.input, tape);
+        let g_q = self.adapters.adapter(0).backward(&tape.tq, &dq, rows)?;
+        let g_k = self.adapters.adapter(1).backward(&tape.tk, &dk, rows)?;
+        let g_v = self.adapters.adapter(2).backward(&tape.tv, &dv, rows)?;
+        let mut dh1 = g_q.input;
+        for (g, (&a, &b)) in dh1.iter_mut().zip(g_k.input.iter().zip(&g_v.input)) {
+            *g += a + b;
+        }
+        let mut dx = layer_norm_backward(&dh1, &tape.xhat1, &tape.rstd1, &self.ln1_g, self.d);
+        for (g, &a) in dx.iter_mut().zip(&dx1) {
+            *g += a;
+        }
+        let flat = self.adapters.flat_from_parts(&[
+            g_q.gates.into_iter().flatten().collect(),
+            g_k.gates.into_iter().flatten().collect(),
+            g_v.gates.into_iter().flatten().collect(),
+            g_o.gates.into_iter().flatten().collect(),
+        ])?;
+        Ok((flat, dx))
+    }
+}
+
+impl TrainableModel for TransformerBlock {
+    type Tape = BlockTape;
+
+    fn io_len(&self) -> usize {
+        self.seq * self.d
+    }
+
+    fn param_count(&self) -> usize {
+        self.adapters.param_count()
+    }
+
+    fn params_flat(&self) -> Vec<f32> {
+        self.adapters.params_flat()
+    }
+
+    fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        self.adapters.set_params(flat)
+    }
+
+    fn forward(&self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
+        TransformerBlock::forward(self, xs, n)
+    }
+
+    fn forward_with_tape(&self, xs: &[f32], n: usize) -> Result<(Vec<f32>, BlockTape)> {
+        TransformerBlock::forward_with_tape(self, xs, n)
+    }
+
+    fn backward_flat(&self, tape: &BlockTape, grad_out: &[f32], n: usize) -> Result<Vec<f32>> {
+        Ok(self.backward(tape, grad_out, n)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_block(rng: &mut Rng) -> TransformerBlock {
+        let cfg = BlockConfig::standard(vec![2, 2], 2, 3);
+        TransformerBlock::init(&cfg, rng).unwrap()
+    }
+
+    #[test]
+    fn identity_adapters_make_merge_exact() {
+        // identity circuits ⇒ merged weights == bases and the merged
+        // block's forward is bitwise the original forward
+        let mut rng = Rng::new(80);
+        let block = tiny_block(&mut rng);
+        let merged = block.merged().unwrap();
+        let mut xs = vec![0.0f32; 2 * block.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let y = block.forward(&xs, 2).unwrap();
+        let ym = merged.forward(&xs, 2).unwrap();
+        for (a, b) in y.iter().zip(&ym) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_tape_free_matches() {
+        let mut rng = Rng::new(81);
+        let mut block = tiny_block(&mut rng);
+        block.randomize_circuits(0.3, &mut rng).unwrap();
+        let mut xs = vec![0.0f32; 3 * block.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let (y1, tape) = block.forward_with_tape(&xs, 3).unwrap();
+        let y2 = block.forward(&xs, 3).unwrap();
+        assert_eq!(y1, y2);
+        assert_eq!(tape.probs.len(), 3 * block.n_heads() * 9);
+        // causal: strictly-upper probs are exactly zero, rows sum to 1
+        let seq = block.seq();
+        for (si, chunk) in tape.probs.chunks(seq * seq).enumerate() {
+            for t in 0..seq {
+                let mut sum = 0.0f64;
+                for t2 in 0..seq {
+                    let p = chunk[t * seq + t2];
+                    if t2 > t {
+                        assert_eq!(p, 0.0, "head {si} row {t} leaks future position {t2}");
+                    }
+                    sum += p as f64;
+                }
+                assert!((sum - 1.0).abs() < 1e-5, "head {si} row {t} sums to {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_circuits_change_output_identity_init_does_not() {
+        let mut rng = Rng::new(82);
+        let mut block = tiny_block(&mut rng);
+        let mut xs = vec![0.0f32; 2 * block.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let y0 = block.forward(&xs, 2).unwrap();
+        let frozen = block.merged().unwrap(); // identity merge == bases
+        let yf = frozen.forward(&xs, 2).unwrap();
+        for (a, b) in y0.iter().zip(&yf) {
+            assert!((a - b).abs() < 1e-6, "identity init must match frozen forward");
+        }
+        block.randomize_circuits(0.4, &mut rng).unwrap();
+        let y1 = block.forward(&xs, 2).unwrap();
+        assert!(y0.iter().zip(&y1).any(|(a, b)| (a - b).abs() > 1e-4));
+    }
+
+    #[test]
+    fn params_roundtrip_through_adapter_set() {
+        let mut rng = Rng::new(83);
+        let mut block = tiny_block(&mut rng);
+        block.randomize_circuits(0.2, &mut rng).unwrap();
+        let p = block.params_flat();
+        assert_eq!(p.len(), block.param_count());
+        assert_eq!(block.adapters().len(), 4);
+        let mut xs = vec![0.0f32; block.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let y0 = block.forward(&xs, 1).unwrap();
+        let mut p2 = p.clone();
+        p2[0] += 0.5;
+        block.set_params(&p2).unwrap();
+        assert!(block
+            .forward(&xs, 1)
+            .unwrap()
+            .iter()
+            .zip(&y0)
+            .any(|(a, b)| (a - b).abs() > 1e-6));
+        block.set_params(&p).unwrap();
+        assert_eq!(block.forward(&xs, 1).unwrap(), y0);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut rng = Rng::new(84);
+        let block = tiny_block(&mut rng);
+        assert!(block.forward(&[0.0; 7], 1).is_err());
+        let cfg = BlockConfig::standard(vec![2, 2], 3, 4); // 4 % 3 != 0
+        assert!(TransformerBlock::init(&cfg, &mut rng).is_err());
+        let cfg0 = BlockConfig { seq: 0, ..BlockConfig::standard(vec![2, 2], 2, 4) };
+        assert!(TransformerBlock::init(&cfg0, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Host models built on the pure-rust QuanTA engine (DESIGN.md §9).
+//!
+//! The gradient engine (`quanta::grad`) trains one circuit; this layer
+//! assembles circuits into *models*: [`AdapterSet`] puts any number of
+//! per-projection adapters behind one flat optimizer layout with stable
+//! offsets, and [`TransformerBlock`] is a minimal pre-LN transformer
+//! block (frozen Q/K/V/O + MLP + layernorms, causal softmax attention)
+//! whose four projections are QuanTA-adapted — the paper's
+//! one-circuit-per-attention-projection fine-tuning setup, end to end
+//! on the host engine.
+//!
+//! [`TrainableModel`] is the contract the host trainer
+//! (`coordinator::host_trainer::finetune_host`) drives: a flat
+//! parameter view, a forward that records a tape, and a backward that
+//! returns gradients in the same flat layout.  The single
+//! [`QuantaAdapter`] and the full block implement it, so the same Adam
+//! / LR-schedule / clipping / best-checkpoint loop trains either.
+
+pub mod adapter_set;
+pub mod block;
+
+pub use adapter_set::AdapterSet;
+pub use block::{BlockConfig, BlockTape, TransformerBlock};
+
+use crate::quanta::{CircuitTape, QuantaAdapter};
+use crate::util::error::Result;
+
+/// What the host trainer needs from a model: a flat parameter vector
+/// (stable layout), a tape-recording forward over `n` examples, and a
+/// backward producing flat gradients in the parameter layout.  Inputs
+/// and outputs are row-major panels of `n · io_len()` floats.
+pub trait TrainableModel {
+    /// Opaque activation record handed from forward to backward.
+    type Tape;
+
+    /// Floats per example (input and output panels share this width).
+    fn io_len(&self) -> usize;
+
+    /// Trainable parameter count (`params_flat().len()`).
+    fn param_count(&self) -> usize;
+
+    /// Flat parameter vector — the optimizer layout.
+    fn params_flat(&self) -> Vec<f32>;
+
+    /// Write a flat parameter vector back (must round-trip with
+    /// [`TrainableModel::params_flat`] exactly).
+    fn set_params(&mut self, flat: &[f32]) -> Result<()>;
+
+    /// Tape-free forward over `n` examples (validation path).
+    fn forward(&self, xs: &[f32], n: usize) -> Result<Vec<f32>>;
+
+    /// Forward over `n` examples, recording the activation tape.
+    fn forward_with_tape(&self, xs: &[f32], n: usize) -> Result<(Vec<f32>, Self::Tape)>;
+
+    /// Gradient of the loss w.r.t. the flat parameters, given
+    /// `∂loss/∂output` over the forward's panel.
+    fn backward_flat(&self, tape: &Self::Tape, grad_out: &[f32], n: usize) -> Result<Vec<f32>>;
+}
+
+/// The single free-standing adapter is the degenerate one-projection
+/// model — `finetune_host` drives it unchanged through this impl.
+impl TrainableModel for QuantaAdapter {
+    type Tape = CircuitTape;
+
+    fn io_len(&self) -> usize {
+        self.d()
+    }
+
+    fn param_count(&self) -> usize {
+        QuantaAdapter::param_count(self)
+    }
+
+    fn params_flat(&self) -> Vec<f32> {
+        QuantaAdapter::params_flat(self)
+    }
+
+    fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        QuantaAdapter::set_params(self, flat)
+    }
+
+    fn forward(&self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.apply_batch(xs, n)
+    }
+
+    fn forward_with_tape(&self, xs: &[f32], n: usize) -> Result<(Vec<f32>, CircuitTape)> {
+        QuantaAdapter::forward_with_tape(self, xs, n)
+    }
+
+    fn backward_flat(&self, tape: &CircuitTape, grad_out: &[f32], n: usize) -> Result<Vec<f32>> {
+        // gate gradients only — the trainer never consumes ∂loss/∂x
+        self.backward_gates(tape, grad_out, n)
+    }
+}

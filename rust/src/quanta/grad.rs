@@ -32,10 +32,48 @@
 //! no longer depend on the worker count, all gradients are bitwise
 //! identical for any `QFT_THREADS` (PR 2 only guaranteed this for a
 //! fixed thread count).
+//!
+//! **Gate sharding** (this PR): the bulk path keeps one private
+//! `Σ_α dmn²` accumulator block per chunk — all gates, all chunks,
+//! live at once.  For circuits with wide (fused) gates that footprint
+//! is the training-memory ceiling (`n_chunks · Σ dmn²` floats; at
+//! d = 4096 all-pairs, 8 MB per gate per 32-vector batch).  When a
+//! gate's `∂F` accumulator exceeds the shard threshold
+//! ([`grad_shard_threshold`]: `QFT_GRAD_SHARD` env, default derived
+//! from the plan shape `dmn·rest = d`, floored at [`GRAD_SHARD_MIN`]),
+//! the backward switches to a **gate-major sweep**: per fused gate
+//! (last to first), workers claim `(gate, column-block)` shards —
+//! the same fixed vector chunks the bulk path uses — accumulate
+//! worker-local `∂F` partials, and the submitter reduces them in
+//! ascending shard order before a second region applies the
+//! transpose-gate transform.  Only **one** gate's partials are alive
+//! at a time, so arbitrarily wide gates train at full parallelism;
+//! and because shard boundaries and reduction order are identical to
+//! the bulk path's chunk model, sharded and unsharded backward are
+//! **bitwise equal**, and both remain `QFT_THREADS`-invariant
+//! (`rust/tests/model_props.rs` pins both).
 
 use crate::compute::pool;
 use crate::quanta::plan::{CircuitPlan, GatePlan, Scratch, BLOCK_COLS};
 use crate::util::error::{Error, Result};
+
+/// Floor of the derived gate-shard threshold: gates whose `∂F`
+/// accumulator is at most this many entries never shard (the extra
+/// per-gate region dispatch would cost more than the memory saved).
+pub const GRAD_SHARD_MIN: usize = 4096;
+
+/// Accumulator-entry threshold above which a fused gate's `∂F`
+/// accumulation is sharded gate-major (see module docs).  `QFT_GRAD_SHARD`
+/// overrides (`0` disables sharding); the default derives from the plan
+/// shape: `dmn·rest = d` — a gate shards once its accumulator outgrows
+/// one hidden vector — floored at [`GRAD_SHARD_MIN`].
+pub fn grad_shard_threshold(d: usize) -> usize {
+    match std::env::var("QFT_GRAD_SHARD").ok().and_then(|s| s.parse::<usize>().ok()) {
+        Some(0) => usize::MAX,
+        Some(v) => v,
+        None => d.max(GRAD_SHARD_MIN),
+    }
+}
 
 /// Per-gate forward activations recorded by
 /// [`CircuitPlan::apply_batch_with_tape`]: `inputs[α]` is the hidden
@@ -101,11 +139,12 @@ impl CircuitPlan {
         }
         let (chunk_vecs, n_chunks) = self.chunking(batch);
         if n_chunks <= 1 {
-            let mut scratch = self.scratch();
-            for (g, dst) in self.gates.iter().zip(tape.iter_mut()) {
-                dst.copy_from_slice(&h);
-                self.apply_gate_chunk(g, &mut h, batch, &mut scratch);
-            }
+            self.with_scratch(|scratch| {
+                for (g, dst) in self.gates.iter().zip(tape.iter_mut()) {
+                    dst.copy_from_slice(&h);
+                    self.apply_gate_chunk(g, &mut h, batch, scratch);
+                }
+            });
         } else {
             let chunk_len = chunk_vecs * self.d;
             let h_chunks = pool::DisjointChunks::new(&mut h, chunk_len);
@@ -116,12 +155,13 @@ impl CircuitPlan {
                 // the per-gate tape chunks are disjoint the same way.
                 let chunk = unsafe { h_chunks.slice(i) };
                 let cb = chunk.len() / self.d;
-                let mut scratch = self.scratch();
-                for (g, t) in self.gates.iter().zip(&tape_chunks) {
-                    let dst = unsafe { t.slice(i) };
-                    dst.copy_from_slice(chunk);
-                    self.apply_gate_chunk(g, chunk, cb, &mut scratch);
-                }
+                self.with_scratch(|scratch| {
+                    for (g, t) in self.gates.iter().zip(&tape_chunks) {
+                        let dst = unsafe { t.slice(i) };
+                        dst.copy_from_slice(chunk);
+                        self.apply_gate_chunk(g, chunk, cb, scratch);
+                    }
+                });
             });
         }
         Ok((h, CircuitTape { batch, inputs: tape }))
@@ -156,8 +196,9 @@ impl CircuitPlan {
         }
         let (chunk_vecs, n_chunks) = self.chunking(batch);
         if n_chunks <= 1 {
-            let mut scratch = self.scratch();
-            self.tape_residual_chunk(xs, out, batch, alpha, &mut tape, 0, &mut scratch);
+            self.with_scratch(|scratch| {
+                self.tape_residual_chunk(xs, out, batch, alpha, &mut tape, 0, scratch)
+            });
         } else {
             let chunk_len = chunk_vecs * self.d;
             let out_chunks = pool::DisjointChunks::new(out, chunk_len);
@@ -169,10 +210,11 @@ impl CircuitPlan {
                 let x0 = i * chunk_len;
                 let x = &xs[x0..x0 + o.len()];
                 let cb = o.len() / self.d;
-                let mut scratch = self.scratch();
                 let mut slots: Vec<&mut [f32]> =
                     tape_chunks.iter().map(|t| unsafe { t.slice(i) }).collect();
-                self.tape_residual_slots(x, o, cb, alpha, &mut slots, &mut scratch);
+                self.with_scratch(|scratch| {
+                    self.tape_residual_slots(x, o, cb, alpha, &mut slots, scratch)
+                });
             });
         }
         Ok(CircuitTape { batch, inputs: tape })
@@ -232,12 +274,34 @@ impl CircuitPlan {
 
     /// Backward of `scale · grad_out` with the scaling fused into the
     /// initial gradient copy (the adapter uses this for its `α` factor
-    /// — one pass instead of scale-then-copy).
+    /// — one pass instead of scale-then-copy).  Gates whose `∂F`
+    /// accumulator exceeds [`grad_shard_threshold`] go through the
+    /// gate-sharded sweep (bitwise-equal; see module docs).
     pub fn backward_scaled(
         &self,
         tape: &CircuitTape,
         grad_out: &[f32],
         scale: f32,
+    ) -> Result<CircuitGrads> {
+        self.backward_with_shard(tape, grad_out, scale, grad_shard_threshold(self.d))
+    }
+
+    /// [`CircuitPlan::backward_scaled`] with an explicit shard
+    /// threshold (accumulator entries): `usize::MAX` forces the bulk
+    /// all-gates-one-region path, `1` forces every gate through the
+    /// sharded gate-major sweep.  Both produce bitwise-identical
+    /// gradients — the explicit knob exists so tests and the
+    /// `shard_sweep` bench can pin that equality and price the
+    /// dispatch difference.  Panels that [`CircuitPlan::chunking`]
+    /// leaves in a single chunk run the serial kernel regardless of
+    /// the threshold (there is nothing to shard across one executor);
+    /// coverage tests must pick shapes that actually fan out.
+    pub fn backward_with_shard(
+        &self,
+        tape: &CircuitTape,
+        grad_out: &[f32],
+        scale: f32,
+        shard_threshold: usize,
     ) -> Result<CircuitGrads> {
         let batch = tape.batch;
         if grad_out.len() != batch * self.d {
@@ -293,16 +357,18 @@ impl CircuitPlan {
             self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect();
         let (chunk_vecs, n_chunks) = self.chunking(batch);
         if n_chunks <= 1 {
-            let mut scratch = GradScratch::new(self);
-            let tape_refs: Vec<&[f32]> = tape.inputs.iter().map(|t| t.as_slice()).collect();
-            self.backward_chunk(&mut g, &tape_refs, batch, &mut fused_grads, &mut scratch);
-        } else {
-            // Vectors stay independent through the reverse chain, so the
-            // input gradient uses the same fixed chunks as the forward.
-            // Fused-gate gradients sum over vectors: each chunk owns a
-            // private accumulator, reduced afterwards in ascending chunk
-            // order — chunk boundaries are problem-shaped, so the
-            // reduction (and every output bit) is QFT_THREADS-invariant.
+            self.with_grad_scratch(|scratch| {
+                let tape_refs: Vec<&[f32]> = tape.inputs.iter().map(|t| t.as_slice()).collect();
+                self.backward_chunk(&mut g, &tape_refs, batch, &mut fused_grads, scratch);
+            });
+        } else if self.gates.iter().all(|gp| gp.dmn * gp.dmn <= shard_threshold) {
+            // Bulk path — vectors stay independent through the reverse
+            // chain, so the input gradient uses the same fixed chunks as
+            // the forward.  Fused-gate gradients sum over vectors: each
+            // chunk owns a private accumulator (for every gate at once),
+            // reduced afterwards in ascending chunk order — chunk
+            // boundaries are problem-shaped, so the reduction (and every
+            // output bit) is QFT_THREADS-invariant.
             let chunk_len = chunk_vecs * self.d;
             let mut partials: Vec<Vec<Vec<f32>>> = (0..n_chunks)
                 .map(|_| self.gates.iter().map(|gp| vec![0.0f32; gp.dmn * gp.dmn]).collect())
@@ -320,8 +386,9 @@ impl CircuitPlan {
                     .iter()
                     .map(|t| &t[i * chunk_len..i * chunk_len + chunk.len()])
                     .collect();
-                let mut scratch = GradScratch::new(self);
-                self.backward_chunk(chunk, &tape_chunks, cb, partial, &mut scratch);
+                self.with_grad_scratch(|scratch| {
+                    self.backward_chunk(chunk, &tape_chunks, cb, partial, scratch)
+                });
             });
             for partial in &partials {
                 for (acc, p) in fused_grads.iter_mut().zip(partial) {
@@ -330,12 +397,109 @@ impl CircuitPlan {
                     }
                 }
             }
+        } else {
+            self.backward_sharded(
+                &mut g,
+                tape,
+                chunk_vecs,
+                n_chunks,
+                shard_threshold,
+                &mut fused_grads,
+            );
         }
         // unfuse ∂F back onto the original gates (serial, deterministic)
         for (gp, dmat) in self.gates.iter().zip(fused_grads) {
             gp.unfuse_grads(dmat, &mut gate_grads);
         }
         Ok(CircuitGrads { gates: gate_grads, input: g })
+    }
+
+    /// Gate-major sharded reverse sweep (see module docs): per fused
+    /// gate, last to first, accumulate `∂F` over `(gate, column-block)`
+    /// shard claims — the same fixed vector chunks as the bulk path —
+    /// then transform the upstream gradient in a second region.  Only
+    /// one gate's worker-local partials are alive at a time; the
+    /// reduction runs in ascending shard order, so every output bit
+    /// matches the bulk path and is `QFT_THREADS`-invariant.
+    fn backward_sharded(
+        &self,
+        g: &mut [f32],
+        tape: &CircuitTape,
+        chunk_vecs: usize,
+        n_chunks: usize,
+        shard_threshold: usize,
+        fused_grads: &mut [Vec<f32>],
+    ) {
+        let chunk_len = chunk_vecs * self.d;
+        for ai in (0..self.gates.len()).rev() {
+            let gp = &self.gates[ai];
+            let hin = &tape.inputs[ai];
+            let mut partials: Vec<Vec<f32>> =
+                (0..n_chunks).map(|_| vec![0.0f32; gp.dmn * gp.dmn]).collect();
+            let partial_slots = pool::DisjointChunks::new(&mut partials, 1);
+            if gp.dmn * gp.dmn > shard_threshold {
+                // region A: ∂F shard claims; `g` is read-only here, so
+                // shards share it (and the taped panel) immutably
+                let g_ro: &[f32] = g;
+                pool::run(n_chunks, |i| {
+                    // SAFETY: each shard index is claimed exactly once.
+                    let slot = unsafe { partial_slots.slice(i) };
+                    let start = i * chunk_len;
+                    let end = (start + chunk_len).min(g_ro.len());
+                    let cb = (end - start) / self.d;
+                    self.with_grad_scratch(|scratch| {
+                        self.accumulate_gate_dmat_chunk(
+                            gp,
+                            &g_ro[start..end],
+                            &hin[start..end],
+                            cb,
+                            &mut slot[0],
+                            scratch,
+                        )
+                    });
+                });
+                // region B: transpose-gate transform, per-vector chunks
+                // (chunk-independent, like the forward)
+                let g_chunks = pool::DisjointChunks::new(&mut *g, chunk_len);
+                pool::run(n_chunks, |i| {
+                    // SAFETY: each chunk index is claimed exactly once.
+                    let chunk = unsafe { g_chunks.slice(i) };
+                    let cb = chunk.len() / self.d;
+                    self.with_grad_scratch(|scratch| {
+                        self.transform_gate_chunk(gp, chunk, cb, scratch)
+                    });
+                });
+            } else {
+                // narrow gate inside a sharded sweep: combined ∂F +
+                // transform in one region — identical arithmetic to the
+                // bulk path's per-chunk visit of this gate
+                let g_chunks = pool::DisjointChunks::new(&mut *g, chunk_len);
+                pool::run(n_chunks, |i| {
+                    // SAFETY: each chunk index is claimed exactly once.
+                    let chunk = unsafe { g_chunks.slice(i) };
+                    let slot = unsafe { partial_slots.slice(i) };
+                    let start = i * chunk_len;
+                    let cb = chunk.len() / self.d;
+                    self.with_grad_scratch(|scratch| {
+                        self.backward_gate_chunk(
+                            gp,
+                            chunk,
+                            &hin[start..start + chunk.len()],
+                            cb,
+                            &mut slot[0],
+                            scratch,
+                        )
+                    });
+                });
+            }
+            // fixed shard order: ascending chunk index — the same
+            // reduction tree as the bulk path's per-gate sum
+            for p in &partials {
+                for (a, &v) in fused_grads[ai].iter_mut().zip(p) {
+                    *a += v;
+                }
+            }
+        }
     }
 
     /// Reverse sweep over one chunk of `cb` vectors: for fused gate `α`
@@ -369,20 +533,13 @@ impl CircuitPlan {
         dmat: &mut [f32],
         scratch: &mut GradScratch,
     ) {
-        let d = self.d;
         let dmn = gp.dmn;
-        let rest_len = gp.rest.len();
-        let ncols = cb * rest_len;
+        let ncols = cb * gp.rest.len();
         let bw = BLOCK_COLS;
         let mut c0 = 0;
         while c0 < ncols {
             let w = bw.min(ncols - c0);
-            for ci in 0..w {
-                let col = c0 + ci;
-                let b = col / rest_len;
-                let r = col - b * rest_len;
-                scratch.bases[ci] = b * d + gp.rest[r];
-            }
+            self.fill_bases(gp, c0, w, &mut scratch.bases);
             let bases = &scratch.bases[..w];
             // gather gy from the upstream gradient and gx from the
             // taped forward input (contiguous writes per gate row)
@@ -432,10 +589,120 @@ impl CircuitPlan {
             c0 += w;
         }
     }
+
+    /// The `∂F` half of [`CircuitPlan::backward_gate_chunk`]: gather
+    /// `gy`/`gx` and accumulate the outer-product GEMM, leaving the
+    /// upstream gradient untouched — the sharded sweep's region A.
+    /// Block walk and accumulation order are identical to the combined
+    /// kernel, so the split cannot change any bit.
+    fn accumulate_gate_dmat_chunk(
+        &self,
+        gp: &GatePlan,
+        g: &[f32],
+        hin: &[f32],
+        cb: usize,
+        dmat: &mut [f32],
+        scratch: &mut GradScratch,
+    ) {
+        let dmn = gp.dmn;
+        let ncols = cb * gp.rest.len();
+        let bw = BLOCK_COLS;
+        let mut c0 = 0;
+        while c0 < ncols {
+            let w = bw.min(ncols - c0);
+            self.fill_bases(gp, c0, w, &mut scratch.bases);
+            let bases = &scratch.bases[..w];
+            for (k, &off) in gp.gather.iter().enumerate() {
+                let gy_row = &mut scratch.gy[k * bw..k * bw + w];
+                for (slot, &base) in gy_row.iter_mut().zip(bases) {
+                    *slot = g[base + off];
+                }
+                let gx_row = &mut scratch.gx[k * bw..k * bw + w];
+                for (slot, &base) in gx_row.iter_mut().zip(bases) {
+                    *slot = hin[base + off];
+                }
+            }
+            for i in 0..dmn {
+                let gy_row = &scratch.gy[i * bw..i * bw + w];
+                let drow = &mut dmat[i * dmn..(i + 1) * dmn];
+                for (p, dv) in drow.iter_mut().enumerate() {
+                    let gx_row = &scratch.gx[p * bw..p * bw + w];
+                    let mut acc = 0.0f32;
+                    for (a, b) in gy_row.iter().zip(gx_row) {
+                        acc += a * b;
+                    }
+                    *dv += acc;
+                }
+            }
+            c0 += w;
+        }
+    }
+
+    /// The transpose-gate half of [`CircuitPlan::backward_gate_chunk`]:
+    /// `g ← scatter(Fᵀ · gather(g))` — the sharded sweep's region B.
+    /// Reads the same (still untransformed) `gy` panels as region A:
+    /// scatters only touch the gate's own column footprint, so the
+    /// two-pass split sees exactly the values the combined kernel saw.
+    fn transform_gate_chunk(
+        &self,
+        gp: &GatePlan,
+        g: &mut [f32],
+        cb: usize,
+        scratch: &mut GradScratch,
+    ) {
+        let dmn = gp.dmn;
+        let ncols = cb * gp.rest.len();
+        let bw = BLOCK_COLS;
+        let mut c0 = 0;
+        while c0 < ncols {
+            let w = bw.min(ncols - c0);
+            self.fill_bases(gp, c0, w, &mut scratch.bases);
+            let bases = &scratch.bases[..w];
+            for (k, &off) in gp.gather.iter().enumerate() {
+                let gy_row = &mut scratch.gy[k * bw..k * bw + w];
+                for (slot, &base) in gy_row.iter_mut().zip(bases) {
+                    *slot = g[base + off];
+                }
+            }
+            scratch.prod[..dmn * bw].fill(0.0);
+            for i in 0..dmn {
+                let gy_row = &scratch.gy[i * bw..i * bw + w];
+                let arow = &gp.mat[i * dmn..(i + 1) * dmn];
+                for (p, &a) in arow.iter().enumerate() {
+                    let prow = &mut scratch.prod[p * bw..p * bw + w];
+                    for (o, &x) in prow.iter_mut().zip(gy_row) {
+                        *o += a * x;
+                    }
+                }
+            }
+            for (k, &off) in gp.gather.iter().enumerate() {
+                let row = &scratch.prod[k * bw..k * bw + w];
+                for (&val, &base) in row.iter().zip(bases) {
+                    g[base + off] = val;
+                }
+            }
+            c0 += w;
+        }
+    }
+
+    /// Run `f` with this thread's cached backward scratch, grown (never
+    /// shrunk) to this plan's widest gate — the backward twin of
+    /// [`CircuitPlan::with_scratch`].
+    fn with_grad_scratch<R>(&self, f: impl FnOnce(&mut GradScratch) -> R) -> R {
+        BWD_SCRATCH.with(|cell| {
+            let mut s = cell.take().unwrap_or_else(GradScratch::empty);
+            s.ensure(self.max_dmn);
+            let r = f(&mut s);
+            cell.set(Some(s));
+            r
+        })
+    }
 }
 
 /// Per-worker backward buffers, sized for the plan's widest gate (same
-/// no-allocation-in-the-gate-loop contract as the forward `Scratch`).
+/// no-allocation-in-the-gate-loop contract as the forward `Scratch`,
+/// and the same thread-local grow-only reuse — no cross-chunk state:
+/// every region read within a block is written first).
 struct GradScratch {
     /// Gathered upstream-gradient panel, `(dmn, BLOCK_COLS)`.
     gy: Vec<f32>,
@@ -447,14 +714,29 @@ struct GradScratch {
 }
 
 impl GradScratch {
-    fn new(plan: &CircuitPlan) -> GradScratch {
+    fn empty() -> GradScratch {
         GradScratch {
-            gy: vec![0.0; plan.max_dmn * BLOCK_COLS],
-            gx: vec![0.0; plan.max_dmn * BLOCK_COLS],
-            prod: vec![0.0; plan.max_dmn * BLOCK_COLS],
+            gy: Vec::new(),
+            gx: Vec::new(),
+            prod: Vec::new(),
             bases: vec![0; BLOCK_COLS],
         }
     }
+
+    fn ensure(&mut self, max_dmn: usize) {
+        let need = max_dmn * BLOCK_COLS;
+        if self.gy.len() < need {
+            self.gy.resize(need, 0.0);
+            self.gx.resize(need, 0.0);
+            self.prod.resize(need, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    /// Per-executor backward scratch (take/put-back like the forward's).
+    static BWD_SCRATCH: std::cell::Cell<Option<GradScratch>> =
+        const { std::cell::Cell::new(None) };
 }
 
 #[cfg(test)]
@@ -617,6 +899,38 @@ mod tests {
         let g2 = plan.backward_scaled(&tape, &w, alpha).unwrap();
         assert_eq!(g1.input, g2.input);
         assert_eq!(g1.gates, g2.gates);
+    }
+
+    #[test]
+    fn sharded_backward_matches_bulk_bitwise() {
+        let mut rng = Rng::new(76);
+        // [4,4,8] at batch 48 fans out to multiple pool chunks, so the
+        // shard claims and the bulk chunks genuinely both run
+        let c = Circuit::random(&[4usize, 4, 8], &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+        let plan = c.plan().unwrap();
+        let d = plan.d;
+        let batch = 48;
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut w, 1.0);
+        // guard: a single-chunk panel would run the serial kernel on
+        // both sides and the comparison below would be vacuous
+        let (_, n_chunks) = plan.chunking(batch);
+        assert!(n_chunks > 1, "shard test shape must fan out, got {n_chunks} chunk(s)");
+        let (_, tape) = plan.apply_batch_with_tape(&xs, batch).unwrap();
+        let bulk = plan.backward_with_shard(&tape, &w, 1.0, usize::MAX).unwrap();
+        let sharded = plan.backward_with_shard(&tape, &w, 1.0, 1).unwrap();
+        assert_eq!(bulk.gates, sharded.gates, "sharded gate grads diverged");
+        assert_eq!(bulk.input, sharded.input, "sharded input grads diverged");
+        // mixed sweep: only gates wider than 16·16 entries shard
+        let mixed = plan.backward_with_shard(&tape, &w, 1.0, 16 * 16).unwrap();
+        assert_eq!(bulk.gates, mixed.gates);
+        assert_eq!(bulk.input, mixed.input);
+        // the env-derived default threshold lands on the same bits
+        let default = plan.backward(&tape, &w).unwrap();
+        assert_eq!(bulk.gates, default.gates);
+        assert_eq!(bulk.input, default.input);
     }
 
     #[test]

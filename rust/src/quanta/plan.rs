@@ -150,11 +150,42 @@ pub struct CircuitPlan {
 /// Reusable gather/product buffers for one worker; sized for the widest
 /// gate so no allocation happens inside the gate loop.  Internal to the
 /// engine: workers (including the tape forward in `quanta::grad`)
-/// create one via [`CircuitPlan::scratch`].
+/// borrow one via [`CircuitPlan::with_scratch`], which serves a
+/// **thread-local grow-only cache** — executors stop paying an
+/// alloc+memset per pool chunk (a few percent of the hot path with
+/// 1-vector chunks at large `d`).  Scratch carries no cross-chunk
+/// state: every buffer region is fully written before it is read
+/// within a block, so reuse cannot change any output bit
+/// (`rust/tests/pool_props.rs` asserts this by interleaving circuits
+/// of different widths on the same workers).
 pub(crate) struct Scratch {
     gathered: Vec<f32>,
     product: Vec<f32>,
     bases: Vec<usize>,
+}
+
+impl Scratch {
+    fn empty() -> Scratch {
+        Scratch { gathered: Vec::new(), product: Vec::new(), bases: vec![0; BLOCK_COLS] }
+    }
+
+    /// Grow-only: widen the panels to `max_dmn` gate rows if the cached
+    /// buffers are narrower (never shrinks, so alternating plans don't
+    /// thrash).
+    fn ensure(&mut self, max_dmn: usize) {
+        let need = max_dmn * BLOCK_COLS;
+        if self.gathered.len() < need {
+            self.gathered.resize(need, 0.0);
+            self.product.resize(need, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    /// Per-executor forward scratch.  `Cell<Option<…>>` + take/put-back
+    /// instead of `RefCell` so a (hypothetical) nested borrow allocates
+    /// fresh rather than panicking.
+    static FWD_SCRATCH: std::cell::Cell<Option<Scratch>> = const { std::cell::Cell::new(None) };
 }
 
 /// Row-major strides for `dims`.
@@ -486,13 +517,17 @@ impl CircuitPlan {
         Ok(CircuitPlan { d, dims, strides, gates, max_dmn, sum_dmn })
     }
 
-    /// Fresh scratch sized for this plan's widest gate.
-    pub(crate) fn scratch(&self) -> Scratch {
-        Scratch {
-            gathered: vec![0.0; self.max_dmn * BLOCK_COLS],
-            product: vec![0.0; self.max_dmn * BLOCK_COLS],
-            bases: vec![0; BLOCK_COLS],
-        }
+    /// Run `f` with this thread's cached scratch, grown (never shrunk)
+    /// to this plan's widest gate.  The executor pays a pair of `Cell`
+    /// moves per chunk instead of an alloc+memset.
+    pub(crate) fn with_scratch<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        FWD_SCRATCH.with(|cell| {
+            let mut s = cell.take().unwrap_or_else(Scratch::empty);
+            s.ensure(self.max_dmn);
+            let r = f(&mut s);
+            cell.set(Some(s));
+            r
+        })
     }
 
     /// Multiply count of one chain application (paper §6; fused gates
@@ -587,21 +622,20 @@ impl CircuitPlan {
         }
         let (chunk_vecs, n_chunks) = self.chunking(batch);
         if n_chunks <= 1 {
-            let mut scratch = self.scratch();
-            self.apply_chain_chunk(h, batch, &mut scratch);
+            self.with_scratch(|scratch| self.apply_chain_chunk(h, batch, scratch));
             return;
         }
         // Vectors are independent through the whole chain, so the panel
-        // splits into fixed chunks of whole vectors; each executor owns
-        // its scratch.  Per-vector arithmetic does not depend on the
-        // chunking, so results are identical for any worker count.
+        // splits into fixed chunks of whole vectors; each executor
+        // borrows its thread-local scratch.  Per-vector arithmetic does
+        // not depend on the chunking, so results are identical for any
+        // worker count.
         let chunks = pool::DisjointChunks::new(h, chunk_vecs * self.d);
         pool::run(n_chunks, |i| {
             // SAFETY: each chunk index is claimed exactly once.
             let chunk = unsafe { chunks.slice(i) };
             let cb = chunk.len() / self.d;
-            let mut scratch = self.scratch();
-            self.apply_chain_chunk(chunk, cb, &mut scratch);
+            self.with_scratch(|scratch| self.apply_chain_chunk(chunk, cb, scratch));
         });
     }
 
@@ -630,8 +664,7 @@ impl CircuitPlan {
         }
         let (chunk_vecs, n_chunks) = self.chunking(batch);
         if n_chunks <= 1 {
-            let mut scratch = self.scratch();
-            self.residual_chain_chunk(xs, out, batch, alpha, &mut scratch);
+            self.with_scratch(|scratch| self.residual_chain_chunk(xs, out, batch, alpha, scratch));
             return Ok(());
         }
         let out_chunks = pool::DisjointChunks::new(out, chunk_vecs * self.d);
@@ -641,8 +674,7 @@ impl CircuitPlan {
             let x0 = i * chunk_vecs * self.d;
             let x = &xs[x0..x0 + o.len()];
             let cb = o.len() / self.d;
-            let mut scratch = self.scratch();
-            self.residual_chain_chunk(x, o, cb, alpha, &mut scratch);
+            self.with_scratch(|scratch| self.residual_chain_chunk(x, o, cb, alpha, scratch));
         });
         Ok(())
     }
@@ -677,9 +709,12 @@ impl CircuitPlan {
         }
     }
 
-    /// Fill the column-base table for block `[c0, c0+w)` of gate `g`.
+    /// Fill the column-base table for block `[c0, c0+w)` of gate `g`
+    /// (shared with the backward kernels in `quanta::grad`, so the
+    /// forward, bulk backward, and sharded backward all walk the same
+    /// column bases by construction).
     #[inline]
-    fn fill_bases(&self, g: &GatePlan, c0: usize, w: usize, bases: &mut [usize]) {
+    pub(crate) fn fill_bases(&self, g: &GatePlan, c0: usize, w: usize, bases: &mut [usize]) {
         let rest_len = g.rest.len();
         for (ci, slot) in bases.iter_mut().enumerate().take(w) {
             let col = c0 + ci;

@@ -82,4 +82,31 @@ fn outputs_bitwise_identical_for_any_qft_threads() {
     std::env::remove_var("QFT_THREADS");
     assert_eq!(baseline.4, spawned.4, "spawn dispatch changed the train trajectory");
     assert_eq!(baseline.1, spawned.1, "spawn dispatch changed gate grads");
+
+    // Thread-local scratch reuse carries no cross-chunk state: the
+    // grow-only caches are fully rewritten before every read, so a
+    // narrow circuit must produce identical bits before and after a
+    // much wider circuit has stretched (and dirtied) every worker's
+    // scratch on the same pool.
+    let mut rng = Rng::new(901);
+    let narrow =
+        Circuit::random(&[2usize, 3, 2], &all_pairs_structure(3), 0.3, &mut rng).unwrap();
+    let nplan = narrow.plan().unwrap();
+    let mut nxs = vec![0.0f32; 40 * nplan.d];
+    rng.fill_normal(&mut nxs, 1.0);
+    let (y_fresh, tape_fresh) = nplan.apply_batch_with_tape(&nxs, 40).unwrap();
+    let g_fresh = nplan.backward(&tape_fresh, &nxs).unwrap();
+    // widen every executor's scratch (d = 1024, dmn 64 ≫ dmn 6)
+    let wide =
+        Circuit::random(&[8usize, 8, 16], &all_pairs_structure(3), 0.1, &mut rng).unwrap();
+    let wplan = wide.plan().unwrap();
+    let mut wxs = vec![0.0f32; 16 * wplan.d];
+    rng.fill_normal(&mut wxs, 1.0);
+    let (_, wtape) = wplan.apply_batch_with_tape(&wxs, 16).unwrap();
+    let _ = wplan.backward(&wtape, &wxs).unwrap();
+    let (y_reused, tape_reused) = nplan.apply_batch_with_tape(&nxs, 40).unwrap();
+    let g_reused = nplan.backward(&tape_reused, &nxs).unwrap();
+    assert_eq!(y_fresh, y_reused, "scratch reuse changed a forward bit");
+    assert_eq!(g_fresh.gates, g_reused.gates, "scratch reuse changed gate grads");
+    assert_eq!(g_fresh.input, g_reused.input, "scratch reuse changed input grads");
 }
