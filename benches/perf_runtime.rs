@@ -516,6 +516,105 @@ fn shard_sweep_bench() -> (&'static str, Value) {
     ("shard_sweep", Value::Arr(entries))
 }
 
+/// Serving microbench: KV-cache merged-weight decode per-token cost
+/// across width and concurrency, the merged-vs-streaming ratio (the
+/// zero-overhead claim, priced), and decode vs the quadratic
+/// full-recompute serving baseline at seq 64 — the CI perf gate reads
+/// `vs_recompute[*].speedup` (≥ 2 required; the asymptotic ratio is
+/// ~seq/2).
+fn serve_decode_bench() -> (&'static str, Value) {
+    use quanta_ft::model::{BlockConfig, TransformerBlock};
+    use quanta_ft::serve::{DecodeState, ServeBlock};
+
+    banner("serve_decode", "KV-cache decode vs streaming adapters and full recompute");
+    let mut per_token = vec![];
+    let mut vs_recompute = vec![];
+    let seq = 64usize;
+    for (dims, heads, warm, iters, rwarm, riters) in [
+        (vec![4usize, 8, 8], 4usize, 3usize, 30usize, 1usize, 3usize),
+        (vec![8, 8, 16], 8, 2, 15, 0, 2),
+    ] {
+        let mut rng = Rng::new(0x5E47E);
+        let cfg = BlockConfig::standard(dims.clone(), heads, 8);
+        let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
+        block.randomize_circuits(0.05, &mut rng).unwrap();
+        let d = block.d();
+        let merged = ServeBlock::merged(&block).unwrap();
+        let streaming = ServeBlock::streaming(&block);
+        for batch in [1usize, 8, 32] {
+            let mut xs = vec![0.0f32; batch * d];
+            rng.fill_normal(&mut xs, 1.0);
+            // prefill every request to depth 32 (a typical resident
+            // context), then time whole decode steps at that depth
+            let run_one = |sb: &ServeBlock| {
+                let mut states: Vec<DecodeState> = (0..batch)
+                    .map(|_| DecodeState::with_capacity(d, 33 + warm + iters))
+                    .collect();
+                for _ in 0..32 {
+                    let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+                    sb.decode_step(&mut refs, &xs).unwrap();
+                }
+                bench(warm, iters, || {
+                    let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+                    let _ = sb.decode_step(&mut refs, &xs).unwrap();
+                })
+            };
+            let st_m = run_one(&merged);
+            let st_s = run_one(&streaming);
+            let m_tok = st_m.mean_us / batch as f64;
+            let s_tok = st_s.mean_us / batch as f64;
+            let ratio = s_tok / m_tok;
+            println!(
+                "d={d:5} batch={batch:2}: merged {m_tok:8.1}us/tok  streaming \
+                 {s_tok:8.1}us/tok  => {ratio:.2}x"
+            );
+            per_token.push(Value::obj(vec![
+                ("d", Value::Num(d as f64)),
+                ("batch", Value::Num(batch as f64)),
+                ("merged_us_per_token", Value::Num(m_tok)),
+                ("streaming_us_per_token", Value::Num(s_tok)),
+                ("merged_speedup", Value::Num(ratio)),
+            ]));
+        }
+        // decode vs full recompute, one request generating `seq` tokens
+        // on merged weights both ways (the recompute side is the merged
+        // block's forward_len over every prefix — the pre-serve path)
+        let merged_block = block.merged().unwrap();
+        let mut seq_xs = vec![0.0f32; seq * d];
+        rng.fill_normal(&mut seq_xs, 1.0);
+        let st_dec = bench(rwarm + 1, (riters * 5).max(5), || {
+            let _ = merged.decode_sequence(&seq_xs, seq).unwrap();
+        });
+        let st_rec = bench(rwarm, riters, || {
+            for t in 0..seq {
+                let _ = merged_block.forward_len(&seq_xs[..(t + 1) * d], 1, t + 1).unwrap();
+            }
+        });
+        let speedup = st_rec.mean_us / st_dec.mean_us;
+        println!(
+            "d={d:5} seq={seq}: merged decode {:10.1}us  full recompute {:10.1}us  \
+             => {speedup:.1}x",
+            st_dec.mean_us, st_rec.mean_us
+        );
+        vs_recompute.push(Value::obj(vec![
+            ("d", Value::Num(d as f64)),
+            ("seq", Value::Num(seq as f64)),
+            ("merged_decode_us", Value::Num(st_dec.mean_us)),
+            ("recompute_us", Value::Num(st_rec.mean_us)),
+            ("speedup", Value::Num(speedup)),
+        ]));
+    }
+    (
+        "serve_decode",
+        Value::obj(vec![
+            ("seq", Value::Num(seq as f64)),
+            ("prefill_depth", Value::Num(32.0)),
+            ("per_token", Value::Arr(per_token)),
+            ("vs_recompute", Value::Arr(vs_recompute)),
+        ]),
+    )
+}
+
 /// Scaling sweep: `apply_batch` under pool vs spawn dispatch across
 /// d ∈ {256, 1024, 4096}.  Dispatch overhead matters most at small d
 /// (many short regions) and washes out at large d — both ends recorded
@@ -564,7 +663,7 @@ fn scaling_bench() -> (&'static str, Value) {
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(4.0)),
+        ("schema_version", Value::Num(5.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -585,6 +684,7 @@ fn main() {
     results.push(pool_vs_spawn_bench());
     results.push(scaling_bench());
     results.push(shard_sweep_bench());
+    results.push(serve_decode_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();

@@ -17,7 +17,7 @@ Also measures the ``scaling_sweep`` section: chunked ``apply_batch``
 per-region thread spawn, at d in {256, 1024, 4096} — the NumPy analog
 of the rust ``QFT_DISPATCH=spawn`` comparison.
 
-Emits ``BENCH_quanta_engine.json`` (schema_version 4, the same schema
+Emits ``BENCH_quanta_engine.json`` (schema_version 5, the same schema
 as the rust bench, ``substrate`` marks the producer).  Used to seed the
 perf record in containers without a rust toolchain; running the rust
 bench overwrites the file with native numbers.
@@ -268,14 +268,14 @@ def main():
     apply_flops = d * sum(DIMS[m] * DIMS[n] for m, n, _ in gates)
     record = {
         "bench": "quanta_engine",
-        "schema_version": 4,
+        "schema_version": 5,
         "substrate": "python-numpy-mirror",
         "note": (
             "Seed record measured by the NumPy mirrors "
             "(python/bench/engine_mirror.py for the engine sections + "
             "results.scaling_sweep, python/bench/train_mirror.py for "
             "results.train_smoke + results.pool_vs_spawn + results.block_train + "
-            "results.shard_sweep), each "
+            "results.shard_sweep + results.serve_decode), each "
             "transcribing the rust loop structure of "
             "benches/perf_runtime.rs: seed = O(d) offset scan per gate per "
             "call + one gather/matvec/scatter per rest offset per vector; "
@@ -313,7 +313,7 @@ def main():
         },
     }
     # carry over the sections measured by train_mirror.py, so the two
-    # mirrors compose into one schema-3 record in either order — but
+    # mirrors compose into one schema-5 record in either order — but
     # only from a mirror-produced record (never relabel rust-native
     # timings as mirror provenance)
     out_path = Path(args.out)
@@ -321,7 +321,8 @@ def main():
         try:
             prev = json.loads(out_path.read_text())
             if prev.get("substrate") == "python-numpy-mirror":
-                for key in ("train_smoke", "pool_vs_spawn", "block_train", "shard_sweep"):
+                for key in ("train_smoke", "pool_vs_spawn", "block_train", "shard_sweep",
+                            "serve_decode"):
                     if key in prev.get("results", {}):
                         record["results"][key] = prev["results"][key]
         except (json.JSONDecodeError, OSError):

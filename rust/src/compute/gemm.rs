@@ -1,0 +1,120 @@
+//! Borrowing slice-in/slice-out GEMM — the pooled row kernel behind
+//! `Tensor::matmul`, promoted to a public entry point so hot paths can
+//! multiply straight out of activation panels without wrapping them in
+//! owned `Tensor`s (`to_vec` per call).
+//!
+//! The ROADMAP item this closes: the transformer block's MLP/backward
+//! (and the adapter's frozen-base product) each paid a full-panel copy
+//! per call just to satisfy `Tensor::matmul`'s owned signature.  Both
+//! now call [`gemm_into`] directly; `Tensor::matmul` itself delegates
+//! here, so the three paths share one kernel, one chunking policy, and
+//! therefore one bit pattern — migrating a call site cannot change any
+//! output (chunk boundaries come from `pool::chunks(rows, k·n)` either
+//! way, and `mm_rows` accumulates ascending in `p` regardless of the
+//! split).  The serve layer's decode hot loop (`serve::decode`) is
+//! built directly on this entry: merged-weight serving is nothing but
+//! `gemm_into` panels.
+
+use crate::compute::pool;
+
+/// `k`-block width of the matmul kernel: the active `B` panel is
+/// `MM_KB × n` floats, resident in L1/L2 across the row sweep.
+const MM_KB: usize = 64;
+
+/// Multiply a row panel serially: `a` is `rows × k`, `b` is `k × n`,
+/// and `rows · n` products are **accumulated into** `out` (pre-zero it
+/// for a plain product).  Accumulation order over `p` is ascending
+/// regardless of blocking, so results match the naive i-p-j loop
+/// bit-for-bit and are independent of how the caller splits `a` into
+/// row chunks.
+pub fn mm_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = a.len() / k;
+    let mut p0 = 0;
+    while p0 < k {
+        let pe = (p0 + MM_KB).min(k);
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in p0..pe {
+                let av = arow[p];
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        p0 = pe;
+    }
+}
+
+/// Pooled row-chunked GEMM over borrowed slices:
+/// `out[rows × n] += a[rows × k] · b[k × n]`, with `rows` inferred from
+/// `a.len() / k`.  Row chunks are sized by `pool::chunks(rows, k·n)` —
+/// identical to `Tensor::matmul`, which delegates here — so the pooled
+/// split is bitwise equal to the serial kernel at any `QFT_THREADS`.
+///
+/// Panics (debug) on inconsistent lengths; zero-sized operands are a
+/// no-op.
+pub fn gemm_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if k == 0 || n == 0 || a.is_empty() {
+        return;
+    }
+    debug_assert_eq!(a.len() % k, 0, "gemm_into: a len {} not a multiple of k {k}", a.len());
+    let rows = a.len() / k;
+    debug_assert_eq!(b.len(), k * n, "gemm_into: b len {} != k {k} * n {n}", b.len());
+    debug_assert_eq!(out.len(), rows * n, "gemm_into: out len != rows {rows} * n {n}");
+    let (chunk_rows, n_chunks) = pool::chunks(rows, k * n);
+    if n_chunks <= 1 {
+        mm_rows(a, b, out, k, n);
+        return;
+    }
+    let out_chunks = pool::DisjointChunks::new(out, chunk_rows * n);
+    pool::run(n_chunks, |i| {
+        // SAFETY: each chunk index is claimed exactly once.
+        let o = unsafe { out_chunks.slice(i) };
+        let rows_i = o.len() / n;
+        let a0 = i * chunk_rows * k;
+        mm_rows(&a[a0..a0 + rows_i * k], b, o, k, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gemm_into_matches_matmul_bitwise() {
+        // below and above the parallel threshold: the borrowing entry
+        // must agree with the owned Tensor path bit for bit (it is the
+        // same kernel on the same chunks)
+        let mut rng = Rng::new(11);
+        for (m, k, n) in [(3usize, 5usize, 4usize), (160, 96, 128), (1, 96, 128)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let want = a.matmul(&b).unwrap();
+            let mut got = vec![0.0f32; m * n];
+            gemm_into(&a.data, &b.data, &mut got, k, n);
+            assert_eq!(got, want.data, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_into_accumulates() {
+        // out += A·B: pre-seeded output must keep its prior contents
+        let a = [1.0f32, 2.0]; // 2 x 1
+        let b = [3.0f32]; // 1 x 1
+        let mut out = [10.0f32, 20.0];
+        gemm_into(&a, &b, &mut out, 1, 1);
+        assert_eq!(out, [13.0, 26.0]);
+    }
+
+    #[test]
+    fn gemm_into_zero_sized_is_noop() {
+        let mut out: Vec<f32> = vec![];
+        gemm_into(&[], &[], &mut out, 0, 4);
+        gemm_into(&[], &[1.0; 8], &mut out, 2, 4);
+        assert!(out.is_empty());
+    }
+}

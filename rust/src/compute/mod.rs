@@ -1,6 +1,8 @@
 //! Shared compute layer: the persistent worker pool and chunking
 //! helpers every parallel kernel (dense matmul, the circuit engine's
-//! forward/backward, the host optimizer) dispatches through.  See
-//! DESIGN.md §6.
+//! forward/backward, the host optimizer, the serving decode loop)
+//! dispatches through, plus the borrowing GEMM entry point they share.
+//! See DESIGN.md §6 (pool) and §10 (serving hot path).
 
+pub mod gemm;
 pub mod pool;

@@ -22,7 +22,12 @@
 //! [`model::AdapterSet`] of per-projection circuits behind one flat
 //! optimizer layout and a QuanTA-adapted pre-LN transformer block
 //! ([`model::TransformerBlock`]), both driven by the same trainer
-//! through the [`model::TrainableModel`] trait.
+//! through the [`model::TrainableModel`] trait.  The serving layer
+//! ([`serve`], DESIGN.md §10) deploys trained blocks behind a KV-cache
+//! incremental decode and a continuous-batching scheduler, running on
+//! merged weights by default — the paper's zero-inference-overhead
+//! deployment, pinned against the streaming adapter forward by
+//! `rust/tests/serve_props.rs`.
 
 // Crate-wide lint policy (needless_range_loop etc.) lives in the
 // `[lints]` table of rust/Cargo.toml so it covers tests, benches, and
@@ -34,6 +39,7 @@ pub mod tensor;
 pub mod linalg;
 pub mod quanta;
 pub mod model;
+pub mod serve;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;

@@ -25,7 +25,16 @@
 //! returning flat gate gradients in the [`AdapterSet`] layout plus the
 //! input gradient; `rust/tests/model_props.rs` checks it against
 //! central finite differences through the entire block.
+//!
+//! The serving layer (`crate::serve`, DESIGN.md §10) reuses the exact
+//! per-row pieces of this forward — [`layer_norm`], [`gelu`],
+//! [`attn_row`], and the borrowing GEMM the MLP runs on — so the
+//! KV-cache decode step is arithmetic-identical to this panel forward
+//! row for row; [`TransformerBlock::forward_len`] is the
+//! arbitrary-length full-recompute forward the decode parity tests and
+//! the serving baseline score against.
 
+use crate::compute::gemm;
 use crate::model::adapter_set::AdapterSet;
 use crate::model::TrainableModel;
 use crate::quanta::circuit::{all_pairs_structure, Circuit};
@@ -105,33 +114,43 @@ pub struct BlockTape {
 }
 
 /// The host model: frozen block weights + the trainable adapter set.
+/// Fields are `pub(crate)` so the serving layer (`crate::serve`) can
+/// snapshot the frozen weights without a parallel accessor zoo; all
+/// *mutation* still flows through [`TransformerBlock::set_params`].
 #[derive(Clone, Debug)]
 pub struct TransformerBlock {
-    d: usize,
-    n_heads: usize,
-    head_dim: usize,
-    seq: usize,
-    d_ff: usize,
+    pub(crate) d: usize,
+    pub(crate) n_heads: usize,
+    pub(crate) head_dim: usize,
+    pub(crate) seq: usize,
+    pub(crate) d_ff: usize,
     /// Q/K/V/O adapters, flat-layout order `["wq","wk","wv","wo"]`.
-    adapters: AdapterSet,
+    pub(crate) adapters: AdapterSet,
     /// MLP weights (`w1: [d_ff, d]`, `w2: [d, d_ff]`) with cached
     /// transposes for the row-major batched forward.
-    w1: Tensor,
-    w1_t: Tensor,
-    b1: Vec<f32>,
-    w2: Tensor,
-    w2_t: Tensor,
-    b2: Vec<f32>,
-    ln1_g: Vec<f32>,
-    ln1_b: Vec<f32>,
-    ln2_g: Vec<f32>,
-    ln2_b: Vec<f32>,
+    pub(crate) w1: Tensor,
+    pub(crate) w1_t: Tensor,
+    pub(crate) b1: Vec<f32>,
+    pub(crate) w2: Tensor,
+    pub(crate) w2_t: Tensor,
+    pub(crate) b2: Vec<f32>,
+    pub(crate) ln1_g: Vec<f32>,
+    pub(crate) ln1_b: Vec<f32>,
+    pub(crate) ln2_g: Vec<f32>,
+    pub(crate) ln2_b: Vec<f32>,
 }
 
 /// Rowwise layernorm over a `[rows, d]` panel; returns `(y, xhat,
 /// rstd)` — the normalized activations and reciprocal stds feed the
 /// backward.  Serial ascending sums: deterministic and thread-free.
-fn layer_norm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+/// `pub(crate)`: the serving decode step normalizes its one-row-per-
+/// request panels through this exact function.
+pub(crate) fn layer_norm(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let rows = x.len() / d;
     let mut y = vec![0.0f32; x.len()];
     let mut xhat = vec![0.0f32; x.len()];
@@ -193,9 +212,10 @@ fn layer_norm_backward(
 }
 
 /// GELU (tanh approximation) — smooth, so central finite differences
-/// through the block converge cleanly.
+/// through the block converge cleanly.  Shared with the serving decode
+/// step's MLP.
 #[inline]
-fn gelu(u: f32) -> f32 {
+pub(crate) fn gelu(u: f32) -> f32 {
     let g = GELU_C * (u + GELU_A * u * u * u);
     0.5 * u * (1.0 + g.tanh())
 }
@@ -205,6 +225,99 @@ fn gelu_prime(u: f32) -> f32 {
     let g = GELU_C * (u + GELU_A * u * u * u);
     let t = g.tanh();
     0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+/// One query row of causal softmax attention against K/V rows
+/// `0..=t` of a single head: scores (ascending `t2`, max tracked) →
+/// max-subtracted exp + denominator → probabilities into `prow`
+/// (`len t+1`) → probability-weighted V accumulation into `crow`
+/// (`len hd`, pre-zeroed).  K/V row `t2` lives at
+/// `t2 · row_stride + head_off`; `scores` is caller scratch of
+/// `len ≥ t+1`.
+///
+/// This is the *entire* data-dependent part of attention, factored out
+/// so the full panel forward ([`TransformerBlock::attention`]) and the
+/// KV-cache decode step (`serve::decode`) execute the same
+/// instructions in the same order — the decode-parity bitwise
+/// guarantee rests on this sharing, not on a tolerance.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_row(
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    row_stride: usize,
+    head_off: usize,
+    t: usize,
+    scale: f32,
+    scores: &mut [f32],
+    prow: &mut [f32],
+    crow: &mut [f32],
+) {
+    let hd = qrow.len();
+    let mut maxv = f32::NEG_INFINITY;
+    for (t2, slot) in scores.iter_mut().enumerate().take(t + 1) {
+        let kr = t2 * row_stride + head_off;
+        let krow = &k[kr..kr + hd];
+        let mut dot = 0.0f32;
+        for (a, b) in qrow.iter().zip(krow) {
+            dot += a * b;
+        }
+        *slot = dot * scale;
+        maxv = maxv.max(*slot);
+    }
+    let mut denom = 0.0f32;
+    for slot in scores.iter_mut().take(t + 1) {
+        *slot = (*slot - maxv).exp();
+        denom += *slot;
+    }
+    for (p, &e) in prow.iter_mut().zip(scores.iter()) {
+        *p = e / denom;
+    }
+    for (t2, &p) in prow.iter().enumerate() {
+        let vr = t2 * row_stride + head_off;
+        let vrow = &v[vr..vr + hd];
+        for (c, &vv) in crow.iter_mut().zip(vrow) {
+            *c += p * vv;
+        }
+    }
+}
+
+/// MLP forward on a borrowed `[rows, d]` panel:
+/// `gelu(h2 · W1ᵀ + b1) · W2ᵀ + b2`, returning `(m, u)` with `u` the
+/// pre-activation.  Multiplies straight out of the panel
+/// (`compute::gemm`) — same kernel and chunking as the old
+/// owned-Tensor wrap, minus the full-panel `to_vec` copy per call.
+/// Shared — like [`attn_row`] — by the block forward and the serving
+/// decode step, so the two paths stay instruction-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mlp_panel(
+    h2: &[f32],
+    rows: usize,
+    w1_t: &Tensor,
+    b1: &[f32],
+    w2_t: &Tensor,
+    b2: &[f32],
+    d: usize,
+    d_ff: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut u = vec![0.0f32; rows * d_ff];
+    gemm::gemm_into(h2, &w1_t.data, &mut u, d, d_ff);
+    for r in 0..rows {
+        let urow = &mut u[r * d_ff..(r + 1) * d_ff];
+        for (uv, &b) in urow.iter_mut().zip(b1) {
+            *uv += b;
+        }
+    }
+    let a: Vec<f32> = u.iter().map(|&x| gelu(x)).collect();
+    let mut m = vec![0.0f32; rows * d];
+    gemm::gemm_into(&a, &w2_t.data, &mut m, d_ff, d);
+    for r in 0..rows {
+        let mrow = &mut m[r * d..(r + 1) * d];
+        for (mv, &b) in mrow.iter_mut().zip(b2) {
+            *mv += b;
+        }
+    }
+    (m, u)
 }
 
 impl TransformerBlock {
@@ -322,47 +435,41 @@ impl TransformerBlock {
     }
 
     /// Causal softmax attention over per-head slices of `q`/`k`/`v`
-    /// (`[B, d]` panels); returns `(ctx, probs)`.
-    fn attention(&self, q: &[f32], k: &[f32], v: &[f32], n_seqs: usize) -> (Vec<f32>, Vec<f32>) {
-        let (d, hd, seq) = (self.d, self.head_dim, self.seq);
+    /// (`[n_seqs · seq, d]` panels); returns `(ctx, probs)`.  The
+    /// per-row work is [`attn_row`] — shared with the decode step —
+    /// and `seq` is a parameter (not `self.seq`) so
+    /// [`TransformerBlock::forward_len`] can score arbitrary lengths.
+    fn attention(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n_seqs: usize,
+        seq: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (d, hd) = (self.d, self.head_dim);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut probs = vec![0.0f32; n_seqs * self.n_heads * seq * seq];
         let mut ctx = vec![0.0f32; q.len()];
         let mut scores = vec![0.0f32; seq];
         for s in 0..n_seqs {
+            let base = s * seq * d;
             for h in 0..self.n_heads {
                 let pbase = (s * self.n_heads + h) * seq * seq;
                 for t in 0..seq {
-                    let row = (s * seq + t) * d + h * hd;
-                    let qrow = &q[row..row + hd];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for (t2, slot) in scores.iter_mut().enumerate().take(t + 1) {
-                        let kr = (s * seq + t2) * d + h * hd;
-                        let krow = &k[kr..kr + hd];
-                        let mut dot = 0.0f32;
-                        for (a, b) in qrow.iter().zip(krow) {
-                            dot += a * b;
-                        }
-                        *slot = dot * scale;
-                        maxv = maxv.max(*slot);
-                    }
-                    let mut denom = 0.0f32;
-                    for slot in scores.iter_mut().take(t + 1) {
-                        *slot = (*slot - maxv).exp();
-                        denom += *slot;
-                    }
-                    let prow = &mut probs[pbase + t * seq..pbase + t * seq + t + 1];
-                    for (p, &e) in prow.iter_mut().zip(scores.iter()) {
-                        *p = e / denom;
-                    }
-                    let crow = &mut ctx[row..row + hd];
-                    for (t2, &p) in prow.iter().enumerate() {
-                        let vr = (s * seq + t2) * d + h * hd;
-                        let vrow = &v[vr..vr + hd];
-                        for (c, &vv) in crow.iter_mut().zip(vrow) {
-                            *c += p * vv;
-                        }
-                    }
+                    let row = base + t * d + h * hd;
+                    attn_row(
+                        &q[row..row + hd],
+                        &k[base..],
+                        &v[base..],
+                        d,
+                        h * hd,
+                        t,
+                        scale,
+                        &mut scores,
+                        &mut probs[pbase + t * seq..pbase + t * seq + t + 1],
+                        &mut ctx[row..row + hd],
+                    );
                 }
             }
         }
@@ -426,25 +533,8 @@ impl TransformerBlock {
 
     /// MLP forward: `gelu(h2 · W1ᵀ + b1) · W2ᵀ + b2`; returns `(m, u)`
     /// with `u` the pre-activation the backward differentiates through.
-    fn mlp(&self, h2: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        let h2t = Tensor::from_vec(&[rows, self.d], h2.to_vec())?;
-        let mut u = h2t.matmul(&self.w1_t)?.data;
-        for r in 0..rows {
-            let urow = &mut u[r * self.d_ff..(r + 1) * self.d_ff];
-            for (uv, &b) in urow.iter_mut().zip(&self.b1) {
-                *uv += b;
-            }
-        }
-        let a: Vec<f32> = u.iter().map(|&x| gelu(x)).collect();
-        let at = Tensor::from_vec(&[rows, self.d_ff], a)?;
-        let mut m = at.matmul(&self.w2_t)?.data;
-        for r in 0..rows {
-            let mrow = &mut m[r * self.d..(r + 1) * self.d];
-            for (mv, &b) in mrow.iter_mut().zip(&self.b2) {
-                *mv += b;
-            }
-        }
-        Ok((m, u))
+    fn mlp(&self, h2: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        mlp_panel(h2, rows, &self.w1_t, &self.b1, &self.w2_t, &self.b2, self.d, self.d_ff)
     }
 
     /// Block forward over `n_seqs` sequences (`xs` row-major
@@ -456,14 +546,14 @@ impl TransformerBlock {
         let (q, tq) = self.adapters.adapter(0).forward_with_tape(&h1, rows)?;
         let (k, tk) = self.adapters.adapter(1).forward_with_tape(&h1, rows)?;
         let (v, tv) = self.adapters.adapter(2).forward_with_tape(&h1, rows)?;
-        let (ctx, probs) = self.attention(&q, &k, &v, n_seqs);
+        let (ctx, probs) = self.attention(&q, &k, &v, n_seqs, self.seq);
         let (attn_out, t_o) = self.adapters.adapter(3).forward_with_tape(&ctx, rows)?;
         let mut x1 = xs.to_vec();
         for (o, &a) in x1.iter_mut().zip(&attn_out) {
             *o += a;
         }
         let (h2, xhat2, rstd2) = layer_norm(&x1, &self.ln2_g, &self.ln2_b, self.d);
-        let (m, u) = self.mlp(&h2, rows)?;
+        let (m, u) = self.mlp(&h2, rows);
         let mut out = x1; // x1 is not taped (backward rebuilds it from grad_out)
         for (o, &mv) in out.iter_mut().zip(&m) {
             *o += mv;
@@ -492,19 +582,38 @@ impl TransformerBlock {
     /// adapters' tape twins are arithmetic-identical by contract — but
     /// no activation panels are recorded or kept.
     pub fn forward(&self, xs: &[f32], n_seqs: usize) -> Result<Vec<f32>> {
-        let rows = self.check_panel(xs, n_seqs, "forward")?;
+        self.check_panel(xs, n_seqs, "forward")?;
+        self.forward_len(xs, n_seqs, self.seq)
+    }
+
+    /// Tape-free forward over `n_seqs` sequences of **arbitrary**
+    /// length `seq` — the training shape `self.seq` only constrains the
+    /// taped/backward path, not the frozen arithmetic.  This is the
+    /// full-recompute serving baseline: scoring a length-`t+1` prefix
+    /// per generated token is what the KV-cache decode step
+    /// (`serve::decode`) replaces, and what `rust/tests/serve_props.rs`
+    /// pins the decode output against at every position.
+    pub fn forward_len(&self, xs: &[f32], n_seqs: usize, seq: usize) -> Result<Vec<f32>> {
+        if seq == 0 || xs.len() != n_seqs * seq * self.d {
+            return Err(Error::Shape(format!(
+                "block forward_len: panel len {} != n_seqs {n_seqs} * seq {seq} * d {}",
+                xs.len(),
+                self.d
+            )));
+        }
+        let rows = n_seqs * seq;
         let (h1, _, _) = layer_norm(xs, &self.ln1_g, &self.ln1_b, self.d);
         let q = self.adapters.adapter(0).apply_batch(&h1, rows)?;
         let k = self.adapters.adapter(1).apply_batch(&h1, rows)?;
         let v = self.adapters.adapter(2).apply_batch(&h1, rows)?;
-        let (ctx, _) = self.attention(&q, &k, &v, n_seqs);
+        let (ctx, _) = self.attention(&q, &k, &v, n_seqs, seq);
         let attn_out = self.adapters.adapter(3).apply_batch(&ctx, rows)?;
         let mut x1 = xs.to_vec();
         for (o, &a) in x1.iter_mut().zip(&attn_out) {
             *o += a;
         }
         let (h2, _, _) = layer_norm(&x1, &self.ln2_g, &self.ln2_b, self.d);
-        let (m, _) = self.mlp(&h2, rows)?;
+        let (m, _) = self.mlp(&h2, rows);
         for (o, &mv) in x1.iter_mut().zip(&m) {
             *o += mv;
         }
@@ -527,14 +636,16 @@ impl TransformerBlock {
                 tape.n_seqs
             )));
         }
-        // MLP: out = x1 + m(LN2(x1))
-        let dm = Tensor::from_vec(&[rows, self.d], grad_out.to_vec())?;
-        let mut du = dm.matmul(&self.w2)?.data; // da, scaled next by gelu'
+        // MLP: out = x1 + m(LN2(x1)) — borrowing GEMMs straight out of
+        // grad_out / du (same kernel + chunking as the old owned wrap,
+        // so the train trajectory is bitwise unchanged)
+        let mut du = vec![0.0f32; rows * self.d_ff]; // da, scaled next by gelu'
+        gemm::gemm_into(grad_out, &self.w2.data, &mut du, self.d, self.d_ff);
         for (g, &uv) in du.iter_mut().zip(&tape.u) {
             *g *= gelu_prime(uv);
         }
-        let dut = Tensor::from_vec(&[rows, self.d_ff], du)?;
-        let dh2 = dut.matmul(&self.w1)?.data;
+        let mut dh2 = vec![0.0f32; rows * self.d];
+        gemm::gemm_into(&du, &self.w1.data, &mut dh2, self.d_ff, self.d);
         let mut dx1 = layer_norm_backward(&dh2, &tape.xhat2, &tape.rstd2, &self.ln2_g, self.d);
         for (g, &go) in dx1.iter_mut().zip(grad_out) {
             *g += go;

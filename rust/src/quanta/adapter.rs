@@ -19,6 +19,7 @@
 //! [`CircuitPlan::backward`]; `W` is frozen by construction (no
 //! gradient is ever computed for it).
 
+use crate::compute::gemm;
 use crate::quanta::circuit::Circuit;
 use crate::quanta::grad::{CircuitGrads, CircuitTape};
 use crate::quanta::plan::CircuitPlan;
@@ -179,10 +180,12 @@ impl QuantaAdapter {
         let d = self.d();
         let mut grads = self.circuit_backward(tape, grad_out, batch)?;
         // ∂loss/∂x: Wᵀ g (base path: Y = X Wᵀ ⇒ dX = dY W) plus the
-        // circuit-path input gradient minus the α·x passthrough.
-        let g_t = Tensor::from_vec(&[batch, d], grad_out.to_vec())?;
-        let base_part = g_t.matmul(&self.base)?;
-        for ((gi, &bp), &go) in grads.input.iter_mut().zip(&base_part.data).zip(grad_out) {
+        // circuit-path input gradient minus the α·x passthrough.  The
+        // borrowing GEMM multiplies straight out of `grad_out` — no
+        // owned-Tensor wrap copy.
+        let mut base_part = vec![0.0f32; batch * d];
+        gemm::gemm_into(grad_out, &self.base.data, &mut base_part, d, d);
+        for ((gi, &bp), &go) in grads.input.iter_mut().zip(&base_part).zip(grad_out) {
             *gi += bp - self.alpha * go;
         }
         Ok(grads)
@@ -223,7 +226,10 @@ impl QuantaAdapter {
         Ok(out)
     }
 
-    /// Frozen-base product `X · Wᵀ` (the row-major batched `W x`).
+    /// Frozen-base product `X · Wᵀ` (the row-major batched `W x`),
+    /// multiplied straight out of the borrowed activation panel — the
+    /// borrowing GEMM shares kernel and chunking with `Tensor::matmul`,
+    /// so dropping the owned-Tensor wrap copy changes no bit.
     fn base_product(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
         let d = self.d();
         if xs.len() != batch * d {
@@ -232,8 +238,9 @@ impl QuantaAdapter {
                 xs.len()
             )));
         }
-        let x_t = Tensor::from_vec(&[batch, d], xs.to_vec())?;
-        Ok(x_t.matmul(&self.base_t)?.data)
+        let mut y = vec![0.0f32; batch * d];
+        gemm::gemm_into(xs, &self.base_t.data, &mut y, d, d);
+        Ok(y)
     }
 }
 

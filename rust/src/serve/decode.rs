@@ -1,0 +1,372 @@
+//! KV-cache incremental decode for trained transformer blocks.
+//!
+//! Training evaluates a block by recomputing full causal attention over
+//! the whole sequence per panel — fine for loss curves, quadratic
+//! nonsense for serving: generating token `t+1` would recompute
+//! projections and attention for all `t` earlier positions.  This
+//! module is the standard fix: each request keeps a grow-only
+//! [`DecodeState`] holding the K/V rows of every position it has
+//! already processed, and [`ServeBlock::decode_step`] runs **one new
+//! token per request** against that cache — projections and MLP over a
+//! `[requests, d]` panel, attention only between the new query row and
+//! the cached keys/values.
+//!
+//! ## Merged vs streaming
+//!
+//! QuanTA's headline serving property is *zero inference overhead*
+//! (paper §1): after `AdapterSet::merge_all()` the adapted projections
+//! are plain dense matrices.  [`ServeBlock`] has both personalities:
+//!
+//! * [`ServeBlock::merged`] snapshots the merged weights — the decode
+//!   hot loop is pure borrowing GEMM (`compute::gemm`) with **no
+//!   circuit evaluation anywhere**;
+//! * [`ServeBlock::streaming`] keeps the live adapters
+//!   (`W x + α(circuit(x) − x)` through the plan-cached engine) — the
+//!   reference the merged path is pinned against at `1e-5`
+//!   (`rust/tests/serve_props.rs`), including the α-residual fold.
+//!
+//! ## Parity contract
+//!
+//! The decode step reuses the block's own per-row pieces —
+//! `model::block::{layer_norm, attn_row, mlp_panel}` and the same
+//! borrowing GEMM / circuit engine kernels, whose per-row results are
+//! batch-size-invariant by the engine's chunking contract — so a
+//! streaming decode step is **bitwise** equal to the corresponding row
+//! of `TransformerBlock::forward_len` over the same prefix, at any
+//! `QFT_THREADS` and any batch composition.  That bitwise equality
+//! (not a tolerance) is what makes the scheduler's outputs independent
+//! of arrival order and batch packing.
+
+use crate::compute::gemm;
+use crate::model::block::{attn_row, layer_norm, mlp_panel};
+use crate::model::TransformerBlock;
+use crate::quanta::QuantaAdapter;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Per-request decode state: the K/V rows of every position processed
+/// so far, plus the position counter.  Capacity is **grow-only** (amortized
+/// doubling, never shrinks), so a request slot reused across many
+/// requests ([`DecodeState::reset`]) stops allocating once it has seen
+/// its longest sequence.
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    d: usize,
+    /// Cached key/value rows, row-major `[len, d]` prefixes of a
+    /// `[cap, d]` allocation.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+impl DecodeState {
+    /// Empty state for width-`d` activations.
+    pub fn new(d: usize) -> DecodeState {
+        DecodeState { d, k: Vec::new(), v: Vec::new(), len: 0 }
+    }
+
+    /// Empty state with room for `cap` positions pre-allocated.
+    pub fn with_capacity(d: usize, cap: usize) -> DecodeState {
+        DecodeState { d, k: Vec::with_capacity(cap * d), v: Vec::with_capacity(cap * d), len: 0 }
+    }
+
+    /// Positions cached so far (the next token decodes at this index).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions the current allocation can hold without growing.
+    pub fn capacity(&self) -> usize {
+        if self.d == 0 {
+            0
+        } else {
+            self.k.capacity() / self.d
+        }
+    }
+
+    /// Forget the cached sequence but keep the allocation — request
+    /// slots in the scheduler are recycled through this.
+    pub fn reset(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.len = 0;
+    }
+
+    /// Append one position's K/V rows (called by the decode step).
+    fn push(&mut self, krow: &[f32], vrow: &[f32]) {
+        debug_assert_eq!(krow.len(), self.d);
+        debug_assert_eq!(vrow.len(), self.d);
+        // Vec::extend doubles capacity — grow-only by construction
+        self.k.extend_from_slice(krow);
+        self.v.extend_from_slice(vrow);
+        self.len += 1;
+    }
+}
+
+/// A projection in serving form: merged dense weight or live adapter.
+#[derive(Clone, Debug)]
+enum Projection {
+    /// `Wᵀ` of the merged weight (`W + α(full − I)` folded in), stored
+    /// transposed for the row-major `X · Wᵀ` GEMM.
+    Merged(Tensor),
+    /// The live adapter — frozen base + circuit delta through the
+    /// plan-cached engine.
+    Streaming(QuantaAdapter),
+}
+
+impl Projection {
+    fn apply(&self, xs: &[f32], rows: usize, d: usize) -> Result<Vec<f32>> {
+        match self {
+            Projection::Merged(wt) => {
+                let mut y = vec![0.0f32; rows * d];
+                gemm::gemm_into(xs, &wt.data, &mut y, d, d);
+                Ok(y)
+            }
+            Projection::Streaming(a) => a.apply_batch(xs, rows),
+        }
+    }
+}
+
+/// Immutable serving snapshot of a [`TransformerBlock`]: the frozen
+/// MLP/layernorm weights plus the four projections in either merged or
+/// streaming form.  Built once per deployment, shared by every request
+/// (decode state lives per request, not here).
+#[derive(Clone, Debug)]
+pub struct ServeBlock {
+    pub(crate) d: usize,
+    n_heads: usize,
+    head_dim: usize,
+    d_ff: usize,
+    wq: Projection,
+    wk: Projection,
+    wv: Projection,
+    wo: Projection,
+    w1_t: Tensor,
+    b1: Vec<f32>,
+    w2_t: Tensor,
+    b2: Vec<f32>,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+}
+
+impl ServeBlock {
+    /// Snapshot the frozen (non-projection) weights of `block` around
+    /// the four given projections — the single construction path both
+    /// deployments share.
+    fn with_projections(
+        block: &TransformerBlock,
+        wq: Projection,
+        wk: Projection,
+        wv: Projection,
+        wo: Projection,
+    ) -> ServeBlock {
+        ServeBlock {
+            d: block.d,
+            n_heads: block.n_heads,
+            head_dim: block.head_dim,
+            d_ff: block.d_ff,
+            wq,
+            wk,
+            wv,
+            wo,
+            w1_t: block.w1_t.clone(),
+            b1: block.b1.clone(),
+            w2_t: block.w2_t.clone(),
+            b2: block.b2.clone(),
+            ln1_g: block.ln1_g.clone(),
+            ln1_b: block.ln1_b.clone(),
+            ln2_g: block.ln2_g.clone(),
+            ln2_b: block.ln2_b.clone(),
+        }
+    }
+
+    /// Zero-overhead deployment: every projection folded to a dense
+    /// matrix via `AdapterSet::merge_all()` — the decode hot loop is
+    /// pure GEMM, no circuit evaluation.
+    pub fn merged(block: &TransformerBlock) -> Result<ServeBlock> {
+        let mut proj = block
+            .adapters
+            .merge_all()?
+            .into_iter()
+            .map(|(_, w)| Ok(Projection::Merged(w.t()?)))
+            .collect::<Result<Vec<_>>>()?;
+        let wo = proj.pop().unwrap();
+        let wv = proj.pop().unwrap();
+        let wk = proj.pop().unwrap();
+        let wq = proj.pop().unwrap();
+        Ok(ServeBlock::with_projections(block, wq, wk, wv, wo))
+    }
+
+    /// Streaming deployment: the live adapters, un-merged — the parity
+    /// reference for the merged path (and the apples-to-apples baseline
+    /// the `serve_decode` bench prices the merge against).
+    pub fn streaming(block: &TransformerBlock) -> ServeBlock {
+        let a = |i: usize| Projection::Streaming(block.adapters.adapter(i).clone());
+        ServeBlock::with_projections(block, a(0), a(1), a(2), a(3))
+    }
+
+    /// Activation width `d` of this block.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// True when every projection runs merged dense weights.
+    pub fn is_merged(&self) -> bool {
+        [&self.wq, &self.wk, &self.wv, &self.wo]
+            .iter()
+            .all(|p| matches!(p, Projection::Merged(_)))
+    }
+
+    /// Decode one new token for each of `states.len()` concurrent
+    /// requests: `xs` is the row-major `[requests, d]` panel of new
+    /// inputs (`xs[i]` is request `i`'s token at position
+    /// `states[i].len()`), the per-request caches grow by one position,
+    /// and the returned panel holds each request's block output at its
+    /// new position.
+    ///
+    /// Projections and the MLP run as pooled panel GEMMs over all
+    /// requests at once (`compute::gemm` / the circuit engine, both
+    /// `QFT_THREADS`-invariant and per-row batch-invariant); attention
+    /// is the per-request ragged part — one [`attn_row`] call per head
+    /// against that request's cache, exactly the loop the full forward
+    /// runs for its final position.
+    pub fn decode_step(&self, states: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
+        let rows = states.len();
+        let d = self.d;
+        if xs.len() != rows * d {
+            return Err(Error::Shape(format!(
+                "decode_step: xs len {} != requests {rows} * d {d}",
+                xs.len()
+            )));
+        }
+        for (i, s) in states.iter().enumerate() {
+            if s.d != d {
+                return Err(Error::Shape(format!(
+                    "decode_step: state {i} has d {}, block has d {d}",
+                    s.d
+                )));
+            }
+        }
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let (h1, _, _) = layer_norm(xs, &self.ln1_g, &self.ln1_b, d);
+        let q = self.wq.apply(&h1, rows, d)?;
+        let k = self.wk.apply(&h1, rows, d)?;
+        let v = self.wv.apply(&h1, rows, d)?;
+        // attention: append this position's K/V, then one attn_row per
+        // head against the request's own cache (ragged lengths — each
+        // request attends over its own history only)
+        let (hd, scale) = (self.head_dim, 1.0 / (self.head_dim as f32).sqrt());
+        let mut ctx = vec![0.0f32; rows * d];
+        let mut scores: Vec<f32> = Vec::new();
+        let mut prow: Vec<f32> = Vec::new();
+        for (i, state) in states.iter_mut().enumerate() {
+            state.push(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+            let t = state.len - 1;
+            if scores.len() < t + 1 {
+                scores.resize(t + 1, 0.0);
+                prow.resize(t + 1, 0.0);
+            }
+            for h in 0..self.n_heads {
+                let off = h * hd;
+                let qrow = &q[i * d + off..i * d + off + hd];
+                attn_row(
+                    qrow,
+                    &state.k,
+                    &state.v,
+                    d,
+                    off,
+                    t,
+                    scale,
+                    &mut scores,
+                    &mut prow[..t + 1],
+                    &mut ctx[i * d + off..i * d + off + hd],
+                );
+            }
+        }
+        let attn_out = self.wo.apply(&ctx, rows, d)?;
+        let mut x1 = xs.to_vec();
+        for (o, &a) in x1.iter_mut().zip(&attn_out) {
+            *o += a;
+        }
+        let (h2, _, _) = layer_norm(&x1, &self.ln2_g, &self.ln2_b, d);
+        // the block's own MLP body (mlp_panel is shared, like attn_row,
+        // so decode and forward stay instruction-identical)
+        let (m, _) =
+            mlp_panel(&h2, rows, &self.w1_t, &self.b1, &self.w2_t, &self.b2, d, self.d_ff);
+        for (o, &mv) in x1.iter_mut().zip(&m) {
+            *o += mv;
+        }
+        Ok(x1)
+    }
+
+    /// Decode a whole teacher-forced sequence for one request: feed
+    /// `xs[t]` at position `t` and collect every position's output —
+    /// the incremental counterpart of
+    /// [`TransformerBlock::forward_len`]`(xs, 1, seq)`, against which
+    /// it is pinned per position by `rust/tests/serve_props.rs`.
+    pub fn decode_sequence(&self, xs: &[f32], seq: usize) -> Result<Vec<f32>> {
+        let d = self.d;
+        if seq == 0 || xs.len() != seq * d {
+            return Err(Error::Shape(format!(
+                "decode_sequence: xs len {} != seq {seq} * d {d}",
+                xs.len()
+            )));
+        }
+        let mut state = DecodeState::with_capacity(d, seq);
+        let mut out = Vec::with_capacity(seq * d);
+        for t in 0..seq {
+            let y = self.decode_step(&mut [&mut state], &xs[t * d..(t + 1) * d])?;
+            out.extend_from_slice(&y);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_state_grow_only_and_reset() {
+        let mut s = DecodeState::with_capacity(4, 2);
+        assert!(s.is_empty());
+        assert!(s.capacity() >= 2);
+        for t in 0..9 {
+            s.push(&[t as f32; 4], &[-(t as f32); 4]);
+        }
+        assert_eq!(s.len(), 9);
+        let cap = s.capacity();
+        assert!(cap >= 9);
+        s.reset();
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.capacity(), cap, "reset must keep the allocation");
+        s.push(&[1.0; 4], &[2.0; 4]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(&s.k[..4], &[1.0; 4]);
+        assert_eq!(&s.v[..4], &[2.0; 4]);
+    }
+
+    #[test]
+    fn decode_step_shape_errors() {
+        use crate::model::BlockConfig;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(90);
+        let block =
+            TransformerBlock::init(&BlockConfig::standard(vec![2, 2], 2, 3), &mut rng).unwrap();
+        let sb = ServeBlock::merged(&block).unwrap();
+        let mut st = DecodeState::new(4);
+        assert!(sb.decode_step(&mut [&mut st], &[0.0; 3]).is_err());
+        let mut wrong = DecodeState::new(5);
+        assert!(sb.decode_step(&mut [&mut wrong], &[0.0; 5]).is_err());
+        assert!(sb.decode_sequence(&[0.0; 4], 0).is_err());
+        assert_eq!(sb.decode_step(&mut [], &[]).unwrap(), Vec::<f32>::new());
+    }
+}

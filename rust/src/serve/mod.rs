@@ -1,0 +1,23 @@
+//! Serving subsystem (DESIGN.md §10): KV-cache incremental decode for
+//! trained transformer blocks, and continuous batching over many
+//! concurrent requests.
+//!
+//! The train→merge→serve pipeline: `quanta-ft train-block` fine-tunes
+//! the per-projection circuits, `AdapterSet::merge_all()` folds them
+//! into dense weights (the paper's zero-inference-overhead claim), and
+//! this layer serves the merged block — [`ServeBlock`] snapshots the
+//! deployment (merged GEMM fast path, or the streaming-adapter
+//! reference it is pinned against), [`DecodeState`] is the per-request
+//! grow-only K/V cache, and [`BatchScheduler`] packs ragged concurrent
+//! requests into pooled panel matmuls with admit/retire between steps.
+//!
+//! Exposed on the CLI as `quanta-ft serve`; properties (decode ≡
+//! full-recompute per position, merged ≡ streaming at 1e-5, scheduler
+//! invariance under arrival order / `QFT_THREADS` / dispatch mode)
+//! live in `rust/tests/serve_props.rs`.
+
+pub mod decode;
+pub mod scheduler;
+
+pub use decode::{DecodeState, ServeBlock};
+pub use scheduler::{BatchScheduler, ServeOutput, ServeRequest, ServeStats};

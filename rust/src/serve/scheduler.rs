@@ -1,0 +1,299 @@
+//! Continuous-batching scheduler over the KV-cache decode step.
+//!
+//! Many concurrent requests, ragged lengths, one token per request per
+//! iteration (the Orca-style "iteration-level" schedule): every loop
+//! turn the scheduler **admits** waiting requests into free slots,
+//! packs each active request's next input row into one `[active, d]`
+//! panel, runs a single [`ServeBlock::decode_step`] (projections + MLP
+//! as pooled GEMMs over the whole panel, attention ragged per
+//! request), hands each request its new output row, and **retires**
+//! requests that produced their last token — freeing the slot for the
+//! next waiting request *between* steps, never mid-token.
+//!
+//! A request is a prompt panel plus a generation count: the prompt's
+//! rows are fed teacher-forced (one per iteration — prefill shares the
+//! same batched step as generation), the output at the final prompt
+//! position is the first generated vector, and each generated vector
+//! is fed back as the next input (greedy autoregression in activation
+//! space — this host model has no sampling head).
+//!
+//! **Determinism contract**: per-request outputs depend only on the
+//! request's own prompt — never on arrival order, batch packing,
+//! `max_batch`, `QFT_THREADS`, or the dispatch mode — because every
+//! kernel under the step is per-row batch-invariant (the engine's
+//! chunking contract) and attention reads only the request's own
+//! cache.  `rust/tests/serve_props.rs` pins this **bitwise** across
+//! arrival permutations, batch sizes, and thread counts.  Retired
+//! [`DecodeState`]s are recycled (grow-only capacity) so a long
+//! serving run stops allocating cache once slots have seen their
+//! longest request.
+
+use crate::serve::decode::{DecodeState, ServeBlock};
+use crate::util::error::{Error, Result};
+
+/// One serving request: a prompt of `prompt_len` width-`d` vectors
+/// (row-major) and the number of vectors to generate after it.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    /// Caller-chosen identifier, reported back on the output.
+    pub id: u64,
+    /// Row-major `[prompt_len, d]` prompt panel (must be non-empty).
+    pub prompt: Vec<f32>,
+    /// Generated vectors to produce (≥ 1; the first is the output at
+    /// the last prompt position).
+    pub n_gen: usize,
+}
+
+impl ServeRequest {
+    pub fn prompt_len(&self, d: usize) -> usize {
+        self.prompt.len() / d.max(1)
+    }
+}
+
+/// A finished request: the generated panel plus latency accounting.
+#[derive(Clone, Debug)]
+pub struct ServeOutput {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Row-major `[n_gen, d]` generated vectors.
+    pub generated: Vec<f32>,
+    /// Scheduler iteration at which the request was admitted.
+    pub admitted_at: usize,
+    /// Scheduler iteration after which the request retired.
+    pub finished_at: usize,
+}
+
+impl ServeOutput {
+    /// Iterations the request was resident (its per-request latency in
+    /// scheduler steps: queueing excluded, prefill included).
+    pub fn steps_resident(&self) -> usize {
+        self.finished_at - self.admitted_at
+    }
+}
+
+/// Aggregate accounting for one [`BatchScheduler::run`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Scheduler iterations executed.
+    pub steps: usize,
+    /// Total decode rows processed (Σ per-step active requests) — the
+    /// token-throughput numerator.
+    pub tokens: usize,
+    /// Peak concurrently-active requests.
+    pub peak_batch: usize,
+    pub wallclock_s: f64,
+}
+
+impl ServeStats {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wallclock_s > 0.0 {
+            self.tokens as f64 / self.wallclock_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// An admitted request mid-flight.
+struct Active {
+    req: ServeRequest,
+    state: DecodeState,
+    /// Next prompt row to feed (== prompt_len ⇒ generating).
+    fed: usize,
+    generated: Vec<f32>,
+    admitted_at: usize,
+}
+
+/// Continuous-batching executor for one [`ServeBlock`] deployment.
+pub struct BatchScheduler {
+    block: ServeBlock,
+    max_batch: usize,
+}
+
+impl BatchScheduler {
+    /// `max_batch` caps concurrently-active requests (≥ 1).
+    pub fn new(block: ServeBlock, max_batch: usize) -> Result<BatchScheduler> {
+        if max_batch == 0 {
+            return Err(Error::Config("scheduler: max_batch must be >= 1".into()));
+        }
+        Ok(BatchScheduler { block, max_batch })
+    }
+
+    pub fn block(&self) -> &ServeBlock {
+        &self.block
+    }
+
+    /// Drive `requests` (admitted in the given order as slots free up)
+    /// to completion; outputs are returned **sorted by id** so callers
+    /// and tests compare runs independently of completion order.
+    pub fn run(&self, requests: Vec<ServeRequest>) -> Result<(Vec<ServeOutput>, ServeStats)> {
+        let d = self.block.d();
+        for r in &requests {
+            if r.prompt.is_empty() || r.prompt.len() % d != 0 {
+                return Err(Error::Shape(format!(
+                    "request {}: prompt len {} not a non-empty multiple of d {d}",
+                    r.id,
+                    r.prompt.len()
+                )));
+            }
+            if r.n_gen == 0 {
+                return Err(Error::Config(format!("request {}: n_gen must be >= 1", r.id)));
+            }
+        }
+        let start = std::time::Instant::now();
+        let mut queue = std::collections::VecDeque::from(requests);
+        let mut active: Vec<Active> = Vec::new();
+        let mut free_states: Vec<DecodeState> = Vec::new();
+        let mut outputs = Vec::new();
+        let mut stats = ServeStats::default();
+        let mut xs: Vec<f32> = Vec::new();
+        while !queue.is_empty() || !active.is_empty() {
+            // admit into free slots, preserving arrival order
+            while active.len() < self.max_batch {
+                let Some(req) = queue.pop_front() else { break };
+                let mut state = free_states.pop().unwrap_or_else(|| DecodeState::new(d));
+                state.reset();
+                active.push(Active {
+                    state,
+                    fed: 0,
+                    generated: Vec::with_capacity(req.n_gen * d),
+                    admitted_at: stats.steps,
+                    req,
+                });
+            }
+            stats.peak_batch = stats.peak_batch.max(active.len());
+            // pack each active request's next input row
+            xs.clear();
+            for a in &active {
+                if a.fed < a.req.prompt_len(d) {
+                    xs.extend_from_slice(&a.req.prompt[a.fed * d..(a.fed + 1) * d]);
+                } else {
+                    // autoregressive: feed back the latest generated row
+                    let g = a.generated.len();
+                    xs.extend_from_slice(&a.generated[g - d..g]);
+                }
+            }
+            let mut states: Vec<&mut DecodeState> =
+                active.iter_mut().map(|a| &mut a.state).collect();
+            let out = self.block.decode_step(&mut states, &xs)?;
+            drop(states);
+            stats.steps += 1;
+            stats.tokens += active.len();
+            // hand out rows; retire finished requests.  The panel row
+            // of request `i` is `out[i*d..]` in the PRE-retire active
+            // order, so the sweep drains the old vec and rebuilds the
+            // survivor list — removing in place (swap_remove) would
+            // silently remap later requests onto the wrong rows.
+            let old = std::mem::take(&mut active);
+            for (i, mut a) in old.into_iter().enumerate() {
+                let row = &out[i * d..(i + 1) * d];
+                a.fed += 1;
+                // the output at the last prompt position is the first
+                // generated vector; earlier prefill outputs are scored
+                // but not part of the response
+                if a.fed >= a.req.prompt_len(d) {
+                    a.generated.extend_from_slice(row);
+                }
+                if a.generated.len() >= a.req.n_gen * d {
+                    outputs.push(ServeOutput {
+                        id: a.req.id,
+                        prompt_len: a.req.prompt_len(d),
+                        generated: a.generated,
+                        admitted_at: a.admitted_at,
+                        finished_at: stats.steps,
+                    });
+                    free_states.push(a.state);
+                } else {
+                    active.push(a);
+                }
+            }
+        }
+        stats.wallclock_s = start.elapsed().as_secs_f64();
+        outputs.sort_by_key(|o| o.id);
+        Ok((outputs, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BlockConfig, TransformerBlock};
+    use crate::util::rng::Rng;
+
+    fn tiny_serve_block(rng: &mut Rng) -> ServeBlock {
+        let cfg = BlockConfig::standard(vec![2, 2], 2, 3);
+        let mut block = TransformerBlock::init(&cfg, rng).unwrap();
+        block.randomize_circuits(0.2, rng).unwrap();
+        ServeBlock::merged(&block).unwrap()
+    }
+
+    fn mk_request(id: u64, d: usize, p_len: usize, n_gen: usize, rng: &mut Rng) -> ServeRequest {
+        let mut prompt = vec![0.0f32; p_len * d];
+        rng.fill_normal(&mut prompt, 1.0);
+        ServeRequest { id, prompt, n_gen }
+    }
+
+    #[test]
+    fn scheduler_matches_single_request_decode() {
+        // a request served alone equals the same request served in a
+        // crowd (per-row batch invariance, the continuous-batching
+        // correctness core)
+        let mut rng = Rng::new(91);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let reqs: Vec<ServeRequest> = (0..5)
+            .map(|i| mk_request(i, d, 1 + (i as usize % 3), 2 + (i as usize % 4), &mut rng))
+            .collect();
+        let solo = BatchScheduler::new(sb.clone(), 1).unwrap();
+        let crowd = BatchScheduler::new(sb, 4).unwrap();
+        let (solo_out, _) = solo.run(reqs.clone()).unwrap();
+        let (crowd_out, stats) = crowd.run(reqs).unwrap();
+        assert_eq!(solo_out.len(), crowd_out.len());
+        for (a, b) in solo_out.iter().zip(&crowd_out) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.generated, b.generated, "request {} diverged across batches", a.id);
+        }
+        assert!(stats.peak_batch > 1, "crowd run never actually batched");
+        let want_tokens: usize = solo_out
+            .iter()
+            .map(|o| o.prompt_len + o.generated.len() / d - 1)
+            .sum();
+        assert_eq!(stats.tokens, want_tokens);
+    }
+
+    #[test]
+    fn scheduler_rejects_bad_requests() {
+        let mut rng = Rng::new(92);
+        let sb = tiny_serve_block(&mut rng);
+        let sched = BatchScheduler::new(sb.clone(), 2).unwrap();
+        let bad_len = ServeRequest { id: 0, prompt: vec![0.0; 3], n_gen: 1 };
+        assert!(sched.run(vec![bad_len]).is_err());
+        let empty = ServeRequest { id: 1, prompt: vec![], n_gen: 1 };
+        assert!(sched.run(vec![empty]).is_err());
+        let no_gen = ServeRequest { id: 2, prompt: vec![0.0; 4], n_gen: 0 };
+        assert!(sched.run(vec![no_gen]).is_err());
+        assert!(BatchScheduler::new(sb, 0).is_err());
+        let (out, stats) = sched.run(vec![]).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(stats.steps, 0);
+    }
+
+    #[test]
+    fn latency_accounting_is_consistent() {
+        let mut rng = Rng::new(93);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let reqs: Vec<ServeRequest> = (0..6).map(|i| mk_request(i, d, 2, 3, &mut rng)).collect();
+        let sched = BatchScheduler::new(sb, 2).unwrap();
+        let (out, stats) = sched.run(reqs).unwrap();
+        for o in &out {
+            // prompt_len + n_gen - 1 decode steps per request
+            assert_eq!(o.steps_resident(), o.prompt_len + 3 - 1, "request {}", o.id);
+            assert_eq!(o.generated.len(), 3 * d);
+        }
+        // with max_batch 2 and 6 identical 4-step requests: 12 steps
+        assert_eq!(stats.steps, 12);
+        assert_eq!(stats.tokens, 24);
+        assert_eq!(stats.peak_batch, 2);
+    }
+}

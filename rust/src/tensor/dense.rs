@@ -1,36 +1,13 @@
 //! Dense row-major f32 tensor.
+//!
+//! The matmul kernel itself lives in `compute::gemm` (the borrowing
+//! slice-in/slice-out entry shared with the block MLP, the adapter base
+//! product, and the serving decode loop); [`Tensor::matmul`] is the
+//! owned-tensor convenience wrapper over it.
 
-use crate::compute::pool;
+use crate::compute::gemm;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
-
-/// `k`-block width of the matmul kernel: the active `B` panel is
-/// `MM_KB × n` floats, resident in L1/L2 across the row sweep.
-const MM_KB: usize = 64;
-
-/// Multiply a row panel: `a` is `rows × k`, `b` is `k × n`, `out` is
-/// `rows × n` (pre-zeroed).  Accumulation order over `p` is ascending
-/// regardless of blocking, so results match the naive i-p-j loop
-/// bit-for-bit.
-fn mm_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
-    let rows = a.len() / k;
-    let mut p0 = 0;
-    while p0 < k {
-        let pe = (p0 + MM_KB).min(k);
-        for i in 0..rows {
-            let arow = &a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for p in p0..pe {
-                let av = arow[p];
-                let brow = &b[p * n..(p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-        p0 = pe;
-    }
-}
 
 /// Dense row-major tensor of f32.
 #[derive(Clone, Debug, PartialEq)]
@@ -104,13 +81,14 @@ impl Tensor {
 
     /// Matrix multiply: self [m,k] @ other [k,n] -> [m,n].
     ///
-    /// Blocked over `k` so the active `B` panel stays cache-resident,
-    /// row-chunked over the compute pool for large products (each row's
-    /// accumulation order is ascending in `p` regardless of chunking,
-    /// so any chunk split is bitwise identical to serial); `j`
-    /// innermost vectorizes.  No zero-skip shortcut: `0 × NaN` must
-    /// propagate NaN (IEEE 754), and a data-dependent branch in the
-    /// inner loop defeats vectorization anyway.
+    /// Delegates to [`gemm::gemm_into`] — blocked over `k` so the
+    /// active `B` panel stays cache-resident, row-chunked over the
+    /// compute pool for large products (each row's accumulation order
+    /// is ascending in `p` regardless of chunking, so any chunk split
+    /// is bitwise identical to serial); `j` innermost vectorizes.  No
+    /// zero-skip shortcut: `0 × NaN` must propagate NaN (IEEE 754),
+    /// and a data-dependent branch in the inner loop defeats
+    /// vectorization anyway.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
             return Err(Error::Shape(format!(
@@ -123,21 +101,7 @@ impl Tensor {
         if m == 0 || k == 0 || n == 0 {
             return Ok(out);
         }
-        let (chunk_rows, n_chunks) = pool::chunks(m, k * n);
-        if n_chunks <= 1 {
-            mm_rows(&self.data, &other.data, &mut out.data, k, n);
-        } else {
-            let a = &self.data;
-            let b = &other.data;
-            let out_chunks = pool::DisjointChunks::new(&mut out.data, chunk_rows * n);
-            pool::run(n_chunks, |i| {
-                // SAFETY: each chunk index is claimed exactly once.
-                let o = unsafe { out_chunks.slice(i) };
-                let rows = o.len() / n;
-                let a0 = i * chunk_rows * k;
-                mm_rows(&a[a0..a0 + rows * k], b, o, k, n);
-            });
-        }
+        gemm::gemm_into(&self.data, &other.data, &mut out.data, k, n);
         Ok(out)
     }
 
@@ -281,7 +245,7 @@ mod tests {
         let b = Tensor::randn(&[96, 128], 1.0, &mut rng);
         let par = a.matmul(&b).unwrap();
         let mut serial = Tensor::zeros(&[160, 128]);
-        super::mm_rows(&a.data, &b.data, &mut serial.data, 96, 128);
+        gemm::mm_rows(&a.data, &b.data, &mut serial.data, 96, 128);
         assert_eq!(par.data, serial.data);
     }
 

@@ -1,0 +1,213 @@
+//! Serving-subsystem properties (DESIGN.md §10).
+//!
+//! What is pinned, and how hard:
+//!
+//! * **Decode parity is bitwise, not a tolerance**: the KV-cache decode
+//!   step shares the block's per-row kernels (`layer_norm`, `attn_row`,
+//!   the borrowing GEMM, the circuit engine — all per-row
+//!   batch-invariant by the chunking contract), so a streaming decode
+//!   must equal the full-recompute forward **bit for bit** at every
+//!   position, including positions past the training `seq`.
+//! * **Merged serving** (`AdapterSet::merge_all()` folded to dense
+//!   GEMMs — the paper's zero-inference-overhead claim) is pinned to
+//!   the streaming adapter forward at `1e-5` **relative to the panel
+//!   scale** (floored at 1: at d = 128 every element is a 128-term f32
+//!   dot, so the raw difference scales with activation magnitude) per
+//!   decoded position, α-residual fold included; against a merged
+//!   *block* (identity circuits) it is again bitwise.
+//! * **Scheduler invariance**: per-request outputs are independent of
+//!   arrival order, `max_batch` packing, `QFT_THREADS`, and the
+//!   dispatch mode — bitwise.
+//!
+//! Everything lives in ONE `#[test]`: `QFT_THREADS` / `QFT_DISPATCH`
+//! are process-global env state, so sweeping them from parallel test
+//! threads would race, and every section here drives env-reading
+//! kernels (same convention as `rust/tests/pool_props.rs`).
+
+use quanta_ft::model::{BlockConfig, TransformerBlock};
+use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeRequest};
+use quanta_ft::util::rng::Rng;
+
+fn trained_block(
+    seed: u64,
+    dims: Vec<usize>,
+    heads: usize,
+    std: f32,
+    alpha: f32,
+) -> TransformerBlock {
+    let mut rng = Rng::new(seed);
+    let cfg = BlockConfig { alpha, ..BlockConfig::standard(dims, heads, 4) };
+    let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
+    block.randomize_circuits(std, &mut rng).unwrap();
+    block
+}
+
+/// Greedy full-recompute generation: score the whole prefix per step,
+/// take the last row, feed it back — the quadratic serving baseline the
+/// KV cache replaces.
+fn greedy_recompute(block: &TransformerBlock, prompt: &[f32], n_gen: usize) -> Vec<f32> {
+    let d = block.d();
+    let mut seqv = prompt.to_vec();
+    let mut out = Vec::with_capacity(n_gen * d);
+    loop {
+        let l = seqv.len() / d;
+        let y = block.forward_len(&seqv, 1, l).unwrap();
+        let last = &y[(l - 1) * d..l * d];
+        out.extend_from_slice(last);
+        if out.len() >= n_gen * d {
+            return out;
+        }
+        seqv.extend_from_slice(last);
+    }
+}
+
+/// Per-id generated panels from one scheduler run.
+fn run_scheduler(
+    block: &ServeBlock,
+    reqs: Vec<ServeRequest>,
+    max_batch: usize,
+) -> Vec<(u64, Vec<f32>)> {
+    let sched = BatchScheduler::new(block.clone(), max_batch).unwrap();
+    let (out, _) = sched.run(reqs).unwrap();
+    out.into_iter().map(|o| (o.id, o.generated)).collect()
+}
+
+#[test]
+fn decode_parity_and_scheduler_invariance() {
+    // ---- (a) teacher-forced decode parity, per position -------------
+    // streaming decode ≡ full-recompute forward bitwise; merged decode
+    // within 1e-5 of it (and bitwise against the merged block's own
+    // full recompute).  seq = 9 exceeds the training seq (4): the
+    // decode path must not care.
+    for (dims, heads, alpha) in [(vec![2usize, 2], 2usize, 0.7f32), (vec![4, 4, 8], 4, 1.0)] {
+        let block = trained_block(300, dims.clone(), heads, 0.25, alpha);
+        let d = block.d();
+        let seq = 9usize;
+        let mut xs = vec![0.0f32; seq * d];
+        Rng::new(301).fill_normal(&mut xs, 1.0);
+        let streaming = ServeBlock::streaming(&block).decode_sequence(&xs, seq).unwrap();
+        let merged = ServeBlock::merged(&block).unwrap().decode_sequence(&xs, seq).unwrap();
+        let merged_block = block.merged().unwrap();
+        // the 1e-5 merged-parity contract is relative to the panel
+        // scale, floored at 1 (mirror-measured on these draws: 4.6e-5
+        // raw at max |y| 67.7 → 6.8e-7 normalized for d = 128; 4.8e-7
+        // raw for the tiny block)
+        let scale = streaming.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        for t in 0..seq {
+            // full recompute over the length-(t+1) prefix
+            let full = block.forward_len(&xs[..(t + 1) * d], 1, t + 1).unwrap();
+            let want = &full[t * d..(t + 1) * d];
+            assert_eq!(
+                &streaming[t * d..(t + 1) * d],
+                want,
+                "dims {dims:?}: streaming decode differs from recompute at position {t}"
+            );
+            for (j, (a, b)) in merged[t * d..(t + 1) * d].iter().zip(want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5 * scale,
+                    "dims {dims:?}: merged decode vs streaming recompute at ({t},{j}): \
+                     {a} vs {b} (panel scale {scale})"
+                );
+            }
+            // merged decode ≡ merged block recompute, bitwise (identity
+            // circuits add an exact-zero residual)
+            let mfull = merged_block.forward_len(&xs[..(t + 1) * d], 1, t + 1).unwrap();
+            assert_eq!(
+                &merged[t * d..(t + 1) * d],
+                &mfull[t * d..(t + 1) * d],
+                "dims {dims:?}: merged decode differs from merged recompute at position {t}"
+            );
+        }
+        // causal consistency of the baseline itself: row t of the full
+        // panel equals the last row of the length-(t+1) prefix
+        let panel = block.forward_len(&xs, 1, seq).unwrap();
+        let prefix = block.forward_len(&xs[..5 * d], 1, 5).unwrap();
+        assert_eq!(&panel[4 * d..5 * d], &prefix[4 * d..5 * d]);
+    }
+
+    // ---- (b) greedy autoregressive generation -----------------------
+    // feedback decode ≡ feedback full recompute, bitwise, on both
+    // deployments; merged-vs-streaming stays within 1e-5 over a short
+    // feedback horizon (single-pass merge parity is ~5e-7; feedback
+    // compounds it, so the horizon is kept short)
+    let block = trained_block(310, vec![2, 3], 2, 0.2, 0.8);
+    let d = block.d();
+    let mut prompt = vec![0.0f32; 3 * d];
+    Rng::new(311).fill_normal(&mut prompt, 1.0);
+    let n_gen = 3;
+    let req = ServeRequest { id: 0, prompt: prompt.clone(), n_gen };
+    let stream_sb = ServeBlock::streaming(&block);
+    let merged_sb = ServeBlock::merged(&block).unwrap();
+    let g_stream = run_scheduler(&stream_sb, vec![req.clone()], 1).remove(0).1;
+    let g_merged = run_scheduler(&merged_sb, vec![req], 1).remove(0).1;
+    assert_eq!(
+        g_stream,
+        greedy_recompute(&block, &prompt, n_gen),
+        "greedy streaming decode differs from greedy recompute"
+    );
+    assert_eq!(
+        g_merged,
+        greedy_recompute(&block.merged().unwrap(), &prompt, n_gen),
+        "greedy merged decode differs from greedy merged recompute"
+    );
+    let gscale = g_stream.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    for (i, (a, b)) in g_merged.iter().zip(&g_stream).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-5 * gscale,
+            "merged vs streaming generation at {i}: {a} vs {b} (scale {gscale})"
+        );
+    }
+
+    // ---- (c) scheduler invariance: arrival order, packing, threads --
+    // d = 128 with 16 concurrent requests fans the projection panels
+    // out to multiple pool chunks, so the thread sweep is not vacuous.
+    let big = trained_block(320, vec![4, 4, 8], 4, 0.2, 1.0);
+    let sb = ServeBlock::merged(&big).unwrap();
+    let d = big.d();
+    let mut reqs = Vec::new();
+    let mut rng = Rng::new(321);
+    for id in 0..16u64 {
+        let p_len = 1 + (id as usize % 4);
+        let mut prompt = vec![0.0f32; p_len * d];
+        rng.fill_normal(&mut prompt, 1.0);
+        reqs.push(ServeRequest { id, prompt, n_gen: 2 + (id as usize % 3) });
+    }
+    std::env::set_var("QFT_THREADS", "1");
+    let baseline = run_scheduler(&sb, reqs.clone(), 16);
+    {
+        // guard: the packed panel must actually split into >1 chunk
+        let (_, n_chunks) = quanta_ft::compute::pool::chunks(16, d * d);
+        assert!(n_chunks > 1, "invariance sweep is vacuously serial ({n_chunks} chunk)");
+    }
+    // arrival permutations and packing limits, fixed thread count
+    let mut reversed = reqs.clone();
+    reversed.reverse();
+    let mut interleaved = reqs.clone();
+    interleaved.sort_by_key(|r| (r.id % 2 == 0, r.id)); // odds first, then evens
+    for (label, order) in [("reversed", reversed), ("interleaved", interleaved)] {
+        for mb in [1usize, 5, 16] {
+            let got = run_scheduler(&sb, order.clone(), mb);
+            assert_eq!(baseline, got, "{label} arrival @ max_batch {mb} changed outputs");
+        }
+    }
+    // thread counts and dispatch mode
+    for threads in ["2", "8"] {
+        std::env::set_var("QFT_THREADS", threads);
+        let got = run_scheduler(&sb, reqs.clone(), 16);
+        assert_eq!(baseline, got, "outputs differ at QFT_THREADS={threads}");
+    }
+    std::env::set_var("QFT_DISPATCH", "spawn");
+    let spawned = run_scheduler(&sb, reqs.clone(), 16);
+    std::env::remove_var("QFT_DISPATCH");
+    std::env::remove_var("QFT_THREADS");
+    assert_eq!(baseline, spawned, "spawn dispatch changed scheduler outputs");
+
+    // streaming deployment under the same sweep (circuit-engine chunks)
+    let ssb = ServeBlock::streaming(&big);
+    std::env::set_var("QFT_THREADS", "1");
+    let sbase = run_scheduler(&ssb, reqs.clone(), 16);
+    std::env::set_var("QFT_THREADS", "8");
+    let sgot = run_scheduler(&ssb, reqs, 16);
+    std::env::remove_var("QFT_THREADS");
+    assert_eq!(sbase, sgot, "streaming scheduler outputs differ across threads");
+}
