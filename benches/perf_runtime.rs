@@ -615,6 +615,138 @@ fn serve_decode_bench() -> (&'static str, Value) {
     )
 }
 
+/// Robustness-overhead microbench (DESIGN.md §11): the per-request
+/// error domains are only free if the per-token validation the
+/// scheduler runs (a `non_finite_at` scan of each output row plus the
+/// deadline counter compare) costs a negligible fraction of the decode
+/// step itself.  This section prices exactly that code — the checked
+/// loop calls the same `serve::scheduler::non_finite_at` the scheduler
+/// uses — and the CI perf gate holds the overhead at ≤ 2% per token.
+/// A `mixed_batch` entry also re-runs the fault-isolation invariant
+/// (healthy outputs bitwise equal to a healthy-only run) at bench
+/// scale and records the per-request counters.
+fn serve_robustness_bench() -> (&'static str, Value) {
+    use quanta_ft::model::{BlockConfig, TransformerBlock};
+    use quanta_ft::serve::scheduler::non_finite_at;
+    use quanta_ft::serve::{
+        BatchScheduler, DecodeState, ServeBlock, ServeConfig, ServeRequest, ShedPolicy,
+    };
+
+    banner("serve_robustness", "per-request validation overhead + mixed-batch isolation");
+    let batch = 32usize;
+    let mut overhead = vec![];
+    for (dims, heads, warm, iters) in [
+        (vec![4usize, 8, 8], 4usize, 3usize, 30usize),
+        (vec![8, 8, 16], 8, 2, 15),
+    ] {
+        let mut rng = Rng::new(0xFA017);
+        let cfg = BlockConfig::standard(dims, heads, 8);
+        let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
+        block.randomize_circuits(0.05, &mut rng).unwrap();
+        let d = block.d();
+        let merged = ServeBlock::merged(&block).unwrap();
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        let deadline = 1usize << 40; // present but never triggering
+        let run_loop = |checked: bool| {
+            let mut states: Vec<DecodeState> =
+                (0..batch).map(|_| DecodeState::with_capacity(d, 33 + warm + iters)).collect();
+            for _ in 0..32 {
+                let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+                merged.decode_step(&mut refs, &xs).unwrap();
+            }
+            let mut step = 32usize;
+            bench(warm, iters, || {
+                let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+                let out = merged.decode_step(&mut refs, &xs).unwrap();
+                step += 1;
+                if checked {
+                    // the scheduler's retire sweep, verbatim: scan each
+                    // row for non-finite values, compare the deadline
+                    for row in out.chunks_exact(d) {
+                        assert!(non_finite_at(row).is_none());
+                        assert!(step < deadline);
+                    }
+                }
+            })
+        };
+        let st_raw = run_loop(false);
+        let st_checked = run_loop(true);
+        let raw_tok = st_raw.mean_us / batch as f64;
+        let checked_tok = st_checked.mean_us / batch as f64;
+        let pct = (checked_tok / raw_tok - 1.0) * 100.0;
+        println!(
+            "d={d:5} batch={batch}: raw {raw_tok:8.2}us/tok  checked {checked_tok:8.2}us/tok  \
+             => {pct:+.2}% overhead"
+        );
+        overhead.push(Value::obj(vec![
+            ("d", Value::Num(d as f64)),
+            ("batch", Value::Num(batch as f64)),
+            ("raw_us_per_token", Value::Num(raw_tok)),
+            ("checked_us_per_token", Value::Num(checked_tok)),
+            ("overhead_pct", Value::Num(pct)),
+        ]));
+    }
+
+    // mixed batch: healthy requests bitwise-unaffected by faulty peers
+    let mut rng = Rng::new(0xFA018);
+    let cfg = BlockConfig::standard(vec![4, 8, 8], 4, 8);
+    let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
+    block.randomize_circuits(0.05, &mut rng).unwrap();
+    let d = block.d();
+    let sb = ServeBlock::merged(&block).unwrap();
+    let mk = |id: u64, p_len: usize, n_gen: usize, rng: &mut Rng| {
+        let mut prompt = vec![0.0f32; p_len * d];
+        rng.fill_normal(&mut prompt, 1.0);
+        ServeRequest { id, prompt, n_gen }
+    };
+    let healthy: Vec<ServeRequest> =
+        (0..8).map(|i| mk(i, 4, 4 + (i as usize % 3), &mut rng)).collect();
+    let mut mixed = healthy.clone();
+    let mut poisoned = mk(100, 4, 4, &mut rng);
+    poisoned.prompt[d] = f32::NAN;
+    mixed.push(poisoned);
+    mixed.push(ServeRequest { id: 101, prompt: vec![0.0; d + 1], n_gen: 2 }); // bad shape
+    mixed.push(mk(102, 4, 64, &mut rng)); // 68 tokens > budget 32
+    let scfg = ServeConfig {
+        max_batch: 8,
+        deadline_steps: 16,
+        token_budget: 32,
+        queue_cap: 0,
+        shed: ShedPolicy::RejectNew,
+    };
+    let sched = BatchScheduler::with_config(sb, scfg).unwrap();
+    let (healthy_out, _) = sched.run(healthy).unwrap();
+    let (mixed_out, stats) = sched.run(mixed).unwrap();
+    let bitwise = healthy_out
+        .iter()
+        .zip(&mixed_out)
+        .all(|(h, m)| h.id == m.id && h.result == m.result);
+    assert!(bitwise, "mixed batch perturbed healthy outputs");
+    println!(
+        "mixed batch: {} completed, {} failed, {} shed — healthy outputs bitwise equal: {bitwise}",
+        stats.completed, stats.failed, stats.shed
+    );
+
+    (
+        "serve_robustness",
+        Value::obj(vec![
+            ("prefill_depth", Value::Num(32.0)),
+            ("overhead", Value::Arr(overhead)),
+            (
+                "mixed_batch",
+                Value::obj(vec![
+                    ("requests", Value::Num(11.0)),
+                    ("completed", Value::Num(stats.completed as f64)),
+                    ("failed", Value::Num(stats.failed as f64)),
+                    ("shed", Value::Num(stats.shed as f64)),
+                    ("healthy_bitwise_equal", Value::Bool(bitwise)),
+                ]),
+            ),
+        ]),
+    )
+}
+
 /// Scaling sweep: `apply_batch` under pool vs spawn dispatch across
 /// d ∈ {256, 1024, 4096}.  Dispatch overhead matters most at small d
 /// (many short regions) and washes out at large d — both ends recorded
@@ -663,7 +795,7 @@ fn scaling_bench() -> (&'static str, Value) {
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(5.0)),
+        ("schema_version", Value::Num(6.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -685,6 +817,7 @@ fn main() {
     results.push(scaling_bench());
     results.push(shard_sweep_bench());
     results.push(serve_decode_bench());
+    results.push(serve_robustness_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();

@@ -17,7 +17,7 @@ Also measures the ``scaling_sweep`` section: chunked ``apply_batch``
 per-region thread spawn, at d in {256, 1024, 4096} — the NumPy analog
 of the rust ``QFT_DISPATCH=spawn`` comparison.
 
-Emits ``BENCH_quanta_engine.json`` (schema_version 5, the same schema
+Emits ``BENCH_quanta_engine.json`` (schema_version 6, the same schema
 as the rust bench, ``substrate`` marks the producer).  Used to seed the
 perf record in containers without a rust toolchain; running the rust
 bench overwrites the file with native numbers.
@@ -268,14 +268,15 @@ def main():
     apply_flops = d * sum(DIMS[m] * DIMS[n] for m, n, _ in gates)
     record = {
         "bench": "quanta_engine",
-        "schema_version": 5,
+        "schema_version": 6,
         "substrate": "python-numpy-mirror",
         "note": (
             "Seed record measured by the NumPy mirrors "
             "(python/bench/engine_mirror.py for the engine sections + "
             "results.scaling_sweep, python/bench/train_mirror.py for "
             "results.train_smoke + results.pool_vs_spawn + results.block_train + "
-            "results.shard_sweep + results.serve_decode), each "
+            "results.shard_sweep + results.serve_decode + "
+            "results.serve_robustness), each "
             "transcribing the rust loop structure of "
             "benches/perf_runtime.rs: seed = O(d) offset scan per gate per "
             "call + one gather/matvec/scatter per rest offset per vector; "

@@ -28,6 +28,14 @@ const MM_KB: usize = 64;
 /// bit-for-bit and are independent of how the caller splits `a` into
 /// row chunks.
 pub fn mm_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    // `panic@gemm:n` probe: mm_rows is the per-chunk kernel, so a spec
+    // here panics inside a pool worker's chunk — exactly the failure
+    // the pool's catch_unwind + `pool::catching` contract covers.
+    if crate::util::fault::armed() {
+        if let Some(crate::util::fault::Fault::Panic) = crate::util::fault::probe("gemm") {
+            panic!("injected fault: panic@gemm");
+        }
+    }
     let rows = a.len() / k;
     let mut p0 = 0;
     while p0 < k {

@@ -117,6 +117,36 @@ pub fn run<F: Fn(usize) + Sync>(n_chunks: usize, job: F) {
     }
 }
 
+/// Run `f`, converting a panic anywhere under it (including one
+/// re-raised by [`run`] from a worker chunk) into a structured
+/// [`Error::Compute`] on the calling thread.
+///
+/// This is the submitter-side half of the pool's panic safety: the
+/// pool itself already survives a panicking chunk (caught per chunk,
+/// region completes, workers stay parked — never poisoned), and this
+/// wrapper keeps the unwind from propagating through a serving or
+/// coordinator stack that wants `Result`s.  Fault-isolation boundaries
+/// (e.g. `ServeBlock::decode_step`) wrap their bodies in it; the cost
+/// when nothing panics is one `catch_unwind` frame, which is free on
+/// the non-unwinding path.
+pub fn catching<T>(
+    f: impl FnOnce() -> crate::util::error::Result<T>,
+) -> crate::util::error::Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(crate::util::error::Error::Compute(msg))
+        }
+    }
+}
+
 /// One submitted parallel region.  `func` borrows the submitter's
 /// stack; safety rests on `ComputePool::run` not returning until all
 /// `n_chunks` chunks completed, and on late-waking workers bailing out

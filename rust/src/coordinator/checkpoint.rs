@@ -1,85 +1,354 @@
 //! Flat-parameter checkpoints: a small self-describing binary format
-//! (magic, version, name, f32 payload), used for pretrained bases and
-//! best fine-tuned thetas.
+//! (magic, CRC, name, f32 payload), used for pretrained bases and best
+//! fine-tuned thetas.
+//!
+//! ## Format v2 (current writer)
+//!
+//! ```text
+//! magic "QFTCKPT2"  (8 bytes)
+//! crc32            u32 LE   — IEEE CRC-32 over everything below
+//! name_len         u32 LE   (≤ 4096)
+//! name             UTF-8
+//! n                u64 LE
+//! payload          n × f32 LE
+//! ```
+//!
+//! Hardened per DESIGN.md §11: checkpoints are untrusted input (the
+//! multi-tenant registry will load tenant-supplied adapter files), so
+//! `load` validates every length against the **actual file size before
+//! allocating** — a corrupt `n` header can no longer drive an
+//! unbounded `vec![0u8; n * 4]` — with checked arithmetic so `n * 4`
+//! cannot overflow on 32-bit targets, and the CRC rejects silent bit
+//! rot.  `save` writes to a temp file in the same directory and
+//! `rename`s it into place, so a crash mid-save never leaves a torn
+//! file where a valid checkpoint used to be (the `torn-write@save`
+//! fault probe exercises exactly that crash window).  v1 files
+//! (`QFTCKPT1`, no CRC) remain readable with the same size validation.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 use crate::util::error::{Error, Result};
+use crate::util::fault;
 
-const MAGIC: &[u8; 8] = b"QFTCKPT1";
+const MAGIC_V1: &[u8; 8] = b"QFTCKPT1";
+const MAGIC_V2: &[u8; 8] = b"QFTCKPT2";
+const MAX_NAME_LEN: usize = 4096;
 
-/// Save a named flat parameter vector.
+/// IEEE CRC-32 (reflected, poly 0xEDB88320), table-driven — the
+/// ubiquitous gzip/PNG polynomial, implemented here because the
+/// offline vendor set has no checksum crate.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Save a named flat parameter vector (format v2, atomic).
 pub fn save(path: &Path, name: &str, params: &[f32]) -> Result<()> {
+    let name_bytes = name.as_bytes();
+    if name_bytes.len() > MAX_NAME_LEN {
+        return Err(Error::msg(format!(
+            "checkpoint name is {} bytes (max {MAX_NAME_LEN})",
+            name_bytes.len()
+        )));
+    }
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(MAGIC)?;
-    let name_bytes = name.as_bytes();
-    f.write_all(&(name_bytes.len() as u32).to_le_bytes())?;
-    f.write_all(name_bytes)?;
-    f.write_all(&(params.len() as u64).to_le_bytes())?;
-    // bulk-write the payload
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(params.as_ptr() as *const u8, params.len() * 4)
-    };
-    f.write_all(bytes)?;
+    // assemble the CRC-covered body: name_len | name | n | payload
+    let mut body = Vec::with_capacity(4 + name_bytes.len() + 8 + params.len() * 4);
+    body.extend_from_slice(&(name_bytes.len() as u32).to_le_bytes());
+    body.extend_from_slice(name_bytes);
+    body.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    for &v in params {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    let crc = crc32(&body);
+    // write-then-rename: the destination either keeps its old contents
+    // or atomically becomes the complete new checkpoint
+    let tmp = tmp_path(path);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(MAGIC_V2)?;
+    f.write_all(&crc.to_le_bytes())?;
+    if fault::armed() {
+        if let Some(fault::Fault::TornWrite) = fault::probe("save") {
+            // simulate a crash mid-save: half the body reaches the temp
+            // file, the rename never happens — any previous checkpoint
+            // at `path` must survive untouched
+            f.write_all(&body[..body.len() / 2])?;
+            drop(f);
+            return Err(Error::msg(format!(
+                "injected fault: torn write to {}",
+                tmp.display()
+            )));
+        }
+    }
+    f.write_all(&body)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
-/// Load a checkpoint; returns (name, params).
-pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
-    let mut f = std::fs::File::open(path)?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())));
+/// Bounds-checked little-endian reads over an in-memory image.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            return Err(Error::Data(format!(
+                "checkpoint truncated: need {n} bytes at offset {}, file has {}",
+                self.pos,
+                self.buf.len()
+            )));
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
     }
-    let mut len4 = [0u8; 4];
-    f.read_exact(&mut len4)?;
-    let name_len = u32::from_le_bytes(len4) as usize;
-    if name_len > 4096 {
-        return Err(Error::msg("checkpoint name too long"));
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
-    let mut name_bytes = vec![0u8; name_len];
-    f.read_exact(&mut name_bytes)?;
-    let name = String::from_utf8(name_bytes).map_err(|_| Error::msg("bad checkpoint name"))?;
-    let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8)?;
-    let n = u64::from_le_bytes(len8) as usize;
-    let mut bytes = vec![0u8; n * 4];
-    f.read_exact(&mut bytes)?;
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Parse `name_len | name | n | payload` with every length validated
+/// against the in-memory image (== the real file size) before any
+/// payload-sized allocation.
+fn parse_body(body: &[u8]) -> Result<(String, Vec<f32>)> {
+    let mut cur = Cursor { buf: body, pos: 0 };
+    let name_len = cur.u32()? as usize;
+    if name_len > MAX_NAME_LEN {
+        return Err(Error::Data(format!(
+            "checkpoint name length {name_len} exceeds max {MAX_NAME_LEN}"
+        )));
+    }
+    let name_bytes = cur.take(name_len)?;
+    let name = String::from_utf8(name_bytes.to_vec())
+        .map_err(|_| Error::Data("checkpoint name is not UTF-8".into()))?;
+    let n = cur.u64()?;
+    // validate the declared count against the bytes actually present
+    // BEFORE sizing any allocation; checked u64 math so `n * 4` cannot
+    // wrap (and the usize conversion cannot truncate on 32-bit)
+    let payload_bytes =
+        n.checked_mul(4).ok_or_else(|| Error::Data(format!("checkpoint count {n} overflows")))?;
+    if payload_bytes != cur.remaining() as u64 {
+        return Err(Error::Data(format!(
+            "checkpoint declares {payload_bytes} payload bytes but {} are present",
+            cur.remaining()
+        )));
+    }
+    let n = usize::try_from(n)
+        .map_err(|_| Error::Data(format!("checkpoint count {n} exceeds this target's usize")))?;
+    let payload = cur.take(n * 4)?;
     let mut params = vec![0.0f32; n];
-    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-        params[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    for (p, chunk) in params.iter_mut().zip(payload.chunks_exact(4)) {
+        *p = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
     }
     Ok((name, params))
+}
+
+/// Load a checkpoint (v2 or legacy v1); returns (name, params).
+/// Corrupt, truncated, or oversized-header files are rejected with a
+/// structured error — never a panic, never an allocation beyond the
+/// file's own size.
+pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
+    // one read bounded by the real file size; all subsequent parsing
+    // is bounds-checked against it
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < 8 {
+        return Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())));
+    }
+    let (magic, rest) = bytes.split_at(8);
+    if magic == MAGIC_V2 {
+        if rest.len() < 4 {
+            return Err(Error::Data(format!("{}: truncated before CRC", path.display())));
+        }
+        let (crc_bytes, body) = rest.split_at(4);
+        let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        let got = crc32(body);
+        if got != want {
+            return Err(Error::Data(format!(
+                "{}: CRC mismatch (file {want:#010x}, computed {got:#010x})",
+                path.display()
+            )));
+        }
+        parse_body(body)
+    } else if magic == MAGIC_V1 {
+        parse_body(rest)
+    } else {
+        Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qft_ckpt_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // the standard IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("qft_ckpt_test");
+        let dir = tdir("roundtrip");
         let path = dir.join("a.bin");
         let params: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
         save(&path, "test_model", &params).unwrap();
         let (name, loaded) = load(&path).unwrap();
         assert_eq!(name, "test_model");
         assert_eq!(loaded, params);
+        // empty payload is a valid checkpoint
+        let path2 = dir.join("empty.bin");
+        save(&path2, "none", &[]).unwrap();
+        assert_eq!(load(&path2).unwrap(), ("none".to_string(), vec![]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_over_existing_file() {
+        let dir = tdir("atomic");
+        let path = dir.join("a.bin");
+        save(&path, "first", &[1.0, 2.0]).unwrap();
+        save(&path, "second", &[3.0]).unwrap();
+        assert_eq!(load(&path).unwrap(), ("second".to_string(), vec![3.0]));
+        assert!(!tmp_path(&path).exists(), "temp file must not survive a successful save");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("qft_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tdir("garbage");
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+        std::fs::write(&path, b"QFT").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncation_and_bit_rot() {
+        let dir = tdir("corrupt");
+        let path = dir.join("a.bin");
+        let params: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        save(&path, "m", &params).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // truncated at every prefix boundary of interest
+        for cut in [7, 11, 13, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load(&path).is_err(), "accepted a {cut}-byte prefix");
+        }
+        // single flipped payload bit → CRC mismatch
+        let mut rot = good.clone();
+        let last = rot.len() - 1;
+        rot[last] ^= 0x01;
+        std::fs::write(&path, &rot).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "bit rot not caught by CRC: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_oversized_count_without_allocating() {
+        let dir = tdir("oversize");
+        let path = dir.join("huge.bin");
+        // a v1 header claiming u64::MAX params in a 30-byte file: the
+        // pre-hardening loader computed `n * 4` (wrapping) and tried to
+        // allocate it; now it must fail on the size check
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(b"hi");
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        // same header via v2 with a *valid* CRC: still rejected on size
+        let body = &bytes[8..];
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(MAGIC_V2);
+        v2.extend_from_slice(&crc32(body).to_le_bytes());
+        v2.extend_from_slice(body);
+        std::fs::write(&path, &v2).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_legacy_v1() {
+        let dir = tdir("v1");
+        let path = dir.join("old.bin");
+        let params = [0.5f32, -1.25, 3.0];
+        // byte-for-byte what the v1 writer produced
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&5u32.to_le_bytes());
+        bytes.extend_from_slice(b"old_m");
+        bytes.extend_from_slice(&(params.len() as u64).to_le_bytes());
+        for v in params {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let (name, loaded) = load(&path).unwrap();
+        assert_eq!(name, "old_m");
+        assert_eq!(loaded, params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_oversized_name() {
+        let dir = tdir("name");
+        let err = save(&dir.join("x.bin"), &"n".repeat(MAX_NAME_LEN + 1), &[1.0]);
+        assert!(err.is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -11,6 +11,31 @@ use crate::data::vocab::{BOS, EOS, PAD, SEP};
 use crate::runtime::session::Session;
 use crate::util::error::{Error, Result};
 
+/// NaN-safe argmax over f64 scores: the index of the largest value by
+/// `total_cmp` with NaN entries excluded (a single NaN score must not
+/// panic the comparator — `partial_cmp(..).unwrap()` did — nor hijack
+/// the choice, since `total_cmp` orders NaN above +inf).  Ties keep
+/// the later index, matching `Iterator::max_by` on finite inputs; an
+/// all-NaN (or empty) slice falls back to index 0.
+fn argmax_total_f64(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// NaN-safe argmax over f32 logits (see [`argmax_total_f64`]).
+fn argmax_total_f32(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Log-softmax value of `target` within one `[vocab]` logit row.
 fn logprob_of(logits_row: &[f32], target: usize) -> f64 {
     let mx = logits_row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
@@ -82,12 +107,7 @@ pub fn eval_choice(session: &Session, theta: &[f32], examples: &[Example]) -> Re
     }
     let mut correct = 0usize;
     for (ei, ex) in examples.iter().enumerate() {
-        let best = scores[ei]
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
+        let best = argmax_total_f64(&scores[ei]);
         if best == ex.correct {
             correct += 1;
         }
@@ -142,12 +162,7 @@ pub fn greedy_decode(
                 }
                 let pos = sq.len() - 1;
                 let lrow = &logits[(k * s + pos) * vocab..(k * s + pos + 1) * vocab];
-                let next = lrow
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap();
+                let next = argmax_total_f32(lrow) as i32;
                 sq.push(next);
                 if next == EOS as i32 {
                     done[k] = true;
@@ -220,5 +235,22 @@ mod tests {
     fn logprob_prefers_larger_logit() {
         let logits = vec![0.0f32, 5.0, 1.0];
         assert!(logprob_of(&logits, 1) > logprob_of(&logits, 0));
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // regression: a NaN logit/score used to panic the evaluator's
+        // `partial_cmp(..).unwrap()` comparator — and must not win the
+        // argmax either
+        assert_eq!(argmax_total_f32(&[1.0, f32::NAN, 3.0, 2.0]), 2);
+        assert_eq!(argmax_total_f32(&[f32::NAN, 1.0]), 1);
+        assert_eq!(argmax_total_f32(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_total_f32(&[]), 0);
+        assert_eq!(argmax_total_f64(&[f64::NAN, -1.0, f64::NEG_INFINITY]), 1);
+        // -inf is a value, not an absence: it can still win
+        assert_eq!(argmax_total_f64(&[f64::NAN, f64::NEG_INFINITY]), 1);
+        // finite behavior unchanged: last max wins ties, like max_by
+        assert_eq!(argmax_total_f32(&[2.0, 5.0, 5.0, 1.0]), 2);
+        assert_eq!(argmax_total_f64(&[0.5, 0.25]), 0);
     }
 }

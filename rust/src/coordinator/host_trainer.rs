@@ -58,6 +58,16 @@ pub struct HostTrainConfig {
     pub log_every: usize,
     /// Stop after this many evals without val improvement (None = never).
     pub patience: Option<usize>,
+    /// Anomaly recovery (DESIGN.md §11): on a non-finite loss or
+    /// grad-norm the trainer rolls back to the best checkpoint, resets
+    /// the optimizer moments, and scales the learning rate by
+    /// `anomaly_backoff`; after this many rollbacks it gives up and
+    /// returns a `TrainOutcome` with `diverged = true`.  Recovery is
+    /// pure detection — a run that never trips an anomaly is bitwise
+    /// identical to one trained with recovery disabled.
+    pub anomaly_retries: usize,
+    /// LR multiplier applied at each anomaly rollback (≤ 1).
+    pub anomaly_backoff: f32,
 }
 
 impl Default for HostTrainConfig {
@@ -78,6 +88,8 @@ impl Default for HostTrainConfig {
             eval_every: 20,
             log_every: 20,
             patience: None,
+            anomaly_retries: 3,
+            anomaly_backoff: 0.5,
         }
     }
 }
@@ -319,6 +331,9 @@ pub fn finetune_host<M: TrainableModel>(
     let mut val_curve = vec![];
     let mut since_best = 0usize;
     let mut steps_run = 0usize;
+    let mut anomalies = 0usize;
+    let mut diverged = false;
+    let mut lr_scale = 1.0f32;
 
     for step in 0..cfg.steps {
         for (slot, &i) in sampler.next_indices(cfg.batch).iter().enumerate() {
@@ -326,11 +341,48 @@ pub fn finetune_host<M: TrainableModel>(
             ys[slot * ex..(slot + 1) * ex].copy_from_slice(&train_y[i * ex..(i + 1) * ex]);
         }
         let (pred, tape) = model.forward_with_tape(&xs, cfg.batch)?;
-        let (loss, dpred) = mse_grad(&pred, &ys);
+        let (mut loss, dpred) = mse_grad(&pred, &ys);
+        // `nan@loss:n` probe: the injected anomaly the rollback tests
+        // recover from
+        if crate::util::fault::armed() {
+            if let Some(crate::util::fault::Fault::Nan) = crate::util::fault::probe("loss") {
+                loss = f64::NAN;
+            }
+        }
         // parameter gradients only — the input gradient is never used here
         let mut grads = model.backward_flat(&tape, &dpred, cfg.batch)?;
-        clip_global_norm(&mut grads, cfg.clip);
-        adam.step_at(&mut params, &grads, sched.at(step));
+        let grad_norm = clip_global_norm(&mut grads, cfg.clip);
+        if !loss.is_finite() || !grad_norm.is_finite() {
+            // anomaly: never let a non-finite update touch the
+            // parameters.  Roll back to the best checkpoint (the init
+            // params before the first eval), drop the stale Adam
+            // moments (they were computed on the diverged trajectory),
+            // and back the learning rate off; give up after the
+            // configured number of retries.
+            anomalies += 1;
+            params.copy_from_slice(&best_theta);
+            model.set_params(&params)?;
+            if anomalies > cfg.anomaly_retries {
+                info!(
+                    "host trainer diverged at step {step}: anomaly {anomalies} exceeds \
+                     {} retries, giving up at the best checkpoint",
+                    cfg.anomaly_retries
+                );
+                diverged = true;
+                break;
+            }
+            adam = Adam::new(params.len(), cfg);
+            lr_scale *= cfg.anomaly_backoff;
+            info!(
+                "host trainer anomaly at step {step} (loss {loss}, grad norm {grad_norm}): \
+                 rolled back, lr scale now {lr_scale}"
+            );
+            continue;
+        }
+        // the guard keeps the untripped trajectory bitwise identical:
+        // `lr_scale` only multiplies once an anomaly has fired
+        let lr = if anomalies == 0 { sched.at(step) } else { sched.at(step) * lr_scale };
+        adam.step_at(&mut params, &grads, lr);
         model.set_params(&params)?;
         steps_run = step + 1;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
@@ -366,6 +418,8 @@ pub fn finetune_host<M: TrainableModel>(
         val_curve,
         steps_run,
         wallclock_s: start.elapsed().as_secs_f64(),
+        anomalies,
+        diverged,
     })
 }
 
@@ -570,5 +624,24 @@ mod tests {
         let o2 = finetune_host(&mut s2, &task, &cfg).unwrap();
         assert_eq!(o1.final_theta, o2.final_theta);
         assert_eq!(o1.loss_curve, o2.loss_curve);
+    }
+
+    #[test]
+    fn anomaly_recovery_is_inert_when_untripped() {
+        // recovery is pure detection: with no anomaly fired, every
+        // recovery hyper-parameter must leave the trajectory bitwise
+        // unchanged (the lr_scale multiply is guarded behind the first
+        // anomaly)
+        let task = tiny_task();
+        let base = HostTrainConfig { steps: 30, batch: 8, ..Default::default() };
+        let tight = HostTrainConfig { anomaly_retries: 0, anomaly_backoff: 0.01, ..base.clone() };
+        let mut s1 = task.student().unwrap();
+        let mut s2 = task.student().unwrap();
+        let o1 = finetune_host(&mut s1, &task, &base).unwrap();
+        let o2 = finetune_host(&mut s2, &task, &tight).unwrap();
+        assert_eq!(o1.final_theta, o2.final_theta);
+        assert_eq!(o1.loss_curve, o2.loss_curve);
+        assert_eq!(o1.anomalies, 0);
+        assert!(!o1.diverged);
     }
 }

@@ -40,6 +40,13 @@ pub struct TrainOutcome {
     pub val_curve: Vec<(usize, f64)>,
     pub steps_run: usize,
     pub wallclock_s: f64,
+    /// Non-finite loss/grad anomalies absorbed by checkpoint rollback
+    /// (host trainer's recovery, DESIGN.md §11; always 0 on the PJRT
+    /// path).
+    pub anomalies: usize,
+    /// True when anomaly retries were exhausted and the run gave up at
+    /// the best checkpoint instead of finishing its step budget.
+    pub diverged: bool,
 }
 
 /// Compute mean validation loss over (up to) `max_batches` eval batches.
@@ -129,6 +136,8 @@ pub fn finetune(
         val_curve,
         steps_run,
         wallclock_s: start.elapsed().as_secs_f64(),
+        anomalies: 0,
+        diverged: false,
     })
 }
 
@@ -162,5 +171,7 @@ pub fn pretrain(
         val_curve: vec![],
         steps_run: total,
         wallclock_s: start.elapsed().as_secs_f64(),
+        anomalies: 0,
+        diverged: false,
     })
 }

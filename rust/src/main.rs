@@ -68,8 +68,11 @@ fn usage() -> ExitCode {
          serve flags:      [--dims 4,4,8] [--heads N] [--d-ff N] [--alpha F] [--seed N]\n\
                            [--params PATH] [--max-batch N] [--requests N] [--prompt-len N]\n\
                            [--gen-len N] [--req-seed N] [--requests-file PATH|-]\n\
+                           [--deadline N] [--token-budget N] [--queue-cap N]\n\
+                           [--shed-policy reject-new|drop-oldest]\n\
                            [--streaming] [--no-verify] (block flags must match the\n\
-                           train-block run that produced --params)"
+                           train-block run that produced --params; request-file rows\n\
+                           may end in 'nan' to inject a poisoned prompt)"
     );
     ExitCode::FAILURE
 }
@@ -446,7 +449,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     use quanta_ft::coordinator::checkpoint;
     use quanta_ft::model::{BlockConfig, TrainableModel, TransformerBlock};
     use quanta_ft::quanta::circuit::all_pairs_structure;
-    use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeRequest};
+    use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeConfig, ServeRequest, ShedPolicy};
     use quanta_ft::util::rng::Rng;
 
     let dims: Vec<usize> = flags
@@ -492,6 +495,22 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     );
 
     let max_batch: usize = flag_or(flags, "max-batch", 8)?;
+    let shed = match flags.get("shed-policy").map(|s| s.as_str()) {
+        None | Some("reject-new") => ShedPolicy::RejectNew,
+        Some("drop-oldest") => ShedPolicy::DropOldest,
+        Some(other) => {
+            return Err(quanta_ft::Error::msg(format!(
+                "bad --shed-policy '{other}' (want reject-new or drop-oldest)"
+            )))
+        }
+    };
+    let serve_cfg = ServeConfig {
+        max_batch,
+        deadline_steps: flag_or(flags, "deadline", 0)?,
+        token_budget: flag_or(flags, "token-budget", 0)?,
+        queue_cap: flag_or(flags, "queue-cap", 0)?,
+        shed,
+    };
     let req_seed: u64 = flag_or(flags, "req-seed", 1)?;
     let mk = |id: u64, p_len: usize, n_gen: usize, stream_seed: u64| -> ServeRequest {
         let mut prompt = vec![0.0f32; p_len * d];
@@ -516,11 +535,17 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
             }
             let bad = || {
                 quanta_ft::Error::msg(format!(
-                    "requests line {}: want 'prompt_len gen_len [seed]', got '{line}'",
+                    "requests line {}: want 'prompt_len gen_len [seed] [nan]', got '{line}'",
                     ln + 1
                 ))
             };
-            let fields: Vec<&str> = line.split_whitespace().collect();
+            let mut fields: Vec<&str> = line.split_whitespace().collect();
+            // trailing 'nan' marker: poison one prompt element to
+            // exercise the per-request error domain end to end
+            let poison = fields.last() == Some(&"nan");
+            if poison {
+                fields.pop();
+            }
             if fields.len() < 2 || fields.len() > 3 {
                 return Err(bad());
             }
@@ -530,7 +555,13 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
                 Some(f) => f.parse().map_err(|_| bad())?,
                 None => req_seed,
             };
-            reqs.push(mk(reqs.len() as u64, p_len, n_gen, s));
+            let mut r = mk(reqs.len() as u64, p_len, n_gen, s);
+            if poison {
+                if let Some(v) = r.prompt.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+            reqs.push(r);
         }
         reqs
     } else {
@@ -547,16 +578,22 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     } else {
         ServeBlock::merged(&block)?
     };
-    let sched = BatchScheduler::new(deployment, max_batch)?;
+    let sched = BatchScheduler::with_config(deployment, serve_cfg)?;
     let (outputs, stats) = sched.run(requests.clone())?;
     let n_req = outputs.len();
-    let mean_latency: f64 =
-        outputs.iter().map(|o| o.steps_resident() as f64).sum::<f64>() / n_req.max(1) as f64;
-    let max_latency = outputs.iter().map(|o| o.steps_resident()).max().unwrap_or(0);
+    // latency over completed requests only — rejected/shed requests
+    // never became resident, quarantined ones would skew the mean
+    let completed: Vec<_> = outputs.iter().filter(|o| o.result.is_ok()).collect();
+    let mean_latency: f64 = completed.iter().map(|o| o.steps_resident() as f64).sum::<f64>()
+        / completed.len().max(1) as f64;
+    let max_latency = completed.iter().map(|o| o.steps_resident()).max().unwrap_or(0);
     let mut t = Table::new(&["metric", "value"]);
     let mode = if streaming_only { "streaming" } else { "merged" };
     t.row(vec!["mode".into(), mode.into()]);
     t.row(vec!["requests served".into(), n_req.to_string()]);
+    t.row(vec!["completed".into(), stats.completed.to_string()]);
+    t.row(vec!["failed".into(), stats.failed.to_string()]);
+    t.row(vec!["shed".into(), stats.shed.to_string()]);
     t.row(vec!["decode steps".into(), stats.steps.to_string()]);
     t.row(vec!["tokens processed".into(), stats.tokens.to_string()]);
     t.row(vec!["peak batch".into(), stats.peak_batch.to_string()]);
@@ -565,15 +602,33 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     t.row(vec!["mean latency (steps)".into(), format!("{mean_latency:.1}")]);
     t.row(vec!["max latency (steps)".into(), max_latency.to_string()]);
     t.print();
+    // per-request error domains: failures are reported, not fatal —
+    // the healthy requests above completed bitwise-unaffected
+    if stats.failed + stats.shed > 0 {
+        let mut et = Table::new(&["request", "error"]);
+        for o in outputs.iter().filter(|o| o.result.is_err()) {
+            if let Some(e) = o.error() {
+                et.row(vec![o.id.to_string(), e.to_string()]);
+            }
+        }
+        et.print();
+    }
     if verify {
         // the zero-overhead contract, end to end: merged serving must
-        // reproduce the streaming adapter forward request for request
-        let streamed = BatchScheduler::new(ServeBlock::streaming(&block), max_batch)?;
+        // reproduce the streaming adapter forward request for request.
+        // Compare only requests that completed in BOTH runs — failed
+        // requests carry errors, not panels (their variants still have
+        // to agree, or one deployment dropped a request silently).
+        let streamed = BatchScheduler::with_config(ServeBlock::streaming(&block), serve_cfg)?;
         let (stream_out, stream_stats) = streamed.run(requests)?;
         let mut max_diff = 0.0f32;
         let mut scale = 1.0f32;
         for (m, s) in outputs.iter().zip(&stream_out) {
-            for (a, b) in m.generated.iter().zip(&s.generated) {
+            if m.result.is_err() || s.result.is_err() {
+                continue;
+            }
+            let (mg, sg) = (m.generated().unwrap_or(&[]), s.generated().unwrap_or(&[]));
+            for (a, b) in mg.iter().zip(sg) {
                 max_diff = max_diff.max((a - b).abs());
                 scale = scale.max(b.abs());
             }

@@ -37,7 +37,7 @@
 //! (not a tolerance) is what makes the scheduler's outputs independent
 //! of arrival order and batch packing.
 
-use crate::compute::gemm;
+use crate::compute::{gemm, pool};
 use crate::model::block::{attn_row, layer_norm, mlp_panel};
 use crate::model::TransformerBlock;
 use crate::quanta::QuantaAdapter;
@@ -236,7 +236,29 @@ impl ServeBlock {
     /// is the per-request ragged part — one [`attn_row`] call per head
     /// against that request's cache, exactly the loop the full forward
     /// runs for its final position.
+    ///
+    /// This is a fault-isolation boundary: a panic anywhere under the
+    /// step (e.g. inside a pool worker's GEMM chunk) is converted to a
+    /// structured [`Error::Compute`](crate::util::error::Error) on the
+    /// caller via [`pool::catching`] instead of unwinding through the
+    /// serving stack, and the pool remains usable for the next step.
     pub fn decode_step(&self, states: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
+        let mut out = pool::catching(|| self.decode_step_inner(states, xs))?;
+        // `nan@decode:n` probe: poison the panel's first element — one
+        // victim request turns non-finite mid-decode, which is exactly
+        // the condition the scheduler's quarantine sweep must catch
+        // without disturbing the other rows.
+        if crate::util::fault::armed() {
+            if let Some(crate::util::fault::Fault::Nan) = crate::util::fault::probe("decode") {
+                if let Some(v) = out.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn decode_step_inner(&self, states: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
         let rows = states.len();
         let d = self.d;
         if xs.len() != rows * d {

@@ -11,13 +11,22 @@
 //! grow-only K/V cache, and [`BatchScheduler`] packs ragged concurrent
 //! requests into pooled panel matmuls with admit/retire between steps.
 //!
+//! Requests are individually fault-isolated (DESIGN.md §11): each
+//! [`ServeOutput`] carries success-or-[`ServeError`], lifecycle limits
+//! (step deadline, token budget, bounded intake queue with a
+//! [`ShedPolicy`]) live on [`ServeConfig`], and healthy requests'
+//! outputs stay bitwise identical to a run without the faulty ones.
+//!
 //! Exposed on the CLI as `quanta-ft serve`; properties (decode ≡
 //! full-recompute per position, merged ≡ streaming at 1e-5, scheduler
-//! invariance under arrival order / `QFT_THREADS` / dispatch mode)
-//! live in `rust/tests/serve_props.rs`.
+//! invariance under arrival order / `QFT_THREADS` / dispatch mode,
+//! per-request isolation of mixed batches) live in
+//! `rust/tests/serve_props.rs`.
 
 pub mod decode;
 pub mod scheduler;
 
 pub use decode::{DecodeState, ServeBlock};
-pub use scheduler::{BatchScheduler, ServeOutput, ServeRequest, ServeStats};
+pub use scheduler::{
+    BatchScheduler, ServeConfig, ServeError, ServeOutput, ServeRequest, ServeStats, ShedPolicy,
+};

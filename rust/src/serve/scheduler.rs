@@ -17,16 +17,40 @@
 //! is fed back as the next input (greedy autoregression in activation
 //! space — this host model has no sampling head).
 //!
-//! **Determinism contract**: per-request outputs depend only on the
-//! request's own prompt — never on arrival order, batch packing,
-//! `max_batch`, `QFT_THREADS`, or the dispatch mode — because every
-//! kernel under the step is per-row batch-invariant (the engine's
-//! chunking contract) and attention reads only the request's own
-//! cache.  `rust/tests/serve_props.rs` pins this **bitwise** across
-//! arrival permutations, batch sizes, and thread counts.  Retired
-//! [`DecodeState`]s are recycled (grow-only capacity) so a long
-//! serving run stops allocating cache once slots have seen their
-//! longest request.
+//! ## Per-request error domains (DESIGN.md §11)
+//!
+//! Each request is its own failure domain.  [`ServeOutput::result`] is
+//! success-or-[`ServeError`]: malformed requests (bad shape, `n_gen`
+//! 0, non-finite prompt, over the token budget) are **rejected at
+//! intake** and never enter the packed panel; a request whose decode
+//! output turns non-finite, or that outlives its step deadline, is
+//! **quarantined** — retired with an error at that step while the rest
+//! of the batch keeps running.  The bounded intake queue sheds
+//! overload per [`ShedPolicy`] instead of growing without limit.
+//!
+//! The key isolation invariant: **healthy requests' outputs are
+//! bitwise identical to a run without the faulty ones.**  It holds by
+//! construction — rejected requests never occupy a panel row, and
+//! every kernel under the step is per-row batch-invariant, so a
+//! quarantined row (even a NaN one: GEMM, layernorm, and attention
+//! never read across rows) cannot perturb any other row's bits, and
+//! neither can the re-packing after it leaves.  `rust/tests/
+//! serve_props.rs` pins this against the healthy-subset run across
+//! thread counts and arrival permutations.
+//!
+//! ## Determinism contract
+//!
+//! Per-request outputs depend only on the request's own prompt — never
+//! on arrival order, batch packing, `max_batch`, `QFT_THREADS`, or the
+//! dispatch mode — because every kernel under the step is per-row
+//! batch-invariant (the engine's chunking contract) and attention
+//! reads only the request's own cache.  `rust/tests/serve_props.rs`
+//! pins this **bitwise** across arrival permutations, batch sizes, and
+//! thread counts.  (Shedding is the deliberate exception: which
+//! requests a full queue sheds depends on arrival order by
+//! definition.)  Retired [`DecodeState`]s are recycled (grow-only
+//! capacity) so a long serving run stops allocating cache once slots
+//! have seen their longest request.
 
 use crate::serve::decode::{DecodeState, ServeBlock};
 use crate::util::error::{Error, Result};
@@ -50,16 +74,108 @@ impl ServeRequest {
     }
 }
 
-/// A finished request: the generated panel plus latency accounting.
+/// Why a request failed — its own error domain, reported per request
+/// on [`ServeOutput::result`] while the rest of the batch runs on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Rejected at intake: malformed shape or `n_gen` 0.
+    Rejected(String),
+    /// Rejected at intake: the prompt's flat element `at` is NaN/±inf.
+    NonFinitePrompt { at: usize },
+    /// Rejected at intake: `prompt_len + n_gen` exceeds the
+    /// per-request token budget.
+    OverBudget { tokens: usize, budget: usize },
+    /// Quarantined mid-flight: the decode output at scheduler step
+    /// `step` (1-based) turned non-finite.
+    NonFiniteOutput { step: usize },
+    /// Quarantined mid-flight: still unfinished after `limit` resident
+    /// scheduler steps.
+    DeadlineExceeded { limit: usize },
+    /// Shed by the bounded intake queue under overload.
+    Shed,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected(m) => write!(f, "rejected: {m}"),
+            ServeError::NonFinitePrompt { at } => {
+                write!(f, "rejected: non-finite prompt element at {at}")
+            }
+            ServeError::OverBudget { tokens, budget } => {
+                write!(f, "rejected: {tokens} tokens over budget {budget}")
+            }
+            ServeError::NonFiniteOutput { step } => {
+                write!(f, "quarantined: non-finite output at step {step}")
+            }
+            ServeError::DeadlineExceeded { limit } => {
+                write!(f, "quarantined: deadline of {limit} steps exceeded")
+            }
+            ServeError::Shed => write!(f, "shed: intake queue full"),
+        }
+    }
+}
+
+/// What to do when the bounded intake queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the arriving request (the queue keeps its oldest work).
+    RejectNew,
+    /// Drop the oldest waiting request to make room for the arrival
+    /// (freshest-work-wins, e.g. when stale requests have expired
+    /// client-side anyway).
+    DropOldest,
+}
+
+/// Request lifecycle controls for one [`BatchScheduler`].  `0` means
+/// "unlimited" for every limit, so `ServeConfig::default()` (plus a
+/// `max_batch`) reproduces the unconstrained scheduler exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Cap on concurrently-active requests (≥ 1).
+    pub max_batch: usize,
+    /// Max scheduler steps a request may stay resident before it is
+    /// quarantined with [`ServeError::DeadlineExceeded`] (0 = none).
+    /// A request needs `prompt_len + n_gen − 1` resident steps.
+    pub deadline_steps: usize,
+    /// Max `prompt_len + n_gen` tokens per request; larger requests
+    /// are rejected at intake with [`ServeError::OverBudget`] (0 =
+    /// none).
+    pub token_budget: usize,
+    /// Bound on the intake queue; arrivals beyond it are shed per
+    /// [`ShedPolicy`] (0 = unbounded).
+    pub queue_cap: usize,
+    /// Shed policy for a full intake queue.
+    pub shed: ShedPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            deadline_steps: 0,
+            token_budget: 0,
+            queue_cap: 0,
+            shed: ShedPolicy::RejectNew,
+        }
+    }
+}
+
+/// A finished request: the generated panel (or the request's own
+/// [`ServeError`]) plus latency accounting.
 #[derive(Clone, Debug)]
 pub struct ServeOutput {
     pub id: u64,
     pub prompt_len: usize,
-    /// Row-major `[n_gen, d]` generated vectors.
-    pub generated: Vec<f32>,
-    /// Scheduler iteration at which the request was admitted.
+    /// Row-major `[n_gen, d]` generated vectors, or why this request
+    /// failed.  Failures are per-request: other outputs in the same
+    /// run are unaffected (bitwise).
+    pub result: std::result::Result<Vec<f32>, ServeError>,
+    /// Scheduler iteration at which the request was admitted (0 for
+    /// requests rejected or shed at intake).
     pub admitted_at: usize,
-    /// Scheduler iteration after which the request retired.
+    /// Scheduler iteration after which the request retired (0 for
+    /// requests rejected or shed at intake).
     pub finished_at: usize,
 }
 
@@ -69,6 +185,16 @@ impl ServeOutput {
     pub fn steps_resident(&self) -> usize {
         self.finished_at - self.admitted_at
     }
+
+    /// The generated panel, if the request succeeded.
+    pub fn generated(&self) -> Option<&[f32]> {
+        self.result.as_deref().ok()
+    }
+
+    /// The request's error, if it failed.
+    pub fn error(&self) -> Option<&ServeError> {
+        self.result.as_ref().err()
+    }
 }
 
 /// Aggregate accounting for one [`BatchScheduler::run`].
@@ -77,11 +203,19 @@ pub struct ServeStats {
     /// Scheduler iterations executed.
     pub steps: usize,
     /// Total decode rows processed (Σ per-step active requests) — the
-    /// token-throughput numerator.
+    /// token-throughput numerator.  Includes rows later quarantined.
     pub tokens: usize,
     /// Peak concurrently-active requests.
     pub peak_batch: usize,
     pub wallclock_s: f64,
+    /// Requests retired with their full generated panel.
+    pub completed: usize,
+    /// Requests retired with a [`ServeError`] other than
+    /// [`ServeError::Shed`] (rejected at intake or quarantined
+    /// mid-flight).
+    pub failed: usize,
+    /// Requests shed by the bounded intake queue.
+    pub shed: usize,
 }
 
 impl ServeStats {
@@ -92,6 +226,14 @@ impl ServeStats {
             0.0
         }
     }
+}
+
+/// Index of the first non-finite element of a panel row, if any — the
+/// scheduler's per-token output validation, shared with the
+/// `serve_robustness` bench section so the gated overhead prices
+/// exactly the code the scheduler runs.
+pub fn non_finite_at(row: &[f32]) -> Option<usize> {
+    row.iter().position(|v| !v.is_finite())
 }
 
 /// An admitted request mid-flight.
@@ -107,49 +249,104 @@ struct Active {
 /// Continuous-batching executor for one [`ServeBlock`] deployment.
 pub struct BatchScheduler {
     block: ServeBlock,
-    max_batch: usize,
+    cfg: ServeConfig,
 }
 
 impl BatchScheduler {
-    /// `max_batch` caps concurrently-active requests (≥ 1).
+    /// `max_batch` caps concurrently-active requests (≥ 1); every
+    /// other lifecycle control stays off (see [`ServeConfig`]).
     pub fn new(block: ServeBlock, max_batch: usize) -> Result<BatchScheduler> {
-        if max_batch == 0 {
+        BatchScheduler::with_config(block, ServeConfig { max_batch, ..ServeConfig::default() })
+    }
+
+    /// Full lifecycle-controlled construction.
+    pub fn with_config(block: ServeBlock, cfg: ServeConfig) -> Result<BatchScheduler> {
+        if cfg.max_batch == 0 {
             return Err(Error::Config("scheduler: max_batch must be >= 1".into()));
         }
-        Ok(BatchScheduler { block, max_batch })
+        Ok(BatchScheduler { block, cfg })
     }
 
     pub fn block(&self) -> &ServeBlock {
         &self.block
     }
 
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Why `r` must not enter the packed panel, if anything.
+    fn validate(&self, r: &ServeRequest, d: usize) -> Option<ServeError> {
+        if r.prompt.is_empty() || r.prompt.len() % d != 0 {
+            return Some(ServeError::Rejected(format!(
+                "prompt len {} not a non-empty multiple of d {d}",
+                r.prompt.len()
+            )));
+        }
+        if r.n_gen == 0 {
+            return Some(ServeError::Rejected("n_gen must be >= 1".into()));
+        }
+        let tokens = r.prompt_len(d) + r.n_gen;
+        if self.cfg.token_budget > 0 && tokens > self.cfg.token_budget {
+            return Some(ServeError::OverBudget { tokens, budget: self.cfg.token_budget });
+        }
+        if let Some(at) = non_finite_at(&r.prompt) {
+            return Some(ServeError::NonFinitePrompt { at });
+        }
+        None
+    }
+
     /// Drive `requests` (admitted in the given order as slots free up)
     /// to completion; outputs are returned **sorted by id** so callers
     /// and tests compare runs independently of completion order.
+    ///
+    /// Per-request failures land on [`ServeOutput::result`], never on
+    /// this function's `Err` — that is reserved for deployment-level
+    /// faults (a panicking compute job surfaces here as
+    /// `Error::Compute`; the pool itself stays usable).
     pub fn run(&self, requests: Vec<ServeRequest>) -> Result<(Vec<ServeOutput>, ServeStats)> {
         let d = self.block.d();
-        for r in &requests {
-            if r.prompt.is_empty() || r.prompt.len() % d != 0 {
-                return Err(Error::Shape(format!(
-                    "request {}: prompt len {} not a non-empty multiple of d {d}",
-                    r.id,
-                    r.prompt.len()
-                )));
-            }
-            if r.n_gen == 0 {
-                return Err(Error::Config(format!("request {}: n_gen must be >= 1", r.id)));
-            }
-        }
         let start = std::time::Instant::now();
-        let mut queue = std::collections::VecDeque::from(requests);
-        let mut active: Vec<Active> = Vec::new();
-        let mut free_states: Vec<DecodeState> = Vec::new();
         let mut outputs = Vec::new();
         let mut stats = ServeStats::default();
+        // intake: reject invalid requests (their own error domain —
+        // they never touch the panel), then bound the queue
+        let mut queue: std::collections::VecDeque<ServeRequest> = std::collections::VecDeque::new();
+        let intake = |r: &ServeRequest, e: ServeError| ServeOutput {
+            id: r.id,
+            prompt_len: r.prompt_len(d),
+            result: Err(e),
+            admitted_at: 0,
+            finished_at: 0,
+        };
+        for r in requests {
+            if let Some(e) = self.validate(&r, d) {
+                outputs.push(intake(&r, e));
+                stats.failed += 1;
+                continue;
+            }
+            if self.cfg.queue_cap > 0 && queue.len() >= self.cfg.queue_cap {
+                match self.cfg.shed {
+                    ShedPolicy::RejectNew => {
+                        outputs.push(intake(&r, ServeError::Shed));
+                        stats.shed += 1;
+                        continue;
+                    }
+                    ShedPolicy::DropOldest => {
+                        let old = queue.pop_front().expect("queue_cap > 0 and queue full");
+                        outputs.push(intake(&old, ServeError::Shed));
+                        stats.shed += 1;
+                    }
+                }
+            }
+            queue.push_back(r);
+        }
+        let mut active: Vec<Active> = Vec::new();
+        let mut free_states: Vec<DecodeState> = Vec::new();
         let mut xs: Vec<f32> = Vec::new();
         while !queue.is_empty() || !active.is_empty() {
             // admit into free slots, preserving arrival order
-            while active.len() < self.max_batch {
+            while active.len() < self.cfg.max_batch {
                 let Some(req) = queue.pop_front() else { break };
                 let mut state = free_states.pop().unwrap_or_else(|| DecodeState::new(d));
                 state.reset();
@@ -179,15 +376,31 @@ impl BatchScheduler {
             drop(states);
             stats.steps += 1;
             stats.tokens += active.len();
-            // hand out rows; retire finished requests.  The panel row
-            // of request `i` is `out[i*d..]` in the PRE-retire active
-            // order, so the sweep drains the old vec and rebuilds the
-            // survivor list — removing in place (swap_remove) would
-            // silently remap later requests onto the wrong rows.
+            // hand out rows; retire finished requests and quarantine
+            // faulty ones.  The panel row of request `i` is
+            // `out[i*d..]` in the PRE-retire active order, so the
+            // sweep drains the old vec and rebuilds the survivor list
+            // — removing in place (swap_remove) would silently remap
+            // later requests onto the wrong rows.
             let old = std::mem::take(&mut active);
             for (i, mut a) in old.into_iter().enumerate() {
                 let row = &out[i * d..(i + 1) * d];
                 a.fed += 1;
+                // quarantine a non-finite output immediately: the row
+                // never feeds back, and per-row kernel invariance means
+                // it never touched any other request's bits either
+                if non_finite_at(row).is_some() {
+                    outputs.push(ServeOutput {
+                        id: a.req.id,
+                        prompt_len: a.req.prompt_len(d),
+                        result: Err(ServeError::NonFiniteOutput { step: stats.steps }),
+                        admitted_at: a.admitted_at,
+                        finished_at: stats.steps,
+                    });
+                    stats.failed += 1;
+                    free_states.push(a.state);
+                    continue;
+                }
                 // the output at the last prompt position is the first
                 // generated vector; earlier prefill outputs are scored
                 // but not part of the response
@@ -198,10 +411,28 @@ impl BatchScheduler {
                     outputs.push(ServeOutput {
                         id: a.req.id,
                         prompt_len: a.req.prompt_len(d),
-                        generated: a.generated,
+                        result: Ok(a.generated),
                         admitted_at: a.admitted_at,
                         finished_at: stats.steps,
                     });
+                    stats.completed += 1;
+                    free_states.push(a.state);
+                } else if self.cfg.deadline_steps > 0
+                    && stats.steps - a.admitted_at >= self.cfg.deadline_steps
+                {
+                    // unfinished at its deadline: quarantine (partial
+                    // output is dropped — clients see an error, not a
+                    // truncated panel silently posing as complete)
+                    outputs.push(ServeOutput {
+                        id: a.req.id,
+                        prompt_len: a.req.prompt_len(d),
+                        result: Err(ServeError::DeadlineExceeded {
+                            limit: self.cfg.deadline_steps,
+                        }),
+                        admitted_at: a.admitted_at,
+                        finished_at: stats.steps,
+                    });
+                    stats.failed += 1;
                     free_states.push(a.state);
                 } else {
                     active.push(a);
@@ -233,6 +464,10 @@ mod tests {
         ServeRequest { id, prompt, n_gen }
     }
 
+    fn gen(o: &ServeOutput) -> Vec<f32> {
+        o.generated().unwrap_or_else(|| panic!("request {} failed: {:?}", o.id, o.error())).to_vec()
+    }
+
     #[test]
     fn scheduler_matches_single_request_decode() {
         // a request served alone equals the same request served in a
@@ -251,36 +486,114 @@ mod tests {
         assert_eq!(solo_out.len(), crowd_out.len());
         for (a, b) in solo_out.iter().zip(&crowd_out) {
             assert_eq!(a.id, b.id);
-            assert_eq!(a.generated, b.generated, "request {} diverged across batches", a.id);
+            assert_eq!(gen(a), gen(b), "request {} diverged across batches", a.id);
         }
         assert!(stats.peak_batch > 1, "crowd run never actually batched");
+        assert_eq!(stats.completed, 5);
+        assert_eq!(stats.failed + stats.shed, 0);
         let want_tokens: usize = solo_out
             .iter()
-            .map(|o| o.prompt_len + o.generated.len() / d - 1)
+            .map(|o| o.prompt_len + gen(o).len() / d - 1)
             .sum();
         assert_eq!(stats.tokens, want_tokens);
     }
 
     #[test]
-    fn scheduler_rejects_bad_requests() {
+    fn bad_requests_fail_alone_not_the_batch() {
+        // one batch: malformed shapes, n_gen 0, a NaN prompt, and a
+        // healthy request — the healthy one completes bitwise equal to
+        // being served alone, each bad one carries its own error
         let mut rng = Rng::new(92);
         let sb = tiny_serve_block(&mut rng);
-        let sched = BatchScheduler::new(sb.clone(), 2).unwrap();
-        let bad_len = ServeRequest { id: 0, prompt: vec![0.0; 3], n_gen: 1 };
-        assert!(sched.run(vec![bad_len]).is_err());
-        let empty = ServeRequest { id: 1, prompt: vec![], n_gen: 1 };
-        assert!(sched.run(vec![empty]).is_err());
-        let no_gen = ServeRequest { id: 2, prompt: vec![0.0; 4], n_gen: 0 };
-        assert!(sched.run(vec![no_gen]).is_err());
-        assert!(BatchScheduler::new(sb, 0).is_err());
-        let (out, stats) = sched.run(vec![]).unwrap();
+        let d = sb.d();
+        let good = mk_request(9, d, 2, 3, &mut rng);
+        let mut nan_prompt = mk_request(3, d, 2, 2, &mut rng);
+        nan_prompt.prompt[d + 1] = f32::NAN;
+        let batch = vec![
+            ServeRequest { id: 0, prompt: vec![0.0; 3], n_gen: 1 },
+            ServeRequest { id: 1, prompt: vec![], n_gen: 1 },
+            ServeRequest { id: 2, prompt: vec![0.0; d], n_gen: 0 },
+            nan_prompt,
+            good.clone(),
+        ];
+        let sched = BatchScheduler::new(sb, 2).unwrap();
+        let (out, stats) = sched.run(batch).unwrap();
+        assert_eq!(out.len(), 5);
+        assert!(matches!(out[0].error(), Some(ServeError::Rejected(_))));
+        assert!(matches!(out[1].error(), Some(ServeError::Rejected(_))));
+        assert!(matches!(out[2].error(), Some(ServeError::Rejected(_))));
+        assert_eq!(out[3].error(), Some(&ServeError::NonFinitePrompt { at: d + 1 }));
+        let (solo, _) = sched.run(vec![good]).unwrap();
+        assert_eq!(out[4].result, solo[0].result, "healthy request perturbed by bad peers");
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.failed, 4);
+        assert_eq!(stats.shed, 0);
+        // config-level errors still fail construction / stay Ok-empty
+        let mut rng2 = Rng::new(921);
+        assert!(BatchScheduler::new(tiny_serve_block(&mut rng2), 0).is_err());
+        let sched2 = BatchScheduler::new(tiny_serve_block(&mut rng2), 2).unwrap();
+        let (out, stats) = sched2.run(vec![]).unwrap();
         assert!(out.is_empty());
         assert_eq!(stats.steps, 0);
     }
 
     #[test]
-    fn latency_accounting_is_consistent() {
+    fn deadline_and_budget_quarantine_individually() {
         let mut rng = Rng::new(93);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        // needs 2 + 8 - 1 = 9 resident steps; deadline is 4
+        let long = mk_request(0, d, 2, 8, &mut rng);
+        // needs 2 + 2 - 1 = 3 steps; fits
+        let short = mk_request(1, d, 2, 2, &mut rng);
+        // 12 tokens > budget 10
+        let fat = mk_request(2, d, 6, 6, &mut rng);
+        let cfg = ServeConfig {
+            max_batch: 4,
+            deadline_steps: 4,
+            token_budget: 10,
+            ..ServeConfig::default()
+        };
+        let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (out, stats) = sched.run(vec![long, short.clone(), fat]).unwrap();
+        assert_eq!(out[0].error(), Some(&ServeError::DeadlineExceeded { limit: 4 }));
+        assert_eq!(out[0].steps_resident(), 4);
+        assert_eq!(out[2].error(), Some(&ServeError::OverBudget { tokens: 12, budget: 10 }));
+        let plain = BatchScheduler::new(sb, 4).unwrap();
+        let (solo, _) = plain.run(vec![short]).unwrap();
+        assert_eq!(out[1].result, solo[0].result, "survivor perturbed by quarantined peers");
+        assert_eq!((stats.completed, stats.failed, stats.shed), (1, 2, 0));
+    }
+
+    #[test]
+    fn bounded_queue_sheds_by_policy() {
+        let mut rng = Rng::new(94);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let reqs: Vec<ServeRequest> = (0..5).map(|i| mk_request(i, d, 1, 2, &mut rng)).collect();
+        for (shed, kept) in [
+            (ShedPolicy::RejectNew, [0u64, 1]),
+            (ShedPolicy::DropOldest, [3u64, 4]),
+        ] {
+            let cfg =
+                ServeConfig { max_batch: 1, queue_cap: 2, shed, ..ServeConfig::default() };
+            let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+            let (out, stats) = sched.run(reqs.clone()).unwrap();
+            assert_eq!(stats.shed, 3, "{shed:?}");
+            assert_eq!(stats.completed, 2, "{shed:?}");
+            for o in &out {
+                if kept.contains(&o.id) {
+                    assert!(o.result.is_ok(), "{shed:?}: request {} should survive", o.id);
+                } else {
+                    assert_eq!(o.error(), Some(&ServeError::Shed), "{shed:?}: request {}", o.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn latency_accounting_is_consistent() {
+        let mut rng = Rng::new(95);
         let sb = tiny_serve_block(&mut rng);
         let d = sb.d();
         let reqs: Vec<ServeRequest> = (0..6).map(|i| mk_request(i, d, 2, 3, &mut rng)).collect();
@@ -289,11 +602,12 @@ mod tests {
         for o in &out {
             // prompt_len + n_gen - 1 decode steps per request
             assert_eq!(o.steps_resident(), o.prompt_len + 3 - 1, "request {}", o.id);
-            assert_eq!(o.generated.len(), 3 * d);
+            assert_eq!(gen(o).len(), 3 * d);
         }
         // with max_batch 2 and 6 identical 4-step requests: 12 steps
         assert_eq!(stats.steps, 12);
         assert_eq!(stats.tokens, 24);
         assert_eq!(stats.peak_batch, 2);
+        assert_eq!(stats.completed, 6);
     }
 }

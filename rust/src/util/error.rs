@@ -17,6 +17,11 @@ pub enum Error {
     Config(String),
     Shape(String),
     Data(String),
+    /// A compute job (pool chunk or kernel) panicked; the payload is
+    /// the panic message.  Produced by `compute::pool::catching` so a
+    /// worker panic becomes a structured error on the submitter
+    /// instead of unwinding through the serving stack.
+    Compute(String),
     Msg(String),
 }
 
@@ -32,6 +37,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Shape(m) => write!(f, "shape mismatch: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Compute(m) => write!(f, "compute fault: {m}"),
             Error::Msg(m) => write!(f, "{m}"),
         }
     }

@@ -1,0 +1,190 @@
+//! Deterministic fault injection (`QFT_FAULT`).
+//!
+//! Every failure path in DESIGN.md §11 — a worker panic mid-GEMM, a
+//! non-finite decode row, a NaN loss, a torn checkpoint write — is
+//! reachable on demand, so tests and CI exercise the recovery code
+//! instead of trusting it on inspection.
+//!
+//! Grammar (comma-separated specs in the `QFT_FAULT` env var):
+//!
+//! ```text
+//! spec  ::= kind [ '@' site ] [ ':' count ]
+//! kind  ::= 'panic' | 'nan' | 'torn-write'
+//! ```
+//!
+//! * `site` names a probe point (`gemm`, `decode`, `loss`, `save`);
+//!   omitted ⇒ the spec matches every probing site.
+//! * `count` is the 0-based probe index at which the spec fires, once
+//!   (each site keeps a process-wide counter); omitted ⇒ the spec
+//!   fires at **every** probe — e.g. `nan@loss` makes the trainer's
+//!   loss persistently non-finite, which is how the retry-exhaustion
+//!   path is driven.
+//!
+//! Examples: `panic@gemm:3` panics the 4th GEMM chunk executed by the
+//! process; `nan@decode:7` poisons the 8th decode step's output;
+//! `torn-write` truncates every checkpoint write mid-stream.
+//!
+//! Probes are free when disarmed: call sites guard with [`armed`]
+//! (two relaxed atomic loads) before paying the [`probe`] lock, so the
+//! serve hot path carries no measurable cost in production — the
+//! `serve_robustness` bench gate holds the whole validation layer
+//! (this included) to ≤ 2% per decoded token.
+//!
+//! The env var is read once, lazily; tests that sweep faults call
+//! [`reload`] after changing it (env state is process-global, so such
+//! tests live in ONE `#[test]` per binary — the `pool_props`
+//! convention).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// What an armed probe site should do to itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic at the probe point (pool isolation / catch_unwind path).
+    Panic,
+    /// Poison the probe point's output with a NaN.
+    Nan,
+    /// Abandon a file write partway through (atomicity path).
+    TornWrite,
+}
+
+#[derive(Clone, Debug)]
+struct Spec {
+    kind: Fault,
+    /// `None` matches any probing site.
+    site: Option<String>,
+    /// `None` fires at every probe; `Some(n)` fires only when the
+    /// site's counter equals `n`.
+    at: Option<usize>,
+}
+
+struct State {
+    specs: Vec<Spec>,
+    counts: HashMap<String, usize>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn state() -> &'static Mutex<State> {
+    static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+    STATE.get_or_init(|| {
+        let specs = parse(&std::env::var("QFT_FAULT").unwrap_or_default());
+        ARMED.store(!specs.is_empty(), Ordering::Relaxed);
+        Mutex::new(State { specs, counts: HashMap::new() })
+    })
+}
+
+fn parse(raw: &str) -> Vec<Spec> {
+    let mut specs = Vec::new();
+    for part in raw.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (head, at) = match part.split_once(':') {
+            Some((h, n)) => match n.parse::<usize>() {
+                Ok(n) => (h, Some(n)),
+                Err(_) => {
+                    crate::warnlog!("QFT_FAULT: bad count in {part:?}, spec ignored");
+                    continue;
+                }
+            },
+            None => (part, None),
+        };
+        let (kind_s, site) = match head.split_once('@') {
+            Some((k, s)) => (k, Some(s.to_string())),
+            None => (head, None),
+        };
+        let kind = match kind_s {
+            "panic" => Fault::Panic,
+            "nan" => Fault::Nan,
+            "torn-write" => Fault::TornWrite,
+            other => {
+                crate::warnlog!("QFT_FAULT: unknown kind {other:?}, spec ignored");
+                continue;
+            }
+        };
+        specs.push(Spec { kind, site, at });
+    }
+    specs
+}
+
+/// Cheap hot-path guard: true iff any fault spec is loaded.
+#[inline]
+pub fn armed() -> bool {
+    state();
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Record one probe at `site` and return the fault to inject, if any.
+/// Each call increments the site's process-wide counter; a spec with a
+/// `count` matches exactly one probe.  Call sites act only on the
+/// [`Fault`] kinds that make sense for them and ignore the rest.
+pub fn probe(site: &str) -> Option<Fault> {
+    if !armed() {
+        return None;
+    }
+    let mut st = state().lock().unwrap_or_else(|p| p.into_inner());
+    let n = {
+        let c = st.counts.entry(site.to_string()).or_insert(0);
+        let n = *c;
+        *c += 1;
+        n
+    };
+    st.specs
+        .iter()
+        .find(|s| {
+            let site_ok = match &s.site {
+                None => true,
+                Some(w) => w == site,
+            };
+            let at_ok = match s.at {
+                None => true,
+                Some(at) => at == n,
+            };
+            site_ok && at_ok
+        })
+        .map(|s| s.kind)
+}
+
+/// Re-read `QFT_FAULT` and reset every probe counter.  Test-sweep
+/// entry point; production code never calls this.
+pub fn reload() {
+    let specs = parse(&std::env::var("QFT_FAULT").unwrap_or_default());
+    ARMED.store(!specs.is_empty(), Ordering::Relaxed);
+    let mut st = state().lock().unwrap_or_else(|p| p.into_inner());
+    st.specs = specs;
+    st.counts.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pure-parser tests only: arming via the env var is process-global
+    // state, exercised end-to-end in `rust/tests/fault_props.rs`.
+
+    #[test]
+    fn grammar_parses() {
+        let specs = parse("panic@gemm:3, nan@decode:7 ,torn-write,nan@loss");
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].kind, Fault::Panic);
+        assert_eq!(specs[0].site.as_deref(), Some("gemm"));
+        assert_eq!(specs[0].at, Some(3));
+        assert_eq!(specs[1].kind, Fault::Nan);
+        assert_eq!(specs[1].at, Some(7));
+        assert_eq!(specs[2].kind, Fault::TornWrite);
+        assert_eq!(specs[2].site, None);
+        assert_eq!(specs[2].at, None);
+        assert_eq!(specs[3].kind, Fault::Nan);
+        assert_eq!(specs[3].site.as_deref(), Some("loss"));
+        assert_eq!(specs[3].at, None);
+    }
+
+    #[test]
+    fn bad_specs_are_ignored() {
+        assert!(parse("").is_empty());
+        assert!(parse("  ,  ").is_empty());
+        assert!(parse("explode@gemm:1").is_empty());
+        assert!(parse("panic@gemm:notanumber").is_empty());
+        assert_eq!(parse("junk,nan@decode:0").len(), 1);
+    }
+}

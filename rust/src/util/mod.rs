@@ -4,6 +4,7 @@
 //! so the pieces we need are implemented and tested here).
 
 pub mod error;
+pub mod fault;
 pub mod rng;
 pub mod json;
 pub mod logging;

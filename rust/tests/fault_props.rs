@@ -1,0 +1,197 @@
+//! Fault-injection properties (DESIGN.md §11): every recovery path is
+//! exercised by deterministically injected faults via `QFT_FAULT` —
+//! never trusted on inspection.
+//!
+//! * **Pool panic containment**: a panic inside a pool worker's GEMM
+//!   chunk surfaces as a structured `Error::Compute` through
+//!   `pool::catching` (and through the serve stack's `decode_step`
+//!   boundary), and the pool serves the next job **bitwise** normally
+//!   — no poisoned condvar, no lost worker.
+//! * **Decode quarantine**: an injected non-finite decode row fails
+//!   exactly one request; every other request's output stays bitwise
+//!   equal to the fault-free run.
+//! * **Checkpoint hardening**: a torn (crashed) write never damages
+//!   the previous checkpoint; truncated and bit-rotted files are
+//!   rejected without panic.
+//! * **Trainer rollback**: an injected NaN loss triggers rollback +
+//!   LR backoff and the run still completes; a *persistent* NaN loss
+//!   exhausts the retries and returns a structured diverged outcome.
+//!
+//! Everything lives in ONE `#[test]`: `QFT_FAULT` (like `QFT_THREADS`)
+//! is process-global env state, so sweeping it from parallel test
+//! threads would race (the `pool_props` convention).
+
+use quanta_ft::compute::pool;
+use quanta_ft::coordinator::checkpoint;
+use quanta_ft::coordinator::host_trainer::{finetune_host, val_loss_host, HostTrainConfig};
+use quanta_ft::data::synth::{teacher_student, SynthConfig, SynthTask};
+use quanta_ft::model::{BlockConfig, TrainableModel, TransformerBlock};
+use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeError, ServeRequest};
+use quanta_ft::tensor::Tensor;
+use quanta_ft::util::error::Error;
+use quanta_ft::util::fault;
+use quanta_ft::util::rng::Rng;
+
+fn set_fault(spec: &str) {
+    std::env::set_var("QFT_FAULT", spec);
+    fault::reload();
+}
+
+fn clear_fault() {
+    std::env::remove_var("QFT_FAULT");
+    fault::reload();
+}
+
+fn tiny_task() -> SynthTask {
+    teacher_student(&SynthConfig {
+        dims: vec![2, 2, 2],
+        n_train: 48,
+        n_val: 16,
+        teacher_std: 0.3,
+        noise_std: 0.0,
+        alpha: 1.0,
+        seed: 7,
+    })
+    .unwrap()
+}
+
+#[test]
+fn injected_faults_are_contained() {
+    // ---- (a) pool panic → Error::Compute, pool reusable -------------
+    let mut rng = Rng::new(400);
+    let a = Tensor::randn(&[96, 256], 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 128], 1.0, &mut rng);
+    let baseline = a.matmul(&b).unwrap();
+    {
+        // guard: the probe must actually land inside a parallel region
+        let (_, n_chunks) = pool::chunks(96, 256 * 128);
+        assert!(n_chunks > 2, "matmul too small to fan out ({n_chunks} chunks)");
+    }
+    set_fault("panic@gemm:2");
+    match pool::catching(|| a.matmul(&b)) {
+        Err(Error::Compute(m)) => {
+            assert!(m.contains("injected fault"), "unexpected panic message: {m}")
+        }
+        other => panic!("worker panic not converted to Error::Compute: {other:?}"),
+    }
+    // QFT_FAULT is still armed, but the one-shot spec already fired:
+    // the SAME pool must serve the next job bitwise-correctly (no
+    // poisoned job slot, no lost worker)
+    let after = a.matmul(&b).unwrap();
+    assert_eq!(after.data, baseline.data, "pool output changed after a panicked job");
+    clear_fault();
+
+    // the serve stack converts the panic at its decode_step boundary:
+    // the scheduler run fails structurally, then succeeds again
+    let mut brng = Rng::new(401);
+    let cfg = BlockConfig::standard(vec![2, 2], 2, 3);
+    let mut block = TransformerBlock::init(&cfg, &mut brng).unwrap();
+    block.randomize_circuits(0.2, &mut brng).unwrap();
+    let sb = ServeBlock::merged(&block).unwrap();
+    let d = sb.d();
+    let mk = |id: u64, p_len: usize, n_gen: usize, rng: &mut Rng| {
+        let mut prompt = vec![0.0f32; p_len * d];
+        rng.fill_normal(&mut prompt, 1.0);
+        ServeRequest { id, prompt, n_gen }
+    };
+    let reqs: Vec<ServeRequest> =
+        (0..4).map(|i| mk(i, 2, 3 + (i as usize % 3), &mut brng)).collect();
+    let sched = BatchScheduler::new(sb.clone(), 4).unwrap();
+    let (clean, _) = sched.run(reqs.clone()).unwrap();
+    set_fault("panic@gemm:0");
+    match sched.run(reqs.clone()) {
+        Err(Error::Compute(_)) => {}
+        other => panic!("scheduler did not surface the panic structurally: {other:?}"),
+    }
+    clear_fault();
+    let (again, _) = sched.run(reqs.clone()).unwrap();
+    for (c, g) in clean.iter().zip(&again) {
+        assert_eq!(c.result, g.result, "request {} differs after a panicked run", c.id);
+    }
+
+    // ---- (b) nan@decode quarantines one victim, rest bitwise --------
+    // the probe poisons panel row 0; request 0 is long enough to own
+    // row 0 when the 4th decode step fires
+    let long_reqs: Vec<ServeRequest> =
+        (0..4).map(|i| mk(i, 2, 5, &mut brng)).collect();
+    let (clean, _) = sched.run(long_reqs.clone()).unwrap();
+    set_fault("nan@decode:3");
+    let (faulted, stats) = sched.run(long_reqs.clone()).unwrap();
+    clear_fault();
+    assert_eq!(
+        faulted[0].error(),
+        Some(&ServeError::NonFiniteOutput { step: 4 }),
+        "victim request not quarantined: {:?}",
+        faulted[0].result
+    );
+    for (c, f) in clean.iter().zip(&faulted).skip(1) {
+        assert_eq!(
+            c.result, f.result,
+            "request {} not bitwise equal to the fault-free run",
+            c.id
+        );
+    }
+    assert_eq!((stats.completed, stats.failed, stats.shed), (3, 1, 0));
+
+    // ---- (c) checkpoint torn-write / truncation / bit rot -----------
+    let dir = std::env::temp_dir().join("qft_fault_props_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("theta.bin");
+    let first: Vec<f32> = (0..512).map(|i| (i as f32).cos()).collect();
+    let second: Vec<f32> = (0..512).map(|i| (i as f32).sin()).collect();
+    checkpoint::save(&path, "first", &first).unwrap();
+    set_fault("torn-write@save:0");
+    let torn = checkpoint::save(&path, "second", &second);
+    clear_fault();
+    assert!(torn.is_err(), "torn write must report failure");
+    let (name, params) = checkpoint::load(&path).unwrap();
+    assert_eq!(name, "first");
+    assert_eq!(params, first, "torn write damaged the previous checkpoint");
+    // a clean retry lands atomically
+    checkpoint::save(&path, "second", &second).unwrap();
+    assert_eq!(checkpoint::load(&path).unwrap(), ("second".to_string(), second));
+    // truncation and bit rot are rejected without panic or allocation
+    let good = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    assert!(checkpoint::load(&path).is_err(), "accepted a truncated checkpoint");
+    let mut rot = good.clone();
+    rot[good.len() - 3] ^= 0x40;
+    std::fs::write(&path, &rot).unwrap();
+    let err = checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("CRC"), "bit rot not caught by CRC: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- (d) trainer rollback under injected NaN loss ---------------
+    // one transient anomaly: rollback + LR backoff, run completes
+    let task = tiny_task();
+    let cfg = HostTrainConfig { steps: 40, batch: 8, eval_every: 10, ..Default::default() };
+    set_fault("nan@loss:5");
+    let mut student = task.student().unwrap();
+    let out = finetune_host(&mut student, &task, &cfg).unwrap();
+    clear_fault();
+    assert_eq!(out.anomalies, 1, "transient NaN loss not detected");
+    assert!(!out.diverged);
+    assert_eq!(out.steps_run, 40, "recovered run must finish its step budget");
+    assert!(out.best_val_loss.is_finite());
+    assert!(
+        out.loss_curve.iter().all(|&(_, l)| l.is_finite()),
+        "NaN leaked into the loss curve: {:?}",
+        out.loss_curve
+    );
+    // the best checkpoint still evaluates to its recorded loss
+    student.set_params(&out.best_theta).unwrap();
+    let reloaded = val_loss_host(&student, &task).unwrap();
+    assert!((reloaded - out.best_val_loss).abs() < 1e-12);
+
+    // persistent NaN loss: retries exhaust, structured give-up at the
+    // rolled-back (here: initial) parameters
+    set_fault("nan@loss");
+    let mut student = task.student().unwrap();
+    let init = student.params_flat();
+    let out = finetune_host(&mut student, &task, &cfg).unwrap();
+    clear_fault();
+    assert!(out.diverged, "persistent NaN loss must exhaust retries");
+    assert_eq!(out.anomalies, cfg.anomaly_retries + 1);
+    assert_eq!(out.steps_run, 0, "no clean step ever ran");
+    assert_eq!(out.final_theta, init, "give-up must land on the rollback checkpoint");
+}

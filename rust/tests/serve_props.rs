@@ -18,6 +18,12 @@
 //! * **Scheduler invariance**: per-request outputs are independent of
 //!   arrival order, `max_batch` packing, `QFT_THREADS`, and the
 //!   dispatch mode — bitwise.
+//! * **Per-request fault isolation** (DESIGN.md §11): a mixed batch of
+//!   malformed, NaN-prompt, over-budget, deadline-exceeding, and
+//!   healthy requests completes with structured per-request errors,
+//!   and every healthy request's output is **bitwise identical** to
+//!   serving the healthy subset alone — again across thread counts and
+//!   arrival permutations.
 //!
 //! Everything lives in ONE `#[test]`: `QFT_THREADS` / `QFT_DISPATCH`
 //! are process-global env state, so sweeping them from parallel test
@@ -25,7 +31,9 @@
 //! kernels (same convention as `rust/tests/pool_props.rs`).
 
 use quanta_ft::model::{BlockConfig, TransformerBlock};
-use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeRequest};
+use quanta_ft::serve::{
+    BatchScheduler, ServeBlock, ServeConfig, ServeError, ServeRequest, ShedPolicy,
+};
 use quanta_ft::util::rng::Rng;
 
 fn trained_block(
@@ -61,7 +69,8 @@ fn greedy_recompute(block: &TransformerBlock, prompt: &[f32], n_gen: usize) -> V
     }
 }
 
-/// Per-id generated panels from one scheduler run.
+/// Per-id generated panels from one scheduler run (every request is
+/// expected to succeed).
 fn run_scheduler(
     block: &ServeBlock,
     reqs: Vec<ServeRequest>,
@@ -69,7 +78,12 @@ fn run_scheduler(
 ) -> Vec<(u64, Vec<f32>)> {
     let sched = BatchScheduler::new(block.clone(), max_batch).unwrap();
     let (out, _) = sched.run(reqs).unwrap();
-    out.into_iter().map(|o| (o.id, o.generated)).collect()
+    out.into_iter()
+        .map(|o| {
+            let id = o.id;
+            (id, o.result.unwrap_or_else(|e| panic!("request {id} failed: {e}")))
+        })
+        .collect()
 }
 
 #[test]
@@ -210,4 +224,127 @@ fn decode_parity_and_scheduler_invariance() {
     let sgot = run_scheduler(&ssb, reqs, 16);
     std::env::remove_var("QFT_THREADS");
     assert_eq!(sbase, sgot, "streaming scheduler outputs differ across threads");
+
+    // ---- (d) per-request fault isolation: mixed batch ---------------
+    // malformed + NaN-prompt + over-budget + deadline-exceeding +
+    // healthy requests in one batch: every healthy output must be
+    // bitwise identical to serving the healthy subset alone, across
+    // thread counts and arrival permutations (the §11 isolation
+    // invariant), and every faulty request must carry its own error.
+    let d = big.d();
+    let mut rng = Rng::new(330);
+    let mut healthy = Vec::new();
+    for id in 0..6u64 {
+        let p_len = 1 + (id as usize % 4);
+        let mut prompt = vec![0.0f32; p_len * d];
+        rng.fill_normal(&mut prompt, 1.0);
+        // p_len + n_gen − 1 ≤ 7 resident steps: inside the deadline
+        healthy.push(ServeRequest { id, prompt, n_gen: 2 + (id as usize % 3) });
+    }
+    let mut faulty = Vec::new();
+    faulty.push(ServeRequest { id: 200, prompt: vec![0.0; d + 1], n_gen: 1 });
+    faulty.push(ServeRequest { id: 201, prompt: vec![], n_gen: 1 });
+    faulty.push(ServeRequest { id: 202, prompt: vec![0.0; d], n_gen: 0 });
+    let mut nan_prompt = vec![0.0f32; 2 * d];
+    rng.fill_normal(&mut nan_prompt, 1.0);
+    nan_prompt[d + 3] = f32::NAN;
+    faulty.push(ServeRequest { id: 203, prompt: nan_prompt, n_gen: 2 });
+    let mut slow = vec![0.0f32; 2 * d];
+    rng.fill_normal(&mut slow, 1.0);
+    // 2 + 20 − 1 = 21 resident steps > deadline 8 (tokens 22 ≤ budget)
+    faulty.push(ServeRequest { id: 204, prompt: slow, n_gen: 20 });
+    let mut fat = vec![0.0f32; 20 * d];
+    rng.fill_normal(&mut fat, 1.0);
+    // 20 + 12 = 32 tokens > budget 30
+    faulty.push(ServeRequest { id: 205, prompt: fat, n_gen: 12 });
+    let cfg = ServeConfig {
+        max_batch: 5,
+        deadline_steps: 8,
+        token_budget: 30,
+        ..ServeConfig::default()
+    };
+    let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+    std::env::set_var("QFT_THREADS", "1");
+    let (healthy_only, honly_stats) = sched.run(healthy.clone()).unwrap();
+    assert_eq!(honly_stats.completed, healthy.len(), "healthy subset must all complete");
+    let mut mixed: Vec<ServeRequest> = healthy.iter().cloned().chain(faulty.clone()).collect();
+    let mut orders = vec![mixed.clone()];
+    mixed.reverse();
+    orders.push(mixed.clone());
+    mixed.sort_by_key(|r| (r.id % 2 == 0, r.id));
+    orders.push(mixed);
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("QFT_THREADS", threads);
+        for (oi, order) in orders.iter().enumerate() {
+            let (out, stats) = sched.run(order.clone()).unwrap();
+            let tag = format!("threads {threads} order {oi}");
+            assert_eq!(out.len(), 12, "{tag}");
+            for (h, o) in healthy_only.iter().zip(&out) {
+                assert_eq!(h.id, o.id, "{tag}");
+                assert_eq!(
+                    h.result, o.result,
+                    "{tag}: healthy request {} not bitwise equal to healthy-only run",
+                    h.id
+                );
+            }
+            for o in &out[6..] {
+                match o.id {
+                    200 | 201 | 202 => {
+                        assert!(
+                            matches!(o.error(), Some(ServeError::Rejected(_))),
+                            "{tag}: request {} got {:?}",
+                            o.id,
+                            o.result
+                        );
+                    }
+                    203 => assert_eq!(
+                        o.error(),
+                        Some(&ServeError::NonFinitePrompt { at: d + 3 }),
+                        "{tag}"
+                    ),
+                    204 => assert_eq!(
+                        o.error(),
+                        Some(&ServeError::DeadlineExceeded { limit: 8 }),
+                        "{tag}"
+                    ),
+                    205 => assert_eq!(
+                        o.error(),
+                        Some(&ServeError::OverBudget { tokens: 32, budget: 30 }),
+                        "{tag}"
+                    ),
+                    other => panic!("{tag}: unexpected id {other}"),
+                }
+            }
+            assert_eq!(stats.completed, 6, "{tag}");
+            assert_eq!(stats.failed, 6, "{tag}");
+            assert_eq!(stats.shed, 0, "{tag}");
+        }
+    }
+    std::env::remove_var("QFT_THREADS");
+
+    // bounded intake queue: shedding is arrival-order-dependent by
+    // design, so it is pinned at a fixed order — both policies keep
+    // exactly `queue_cap` requests and the survivors' outputs are
+    // still bitwise equal to serving them alone
+    for (policy, kept) in [(ShedPolicy::RejectNew, [0u64, 1]), (ShedPolicy::DropOldest, [4u64, 5])]
+    {
+        let cfg = ServeConfig {
+            max_batch: 1,
+            queue_cap: 2,
+            shed: policy,
+            ..ServeConfig::default()
+        };
+        let bounded = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (out, stats) = bounded.run(healthy.clone()).unwrap();
+        assert_eq!(stats.shed, 4, "{policy:?}");
+        assert_eq!(stats.completed, 2, "{policy:?}");
+        for o in &out {
+            if kept.contains(&o.id) {
+                let solo = &healthy_only[o.id as usize];
+                assert_eq!(o.result, solo.result, "{policy:?}: survivor {} perturbed", o.id);
+            } else {
+                assert_eq!(o.error(), Some(&ServeError::Shed), "{policy:?}: request {}", o.id);
+            }
+        }
+    }
 }
