@@ -423,13 +423,13 @@ fn block_train_bench() -> (&'static str, Value) {
 
     let mut student = task.student();
     let init = {
-        let pred = student.forward(&task.train_x, task.n_train).unwrap();
+        let pred = student.forward(&task.train_x, task.n_train, task.seq).unwrap();
         mse(&pred, &task.train_y)
     };
     let fit_cfg = HostTrainConfig { steps: 100, batch, eval_every: 25, ..Default::default() };
     let out = finetune_host(&mut student, &task, &fit_cfg).unwrap();
     let fin = {
-        let pred = student.forward(&task.train_x, task.n_train).unwrap();
+        let pred = student.forward(&task.train_x, task.n_train, task.seq).unwrap();
         mse(&pred, &task.train_y)
     };
     let reduction = init / fin.max(1e-300);
@@ -578,7 +578,7 @@ fn serve_decode_bench() -> (&'static str, Value) {
         }
         // decode vs full recompute, one request generating `seq` tokens
         // on merged weights both ways (the recompute side is the merged
-        // block's forward_len over every prefix — the pre-serve path)
+        // block's forward over every prefix — the pre-serve path)
         let merged_block = block.merged().unwrap();
         let mut seq_xs = vec![0.0f32; seq * d];
         rng.fill_normal(&mut seq_xs, 1.0);
@@ -587,7 +587,7 @@ fn serve_decode_bench() -> (&'static str, Value) {
         });
         let st_rec = bench(rwarm, riters, || {
             for t in 0..seq {
-                let _ = merged_block.forward_len(&seq_xs[..(t + 1) * d], 1, t + 1).unwrap();
+                let _ = merged_block.forward(&seq_xs[..(t + 1) * d], 1, t + 1).unwrap();
             }
         });
         let speedup = st_rec.mean_us / st_dec.mean_us;
@@ -620,17 +620,17 @@ fn serve_decode_bench() -> (&'static str, Value) {
 /// scheduler runs (a `non_finite_at` scan of each output row plus the
 /// deadline counter compare) costs a negligible fraction of the decode
 /// step itself.  This section prices exactly that code — the checked
-/// loop calls the same `serve::scheduler::non_finite_at` the scheduler
+/// loop calls the same `util::numeric::non_finite_at` the scheduler
 /// uses — and the CI perf gate holds the overhead at ≤ 2% per token.
 /// A `mixed_batch` entry also re-runs the fault-isolation invariant
 /// (healthy outputs bitwise equal to a healthy-only run) at bench
 /// scale and records the per-request counters.
 fn serve_robustness_bench() -> (&'static str, Value) {
     use quanta_ft::model::{BlockConfig, TransformerBlock};
-    use quanta_ft::serve::scheduler::non_finite_at;
     use quanta_ft::serve::{
         BatchScheduler, DecodeState, ServeBlock, ServeConfig, ServeRequest, ShedPolicy,
     };
+    use quanta_ft::util::numeric::non_finite_at;
 
     banner("serve_robustness", "per-request validation overhead + mixed-batch isolation");
     let batch = 32usize;
@@ -708,13 +708,12 @@ fn serve_robustness_bench() -> (&'static str, Value) {
     mixed.push(poisoned);
     mixed.push(ServeRequest { id: 101, prompt: vec![0.0; d + 1], n_gen: 2 }); // bad shape
     mixed.push(mk(102, 4, 64, &mut rng)); // 68 tokens > budget 32
-    let scfg = ServeConfig {
-        max_batch: 8,
-        deadline_steps: 16,
-        token_budget: 32,
-        queue_cap: 0,
-        shed: ShedPolicy::RejectNew,
-    };
+    let scfg = ServeConfig::default()
+        .with_max_batch(8)
+        .with_deadline(16)
+        .with_token_budget(32)
+        .with_queue_cap(0)
+        .with_shed_policy(ShedPolicy::RejectNew);
     let sched = BatchScheduler::with_config(sb, scfg).unwrap();
     let (healthy_out, _) = sched.run(healthy).unwrap();
     let (mixed_out, stats) = sched.run(mixed).unwrap();
@@ -745,6 +744,123 @@ fn serve_robustness_bench() -> (&'static str, Value) {
             ),
         ]),
     )
+}
+
+/// Deep-train microbench: full Adam step cost of the depth-N stack at
+/// d = 256 and depth ∈ {1, 2, 4}.  The layer-major backward makes the
+/// per-step cost linear in depth; the recorded `us_per_token` divides
+/// by the `batch_seqs × seq` tokens each step consumes.
+fn deep_train_bench() -> (&'static str, Value) {
+    use quanta_ft::coordinator::host_trainer::{clip_global_norm, mse_grad, Adam, HostTrainConfig};
+    use quanta_ft::data::synth::{deep_teacher_student, DeepSynthConfig};
+    use quanta_ft::model::TrainableModel;
+
+    banner("deep_train", "depth-N stack full Adam step across depths");
+    let batch = 4usize; // sequences per step
+    let mut entries = vec![];
+    for depth in [1usize, 2, 4] {
+        let cfg = DeepSynthConfig {
+            dims: vec![4, 8, 8],
+            n_heads: 4,
+            seq: 8,
+            d_ff: 512,
+            depth,
+            n_train: 8,
+            n_val: 4,
+            teacher_std: 0.2,
+            noise_std: 0.01,
+            alpha: 1.0,
+            seed: 0,
+        };
+        let task = deep_teacher_student(&cfg).unwrap();
+        let tcfg = HostTrainConfig { batch, ..Default::default() };
+        let mut model = task.student();
+        let ex = model.io_len();
+        let xs = &task.train_x[..batch * ex];
+        let ys = &task.train_y[..batch * ex];
+        let mut params = model.params_flat();
+        let mut adam = Adam::new(params.len(), &tcfg);
+        let st_step = bench(1, 10, || {
+            let (pred, tape) = model.forward_with_tape(xs, batch).unwrap();
+            let (_, dpred) = mse_grad(&pred, ys);
+            let mut grads = model.backward_flat(&tape, &dpred, batch).unwrap();
+            clip_global_norm(&mut grads, tcfg.clip);
+            adam.step(&mut params, &grads);
+            model.set_params(&params).unwrap();
+        });
+        let tokens = (batch * cfg.seq) as f64;
+        let us_tok = st_step.mean_us / tokens;
+        println!(
+            "depth={depth}: d={} seq={} batch={batch} seqs, {} params — step {:9.1}us \
+             ({us_tok:8.1}us/tok)",
+            task.d,
+            cfg.seq,
+            params.len(),
+            st_step.mean_us
+        );
+        entries.push(Value::obj(vec![
+            ("depth", Value::Num(depth as f64)),
+            ("d", Value::Num(task.d as f64)),
+            ("seq", Value::Num(cfg.seq as f64)),
+            ("batch_seqs", Value::Num(batch as f64)),
+            ("params", Value::Num(params.len() as f64)),
+            ("step_us", Value::Num(st_step.mean_us)),
+            ("us_per_token", Value::Num(us_tok)),
+        ]));
+    }
+    ("deep_train", Value::Arr(entries))
+}
+
+/// Deep-decode microbench: merged-weight batched decode through the
+/// depth-N stack at d = 256 and depth ∈ {1, 2, 4}.  The recorded
+/// `per_layer_us` (step cost / depth) feeds the CI gate holding the
+/// depth-4 per-layer cost at ≤ 1.25× the depth-1 cost — the
+/// [`ServeModel`] chaining must add nothing beyond the layers
+/// themselves.
+fn deep_decode_bench() -> (&'static str, Value) {
+    use quanta_ft::model::{DeepConfig, DeepModel};
+    use quanta_ft::serve::{DecodeEngine, ServeModel};
+
+    banner("deep_decode", "depth-N merged decode step across depths");
+    let batch = 8usize;
+    let mut entries = vec![];
+    for depth in [1usize, 2, 4] {
+        let cfg = DeepConfig::standard(vec![4, 8, 8], 4, 8, depth);
+        let mut model = DeepModel::init(&cfg, 0x0DEE).unwrap();
+        model.randomize_circuits(0.05, 0x0DEE).unwrap();
+        let d = model.d();
+        let sm = ServeModel::merged(&model).unwrap();
+        let mut rng = Rng::new(0x0DEC0DE);
+        let mut xs = vec![0.0f32; batch * d];
+        rng.fill_normal(&mut xs, 1.0);
+        // prefill every session to depth 16, then time whole steps
+        let mut sessions: Vec<_> = (0..batch).map(|_| sm.new_session()).collect();
+        for _ in 0..16 {
+            let mut refs: Vec<_> = sessions.iter_mut().collect();
+            sm.decode_step(&mut refs, &xs).unwrap();
+        }
+        let st_step = bench(2, 15, || {
+            let mut refs: Vec<_> = sessions.iter_mut().collect();
+            let _ = sm.decode_step(&mut refs, &xs).unwrap();
+        });
+        let us_tok = st_step.mean_us / batch as f64;
+        let per_layer = st_step.mean_us / depth as f64;
+        println!(
+            "depth={depth}: d={d} batch={batch} — step {:9.1}us ({us_tok:8.1}us/tok, \
+             {per_layer:9.1}us/layer)",
+            st_step.mean_us
+        );
+        entries.push(Value::obj(vec![
+            ("depth", Value::Num(depth as f64)),
+            ("d", Value::Num(d as f64)),
+            ("batch", Value::Num(batch as f64)),
+            ("prefill_depth", Value::Num(16.0)),
+            ("step_us", Value::Num(st_step.mean_us)),
+            ("us_per_token", Value::Num(us_tok)),
+            ("per_layer_us", Value::Num(per_layer)),
+        ]));
+    }
+    ("deep_decode", Value::Arr(entries))
 }
 
 /// Scaling sweep: `apply_batch` under pool vs spawn dispatch across
@@ -795,7 +911,7 @@ fn scaling_bench() -> (&'static str, Value) {
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(6.0)),
+        ("schema_version", Value::Num(7.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -813,11 +929,13 @@ fn main() {
     let (config, mut results) = engine_bench();
     results.push(train_bench());
     results.push(block_train_bench());
+    results.push(deep_train_bench());
     results.push(pool_vs_spawn_bench());
     results.push(scaling_bench());
     results.push(shard_sweep_bench());
     results.push(serve_decode_bench());
     results.push(serve_robustness_bench());
+    results.push(deep_decode_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();

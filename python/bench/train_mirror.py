@@ -1049,8 +1049,18 @@ class Block:
         )
         return out, tape
 
-    def forward(self, xs, n_seqs):
-        return self.forward_with_tape(xs, n_seqs)[0]
+    def forward(self, xs, n_seqs, seq=None):
+        """TransformerBlock::forward — the one panel entry, with the
+        sequence length decoupled from the training shape (this
+        absorbed the former ``forward_len``)."""
+        if seq is None or seq == self.seq:
+            return self.forward_with_tape(xs, n_seqs)[0]
+        saved = self.seq
+        self.seq = seq
+        try:
+            return self.forward_with_tape(xs, n_seqs)[0]
+        finally:
+            self.seq = saved
 
     def backward(self, tape, grad_out, n_seqs):
         du = ((grad_out @ self.w2) * gelu_prime(tape["u"])).astype(self.dtype)
@@ -1196,19 +1206,111 @@ def block_merge_parity():
 
 
 # ---------------------------------------------------------------------------
-# serve:: mirrors — KV-cache decode + continuous batching (DESIGN.md §10)
+# model::deep mirrors — depth-N block stacks behind one flat layout (§12)
 # ---------------------------------------------------------------------------
 
 
-def block_forward_len(block: Block, xs, seq):
-    """TransformerBlock::forward_len — the block forward with the
-    sequence length decoupled from the training shape."""
-    saved = block.seq
-    block.seq = seq
-    try:
-        return block.forward(xs, xs.shape[0] // seq)
-    finally:
-        block.seq = saved
+def layer_stream(base, l):
+    """model::deep::layer_stream — layer 0 keeps the bare block's
+    stream name so a depth-1 stack is bitwise the bare block."""
+    return base if l == 0 else f"{base}-{l}"
+
+
+class Deep:
+    """Mirrors model::deep::DeepModel: N pre-LN Blocks behind one flat
+    parameter layout (per-layer spans via prefix sums), layer-major
+    reverse backward chaining each block's dx."""
+
+    def __init__(self, layers):
+        self.layers = layers
+        self.d = layers[0].d
+        self.seq = layers[0].seq
+        self.dtype = layers[0].dtype
+
+    @staticmethod
+    def init(dims, n_heads, seq, d_ff, alpha, depth, seed, dtype=np.float32):
+        return Deep([
+            Block(dims, n_heads, seq, d_ff, alpha,
+                  Rng.stream(seed, layer_stream("block-base", l)), dtype)
+            for l in range(depth)
+        ])
+
+    def clone(self):
+        return Deep([b.clone() for b in self.layers])
+
+    def randomize_circuits(self, std, seed):
+        for l, b in enumerate(self.layers):
+            b.randomize_circuits(std, Rng.stream(seed, layer_stream("block-teacher", l)))
+
+    def io_len(self):
+        return self.seq * self.d
+
+    def layer_span(self, l):
+        sizes = [b.params_flat().size for b in self.layers]
+        lo = int(sum(sizes[:l]))
+        return lo, lo + int(sizes[l])
+
+    def params_flat(self):
+        return np.concatenate([b.params_flat() for b in self.layers])
+
+    def set_params(self, flat):
+        off = 0
+        for b in self.layers:
+            n = b.params_flat().size
+            b.set_params(flat[off : off + n])
+            off += n
+
+    def forward(self, xs, n_seqs, seq=None):
+        h = xs
+        for b in self.layers:
+            h = b.forward(h, n_seqs, seq)
+        return h
+
+    def forward_with_tape(self, xs, n_seqs):
+        tapes = []
+        h = xs
+        for b in self.layers:
+            h, t = b.forward_with_tape(h, n_seqs)
+            tapes.append(t)
+        return h, tapes
+
+    def backward(self, tapes, grad_out, n_seqs):
+        flats = [None] * len(self.layers)
+        g = grad_out
+        for l in range(len(self.layers) - 1, -1, -1):
+            flats[l], g = self.layers[l].backward(tapes[l], g, n_seqs)
+        return np.concatenate(flats), g
+
+    def merged(self):
+        return Deep([b.merged() for b in self.layers])
+
+
+def deep_teacher_student(dims, n_heads, seq, d_ff, depth, n_train, n_val,
+                         teacher_std, noise_std, alpha, seed, dtype=np.float32):
+    """Mirrors data::synth::deep_teacher_student — shares the bare block
+    task's data stream names, so at depth 1 the task is bitwise
+    block_teacher_student."""
+    base = Deep.init(dims, n_heads, seq, d_ff, alpha, depth, seed, dtype)
+    teacher = base.clone()
+    teacher.randomize_circuits(teacher_std, seed)
+    ex = base.io_len()
+    d = base.d
+
+    def split(sx, se, n):
+        xs = Rng.stream(seed, sx).fill_normal(n * ex, 1.0).astype(dtype)
+        ys = teacher.forward(xs.reshape(n * seq, d), n).reshape(-1)
+        if noise_std > 0:
+            ys = ys + Rng.stream(seed, se).fill_normal(n * ex, noise_std).astype(dtype)
+        return xs.reshape(n, ex), ys.reshape(n, ex).astype(dtype)
+
+    tx, ty = split("block-train-x", "block-train-eps", n_train)
+    vx, vy = split("block-val-x", "block-val-eps", n_val)
+    return base, (tx, ty), (vx, vy)
+
+
+# ---------------------------------------------------------------------------
+# serve:: mirrors — KV-cache decode + continuous batching (DESIGN.md §10)
+# ---------------------------------------------------------------------------
 
 
 def merged_weights(block: Block):
@@ -1265,6 +1367,30 @@ def decode_sequence(block, xs, seq, merged=None):
     of one request."""
     st = MirrorDecodeState(block.d, block.dtype)
     out = [decode_step(block, [st], xs[t : t + 1], merged) for t in range(seq)]
+    return np.concatenate(out, axis=0)
+
+
+def deep_merged_weights(deep: Deep):
+    """ServeModel::merged projection snapshots, one list per layer."""
+    return [merged_weights(b) for b in deep.layers]
+
+
+def deep_decode_step(deep: Deep, states, xs, merged=None):
+    """ServeModel::decode_step — layer l's decode_step consumes layer
+    l-1's output panel.  ``states`` mirrors SessionState: one list of
+    per-layer MirrorDecodeStates per request."""
+    h = xs
+    for l, blk in enumerate(deep.layers):
+        layer_states = [s[l] for s in states]
+        h = decode_step(blk, layer_states, h, merged[l] if merged else None)
+    return h
+
+
+def deep_decode_sequence(deep: Deep, xs, seq, merged=None):
+    """ServeModel::decode_sequence — teacher-forced incremental decode
+    of one request through the whole stack."""
+    st = [[MirrorDecodeState(deep.d, deep.dtype) for _ in deep.layers]]
+    out = [deep_decode_step(deep, st, xs[t : t + 1], merged) for t in range(seq)]
     return np.concatenate(out, axis=0)
 
 
@@ -1358,7 +1484,7 @@ def serve_parity_checks():
         ym = decode_sequence(block, xs, seq, merged=mw)
         scale = max(1.0, float(np.abs(ys).max()))
         for t in range(seq):
-            full = block_forward_len(block, xs[: t + 1], t + 1)
+            full = block.forward(xs[: t + 1], 1, t + 1)
             worst_stream = max(
                 worst_stream, float(np.abs(ys[t] - full[t]).max()) / scale
             )
@@ -1383,7 +1509,7 @@ def serve_parity_checks():
         xs = Rng(301).fill_normal(seq * d, 1.0).reshape(seq, d).astype(np.float64)
         ys = decode_sequence(block, xs, seq)
         for t in range(seq):
-            full = block_forward_len(block, xs[: t + 1], t + 1)
+            full = block.forward(xs[: t + 1], 1, t + 1)
             worst64 = max(worst64, float(np.abs(ys[t] - full[t]).max()))
     print(f"   worst |decode - forward| in f64: {worst64:.3e}")
     assert worst64 < 1e-11, worst64
@@ -1400,7 +1526,7 @@ def serve_parity_checks():
     seqv = prompt.copy()
     want = []
     while len(want) < n_gen:
-        full = block_forward_len(block, seqv, seqv.shape[0])
+        full = block.forward(seqv, 1, seqv.shape[0])
         want.append(full[-1])
         seqv = np.concatenate([seqv, full[-1:]], axis=0)
     greedy_diff = float(np.abs(got[0] - np.stack(want)).max())
@@ -1503,7 +1629,7 @@ def serve_decode_section(timeit_us):
 
         def recompute():
             for t in range(seq):
-                block_forward_len(mb, seq_xs[: t + 1], t + 1)
+                mb.forward(seq_xs[: t + 1], 1, t + 1)
 
         rec_us = timeit_us(recompute, rit, warmup=0)
         speedup = rec_us / dec_us
@@ -1619,6 +1745,192 @@ def serve_robustness_section(timeit_us):
             "healthy_bitwise_equal": bitwise,
         },
     }
+
+
+def deep_parity_checks():
+    """rust/tests/deep_props.rs contracts in the mirror: depth-1 stack ≡
+    the bare block bitwise, the layer-major backward FD-certified in
+    f64, merged ≡ streaming at depth, and streaming deep decode ≡ the
+    deep forward recompute (bitwise in rust; f32-scaled + f64 here,
+    since the mirror's decode and forward use different operation
+    orders)."""
+    print("== deep: depth-1 stack == bare block (bitwise) ==")
+    one = Deep.init([2, 2], 2, 3, 8, 1.0, 1, 94)
+    blk = Block([2, 2], 2, 3, 8, 1.0, Rng.stream(94, "block-base"))
+    assert np.array_equal(one.params_flat(), blk.params_flat())
+    one.randomize_circuits(0.2, 94)
+    blk.randomize_circuits(0.2, Rng.stream(94, "block-teacher"))
+    xs = Rng(940).fill_normal(3 * one.io_len(), 1.0).reshape(-1, one.d).astype(np.float32)
+    assert np.array_equal(one.forward(xs, 3), blk.forward(xs, 3))
+    w = Rng(941).fill_normal(3 * one.io_len(), 1.0).reshape(-1, one.d).astype(np.float32)
+    y1, t1 = one.forward_with_tape(xs, 3)
+    yb, tb = blk.forward_with_tape(xs, 3)
+    assert np.array_equal(y1, yb)
+    f1, dx1 = one.backward(t1, w, 3)
+    fb, dxb = blk.backward(tb, w, 3)
+    assert np.array_equal(f1, fb) and np.array_equal(dx1, dxb)
+    db, (btx, bty), (bvx, bvy) = deep_teacher_student(
+        [2, 2], 2, 3, 8, 1, 12, 4, 0.3, 0.01, 1.0, seed=5
+    )
+    bb, (ctx, cty), (cvx, cvy) = block_teacher_student(
+        [2, 2], 2, 3, 8, 12, 4, 0.3, 0.01, 1.0, seed=5
+    )
+    assert np.array_equal(btx, ctx) and np.array_equal(bty, cty)
+    assert np.array_equal(bvx, cvx) and np.array_equal(bvy, cvy)
+    print("   params, forward, backward, and depth-1 synth task all bitwise equal")
+
+    print("== deep: layer-major backward gradcheck (f64, depth 2) ==")
+    deep64 = Deep.init([2, 2], 2, 3, 8, 1.0, 2, 95, np.float64)
+    deep64.randomize_circuits(0.3, 95)
+    n_seqs = 2
+    prng = Rng(96)
+    dxs = prng.fill_normal(n_seqs * deep64.io_len(), 1.0).astype(np.float64).reshape(-1, deep64.d)
+    dw = prng.fill_normal(n_seqs * deep64.io_len(), 1.0).astype(np.float64).reshape(-1, deep64.d)
+
+    def dloss(m, x):
+        return float((m.forward(x, n_seqs) * dw).sum())
+
+    _, dtape = deep64.forward_with_tape(dxs, n_seqs)
+    dflat, ddx = deep64.backward(dtape, dw, n_seqs)
+    p0 = deep64.params_flat()
+    probe = deep64.clone()
+    eps = 1e-4
+    worst = 0.0
+    for kk in range(p0.size):
+        p = p0.copy()
+        p[kk] += eps
+        probe.set_params(p)
+        lp = dloss(probe, dxs)
+        p[kk] = p0[kk] - eps
+        probe.set_params(p)
+        lm = dloss(probe, dxs)
+        fd = (lp - lm) / (2 * eps)
+        an = float(dflat[kk])
+        worst = max(worst, abs(fd - an) / max(abs(fd), abs(an), 0.05))
+    for jj in range(0, dxs.size, 5):
+        xp = dxs.copy().reshape(-1)
+        xp[jj] += eps
+        lp = dloss(deep64, xp.reshape(-1, deep64.d))
+        xp[jj] = dxs.reshape(-1)[jj] - eps
+        lm = dloss(deep64, xp.reshape(-1, deep64.d))
+        fd = (lp - lm) / (2 * eps)
+        an = float(ddx.reshape(-1)[jj])
+        worst = max(worst, abs(fd - an) / max(abs(fd), abs(an), 0.05))
+    print(f"   worst rel err over params + dx: {worst:.3e}")
+    assert worst < 1e-6, worst
+
+    print("== deep: merged stack parity + decode == forward recompute ==")
+    for depth in (2, 4):
+        deep = Deep.init([2, 3], 2, 3, 12, 0.8, depth, 97)
+        deep.randomize_circuits(0.2, 97)
+        d = deep.d
+        seq = 7  # longer than the training seq: decode is length-free
+        sxs = Rng(98).fill_normal(seq * d, 1.0).reshape(seq, d).astype(np.float32)
+        mw = deep_merged_weights(deep)
+        ys = deep_decode_sequence(deep, sxs, seq)
+        ym = deep_decode_sequence(deep, sxs, seq, merged=mw)
+        scale = max(1.0, float(np.abs(ys).max()))
+        worst_stream = worst_merged = 0.0
+        for t in range(seq):
+            full = deep.forward(sxs[: t + 1], 1, t + 1)
+            worst_stream = max(worst_stream, float(np.abs(ys[t] - full[t]).max()) / scale)
+            worst_merged = max(worst_merged, float(np.abs(ym[t] - full[t]).max()) / scale)
+        print(f"   depth {depth}: streaming {worst_stream:.3e} (rust bitwise)  "
+              f"merged {worst_merged:.3e} (rust < 1e-5 x scale)")
+        assert worst_stream < 1e-5, (depth, worst_stream)
+        assert worst_merged < 1e-5, (depth, worst_merged)
+
+        deep64b = Deep.init([2, 3], 2, 3, 12, 0.8, depth, 97, np.float64)
+        deep64b.randomize_circuits(0.2, 97)
+        sxs64 = sxs.astype(np.float64)
+        ys64 = deep_decode_sequence(deep64b, sxs64, seq)
+        w64 = max(
+            float(np.abs(ys64[t] - deep64b.forward(sxs64[: t + 1], 1, t + 1)[t]).max())
+            for t in range(seq)
+        )
+        assert w64 < 1e-11, (depth, w64)
+
+
+def deep_train_section(timeit_us):
+    """benches/perf_runtime.rs deep_train: one full Adam step through
+    the depth-N stack at d = 256, depth in {1, 2, 4}."""
+    print("== bench deep_train: depth-N stack full Adam step at d=256 ==")
+    batch = 4
+    entries = []
+    for depth in (1, 2, 4):
+        base, (tx, ty), _ = deep_teacher_student(
+            [4, 8, 8], 4, 8, 512, depth, 8, 4, 0.2, 0.01, 1.0, seed=0
+        )
+        model = base.clone()
+        d, seq = model.d, model.seq
+        xs = tx[:batch].reshape(-1, d)
+        ys = ty[:batch].reshape(-1, d)
+        adam = Adam(model.params_flat().size, lr=2e-2)
+        params = [model.params_flat()]
+
+        def step():
+            p, tp = model.forward_with_tape(xs, batch)
+            _, dp = mse_grad(p, ys)
+            fl, _ = model.backward(tp, dp, batch)
+            fl = clip_global_norm(fl.astype(np.float32).copy(), 1.0)
+            params[0] = adam.step(params[0], fl)
+            model.set_params(params[0])
+
+        step_us = timeit_us(step, max(10 // depth, 3), warmup=1)
+        us_tok = step_us / (batch * seq)
+        print(f"   depth={depth}: d={d} {params[0].size} params — "
+              f"step {step_us:9.0f}us ({us_tok:7.1f}us/tok)")
+        entries.append({
+            "depth": depth,
+            "d": d,
+            "seq": seq,
+            "batch_seqs": batch,
+            "params": int(params[0].size),
+            "step_us": round(step_us, 1),
+            "us_per_token": round(us_tok, 2),
+        })
+    return entries
+
+
+def deep_decode_section(timeit_us):
+    """benches/perf_runtime.rs deep_decode: merged batched decode step
+    through the depth-N stack at d = 256.  per_layer_us feeds the CI
+    gate (depth-4 per-layer <= 1.25x depth-1): stacking must add
+    nothing beyond the layers themselves."""
+    print("== bench deep_decode: depth-N merged decode step at d=256 ==")
+    batch = 8
+    entries = []
+    for depth in (1, 2, 4):
+        deep = Deep.init([4, 8, 8], 4, 8, 512, 1.0, depth, 0x0DEE)
+        deep.randomize_circuits(0.05, 0x0DEE)
+        d = deep.d
+        mw = deep_merged_weights(deep)
+        xs = Rng(0x0DEC0DE).fill_normal(batch * d, 1.0).reshape(batch, d).astype(np.float32)
+        states = [[MirrorDecodeState(d) for _ in range(depth)] for _ in range(batch)]
+        for _ in range(16):
+            deep_decode_step(deep, states, xs, merged=mw)
+        step_us = timeit_us(
+            lambda: deep_decode_step(deep, states, xs, merged=mw), max(12 // depth, 4)
+        )
+        per_layer = step_us / depth
+        print(f"   depth={depth}: d={d} batch={batch} — step {step_us:8.0f}us "
+              f"({step_us / batch:7.1f}us/tok, {per_layer:8.1f}us/layer)")
+        entries.append({
+            "depth": depth,
+            "d": d,
+            "batch": batch,
+            "prefill_depth": 16,
+            "step_us": round(step_us, 1),
+            "us_per_token": round(step_us / batch, 2),
+            "per_layer_us": round(per_layer, 2),
+        })
+    # the native CI gate is 1.25x; the interpreter adds per-step python
+    # overhead that a loose sanity bound still catches gross regressions
+    ratio = entries[-1]["per_layer_us"] / entries[0]["per_layer_us"]
+    print(f"   depth-4 per-layer / depth-1 per-layer: {ratio:.2f}x "
+          f"(CI gates native <= 1.25x)")
+    assert ratio <= 1.6, ratio
+    return entries
 
 
 def main():
@@ -1961,14 +2273,34 @@ def main():
     serve_rec = serve_decode_section(timeit_us)
     robust_rec = serve_robustness_section(timeit_us)
 
+    # -- deep: depth-N stack parity, training, bench sections ------------
+    deep_parity_checks()
+    print("== deep training: depth-2 stack through the generic trainer ==")
+    base_d, (dtx, dty), (dvx, dvy) = deep_teacher_student(
+        [2, 2], 2, 3, 8, 2, 24, 8, 0.3, 0.0, 1.0, seed=5
+    )
+    student_d = base_d.clone()
+    init_d = mse(student_d.forward(dtx.reshape(-1, student_d.d), dtx.shape[0]),
+                 dty.reshape(-1, student_d.d))
+    _, val_d = block_finetune(student_d, dtx, dty, dvx, dvy,
+                              steps=120, batch=8, seed=0, lr=2e-2)
+    fin_d = mse(student_d.forward(dtx.reshape(-1, student_d.d), dtx.shape[0]),
+                dty.reshape(-1, student_d.d))
+    print(f"   deep [2,2] x2: train mse {init_d:.5f} -> {fin_d:.5f} "
+          f"({init_d / fin_d:.1f}x, val {val_d:.5f})")
+    assert fin_d < 0.25 * init_d, (init_d, fin_d)
+
+    deep_train_rec = deep_train_section(timeit_us)
+    deep_decode_rec = deep_decode_section(timeit_us)
+
     if args.bench_out != "none":
         # merge into the shared perf record so engine_mirror.py +
-        # train_mirror.py (in either order) produce the full schema-6
+        # train_mirror.py (in either order) produce the full schema-7
         # record the CI perf-smoke gates read
         out_path = Path(args.bench_out)
         record = {
             "bench": "quanta_engine",
-            "schema_version": 6,
+            "schema_version": 7,
             "substrate": "python-numpy-mirror",
             "results": {},
         }
@@ -1981,7 +2313,7 @@ def main():
                     record = prev
             except (json.JSONDecodeError, OSError):
                 pass
-        record["schema_version"] = 6
+        record["schema_version"] = 7
         record.setdefault("results", {})["train_smoke"] = {
             "dims": dims,
             "batch": batch,
@@ -2018,9 +2350,12 @@ def main():
         record["results"]["shard_sweep"] = shard_entries
         record["results"]["serve_decode"] = serve_rec
         record["results"]["serve_robustness"] = robust_rec
+        record["results"]["deep_train"] = deep_train_rec
+        record["results"]["deep_decode"] = deep_decode_rec
         out_path.write_text(json.dumps(record, indent=2) + "\n")
         print(f"merged train_smoke + pool_vs_spawn + block_train + shard_sweep "
-              f"+ serve_decode + serve_robustness into {out_path}")
+              f"+ serve_decode + serve_robustness + deep_train + deep_decode "
+              f"into {out_path}")
     print("ALL MIRROR CHECKS PASSED")
 
 

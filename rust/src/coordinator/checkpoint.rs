@@ -2,7 +2,25 @@
 //! (magic, CRC, name, f32 payload), used for pretrained bases and best
 //! fine-tuned thetas.
 //!
-//! ## Format v2 (current writer)
+//! ## Format v3 (current multi-stream writer)
+//!
+//! ```text
+//! magic "QFTCKPT3"  (8 bytes)
+//! crc32            u32 LE   — IEEE CRC-32 over everything below
+//! n_streams        u32 LE   (≥ 1)
+//! n_streams × {
+//!   name_len       u32 LE   (≤ 4096)
+//!   name           UTF-8
+//!   n              u64 LE
+//!   payload        n × f32 LE
+//! }
+//! ```
+//!
+//! One file, several named flat parameter vectors — a depth-N model
+//! saves one stream per layer (`layer0`, `layer1`, …) so the
+//! train-deep → serve round trip moves one artifact, not N.
+//!
+//! ## Format v2 (single stream; still written by [`save`])
 //!
 //! ```text
 //! magic "QFTCKPT2"  (8 bytes)
@@ -15,15 +33,17 @@
 //!
 //! Hardened per DESIGN.md §11: checkpoints are untrusted input (the
 //! multi-tenant registry will load tenant-supplied adapter files), so
-//! `load` validates every length against the **actual file size before
-//! allocating** — a corrupt `n` header can no longer drive an
+//! the loaders validate every length against the **actual file size
+//! before allocating** — a corrupt `n` header can no longer drive an
 //! unbounded `vec![0u8; n * 4]` — with checked arithmetic so `n * 4`
 //! cannot overflow on 32-bit targets, and the CRC rejects silent bit
-//! rot.  `save` writes to a temp file in the same directory and
-//! `rename`s it into place, so a crash mid-save never leaves a torn
-//! file where a valid checkpoint used to be (the `torn-write@save`
-//! fault probe exercises exactly that crash window).  v1 files
-//! (`QFTCKPT1`, no CRC) remain readable with the same size validation.
+//! rot.  Both writers go through one atomic path: write to a temp file
+//! in the same directory, `rename` into place, so a crash mid-save
+//! never leaves a torn file where a valid checkpoint used to be (the
+//! `torn-write@save` fault probe exercises exactly that crash window).
+//! [`load_streams`] reads every version — v1 (`QFTCKPT1`, no CRC) and
+//! v2 files surface as a single stream — so readers are
+//! format-oblivious.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -33,7 +53,12 @@ use crate::util::fault;
 
 const MAGIC_V1: &[u8; 8] = b"QFTCKPT1";
 const MAGIC_V2: &[u8; 8] = b"QFTCKPT2";
+const MAGIC_V3: &[u8; 8] = b"QFTCKPT3";
 const MAX_NAME_LEN: usize = 4096;
+/// Minimum encoded size of one stream (`name_len` + `n` with an empty
+/// name and payload) — bounds `n_streams` against the real file size
+/// before the per-stream loop runs.
+const MIN_STREAM_BYTES: usize = 12;
 
 /// IEEE CRC-32 (reflected, poly 0xEDB88320), table-driven — the
 /// ubiquitous gzip/PNG polynomial, implemented here because the
@@ -68,8 +93,9 @@ fn tmp_path(path: &Path) -> PathBuf {
     path.with_file_name(name)
 }
 
-/// Save a named flat parameter vector (format v2, atomic).
-pub fn save(path: &Path, name: &str, params: &[f32]) -> Result<()> {
+/// Append one stream's encoding (`name_len | name | n | payload`) to
+/// a CRC-covered body.
+fn encode_stream(body: &mut Vec<u8>, name: &str, params: &[f32]) -> Result<()> {
     let name_bytes = name.as_bytes();
     if name_bytes.len() > MAX_NAME_LEN {
         return Err(Error::msg(format!(
@@ -77,23 +103,28 @@ pub fn save(path: &Path, name: &str, params: &[f32]) -> Result<()> {
             name_bytes.len()
         )));
     }
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    // assemble the CRC-covered body: name_len | name | n | payload
-    let mut body = Vec::with_capacity(4 + name_bytes.len() + 8 + params.len() * 4);
+    body.reserve(MIN_STREAM_BYTES + name_bytes.len() + params.len() * 4);
     body.extend_from_slice(&(name_bytes.len() as u32).to_le_bytes());
     body.extend_from_slice(name_bytes);
     body.extend_from_slice(&(params.len() as u64).to_le_bytes());
     for &v in params {
         body.extend_from_slice(&v.to_le_bytes());
     }
-    let crc = crc32(&body);
-    // write-then-rename: the destination either keeps its old contents
-    // or atomically becomes the complete new checkpoint
+    Ok(())
+}
+
+/// The single atomic write path both writers share: CRC the body,
+/// write `magic | crc | body` to a temp file in the destination
+/// directory, `rename` into place — the destination either keeps its
+/// old contents or atomically becomes the complete new checkpoint.
+fn write_atomic(path: &Path, magic: &[u8; 8], body: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let crc = crc32(body);
     let tmp = tmp_path(path);
     let mut f = std::fs::File::create(&tmp)?;
-    f.write_all(MAGIC_V2)?;
+    f.write_all(magic)?;
     f.write_all(&crc.to_le_bytes())?;
     if fault::armed() {
         if let Some(fault::Fault::TornWrite) = fault::probe("save") {
@@ -108,11 +139,32 @@ pub fn save(path: &Path, name: &str, params: &[f32]) -> Result<()> {
             )));
         }
     }
-    f.write_all(&body)?;
+    f.write_all(body)?;
     f.sync_all()?;
     drop(f);
     std::fs::rename(&tmp, path)?;
     Ok(())
+}
+
+/// Save one named flat parameter vector (format v2, atomic).
+pub fn save(path: &Path, name: &str, params: &[f32]) -> Result<()> {
+    let mut body = Vec::new();
+    encode_stream(&mut body, name, params)?;
+    write_atomic(path, MAGIC_V2, &body)
+}
+
+/// Save several named flat parameter vectors in one file (format v3,
+/// atomic) — e.g. one stream per layer of a depth-N model.
+pub fn save_streams(path: &Path, streams: &[(&str, &[f32])]) -> Result<()> {
+    if streams.is_empty() {
+        return Err(Error::msg("checkpoint must hold at least one stream"));
+    }
+    let mut body = Vec::new();
+    body.extend_from_slice(&(streams.len() as u32).to_le_bytes());
+    for (name, params) in streams {
+        encode_stream(&mut body, name, params)?;
+    }
+    write_atomic(path, MAGIC_V3, &body)
 }
 
 /// Bounds-checked little-endian reads over an in-memory image.
@@ -151,11 +203,12 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Parse `name_len | name | n | payload` with every length validated
-/// against the in-memory image (== the real file size) before any
-/// payload-sized allocation.
-fn parse_body(body: &[u8]) -> Result<(String, Vec<f32>)> {
-    let mut cur = Cursor { buf: body, pos: 0 };
+/// Parse one stream (`name_len | name | n | payload`) with every
+/// length validated against the in-memory image (== the real file
+/// size) before any payload-sized allocation.  In a multi-stream body
+/// more streams may follow, so the bound is `≤ remaining`, not `==`;
+/// callers check for trailing garbage once all streams are read.
+fn parse_stream(cur: &mut Cursor) -> Result<(String, Vec<f32>)> {
     let name_len = cur.u32()? as usize;
     if name_len > MAX_NAME_LEN {
         return Err(Error::Data(format!(
@@ -171,9 +224,9 @@ fn parse_body(body: &[u8]) -> Result<(String, Vec<f32>)> {
     // wrap (and the usize conversion cannot truncate on 32-bit)
     let payload_bytes =
         n.checked_mul(4).ok_or_else(|| Error::Data(format!("checkpoint count {n} overflows")))?;
-    if payload_bytes != cur.remaining() as u64 {
+    if payload_bytes > cur.remaining() as u64 {
         return Err(Error::Data(format!(
-            "checkpoint declares {payload_bytes} payload bytes but {} are present",
+            "checkpoint declares {payload_bytes} payload bytes but only {} are present",
             cur.remaining()
         )));
     }
@@ -187,11 +240,72 @@ fn parse_body(body: &[u8]) -> Result<(String, Vec<f32>)> {
     Ok((name, params))
 }
 
-/// Load a checkpoint (v2 or legacy v1); returns (name, params).
-/// Corrupt, truncated, or oversized-header files are rejected with a
-/// structured error — never a panic, never an allocation beyond the
-/// file's own size.
-pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
+/// Parse a single-stream (v1/v2) body: one stream, no trailing bytes.
+fn parse_body(body: &[u8]) -> Result<(String, Vec<f32>)> {
+    let mut cur = Cursor { buf: body, pos: 0 };
+    let stream = parse_stream(&mut cur)?;
+    if cur.remaining() != 0 {
+        return Err(Error::Data(format!(
+            "checkpoint has {} trailing bytes after its stream",
+            cur.remaining()
+        )));
+    }
+    Ok(stream)
+}
+
+/// Parse a v3 body: `n_streams` then that many streams, no trailing
+/// bytes.  `n_streams` is bounded by the real body size before the
+/// loop (each stream encodes to at least [`MIN_STREAM_BYTES`]).
+fn parse_streams(body: &[u8]) -> Result<Vec<(String, Vec<f32>)>> {
+    let mut cur = Cursor { buf: body, pos: 0 };
+    let n_streams = cur.u32()? as usize;
+    if n_streams == 0 {
+        return Err(Error::Data("checkpoint declares zero streams".into()));
+    }
+    let min_bytes = n_streams
+        .checked_mul(MIN_STREAM_BYTES)
+        .ok_or_else(|| Error::Data(format!("checkpoint stream count {n_streams} overflows")))?;
+    if min_bytes > cur.remaining() {
+        return Err(Error::Data(format!(
+            "checkpoint declares {n_streams} streams (≥ {min_bytes} bytes) but only {} are present",
+            cur.remaining()
+        )));
+    }
+    let mut streams = Vec::with_capacity(n_streams);
+    for _ in 0..n_streams {
+        streams.push(parse_stream(&mut cur)?);
+    }
+    if cur.remaining() != 0 {
+        return Err(Error::Data(format!(
+            "checkpoint has {} trailing bytes after its last stream",
+            cur.remaining()
+        )));
+    }
+    Ok(streams)
+}
+
+/// Check a v2/v3 file's CRC and hand back the covered body.
+fn checked_body<'a>(path: &Path, rest: &'a [u8]) -> Result<&'a [u8]> {
+    if rest.len() < 4 {
+        return Err(Error::Data(format!("{}: truncated before CRC", path.display())));
+    }
+    let (crc_bytes, body) = rest.split_at(4);
+    let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    let got = crc32(body);
+    if got != want {
+        return Err(Error::Data(format!(
+            "{}: CRC mismatch (file {want:#010x}, computed {got:#010x})",
+            path.display()
+        )));
+    }
+    Ok(body)
+}
+
+/// Load a checkpoint of any version as named streams (v1/v2 files
+/// surface as one stream).  Corrupt, truncated, or oversized-header
+/// files are rejected with a structured error — never a panic, never
+/// an allocation beyond the file's own size.
+pub fn load_streams(path: &Path) -> Result<Vec<(String, Vec<f32>)>> {
     // one read bounded by the real file size; all subsequent parsing
     // is bounds-checked against it
     let bytes = std::fs::read(path)?;
@@ -199,25 +313,30 @@ pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
         return Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())));
     }
     let (magic, rest) = bytes.split_at(8);
-    if magic == MAGIC_V2 {
-        if rest.len() < 4 {
-            return Err(Error::Data(format!("{}: truncated before CRC", path.display())));
-        }
-        let (crc_bytes, body) = rest.split_at(4);
-        let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
-        let got = crc32(body);
-        if got != want {
-            return Err(Error::Data(format!(
-                "{}: CRC mismatch (file {want:#010x}, computed {got:#010x})",
-                path.display()
-            )));
-        }
-        parse_body(body)
+    if magic == MAGIC_V3 {
+        parse_streams(checked_body(path, rest)?)
+    } else if magic == MAGIC_V2 {
+        Ok(vec![parse_body(checked_body(path, rest)?)?])
     } else if magic == MAGIC_V1 {
-        parse_body(rest)
+        Ok(vec![parse_body(rest)?])
     } else {
         Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())))
     }
+}
+
+/// Load a single-stream checkpoint; returns (name, params).  A v3
+/// file is accepted when it holds exactly one stream; multi-stream
+/// files must go through [`load_streams`].
+pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
+    let mut streams = load_streams(path)?;
+    if streams.len() != 1 {
+        return Err(Error::Data(format!(
+            "{}: holds {} streams; use load_streams",
+            path.display(),
+            streams.len()
+        )));
+    }
+    Ok(streams.pop().expect("len checked above"))
 }
 
 #[cfg(test)]
@@ -349,6 +468,87 @@ mod tests {
         let dir = tdir("name");
         let err = save(&dir.join("x.bin"), &"n".repeat(MAX_NAME_LEN + 1), &[1.0]);
         assert!(err.is_err());
+        let err3 = save_streams(&dir.join("y.bin"), &[("ok", &[1.0][..]),
+            (&"n".repeat(MAX_NAME_LEN + 1), &[2.0][..])]);
+        assert!(err3.is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_stream_roundtrip_and_single_stream_compat() {
+        let dir = tdir("streams");
+        let path = dir.join("deep.bin");
+        let layers: Vec<Vec<f32>> =
+            (0..4).map(|l| (0..50).map(|i| (l * 100 + i) as f32).collect()).collect();
+        let named: Vec<(String, &[f32])> =
+            layers.iter().enumerate().map(|(l, p)| (format!("layer{l}"), &p[..])).collect();
+        let streams: Vec<(&str, &[f32])> =
+            named.iter().map(|(n, p)| (n.as_str(), *p)).collect();
+        save_streams(&path, &streams).unwrap();
+        let loaded = load_streams(&path).unwrap();
+        assert_eq!(loaded.len(), 4);
+        for (l, (name, params)) in loaded.iter().enumerate() {
+            assert_eq!(name, &format!("layer{l}"));
+            assert_eq!(params, &layers[l]);
+        }
+        // load() refuses the ambiguity of a multi-stream file...
+        assert!(load(&path).is_err());
+        // ...but accepts a one-stream v3, and load_streams reads v2/v1
+        let single = dir.join("one.bin");
+        save_streams(&single, &[("only", &[7.0, 8.0][..])]).unwrap();
+        assert_eq!(load(&single).unwrap(), ("only".to_string(), vec![7.0, 8.0]));
+        let v2 = dir.join("two.bin");
+        save(&v2, "flat", &[1.5]).unwrap();
+        assert_eq!(load_streams(&v2).unwrap(), vec![("flat".to_string(), vec![1.5])]);
+        // empty stream list is rejected at save time
+        assert!(save_streams(&dir.join("none.bin"), &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_corruption_is_rejected_without_allocating() {
+        let dir = tdir("v3corrupt");
+        let path = dir.join("deep.bin");
+        let p: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        save_streams(&path, &[("a", &p[..]), ("b", &p[..])]).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // truncation at the magic, CRC, header, and payload boundaries
+        for cut in [7, 11, 14, 20, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load_streams(&path).is_err(), "accepted a {cut}-byte prefix");
+        }
+        // bit rot → CRC mismatch
+        let mut rot = good.clone();
+        let last = rot.len() - 1;
+        rot[last] ^= 0x01;
+        std::fs::write(&path, &rot).unwrap();
+        let err = load_streams(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "bit rot not caught by CRC: {err}");
+        // a stream-count header far beyond the file size fails on the
+        // pre-loop bound, and an oversized per-stream count fails on
+        // the remaining-bytes check — valid CRCs both times, so the
+        // size validation itself is what rejects them
+        let mut body = Vec::new();
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b'x');
+        let mut forged = Vec::new();
+        forged.extend_from_slice(MAGIC_V3);
+        forged.extend_from_slice(&crc32(&body).to_le_bytes());
+        forged.extend_from_slice(&body);
+        std::fs::write(&path, &forged).unwrap();
+        assert!(load_streams(&path).is_err());
+        let mut body2 = Vec::new();
+        body2.extend_from_slice(&1u32.to_le_bytes());
+        body2.extend_from_slice(&1u32.to_le_bytes());
+        body2.push(b'x');
+        body2.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut forged2 = Vec::new();
+        forged2.extend_from_slice(MAGIC_V3);
+        forged2.extend_from_slice(&crc32(&body2).to_le_bytes());
+        forged2.extend_from_slice(&body2);
+        std::fs::write(&path, &forged2).unwrap();
+        assert!(load_streams(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -352,7 +352,13 @@ pub fn finetune_host<M: TrainableModel>(
         // parameter gradients only — the input gradient is never used here
         let mut grads = model.backward_flat(&tape, &dpred, cfg.batch)?;
         let grad_norm = clip_global_norm(&mut grads, cfg.clip);
-        if !loss.is_finite() || !grad_norm.is_finite() {
+        // same per-element scan the serving intake/quarantine paths
+        // run (util::numeric): a NaN hiding in a gradient whose norm
+        // still reads finite must not reach the optimizer either
+        if !loss.is_finite()
+            || !grad_norm.is_finite()
+            || crate::util::numeric::non_finite_at(&grads).is_some()
+        {
             // anomaly: never let a non-finite update touch the
             // parameters.  Roll back to the best checkpoint (the init
             // params before the first eval), drop the stale Adam
@@ -596,14 +602,15 @@ mod tests {
         })
         .unwrap();
         let mut student = task.student();
+        let seq = student.seq();
         let init = {
-            let pred = student.forward(&task.train_x, task.n_train).unwrap();
+            let pred = student.forward(&task.train_x, task.n_train, seq).unwrap();
             mse(&pred, &task.train_y)
         };
         let cfg = HostTrainConfig { steps: 120, batch: 8, eval_every: 20, ..Default::default() };
         let out = finetune_host(&mut student, &task, &cfg).unwrap();
         let fin = {
-            let pred = student.forward(&task.train_x, task.n_train).unwrap();
+            let pred = student.forward(&task.train_x, task.n_train, seq).unwrap();
             mse(&pred, &task.train_y)
         };
         assert!(fin < 0.5 * init, "block failed to learn: {init} -> {fin}");

@@ -15,7 +15,7 @@
 //! `(seed, stream)`, matching the repo's data protocol: train/val are
 //! disjoint by construction.
 
-use crate::model::{BlockConfig, TransformerBlock};
+use crate::model::{BlockConfig, DeepConfig, DeepModel, TransformerBlock};
 use crate::quanta::circuit::{all_pairs_structure, Circuit};
 use crate::quanta::QuantaAdapter;
 use crate::tensor::Tensor;
@@ -253,14 +253,9 @@ impl RegressionTask for BlockSynthTask {
 /// Generate a block-level teacher–student task (deterministic in
 /// `(seed, stream)` like every other dataset in the repo).
 pub fn block_teacher_student(cfg: &BlockSynthConfig) -> Result<BlockSynthTask> {
-    let bcfg = BlockConfig {
-        dims: cfg.dims.clone(),
-        n_heads: cfg.n_heads,
-        seq: cfg.seq,
-        d_ff: cfg.d_ff,
-        structure: all_pairs_structure(cfg.dims.len()),
-        alpha: cfg.alpha,
-    };
+    let bcfg = BlockConfig::standard(cfg.dims.clone(), cfg.n_heads, cfg.seq)
+        .with_d_ff(cfg.d_ff)
+        .with_alpha(cfg.alpha);
     let base_block = TransformerBlock::init(&bcfg, &mut Rng::stream(cfg.seed, "block-base"))?;
     let mut teacher = base_block.clone();
     teacher.randomize_circuits(cfg.teacher_std, &mut Rng::stream(cfg.seed, "block-teacher"))?;
@@ -270,7 +265,7 @@ pub fn block_teacher_student(cfg: &BlockSynthConfig) -> Result<BlockSynthTask> {
         |stream_x: &str, stream_eps: &str, n: usize| -> Result<(Vec<f32>, Vec<f32>)> {
             let mut xs = vec![0.0f32; n * ex];
             Rng::stream(cfg.seed, stream_x).fill_normal(&mut xs, 1.0);
-            let mut ys = teacher.forward(&xs, n)?;
+            let mut ys = teacher.forward(&xs, n, cfg.seq)?;
             if cfg.noise_std > 0.0 {
                 let mut eps = vec![0.0f32; n * ex];
                 Rng::stream(cfg.seed, stream_eps).fill_normal(&mut eps, cfg.noise_std);
@@ -286,6 +281,134 @@ pub fn block_teacher_student(cfg: &BlockSynthConfig) -> Result<BlockSynthTask> {
         d: base_block.d(),
         seq: cfg.seq,
         base_block,
+        train_x,
+        train_y,
+        val_x,
+        val_y,
+        n_train: cfg.n_train,
+        n_val: cfg.n_val,
+    })
+}
+
+/// Generation knobs for [`deep_teacher_student`]: the block knobs
+/// plus a depth.
+#[derive(Clone, Debug)]
+pub struct DeepSynthConfig {
+    pub dims: Vec<usize>,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub d_ff: usize,
+    /// Stacked blocks in teacher and student (≥ 1).
+    pub depth: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub teacher_std: f32,
+    pub noise_std: f32,
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for DeepSynthConfig {
+    fn default() -> Self {
+        let b = BlockSynthConfig::default();
+        DeepSynthConfig {
+            dims: b.dims,
+            n_heads: b.n_heads,
+            seq: b.seq,
+            d_ff: b.d_ff,
+            depth: 2,
+            n_train: b.n_train,
+            n_val: b.n_val,
+            teacher_std: b.teacher_std,
+            noise_std: b.noise_std,
+            alpha: b.alpha,
+            seed: b.seed,
+        }
+    }
+}
+
+/// The depth-N counterpart of [`BlockSynthTask`]: teacher and student
+/// share frozen per-layer bases, the teacher's circuits are perturbed
+/// at every layer, and targets are whole stacked-forward sequences.
+#[derive(Clone, Debug)]
+pub struct DeepSynthTask {
+    pub d: usize,
+    pub seq: usize,
+    /// The frozen stack with identity circuits — the student template.
+    pub base_model: DeepModel,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<f32>,
+    pub val_x: Vec<f32>,
+    pub val_y: Vec<f32>,
+    pub n_train: usize,
+    pub n_val: usize,
+}
+
+impl DeepSynthTask {
+    /// Fresh student: the frozen stack with identity circuits.
+    pub fn student(&self) -> DeepModel {
+        self.base_model.clone()
+    }
+}
+
+impl RegressionTask for DeepSynthTask {
+    fn example_len(&self) -> usize {
+        self.seq * self.d
+    }
+
+    fn n_train(&self) -> usize {
+        self.n_train
+    }
+
+    fn n_val(&self) -> usize {
+        self.n_val
+    }
+
+    fn train_xy(&self) -> (&[f32], &[f32]) {
+        (&self.train_x, &self.train_y)
+    }
+
+    fn val_xy(&self) -> (&[f32], &[f32]) {
+        (&self.val_x, &self.val_y)
+    }
+}
+
+/// Generate a depth-N teacher–student task.  Base/teacher draws use
+/// the per-layer streams of `model::deep::layer_stream`, and the data
+/// splits use the block task's stream names, so a depth-1 deep task
+/// is **bitwise identical** to [`block_teacher_student`] with the same
+/// knobs — the depth-1 equivalence pin in `rust/tests/deep_props.rs`
+/// extends through the data pipeline.
+pub fn deep_teacher_student(cfg: &DeepSynthConfig) -> Result<DeepSynthTask> {
+    let bcfg = BlockConfig::standard(cfg.dims.clone(), cfg.n_heads, cfg.seq)
+        .with_d_ff(cfg.d_ff)
+        .with_alpha(cfg.alpha);
+    let dcfg = DeepConfig { block: bcfg, depth: cfg.depth };
+    let base_model = DeepModel::init(&dcfg, cfg.seed)?;
+    let mut teacher = base_model.clone();
+    teacher.randomize_circuits(cfg.teacher_std, cfg.seed)?;
+    let ex = cfg.seq * base_model.d();
+
+    let mut gen_split =
+        |stream_x: &str, stream_eps: &str, n: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            let mut xs = vec![0.0f32; n * ex];
+            Rng::stream(cfg.seed, stream_x).fill_normal(&mut xs, 1.0);
+            let mut ys = teacher.forward(&xs, n, cfg.seq)?;
+            if cfg.noise_std > 0.0 {
+                let mut eps = vec![0.0f32; n * ex];
+                Rng::stream(cfg.seed, stream_eps).fill_normal(&mut eps, cfg.noise_std);
+                for (y, e) in ys.iter_mut().zip(&eps) {
+                    *y += e;
+                }
+            }
+            Ok((xs, ys))
+        };
+    let (train_x, train_y) = gen_split("block-train-x", "block-train-eps", cfg.n_train)?;
+    let (val_x, val_y) = gen_split("block-val-x", "block-val-eps", cfg.n_val)?;
+    Ok(DeepSynthTask {
+        d: base_model.d(),
+        seq: cfg.seq,
+        base_model,
         train_x,
         train_y,
         val_x,
@@ -332,7 +455,7 @@ mod tests {
         // identity-init student predicts the frozen forward, which must
         // differ from the teacher (nonzero circuit deltas)
         let student = a.student();
-        let pred = student.forward(&a.train_x, a.n_train).unwrap();
+        let pred = student.forward(&a.train_x, a.n_train, a.seq).unwrap();
         let mse: f64 = pred
             .iter()
             .zip(&a.train_y)
@@ -342,6 +465,48 @@ mod tests {
         assert!(mse > 1e-5, "teacher delta unexpectedly tiny: {mse}");
         let c = block_teacher_student(&BlockSynthConfig { seed: 1, ..cfg }).unwrap();
         assert_ne!(a.train_y, c.train_y, "different seeds must differ");
+    }
+
+    #[test]
+    fn deep_task_deterministic_and_depth_one_matches_block_task() {
+        let dcfg = DeepSynthConfig {
+            dims: vec![2, 2],
+            n_heads: 2,
+            seq: 3,
+            d_ff: 8,
+            depth: 2,
+            n_train: 6,
+            n_val: 3,
+            ..Default::default()
+        };
+        let a = deep_teacher_student(&dcfg).unwrap();
+        let b = deep_teacher_student(&dcfg).unwrap();
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.train_y, b.train_y);
+        assert_eq!(a.base_model.depth(), 2);
+        assert_eq!(a.example_len(), 3 * 4);
+
+        // depth-1 deep task is the block task, bitwise, through data gen
+        let one = deep_teacher_student(&DeepSynthConfig { depth: 1, ..dcfg.clone() }).unwrap();
+        let blk = block_teacher_student(&BlockSynthConfig {
+            dims: dcfg.dims.clone(),
+            n_heads: dcfg.n_heads,
+            seq: dcfg.seq,
+            d_ff: dcfg.d_ff,
+            n_train: dcfg.n_train,
+            n_val: dcfg.n_val,
+            teacher_std: dcfg.teacher_std,
+            noise_std: dcfg.noise_std,
+            alpha: dcfg.alpha,
+            seed: dcfg.seed,
+        })
+        .unwrap();
+        assert_eq!(one.train_x, blk.train_x);
+        assert_eq!(one.train_y, blk.train_y, "depth-1 targets must match block task bitwise");
+        assert_eq!(one.val_y, blk.val_y);
+
+        // stacking a second layer must change the targets
+        assert_ne!(a.train_y, one.train_y, "depth must matter");
     }
 
     #[test]

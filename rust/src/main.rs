@@ -11,8 +11,13 @@
 //!                                  (one circuit per Q/K/V/O projection)
 //!                                  on the host engine; --save-params
 //!                                  writes the best checkpoint
-//!   serve [--params ckpt.bin …]  — KV-cache incremental-decode serving
-//!                                  of a trained block on merged weights
+//!   train-deep [--layers 2 …]    — fine-tune a depth-N stack of blocks
+//!                                  through the same trainer;
+//!                                  --save-params writes a v3 checkpoint
+//!                                  (one stream per layer)
+//!   serve [--layers N --params ckpt.bin …]
+//!                                — KV-cache incremental-decode serving
+//!                                  of a trained stack on merged weights
 //!                                  (continuous batching; --requests-file
 //!                                  '-' reads the request stream from
 //!                                  stdin)
@@ -56,8 +61,8 @@ fn parse_args(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: quanta-ft <list|info|pretrain|train|train-host|train-block|serve|eval-base\
-         |analyze> [--set S] [--task T] [--arch A] [--seeds N] [--steps N]\n\
+        "usage: quanta-ft <list|info|pretrain|train|train-host|train-block|train-deep|serve\
+         |eval-base|analyze> [--set S] [--task T] [--arch A] [--seeds N] [--steps N]\n\
          train-host flags: [--dims 4,4,8] [--steps N] [--batch N] [--lr F] [--seed N]\n\
                            [--n-train N] [--n-val N] [--teacher-std F] [--noise-std F]\n\
                            [--alpha F] [--clip F] [--warmup N] [--decay N] [--min-lr F]\n\
@@ -65,14 +70,17 @@ fn usage() -> ExitCode {
          train-block flags: train-host flags plus [--heads N] [--seq N] [--d-ff N]\n\
                            [--save-params PATH] (--batch counts sequences; --dims shapes\n\
                            each projection circuit)\n\
+         train-deep flags: train-block flags plus [--layers N] (--save-params writes a\n\
+                           v3 checkpoint, one named stream per layer)\n\
          serve flags:      [--dims 4,4,8] [--heads N] [--d-ff N] [--alpha F] [--seed N]\n\
-                           [--params PATH] [--max-batch N] [--requests N] [--prompt-len N]\n\
-                           [--gen-len N] [--req-seed N] [--requests-file PATH|-]\n\
-                           [--deadline N] [--token-budget N] [--queue-cap N]\n\
-                           [--shed-policy reject-new|drop-oldest]\n\
-                           [--streaming] [--no-verify] (block flags must match the\n\
-                           train-block run that produced --params; request-file rows\n\
-                           may end in 'nan' to inject a poisoned prompt)"
+                           [--layers N] [--params PATH] [--max-batch N] [--requests N]\n\
+                           [--prompt-len N] [--gen-len N] [--req-seed N]\n\
+                           [--requests-file PATH|-] [--deadline N] [--token-budget N]\n\
+                           [--queue-cap N] [--shed-policy reject-new|drop-oldest]\n\
+                           [--streaming] [--no-verify] (stack flags must match the\n\
+                           train-block/train-deep run that produced --params;\n\
+                           request-file rows may end in 'nan' to inject a poisoned\n\
+                           prompt)"
     );
     ExitCode::FAILURE
 }
@@ -346,12 +354,12 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 task.n_val
             );
             let init = {
-                let pred = student.forward(&task.train_x, task.n_train)?;
+                let pred = student.forward(&task.train_x, task.n_train, task.seq)?;
                 mse(&pred, &task.train_y)
             };
             let out = finetune_host(&mut student, &task, &tcfg)?;
             let fin = {
-                let pred = student.forward(&task.train_x, task.n_train)?;
+                let pred = student.forward(&task.train_x, task.n_train, task.seq)?;
                 mse(&pred, &task.train_y)
             };
             let mut t = Table::new(&["metric", "value"]);
@@ -373,8 +381,8 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             // the degenerate-run guard guarantees is non-empty (val may
             // be --n-val 0)
             let merged = student.merged()?;
-            let y_stream = student.forward(&task.train_x, task.n_train)?;
-            let y_merged = merged.forward(&task.train_x, task.n_train)?;
+            let y_stream = student.forward(&task.train_x, task.n_train, task.seq)?;
+            let y_merged = merged.forward(&task.train_x, task.n_train, task.seq)?;
             let scale = y_stream.iter().fold(1.0f32, |m, v| m.max(v.abs()));
             let max_diff = y_stream
                 .iter()
@@ -397,6 +405,129 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 use quanta_ft::coordinator::checkpoint;
                 checkpoint::save(std::path::Path::new(path), "train-block", &out.best_theta)?;
                 println!("saved {} adapter params to {path}", out.best_theta.len());
+            }
+            Ok(())
+        }
+        "train-deep" => {
+            use quanta_ft::coordinator::host_trainer::{finetune_host, mse, HostTrainConfig};
+            use quanta_ft::data::synth::{deep_teacher_student, DeepSynthConfig};
+            use quanta_ft::model::TrainableModel;
+            let dims: Vec<usize> = flags
+                .get("dims")
+                .map(|s| s.as_str())
+                .unwrap_or("4,4,8")
+                .split(',')
+                .map(|p| p.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
+            let d: usize = dims.iter().product();
+            let scfg = DeepSynthConfig {
+                dims,
+                n_heads: flag_or(flags, "heads", 4)?,
+                seq: flag_or(flags, "seq", 8)?,
+                d_ff: flag_or(flags, "d-ff", 2 * d)?,
+                depth: flag_or(flags, "layers", 2)?,
+                n_train: flag_or(flags, "n-train", 64)?,
+                n_val: flag_or(flags, "n-val", 16)?,
+                teacher_std: flag_or(flags, "teacher-std", 0.2)?,
+                noise_std: flag_or(flags, "noise-std", 0.01)?,
+                alpha: flag_or(flags, "alpha", 1.0)?,
+                seed: flag_or(flags, "seed", 0)?,
+            };
+            let tcfg = HostTrainConfig {
+                seed: scfg.seed,
+                steps: flag_or(flags, "steps", 100)?,
+                batch: flag_or(flags, "batch", 8)?,
+                lr: flag_or(flags, "lr", 2e-2)?,
+                clip: flag_or(flags, "clip", 1.0)?,
+                warmup_steps: flag_or(flags, "warmup", 0)?,
+                lr_decay_steps: flag_or(flags, "decay", 0)?,
+                min_lr: flag_or(flags, "min-lr", 0.0)?,
+                weight_decay: flag_or(flags, "weight-decay", 0.0)?,
+                eval_every: flag_or(flags, "eval-every", 20)?,
+                patience: flags
+                    .get("patience")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()
+                    .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
+                ..Default::default()
+            };
+            let task = deep_teacher_student(&scfg)?;
+            let mut student = task.student();
+            println!(
+                "train-deep: d={} heads={} seq={} d_ff={} layers={}, \
+                 {} trainable params ({} per layer), {} train / {} val sequences",
+                task.d,
+                scfg.n_heads,
+                scfg.seq,
+                scfg.d_ff,
+                student.depth(),
+                student.param_count(),
+                student.layer(0).param_count(),
+                task.n_train,
+                task.n_val
+            );
+            let init = {
+                let pred = student.forward(&task.train_x, task.n_train, task.seq)?;
+                mse(&pred, &task.train_y)
+            };
+            let out = finetune_host(&mut student, &task, &tcfg)?;
+            let fin = {
+                let pred = student.forward(&task.train_x, task.n_train, task.seq)?;
+                mse(&pred, &task.train_y)
+            };
+            let mut t = Table::new(&["metric", "value"]);
+            t.row(vec!["steps run".into(), out.steps_run.to_string()]);
+            t.row(vec!["train mse (init)".into(), format!("{init:.6}")]);
+            t.row(vec!["train mse (final)".into(), format!("{fin:.6}")]);
+            t.row(vec![
+                "loss reduction".into(),
+                format!("{:.1}x", init / fin.max(1e-300)),
+            ]);
+            t.row(vec!["best val mse".into(), format!("{:.6}", out.best_val_loss)]);
+            t.row(vec!["wallclock (s)".into(), format!("{:.3}", out.wallclock_s)]);
+            t.print();
+            // the zero-overhead deployment at depth N: fold every
+            // layer's circuits and re-check the stacked parity contract
+            let merged = student.merged()?;
+            let y_stream = student.forward(&task.train_x, task.n_train, task.seq)?;
+            let y_merged = merged.forward(&task.train_x, task.n_train, task.seq)?;
+            let scale = y_stream.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let max_diff = y_stream
+                .iter()
+                .zip(&y_merged)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if max_diff >= 1e-5 * scale {
+                return Err(quanta_ft::Error::msg(format!(
+                    "deep merge parity violated: max |stream - merged| = {max_diff:e} \
+                     at panel scale {scale:e}"
+                )));
+            }
+            println!(
+                "merged-stack parity: max |stream - merged| = {max_diff:.2e} \
+                 (< 1e-5 x panel scale {scale:.1})"
+            );
+            if let Some(path) = flags.get("save-params") {
+                // checkpoint v3: one named stream per layer, reloadable
+                // by `quanta-ft serve --layers N --params`
+                use quanta_ft::coordinator::checkpoint;
+                let names: Vec<String> =
+                    (0..student.depth()).map(|l| format!("layer{l}")).collect();
+                let streams: Vec<(&str, &[f32])> = names
+                    .iter()
+                    .enumerate()
+                    .map(|(l, name)| {
+                        let (lo, hi) = student.layer_span(l);
+                        (name.as_str(), &out.best_theta[lo..hi])
+                    })
+                    .collect();
+                checkpoint::save_streams(std::path::Path::new(path), &streams)?;
+                println!(
+                    "saved {} adapter params ({} layer streams) to {path}",
+                    out.best_theta.len(),
+                    streams.len()
+                );
             }
             Ok(())
         }
@@ -439,17 +570,17 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
 }
 
 /// `quanta-ft serve`: the last leg of the train→merge→serve pipeline.
-/// Rebuilds the frozen block `train-block` used for `--seed` (the
-/// `block-base` stream), loads the trained adapter checkpoint, folds
-/// everything into dense weights, and drives the continuous-batching
+/// Rebuilds the frozen depth-N stack `train-deep` (or, at `--layers 1`,
+/// `train-block`) used for `--seed` (the per-layer `block-base`
+/// streams), loads the trained adapter checkpoint, folds every layer's
+/// circuits into dense weights, and drives the continuous-batching
 /// scheduler over a synthetic or file-driven request stream — then (by
 /// default) re-serves the same requests through the *streaming*
 /// adapters and enforces the 1e-5 zero-overhead parity contract.
 fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     use quanta_ft::coordinator::checkpoint;
-    use quanta_ft::model::{BlockConfig, TrainableModel, TransformerBlock};
-    use quanta_ft::quanta::circuit::all_pairs_structure;
-    use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeConfig, ServeRequest, ShedPolicy};
+    use quanta_ft::model::{BlockConfig, DeepConfig, DeepModel, TrainableModel};
+    use quanta_ft::serve::{BatchScheduler, ServeConfig, ServeModel, ServeRequest, ShedPolicy};
     use quanta_ft::util::rng::Rng;
 
     let dims: Vec<usize> = flags
@@ -462,39 +593,59 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
         .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
     let d: usize = dims.iter().product();
     let seed: u64 = flag_or(flags, "seed", 0)?;
-    let cfg = BlockConfig {
-        structure: all_pairs_structure(dims.len()),
-        dims,
-        n_heads: flag_or(flags, "heads", 4)?,
-        seq: flag_or(flags, "seq", 8)?,
-        d_ff: flag_or(flags, "d-ff", 2 * d)?,
-        alpha: flag_or(flags, "alpha", 1.0)?,
-    };
-    // the same frozen block train-block builds for this seed (the
-    // student template of data::synth::block_teacher_student)
-    let mut block = TransformerBlock::init(&cfg, &mut Rng::stream(seed, "block-base"))?;
+    let depth: usize = flag_or(flags, "layers", 1)?;
+    let bcfg = BlockConfig::standard(dims, flag_or(flags, "heads", 4)?, flag_or(flags, "seq", 8)?)
+        .with_d_ff(flag_or(flags, "d-ff", 2 * d)?)
+        .with_alpha(flag_or(flags, "alpha", 1.0)?);
+    let seq = bcfg.seq;
+    // the same frozen stack train-deep builds for this seed (per-layer
+    // `block-base` streams; depth 1 is exactly train-block's template)
+    let mut model = DeepModel::init(&DeepConfig { block: bcfg, depth }, seed)?;
     if let Some(path) = flags.get("params") {
-        let (name, params) = checkpoint::load(std::path::Path::new(path))?;
-        if params.len() != block.param_count() {
+        // v3 checkpoints carry one stream per layer; a single stream
+        // (v1/v2, or a 1-stream v3) is accepted when it spans the whole
+        // stack — i.e. the depth-1 train-block round trip
+        let streams = checkpoint::load_streams(std::path::Path::new(path))?;
+        let total: usize = streams.iter().map(|(_, p)| p.len()).sum();
+        if total != model.param_count()
+            || (streams.len() != 1 && streams.len() != model.depth())
+        {
             return Err(quanta_ft::Error::msg(format!(
-                "checkpoint '{name}' has {} params, block wants {} — do the serve \
-                 flags match the train-block run?",
-                params.len(),
-                block.param_count()
+                "checkpoint has {} streams / {} params, stack wants {} layers / {} — \
+                 do the serve flags match the train run?",
+                streams.len(),
+                total,
+                model.depth(),
+                model.param_count()
             )));
         }
-        block.set_params(&params)?;
-        println!("loaded checkpoint '{name}': {} adapter params", params.len());
+        if streams.len() == model.depth() {
+            for (l, (name, params)) in streams.iter().enumerate() {
+                let (lo, hi) = model.layer_span(l);
+                if params.len() != hi - lo {
+                    return Err(quanta_ft::Error::msg(format!(
+                        "checkpoint stream '{name}' has {} params, layer {l} wants {}",
+                        params.len(),
+                        hi - lo
+                    )));
+                }
+            }
+        }
+        let flat: Vec<f32> = streams.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        model.set_params(&flat)?;
+        println!(
+            "loaded checkpoint '{}': {} adapter params in {} stream(s)",
+            streams[0].0,
+            total,
+            streams.len()
+        );
     }
     println!(
-        "serve: d={d} heads={} d_ff={} alpha={} ({} trainable params behind 4 projections)",
-        cfg.n_heads,
-        cfg.d_ff,
-        cfg.alpha,
-        block.param_count()
+        "serve: d={d} layers={} ({} trainable params behind 4 projections per layer)",
+        model.depth(),
+        model.param_count()
     );
 
-    let max_batch: usize = flag_or(flags, "max-batch", 8)?;
     let shed = match flags.get("shed-policy").map(|s| s.as_str()) {
         None | Some("reject-new") => ShedPolicy::RejectNew,
         Some("drop-oldest") => ShedPolicy::DropOldest,
@@ -504,13 +655,13 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
             )))
         }
     };
-    let serve_cfg = ServeConfig {
-        max_batch,
-        deadline_steps: flag_or(flags, "deadline", 0)?,
-        token_budget: flag_or(flags, "token-budget", 0)?,
-        queue_cap: flag_or(flags, "queue-cap", 0)?,
-        shed,
-    };
+    // ServeConfig builders map 1:1 to these CLI flags
+    let serve_cfg = ServeConfig::default()
+        .with_max_batch(flag_or(flags, "max-batch", 8)?)
+        .with_deadline(flag_or(flags, "deadline", 0)?)
+        .with_token_budget(flag_or(flags, "token-budget", 0)?)
+        .with_queue_cap(flag_or(flags, "queue-cap", 0)?)
+        .with_shed_policy(shed);
     let req_seed: u64 = flag_or(flags, "req-seed", 1)?;
     let mk = |id: u64, p_len: usize, n_gen: usize, stream_seed: u64| -> ServeRequest {
         let mut prompt = vec![0.0f32; p_len * d];
@@ -566,7 +717,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
         reqs
     } else {
         let n: usize = flag_or(flags, "requests", 16)?;
-        let p_len: usize = flag_or(flags, "prompt-len", cfg.seq)?;
+        let p_len: usize = flag_or(flags, "prompt-len", seq)?;
         let n_gen: usize = flag_or(flags, "gen-len", 8)?;
         (0..n as u64).map(|id| mk(id, p_len, n_gen, req_seed)).collect()
     };
@@ -574,9 +725,9 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     let streaming_only = flags.contains_key("streaming");
     let verify = !flags.contains_key("no-verify") && !streaming_only;
     let deployment = if streaming_only {
-        ServeBlock::streaming(&block)
+        ServeModel::streaming(&model)
     } else {
-        ServeBlock::merged(&block)?
+        ServeModel::merged(&model)?
     };
     let sched = BatchScheduler::with_config(deployment, serve_cfg)?;
     let (outputs, stats) = sched.run(requests.clone())?;
@@ -619,7 +770,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
         // Compare only requests that completed in BOTH runs — failed
         // requests carry errors, not panels (their variants still have
         // to agree, or one deployment dropped a request silently).
-        let streamed = BatchScheduler::with_config(ServeBlock::streaming(&block), serve_cfg)?;
+        let streamed = BatchScheduler::with_config(ServeModel::streaming(&model), serve_cfg)?;
         let (stream_out, stream_stats) = streamed.run(requests)?;
         let mut max_diff = 0.0f32;
         let mut scale = 1.0f32;

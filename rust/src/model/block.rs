@@ -30,9 +30,10 @@
 //! per-row pieces of this forward — [`layer_norm`], [`gelu`],
 //! [`attn_row`], and the borrowing GEMM the MLP runs on — so the
 //! KV-cache decode step is arithmetic-identical to this panel forward
-//! row for row; [`TransformerBlock::forward_len`] is the
-//! arbitrary-length full-recompute forward the decode parity tests and
-//! the serving baseline score against.
+//! row for row; [`TransformerBlock::forward`] takes the sequence
+//! length explicitly, so the same entry is both the training-shape
+//! forward and the arbitrary-length full-recompute forward the decode
+//! parity tests and the serving baseline score against.
 
 use crate::compute::gemm;
 use crate::model::adapter_set::AdapterSet;
@@ -72,6 +73,10 @@ pub struct BlockConfig {
 
 impl BlockConfig {
     /// The paper-default shape: all-pairs structure, `d_ff = 2 d`.
+    /// Deviations compose builder-style —
+    /// `BlockConfig::standard(dims, heads, seq).with_alpha(0.7)` — so
+    /// call sites (and `DeepConfig`, which embeds a `BlockConfig` per
+    /// layer) never churn on positional fields.
     pub fn standard(dims: Vec<usize>, n_heads: usize, seq: usize) -> BlockConfig {
         let d: usize = dims.iter().product();
         BlockConfig {
@@ -82,6 +87,31 @@ impl BlockConfig {
             d_ff: 2 * d,
             alpha: 1.0,
         }
+    }
+
+    pub fn with_heads(mut self, n_heads: usize) -> BlockConfig {
+        self.n_heads = n_heads;
+        self
+    }
+
+    pub fn with_seq(mut self, seq: usize) -> BlockConfig {
+        self.seq = seq;
+        self
+    }
+
+    pub fn with_d_ff(mut self, d_ff: usize) -> BlockConfig {
+        self.d_ff = d_ff;
+        self
+    }
+
+    pub fn with_alpha(mut self, alpha: f32) -> BlockConfig {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_structure(mut self, structure: Vec<(usize, usize)>) -> BlockConfig {
+        self.structure = structure;
+        self
     }
 }
 
@@ -438,7 +468,7 @@ impl TransformerBlock {
     /// (`[n_seqs · seq, d]` panels); returns `(ctx, probs)`.  The
     /// per-row work is [`attn_row`] — shared with the decode step —
     /// and `seq` is a parameter (not `self.seq`) so
-    /// [`TransformerBlock::forward_len`] can score arbitrary lengths.
+    /// [`TransformerBlock::forward`] can score arbitrary lengths.
     fn attention(
         &self,
         q: &[f32],
@@ -577,26 +607,23 @@ impl TransformerBlock {
         Ok((out, tape))
     }
 
-    /// Tape-free forward (validation / parity checks): identical
-    /// arithmetic to [`TransformerBlock::forward_with_tape`] — the
-    /// adapters' tape twins are arithmetic-identical by contract — but
-    /// no activation panels are recorded or kept.
-    pub fn forward(&self, xs: &[f32], n_seqs: usize) -> Result<Vec<f32>> {
-        self.check_panel(xs, n_seqs, "forward")?;
-        self.forward_len(xs, n_seqs, self.seq)
-    }
-
     /// Tape-free forward over `n_seqs` sequences of **arbitrary**
-    /// length `seq` — the training shape `self.seq` only constrains the
-    /// taped/backward path, not the frozen arithmetic.  This is the
-    /// full-recompute serving baseline: scoring a length-`t+1` prefix
-    /// per generated token is what the KV-cache decode step
-    /// (`serve::decode`) replaces, and what `rust/tests/serve_props.rs`
-    /// pins the decode output against at every position.
-    pub fn forward_len(&self, xs: &[f32], n_seqs: usize, seq: usize) -> Result<Vec<f32>> {
+    /// length `seq` — identical arithmetic to
+    /// [`TransformerBlock::forward_with_tape`] (the adapters' tape
+    /// twins are arithmetic-identical by contract), but no activation
+    /// panels are recorded or kept.  The training shape `self.seq`
+    /// only constrains the taped/backward path, not the frozen
+    /// arithmetic, so this single entry is both the validation/parity
+    /// forward (`seq == self.seq`) and the full-recompute serving
+    /// baseline: scoring a length-`t+1` prefix per generated token is
+    /// what the KV-cache decode step (`serve::decode`) replaces, and
+    /// what `rust/tests/serve_props.rs` pins the decode output against
+    /// at every position.  (This absorbs the former `forward_len` —
+    /// the one-twin-per-length API is gone.)
+    pub fn forward(&self, xs: &[f32], n_seqs: usize, seq: usize) -> Result<Vec<f32>> {
         if seq == 0 || xs.len() != n_seqs * seq * self.d {
             return Err(Error::Shape(format!(
-                "block forward_len: panel len {} != n_seqs {n_seqs} * seq {seq} * d {}",
+                "block forward: panel len {} != n_seqs {n_seqs} * seq {seq} * d {}",
                 xs.len(),
                 self.d
             )));
@@ -694,7 +721,8 @@ impl TrainableModel for TransformerBlock {
     }
 
     fn forward(&self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
-        TransformerBlock::forward(self, xs, n)
+        self.check_panel(xs, n, "forward")?;
+        TransformerBlock::forward(self, xs, n, self.seq)
     }
 
     fn forward_with_tape(&self, xs: &[f32], n: usize) -> Result<(Vec<f32>, BlockTape)> {
@@ -724,8 +752,8 @@ mod tests {
         let merged = block.merged().unwrap();
         let mut xs = vec![0.0f32; 2 * block.io_len()];
         rng.fill_normal(&mut xs, 1.0);
-        let y = block.forward(&xs, 2).unwrap();
-        let ym = merged.forward(&xs, 2).unwrap();
+        let y = block.forward(&xs, 2, block.seq()).unwrap();
+        let ym = merged.forward(&xs, 2, merged.seq()).unwrap();
         for (a, b) in y.iter().zip(&ym) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
@@ -739,7 +767,7 @@ mod tests {
         let mut xs = vec![0.0f32; 3 * block.io_len()];
         rng.fill_normal(&mut xs, 1.0);
         let (y1, tape) = block.forward_with_tape(&xs, 3).unwrap();
-        let y2 = block.forward(&xs, 3).unwrap();
+        let y2 = block.forward(&xs, 3, block.seq()).unwrap();
         assert_eq!(y1, y2);
         assert_eq!(tape.probs.len(), 3 * block.n_heads() * 9);
         // causal: strictly-upper probs are exactly zero, rows sum to 1
@@ -765,14 +793,14 @@ mod tests {
         let mut block = tiny_block(&mut rng);
         let mut xs = vec![0.0f32; 2 * block.io_len()];
         rng.fill_normal(&mut xs, 1.0);
-        let y0 = block.forward(&xs, 2).unwrap();
+        let y0 = block.forward(&xs, 2, block.seq()).unwrap();
         let frozen = block.merged().unwrap(); // identity merge == bases
-        let yf = frozen.forward(&xs, 2).unwrap();
+        let yf = frozen.forward(&xs, 2, frozen.seq()).unwrap();
         for (a, b) in y0.iter().zip(&yf) {
             assert!((a - b).abs() < 1e-6, "identity init must match frozen forward");
         }
         block.randomize_circuits(0.4, &mut rng).unwrap();
-        let y1 = block.forward(&xs, 2).unwrap();
+        let y1 = block.forward(&xs, 2, block.seq()).unwrap();
         assert!(y0.iter().zip(&y1).any(|(a, b)| (a - b).abs() > 1e-4));
     }
 
@@ -786,28 +814,32 @@ mod tests {
         assert_eq!(block.adapters().len(), 4);
         let mut xs = vec![0.0f32; block.io_len()];
         rng.fill_normal(&mut xs, 1.0);
-        let y0 = block.forward(&xs, 1).unwrap();
+        let seq = block.seq();
+        let y0 = block.forward(&xs, 1, seq).unwrap();
         let mut p2 = p.clone();
         p2[0] += 0.5;
         block.set_params(&p2).unwrap();
         assert!(block
-            .forward(&xs, 1)
+            .forward(&xs, 1, seq)
             .unwrap()
             .iter()
             .zip(&y0)
             .any(|(a, b)| (a - b).abs() > 1e-6));
         block.set_params(&p).unwrap();
-        assert_eq!(block.forward(&xs, 1).unwrap(), y0);
+        assert_eq!(block.forward(&xs, 1, seq).unwrap(), y0);
     }
 
     #[test]
     fn shape_errors() {
         let mut rng = Rng::new(84);
         let block = tiny_block(&mut rng);
-        assert!(block.forward(&[0.0; 7], 1).is_err());
-        let cfg = BlockConfig::standard(vec![2, 2], 3, 4); // 4 % 3 != 0
+        assert!(block.forward(&[0.0; 7], 1, block.seq()).is_err());
+        assert!(block.forward(&[0.0; 7], 1, 0).is_err());
+        let cfg = BlockConfig::standard(vec![2, 2], 2, 4).with_heads(3); // 4 % 3 != 0
         assert!(TransformerBlock::init(&cfg, &mut rng).is_err());
-        let cfg0 = BlockConfig { seq: 0, ..BlockConfig::standard(vec![2, 2], 2, 4) };
+        let cfg0 = BlockConfig::standard(vec![2, 2], 2, 4).with_seq(0);
         assert!(TransformerBlock::init(&cfg0, &mut rng).is_err());
+        let cff = BlockConfig::standard(vec![2, 2], 2, 4).with_d_ff(0);
+        assert!(TransformerBlock::init(&cff, &mut rng).is_err());
     }
 }

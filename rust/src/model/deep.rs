@@ -1,0 +1,353 @@
+//! Depth-N host model: a stack of pre-LN [`TransformerBlock`]s behind
+//! ONE flat parameter layout — the paper's actual fine-tuning shape
+//! (QuanTA adapts every layer of a deep LLaMA, not one block in
+//! isolation), reduced to the host substrate.
+//!
+//! ## Flat layout: the `AdapterSet` scheme, one level up
+//!
+//! [`AdapterSet`] lays adapters out by prefix sums of per-adapter
+//! param counts; [`DeepModel`] applies the *same scheme per layer* —
+//! `offsets[l]` is the running sum of per-layer
+//! `adapters.param_count()`, so layer `l`'s span of the flat vector is
+//! `offsets[l]..offsets[l+1]` and inside that span the PR 5 layout
+//! property (insertion-order/shape-randomized, guarded by
+//! `rust/tests/model_props.rs`) applies verbatim.  One flat vector
+//! means `finetune_host` — Adam state, clipping, best-checkpoint
+//! rollback, anomaly recovery — drives a depth-N model completely
+//! unchanged through [`TrainableModel`].
+//!
+//! ## Layer-major backward, one-gate-wide memory
+//!
+//! The backward walks layers in *reverse*, feeding each layer's input
+//! gradient to the one below ([`TransformerBlock::backward`] returns
+//! `dx` precisely for this chain).  Within each layer the adapters
+//! route through the gate-sharded sweep (`backward_with_shard`, PR 4),
+//! so resident gradient memory stays one-gate-wide **regardless of
+//! depth**: at any instant only one layer's one gate's gradient panel
+//! is live beyond the flat accumulator.
+//!
+//! ## Determinism and depth-1 equivalence
+//!
+//! Layer `l` draws its frozen bases from the named RNG stream
+//! `"block-base"` (layer 0) / `"block-base-{l}"` (deeper layers), so a
+//! depth-1 [`DeepModel`] is **bitwise identical** — init, forward,
+//! backward — to the bare [`TransformerBlock`] path every earlier PR
+//! pinned (`rust/tests/deep_props.rs` asserts this exactly).  All
+//! bitwise invariants (QFT_THREADS, dispatch mode, shard-vs-bulk)
+//! lift to depth N because each layer is the already-pinned block.
+
+use crate::model::block::{BlockConfig, BlockTape, TransformerBlock};
+use crate::model::TrainableModel;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Shape of a deep model: one [`BlockConfig`] shared by every layer
+/// (depth and per-layer adapter structure stay orthogonal — a future
+/// per-layer-structure model changes this field to a `Vec` without
+/// touching the layout scheme).
+#[derive(Clone, Debug)]
+pub struct DeepConfig {
+    /// Per-layer block shape (dims/heads/seq/d_ff/structure/alpha).
+    pub block: BlockConfig,
+    /// Number of stacked blocks (≥ 1).
+    pub depth: usize,
+}
+
+impl DeepConfig {
+    /// Paper-default per-layer shape at the given depth.
+    pub fn standard(dims: Vec<usize>, n_heads: usize, seq: usize, depth: usize) -> DeepConfig {
+        DeepConfig { block: BlockConfig::standard(dims, n_heads, seq), depth }
+    }
+
+    pub fn with_block(mut self, block: BlockConfig) -> DeepConfig {
+        self.block = block;
+        self
+    }
+}
+
+/// The name of layer `l`'s base-init RNG stream.  Layer 0 keeps the
+/// single-block stream name so depth-1 init is bitwise the
+/// [`TransformerBlock`] path.
+pub fn layer_stream(base: &str, l: usize) -> String {
+    if l == 0 {
+        base.to_string()
+    } else {
+        format!("{base}-{l}")
+    }
+}
+
+/// Everything the layer-major backward needs: one [`BlockTape`] per
+/// layer (each tape alone reconstructs its layer's input gradient from
+/// the gradient above — no inter-layer activations are kept).
+pub struct DeepTape {
+    pub n_seqs: usize,
+    tapes: Vec<BlockTape>,
+}
+
+/// A stack of N blocks behind one flat parameter layout.
+#[derive(Clone, Debug)]
+pub struct DeepModel {
+    layers: Vec<TransformerBlock>,
+    /// Prefix sums of per-layer param counts (`depth + 1` entries) —
+    /// the `AdapterSet` offset scheme, one level up.
+    offsets: Vec<usize>,
+}
+
+impl DeepModel {
+    /// Fresh depth-`cfg.depth` model: every layer has random frozen
+    /// bases from its own named stream (see [`layer_stream`]) and
+    /// identity-initialized adapters, so the step-0 forward is exactly
+    /// the frozen stack.
+    pub fn init(cfg: &DeepConfig, seed: u64) -> Result<DeepModel> {
+        if cfg.depth == 0 {
+            return Err(Error::Config("deep: depth must be >= 1".into()));
+        }
+        let layers = (0..cfg.depth)
+            .map(|l| {
+                let mut rng = Rng::stream(seed, &layer_stream("block-base", l));
+                TransformerBlock::init(&cfg.block, &mut rng)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        DeepModel::from_layers(layers)
+    }
+
+    /// Stack pre-built blocks (must agree on `d` and `seq`).
+    pub fn from_layers(layers: Vec<TransformerBlock>) -> Result<DeepModel> {
+        if layers.is_empty() {
+            return Err(Error::Config("deep: depth must be >= 1".into()));
+        }
+        let (d, seq) = (layers[0].d(), layers[0].seq());
+        let mut offsets = Vec::with_capacity(layers.len() + 1);
+        offsets.push(0);
+        for (l, blk) in layers.iter().enumerate() {
+            if blk.d() != d || blk.seq() != seq {
+                return Err(Error::Config(format!(
+                    "deep: layer {l} shape ({}, {}) != layer 0 shape ({d}, {seq})",
+                    blk.d(),
+                    blk.seq()
+                )));
+            }
+            offsets.push(offsets[l] + blk.adapters().param_count());
+        }
+        Ok(DeepModel { layers, offsets })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.layers[0].d()
+    }
+
+    pub fn seq(&self) -> usize {
+        self.layers[0].seq()
+    }
+
+    pub fn layers(&self) -> &[TransformerBlock] {
+        &self.layers
+    }
+
+    pub fn layer(&self, l: usize) -> &TransformerBlock {
+        &self.layers[l]
+    }
+
+    /// Layer `l`'s span of the flat parameter/gradient vector.
+    pub fn layer_span(&self, l: usize) -> (usize, usize) {
+        (self.offsets[l], self.offsets[l + 1])
+    }
+
+    /// Re-draw every layer's projection circuits as `eye + N(0, std²)`
+    /// from per-layer teacher streams — how the deep synthetic teacher
+    /// is built (depth 1 consumes exactly the single-block
+    /// `"block-teacher"` stream).
+    pub fn randomize_circuits(&mut self, std: f32, seed: u64) -> Result<()> {
+        for (l, blk) in self.layers.iter_mut().enumerate() {
+            let mut rng = Rng::stream(seed, &layer_stream("block-teacher", l));
+            blk.randomize_circuits(std, &mut rng)?;
+        }
+        Ok(())
+    }
+
+    /// The zero-inference-overhead stack: every layer merged
+    /// (`AdapterSet::merged`), same forward code path.
+    pub fn merged(&self) -> Result<DeepModel> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|b| b.merged())
+            .collect::<Result<Vec<_>>>()?;
+        DeepModel::from_layers(layers)
+    }
+
+    /// Tape-free forward over `n_seqs` sequences of arbitrary length
+    /// `seq`: each layer's [`TransformerBlock::forward`] chained.
+    /// This is the full-recompute serving baseline the deep decode
+    /// parity test pins against, exactly as the block's own `forward`
+    /// is at depth 1.
+    pub fn forward(&self, xs: &[f32], n_seqs: usize, seq: usize) -> Result<Vec<f32>> {
+        let mut panel = self.layers[0].forward(xs, n_seqs, seq)?;
+        for blk in &self.layers[1..] {
+            panel = blk.forward(&panel, n_seqs, seq)?;
+        }
+        Ok(panel)
+    }
+}
+
+impl TrainableModel for DeepModel {
+    type Tape = DeepTape;
+
+    fn io_len(&self) -> usize {
+        self.seq() * self.d()
+    }
+
+    fn param_count(&self) -> usize {
+        *self.offsets.last().expect("offsets never empty")
+    }
+
+    fn params_flat(&self) -> Vec<f32> {
+        let mut flat = Vec::with_capacity(self.param_count());
+        for blk in &self.layers {
+            flat.extend_from_slice(&blk.adapters().params_flat());
+        }
+        flat
+    }
+
+    fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.param_count() {
+            return Err(Error::Shape(format!(
+                "deep set_params: got {} params, layout holds {}",
+                flat.len(),
+                self.param_count()
+            )));
+        }
+        for (l, blk) in self.layers.iter_mut().enumerate() {
+            let (lo, hi) = (self.offsets[l], self.offsets[l + 1]);
+            blk.set_params(&flat[lo..hi])?;
+        }
+        Ok(())
+    }
+
+    fn forward(&self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
+        DeepModel::forward(self, xs, n, self.seq())
+    }
+
+    fn forward_with_tape(&self, xs: &[f32], n: usize) -> Result<(Vec<f32>, DeepTape)> {
+        let mut tapes = Vec::with_capacity(self.depth());
+        let (mut panel, t0) = self.layers[0].forward_with_tape(xs, n)?;
+        tapes.push(t0);
+        for blk in &self.layers[1..] {
+            let (next, t) = blk.forward_with_tape(&panel, n)?;
+            panel = next;
+            tapes.push(t);
+        }
+        Ok((panel, DeepTape { n_seqs: n, tapes }))
+    }
+
+    /// Layer-major reverse chain: top layer first, each layer's `dx`
+    /// feeding the layer below; per-layer flat gradients land in their
+    /// layout spans.  Within each layer the adapter backward routes
+    /// through the gate-sharded sweep, so peak gradient residency is
+    /// one gate of one layer no matter the depth.
+    fn backward_flat(&self, tape: &DeepTape, grad_out: &[f32], n: usize) -> Result<Vec<f32>> {
+        if tape.tapes.len() != self.depth() || tape.n_seqs != n {
+            return Err(Error::Shape(format!(
+                "deep backward: tape for {} layers / {} seqs, model has {} / {n}",
+                tape.tapes.len(),
+                tape.n_seqs,
+                self.depth()
+            )));
+        }
+        let mut flat = vec![0.0f32; self.param_count()];
+        let mut grad = grad_out.to_vec();
+        for l in (0..self.depth()).rev() {
+            let (layer_flat, dx) = self.layers[l].backward(&tape.tapes[l], &grad, n)?;
+            let (lo, hi) = (self.offsets[l], self.offsets[l + 1]);
+            flat[lo..hi].copy_from_slice(&layer_flat);
+            grad = dx;
+        }
+        Ok(flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_deep(depth: usize, seed: u64) -> DeepModel {
+        let cfg = DeepConfig::standard(vec![2, 2], 2, 3, depth);
+        DeepModel::init(&cfg, seed).unwrap()
+    }
+
+    #[test]
+    fn layout_is_layer_major_prefix_sums() {
+        let model = tiny_deep(3, 70);
+        let per_layer = model.layer(0).adapters().param_count();
+        assert_eq!(model.param_count(), 3 * per_layer);
+        for l in 0..3 {
+            assert_eq!(model.layer_span(l), (l * per_layer, (l + 1) * per_layer));
+        }
+        // round-trip: perturb one layer's span, others' params untouched
+        let mut m = model.clone();
+        let mut p = m.params_flat();
+        let (lo, hi) = m.layer_span(1);
+        for v in &mut p[lo..hi] {
+            *v += 0.25;
+        }
+        m.set_params(&p).unwrap();
+        assert_eq!(m.params_flat(), p);
+        assert_eq!(
+            m.layer(0).adapters().params_flat(),
+            model.layer(0).adapters().params_flat()
+        );
+        assert!(m.set_params(&p[1..]).is_err());
+    }
+
+    #[test]
+    fn identity_init_is_the_frozen_stack_and_merge_matches() {
+        let model = tiny_deep(2, 71);
+        let merged = model.merged().unwrap();
+        let mut rng = Rng::new(710);
+        let mut xs = vec![0.0f32; 2 * model.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let y = model.forward(&xs, 2, model.seq()).unwrap();
+        let ym = merged.forward(&xs, 2, merged.seq()).unwrap();
+        for (a, b) in y.iter().zip(&ym) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn forward_chains_layers_exactly() {
+        let mut model = tiny_deep(2, 72);
+        model.randomize_circuits(0.2, 72).unwrap();
+        let mut rng = Rng::new(720);
+        let mut xs = vec![0.0f32; model.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let seq = model.seq();
+        let y = model.forward(&xs, 1, seq).unwrap();
+        let h = model.layer(0).forward(&xs, 1, seq).unwrap();
+        let want = model.layer(1).forward(&h, 1, seq).unwrap();
+        assert_eq!(y, want);
+        // taped forward is arithmetic-identical to the tape-free one
+        let (yt, tape) = model.forward_with_tape(&xs, 1).unwrap();
+        assert_eq!(y, yt);
+        assert_eq!(tape.n_seqs, 1);
+        // backward shape sanity: one gradient per parameter
+        let ones = vec![1.0f32; y.len()];
+        let g = model.backward_flat(&tape, &ones, 1).unwrap();
+        assert_eq!(g.len(), model.param_count());
+    }
+
+    #[test]
+    fn degenerate_configs_fail() {
+        let cfg = DeepConfig::standard(vec![2, 2], 2, 3, 0);
+        assert!(DeepModel::init(&cfg, 0).is_err());
+        assert!(DeepModel::from_layers(vec![]).is_err());
+        let a = tiny_deep(1, 73);
+        let cfg_b = DeepConfig::standard(vec![2, 2], 2, 5, 1);
+        let b = DeepModel::init(&cfg_b, 73).unwrap();
+        let mixed = vec![a.layer(0).clone(), b.layer(0).clone()];
+        assert!(DeepModel::from_layers(mixed).is_err());
+    }
+}

@@ -7,7 +7,10 @@
 //! block (frozen Q/K/V/O + MLP + layernorms, causal softmax attention)
 //! whose four projections are QuanTA-adapted — the paper's
 //! one-circuit-per-attention-projection fine-tuning setup, end to end
-//! on the host engine.
+//! on the host engine.  [`DeepModel`] stacks N such blocks behind one
+//! flat layer-major layout (per-layer `AdapterSet` spans via the same
+//! prefix-sum scheme), so depth is a config axis rather than a new
+//! code path.
 //!
 //! [`TrainableModel`] is the contract the host trainer
 //! (`coordinator::host_trainer::finetune_host`) drives: a flat
@@ -18,9 +21,11 @@
 
 pub mod adapter_set;
 pub mod block;
+pub mod deep;
 
 pub use adapter_set::AdapterSet;
 pub use block::{BlockConfig, BlockTape, TransformerBlock};
+pub use deep::{DeepConfig, DeepModel, DeepTape};
 
 use crate::quanta::{CircuitTape, QuantaAdapter};
 use crate::util::error::Result;

@@ -32,7 +32,7 @@
 //! borrowing GEMM / circuit engine kernels, whose per-row results are
 //! batch-size-invariant by the engine's chunking contract — so a
 //! streaming decode step is **bitwise** equal to the corresponding row
-//! of `TransformerBlock::forward_len` over the same prefix, at any
+//! of `TransformerBlock::forward` over the same prefix, at any
 //! `QFT_THREADS` and any batch composition.  That bitwise equality
 //! (not a tolerance) is what makes the scheduler's outputs independent
 //! of arrival order and batch packing.
@@ -332,7 +332,7 @@ impl ServeBlock {
     /// Decode a whole teacher-forced sequence for one request: feed
     /// `xs[t]` at position `t` and collect every position's output —
     /// the incremental counterpart of
-    /// [`TransformerBlock::forward_len`]`(xs, 1, seq)`, against which
+    /// [`TransformerBlock::forward`]`(xs, 1, seq)`, against which
     /// it is pinned per position by `rust/tests/serve_props.rs`.
     pub fn decode_sequence(&self, xs: &[f32], seq: usize) -> Result<Vec<f32>> {
         let d = self.d;

@@ -17,16 +17,26 @@
 //! [`ShedPolicy`]) live on [`ServeConfig`], and healthy requests'
 //! outputs stay bitwise identical to a run without the faulty ones.
 //!
-//! Exposed on the CLI as `quanta-ft serve`; properties (decode ≡
-//! full-recompute per position, merged ≡ streaming at 1e-5, scheduler
-//! invariance under arrival order / `QFT_THREADS` / dispatch mode,
-//! per-request isolation of mixed batches) live in
-//! `rust/tests/serve_props.rs`.
+//! Depth-N deployments go through the same machinery: [`ServeModel`]
+//! stacks per-layer [`ServeBlock`]s, [`SessionState`] bundles the
+//! per-layer caches behind one request slot, and [`BatchScheduler`] is
+//! generic over the small [`DecodeEngine`] trait both deployments
+//! implement — the scheduler loop, error domains, deadlines, and shed
+//! policies are depth-blind.
+//!
+//! Exposed on the CLI as `quanta-ft serve` (`--layers N` for deep
+//! stacks); properties (decode ≡ full-recompute per position, merged ≡
+//! streaming at 1e-5, scheduler invariance under arrival order /
+//! `QFT_THREADS` / dispatch mode, per-request isolation of mixed
+//! batches) live in `rust/tests/serve_props.rs` and, at depth N,
+//! `rust/tests/deep_props.rs`.
 
 pub mod decode;
+pub mod model;
 pub mod scheduler;
 
 pub use decode::{DecodeState, ServeBlock};
+pub use model::{DecodeEngine, ServeModel, SessionState};
 pub use scheduler::{
     BatchScheduler, ServeConfig, ServeError, ServeOutput, ServeRequest, ServeStats, ShedPolicy,
 };

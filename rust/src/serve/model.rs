@@ -1,0 +1,295 @@
+//! Depth-N serving: a stack of per-layer [`ServeBlock`]s behind one
+//! request slot, and the [`DecodeEngine`] trait that lets the
+//! continuous-batching scheduler drive a single block or a deep stack
+//! through the same loop.
+//!
+//! ## One session, N caches
+//!
+//! Each layer of a deep model attends over *its own* history — layer
+//! `l`'s K/V rows are projections of layer `l−1`'s outputs — so a
+//! request against a depth-N model needs N per-layer [`DecodeState`]s.
+//! [`SessionState`] bundles them behind the single slot the scheduler
+//! manages: admit/retire/recycle logic never learns about depth.
+//!
+//! ## The engine trait
+//!
+//! [`BatchScheduler`](crate::serve::BatchScheduler) needs exactly
+//! three things from whatever it drives: the activation width
+//! ([`DecodeEngine::d`]), a batched one-token step
+//! ([`DecodeEngine::decode_step`]), and whether the deployment runs
+//! merged weights ([`DecodeEngine::is_merged`]) — plus session
+//! construction so retired slots can be recycled.  [`ServeBlock`]
+//! (session = one [`DecodeState`]) and [`ServeModel`] (session = one
+//! [`SessionState`]) both implement it, so the PR 6 error domains,
+//! deadlines, token budgets, and shed policies apply to depth-N
+//! serving verbatim — same code, not same-shaped code.
+//!
+//! ## Parity contract, lifted
+//!
+//! [`ServeModel::decode_step`] is layer `0..N` of
+//! [`ServeBlock::decode_step`] chained, and the deep full-recompute
+//! forward ([`DeepModel::forward`]) is the per-layer block forward
+//! chained, so the PR 5 bitwise decode-parity argument applies per
+//! layer: streaming deep decode ≡ deep forward recompute **bitwise**,
+//! and merged ≡ streaming at the usual 1e-5×scale
+//! (`rust/tests/deep_props.rs`).
+
+use crate::model::DeepModel;
+use crate::serve::decode::{DecodeState, ServeBlock};
+use crate::util::error::{Error, Result};
+
+/// What the continuous-batching scheduler needs from a deployment.
+/// One session holds everything a single request slot must keep
+/// between steps (K/V caches at every layer); the engine itself is
+/// immutable and shared by all slots.
+pub trait DecodeEngine {
+    /// Per-request state behind one scheduler slot.
+    type Session;
+
+    /// Activation width of the request rows.
+    fn d(&self) -> usize;
+
+    /// True when every projection at every layer runs merged dense
+    /// weights (the zero-inference-overhead deployment).
+    fn is_merged(&self) -> bool;
+
+    /// Fresh empty session for a new slot.
+    fn new_session(&self) -> Self::Session;
+
+    /// Forget a session's history but keep its allocations (slot
+    /// recycling — see [`DecodeState::reset`]).
+    fn reset_session(&self, s: &mut Self::Session);
+
+    /// Decode one new token for each of `sessions.len()` concurrent
+    /// requests; `xs` is the row-major `[requests, d]` panel of new
+    /// inputs, and the returned panel holds each request's output at
+    /// its new position.
+    fn decode_step(&self, sessions: &mut [&mut Self::Session], xs: &[f32]) -> Result<Vec<f32>>;
+}
+
+impl DecodeEngine for ServeBlock {
+    type Session = DecodeState;
+
+    fn d(&self) -> usize {
+        ServeBlock::d(self)
+    }
+
+    fn is_merged(&self) -> bool {
+        ServeBlock::is_merged(self)
+    }
+
+    fn new_session(&self) -> DecodeState {
+        DecodeState::new(ServeBlock::d(self))
+    }
+
+    fn reset_session(&self, s: &mut DecodeState) {
+        s.reset();
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
+        ServeBlock::decode_step(self, sessions, xs)
+    }
+}
+
+/// Per-request state for a depth-N deployment: one [`DecodeState`]
+/// per layer behind a single scheduler slot.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    layers: Vec<DecodeState>,
+}
+
+impl SessionState {
+    /// Empty session for a depth-`depth`, width-`d` model.
+    pub fn new(d: usize, depth: usize) -> SessionState {
+        SessionState { layers: (0..depth).map(|_| DecodeState::new(d)).collect() }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Positions cached so far (every layer advances in lockstep).
+    pub fn len(&self) -> usize {
+        self.layers[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Forget every layer's cache, keep every allocation.
+    pub fn reset(&mut self) {
+        for s in &mut self.layers {
+            s.reset();
+        }
+    }
+
+    fn layer_mut(&mut self, l: usize) -> &mut DecodeState {
+        &mut self.layers[l]
+    }
+}
+
+/// Immutable depth-N serving snapshot: one [`ServeBlock`] per layer,
+/// all merged or all streaming.  Built once per deployment from a
+/// trained [`DeepModel`]; per-request state lives in [`SessionState`].
+#[derive(Clone, Debug)]
+pub struct ServeModel {
+    blocks: Vec<ServeBlock>,
+}
+
+impl ServeModel {
+    /// Zero-overhead deployment: every layer's projections folded to
+    /// dense matrices — the decode hot loop is pure GEMM at every
+    /// depth.
+    pub fn merged(model: &DeepModel) -> Result<ServeModel> {
+        let blocks =
+            model.layers().iter().map(ServeBlock::merged).collect::<Result<Vec<_>>>()?;
+        Ok(ServeModel { blocks })
+    }
+
+    /// Streaming deployment: every layer keeps its live adapters — the
+    /// parity reference for the merged stack.
+    pub fn streaming(model: &DeepModel) -> ServeModel {
+        ServeModel { blocks: model.layers().iter().map(ServeBlock::streaming).collect() }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.blocks[0].d()
+    }
+
+    /// True when every layer runs merged dense weights.
+    pub fn is_merged(&self) -> bool {
+        self.blocks.iter().all(|b| b.is_merged())
+    }
+
+    /// Decode one new token for each concurrent request through the
+    /// whole stack: layer `l`'s [`ServeBlock::decode_step`] consumes
+    /// layer `l−1`'s output panel, and each request's session advances
+    /// one position at every layer.
+    pub fn decode_step(
+        &self,
+        sessions: &mut [&mut SessionState],
+        xs: &[f32],
+    ) -> Result<Vec<f32>> {
+        for (i, s) in sessions.iter().enumerate() {
+            if s.depth() != self.depth() {
+                return Err(Error::Shape(format!(
+                    "deep decode_step: session {i} has depth {}, model has {}",
+                    s.depth(),
+                    self.depth()
+                )));
+            }
+        }
+        let mut panel = xs.to_vec();
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let mut layer_states: Vec<&mut DecodeState> =
+                sessions.iter_mut().map(|s| s.layer_mut(l)).collect();
+            panel = blk.decode_step(&mut layer_states, &panel)?;
+        }
+        Ok(panel)
+    }
+
+    /// Decode a whole teacher-forced sequence for one request — the
+    /// incremental counterpart of [`DeepModel::forward`]`(xs, 1, seq)`,
+    /// pinned against it per position by `rust/tests/deep_props.rs`.
+    pub fn decode_sequence(&self, xs: &[f32], seq: usize) -> Result<Vec<f32>> {
+        let d = self.d();
+        if seq == 0 || xs.len() != seq * d {
+            return Err(Error::Shape(format!(
+                "deep decode_sequence: xs len {} != seq {seq} * d {d}",
+                xs.len()
+            )));
+        }
+        let mut session = SessionState::new(d, self.depth());
+        let mut out = Vec::with_capacity(seq * d);
+        for t in 0..seq {
+            let y = self.decode_step(&mut [&mut session], &xs[t * d..(t + 1) * d])?;
+            out.extend_from_slice(&y);
+        }
+        Ok(out)
+    }
+}
+
+impl DecodeEngine for ServeModel {
+    type Session = SessionState;
+
+    fn d(&self) -> usize {
+        ServeModel::d(self)
+    }
+
+    fn is_merged(&self) -> bool {
+        ServeModel::is_merged(self)
+    }
+
+    fn new_session(&self) -> SessionState {
+        SessionState::new(ServeModel::d(self), self.depth())
+    }
+
+    fn reset_session(&self, s: &mut SessionState) {
+        s.reset();
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut SessionState], xs: &[f32]) -> Result<Vec<f32>> {
+        ServeModel::decode_step(self, sessions, xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DeepConfig, DeepModel};
+
+    fn tiny_deep(depth: usize, seed: u64) -> DeepModel {
+        let mut m = DeepModel::init(&DeepConfig::standard(vec![2, 2], 2, 3, depth), seed).unwrap();
+        m.randomize_circuits(0.2, seed).unwrap();
+        m
+    }
+
+    #[test]
+    fn depth_one_stack_decodes_like_the_bare_block() {
+        let model = tiny_deep(1, 60);
+        let sm = ServeModel::merged(&model).unwrap();
+        let sb = ServeBlock::merged(model.layer(0)).unwrap();
+        assert!(sm.is_merged());
+        let mut rng = crate::util::rng::Rng::new(601);
+        let mut xs = vec![0.0f32; 5 * model.d()];
+        rng.fill_normal(&mut xs, 1.0);
+        assert_eq!(
+            sm.decode_sequence(&xs, 5).unwrap(),
+            sb.decode_sequence(&xs, 5).unwrap(),
+            "depth-1 ServeModel must be bitwise the ServeBlock path"
+        );
+    }
+
+    #[test]
+    fn sessions_advance_every_layer_and_shape_errors_surface() {
+        let model = tiny_deep(3, 61);
+        let sm = ServeModel::streaming(&model);
+        assert!(!sm.is_merged());
+        assert_eq!(sm.depth(), 3);
+        let d = sm.d();
+        let mut session = sm.new_session();
+        assert!(session.is_empty());
+        for t in 0..4 {
+            let xs = vec![0.1 * (t as f32 + 1.0); d];
+            sm.decode_step(&mut [&mut session], &xs).unwrap();
+        }
+        assert_eq!(session.len(), 4);
+        for l in 0..3 {
+            assert_eq!(session.layers[l].len(), 4, "layer {l} cache out of lockstep");
+        }
+        sm.reset_session(&mut session);
+        assert!(session.is_empty());
+        // depth-mismatched session and bad panel shapes are rejected
+        let mut shallow = SessionState::new(d, 2);
+        let row = vec![0.0f32; d];
+        assert!(sm.decode_step(&mut [&mut shallow], &row).is_err());
+        let mut ok = sm.new_session();
+        assert!(sm.decode_step(&mut [&mut ok], &[0.0; 3]).is_err());
+        assert!(sm.decode_sequence(&[0.0; 4], 0).is_err());
+    }
+}

@@ -4,11 +4,19 @@
 //! iteration (the Orca-style "iteration-level" schedule): every loop
 //! turn the scheduler **admits** waiting requests into free slots,
 //! packs each active request's next input row into one `[active, d]`
-//! panel, runs a single [`ServeBlock::decode_step`] (projections + MLP
-//! as pooled GEMMs over the whole panel, attention ragged per
+//! panel, runs a single [`DecodeEngine::decode_step`] (projections +
+//! MLP as pooled GEMMs over the whole panel, attention ragged per
 //! request), hands each request its new output row, and **retires**
 //! requests that produced their last token — freeing the slot for the
 //! next waiting request *between* steps, never mid-token.
+//!
+//! The scheduler is generic over [`DecodeEngine`]: a single
+//! [`ServeBlock`] (the default — one [`DecodeState`](crate::serve::
+//! DecodeState) per slot) and a depth-N
+//! [`ServeModel`](crate::serve::ServeModel) (one
+//! [`SessionState`](crate::serve::SessionState) per slot) run through
+//! the *same* admit/pack/step/retire loop, so every lifecycle control
+//! and isolation property below applies to deep serving verbatim.
 //!
 //! A request is a prompt panel plus a generation count: the prompt's
 //! rows are fed teacher-forced (one per iteration — prefill shares the
@@ -48,12 +56,15 @@
 //! pins this **bitwise** across arrival permutations, batch sizes, and
 //! thread counts.  (Shedding is the deliberate exception: which
 //! requests a full queue sheds depends on arrival order by
-//! definition.)  Retired [`DecodeState`]s are recycled (grow-only
-//! capacity) so a long serving run stops allocating cache once slots
-//! have seen their longest request.
+//! definition.)  Retired sessions are recycled through
+//! [`DecodeEngine::reset_session`] (grow-only capacity) so a long
+//! serving run stops allocating cache once slots have seen their
+//! longest request.
 
-use crate::serve::decode::{DecodeState, ServeBlock};
+use crate::serve::decode::ServeBlock;
+use crate::serve::model::DecodeEngine;
 use crate::util::error::{Error, Result};
+use crate::util::numeric::non_finite_at;
 
 /// One serving request: a prompt of `prompt_len` width-`d` vectors
 /// (row-major) and the number of vectors to generate after it.
@@ -161,6 +172,37 @@ impl Default for ServeConfig {
     }
 }
 
+/// Builder-style deviations from [`ServeConfig::default`], one method
+/// per CLI flag (`--max-batch`, `--deadline`, `--token-budget`,
+/// `--queue-cap`, `--shed-policy`) so config construction reads the
+/// same at every site.
+impl ServeConfig {
+    pub fn with_max_batch(mut self, max_batch: usize) -> ServeConfig {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline_steps: usize) -> ServeConfig {
+        self.deadline_steps = deadline_steps;
+        self
+    }
+
+    pub fn with_token_budget(mut self, token_budget: usize) -> ServeConfig {
+        self.token_budget = token_budget;
+        self
+    }
+
+    pub fn with_queue_cap(mut self, queue_cap: usize) -> ServeConfig {
+        self.queue_cap = queue_cap;
+        self
+    }
+
+    pub fn with_shed_policy(mut self, shed: ShedPolicy) -> ServeConfig {
+        self.shed = shed;
+        self
+    }
+}
+
 /// A finished request: the generated panel (or the request's own
 /// [`ServeError`]) plus latency accounting.
 #[derive(Clone, Debug)]
@@ -228,47 +270,42 @@ impl ServeStats {
     }
 }
 
-/// Index of the first non-finite element of a panel row, if any — the
-/// scheduler's per-token output validation, shared with the
-/// `serve_robustness` bench section so the gated overhead prices
-/// exactly the code the scheduler runs.
-pub fn non_finite_at(row: &[f32]) -> Option<usize> {
-    row.iter().position(|v| !v.is_finite())
-}
-
-/// An admitted request mid-flight.
-struct Active {
+/// An admitted request mid-flight; `S` is the engine's per-slot
+/// session (one `DecodeState`, or one `SessionState` per deep slot).
+struct Active<S> {
     req: ServeRequest,
-    state: DecodeState,
+    state: S,
     /// Next prompt row to feed (== prompt_len ⇒ generating).
     fed: usize,
     generated: Vec<f32>,
     admitted_at: usize,
 }
 
-/// Continuous-batching executor for one [`ServeBlock`] deployment.
-pub struct BatchScheduler {
-    block: ServeBlock,
+/// Continuous-batching executor for one [`DecodeEngine`] deployment —
+/// a single [`ServeBlock`] by default, or a depth-N
+/// [`ServeModel`](crate::serve::ServeModel).
+pub struct BatchScheduler<E: DecodeEngine = ServeBlock> {
+    engine: E,
     cfg: ServeConfig,
 }
 
-impl BatchScheduler {
+impl<E: DecodeEngine> BatchScheduler<E> {
     /// `max_batch` caps concurrently-active requests (≥ 1); every
     /// other lifecycle control stays off (see [`ServeConfig`]).
-    pub fn new(block: ServeBlock, max_batch: usize) -> Result<BatchScheduler> {
-        BatchScheduler::with_config(block, ServeConfig { max_batch, ..ServeConfig::default() })
+    pub fn new(engine: E, max_batch: usize) -> Result<BatchScheduler<E>> {
+        BatchScheduler::with_config(engine, ServeConfig::default().with_max_batch(max_batch))
     }
 
     /// Full lifecycle-controlled construction.
-    pub fn with_config(block: ServeBlock, cfg: ServeConfig) -> Result<BatchScheduler> {
+    pub fn with_config(engine: E, cfg: ServeConfig) -> Result<BatchScheduler<E>> {
         if cfg.max_batch == 0 {
             return Err(Error::Config("scheduler: max_batch must be >= 1".into()));
         }
-        Ok(BatchScheduler { block, cfg })
+        Ok(BatchScheduler { engine, cfg })
     }
 
-    pub fn block(&self) -> &ServeBlock {
-        &self.block
+    pub fn engine(&self) -> &E {
+        &self.engine
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -305,7 +342,7 @@ impl BatchScheduler {
     /// faults (a panicking compute job surfaces here as
     /// `Error::Compute`; the pool itself stays usable).
     pub fn run(&self, requests: Vec<ServeRequest>) -> Result<(Vec<ServeOutput>, ServeStats)> {
-        let d = self.block.d();
+        let d = self.engine.d();
         let start = std::time::Instant::now();
         let mut outputs = Vec::new();
         let mut stats = ServeStats::default();
@@ -341,15 +378,15 @@ impl BatchScheduler {
             }
             queue.push_back(r);
         }
-        let mut active: Vec<Active> = Vec::new();
-        let mut free_states: Vec<DecodeState> = Vec::new();
+        let mut active: Vec<Active<E::Session>> = Vec::new();
+        let mut free_states: Vec<E::Session> = Vec::new();
         let mut xs: Vec<f32> = Vec::new();
         while !queue.is_empty() || !active.is_empty() {
             // admit into free slots, preserving arrival order
             while active.len() < self.cfg.max_batch {
                 let Some(req) = queue.pop_front() else { break };
-                let mut state = free_states.pop().unwrap_or_else(|| DecodeState::new(d));
-                state.reset();
+                let mut state = free_states.pop().unwrap_or_else(|| self.engine.new_session());
+                self.engine.reset_session(&mut state);
                 active.push(Active {
                     state,
                     fed: 0,
@@ -370,9 +407,9 @@ impl BatchScheduler {
                     xs.extend_from_slice(&a.generated[g - d..g]);
                 }
             }
-            let mut states: Vec<&mut DecodeState> =
+            let mut states: Vec<&mut E::Session> =
                 active.iter_mut().map(|a| &mut a.state).collect();
-            let out = self.block.decode_step(&mut states, &xs)?;
+            let out = self.engine.decode_step(&mut states, &xs)?;
             drop(states);
             stats.steps += 1;
             stats.tokens += active.len();
@@ -548,12 +585,7 @@ mod tests {
         let short = mk_request(1, d, 2, 2, &mut rng);
         // 12 tokens > budget 10
         let fat = mk_request(2, d, 6, 6, &mut rng);
-        let cfg = ServeConfig {
-            max_batch: 4,
-            deadline_steps: 4,
-            token_budget: 10,
-            ..ServeConfig::default()
-        };
+        let cfg = ServeConfig::default().with_max_batch(4).with_deadline(4).with_token_budget(10);
         let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
         let (out, stats) = sched.run(vec![long, short.clone(), fat]).unwrap();
         assert_eq!(out[0].error(), Some(&ServeError::DeadlineExceeded { limit: 4 }));
@@ -575,8 +607,10 @@ mod tests {
             (ShedPolicy::RejectNew, [0u64, 1]),
             (ShedPolicy::DropOldest, [3u64, 4]),
         ] {
-            let cfg =
-                ServeConfig { max_batch: 1, queue_cap: 2, shed, ..ServeConfig::default() };
+            let cfg = ServeConfig::default()
+                .with_max_batch(1)
+                .with_queue_cap(2)
+                .with_shed_policy(shed);
             let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
             let (out, stats) = sched.run(reqs.clone()).unwrap();
             assert_eq!(stats.shed, 3, "{shed:?}");

@@ -8,5 +8,6 @@ pub mod fault;
 pub mod rng;
 pub mod json;
 pub mod logging;
+pub mod numeric;
 pub mod stats;
 pub mod proptest;

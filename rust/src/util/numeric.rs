@@ -1,0 +1,27 @@
+//! Small shared numeric validation helpers.
+//!
+//! `non_finite_at` started life inside `serve::scheduler` as the
+//! per-token output validation; it is also exactly the check serving
+//! intake runs on arriving prompts and the host trainer's anomaly
+//! detector runs on gradients, so it lives here where all three share
+//! one definition (and the `serve_robustness` bench prices the same
+//! code the scheduler executes).
+
+/// Index of the first non-finite (NaN/±inf) element of a slice, if
+/// any.
+pub fn non_finite_at(row: &[f32]) -> Option<usize> {
+    row.iter().position(|v| !v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_first_non_finite_element() {
+        assert_eq!(non_finite_at(&[]), None);
+        assert_eq!(non_finite_at(&[0.0, -1.5, 3.0e37]), None);
+        assert_eq!(non_finite_at(&[0.0, f32::NAN, f32::INFINITY]), Some(1));
+        assert_eq!(non_finite_at(&[f32::NEG_INFINITY]), Some(0));
+    }
+}

@@ -1,0 +1,291 @@
+//! Depth-N stack properties (DESIGN.md §12), pinned in ONE `#[test]`
+//! because several sections sweep process-global env knobs
+//! (`QFT_THREADS`, `QFT_GRAD_SHARD`) — the pool_props convention.
+//!
+//! What is pinned, and at what strength:
+//!
+//! - **Gradcheck at depth {1, 2, 4}**: the layer-major backward chain
+//!   (top layer's `dx` feeding the layer below) against central finite
+//!   differences of the stacked forward.
+//! - **Depth-1 ≡ bare block, bitwise**: init draws, forward, taped
+//!   forward, and backward of a depth-1 [`DeepModel`] are exactly the
+//!   [`TransformerBlock`] path every earlier PR pinned — the deep API
+//!   is a strict superset, not a parallel implementation.
+//! - **Shard ≡ bulk, bitwise, at depth 2**: `QFT_GRAD_SHARD=1` routes
+//!   every layer's adapter backward through the one-gate-wide sweep
+//!   and must not move a single bit of the flat gradient.
+//! - **Merged ≡ streaming at 1e-5×scale, streaming ≡ recompute
+//!   bitwise**: the serving parity contracts, lifted to depth N.
+//! - **Scheduler invariance at depth 2**: continuous-batched deep
+//!   decode is bitwise invariant under `QFT_THREADS` {1, 2, 8} ×
+//!   arrival permutations, and equals the autoregressive
+//!   full-recompute forward.
+//! - **Trainer invariance at depth 2**: `finetune_host` drives the
+//!   stack to the same trajectory at every thread count, sharded or
+//!   not.
+
+use quanta_ft::coordinator::host_trainer::{finetune_host, HostTrainConfig};
+use quanta_ft::data::synth::{deep_teacher_student, DeepSynthConfig};
+use quanta_ft::model::{
+    BlockConfig, DeepConfig, DeepModel, TrainableModel, TransformerBlock,
+};
+use quanta_ft::serve::{BatchScheduler, ServeModel, ServeRequest};
+use quanta_ft::util::rng::Rng;
+
+/// Loss `Σ w ⊙ out` (f64 accumulation — model_props convention).
+fn weighted_loss(model: &DeepModel, xs: &[f32], n: usize, w: &[f32]) -> f64 {
+    model
+        .forward(xs, n, model.seq())
+        .unwrap()
+        .iter()
+        .zip(w)
+        .map(|(a, b)| (*a as f64) * (*b as f64))
+        .sum()
+}
+
+/// Tiny trained stack: frozen bases per layer, perturbed circuits.
+fn tiny_deep(depth: usize, seed: u64, std: f32) -> DeepModel {
+    let cfg = DeepConfig::standard(vec![2, 2], 2, 3, depth);
+    let mut model = DeepModel::init(&cfg, seed).unwrap();
+    model.randomize_circuits(std, seed).unwrap();
+    model
+}
+
+/// Autoregressive full-recompute reference: re-run the whole stacked
+/// forward on the growing sequence each step (what the KV caches
+/// replace), feeding each generated row back in.
+fn greedy_recompute(model: &DeepModel, prompt: &[f32], n_gen: usize) -> Vec<f32> {
+    let d = model.d();
+    let mut seqv = prompt.to_vec();
+    let mut out = Vec::with_capacity(n_gen * d);
+    loop {
+        let l = seqv.len() / d;
+        let y = model.forward(&seqv, 1, l).unwrap();
+        let last = &y[(l - 1) * d..l * d];
+        out.extend_from_slice(last);
+        if out.len() >= n_gen * d {
+            return out;
+        }
+        seqv.extend_from_slice(last);
+    }
+}
+
+#[test]
+fn deep_stack_properties() {
+    std::env::remove_var("QFT_THREADS");
+    std::env::remove_var("QFT_GRAD_SHARD");
+
+    // ---- (a) central-FD gradcheck at depth {1, 2, 4} ----------------
+    // eps 1e-2 / tol 2e-2 relative: the model_props convention (f32
+    // forward, f64 loss reduction; FD error is dominated by forward
+    // rounding, and the deep chain only lengthens the f32 dot chains)
+    for depth in [1usize, 2, 4] {
+        let model = tiny_deep(depth, 90 + depth as u64, 0.25);
+        let n = 2;
+        let mut rng = Rng::new(900 + depth as u64);
+        let mut xs = vec![0.0f32; n * model.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; n * model.io_len()];
+        rng.fill_normal(&mut w, 1.0);
+        let (_, tape) = model.forward_with_tape(&xs, n).unwrap();
+        let grad = model.backward_flat(&tape, &w, n).unwrap();
+        assert_eq!(grad.len(), model.param_count());
+        let theta = model.params_flat();
+        let eps = 1e-2f32;
+        for (i, g) in grad.iter().enumerate() {
+            let mut plus = model.clone();
+            let mut th = theta.clone();
+            th[i] += eps;
+            plus.set_params(&th).unwrap();
+            let mut minus = model.clone();
+            th[i] = theta[i] - eps;
+            minus.set_params(&th).unwrap();
+            let fd = (weighted_loss(&plus, &xs, n, &w) - weighted_loss(&minus, &xs, n, &w))
+                / (2.0 * eps as f64);
+            let denom = fd.abs().max((*g as f64).abs()).max(1.0);
+            assert!(
+                ((*g as f64 - fd) / denom).abs() < 2e-2,
+                "depth {depth} gradcheck failed at param {i}: analytic {g} vs FD {fd}"
+            );
+        }
+    }
+
+    // ---- (b) depth-1 DeepModel ≡ bare TransformerBlock, bitwise -----
+    {
+        let seed = 94u64;
+        let dcfg = DeepConfig::standard(vec![2, 2], 2, 3, 1);
+        let mut deep = DeepModel::init(&dcfg, seed).unwrap();
+        let mut block = TransformerBlock::init(
+            &BlockConfig::standard(vec![2, 2], 2, 3),
+            &mut Rng::stream(seed, "block-base"),
+        )
+        .unwrap();
+        assert_eq!(deep.params_flat(), block.params_flat(), "depth-1 init diverged");
+        deep.randomize_circuits(0.2, seed).unwrap();
+        block.randomize_circuits(0.2, &mut Rng::stream(seed, "block-teacher")).unwrap();
+        assert_eq!(deep.params_flat(), block.params_flat(), "teacher streams diverged");
+        let n = 3;
+        let mut rng = Rng::new(940);
+        let mut xs = vec![0.0f32; n * deep.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let yd = deep.forward(&xs, n, deep.seq()).unwrap();
+        let yb = block.forward(&xs, n, block.seq()).unwrap();
+        assert_eq!(yd, yb, "depth-1 forward diverged");
+        let (ytd, dtape) = deep.forward_with_tape(&xs, n).unwrap();
+        let (ytb, btape) = block.forward_with_tape(&xs, n).unwrap();
+        assert_eq!(ytd, yb, "depth-1 taped forward diverged");
+        assert_eq!(ytb, yb);
+        let mut w = vec![0.0f32; yd.len()];
+        rng.fill_normal(&mut w, 1.0);
+        let gd = deep.backward_flat(&dtape, &w, n).unwrap();
+        let gb = block.backward_flat(&btape, &w, n).unwrap();
+        assert_eq!(gd, gb, "depth-1 backward diverged");
+    }
+
+    // ---- (c) shard ≡ bulk, bitwise, at depth 2 and real width -------
+    // d = 128 so each layer has multiple gates to sweep
+    let wide = {
+        let cfg = DeepConfig::standard(vec![4, 4, 8], 4, 4, 2);
+        let mut m = DeepModel::init(&cfg, 95).unwrap();
+        m.randomize_circuits(0.2, 95).unwrap();
+        m
+    };
+    {
+        let n = 2;
+        let mut rng = Rng::new(950);
+        let mut xs = vec![0.0f32; n * wide.io_len()];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut w = vec![0.0f32; n * wide.io_len()];
+        rng.fill_normal(&mut w, 1.0);
+        let (_, tape) = wide.forward_with_tape(&xs, n).unwrap();
+        let bulk = wide.backward_flat(&tape, &w, n).unwrap();
+        std::env::set_var("QFT_GRAD_SHARD", "1");
+        let shard = wide.backward_flat(&tape, &w, n).unwrap();
+        std::env::remove_var("QFT_GRAD_SHARD");
+        assert_eq!(bulk, shard, "deep sharded gate grads diverged");
+    }
+
+    // ---- (d) serving parity, lifted to depth N ----------------------
+    // streaming decode ≡ stacked full-recompute forward bitwise at
+    // every position; merged ≡ streaming at 1e-5 relative to the panel
+    // scale (floored at 1 — the model_props/serve_props contract)
+    for depth in [2usize, 4] {
+        let model = tiny_deep(depth, 96, 0.25);
+        let d = model.d();
+        let seq = 7usize; // exceeds the training seq (3): decode must not care
+        let mut xs = vec![0.0f32; seq * d];
+        Rng::new(960 + depth as u64).fill_normal(&mut xs, 1.0);
+        let streaming = ServeModel::streaming(&model).decode_sequence(&xs, seq).unwrap();
+        let merged = ServeModel::merged(&model).unwrap().decode_sequence(&xs, seq).unwrap();
+        let scale = streaming.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        for t in 0..seq {
+            let full = model.forward(&xs[..(t + 1) * d], 1, t + 1).unwrap();
+            let want = &full[t * d..(t + 1) * d];
+            assert_eq!(
+                &streaming[t * d..(t + 1) * d],
+                want,
+                "depth {depth}: streaming deep decode differs from recompute at position {t}"
+            );
+            for (j, (a, b)) in merged[t * d..(t + 1) * d].iter().zip(want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5 * scale,
+                    "depth {depth}: merged deep decode at ({t},{j}): {a} vs {b} \
+                     (panel scale {scale})"
+                );
+            }
+        }
+    }
+
+    // ---- (e) scheduler invariance at depth 2 ------------------------
+    // continuous-batched deep serving: per-request outputs are bitwise
+    // invariant under QFT_THREADS × arrival order, and each equals the
+    // autoregressive full-recompute reference
+    {
+        let model = tiny_deep(2, 97, 0.25);
+        let d = model.d();
+        let engine = ServeModel::streaming(&model);
+        let reqs: Vec<ServeRequest> = (0..6u64)
+            .map(|id| {
+                let p_len = 1 + (id as usize % 3);
+                let mut prompt = vec![0.0f32; p_len * d];
+                Rng::stream(970, &format!("deep-req-{id}")).fill_normal(&mut prompt, 1.0);
+                ServeRequest { id, prompt, n_gen: 2 + (id as usize % 4) }
+            })
+            .collect();
+        let mut orders = vec![reqs.clone()];
+        let mut rev = reqs.clone();
+        rev.reverse();
+        orders.push(rev);
+        let mut interleaved = reqs.clone();
+        interleaved.sort_by_key(|r| (r.id % 2 == 0, r.id));
+        orders.push(interleaved);
+        let sched = BatchScheduler::new(engine, 3).unwrap();
+        let mut baseline: Option<Vec<(u64, Vec<f32>)>> = None;
+        for threads in ["1", "2", "8"] {
+            std::env::set_var("QFT_THREADS", threads);
+            for (oi, order) in orders.iter().enumerate() {
+                let (out, stats) = sched.run(order.clone()).unwrap();
+                assert_eq!(stats.completed, reqs.len(), "threads {threads} order {oi}");
+                let got: Vec<(u64, Vec<f32>)> =
+                    out.into_iter().map(|o| (o.id, o.result.unwrap())).collect();
+                match &baseline {
+                    None => {
+                        for (id, panel) in &got {
+                            let req = reqs.iter().find(|r| r.id == *id).unwrap();
+                            assert_eq!(
+                                panel,
+                                &greedy_recompute(&model, &req.prompt, req.n_gen),
+                                "request {id}: batched deep decode differs from recompute"
+                            );
+                        }
+                        baseline = Some(got);
+                    }
+                    Some(b) => assert_eq!(
+                        b, &got,
+                        "threads {threads} order {oi}: deep serving not invariant"
+                    ),
+                }
+            }
+        }
+        std::env::remove_var("QFT_THREADS");
+    }
+
+    // ---- (f) trainer invariance at depth 2 --------------------------
+    // finetune_host drives the stack through TrainableModel unchanged;
+    // the trajectory is bitwise thread- and shard-invariant
+    {
+        let task = deep_teacher_student(&DeepSynthConfig {
+            dims: vec![2, 2],
+            n_heads: 2,
+            seq: 3,
+            d_ff: 8,
+            depth: 2,
+            n_train: 8,
+            n_val: 4,
+            noise_std: 0.0,
+            ..Default::default()
+        })
+        .unwrap();
+        let train = |threads: &str, shard: bool| {
+            std::env::set_var("QFT_THREADS", threads);
+            if shard {
+                std::env::set_var("QFT_GRAD_SHARD", "1");
+            }
+            let mut student = task.student();
+            let cfg = HostTrainConfig { steps: 5, batch: 4, eval_every: 5, ..Default::default() };
+            let out = finetune_host(&mut student, &task, &cfg).unwrap();
+            std::env::remove_var("QFT_GRAD_SHARD");
+            (out.final_theta, out.loss_curve)
+        };
+        let baseline = train("1", false);
+        for threads in ["2", "8"] {
+            let got = train(threads, false);
+            assert_eq!(baseline.0, got.0, "deep params differ at QFT_THREADS={threads}");
+            assert_eq!(baseline.1, got.1, "deep loss curve differs at QFT_THREADS={threads}");
+        }
+        let sharded = train("8", true);
+        assert_eq!(baseline.0, sharded.0, "sharded deep training diverged");
+        assert_eq!(baseline.1, sharded.1, "sharded deep loss curve diverged");
+        std::env::remove_var("QFT_THREADS");
+    }
+}

@@ -18,7 +18,7 @@ use quanta_ft::util::rng::Rng;
 /// forward are dominated by forward rounding, not by the reduction).
 fn weighted_loss(block: &TransformerBlock, xs: &[f32], n: usize, w: &[f32]) -> f64 {
     block
-        .forward(xs, n)
+        .forward(xs, n, block.seq())
         .unwrap()
         .iter()
         .zip(w)
@@ -28,7 +28,7 @@ fn weighted_loss(block: &TransformerBlock, xs: &[f32], n: usize, w: &[f32]) -> f
 
 fn tiny_trained_block(seed: u64, std: f32, alpha: f32) -> TransformerBlock {
     let mut rng = Rng::new(seed);
-    let cfg = BlockConfig { alpha, ..BlockConfig::standard(vec![2, 2], 2, 3) };
+    let cfg = BlockConfig::standard(vec![2, 2], 2, 3).with_alpha(alpha);
     let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
     block.randomize_circuits(std, &mut rng).unwrap();
     block
@@ -232,8 +232,8 @@ fn block_gradients_sharding_merge_and_thread_invariance() {
     let merged = trained.merged().unwrap();
     let mut mxs = vec![0.0f32; 4 * trained.io_len()];
     rng.fill_normal(&mut mxs, 1.0);
-    let y_stream = trained.forward(&mxs, 4).unwrap();
-    let y_merged = merged.forward(&mxs, 4).unwrap();
+    let y_stream = trained.forward(&mxs, 4, trained.seq()).unwrap();
+    let y_merged = merged.forward(&mxs, 4, merged.seq()).unwrap();
     for (i, (a, b)) in y_stream.iter().zip(&y_merged).enumerate() {
         assert!(
             (a - b).abs() < 1e-5,
@@ -250,8 +250,8 @@ fn block_gradients_sharding_merge_and_thread_invariance() {
     // headroom under the gate; a plain absolute 1e-5 would falsely
     // fail here).
     let big_merged = big.merged().unwrap();
-    let ys = big.forward(bxs, bn).unwrap();
-    let ym = big_merged.forward(bxs, bn).unwrap();
+    let ys = big.forward(bxs, bn, big.seq()).unwrap();
+    let ym = big_merged.forward(bxs, bn, big_merged.seq()).unwrap();
     let scale = ys.iter().fold(1.0f32, |m, v| m.max(v.abs()));
     for (i, (a, b)) in ys.iter().zip(&ym).enumerate() {
         assert!(
@@ -293,7 +293,7 @@ fn block_gradients_sharding_merge_and_thread_invariance() {
     // gate below keeps 2x headroom
     let mut student = task.student();
     let init = {
-        let pred = student.forward(&task.train_x, task.n_train).unwrap();
+        let pred = student.forward(&task.train_x, task.n_train, task.seq).unwrap();
         pred.iter()
             .zip(&task.train_y)
             .map(|(p, y)| ((p - y) as f64).powi(2))
@@ -308,7 +308,7 @@ fn block_gradients_sharding_merge_and_thread_invariance() {
     };
     finetune_host(&mut student, &task, &cfg).unwrap();
     let fin = {
-        let pred = student.forward(&task.train_x, task.n_train).unwrap();
+        let pred = student.forward(&task.train_x, task.n_train, task.seq).unwrap();
         pred.iter()
             .zip(&task.train_y)
             .map(|(p, y)| ((p - y) as f64).powi(2))

@@ -59,7 +59,7 @@ fn greedy_recompute(block: &TransformerBlock, prompt: &[f32], n_gen: usize) -> V
     let mut out = Vec::with_capacity(n_gen * d);
     loop {
         let l = seqv.len() / d;
-        let y = block.forward_len(&seqv, 1, l).unwrap();
+        let y = block.forward(&seqv, 1, l).unwrap();
         let last = &y[(l - 1) * d..l * d];
         out.extend_from_slice(last);
         if out.len() >= n_gen * d {
@@ -109,7 +109,7 @@ fn decode_parity_and_scheduler_invariance() {
         let scale = streaming.iter().fold(1.0f32, |m, v| m.max(v.abs()));
         for t in 0..seq {
             // full recompute over the length-(t+1) prefix
-            let full = block.forward_len(&xs[..(t + 1) * d], 1, t + 1).unwrap();
+            let full = block.forward(&xs[..(t + 1) * d], 1, t + 1).unwrap();
             let want = &full[t * d..(t + 1) * d];
             assert_eq!(
                 &streaming[t * d..(t + 1) * d],
@@ -125,7 +125,7 @@ fn decode_parity_and_scheduler_invariance() {
             }
             // merged decode ≡ merged block recompute, bitwise (identity
             // circuits add an exact-zero residual)
-            let mfull = merged_block.forward_len(&xs[..(t + 1) * d], 1, t + 1).unwrap();
+            let mfull = merged_block.forward(&xs[..(t + 1) * d], 1, t + 1).unwrap();
             assert_eq!(
                 &merged[t * d..(t + 1) * d],
                 &mfull[t * d..(t + 1) * d],
@@ -134,8 +134,8 @@ fn decode_parity_and_scheduler_invariance() {
         }
         // causal consistency of the baseline itself: row t of the full
         // panel equals the last row of the length-(t+1) prefix
-        let panel = block.forward_len(&xs, 1, seq).unwrap();
-        let prefix = block.forward_len(&xs[..5 * d], 1, 5).unwrap();
+        let panel = block.forward(&xs, 1, seq).unwrap();
+        let prefix = block.forward(&xs[..5 * d], 1, 5).unwrap();
         assert_eq!(&panel[4 * d..5 * d], &prefix[4 * d..5 * d]);
     }
 
@@ -257,12 +257,10 @@ fn decode_parity_and_scheduler_invariance() {
     rng.fill_normal(&mut fat, 1.0);
     // 20 + 12 = 32 tokens > budget 30
     faulty.push(ServeRequest { id: 205, prompt: fat, n_gen: 12 });
-    let cfg = ServeConfig {
-        max_batch: 5,
-        deadline_steps: 8,
-        token_budget: 30,
-        ..ServeConfig::default()
-    };
+    let cfg = ServeConfig::default()
+        .with_max_batch(5)
+        .with_deadline(8)
+        .with_token_budget(30);
     let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
     std::env::set_var("QFT_THREADS", "1");
     let (healthy_only, honly_stats) = sched.run(healthy.clone()).unwrap();
@@ -328,12 +326,10 @@ fn decode_parity_and_scheduler_invariance() {
     // still bitwise equal to serving them alone
     for (policy, kept) in [(ShedPolicy::RejectNew, [0u64, 1]), (ShedPolicy::DropOldest, [4u64, 5])]
     {
-        let cfg = ServeConfig {
-            max_batch: 1,
-            queue_cap: 2,
-            shed: policy,
-            ..ServeConfig::default()
-        };
+        let cfg = ServeConfig::default()
+            .with_max_batch(1)
+            .with_queue_cap(2)
+            .with_shed_policy(policy);
         let bounded = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
         let (out, stats) = bounded.run(healthy.clone()).unwrap();
         assert_eq!(stats.shed, 4, "{policy:?}");
