@@ -907,11 +907,180 @@ fn scaling_bench() -> (&'static str, Value) {
     ("scaling_sweep", Value::Arr(entries))
 }
 
+/// Durability microbench (DESIGN.md §13): crash-consistent training is
+/// only free if (a) the v4 run-manifest save/load cost scales sanely
+/// with parameter count and (b) periodic snapshotting adds a negligible
+/// per-step cost — the CI perf gate holds the `snapshot_every = 50`
+/// train-loop overhead at ≤ 2%.  A `resume` entry also re-runs the
+/// bitwise-resume invariant at bench scale: halt mid-run via the
+/// `halt_before` seam, relaunch with `resume`, assert the outcome is
+/// bitwise identical to the uninterrupted twin.
+fn train_durability_bench() -> (&'static str, Value) {
+    use quanta_ft::coordinator::checkpoint::{self, RunMeta};
+    use quanta_ft::coordinator::host_trainer::{finetune_host, HostTrainConfig};
+    use quanta_ft::data::synth::{teacher_student, SynthConfig};
+
+    banner("train_durability", "run-manifest save/load + snapshot overhead + bitwise resume");
+    let dir = std::env::temp_dir().join("qft_perf_durability");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // -- manifest save/load µs vs param count --------------------------
+    // four streams of n params each, mirroring the trainer's manifest
+    // (params, best_theta, adam_m, adam_v)
+    let mut manifest_io = vec![];
+    for (n, warm, iters) in [(4096usize, 3usize, 30usize), (65_536, 2, 15), (1 << 20, 1, 5)] {
+        let mut rng = Rng::new(0xD0D0);
+        let mut params = vec![0.0f32; n];
+        rng.fill_normal(&mut params, 1.0);
+        let meta = RunMeta {
+            config_hash: 0xBE9C,
+            step: 100,
+            adam_t: 100,
+            steps_run: 100,
+            anomalies: 0,
+            since_best: 3,
+            done: false,
+            diverged: false,
+            lr_scale: 1.0,
+            best_val: 0.25,
+            rng_state: [1, 2, 3, 4],
+            rng_spare: Some(0.5),
+            sampler_pos: 17,
+            sampler_order: (0..256).collect(),
+            loss_curve: (0..100).map(|i| (i, 0.1)).collect(),
+            val_curve: (0..10).map(|i| (i * 10, 0.2)).collect(),
+        };
+        let path = dir.join(format!("manifest_{n}.bin"));
+        let streams: [(&str, &[f32]); 4] = [
+            ("params", &params),
+            ("best_theta", &params),
+            ("adam_m", &params),
+            ("adam_v", &params),
+        ];
+        let st_save = bench(warm, iters, || {
+            checkpoint::save_manifest(&path, &meta, &streams).unwrap();
+        });
+        let st_load = bench(warm, iters, || {
+            let _ = checkpoint::load_manifest(&path).unwrap();
+        });
+        let bytes = std::fs::metadata(&path).unwrap().len();
+        println!(
+            "params={n:8} x4 streams ({bytes:9} bytes): save {:9.1}us  load {:9.1}us",
+            st_save.mean_us, st_load.mean_us
+        );
+        manifest_io.push(Value::obj(vec![
+            ("params", Value::Num(n as f64)),
+            ("streams", Value::Num(4.0)),
+            ("file_bytes", Value::Num(bytes as f64)),
+            ("save_us", Value::Num(st_save.mean_us)),
+            ("load_us", Value::Num(st_load.mean_us)),
+        ]));
+    }
+
+    // -- per-step snapshot overhead at snapshot_every = 50 -------------
+    let scfg = SynthConfig {
+        dims: vec![4, 4, 8],
+        n_train: 256,
+        n_val: 64,
+        teacher_std: 0.3,
+        noise_std: 0.01,
+        alpha: 1.0,
+        seed: 0,
+    };
+    let task = teacher_student(&scfg).unwrap();
+    let steps = 100usize;
+    let base_cfg = HostTrainConfig { steps, batch: 32, eval_every: 25, ..Default::default() };
+    let snap_path = dir.join("train_snap.bin");
+    let snap_cfg = HostTrainConfig {
+        snapshot_every: 50,
+        snapshot_path: Some(snap_path.clone()),
+        ..base_cfg.clone()
+    };
+    let run = |cfg: &HostTrainConfig| {
+        let mut student = task.student().unwrap();
+        finetune_host(&mut student, &task, cfg).unwrap()
+    };
+    // snapshotting must be bitwise inert before it is worth pricing
+    let out_base = run(&base_cfg);
+    let out_snap = run(&snap_cfg);
+    assert_eq!(out_base.final_theta, out_snap.final_theta, "snapshotting perturbed the run");
+    assert_eq!(out_base.loss_curve, out_snap.loss_curve, "snapshotting perturbed the losses");
+    let st_base = bench(1, 5, || {
+        let _ = run(&base_cfg);
+    });
+    let st_snap = bench(1, 5, || {
+        let _ = run(&snap_cfg);
+    });
+    let overhead_pct = (st_snap.mean_us / st_base.mean_us - 1.0) * 100.0;
+    let per_step_us = (st_snap.mean_us - st_base.mean_us) / steps as f64;
+    println!(
+        "{steps}-step fit: plain {:9.1}us  snapshot_every=50 {:9.1}us  => {overhead_pct:+.2}% \
+         ({per_step_us:+.2}us/step, outcome bitwise inert)",
+        st_base.mean_us, st_snap.mean_us
+    );
+
+    // -- bitwise resume after a mid-run halt ---------------------------
+    let rpath = dir.join("resume.bin");
+    std::fs::remove_file(&rpath).ok();
+    let mut int_cfg = HostTrainConfig {
+        snapshot_every: 10,
+        snapshot_path: Some(rpath.clone()),
+        halt_before: Some(37),
+        ..base_cfg.clone()
+    };
+    let mut student = task.student().unwrap();
+    assert!(
+        finetune_host(&mut student, &task, &int_cfg).is_err(),
+        "halt_before seam did not interrupt the run"
+    );
+    int_cfg.halt_before = None;
+    int_cfg.resume = true;
+    let mut student = task.student().unwrap();
+    let out_res = finetune_host(&mut student, &task, &int_cfg).unwrap();
+    let resume_bitwise = out_res.final_theta == out_base.final_theta
+        && out_res.best_theta == out_base.best_theta
+        && out_res.best_val_loss.to_bits() == out_base.best_val_loss.to_bits()
+        && out_res.loss_curve == out_base.loss_curve
+        && out_res.val_curve == out_base.val_curve
+        && out_res.steps_run == out_base.steps_run;
+    assert!(resume_bitwise, "resumed outcome diverged from the uninterrupted run");
+    println!("halt@37 + resume: outcome bitwise equal to uninterrupted run: {resume_bitwise}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    (
+        "train_durability",
+        Value::obj(vec![
+            ("manifest_io", Value::Arr(manifest_io)),
+            (
+                "snapshot_overhead",
+                Value::obj(vec![
+                    ("steps", Value::Num(steps as f64)),
+                    ("snapshot_every", Value::Num(50.0)),
+                    ("manifests_written", Value::Num(2.0)),
+                    ("base_run_us", Value::Num(st_base.mean_us)),
+                    ("snapshot_run_us", Value::Num(st_snap.mean_us)),
+                    ("per_step_overhead_us", Value::Num(per_step_us)),
+                    ("overhead_pct", Value::Num(overhead_pct)),
+                    ("snapshot_bitwise_inert", Value::Bool(true)),
+                ]),
+            ),
+            (
+                "resume",
+                Value::obj(vec![
+                    ("halt_before", Value::Num(37.0)),
+                    ("snapshot_every", Value::Num(10.0)),
+                    ("resume_bitwise", Value::Bool(resume_bitwise)),
+                ]),
+            ),
+        ]),
+    )
+}
+
 /// Assemble and write `BENCH_quanta_engine.json` at the repository root.
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(7.0)),
+        ("schema_version", Value::Num(8.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -936,6 +1105,7 @@ fn main() {
     results.push(serve_decode_bench());
     results.push(serve_robustness_bench());
     results.push(deep_decode_bench());
+    results.push(train_durability_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };
     let dir = runner.artifacts_dir.clone();

@@ -268,7 +268,7 @@ def main():
     apply_flops = d * sum(DIMS[m] * DIMS[n] for m, n, _ in gates)
     record = {
         "bench": "quanta_engine",
-        "schema_version": 7,
+        "schema_version": 8,
         "substrate": "python-numpy-mirror",
         "note": (
             "Seed record measured by the NumPy mirrors "
@@ -277,7 +277,7 @@ def main():
             "results.train_smoke + results.pool_vs_spawn + results.block_train + "
             "results.shard_sweep + results.serve_decode + "
             "results.serve_robustness + results.deep_train + "
-            "results.deep_decode), each "
+            "results.deep_decode + results.train_durability), each "
             "transcribing the rust loop structure of "
             "benches/perf_runtime.rs: seed = O(d) offset scan per gate per "
             "call + one gather/matvec/scatter per rest offset per vector; "
@@ -315,7 +315,7 @@ def main():
         },
     }
     # carry over the sections measured by train_mirror.py, so the two
-    # mirrors compose into one schema-7 record in either order — but
+    # mirrors compose into one schema-8 record in either order — but
     # only from a mirror-produced record (never relabel rust-native
     # timings as mirror provenance)
     out_path = Path(args.out)
@@ -325,7 +325,7 @@ def main():
             if prev.get("substrate") == "python-numpy-mirror":
                 for key in ("train_smoke", "pool_vs_spawn", "block_train", "shard_sweep",
                             "serve_decode", "serve_robustness", "deep_train",
-                            "deep_decode"):
+                            "deep_decode", "train_durability"):
                     if key in prev.get("results", {}):
                         record["results"][key] = prev["results"][key]
         except (json.JSONDecodeError, OSError):

@@ -1,8 +1,36 @@
 //! Flat-parameter checkpoints: a small self-describing binary format
-//! (magic, CRC, name, f32 payload), used for pretrained bases and best
-//! fine-tuned thetas.
+//! (magic, CRC, name, f32 payload), used for pretrained bases, best
+//! fine-tuned thetas, and (v4) resumable run manifests.
 //!
-//! ## Format v3 (current multi-stream writer)
+//! ## Format v4 (run manifest — DESIGN.md §13)
+//!
+//! ```text
+//! magic "QFTCKPT4"  (8 bytes)
+//! crc32            u32 LE   — IEEE CRC-32 over everything below
+//! meta_len         u32 LE
+//! meta             typed run state (see RunMeta encoding below)
+//! n_streams        u32 LE   (≥ 1)
+//! n_streams × {
+//!   name_len       u32 LE   (≤ 4096)
+//!   name           UTF-8
+//!   n              u64 LE
+//!   payload        n × f32 LE
+//! }
+//! ```
+//!
+//! One file = one resumable training run: the v3 named-stream section
+//! carries the big f32 vectors (`params`, `best_theta`, `adam_m`,
+//! `adam_v`), and the `meta` section carries every scalar the trainer
+//! needs to continue **bitwise identically** — step position, Adam
+//! `t`, LR/anomaly state, best-val bookkeeping, the loss/val curves,
+//! the sampler's full state (epoch order + position + `Rng` words +
+//! Box-Muller spare), and a [`RunMeta::config_hash`] that rejects
+//! resume under a changed `HostTrainConfig`.  The meta encoding is
+//! fixed-layout little-endian (floats as IEEE bits) with every count
+//! validated against the bytes actually present before allocation,
+//! same as the stream parsers.
+//!
+//! ## Format v3 (multi-stream parameter checkpoint)
 //!
 //! ```text
 //! magic "QFTCKPT3"  (8 bytes)
@@ -42,8 +70,15 @@
 //! never leaves a torn file where a valid checkpoint used to be (the
 //! `torn-write@save` fault probe exercises exactly that crash window).
 //! [`load_streams`] reads every version — v1 (`QFTCKPT1`, no CRC) and
-//! v2 files surface as a single stream — so readers are
-//! format-oblivious.
+//! v2 files surface as a single stream, v4 manifests surface as their
+//! stream section — so readers are format-oblivious.
+//!
+//! The shared atomic writer also hosts the crash-consistency probe
+//! window: [`fault::crash_point`]`("snapshot")` fires immediately
+//! before and immediately after the rename, so `crash@snapshot:2k`
+//! dies with only the temp file of save `k` on disk (previous
+//! checkpoint intact) and `crash@snapshot:2k+1` dies the instant save
+//! `k` became durable.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -54,6 +89,7 @@ use crate::util::fault;
 const MAGIC_V1: &[u8; 8] = b"QFTCKPT1";
 const MAGIC_V2: &[u8; 8] = b"QFTCKPT2";
 const MAGIC_V3: &[u8; 8] = b"QFTCKPT3";
+const MAGIC_V4: &[u8; 8] = b"QFTCKPT4";
 const MAX_NAME_LEN: usize = 4096;
 /// Minimum encoded size of one stream (`name_len` + `n` with an empty
 /// name and payload) — bounds `n_streams` against the real file size
@@ -142,7 +178,14 @@ fn write_atomic(path: &Path, magic: &[u8; 8], body: &[u8]) -> Result<()> {
     f.write_all(body)?;
     f.sync_all()?;
     drop(f);
+    // the crash-consistency save window: a `crash@snapshot` spec
+    // aborts the process here (before the rename — the destination
+    // still holds its previous contents) or below (after — the new
+    // checkpoint just became durable); `--resume` must recover from
+    // either side bitwise
+    fault::crash_point("snapshot");
     std::fs::rename(&tmp, path)?;
+    fault::crash_point("snapshot");
     Ok(())
 }
 
@@ -165,6 +208,227 @@ pub fn save_streams(path: &Path, streams: &[(&str, &[f32])]) -> Result<()> {
         encode_stream(&mut body, name, params)?;
     }
     write_atomic(path, MAGIC_V3, &body)
+}
+
+/// Typed run state carried by a v4 run manifest — everything
+/// `finetune_host` needs beyond the f32 streams to continue a run
+/// bitwise identically (DESIGN.md §13).  Counters are `usize` for
+/// caller ergonomics and encoded as `u64` LE; floats are encoded as
+/// IEEE bits so the round trip is exact, NaN/±inf included.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunMeta {
+    /// Hash of the trajectory-shaping `HostTrainConfig` fields; resume
+    /// under a different config is rejected against this.
+    pub config_hash: u64,
+    /// Loop position to resume from (steps completed).
+    pub step: usize,
+    /// Adam's bias-correction step counter.
+    pub adam_t: u64,
+    pub steps_run: usize,
+    pub anomalies: usize,
+    pub since_best: usize,
+    /// The run finished (completion, early stop, or divergence) —
+    /// resuming a done manifest returns its outcome without training.
+    pub done: bool,
+    pub diverged: bool,
+    pub lr_scale: f32,
+    pub best_val: f64,
+    /// Sampler stream: xoshiro256++ words + Box-Muller spare.
+    pub rng_state: [u64; 4],
+    pub rng_spare: Option<f64>,
+    pub sampler_pos: usize,
+    pub sampler_order: Vec<usize>,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub val_curve: Vec<(usize, f64)>,
+}
+
+const META_FLAG_DONE: u8 = 1 << 0;
+const META_FLAG_DIVERGED: u8 = 1 << 1;
+const META_FLAG_SPARE: u8 = 1 << 2;
+
+fn push_u64(body: &mut Vec<u8>, v: u64) {
+    body.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode the meta section (fixed-layout scalars, then the
+/// length-prefixed sampler order and curves).
+fn encode_meta(meta: &RunMeta) -> Result<Vec<u8>> {
+    let mut m = Vec::new();
+    push_u64(&mut m, meta.config_hash);
+    push_u64(&mut m, meta.step as u64);
+    push_u64(&mut m, meta.adam_t);
+    push_u64(&mut m, meta.steps_run as u64);
+    push_u64(&mut m, meta.anomalies as u64);
+    push_u64(&mut m, meta.since_best as u64);
+    let mut flags = 0u8;
+    if meta.done {
+        flags |= META_FLAG_DONE;
+    }
+    if meta.diverged {
+        flags |= META_FLAG_DIVERGED;
+    }
+    if meta.rng_spare.is_some() {
+        flags |= META_FLAG_SPARE;
+    }
+    m.push(flags);
+    m.extend_from_slice(&meta.lr_scale.to_bits().to_le_bytes());
+    push_u64(&mut m, meta.best_val.to_bits());
+    for w in meta.rng_state {
+        push_u64(&mut m, w);
+    }
+    push_u64(&mut m, meta.rng_spare.unwrap_or(0.0).to_bits());
+    push_u64(&mut m, meta.sampler_pos as u64);
+    push_u64(&mut m, meta.sampler_order.len() as u64);
+    for &i in &meta.sampler_order {
+        let i = u32::try_from(i).map_err(|_| {
+            Error::Data(format!("manifest sampler index {i} exceeds the u32 encoding"))
+        })?;
+        m.extend_from_slice(&i.to_le_bytes());
+    }
+    for curve in [&meta.loss_curve, &meta.val_curve] {
+        push_u64(&mut m, curve.len() as u64);
+        for &(step, v) in curve {
+            push_u64(&mut m, step as u64);
+            push_u64(&mut m, v.to_bits());
+        }
+    }
+    Ok(m)
+}
+
+fn take_usize(cur: &mut Cursor, what: &str) -> Result<usize> {
+    let v = cur.u64()?;
+    usize::try_from(v)
+        .map_err(|_| Error::Data(format!("manifest {what} {v} exceeds this target's usize")))
+}
+
+/// Bound a declared element count against the bytes actually present
+/// (`elem_bytes` each) before any count-sized allocation.
+fn bounded_count(cur: &Cursor, n: usize, elem_bytes: usize, what: &str) -> Result<()> {
+    let need = n
+        .checked_mul(elem_bytes)
+        .ok_or_else(|| Error::Data(format!("manifest {what} count {n} overflows")))?;
+    if need > cur.remaining() {
+        return Err(Error::Data(format!(
+            "manifest declares {n} {what} entries ({need} bytes) but only {} are present",
+            cur.remaining()
+        )));
+    }
+    Ok(())
+}
+
+/// Decode the meta section; every length validated before allocation.
+fn parse_meta(meta: &[u8]) -> Result<RunMeta> {
+    let mut cur = Cursor { buf: meta, pos: 0 };
+    let config_hash = cur.u64()?;
+    let step = take_usize(&mut cur, "step")?;
+    let adam_t = cur.u64()?;
+    let steps_run = take_usize(&mut cur, "steps_run")?;
+    let anomalies = take_usize(&mut cur, "anomalies")?;
+    let since_best = take_usize(&mut cur, "since_best")?;
+    let flags = cur.take(1)?[0];
+    let lr_bits = cur.u32()?;
+    let best_val = f64::from_bits(cur.u64()?);
+    let mut rng_state = [0u64; 4];
+    for w in &mut rng_state {
+        *w = cur.u64()?;
+    }
+    let spare_bits = cur.u64()?;
+    let rng_spare =
+        if flags & META_FLAG_SPARE != 0 { Some(f64::from_bits(spare_bits)) } else { None };
+    let sampler_pos = take_usize(&mut cur, "sampler_pos")?;
+    let n_order = take_usize(&mut cur, "sampler_order")?;
+    bounded_count(&cur, n_order, 4, "sampler_order")?;
+    let mut sampler_order = Vec::with_capacity(n_order);
+    for _ in 0..n_order {
+        sampler_order.push(cur.u32()? as usize);
+    }
+    let mut curves = [Vec::new(), Vec::new()];
+    for (curve, what) in curves.iter_mut().zip(["loss_curve", "val_curve"]) {
+        let n = take_usize(&mut cur, what)?;
+        bounded_count(&cur, n, 16, what)?;
+        curve.reserve(n);
+        for _ in 0..n {
+            let s = take_usize(&mut cur, what)?;
+            curve.push((s, f64::from_bits(cur.u64()?)));
+        }
+    }
+    if cur.remaining() != 0 {
+        return Err(Error::Data(format!(
+            "manifest meta has {} trailing bytes",
+            cur.remaining()
+        )));
+    }
+    let [loss_curve, val_curve] = curves;
+    Ok(RunMeta {
+        config_hash,
+        step,
+        adam_t,
+        steps_run,
+        anomalies,
+        since_best,
+        done: flags & META_FLAG_DONE != 0,
+        diverged: flags & META_FLAG_DIVERGED != 0,
+        lr_scale: f32::from_bits(lr_bits),
+        best_val,
+        rng_state,
+        rng_spare,
+        sampler_pos,
+        sampler_order,
+        loss_curve,
+        val_curve,
+    })
+}
+
+/// Save a run manifest (format v4, atomic): the typed run state plus
+/// the named f32 streams, one artifact per resumable run.
+pub fn save_manifest(path: &Path, meta: &RunMeta, streams: &[(&str, &[f32])]) -> Result<()> {
+    if streams.is_empty() {
+        return Err(Error::msg("run manifest must hold at least one stream"));
+    }
+    let m = encode_meta(meta)?;
+    let mut body = Vec::with_capacity(4 + m.len());
+    body.extend_from_slice(&(m.len() as u32).to_le_bytes());
+    body.extend_from_slice(&m);
+    body.extend_from_slice(&(streams.len() as u32).to_le_bytes());
+    for (name, params) in streams {
+        encode_stream(&mut body, name, params)?;
+    }
+    write_atomic(path, MAGIC_V4, &body)
+}
+
+/// Split a v4 body into its meta section and its stream section, with
+/// `meta_len` validated against the body before slicing.
+fn split_v4_body(body: &[u8]) -> Result<(&[u8], &[u8])> {
+    let mut cur = Cursor { buf: body, pos: 0 };
+    let meta_len = cur.u32()? as usize;
+    if meta_len > cur.remaining() {
+        return Err(Error::Data(format!(
+            "manifest declares {meta_len} meta bytes but only {} are present",
+            cur.remaining()
+        )));
+    }
+    let meta = cur.take(meta_len)?;
+    Ok((meta, &body[cur.pos..]))
+}
+
+/// Load a v4 run manifest: the typed run state plus its named streams.
+/// Rejects other versions — parameter-only checkpoints carry no run
+/// state to resume from.
+pub fn load_manifest(path: &Path) -> Result<(RunMeta, Vec<(String, Vec<f32>)>)> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < 8 {
+        return Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())));
+    }
+    let (magic, rest) = bytes.split_at(8);
+    if magic != MAGIC_V4 {
+        return Err(Error::Data(format!(
+            "{}: not a run manifest (v4); parameter checkpoints hold no run state",
+            path.display()
+        )));
+    }
+    let body = checked_body(path, rest)?;
+    let (meta, streams) = split_v4_body(body)?;
+    Ok((parse_meta(meta)?, parse_streams(streams)?))
 }
 
 /// Bounds-checked little-endian reads over an in-memory image.
@@ -313,7 +577,13 @@ pub fn load_streams(path: &Path) -> Result<Vec<(String, Vec<f32>)>> {
         return Err(Error::msg(format!("{}: not a QFT checkpoint", path.display())));
     }
     let (magic, rest) = bytes.split_at(8);
-    if magic == MAGIC_V3 {
+    if magic == MAGIC_V4 {
+        // a run manifest's stream section reads like any other
+        // checkpoint (e.g. `serve --params` over a manifest's final
+        // params); the run state is load_manifest's concern
+        let (_meta, streams) = split_v4_body(checked_body(path, rest)?)?;
+        parse_streams(streams)
+    } else if magic == MAGIC_V3 {
         parse_streams(checked_body(path, rest)?)
     } else if magic == MAGIC_V2 {
         Ok(vec![parse_body(checked_body(path, rest)?)?])
@@ -502,6 +772,180 @@ mod tests {
         assert_eq!(load_streams(&v2).unwrap(), vec![("flat".to_string(), vec![1.5])]);
         // empty stream list is rejected at save time
         assert!(save_streams(&dir.join("none.bin"), &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn sample_meta() -> RunMeta {
+        RunMeta {
+            config_hash: 0xDEAD_BEEF_CAFE_F00D,
+            step: 35,
+            adam_t: 33,
+            steps_run: 35,
+            anomalies: 2,
+            since_best: 1,
+            done: false,
+            diverged: false,
+            lr_scale: 0.25,
+            best_val: 0.012_345_678_9,
+            rng_state: [1, u64::MAX, 3, 0x0123_4567_89AB_CDEF],
+            rng_spare: Some(-1.234_567_890_123_4),
+            sampler_pos: 7,
+            sampler_order: vec![4, 0, 3, 1, 2, 7, 6, 5],
+            loss_curve: vec![(0, 1.5), (20, 0.5), (34, f64::NAN)],
+            val_curve: vec![(20, 0.9), (35, f64::INFINITY)],
+        }
+    }
+
+    /// NaN-tolerant equality (PartialEq on RunMeta is false under NaN
+    /// curve entries, which the format must still round-trip exactly).
+    fn meta_bits_eq(a: &RunMeta, b: &RunMeta) -> bool {
+        let f64b = |x: f64| x.to_bits();
+        a.config_hash == b.config_hash
+            && a.step == b.step
+            && a.adam_t == b.adam_t
+            && a.steps_run == b.steps_run
+            && a.anomalies == b.anomalies
+            && a.since_best == b.since_best
+            && a.done == b.done
+            && a.diverged == b.diverged
+            && a.lr_scale.to_bits() == b.lr_scale.to_bits()
+            && f64b(a.best_val) == f64b(b.best_val)
+            && a.rng_state == b.rng_state
+            && a.rng_spare.map(f64b) == b.rng_spare.map(f64b)
+            && a.sampler_pos == b.sampler_pos
+            && a.sampler_order == b.sampler_order
+            && a.loss_curve.len() == b.loss_curve.len()
+            && a.loss_curve.iter().zip(&b.loss_curve).all(|(x, y)| x.0 == y.0 && f64b(x.1) == f64b(y.1))
+            && a.val_curve.len() == b.val_curve.len()
+            && a.val_curve.iter().zip(&b.val_curve).all(|(x, y)| x.0 == y.0 && f64b(x.1) == f64b(y.1))
+    }
+
+    #[test]
+    fn manifest_roundtrip_is_exact() {
+        let dir = tdir("manifest");
+        let path = dir.join("run.bin");
+        let meta = sample_meta();
+        let params: Vec<f32> = (0..200).map(|i| (i as f32).cos()).collect();
+        let m: Vec<f32> = (0..200).map(|i| i as f32 * 1e-3).collect();
+        save_manifest(
+            &path,
+            &meta,
+            &[("params", &params[..]), ("best_theta", &params[..]), ("adam_m", &m[..]), ("adam_v", &m[..])],
+        )
+        .unwrap();
+        let (got, streams) = load_manifest(&path).unwrap();
+        assert!(meta_bits_eq(&got, &meta), "meta round trip drifted:\n{got:?}\nvs\n{meta:?}");
+        assert_eq!(streams.len(), 4);
+        assert_eq!(streams[0], ("params".to_string(), params.clone()));
+        assert_eq!(streams[3], ("adam_v".to_string(), m.clone()));
+        // the done/diverged/spare flag combinations round-trip too
+        let mut meta2 = sample_meta();
+        meta2.done = true;
+        meta2.diverged = true;
+        meta2.rng_spare = None;
+        meta2.sampler_order = vec![];
+        meta2.val_curve = vec![];
+        save_manifest(&path, &meta2, &[("params", &params[..])]).unwrap();
+        let (got2, _) = load_manifest(&path).unwrap();
+        assert!(meta_bits_eq(&got2, &meta2));
+        // format-oblivious readers see the stream section of a manifest
+        let all = load_streams(&path).unwrap();
+        assert_eq!(all, vec![("params".to_string(), params.clone())]);
+        // load_manifest rejects parameter-only checkpoints (no run state)
+        let v2 = dir.join("flat.bin");
+        save(&v2, "flat", &params).unwrap();
+        let err = load_manifest(&v2).unwrap_err().to_string();
+        assert!(err.contains("not a run manifest"), "{err}");
+        // empty stream list rejected at save time
+        assert!(save_manifest(&dir.join("none.bin"), &meta, &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_corruption_is_rejected_without_allocating() {
+        let dir = tdir("manifest_corrupt");
+        let path = dir.join("run.bin");
+        let meta = sample_meta();
+        let params: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        save_manifest(&path, &meta, &[("params", &params[..])]).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // truncation at every section boundary of interest: magic, CRC,
+        // meta_len, mid-meta, n_streams, mid-payload
+        for cut in [7, 11, 14, 40, good.len() - params.len() * 4 - 6, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load_manifest(&path).is_err(), "accepted a {cut}-byte prefix");
+            assert!(load_streams(&path).is_err(), "load_streams accepted a {cut}-byte prefix");
+        }
+        // CRC flip anywhere in the covered body
+        for flip in [13, 20, good.len() - 1] {
+            let mut rot = good.clone();
+            rot[flip] ^= 0x40;
+            std::fs::write(&path, &rot).unwrap();
+            let err = load_manifest(&path).unwrap_err().to_string();
+            assert!(err.contains("CRC"), "flipped byte {flip} not caught by CRC: {err}");
+        }
+        // forged headers with VALID CRCs — the length validation itself
+        // must reject, never an oversized allocation:
+        let forge = |body: &[u8]| {
+            let mut f = Vec::new();
+            f.extend_from_slice(MAGIC_V4);
+            f.extend_from_slice(&crc32(body).to_le_bytes());
+            f.extend_from_slice(body);
+            f
+        };
+        // (a) meta_len pointing past the file
+        let mut b = Vec::new();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.push(0);
+        std::fs::write(&path, forge(&b)).unwrap();
+        let err = load_manifest(&path).unwrap_err().to_string();
+        assert!(err.contains("meta bytes"), "{err}");
+        // (b) sampler_order count far beyond the meta section
+        let good_body = &good[12..];
+        let meta_len = u32::from_le_bytes([good_body[0], good_body[1], good_body[2], good_body[3]]) as usize;
+        let meta_bytes = &good_body[4..4 + meta_len];
+        let order_count_off = 8 * 6 + 1 + 4 + 8 + 32 + 8 + 8; // fixed prefix before n_order
+        let mut forged_meta = meta_bytes.to_vec();
+        forged_meta[order_count_off..order_count_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut b = Vec::new();
+        b.extend_from_slice(&(forged_meta.len() as u32).to_le_bytes());
+        b.extend_from_slice(&forged_meta);
+        b.extend_from_slice(&good_body[4 + meta_len..]);
+        std::fs::write(&path, forge(&b)).unwrap();
+        let err = load_manifest(&path).unwrap_err().to_string();
+        assert!(err.contains("sampler_order"), "{err}");
+        // (c) oversize name_len in the stream section
+        let mut b = Vec::new();
+        b.extend_from_slice(&1u32.to_le_bytes()); // meta_len 1
+        b.push(0); // "meta"
+        b.extend_from_slice(&1u32.to_le_bytes()); // n_streams
+        b.extend_from_slice(&(MAX_NAME_LEN as u32 + 1).to_le_bytes());
+        std::fs::write(&path, forge(&b)).unwrap();
+        // meta is garbage too, but the stream section must already be
+        // rejected by load_streams (which never parses meta)
+        assert!(load_streams(&path).unwrap_err().to_string().contains("name length"));
+        // (d) stream length mismatch: declared count larger than payload
+        let mut b = Vec::new();
+        b.extend_from_slice(&(meta_len as u32).to_le_bytes());
+        b.extend_from_slice(meta_bytes);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&6u32.to_le_bytes());
+        b.extend_from_slice(b"params");
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, forge(&b)).unwrap();
+        let err = load_manifest(&path).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+        // (e) meta trailing bytes (meta_len longer than the encoding)
+        let mut padded_meta = meta_bytes.to_vec();
+        padded_meta.extend_from_slice(&[0u8; 3]);
+        let mut b = Vec::new();
+        b.extend_from_slice(&(padded_meta.len() as u32).to_le_bytes());
+        b.extend_from_slice(&padded_meta);
+        b.extend_from_slice(&good_body[4 + meta_len..]);
+        std::fs::write(&path, forge(&b)).unwrap();
+        let err = load_manifest(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -17,12 +17,16 @@
 //! construction: the backward never produces gradients for them.
 
 use crate::compute::pool;
+use crate::coordinator::checkpoint::{self, RunMeta};
 use crate::coordinator::trainer::TrainOutcome;
-use crate::data::batcher::Sampler;
+use crate::data::batcher::{Sampler, SamplerState};
 use crate::data::synth::RegressionTask;
 use crate::info;
 use crate::model::TrainableModel;
 use crate::util::error::{Error, Result};
+use crate::util::fault;
+use crate::util::rng::RngState;
+use std::path::{Path, PathBuf};
 
 /// Approximate multiply-equivalent cost of one Adam parameter update
 /// (EMAs, bias correction, rsqrt) — sizes the pool chunks so only
@@ -68,6 +72,25 @@ pub struct HostTrainConfig {
     pub anomaly_retries: usize,
     /// LR multiplier applied at each anomaly rollback (≤ 1).
     pub anomaly_backoff: f32,
+    /// Write a v4 run manifest to `snapshot_path` every this many
+    /// optimizer steps (0 = periodic snapshots off).  Requires
+    /// `snapshot_path`.  Snapshot cadence is bitwise inert: it changes
+    /// what is durable, never the trajectory.
+    pub snapshot_every: usize,
+    /// Where the run manifest lives.  `Some` with `snapshot_every == 0`
+    /// still writes one final manifest when the run completes.
+    pub snapshot_path: Option<PathBuf>,
+    /// Resume from the manifest at `snapshot_path` if one exists
+    /// (missing file ⇒ fresh start, so a relaunch after a crash in the
+    /// very first snapshot window still works).  The manifest's config
+    /// hash must match this config — see [`config_hash`].
+    pub resume: bool,
+    /// Test/bench seam: return an error immediately before this
+    /// 0-indexed step executes, leaving only durable snapshots behind —
+    /// the in-process stand-in for a crash (the real thing,
+    /// `QFT_FAULT=crash@step`, aborts the process and can only be
+    /// exercised from a subprocess).  Excluded from [`config_hash`].
+    pub halt_before: Option<usize>,
 }
 
 impl Default for HostTrainConfig {
@@ -90,8 +113,45 @@ impl Default for HostTrainConfig {
             patience: None,
             anomaly_retries: 3,
             anomaly_backoff: 0.5,
+            snapshot_every: 0,
+            snapshot_path: None,
+            resume: false,
+            halt_before: None,
         }
     }
+}
+
+/// Hash of every trajectory-shaping field of a [`HostTrainConfig`] —
+/// the resume guard: a manifest written under one config refuses to
+/// seed a run under a different one, because the resumed trajectory
+/// could not be bitwise equal to any uninterrupted run.  Durability
+/// knobs (`snapshot_every`, `snapshot_path`, `resume`, `halt_before`)
+/// are deliberately excluded: they never touch the trajectory, so
+/// resuming under a different snapshot cadence is legal.  Floats enter
+/// as IEEE bit patterns (two configs hash equal iff the trajectories
+/// they drive are bitwise equal).
+pub fn config_hash(cfg: &HostTrainConfig) -> u64 {
+    let s = format!(
+        "qft-train-v1|{}|{}|{}|{:08x}|{:08x}|{:08x}|{:08x}|{:08x}|{}|{}|{:08x}|{:08x}|{}|{}|{}|{}|{:08x}",
+        cfg.seed,
+        cfg.steps,
+        cfg.batch,
+        cfg.lr.to_bits(),
+        cfg.beta1.to_bits(),
+        cfg.beta2.to_bits(),
+        cfg.eps.to_bits(),
+        cfg.clip.to_bits(),
+        cfg.warmup_steps,
+        cfg.lr_decay_steps,
+        cfg.min_lr.to_bits(),
+        cfg.weight_decay.to_bits(),
+        cfg.eval_every,
+        cfg.log_every,
+        cfg.patience.map_or(-1i64, |p| p as i64),
+        cfg.anomaly_retries,
+        cfg.anomaly_backoff.to_bits(),
+    );
+    crate::util::rng::hash_str(&s)
 }
 
 /// Linear-warmup + cosine-decay learning-rate schedule (the paper's
@@ -194,6 +254,39 @@ impl Adam {
         }
     }
 
+    /// Number of update steps taken (the bias-correction exponent).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// Borrow the first/second-moment EMAs (run-manifest streams).
+    pub fn moments(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+
+    /// Rebuild an optimizer from snapshotted moments + step count; the
+    /// next [`step_at`](Adam::step_at) continues exactly where the
+    /// snapshotted optimizer would have.
+    pub fn restore(cfg: &HostTrainConfig, m: Vec<f32>, v: Vec<f32>, t: u64) -> Result<Adam> {
+        if m.len() != v.len() {
+            return Err(Error::Data(format!(
+                "Adam moment length mismatch: m {} vs v {}",
+                m.len(),
+                v.len()
+            )));
+        }
+        Ok(Adam {
+            m,
+            v,
+            t,
+            lr: cfg.lr,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+        })
+    }
+
     /// One update step at the configured base `lr`.
     pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
         let lr = self.lr;
@@ -282,6 +375,63 @@ pub fn val_loss_host<M: TrainableModel>(model: &M, task: &impl RegressionTask) -
     Ok(mse(&pred, vy))
 }
 
+/// Names (and order) of the f32 streams a run manifest carries.
+const MANIFEST_STREAMS: [&str; 4] = ["params", "best_theta", "adam_m", "adam_v"];
+
+/// Serialize the trainer's complete live state as a v4 run manifest.
+/// Everything that shapes the remaining trajectory goes in; wallclock
+/// deliberately does not, so the final manifest of a resumed run is
+/// byte-identical to its uninterrupted twin (CI `cmp`s them).
+#[allow(clippy::too_many_arguments)]
+fn write_run_manifest(
+    path: &Path,
+    config_hash: u64,
+    steps_run: usize,
+    adam: &Adam,
+    sampler: &Sampler,
+    params: &[f32],
+    best_theta: &[f32],
+    best_val: f64,
+    since_best: usize,
+    anomalies: usize,
+    lr_scale: f32,
+    loss_curve: &[(usize, f64)],
+    val_curve: &[(usize, f64)],
+    done: bool,
+    diverged: bool,
+) -> Result<()> {
+    let st = sampler.state();
+    let (m, v) = adam.moments();
+    let meta = RunMeta {
+        config_hash,
+        step: steps_run,
+        adam_t: adam.t(),
+        steps_run,
+        anomalies,
+        since_best,
+        done,
+        diverged,
+        lr_scale,
+        best_val,
+        rng_state: st.rng.s,
+        rng_spare: st.rng.spare,
+        sampler_pos: st.pos,
+        sampler_order: st.order,
+        loss_curve: loss_curve.to_vec(),
+        val_curve: val_curve.to_vec(),
+    };
+    checkpoint::save_manifest(
+        path,
+        &meta,
+        &[
+            (MANIFEST_STREAMS[0], params),
+            (MANIFEST_STREAMS[1], best_theta),
+            (MANIFEST_STREAMS[2], m),
+            (MANIFEST_STREAMS[3], v),
+        ],
+    )
+}
+
 /// Fine-tune a model's flat parameters on a regression task with Adam +
 /// global-norm gradient clipping.  Generic over [`TrainableModel`]
 /// (single adapter or the full transformer block — same Adam, LR
@@ -289,6 +439,12 @@ pub fn val_loss_host<M: TrainableModel>(model: &M, task: &impl RegressionTask) -
 /// left at the **final** parameters; `TrainOutcome::best_theta` holds
 /// the best-on-validation checkpoint (load it with
 /// [`TrainableModel::set_params`]).
+///
+/// With `snapshot_path` set the run is crash-consistent: a v4 run
+/// manifest is written every `snapshot_every` steps and at completion,
+/// and `resume: true` continues from the latest one such that the
+/// resumed trajectory — params, curves, RNG draws, everything — is
+/// bitwise identical to the uninterrupted run (DESIGN.md §13).
 pub fn finetune_host<M: TrainableModel>(
     model: &mut M,
     task: &impl RegressionTask,
@@ -335,7 +491,112 @@ pub fn finetune_host<M: TrainableModel>(
     let mut diverged = false;
     let mut lr_scale = 1.0f32;
 
-    for step in 0..cfg.steps {
+    // ── durability (DESIGN.md §13) ────────────────────────────────────
+    let cfg_hash = config_hash(cfg);
+    let snap_path = cfg.snapshot_path.as_deref();
+    if cfg.snapshot_every > 0 && snap_path.is_none() {
+        return Err(Error::Config("snapshot_every requires snapshot_path".into()));
+    }
+    if cfg.resume && snap_path.is_none() {
+        return Err(Error::Config("resume requires snapshot_path".into()));
+    }
+    let mut start_step = 0usize;
+    if cfg.resume {
+        let path = snap_path.unwrap();
+        if path.exists() {
+            let (meta, streams) = checkpoint::load_manifest(path)?;
+            if meta.config_hash != cfg_hash {
+                return Err(Error::Config(format!(
+                    "manifest {} was written under a different HostTrainConfig \
+                     (hash {:016x} vs {:016x}): a resumed trajectory could not match \
+                     any uninterrupted run, refusing",
+                    path.display(),
+                    meta.config_hash,
+                    cfg_hash
+                )));
+            }
+            if streams.len() != MANIFEST_STREAMS.len()
+                || streams.iter().zip(MANIFEST_STREAMS).any(|((n, _), want)| n != want)
+            {
+                return Err(Error::Data(format!(
+                    "manifest {} streams {:?} != expected {MANIFEST_STREAMS:?}",
+                    path.display(),
+                    streams.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                )));
+            }
+            for (name, s) in &streams {
+                if s.len() != params.len() {
+                    return Err(Error::Data(format!(
+                        "manifest stream {name:?} holds {} params, model has {}",
+                        s.len(),
+                        params.len()
+                    )));
+                }
+            }
+            if meta.sampler_order.len() != task.n_train() {
+                return Err(Error::Data(format!(
+                    "manifest sampler order covers {} examples, task has {}",
+                    meta.sampler_order.len(),
+                    task.n_train()
+                )));
+            }
+            let mut it = streams.into_iter();
+            let (_, p) = it.next().unwrap();
+            let (_, b) = it.next().unwrap();
+            let (_, am) = it.next().unwrap();
+            let (_, av) = it.next().unwrap();
+            params.copy_from_slice(&p);
+            model.set_params(&params)?;
+            best_theta.copy_from_slice(&b);
+            adam = Adam::restore(cfg, am, av, meta.adam_t)?;
+            sampler = Sampler::restore(SamplerState {
+                order: meta.sampler_order,
+                pos: meta.sampler_pos,
+                rng: RngState { s: meta.rng_state, spare: meta.rng_spare },
+            });
+            best_val = meta.best_val;
+            since_best = meta.since_best;
+            anomalies = meta.anomalies;
+            lr_scale = meta.lr_scale;
+            loss_curve = meta.loss_curve;
+            val_curve = meta.val_curve;
+            steps_run = meta.steps_run;
+            diverged = meta.diverged;
+            start_step = meta.step;
+            if meta.done {
+                // the run already finished (completion, early stop, or
+                // divergence): reconstruct its outcome without training
+                info!(
+                    "resume: manifest {} is complete at step {steps_run}, nothing to do",
+                    path.display()
+                );
+                return Ok(TrainOutcome {
+                    best_theta,
+                    best_val_loss: best_val,
+                    final_theta: params,
+                    loss_curve,
+                    val_curve,
+                    steps_run,
+                    wallclock_s: start.elapsed().as_secs_f64(),
+                    anomalies,
+                    diverged,
+                });
+            }
+            info!("resume: continuing from step {start_step} of {} ({})", cfg.steps, path.display());
+        } else {
+            info!("resume: no manifest at {}, starting fresh", path.display());
+        }
+    }
+
+    for step in start_step..cfg.steps {
+        // `crash@step:n` aborts the process at the top of the n-th loop
+        // iteration this process executes; `halt_before` is the
+        // in-process equivalent for tests (durable snapshots survive,
+        // everything else is dropped on the floor)
+        fault::crash_point("step");
+        if cfg.halt_before == Some(step) {
+            return Err(Error::Compute(format!("halted before step {step} (halt_before test seam)")));
+        }
         for (slot, &i) in sampler.next_indices(cfg.batch).iter().enumerate() {
             xs[slot * ex..(slot + 1) * ex].copy_from_slice(&train_x[i * ex..(i + 1) * ex]);
             ys[slot * ex..(slot + 1) * ex].copy_from_slice(&train_y[i * ex..(i + 1) * ex]);
@@ -412,9 +673,33 @@ pub fn finetune_host<M: TrainableModel>(
                 }
             }
         }
+        // periodic durability point: after the optimizer step (and the
+        // eval that may have just improved best_theta).  The final step
+        // is skipped — the post-loop write below covers it with
+        // `done = true`.
+        if let Some(path) = snap_path {
+            if cfg.snapshot_every > 0
+                && (step + 1) % cfg.snapshot_every == 0
+                && step + 1 != cfg.steps
+            {
+                write_run_manifest(
+                    path, cfg_hash, steps_run, &adam, &sampler, &params, &best_theta, best_val,
+                    since_best, anomalies, lr_scale, &loss_curve, &val_curve, false, false,
+                )?;
+            }
+        }
     }
     if !best_val.is_finite() {
         best_theta.copy_from_slice(&params);
+    }
+    // terminal manifest (completion, early stop, or divergence all land
+    // here): `done = true` makes a later `--resume` reconstruct the
+    // outcome instead of training
+    if let Some(path) = snap_path {
+        write_run_manifest(
+            path, cfg_hash, steps_run, &adam, &sampler, &params, &best_theta, best_val,
+            since_best, anomalies, lr_scale, &loss_curve, &val_curve, true, diverged,
+        )?;
     }
     Ok(TrainOutcome {
         best_theta,
@@ -619,6 +904,33 @@ mod tests {
         student.set_params(&out.best_theta).unwrap();
         let reloaded = val_loss_host(&student, &task).unwrap();
         assert!((reloaded - out.best_val_loss).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_hash_tracks_trajectory_fields_only() {
+        let base = HostTrainConfig::default();
+        assert_eq!(config_hash(&base), config_hash(&base.clone()));
+        // every durability knob is hash-inert (resume under a different
+        // snapshot cadence is legal)
+        let durable = HostTrainConfig {
+            snapshot_every: 50,
+            snapshot_path: Some(PathBuf::from("/tmp/x.bin")),
+            resume: true,
+            halt_before: Some(3),
+            ..base.clone()
+        };
+        assert_eq!(config_hash(&base), config_hash(&durable));
+        // any trajectory-shaping field flips the hash
+        for tweaked in [
+            HostTrainConfig { seed: 1, ..base.clone() },
+            HostTrainConfig { steps: 201, ..base.clone() },
+            HostTrainConfig { lr: 2e-2 + 1e-6, ..base.clone() },
+            HostTrainConfig { eval_every: 21, ..base.clone() },
+            HostTrainConfig { patience: Some(3), ..base.clone() },
+            HostTrainConfig { anomaly_backoff: 0.25, ..base.clone() },
+        ] {
+            assert_ne!(config_hash(&base), config_hash(&tweaked), "{tweaked:?}");
+        }
     }
 
     #[test]

@@ -67,6 +67,9 @@ fn usage() -> ExitCode {
                            [--n-train N] [--n-val N] [--teacher-std F] [--noise-std F]\n\
                            [--alpha F] [--clip F] [--warmup N] [--decay N] [--min-lr F]\n\
                            [--weight-decay F] [--patience N] [--eval-every N]\n\
+                           [--snapshot PATH] [--snapshot-every N] [--resume]\n\
+                           (--snapshot writes a crash-consistent run manifest every N\n\
+                           steps, default 50; --resume continues bitwise from it)\n\
          train-block flags: train-host flags plus [--heads N] [--seq N] [--d-ff N]\n\
                            [--save-params PATH] (--batch counts sequences; --dims shapes\n\
                            each projection circuit)\n\
@@ -77,10 +80,12 @@ fn usage() -> ExitCode {
                            [--prompt-len N] [--gen-len N] [--req-seed N]\n\
                            [--requests-file PATH|-] [--deadline N] [--token-budget N]\n\
                            [--queue-cap N] [--shed-policy reject-new|drop-oldest]\n\
-                           [--streaming] [--no-verify] (stack flags must match the\n\
-                           train-block/train-deep run that produced --params;\n\
+                           [--streaming] [--no-verify] [--strict] (stack flags must\n\
+                           match the train-block/train-deep run that produced --params;\n\
                            request-file rows may end in 'nan' to inject a poisoned\n\
-                           prompt)"
+                           prompt; SIGTERM/ctrl-c drains gracefully — in-flight\n\
+                           requests finish, the queue is shed; --strict exits nonzero\n\
+                           when any request failed or was shed)"
     );
     ExitCode::FAILURE
 }
@@ -97,6 +102,101 @@ fn flag_or<T: std::str::FromStr>(
             .parse::<T>()
             .map_err(|_| quanta_ft::Error::msg(format!("bad --{name} '{raw}'"))),
     }
+}
+
+/// Shared `--dims` parser (every train/serve subcommand takes the same
+/// factorization flag).
+fn parse_dims(flags: &BTreeMap<String, String>) -> Result<Vec<usize>> {
+    flags
+        .get("dims")
+        .map(|s| s.as_str())
+        .unwrap_or("4,4,8")
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))
+}
+
+/// Shared trainer-flag parser for `train-host`/`train-block`/
+/// `train-deep`: one place wires every Adam/schedule/recovery flag —
+/// and the durability flags (`--snapshot PATH` [+ `--snapshot-every N`,
+/// default 50] and `--resume`) — so the three subcommands cannot
+/// drift.  Only the defaults for `--steps`/`--batch` differ per
+/// subcommand.
+fn train_cfg_from_flags(
+    flags: &BTreeMap<String, String>,
+    seed: u64,
+    default_steps: usize,
+    default_batch: usize,
+) -> Result<quanta_ft::coordinator::host_trainer::HostTrainConfig> {
+    use quanta_ft::coordinator::host_trainer::HostTrainConfig;
+    let snapshot_path = flags.get("snapshot").map(std::path::PathBuf::from);
+    let resume = flags.contains_key("resume");
+    let snapshot_every = match flags.get("snapshot-every") {
+        Some(raw) => raw
+            .parse::<usize>()
+            .map_err(|_| quanta_ft::Error::msg(format!("bad --snapshot-every '{raw}'")))?,
+        None if snapshot_path.is_some() => 50,
+        None => 0,
+    };
+    if (resume || snapshot_every > 0) && snapshot_path.is_none() {
+        return Err(quanta_ft::Error::msg(
+            "--resume / --snapshot-every need --snapshot PATH (where the run manifest lives)",
+        ));
+    }
+    Ok(HostTrainConfig {
+        seed,
+        steps: flag_or(flags, "steps", default_steps)?,
+        batch: flag_or(flags, "batch", default_batch)?,
+        lr: flag_or(flags, "lr", 2e-2)?,
+        clip: flag_or(flags, "clip", 1.0)?,
+        warmup_steps: flag_or(flags, "warmup", 0)?,
+        lr_decay_steps: flag_or(flags, "decay", 0)?,
+        min_lr: flag_or(flags, "min-lr", 0.0)?,
+        weight_decay: flag_or(flags, "weight-decay", 0.0)?,
+        eval_every: flag_or(flags, "eval-every", 20)?,
+        patience: flags
+            .get("patience")
+            .map(|s| s.parse::<usize>())
+            .transpose()
+            .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
+        snapshot_every,
+        snapshot_path,
+        resume,
+        ..Default::default()
+    })
+}
+
+/// Route SIGINT/SIGTERM into a drain latch the serve loop polls at its
+/// iteration boundaries (DESIGN.md §13): first signal starts a
+/// graceful drain; the handler only stores to an atomic (the only
+/// async-signal-safe thing it could do).  Raw `signal(2)` FFI — std
+/// already links libc, and the crate vendors no bindings.
+#[cfg(unix)]
+fn install_drain_handler() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static DRAIN: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        DRAIN.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    // SAFETY: on_signal is async-signal-safe (one relaxed atomic store)
+    // and stays alive for the process lifetime.
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+    &DRAIN
+}
+
+#[cfg(not(unix))]
+fn install_drain_handler() -> &'static std::sync::atomic::AtomicBool {
+    static DRAIN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+    &DRAIN
 }
 
 fn main() -> ExitCode {
@@ -222,18 +322,10 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             Ok(())
         }
         "train-host" => {
-            use quanta_ft::coordinator::host_trainer::{finetune_host, mse, HostTrainConfig};
+            use quanta_ft::coordinator::host_trainer::{finetune_host, mse};
             use quanta_ft::data::synth::{teacher_student, SynthConfig};
-            let dims: Vec<usize> = flags
-                .get("dims")
-                .map(|s| s.as_str())
-                .unwrap_or("4,4,8")
-                .split(',')
-                .map(|p| p.trim().parse::<usize>())
-                .collect::<std::result::Result<_, _>>()
-                .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
             let scfg = SynthConfig {
-                dims,
+                dims: parse_dims(flags)?,
                 n_train: flag_or(flags, "n-train", 256)?,
                 n_val: flag_or(flags, "n-val", 64)?,
                 teacher_std: flag_or(flags, "teacher-std", 0.3)?,
@@ -241,24 +333,7 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 alpha: flag_or(flags, "alpha", 1.0)?,
                 seed: flag_or(flags, "seed", 0)?,
             };
-            let tcfg = HostTrainConfig {
-                seed: scfg.seed,
-                steps: flag_or(flags, "steps", 200)?,
-                batch: flag_or(flags, "batch", 32)?,
-                lr: flag_or(flags, "lr", 2e-2)?,
-                clip: flag_or(flags, "clip", 1.0)?,
-                warmup_steps: flag_or(flags, "warmup", 0)?,
-                lr_decay_steps: flag_or(flags, "decay", 0)?,
-                min_lr: flag_or(flags, "min-lr", 0.0)?,
-                weight_decay: flag_or(flags, "weight-decay", 0.0)?,
-                eval_every: flag_or(flags, "eval-every", 20)?,
-                patience: flags
-                    .get("patience")
-                    .map(|s| s.parse::<usize>())
-                    .transpose()
-                    .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
-                ..Default::default()
-            };
+            let tcfg = train_cfg_from_flags(flags, scfg.seed, 200, 32)?;
             let task = teacher_student(&scfg)?;
             let mut student = task.student()?;
             println!(
@@ -296,17 +371,10 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             Ok(())
         }
         "train-block" => {
-            use quanta_ft::coordinator::host_trainer::{finetune_host, mse, HostTrainConfig};
+            use quanta_ft::coordinator::host_trainer::{finetune_host, mse};
             use quanta_ft::data::synth::{block_teacher_student, BlockSynthConfig};
             use quanta_ft::model::TrainableModel;
-            let dims: Vec<usize> = flags
-                .get("dims")
-                .map(|s| s.as_str())
-                .unwrap_or("4,4,8")
-                .split(',')
-                .map(|p| p.trim().parse::<usize>())
-                .collect::<std::result::Result<_, _>>()
-                .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
+            let dims = parse_dims(flags)?;
             let d: usize = dims.iter().product();
             let scfg = BlockSynthConfig {
                 dims,
@@ -320,24 +388,7 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 alpha: flag_or(flags, "alpha", 1.0)?,
                 seed: flag_or(flags, "seed", 0)?,
             };
-            let tcfg = HostTrainConfig {
-                seed: scfg.seed,
-                steps: flag_or(flags, "steps", 100)?,
-                batch: flag_or(flags, "batch", 8)?,
-                lr: flag_or(flags, "lr", 2e-2)?,
-                clip: flag_or(flags, "clip", 1.0)?,
-                warmup_steps: flag_or(flags, "warmup", 0)?,
-                lr_decay_steps: flag_or(flags, "decay", 0)?,
-                min_lr: flag_or(flags, "min-lr", 0.0)?,
-                weight_decay: flag_or(flags, "weight-decay", 0.0)?,
-                eval_every: flag_or(flags, "eval-every", 20)?,
-                patience: flags
-                    .get("patience")
-                    .map(|s| s.parse::<usize>())
-                    .transpose()
-                    .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
-                ..Default::default()
-            };
+            let tcfg = train_cfg_from_flags(flags, scfg.seed, 100, 8)?;
             let task = block_teacher_student(&scfg)?;
             let mut student = task.student();
             println!(
@@ -409,17 +460,10 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
             Ok(())
         }
         "train-deep" => {
-            use quanta_ft::coordinator::host_trainer::{finetune_host, mse, HostTrainConfig};
+            use quanta_ft::coordinator::host_trainer::{finetune_host, mse};
             use quanta_ft::data::synth::{deep_teacher_student, DeepSynthConfig};
             use quanta_ft::model::TrainableModel;
-            let dims: Vec<usize> = flags
-                .get("dims")
-                .map(|s| s.as_str())
-                .unwrap_or("4,4,8")
-                .split(',')
-                .map(|p| p.trim().parse::<usize>())
-                .collect::<std::result::Result<_, _>>()
-                .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
+            let dims = parse_dims(flags)?;
             let d: usize = dims.iter().product();
             let scfg = DeepSynthConfig {
                 dims,
@@ -434,24 +478,7 @@ fn run(cmd: &str, flags: &BTreeMap<String, String>) -> Result<()> {
                 alpha: flag_or(flags, "alpha", 1.0)?,
                 seed: flag_or(flags, "seed", 0)?,
             };
-            let tcfg = HostTrainConfig {
-                seed: scfg.seed,
-                steps: flag_or(flags, "steps", 100)?,
-                batch: flag_or(flags, "batch", 8)?,
-                lr: flag_or(flags, "lr", 2e-2)?,
-                clip: flag_or(flags, "clip", 1.0)?,
-                warmup_steps: flag_or(flags, "warmup", 0)?,
-                lr_decay_steps: flag_or(flags, "decay", 0)?,
-                min_lr: flag_or(flags, "min-lr", 0.0)?,
-                weight_decay: flag_or(flags, "weight-decay", 0.0)?,
-                eval_every: flag_or(flags, "eval-every", 20)?,
-                patience: flags
-                    .get("patience")
-                    .map(|s| s.parse::<usize>())
-                    .transpose()
-                    .map_err(|_| quanta_ft::Error::msg("bad --patience"))?,
-                ..Default::default()
-            };
+            let tcfg = train_cfg_from_flags(flags, scfg.seed, 100, 8)?;
             let task = deep_teacher_student(&scfg)?;
             let mut student = task.student();
             println!(
@@ -583,14 +610,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     use quanta_ft::serve::{BatchScheduler, ServeConfig, ServeModel, ServeRequest, ShedPolicy};
     use quanta_ft::util::rng::Rng;
 
-    let dims: Vec<usize> = flags
-        .get("dims")
-        .map(|s| s.as_str())
-        .unwrap_or("4,4,8")
-        .split(',')
-        .map(|p| p.trim().parse::<usize>())
-        .collect::<std::result::Result<_, _>>()
-        .map_err(|_| quanta_ft::Error::msg("bad --dims (want e.g. 4,4,8)"))?;
+    let dims = parse_dims(flags)?;
     let d: usize = dims.iter().product();
     let seed: u64 = flag_or(flags, "seed", 0)?;
     let depth: usize = flag_or(flags, "layers", 1)?;
@@ -729,8 +749,13 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     } else {
         ServeModel::merged(&model)?
     };
+    // SIGTERM/ctrl-c starts a graceful drain rather than killing the
+    // process mid-step: admission stops, in-flight requests finish
+    // under their deadlines, the queue is shed, stats still print
+    let drain_latch = install_drain_handler();
     let sched = BatchScheduler::with_config(deployment, serve_cfg)?;
-    let (outputs, stats) = sched.run(requests.clone())?;
+    let (outputs, stats) = sched
+        .run_with_drain(requests.clone(), |_| drain_latch.load(std::sync::atomic::Ordering::Relaxed))?;
     let n_req = outputs.len();
     // latency over completed requests only — rejected/shed requests
     // never became resident, quarantined ones would skew the mean
@@ -752,6 +777,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     t.row(vec!["throughput (tokens/s)".into(), format!("{:.0}", stats.tokens_per_s())]);
     t.row(vec!["mean latency (steps)".into(), format!("{mean_latency:.1}")]);
     t.row(vec!["max latency (steps)".into(), max_latency.to_string()]);
+    t.row(vec!["drained".into(), stats.drained.to_string()]);
     t.print();
     // per-request error domains: failures are reported, not fatal —
     // the healthy requests above completed bitwise-unaffected
@@ -797,6 +823,15 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
             "merged-vs-streaming parity: max |diff| = {max_diff:.2e} (< 1e-5 x scale \
              {scale:.1}); merged serving {speedup:.2}x over streaming"
         );
+    }
+    // per-request failures are normally reported, not fatal (the
+    // fault-smoke job depends on exit 0); --strict flips that so
+    // pipelines can gate on a clean serve
+    if flags.contains_key("strict") && stats.failed + stats.shed > 0 {
+        return Err(quanta_ft::Error::msg(format!(
+            "--strict: {} failed and {} shed requests",
+            stats.failed, stats.shed
+        )));
     }
     Ok(())
 }

@@ -65,6 +65,7 @@ use crate::serve::decode::ServeBlock;
 use crate::serve::model::DecodeEngine;
 use crate::util::error::{Error, Result};
 use crate::util::numeric::non_finite_at;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// One serving request: a prompt of `prompt_len` width-`d` vectors
 /// (row-major) and the number of vectors to generate after it.
@@ -256,8 +257,12 @@ pub struct ServeStats {
     /// [`ServeError::Shed`] (rejected at intake or quarantined
     /// mid-flight).
     pub failed: usize,
-    /// Requests shed by the bounded intake queue.
+    /// Requests shed by the bounded intake queue **or** by a drain.
     pub shed: usize,
+    /// True iff this run was drained (graceful shutdown): admission
+    /// stopped, the remaining queue was shed, in-flight requests ran to
+    /// completion under their deadlines.
+    pub drained: bool,
 }
 
 impl ServeStats {
@@ -287,6 +292,10 @@ struct Active<S> {
 pub struct BatchScheduler<E: DecodeEngine = ServeBlock> {
     engine: E,
     cfg: ServeConfig,
+    /// Graceful-shutdown latch (DESIGN.md §13): set from a signal
+    /// handler (or any thread) via [`BatchScheduler::drain`]; the run
+    /// loop observes it between iterations, never mid-step.
+    drain: AtomicBool,
 }
 
 impl<E: DecodeEngine> BatchScheduler<E> {
@@ -301,7 +310,21 @@ impl<E: DecodeEngine> BatchScheduler<E> {
         if cfg.max_batch == 0 {
             return Err(Error::Config("scheduler: max_batch must be >= 1".into()));
         }
-        Ok(BatchScheduler { engine, cfg })
+        Ok(BatchScheduler { engine, cfg, drain: AtomicBool::new(false) })
+    }
+
+    /// Begin a graceful drain: the run loop (this thread or another)
+    /// stops admitting at its next iteration boundary, sheds every
+    /// still-queued request as [`ServeError::Shed`], and lets in-flight
+    /// requests finish under their existing deadlines.  Idempotent;
+    /// safe to call from a signal handler's notifier thread.
+    pub fn drain(&self) {
+        self.drain.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether a drain has been requested.
+    pub fn draining(&self) -> bool {
+        self.drain.load(Ordering::Relaxed)
     }
 
     pub fn engine(&self) -> &E {
@@ -342,6 +365,22 @@ impl<E: DecodeEngine> BatchScheduler<E> {
     /// faults (a panicking compute job surfaces here as
     /// `Error::Compute`; the pool itself stays usable).
     pub fn run(&self, requests: Vec<ServeRequest>) -> Result<(Vec<ServeOutput>, ServeStats)> {
+        self.run_with_drain(requests, |_| false)
+    }
+
+    /// [`run`](BatchScheduler::run) with a deterministic drain trigger
+    /// for tests and benches: `drain_at(steps)` is polled at each
+    /// iteration boundary (in addition to the [`drain`]
+    /// (BatchScheduler::drain) latch) and starts a graceful drain the
+    /// first time it returns true.  Draining changes **which** requests
+    /// complete, never their bits: completed outputs are bitwise equal
+    /// to the same requests' outputs in an un-drained run (per-row
+    /// batch invariance — `resume_props` pins this).
+    pub fn run_with_drain(
+        &self,
+        requests: Vec<ServeRequest>,
+        drain_at: impl Fn(usize) -> bool,
+    ) -> Result<(Vec<ServeOutput>, ServeStats)> {
         let d = self.engine.d();
         let start = std::time::Instant::now();
         let mut outputs = Vec::new();
@@ -381,9 +420,27 @@ impl<E: DecodeEngine> BatchScheduler<E> {
         let mut active: Vec<Active<E::Session>> = Vec::new();
         let mut free_states: Vec<E::Session> = Vec::new();
         let mut xs: Vec<f32> = Vec::new();
+        let mut draining = false;
         while !queue.is_empty() || !active.is_empty() {
+            // graceful drain: latch the request once, then stop
+            // admitting and shed the entire waiting queue — in-flight
+            // requests below keep stepping to completion (or their
+            // deadline) untouched
+            if !draining && (self.draining() || drain_at(stats.steps)) {
+                draining = true;
+                stats.drained = true;
+            }
+            if draining && !queue.is_empty() {
+                for r in queue.drain(..) {
+                    outputs.push(intake(&r, ServeError::Shed));
+                    stats.shed += 1;
+                }
+            }
+            if active.is_empty() && queue.is_empty() {
+                break;
+            }
             // admit into free slots, preserving arrival order
-            while active.len() < self.cfg.max_batch {
+            while !draining && active.len() < self.cfg.max_batch {
                 let Some(req) = queue.pop_front() else { break };
                 let mut state = free_states.pop().unwrap_or_else(|| self.engine.new_session());
                 self.engine.reset_session(&mut state);
@@ -623,6 +680,62 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn drain_sheds_queue_and_finishes_in_flight_bitwise() {
+        // 6 requests through 2 slots, drain after 2 steps: the 2
+        // admitted requests finish with bits equal to the un-drained
+        // run; the 4 still queued are shed
+        let mut rng = Rng::new(96);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let reqs: Vec<ServeRequest> = (0..6).map(|i| mk_request(i, d, 2, 3, &mut rng)).collect();
+        let sched = BatchScheduler::new(sb, 2).unwrap();
+        let (full, _) = sched.run(reqs.clone()).unwrap();
+        let (out, stats) = sched.run_with_drain(reqs.clone(), |steps| steps >= 2).unwrap();
+        assert!(stats.drained);
+        assert_eq!((stats.completed, stats.shed, stats.failed), (2, 4, 0));
+        for o in &out {
+            match o.id {
+                0 | 1 => {
+                    let twin = full.iter().find(|f| f.id == o.id).unwrap();
+                    assert_eq!(o.result, twin.result, "drained output {} drifted", o.id);
+                }
+                _ => assert_eq!(o.error(), Some(&ServeError::Shed), "request {}", o.id),
+            }
+        }
+        // deadlines still apply to in-flight requests during a drain
+        let mut rng2 = Rng::new(961);
+        let sb2 = tiny_serve_block(&mut rng2);
+        let d2 = sb2.d();
+        let long = mk_request(0, d2, 2, 8, &mut rng2); // needs 9 resident steps
+        let cfg = ServeConfig::default().with_max_batch(1).with_deadline(4);
+        let sched2 = BatchScheduler::with_config(sb2, cfg).unwrap();
+        let (out2, st2) = sched2.run_with_drain(vec![long], |steps| steps >= 1).unwrap();
+        assert!(st2.drained);
+        assert_eq!(out2[0].error(), Some(&ServeError::DeadlineExceeded { limit: 4 }));
+    }
+
+    #[test]
+    fn drain_latch_stops_a_run_before_any_step() {
+        // the external drain() latch (the signal-handler path) observed
+        // at the first iteration boundary: everything queued is shed,
+        // nothing is ever admitted
+        let mut rng = Rng::new(97);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let reqs: Vec<ServeRequest> = (0..4).map(|i| mk_request(i, d, 1, 2, &mut rng)).collect();
+        let sched = BatchScheduler::new(sb, 2).unwrap();
+        assert!(!sched.draining());
+        sched.drain();
+        sched.drain(); // idempotent
+        assert!(sched.draining());
+        let (out, stats) = sched.run(reqs).unwrap();
+        assert_eq!(stats.steps, 0);
+        assert!(stats.drained);
+        assert_eq!(stats.shed, 4);
+        assert!(out.iter().all(|o| o.error() == Some(&ServeError::Shed)));
     }
 
     #[test]

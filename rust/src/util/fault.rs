@@ -9,11 +9,12 @@
 //!
 //! ```text
 //! spec  ::= kind [ '@' site ] [ ':' count ]
-//! kind  ::= 'panic' | 'nan' | 'torn-write'
+//! kind  ::= 'panic' | 'nan' | 'torn-write' | 'crash'
 //! ```
 //!
-//! * `site` names a probe point (`gemm`, `decode`, `loss`, `save`);
-//!   omitted ⇒ the spec matches every probing site.
+//! * `site` names a probe point (`gemm`, `decode`, `loss`, `save`,
+//!   `step`, `snapshot`); omitted ⇒ the spec matches every probing
+//!   site.
 //! * `count` is the 0-based probe index at which the spec fires, once
 //!   (each site keeps a process-wide counter); omitted ⇒ the spec
 //!   fires at **every** probe — e.g. `nan@loss` makes the trainer's
@@ -23,6 +24,18 @@
 //! Examples: `panic@gemm:3` panics the 4th GEMM chunk executed by the
 //! process; `nan@decode:7` poisons the 8th decode step's output;
 //! `torn-write` truncates every checkpoint write mid-stream.
+//!
+//! The `crash` kind is the crash-consistency harness's kill switch: a
+//! matching [`crash_point`] **aborts the process** (no unwind, no
+//! destructors — the same state a `kill -9` leaves behind).  The
+//! trainer probes `step` before each optimizer step, and the
+//! checkpoint writer probes `snapshot` twice per save — immediately
+//! before and immediately after the temp-file rename — so
+//! `crash@step:7` dies between steps, `crash@snapshot:0` dies with
+//! only the torn temp file on disk, and `crash@snapshot:1` dies just
+//! after the first manifest became durable.  `crash-smoke` CI and
+//! `resume_props` relaunch with `--resume` and pin the recovered run
+//! bitwise against an uninterrupted reference.
 //!
 //! Probes are free when disarmed: call sites guard with [`armed`]
 //! (two relaxed atomic loads) before paying the [`probe`] lock, so the
@@ -48,6 +61,9 @@ pub enum Fault {
     Nan,
     /// Abandon a file write partway through (atomicity path).
     TornWrite,
+    /// Abort the process at the probe point (crash-consistency path):
+    /// acted on only by [`crash_point`].
+    Crash,
 }
 
 #[derive(Clone, Debug)]
@@ -97,6 +113,7 @@ fn parse(raw: &str) -> Vec<Spec> {
             "panic" => Fault::Panic,
             "nan" => Fault::Nan,
             "torn-write" => Fault::TornWrite,
+            "crash" => Fault::Crash,
             other => {
                 crate::warnlog!("QFT_FAULT: unknown kind {other:?}, spec ignored");
                 continue;
@@ -145,6 +162,22 @@ pub fn probe(site: &str) -> Option<Fault> {
         .map(|s| s.kind)
 }
 
+/// Abort the process if a `crash` spec matches `site`.  `abort`, not
+/// `panic!`: a real power cut or `kill -9` runs no unwind code either,
+/// so nothing between the last durable snapshot and the crash may be
+/// rescued by destructors — exactly the window the resume contract is
+/// tested against.  Other fault kinds matching `site` are ignored
+/// here (each call site acts only on the kinds that make sense for
+/// it), but the probe still ticks the site's counter.
+pub fn crash_point(site: &str) {
+    if armed() {
+        if let Some(Fault::Crash) = probe(site) {
+            eprintln!("QFT_FAULT: injected crash at {site}");
+            std::process::abort();
+        }
+    }
+}
+
 /// Re-read `QFT_FAULT` and reset every probe counter.  Test-sweep
 /// entry point; production code never calls this.
 pub fn reload() {
@@ -164,8 +197,11 @@ mod tests {
 
     #[test]
     fn grammar_parses() {
-        let specs = parse("panic@gemm:3, nan@decode:7 ,torn-write,nan@loss");
-        assert_eq!(specs.len(), 4);
+        let specs = parse("panic@gemm:3, nan@decode:7 ,torn-write,nan@loss,crash@snapshot:1");
+        assert_eq!(specs.len(), 5);
+        assert_eq!(specs[4].kind, Fault::Crash);
+        assert_eq!(specs[4].site.as_deref(), Some("snapshot"));
+        assert_eq!(specs[4].at, Some(1));
         assert_eq!(specs[0].kind, Fault::Panic);
         assert_eq!(specs[0].site.as_deref(), Some("gemm"));
         assert_eq!(specs[0].at, Some(3));

@@ -159,7 +159,63 @@ fn injected_faults_are_contained() {
     std::fs::write(&path, &rot).unwrap();
     let err = checkpoint::load(&path).unwrap_err().to_string();
     assert!(err.contains("CRC"), "bit rot not caught by CRC: {err}");
+
+    // the v4 run manifest rides the same write_atomic discipline: a
+    // torn manifest write reports failure and never damages the
+    // previous manifest (the full forged-header corruption matrix
+    // lives in checkpoint's unit tests; crash-at-rename legs live in
+    // resume_props, which can afford to lose a subprocess)
+    let mpath = dir.join("run.bin");
+    let meta = checkpoint::RunMeta {
+        config_hash: 0x5EED,
+        step: 10,
+        adam_t: 10,
+        steps_run: 10,
+        anomalies: 0,
+        since_best: 0,
+        done: false,
+        diverged: false,
+        lr_scale: 1.0,
+        best_val: 0.5,
+        rng_state: [1, 2, 3, 4],
+        rng_spare: None,
+        sampler_pos: 2,
+        sampler_order: vec![1, 0, 2],
+        loss_curve: vec![(0, 1.0)],
+        val_curve: vec![],
+    };
+    checkpoint::save_manifest(&mpath, &meta, &[("params", &first[..])]).unwrap();
+    set_fault("torn-write@save:0");
+    assert!(
+        checkpoint::save_manifest(&mpath, &meta, &[("params", &second[..])]).is_err(),
+        "torn manifest write must report failure"
+    );
+    clear_fault();
+    let (got, streams) = checkpoint::load_manifest(&mpath).unwrap();
+    assert_eq!(got, meta, "torn write damaged the previous manifest's meta");
+    assert_eq!(streams[0].1, first, "torn write damaged the previous manifest's params");
+    // truncated / bit-rotted manifests are rejected without panic
+    let good_m = std::fs::read(&mpath).unwrap();
+    std::fs::write(&mpath, &good_m[..good_m.len() - 7]).unwrap();
+    assert!(checkpoint::load_manifest(&mpath).is_err(), "accepted a truncated manifest");
+    let mut rot_m = good_m.clone();
+    rot_m[20] ^= 0x01;
+    std::fs::write(&mpath, &rot_m).unwrap();
+    let err = checkpoint::load_manifest(&mpath).unwrap_err().to_string();
+    assert!(err.contains("CRC"), "manifest bit rot not caught by CRC: {err}");
     std::fs::remove_dir_all(&dir).ok();
+
+    // cross-kind probes never cross-fire: a torn-write spec at the
+    // snapshot site must not make crash_point abort (and a crash spec
+    // is acted on only by crash_point, which we obviously cannot run
+    // to completion in-process — parse + dispatch are checked instead)
+    set_fault("torn-write@snapshot");
+    fault::crash_point("snapshot"); // returns: wrong kind for this probe
+    clear_fault();
+    set_fault("crash@snapshot:1");
+    assert_eq!(fault::probe("snapshot"), None, "count-0 probe must not match :1 spec");
+    assert_eq!(fault::probe("snapshot"), Some(fault::Fault::Crash));
+    clear_fault();
 
     // ---- (d) trainer rollback under injected NaN loss ---------------
     // one transient anomaly: rollback + LR backoff, run completes
