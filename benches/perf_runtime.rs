@@ -524,7 +524,7 @@ fn shard_sweep_bench() -> (&'static str, Value) {
 /// ~seq/2).
 fn serve_decode_bench() -> (&'static str, Value) {
     use quanta_ft::model::{BlockConfig, TransformerBlock};
-    use quanta_ft::serve::{DecodeState, ServeBlock};
+    use quanta_ft::serve::{DecodeScratch, DecodeState, KvArena, ServeBlock};
 
     banner("serve_decode", "KV-cache decode vs streaming adapters and full recompute");
     let mut per_token = vec![];
@@ -547,16 +547,18 @@ fn serve_decode_bench() -> (&'static str, Value) {
             // prefill every request to depth 32 (a typical resident
             // context), then time whole decode steps at that depth
             let run_one = |sb: &ServeBlock| {
-                let mut states: Vec<DecodeState> = (0..batch)
-                    .map(|_| DecodeState::with_capacity(d, 33 + warm + iters))
-                    .collect();
+                let mut arena = KvArena::unbounded(d);
+                let mut scratch = DecodeScratch::new();
+                let mut out = Vec::new();
+                let mut states: Vec<DecodeState> =
+                    (0..batch).map(|_| DecodeState::new(d)).collect();
                 for _ in 0..32 {
                     let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
-                    sb.decode_step(&mut refs, &xs).unwrap();
+                    sb.decode_step(&mut arena, &mut scratch, &mut refs, &xs, &mut out).unwrap();
                 }
                 bench(warm, iters, || {
                     let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
-                    let _ = sb.decode_step(&mut refs, &xs).unwrap();
+                    sb.decode_step(&mut arena, &mut scratch, &mut refs, &xs, &mut out).unwrap();
                 })
             };
             let st_m = run_one(&merged);
@@ -628,7 +630,8 @@ fn serve_decode_bench() -> (&'static str, Value) {
 fn serve_robustness_bench() -> (&'static str, Value) {
     use quanta_ft::model::{BlockConfig, TransformerBlock};
     use quanta_ft::serve::{
-        BatchScheduler, DecodeState, ServeBlock, ServeConfig, ServeRequest, ShedPolicy,
+        BatchScheduler, DecodeScratch, DecodeState, KvArena, ServeBlock, ServeConfig,
+        ServeRequest, ShedPolicy,
     };
     use quanta_ft::util::numeric::non_finite_at;
 
@@ -649,16 +652,18 @@ fn serve_robustness_bench() -> (&'static str, Value) {
         rng.fill_normal(&mut xs, 1.0);
         let deadline = 1usize << 40; // present but never triggering
         let run_loop = |checked: bool| {
-            let mut states: Vec<DecodeState> =
-                (0..batch).map(|_| DecodeState::with_capacity(d, 33 + warm + iters)).collect();
+            let mut arena = KvArena::unbounded(d);
+            let mut scratch = DecodeScratch::new();
+            let mut out = Vec::new();
+            let mut states: Vec<DecodeState> = (0..batch).map(|_| DecodeState::new(d)).collect();
             for _ in 0..32 {
                 let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
-                merged.decode_step(&mut refs, &xs).unwrap();
+                merged.decode_step(&mut arena, &mut scratch, &mut refs, &xs, &mut out).unwrap();
             }
             let mut step = 32usize;
             bench(warm, iters, || {
                 let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
-                let out = merged.decode_step(&mut refs, &xs).unwrap();
+                merged.decode_step(&mut arena, &mut scratch, &mut refs, &xs, &mut out).unwrap();
                 step += 1;
                 if checked {
                     // the scheduler's retire sweep, verbatim: scan each
@@ -819,7 +824,7 @@ fn deep_train_bench() -> (&'static str, Value) {
 /// themselves.
 fn deep_decode_bench() -> (&'static str, Value) {
     use quanta_ft::model::{DeepConfig, DeepModel};
-    use quanta_ft::serve::{DecodeEngine, ServeModel};
+    use quanta_ft::serve::{DecodeEngine, DecodeScratch, KvArena, ServeModel};
 
     banner("deep_decode", "depth-N merged decode step across depths");
     let batch = 8usize;
@@ -834,14 +839,17 @@ fn deep_decode_bench() -> (&'static str, Value) {
         let mut xs = vec![0.0f32; batch * d];
         rng.fill_normal(&mut xs, 1.0);
         // prefill every session to depth 16, then time whole steps
+        let mut arena = KvArena::unbounded(d);
+        let mut scratch = DecodeScratch::new();
+        let mut out = Vec::new();
         let mut sessions: Vec<_> = (0..batch).map(|_| sm.new_session()).collect();
         for _ in 0..16 {
             let mut refs: Vec<_> = sessions.iter_mut().collect();
-            sm.decode_step(&mut refs, &xs).unwrap();
+            sm.decode_step(&mut arena, &mut scratch, &mut refs, &xs, &mut out).unwrap();
         }
         let st_step = bench(2, 15, || {
             let mut refs: Vec<_> = sessions.iter_mut().collect();
-            let _ = sm.decode_step(&mut refs, &xs).unwrap();
+            sm.decode_step(&mut arena, &mut scratch, &mut refs, &xs, &mut out).unwrap();
         });
         let us_tok = st_step.mean_us / batch as f64;
         let per_layer = st_step.mean_us / depth as f64;
@@ -861,6 +869,105 @@ fn deep_decode_bench() -> (&'static str, Value) {
         ]));
     }
     ("deep_decode", Value::Arr(entries))
+}
+
+/// Paged-KV serving bench (DESIGN.md §14): the two numbers the arena
+/// exists for.  (a) **Resident memory**: peak KV bytes of a 64-request
+/// mixed workload — 4 long max-len (256-token) requests spread among
+/// 60 short ~24-token ones — under paging, against the contiguous
+/// baseline of every batch slot preallocated out to max-len; the CI
+/// gate holds the ratio at ≤ 0.5×.  (b) **Admission throughput**: the
+/// same workload admitted whole-prompt (`prefill_chunk = 0`, batched
+/// panel GEMMs over each prompt) vs row-at-a-time (`prefill_chunk =
+/// 1`, the pre-§14 schedule); the gate holds the speedup at ≥ 2× and
+/// the outputs are asserted **bitwise** equal first — chunking
+/// reshapes the schedule, never the bits.
+fn kv_serve_bench() -> (&'static str, Value) {
+    use quanta_ft::model::{BlockConfig, TransformerBlock};
+    use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeConfig, ServeRequest};
+
+    banner("kv_serve", "paged-KV resident memory + chunked-prefill admission");
+    let mut rng = Rng::new(0x4B5E);
+    let cfg = BlockConfig::standard(vec![4, 8, 8], 4, 8);
+    let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
+    block.randomize_circuits(0.05, &mut rng).unwrap();
+    let d = block.d();
+    let sb = ServeBlock::merged(&block).unwrap();
+
+    let max_len = 256usize; // longest request, prompt + generated tokens
+    let max_batch = 8usize;
+    let page_tokens = 16usize;
+    let mk = |id: u64, p_len: usize, n_gen: usize, rng: &mut Rng| {
+        let mut prompt = vec![0.0f32; p_len * d];
+        rng.fill_normal(&mut prompt, 1.0);
+        ServeRequest { id, prompt, n_gen }
+    };
+    // every 16th request is long (192-token prompt + 64 generated =
+    // max-len); the rest are short (8 + 16 = 24 tokens) — the ragged
+    // length mix a fixed per-slot cache wastes max-len bytes on
+    let requests: Vec<ServeRequest> = (0..64u64)
+        .map(|i| {
+            if i % 16 == 0 {
+                mk(i, 192, 64, &mut rng)
+            } else {
+                mk(i, 8, 16, &mut rng)
+            }
+        })
+        .collect();
+    let scfg = ServeConfig::default().with_max_batch(max_batch).with_page_tokens(page_tokens);
+    let sched = BatchScheduler::with_config(sb.clone(), scfg).unwrap();
+    let (outs, stats) = sched.run(requests.clone()).unwrap();
+    assert_eq!(stats.completed, 64, "kv_serve workload must complete cleanly");
+    let paged_bytes = stats.resident_kv_bytes;
+    // contiguous baseline: every resident slot holding K+V f32 rows
+    // preallocated out to max-len — what slot-owned caches cost
+    let contiguous_bytes = max_batch * max_len * d * 2 * 4;
+    let ratio = paged_bytes as f64 / contiguous_bytes as f64;
+    println!(
+        "resident KV: paged {paged_bytes} bytes (peak {} pages)  contiguous {contiguous_bytes} \
+         bytes  => {ratio:.3}x",
+        stats.pages_in_use
+    );
+
+    // admission throughput: whole-prompt prefill vs row-at-a-time —
+    // bitwise-equal outputs first, then the wallclock of each
+    let row_sched = BatchScheduler::with_config(sb.clone(), scfg.with_prefill_chunk(1)).unwrap();
+    let (row_outs, _) = row_sched.run(requests.clone()).unwrap();
+    let bitwise = outs.iter().zip(&row_outs).all(|(a, b)| a.id == b.id && a.result == b.result);
+    assert!(bitwise, "prefill chunking changed request bits");
+    let st_whole = bench(1, 3, || {
+        let _ = sched.run(requests.clone()).unwrap();
+    });
+    let st_row = bench(1, 3, || {
+        let _ = row_sched.run(requests.clone()).unwrap();
+    });
+    let speedup = st_row.mean_us / st_whole.mean_us;
+    println!(
+        "admission: row-at-a-time {:9.1}us  whole-prompt {:9.1}us  => {speedup:.2}x \
+         (outputs bitwise equal: {bitwise})",
+        st_row.mean_us, st_whole.mean_us
+    );
+
+    (
+        "kv_serve",
+        Value::obj(vec![
+            ("d", Value::Num(d as f64)),
+            ("requests", Value::Num(64.0)),
+            ("max_batch", Value::Num(max_batch as f64)),
+            ("page_tokens", Value::Num(page_tokens as f64)),
+            ("max_len", Value::Num(max_len as f64)),
+            ("long_requests", Value::Num(4.0)),
+            ("short_tokens", Value::Num(24.0)),
+            ("peak_pages", Value::Num(stats.pages_in_use as f64)),
+            ("paged_resident_bytes", Value::Num(paged_bytes as f64)),
+            ("contiguous_resident_bytes", Value::Num(contiguous_bytes as f64)),
+            ("resident_ratio", Value::Num(ratio)),
+            ("prefill_row_us", Value::Num(st_row.mean_us)),
+            ("prefill_whole_us", Value::Num(st_whole.mean_us)),
+            ("prefill_speedup", Value::Num(speedup)),
+            ("prefill_bitwise_equal", Value::Bool(bitwise)),
+        ]),
+    )
 }
 
 /// Scaling sweep: `apply_batch` under pool vs spawn dispatch across
@@ -1080,7 +1187,7 @@ fn train_durability_bench() -> (&'static str, Value) {
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(8.0)),
+        ("schema_version", Value::Num(9.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),
@@ -1105,6 +1212,7 @@ fn main() {
     results.push(serve_decode_bench());
     results.push(serve_robustness_bench());
     results.push(deep_decode_bench());
+    results.push(kv_serve_bench());
     results.push(train_durability_bench());
     write_perf_record(config, results);
     let Some(mut runner) = require_artifacts() else { return };

@@ -17,7 +17,7 @@ Also measures the ``scaling_sweep`` section: chunked ``apply_batch``
 per-region thread spawn, at d in {256, 1024, 4096} — the NumPy analog
 of the rust ``QFT_DISPATCH=spawn`` comparison.
 
-Emits ``BENCH_quanta_engine.json`` (schema_version 7, the same schema
+Emits ``BENCH_quanta_engine.json`` (schema_version 9, the same schema
 as the rust bench, ``substrate`` marks the producer).  Used to seed the
 perf record in containers without a rust toolchain; running the rust
 bench overwrites the file with native numbers.
@@ -268,7 +268,7 @@ def main():
     apply_flops = d * sum(DIMS[m] * DIMS[n] for m, n, _ in gates)
     record = {
         "bench": "quanta_engine",
-        "schema_version": 8,
+        "schema_version": 9,
         "substrate": "python-numpy-mirror",
         "note": (
             "Seed record measured by the NumPy mirrors "
@@ -276,7 +276,8 @@ def main():
             "results.scaling_sweep, python/bench/train_mirror.py for "
             "results.train_smoke + results.pool_vs_spawn + results.block_train + "
             "results.shard_sweep + results.serve_decode + "
-            "results.serve_robustness + results.deep_train + "
+            "results.serve_robustness + results.kv_serve + "
+            "results.deep_train + "
             "results.deep_decode + results.train_durability), each "
             "transcribing the rust loop structure of "
             "benches/perf_runtime.rs: seed = O(d) offset scan per gate per "
@@ -315,7 +316,7 @@ def main():
         },
     }
     # carry over the sections measured by train_mirror.py, so the two
-    # mirrors compose into one schema-8 record in either order — but
+    # mirrors compose into one schema-9 record in either order — but
     # only from a mirror-produced record (never relabel rust-native
     # timings as mirror provenance)
     out_path = Path(args.out)
@@ -324,8 +325,8 @@ def main():
             prev = json.loads(out_path.read_text())
             if prev.get("substrate") == "python-numpy-mirror":
                 for key in ("train_smoke", "pool_vs_spawn", "block_train", "shard_sweep",
-                            "serve_decode", "serve_robustness", "deep_train",
-                            "deep_decode", "train_durability"):
+                            "serve_decode", "serve_robustness", "kv_serve",
+                            "deep_train", "deep_decode", "train_durability"):
                     if key in prev.get("results", {}):
                         record["results"][key] = prev["results"][key]
         except (json.JSONDecodeError, OSError):

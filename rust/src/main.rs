@@ -80,7 +80,10 @@ fn usage() -> ExitCode {
                            [--prompt-len N] [--gen-len N] [--req-seed N]\n\
                            [--requests-file PATH|-] [--deadline N] [--token-budget N]\n\
                            [--queue-cap N] [--shed-policy reject-new|drop-oldest]\n\
-                           [--streaming] [--no-verify] [--strict] (stack flags must\n\
+                           [--kv-pages N] [--page-size N] [--prefill-chunk N]\n\
+                           [--streaming] [--no-verify] [--strict] (--kv-pages bounds\n\
+                           resident KV cache — exhaustion quarantines the offending\n\
+                           request; --page-size sets tokens per KV page; stack flags must\n\
                            match the train-block/train-deep run that produced --params;\n\
                            request-file rows may end in 'nan' to inject a poisoned\n\
                            prompt; SIGTERM/ctrl-c drains gracefully — in-flight\n\
@@ -681,7 +684,10 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
         .with_deadline(flag_or(flags, "deadline", 0)?)
         .with_token_budget(flag_or(flags, "token-budget", 0)?)
         .with_queue_cap(flag_or(flags, "queue-cap", 0)?)
-        .with_shed_policy(shed);
+        .with_shed_policy(shed)
+        .with_kv_pages(flag_or(flags, "kv-pages", 0)?)
+        .with_page_tokens(flag_or(flags, "page-size", quanta_ft::serve::default_page_tokens())?)
+        .with_prefill_chunk(flag_or(flags, "prefill-chunk", 0)?);
     let req_seed: u64 = flag_or(flags, "req-seed", 1)?;
     let mk = |id: u64, p_len: usize, n_gen: usize, stream_seed: u64| -> ServeRequest {
         let mut prompt = vec![0.0f32; p_len * d];
@@ -773,6 +779,8 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     t.row(vec!["decode steps".into(), stats.steps.to_string()]);
     t.row(vec!["tokens processed".into(), stats.tokens.to_string()]);
     t.row(vec!["peak batch".into(), stats.peak_batch.to_string()]);
+    t.row(vec!["peak kv pages".into(), stats.pages_in_use.to_string()]);
+    t.row(vec!["peak kv bytes".into(), stats.resident_kv_bytes.to_string()]);
     t.row(vec!["wallclock (s)".into(), format!("{:.3}", stats.wallclock_s)]);
     t.row(vec!["throughput (tokens/s)".into(), format!("{:.0}", stats.tokens_per_s())]);
     t.row(vec!["mean latency (steps)".into(), format!("{mean_latency:.1}")]);

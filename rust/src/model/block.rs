@@ -209,6 +209,36 @@ pub(crate) fn layer_norm(
     (y, xhat, rstd)
 }
 
+/// Forward-only rowwise layernorm into caller-owned scratch (`y` of
+/// `x.len()`), skipping the `xhat`/`rstd` tape the backward needs.
+/// The per-row arithmetic — mean, variance, `x̂ = (x − mean)·rstd`,
+/// `y = γ·x̂ + β`, all serial ascending — is kept literally identical
+/// to [`layer_norm`], so the serving decode path that reuses scratch
+/// through this entry stays bitwise equal to one that allocates.
+pub(crate) fn layer_norm_into(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let rows = x.len() / d;
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            var += (v - mean) * (v - mean);
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            let xh = (xr[j] - mean) * rs;
+            yr[j] = gamma[j] * xh + beta[j];
+        }
+    }
+}
+
 /// Layernorm backward (frozen affine — no `γ`/`β` gradients):
 /// `dx = rstd · (dŷ − mean(dŷ) − x̂ · mean(dŷ ⊙ x̂))`, `dŷ = dy ⊙ γ`.
 fn layer_norm_backward(
@@ -269,7 +299,11 @@ fn gelu_prime(u: f32) -> f32 {
 /// so the full panel forward ([`TransformerBlock::attention`]) and the
 /// KV-cache decode step (`serve::decode`) execute the same
 /// instructions in the same order — the decode-parity bitwise
-/// guarantee rests on this sharing, not on a tolerance.
+/// guarantee rests on this sharing, not on a tolerance.  The body is
+/// [`attn_row_segs`] over a single contiguous segment: the paged
+/// arena's segment walk and this contiguous entry are the *same
+/// function*, which is what makes paged ≡ contiguous bitwise rather
+/// than approximately.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attn_row(
     qrow: &[f32],
@@ -283,18 +317,56 @@ pub(crate) fn attn_row(
     prow: &mut [f32],
     crow: &mut [f32],
 ) {
+    let seg = std::iter::once((k, v, t + 1));
+    attn_row_segs(qrow, seg, row_stride, head_off, t, scale, scores, prow, crow);
+}
+
+/// [`attn_row`] generalized over a segmented K/V history: `segs`
+/// yields `(k_rows, v_rows, rows_in_segment)` contiguous chunks in
+/// logical order (row `r` of a segment lives at
+/// `r · row_stride + head_off`), together covering at least `t + 1`
+/// rows; the iterator is walked twice (scores pass, then the V
+/// accumulation) and so must be `Clone`.
+///
+/// The float operations and their order are *identical* to the
+/// single-segment case — scores ascending with running max, one
+/// exp/denominator sweep, ascending probability-weighted V adds — so
+/// splitting a history across pages (`serve::kv`) changes no output
+/// bit at any page size.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_row_segs<'a, I>(
+    qrow: &[f32],
+    segs: I,
+    row_stride: usize,
+    head_off: usize,
+    t: usize,
+    scale: f32,
+    scores: &mut [f32],
+    prow: &mut [f32],
+    crow: &mut [f32],
+) where
+    I: Iterator<Item = (&'a [f32], &'a [f32], usize)> + Clone,
+{
     let hd = qrow.len();
     let mut maxv = f32::NEG_INFINITY;
-    for (t2, slot) in scores.iter_mut().enumerate().take(t + 1) {
-        let kr = t2 * row_stride + head_off;
-        let krow = &k[kr..kr + hd];
-        let mut dot = 0.0f32;
-        for (a, b) in qrow.iter().zip(krow) {
-            dot += a * b;
+    let mut t2 = 0usize;
+    'score: for (kseg, _, rows) in segs.clone() {
+        for r in 0..rows {
+            if t2 > t {
+                break 'score;
+            }
+            let kr = r * row_stride + head_off;
+            let krow = &kseg[kr..kr + hd];
+            let mut dot = 0.0f32;
+            for (a, b) in qrow.iter().zip(krow) {
+                dot += a * b;
+            }
+            scores[t2] = dot * scale;
+            maxv = maxv.max(scores[t2]);
+            t2 += 1;
         }
-        *slot = dot * scale;
-        maxv = maxv.max(*slot);
     }
+    debug_assert!(t2 > t, "attn_row_segs: segments cover {t2} rows, need {}", t + 1);
     let mut denom = 0.0f32;
     for slot in scores.iter_mut().take(t + 1) {
         *slot = (*slot - maxv).exp();
@@ -303,11 +375,19 @@ pub(crate) fn attn_row(
     for (p, &e) in prow.iter_mut().zip(scores.iter()) {
         *p = e / denom;
     }
-    for (t2, &p) in prow.iter().enumerate() {
-        let vr = t2 * row_stride + head_off;
-        let vrow = &v[vr..vr + hd];
-        for (c, &vv) in crow.iter_mut().zip(vrow) {
-            *c += p * vv;
+    let mut t2 = 0usize;
+    'accum: for (_, vseg, rows) in segs {
+        for r in 0..rows {
+            if t2 > t {
+                break 'accum;
+            }
+            let p = prow[t2];
+            let vr = r * row_stride + head_off;
+            let vrow = &vseg[vr..vr + hd];
+            for (c, &vv) in crow.iter_mut().zip(vrow) {
+                *c += p * vv;
+            }
+            t2 += 1;
         }
     }
 }
@@ -331,23 +411,48 @@ pub(crate) fn mlp_panel(
     d_ff: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let mut u = vec![0.0f32; rows * d_ff];
-    gemm::gemm_into(h2, &w1_t.data, &mut u, d, d_ff);
+    let mut a = vec![0.0f32; rows * d_ff];
+    let mut m = vec![0.0f32; rows * d];
+    mlp_panel_into(h2, rows, w1_t, b1, w2_t, b2, d, d_ff, &mut u, &mut a, &mut m);
+    (m, u)
+}
+
+/// [`mlp_panel`] into caller-owned, pre-zeroed scratch: `u` and `a`
+/// of `rows × d_ff` (pre-activation and GELU), `m` of `rows × d` (the
+/// output).  One body shared by the allocating wrapper and the
+/// serving decode scratch path, so kernel and bit pattern are
+/// identical either way.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mlp_panel_into(
+    h2: &[f32],
+    rows: usize,
+    w1_t: &Tensor,
+    b1: &[f32],
+    w2_t: &Tensor,
+    b2: &[f32],
+    d: usize,
+    d_ff: usize,
+    u: &mut [f32],
+    a: &mut [f32],
+    m: &mut [f32],
+) {
+    gemm::gemm_into(h2, &w1_t.data, u, d, d_ff);
     for r in 0..rows {
         let urow = &mut u[r * d_ff..(r + 1) * d_ff];
         for (uv, &b) in urow.iter_mut().zip(b1) {
             *uv += b;
         }
     }
-    let a: Vec<f32> = u.iter().map(|&x| gelu(x)).collect();
-    let mut m = vec![0.0f32; rows * d];
-    gemm::gemm_into(&a, &w2_t.data, &mut m, d_ff, d);
+    for (av, &uv) in a.iter_mut().zip(u.iter()) {
+        *av = gelu(uv);
+    }
+    gemm::gemm_into(a, &w2_t.data, m, d_ff, d);
     for r in 0..rows {
         let mrow = &mut m[r * d..(r + 1) * d];
         for (mv, &b) in mrow.iter_mut().zip(b2) {
             *mv += b;
         }
     }
-    (m, u)
 }
 
 impl TransformerBlock {

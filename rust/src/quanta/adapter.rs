@@ -135,9 +135,26 @@ impl QuantaAdapter {
     /// scatter ([`CircuitPlan::apply_batch_residual_into`]) — no
     /// materialized circuit output, no separate axpy pass.
     pub fn apply_batch(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let mut y = self.base_product(xs, batch)?;
-        self.plan.apply_batch_residual_into(xs, batch, self.alpha, &mut y)?;
+        let mut y = vec![0.0f32; xs.len()];
+        self.apply_batch_into(xs, batch, &mut y)?;
         Ok(y)
+    }
+
+    /// [`QuantaAdapter::apply_batch`] into a caller-owned buffer
+    /// (overwritten, need not be pre-zeroed) — the serving decode
+    /// scratch path.  Same base GEMM, same fused residual, same bits.
+    pub fn apply_batch_into(&self, xs: &[f32], batch: usize, y: &mut [f32]) -> Result<()> {
+        let d = self.d();
+        if xs.len() != batch * d || y.len() != batch * d {
+            return Err(Error::Shape(format!(
+                "adapter apply: xs {} / out {} != batch {batch} * d {d}",
+                xs.len(),
+                y.len()
+            )));
+        }
+        y.fill(0.0);
+        gemm::gemm_into(xs, &self.base_t.data, y, d, d);
+        self.plan.apply_batch_residual_into(xs, batch, self.alpha, y)
     }
 
     /// Forward pass that also records the circuit tape for

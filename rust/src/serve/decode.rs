@@ -4,12 +4,26 @@
 //! the whole sequence per panel — fine for loss curves, quadratic
 //! nonsense for serving: generating token `t+1` would recompute
 //! projections and attention for all `t` earlier positions.  This
-//! module is the standard fix: each request keeps a grow-only
-//! [`DecodeState`] holding the K/V rows of every position it has
-//! already processed, and [`ServeBlock::decode_step`] runs **one new
+//! module is the standard fix: each request keeps a [`DecodeState`]
+//! holding a page table over the K/V rows of every position it has
+//! already processed (storage lives in the shared [`KvArena`] —
+//! DESIGN.md §14), and [`ServeBlock::decode_step`] runs **one new
 //! token per request** against that cache — projections and MLP over a
 //! `[requests, d]` panel, attention only between the new query row and
-//! the cached keys/values.
+//! the cached keys/values, walked page-run by page-run.
+//!
+//! Prompt admission has a batched counterpart: [`ServeBlock::prefill`]
+//! pushes a whole `[rows, d]` prompt chunk through forward-shaped
+//! panel GEMMs (the throughput win — one `L×d·d` multiply instead of
+//! `L` one-row multiplies) and then runs the same per-position
+//! [`attn_row_segs`] loop over the paged history, so a chunked
+//! prefill is **bitwise** the row-at-a-time decode of the same rows.
+//!
+//! All per-step allocations live in a caller-owned [`DecodeScratch`]
+//! (the scheduler owns one for its whole run): `ctx`/`x1`/`scores`/
+//! `prow` and the ~9 projection panels the PR 5 step allocated per
+//! iteration are now grow-only buffers, bitwise inert by construction
+//! (same kernels, pre-zeroed the same way).
 //!
 //! ## Merged vs streaming
 //!
@@ -28,83 +42,116 @@
 //! ## Parity contract
 //!
 //! The decode step reuses the block's own per-row pieces —
-//! `model::block::{layer_norm, attn_row, mlp_panel}` and the same
-//! borrowing GEMM / circuit engine kernels, whose per-row results are
-//! batch-size-invariant by the engine's chunking contract — so a
+//! `model::block::{layer_norm, attn_row, mlp_panel}` bodies and the
+//! same borrowing GEMM / circuit engine kernels, whose per-row results
+//! are batch-size-invariant by the engine's chunking contract — so a
 //! streaming decode step is **bitwise** equal to the corresponding row
 //! of `TransformerBlock::forward` over the same prefix, at any
-//! `QFT_THREADS` and any batch composition.  That bitwise equality
-//! (not a tolerance) is what makes the scheduler's outputs independent
-//! of arrival order and batch packing.
+//! `QFT_THREADS`, any batch composition, and any KV page size
+//! (`rust/tests/kv_props.rs`).  That bitwise equality (not a
+//! tolerance) is what makes the scheduler's outputs independent of
+//! arrival order and batch packing.
 
 use crate::compute::{gemm, pool};
-use crate::model::block::{attn_row, layer_norm, mlp_panel};
+use crate::model::block::{attn_row_segs, layer_norm_into, mlp_panel_into};
 use crate::model::TransformerBlock;
 use crate::quanta::QuantaAdapter;
+use crate::serve::kv::{KvArena, PageTable};
 use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
 
-/// Per-request decode state: the K/V rows of every position processed
-/// so far, plus the position counter.  Capacity is **grow-only** (amortized
-/// doubling, never shrinks), so a request slot reused across many
-/// requests ([`DecodeState::reset`]) stops allocating once it has seen
-/// its longest sequence.
-#[derive(Clone, Debug)]
+/// Per-request decode state: a page table over the K/V rows of every
+/// position processed so far, plus the cache-exhaustion flag.  Row
+/// storage lives in the [`KvArena`] the caller routes every operation
+/// through; the state itself is a few words, so thousands of sessions
+/// cost only their tokens in flight.
+#[derive(Clone, Debug, Default)]
 pub struct DecodeState {
-    d: usize,
-    /// Cached key/value rows, row-major `[len, d]` prefixes of a
-    /// `[cap, d]` allocation.
-    k: Vec<f32>,
-    v: Vec<f32>,
-    len: usize,
+    pub(crate) d: usize,
+    pub(crate) table: PageTable,
+    /// Set when a K/V push failed on arena exhaustion: the request
+    /// must be quarantined (`ServeError::CacheExhausted`); its panel
+    /// rows are skipped (never read) until the scheduler retires it.
+    pub(crate) failed: bool,
 }
 
 impl DecodeState {
     /// Empty state for width-`d` activations.
     pub fn new(d: usize) -> DecodeState {
-        DecodeState { d, k: Vec::new(), v: Vec::new(), len: 0 }
-    }
-
-    /// Empty state with room for `cap` positions pre-allocated.
-    pub fn with_capacity(d: usize, cap: usize) -> DecodeState {
-        DecodeState { d, k: Vec::with_capacity(cap * d), v: Vec::with_capacity(cap * d), len: 0 }
+        DecodeState { d, table: PageTable::new(), failed: false }
     }
 
     /// Positions cached so far (the next token decodes at this index).
     pub fn len(&self) -> usize {
-        self.len
+        self.table.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.table.is_empty()
     }
 
-    /// Positions the current allocation can hold without growing.
-    pub fn capacity(&self) -> usize {
-        if self.d == 0 {
-            0
-        } else {
-            self.k.capacity() / self.d
-        }
+    /// Whether a K/V push failed on arena exhaustion.
+    pub fn failed(&self) -> bool {
+        self.failed
     }
 
-    /// Forget the cached sequence but keep the allocation — request
-    /// slots in the scheduler are recycled through this.
-    pub fn reset(&mut self) {
-        self.k.clear();
-        self.v.clear();
-        self.len = 0;
+    /// Pages this request currently maps in the arena.
+    pub fn n_pages(&self) -> usize {
+        self.table.n_pages()
     }
 
-    /// Append one position's K/V rows (called by the decode step).
-    fn push(&mut self, krow: &[f32], vrow: &[f32]) {
-        debug_assert_eq!(krow.len(), self.d);
-        debug_assert_eq!(vrow.len(), self.d);
-        // Vec::extend doubles capacity — grow-only by construction
-        self.k.extend_from_slice(krow);
-        self.v.extend_from_slice(vrow);
-        self.len += 1;
+    /// Forget the cached sequence and return its pages to `arena` —
+    /// request slots in the scheduler are recycled through this.
+    pub fn reset(&mut self, arena: &mut KvArena) {
+        arena.release(&mut self.table);
+        self.failed = false;
     }
+
+    /// Copy-on-write fork: the clone shares every page (refcounts
+    /// bumped, zero rows copied) and diverges lazily on its first
+    /// push into a shared tail page — speculative snapshots and
+    /// shared system-prompt prefixes in O(pages).
+    pub fn fork(&self, arena: &mut KvArena) -> DecodeState {
+        DecodeState { d: self.d, table: arena.fork(&self.table), failed: self.failed }
+    }
+}
+
+/// Grow-only scratch for [`ServeBlock::decode_step`] /
+/// [`ServeBlock::prefill`]: every per-iteration allocation of the
+/// PR 5 step (LN outputs, Q/K/V/O panels, attention context and
+/// score/probability rows, MLP panels, the deep chaining panel) hoisted
+/// into one caller-owned struct.  Buffers are cleared and re-zeroed
+/// per call — same initial bytes as a fresh `vec![0.0; n]`, so reuse
+/// is bitwise inert (`serve_props` pins this).
+#[derive(Clone, Debug, Default)]
+pub struct DecodeScratch {
+    h1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    attn: Vec<f32>,
+    h2: Vec<f32>,
+    mlp_u: Vec<f32>,
+    mlp_a: Vec<f32>,
+    mlp_m: Vec<f32>,
+    scores: Vec<f32>,
+    prow: Vec<f32>,
+    /// Layer-chaining panel for deep stacks (`serve::model`).
+    pub(crate) chain: Vec<f32>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+}
+
+/// Reset `buf` to `n` zeros, reusing its allocation (grow-only).
+fn zeroed(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(n, 0.0);
+    &mut buf[..]
 }
 
 /// A projection in serving form: merged dense weight or live adapter.
@@ -119,14 +166,16 @@ enum Projection {
 }
 
 impl Projection {
-    fn apply(&self, xs: &[f32], rows: usize, d: usize) -> Result<Vec<f32>> {
+    /// Apply into caller scratch (`y` reset to `rows × d` zeros here):
+    /// same kernels as the allocating PR 5 path, same bits.
+    fn apply_into(&self, xs: &[f32], rows: usize, d: usize, y: &mut Vec<f32>) -> Result<()> {
+        let y = zeroed(y, rows * d);
         match self {
             Projection::Merged(wt) => {
-                let mut y = vec![0.0f32; rows * d];
-                gemm::gemm_into(xs, &wt.data, &mut y, d, d);
-                Ok(y)
+                gemm::gemm_into(xs, &wt.data, y, d, d);
+                Ok(())
             }
-            Projection::Streaming(a) => a.apply_batch(xs, rows),
+            Projection::Streaming(a) => a.apply_batch_into(xs, rows, y),
         }
     }
 }
@@ -226,24 +275,37 @@ impl ServeBlock {
     /// Decode one new token for each of `states.len()` concurrent
     /// requests: `xs` is the row-major `[requests, d]` panel of new
     /// inputs (`xs[i]` is request `i`'s token at position
-    /// `states[i].len()`), the per-request caches grow by one position,
-    /// and the returned panel holds each request's block output at its
-    /// new position.
+    /// `states[i].len()`), the per-request caches grow by one position
+    /// in `arena`, and `out` is reset to the `[requests, d]` panel of
+    /// block outputs at each request's new position.
     ///
     /// Projections and the MLP run as pooled panel GEMMs over all
     /// requests at once (`compute::gemm` / the circuit engine, both
     /// `QFT_THREADS`-invariant and per-row batch-invariant); attention
-    /// is the per-request ragged part — one [`attn_row`] call per head
-    /// against that request's cache, exactly the loop the full forward
-    /// runs for its final position.
+    /// is the per-request ragged part — one [`attn_row_segs`] walk per
+    /// head over that request's page runs, exactly the element order
+    /// the full forward uses for its final position.
+    ///
+    /// A state whose K/V push hits arena exhaustion is flagged
+    /// ([`DecodeState::failed`]) and its attention skipped (its output
+    /// row is unspecified and must not be consumed); every other row
+    /// is bitwise unaffected, because no kernel under the step reads
+    /// across rows.
     ///
     /// This is a fault-isolation boundary: a panic anywhere under the
     /// step (e.g. inside a pool worker's GEMM chunk) is converted to a
     /// structured [`Error::Compute`](crate::util::error::Error) on the
     /// caller via [`pool::catching`] instead of unwinding through the
     /// serving stack, and the pool remains usable for the next step.
-    pub fn decode_step(&self, states: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
-        let mut out = pool::catching(|| self.decode_step_inner(states, xs))?;
+    pub fn decode_step(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        states: &mut [&mut DecodeState],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        pool::catching(|| self.decode_step_inner(arena, scratch, states, xs, out))?;
         // `nan@decode:n` probe: poison the panel's first element — one
         // victim request turns non-finite mid-decode, which is exactly
         // the condition the scheduler's quarantine sweep must catch
@@ -255,10 +317,17 @@ impl ServeBlock {
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
-    fn decode_step_inner(&self, states: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
+    fn decode_step_inner(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        states: &mut [&mut DecodeState],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let rows = states.len();
         let d = self.d;
         if xs.len() != rows * d {
@@ -275,58 +344,192 @@ impl ServeBlock {
                 )));
             }
         }
-        if rows == 0 {
-            return Ok(Vec::new());
+        if arena.d() != d {
+            return Err(Error::Shape(format!(
+                "decode_step: arena has d {}, block has d {d}",
+                arena.d()
+            )));
         }
-        let (h1, _, _) = layer_norm(xs, &self.ln1_g, &self.ln1_b, d);
-        let q = self.wq.apply(&h1, rows, d)?;
-        let k = self.wk.apply(&h1, rows, d)?;
-        let v = self.wv.apply(&h1, rows, d)?;
-        // attention: append this position's K/V, then one attn_row per
-        // head against the request's own cache (ragged lengths — each
+        out.clear();
+        if rows == 0 {
+            return Ok(());
+        }
+        let h1 = zeroed(&mut scratch.h1, rows * d);
+        layer_norm_into(xs, &self.ln1_g, &self.ln1_b, d, h1);
+        self.wq.apply_into(h1, rows, d, &mut scratch.q)?;
+        self.wk.apply_into(h1, rows, d, &mut scratch.k)?;
+        self.wv.apply_into(h1, rows, d, &mut scratch.v)?;
+        // attention: append this position's K/V, then one attn walk per
+        // head over the request's own page runs (ragged lengths — each
         // request attends over its own history only)
         let (hd, scale) = (self.head_dim, 1.0 / (self.head_dim as f32).sqrt());
-        let mut ctx = vec![0.0f32; rows * d];
-        let mut scores: Vec<f32> = Vec::new();
-        let mut prow: Vec<f32> = Vec::new();
+        let ctx = zeroed(&mut scratch.ctx, rows * d);
         for (i, state) in states.iter_mut().enumerate() {
-            state.push(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
-            let t = state.len - 1;
-            if scores.len() < t + 1 {
-                scores.resize(t + 1, 0.0);
-                prow.resize(t + 1, 0.0);
+            if state.failed {
+                continue; // quarantine pending: row i is never consumed
+            }
+            let (krow, vrow) = (&scratch.k[i * d..(i + 1) * d], &scratch.v[i * d..(i + 1) * d]);
+            if arena.push(&mut state.table, krow, vrow).is_err() {
+                state.failed = true;
+                continue;
+            }
+            let t = state.table.len() - 1;
+            if scratch.scores.len() < t + 1 {
+                scratch.scores.resize(t + 1, 0.0);
+                scratch.prow.resize(t + 1, 0.0);
             }
             for h in 0..self.n_heads {
                 let off = h * hd;
-                let qrow = &q[i * d + off..i * d + off + hd];
-                attn_row(
+                let qrow = &scratch.q[i * d + off..i * d + off + hd];
+                attn_row_segs(
                     qrow,
-                    &state.k,
-                    &state.v,
+                    arena.runs(&state.table),
                     d,
                     off,
                     t,
                     scale,
-                    &mut scores,
-                    &mut prow[..t + 1],
+                    &mut scratch.scores,
+                    &mut scratch.prow[..t + 1],
                     &mut ctx[i * d + off..i * d + off + hd],
                 );
             }
         }
-        let attn_out = self.wo.apply(&ctx, rows, d)?;
-        let mut x1 = xs.to_vec();
-        for (o, &a) in x1.iter_mut().zip(&attn_out) {
+        self.wo.apply_into(ctx, rows, d, &mut scratch.attn)?;
+        out.extend_from_slice(xs);
+        for (o, &a) in out.iter_mut().zip(&scratch.attn) {
             *o += a;
         }
-        let (h2, _, _) = layer_norm(&x1, &self.ln2_g, &self.ln2_b, d);
-        // the block's own MLP body (mlp_panel is shared, like attn_row,
-        // so decode and forward stay instruction-identical)
-        let (m, _) =
-            mlp_panel(&h2, rows, &self.w1_t, &self.b1, &self.w2_t, &self.b2, d, self.d_ff);
-        for (o, &mv) in x1.iter_mut().zip(&m) {
+        let h2 = zeroed(&mut scratch.h2, rows * d);
+        layer_norm_into(out, &self.ln2_g, &self.ln2_b, d, h2);
+        // the block's own MLP body (mlp_panel_into is shared, like
+        // attn_row_segs, so decode and forward stay
+        // instruction-identical)
+        let u = zeroed(&mut scratch.mlp_u, rows * self.d_ff);
+        let a = zeroed(&mut scratch.mlp_a, rows * self.d_ff);
+        let m = zeroed(&mut scratch.mlp_m, rows * d);
+        mlp_panel_into(h2, rows, &self.w1_t, &self.b1, &self.w2_t, &self.b2, d, self.d_ff, u, a, m);
+        for (o, &mv) in out.iter_mut().zip(scratch.mlp_m.iter()) {
             *o += mv;
         }
-        Ok(x1)
+        Ok(())
+    }
+
+    /// Chunked prompt prefill for **one** request: process `rows`
+    /// consecutive prompt positions in a single forward-shaped pass —
+    /// LN and the Q/K/V/O/MLP panels batched over the whole chunk (the
+    /// admission-throughput win), all K/V rows pushed, then the same
+    /// per-position causal attention walk the one-row step runs.
+    /// `out` is reset to the `[rows, d]` panel of block outputs; the
+    /// chunk's last row is the request's next autoregressive input.
+    ///
+    /// **Bitwise** equal to feeding the same rows through
+    /// [`ServeBlock::decode_step`] one at a time: every kernel under
+    /// it is per-row batch-invariant, position `t` is pushed before
+    /// any position ≥ `t` attends, and the attention walk is bounded
+    /// to rows `0..=t` — same elements, same order
+    /// (`rust/tests/serve_props.rs` pins chunk sizes against the
+    /// row-at-a-time path).
+    ///
+    /// On arena exhaustion mid-chunk the state is flagged and the
+    /// remaining positions are skipped — the caller quarantines the
+    /// request without consuming `out`.
+    pub fn prefill(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        state: &mut DecodeState,
+        xs: &[f32],
+        rows: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        pool::catching(|| self.prefill_inner(arena, scratch, state, xs, rows, out))
+    }
+
+    fn prefill_inner(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        state: &mut DecodeState,
+        xs: &[f32],
+        rows: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let d = self.d;
+        if rows == 0 || xs.len() != rows * d {
+            return Err(Error::Shape(format!(
+                "prefill: xs len {} != rows {rows} * d {d}",
+                xs.len()
+            )));
+        }
+        if state.d != d || arena.d() != d {
+            return Err(Error::Shape(format!(
+                "prefill: state d {} / arena d {} != block d {d}",
+                state.d,
+                arena.d()
+            )));
+        }
+        out.clear();
+        let h1 = zeroed(&mut scratch.h1, rows * d);
+        layer_norm_into(xs, &self.ln1_g, &self.ln1_b, d, h1);
+        self.wq.apply_into(h1, rows, d, &mut scratch.q)?;
+        self.wk.apply_into(h1, rows, d, &mut scratch.k)?;
+        self.wv.apply_into(h1, rows, d, &mut scratch.v)?;
+        let t0 = state.table.len();
+        let (hd, scale) = (self.head_dim, 1.0 / (self.head_dim as f32).sqrt());
+        let ctx = zeroed(&mut scratch.ctx, rows * d);
+        if !state.failed {
+            // push the whole chunk's K/V first: position t0+j only
+            // ever attends rows 0..=t0+j, so pushing ahead changes no
+            // read — this is what lets Q/K/V batch over the chunk
+            for j in 0..rows {
+                let (krow, vrow) =
+                    (&scratch.k[j * d..(j + 1) * d], &scratch.v[j * d..(j + 1) * d]);
+                if arena.push(&mut state.table, krow, vrow).is_err() {
+                    state.failed = true;
+                    break;
+                }
+            }
+        }
+        if !state.failed {
+            let tmax = t0 + rows - 1;
+            if scratch.scores.len() < tmax + 1 {
+                scratch.scores.resize(tmax + 1, 0.0);
+                scratch.prow.resize(tmax + 1, 0.0);
+            }
+            for j in 0..rows {
+                let t = t0 + j;
+                for h in 0..self.n_heads {
+                    let off = h * hd;
+                    let qrow = &scratch.q[j * d + off..j * d + off + hd];
+                    attn_row_segs(
+                        qrow,
+                        arena.runs(&state.table),
+                        d,
+                        off,
+                        t,
+                        scale,
+                        &mut scratch.scores,
+                        &mut scratch.prow[..t + 1],
+                        &mut ctx[j * d + off..j * d + off + hd],
+                    );
+                }
+            }
+        }
+        self.wo.apply_into(ctx, rows, d, &mut scratch.attn)?;
+        out.extend_from_slice(xs);
+        for (o, &a) in out.iter_mut().zip(&scratch.attn) {
+            *o += a;
+        }
+        let h2 = zeroed(&mut scratch.h2, rows * d);
+        layer_norm_into(out, &self.ln2_g, &self.ln2_b, d, h2);
+        let u = zeroed(&mut scratch.mlp_u, rows * self.d_ff);
+        let a = zeroed(&mut scratch.mlp_a, rows * self.d_ff);
+        let m = zeroed(&mut scratch.mlp_m, rows * d);
+        mlp_panel_into(h2, rows, &self.w1_t, &self.b1, &self.w2_t, &self.b2, d, self.d_ff, u, a, m);
+        for (o, &mv) in out.iter_mut().zip(scratch.mlp_m.iter()) {
+            *o += mv;
+        }
+        Ok(())
     }
 
     /// Decode a whole teacher-forced sequence for one request: feed
@@ -334,6 +537,8 @@ impl ServeBlock {
     /// the incremental counterpart of
     /// [`TransformerBlock::forward`]`(xs, 1, seq)`, against which
     /// it is pinned per position by `rust/tests/serve_props.rs`.
+    /// Builds its own unbounded arena and scratch; the scheduler path
+    /// routes through a shared arena instead.
     pub fn decode_sequence(&self, xs: &[f32], seq: usize) -> Result<Vec<f32>> {
         let d = self.d;
         if seq == 0 || xs.len() != seq * d {
@@ -342,11 +547,20 @@ impl ServeBlock {
                 xs.len()
             )));
         }
-        let mut state = DecodeState::with_capacity(d, seq);
+        let mut arena = KvArena::unbounded(d);
+        let mut scratch = DecodeScratch::new();
+        let mut state = DecodeState::new(d);
         let mut out = Vec::with_capacity(seq * d);
+        let mut step = Vec::new();
         for t in 0..seq {
-            let y = self.decode_step(&mut [&mut state], &xs[t * d..(t + 1) * d])?;
-            out.extend_from_slice(&y);
+            self.decode_step(
+                &mut arena,
+                &mut scratch,
+                &mut [&mut state],
+                &xs[t * d..(t + 1) * d],
+                &mut step,
+            )?;
+            out.extend_from_slice(&step);
         }
         Ok(out)
     }
@@ -357,23 +571,22 @@ mod tests {
     use super::*;
 
     #[test]
-    fn decode_state_grow_only_and_reset() {
-        let mut s = DecodeState::with_capacity(4, 2);
+    fn decode_state_pages_and_reset() {
+        let mut arena = KvArena::new(4, 2, 0).unwrap();
+        let mut s = DecodeState::new(4);
         assert!(s.is_empty());
-        assert!(s.capacity() >= 2);
         for t in 0..9 {
-            s.push(&[t as f32; 4], &[-(t as f32); 4]);
+            arena.push(&mut s.table, &[t as f32; 4], &[-(t as f32); 4]).unwrap();
         }
         assert_eq!(s.len(), 9);
-        let cap = s.capacity();
-        assert!(cap >= 9);
-        s.reset();
+        assert_eq!(s.n_pages(), 5);
+        assert_eq!(arena.pages_in_use(), 5);
+        s.reset(&mut arena);
         assert_eq!(s.len(), 0);
-        assert_eq!(s.capacity(), cap, "reset must keep the allocation");
-        s.push(&[1.0; 4], &[2.0; 4]);
+        assert_eq!(arena.pages_in_use(), 0, "reset must return every page");
+        arena.push(&mut s.table, &[1.0; 4], &[2.0; 4]).unwrap();
         assert_eq!(s.len(), 1);
-        assert_eq!(&s.k[..4], &[1.0; 4]);
-        assert_eq!(&s.v[..4], &[2.0; 4]);
+        assert_eq!(arena.gather_k(&s.table), vec![1.0; 4]);
     }
 
     #[test]
@@ -384,11 +597,20 @@ mod tests {
         let block =
             TransformerBlock::init(&BlockConfig::standard(vec![2, 2], 2, 3), &mut rng).unwrap();
         let sb = ServeBlock::merged(&block).unwrap();
+        let mut arena = KvArena::unbounded(4);
+        let mut scratch = DecodeScratch::new();
+        let mut out = Vec::new();
         let mut st = DecodeState::new(4);
-        assert!(sb.decode_step(&mut [&mut st], &[0.0; 3]).is_err());
+        assert!(sb
+            .decode_step(&mut arena, &mut scratch, &mut [&mut st], &[0.0; 3], &mut out)
+            .is_err());
         let mut wrong = DecodeState::new(5);
-        assert!(sb.decode_step(&mut [&mut wrong], &[0.0; 5]).is_err());
+        assert!(sb
+            .decode_step(&mut arena, &mut scratch, &mut [&mut wrong], &[0.0; 5], &mut out)
+            .is_err());
         assert!(sb.decode_sequence(&[0.0; 4], 0).is_err());
-        assert_eq!(sb.decode_step(&mut [], &[]).unwrap(), Vec::<f32>::new());
+        assert!(sb.prefill(&mut arena, &mut scratch, &mut st, &[0.0; 4], 0, &mut out).is_err());
+        sb.decode_step(&mut arena, &mut scratch, &mut [], &[], &mut out).unwrap();
+        assert!(out.is_empty());
     }
 }

@@ -1,0 +1,460 @@
+//! Block-paged KV arena (DESIGN.md §14): bounded-memory serving.
+//!
+//! The PR 5 `DecodeState` owned a grow-only contiguous `[len, d]` K/V
+//! pair per request slot, so resident cache memory scaled with
+//! *slots × max-len* — a slot that once served a 256-token request
+//! kept 256 tokens of capacity forever, even while serving 4-token
+//! ones.  This module is the standard fix (vLLM-style paged
+//! attention, on the host substrate): one process-wide [`KvArena`] of
+//! fixed-size pages (`QFT_KV_PAGE` tokens per page), a LIFO free-list
+//! allocator, and per-request [`PageTable`]s mapping logical positions
+//! to pages.  Cache memory is bounded by **tokens in flight**: a
+//! retired request's pages return to the free list immediately, and a
+//! bounded arena (`--kv-pages`) turns would-be OOM into a structured
+//! [`CacheFull`] that the scheduler converts to
+//! `ServeError::CacheExhausted` — one request quarantined, the process
+//! and every other request untouched.
+//!
+//! ## Addressing
+//!
+//! Logical token `t` of a request lives in `table.pages[t / P]` at row
+//! `t % P` (`P` = [`KvArena::page_tokens`]).  Page `p`'s K rows occupy
+//! `arena.k[p·P·d .. (p+1)·P·d]` row-major (V likewise), so a page is
+//! itself a contiguous `[P, d]` panel and attention walks a request's
+//! history as a short run of contiguous segments
+//! ([`KvArena::runs`]).  The segment walk feeds
+//! `model::block::attn_row_segs`, which executes the *same float ops
+//! in the same order* as the contiguous path — paged decode is
+//! **bitwise** equal to contiguous decode at any page size
+//! (`rust/tests/kv_props.rs` pins page sizes {1, 4, 16} against a
+//! one-page arena and the full forward recompute, across
+//! `QFT_THREADS`).
+//!
+//! ## Copy-on-write forking
+//!
+//! [`KvArena::fork`] clones a page table by bumping each page's
+//! refcount — O(pages), no row copies — so speculative snapshots and
+//! shared system-prompt prefixes are nearly free.  Writes stay
+//! isolated lazily: [`KvArena::push`] into a tail page whose refcount
+//! is > 1 first copies that page's *filled prefix* to a fresh page
+//! (the only bytes ever copied), decrements the shared page, and
+//! retargets the writer's table.  Full pages are only ever read, so
+//! sharers never observe a writer's divergence.
+//!
+//! ## Exhaustion
+//!
+//! Allocation failure ([`CacheFull`]) is a *per-request* condition,
+//! not a process fault: the failed push leaves the table unchanged
+//! (the row is simply not appended), the owning `DecodeState` is
+//! flagged, and the scheduler's retire sweep quarantines exactly that
+//! request.  `QFT_FAULT=oom@alloc:n` forces the `n`-th page
+//! allocation to fail, which is how `fault_props` drives this path
+//! deterministically.
+
+use crate::util::error::{Error, Result};
+
+/// Default tokens per page: `QFT_KV_PAGE` if set, else 16.
+pub fn default_page_tokens() -> usize {
+    std::env::var("QFT_KV_PAGE")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(16)
+}
+
+/// The arena has no free page and may not grow: the request that
+/// asked must be quarantined (`ServeError::CacheExhausted`), everyone
+/// else keeps decoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheFull {
+    /// The arena's page budget at the time of the failure.
+    pub pages: usize,
+}
+
+/// A request's logical-position → page mapping.  Owned by the
+/// request's `DecodeState`; all row storage lives in the [`KvArena`].
+#[derive(Clone, Debug, Default)]
+pub struct PageTable {
+    pages: Vec<u32>,
+    len: usize,
+}
+
+impl PageTable {
+    pub fn new() -> PageTable {
+        PageTable::default()
+    }
+
+    /// Tokens stored (the next push lands at this logical position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pages currently mapped.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+/// Process-wide paged K/V storage: `n_pages × page_tokens × d` floats
+/// per side, a refcount per page, and a LIFO free list.  `max_pages`
+/// of 0 means unbounded (the blob grows on demand, amortized — the
+/// default for tests and single-request decode); a positive bound
+/// turns exhaustion into [`CacheFull`] instead of growth.
+#[derive(Clone, Debug)]
+pub struct KvArena {
+    d: usize,
+    page_tokens: usize,
+    max_pages: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Per-page refcount; 0 = free.  CoW sharing is any count > 1.
+    refcnt: Vec<u32>,
+    /// Free page ids, popped from the back.
+    free: Vec<u32>,
+    pages_in_use: usize,
+    peak_pages: usize,
+}
+
+impl KvArena {
+    /// Arena for width-`d` rows, `page_tokens` tokens per page,
+    /// bounded at `max_pages` pages (0 = unbounded).
+    pub fn new(d: usize, page_tokens: usize, max_pages: usize) -> Result<KvArena> {
+        if d == 0 || page_tokens == 0 {
+            return Err(Error::Config(format!(
+                "kv arena: degenerate d {d} / page_tokens {page_tokens}"
+            )));
+        }
+        Ok(KvArena {
+            d,
+            page_tokens,
+            max_pages,
+            k: Vec::new(),
+            v: Vec::new(),
+            refcnt: Vec::new(),
+            free: Vec::new(),
+            pages_in_use: 0,
+            peak_pages: 0,
+        })
+    }
+
+    /// Unbounded arena with the `QFT_KV_PAGE` default page size — what
+    /// single-request conveniences (`decode_sequence`) build
+    /// internally.
+    pub fn unbounded(d: usize) -> KvArena {
+        KvArena::new(d, default_page_tokens(), 0).expect("d > 0")
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Tokens per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Page budget (0 = unbounded).
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    /// Pages currently referenced by at least one table.
+    pub fn pages_in_use(&self) -> usize {
+        self.pages_in_use
+    }
+
+    /// High-water mark of [`KvArena::pages_in_use`] since the last
+    /// [`KvArena::reset_all`].
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// K+V bytes one page occupies.
+    pub fn page_bytes(&self) -> usize {
+        self.page_tokens * self.d * 2 * std::mem::size_of::<f32>()
+    }
+
+    /// Peak resident K/V bytes since the last reset — the
+    /// `ServeStats::resident_kv_bytes` gauge.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_pages * self.page_bytes()
+    }
+
+    /// Pages the backing blob has ever materialized (free or not).
+    pub fn allocated_pages(&self) -> usize {
+        self.refcnt.len()
+    }
+
+    fn page_elems(&self) -> usize {
+        self.page_tokens * self.d
+    }
+
+    /// Claim a page: free list first, then blob growth while under the
+    /// bound.  `oom@alloc:n` fault specs fail the `n`-th call here.
+    fn alloc_page(&mut self) -> std::result::Result<u32, CacheFull> {
+        if crate::util::fault::armed() {
+            if let Some(crate::util::fault::Fault::Oom) = crate::util::fault::probe("alloc") {
+                return Err(CacheFull { pages: self.max_pages });
+            }
+        }
+        let p = match self.free.pop() {
+            Some(p) => p,
+            None => {
+                let n = self.refcnt.len();
+                if self.max_pages > 0 && n >= self.max_pages {
+                    return Err(CacheFull { pages: self.max_pages });
+                }
+                let elems = self.page_elems();
+                self.k.resize((n + 1) * elems, 0.0);
+                self.v.resize((n + 1) * elems, 0.0);
+                self.refcnt.push(0);
+                n as u32
+            }
+        };
+        debug_assert_eq!(self.refcnt[p as usize], 0, "allocated a live page");
+        self.refcnt[p as usize] = 1;
+        self.pages_in_use += 1;
+        self.peak_pages = self.peak_pages.max(self.pages_in_use);
+        Ok(p)
+    }
+
+    /// Drop one reference to `p`; the last reference frees it.
+    fn unref_page(&mut self, p: u32) {
+        let r = &mut self.refcnt[p as usize];
+        debug_assert!(*r > 0, "unref of a free page");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(p);
+            self.pages_in_use -= 1;
+        }
+    }
+
+    /// Append one position's K/V rows to `table`.  On [`CacheFull`]
+    /// the table is left exactly as it was (no partial append).
+    pub fn push(
+        &mut self,
+        table: &mut PageTable,
+        krow: &[f32],
+        vrow: &[f32],
+    ) -> std::result::Result<(), CacheFull> {
+        debug_assert_eq!(krow.len(), self.d);
+        debug_assert_eq!(vrow.len(), self.d);
+        let slot = table.len % self.page_tokens;
+        if slot == 0 {
+            // new tail page
+            let p = self.alloc_page()?;
+            table.pages.push(p);
+        } else {
+            // copy-on-write: appending into a shared tail page would
+            // be visible to every fork, so copy the filled prefix to
+            // a private page first (the only rows CoW ever copies)
+            let tail = *table.pages.last().expect("slot > 0 implies a tail page");
+            if self.refcnt[tail as usize] > 1 {
+                let np = self.alloc_page()?;
+                let elems = self.page_elems();
+                let (src, dst) = (tail as usize * elems, np as usize * elems);
+                let filled = slot * self.d;
+                self.k.copy_within(src..src + filled, dst);
+                self.v.copy_within(src..src + filled, dst);
+                self.unref_page(tail);
+                *table.pages.last_mut().unwrap() = np;
+            }
+        }
+        let tail = *table.pages.last().unwrap() as usize;
+        let off = tail * self.page_elems() + slot * self.d;
+        self.k[off..off + self.d].copy_from_slice(krow);
+        self.v[off..off + self.d].copy_from_slice(vrow);
+        table.len += 1;
+        Ok(())
+    }
+
+    /// Share `table`'s history: bump every page's refcount and return
+    /// an independent table over the same pages.  O(pages), zero row
+    /// copies; divergence is handled lazily by [`KvArena::push`]'s
+    /// CoW rule.
+    pub fn fork(&mut self, table: &PageTable) -> PageTable {
+        for &p in &table.pages {
+            self.refcnt[p as usize] += 1;
+        }
+        PageTable { pages: table.pages.clone(), len: table.len }
+    }
+
+    /// Return every page `table` references (refcount-driven — shared
+    /// pages survive until their last holder releases) and empty the
+    /// table.
+    pub fn release(&mut self, table: &mut PageTable) {
+        for i in 0..table.pages.len() {
+            let p = table.pages[i];
+            self.unref_page(p);
+        }
+        table.pages.clear();
+        table.len = 0;
+    }
+
+    /// Forget every table and make all materialized pages free again,
+    /// resetting the peak gauge.  Only valid when no live `PageTable`
+    /// will be used afterwards — the scheduler calls this at the top
+    /// of each `run`, where all sessions are (re)built fresh.
+    pub fn reset_all(&mut self) {
+        let n = self.refcnt.len();
+        self.refcnt.iter_mut().for_each(|r| *r = 0);
+        // descending stack so pops hand out pages in ascending order
+        self.free = (0..n as u32).rev().collect();
+        self.pages_in_use = 0;
+        self.peak_pages = 0;
+    }
+
+    /// Contiguous `(k, v, rows)` segments covering `table`'s history
+    /// in logical order — the iterator `attn_row_segs` walks twice
+    /// (scores pass, V pass).  Cloning is O(1).
+    pub fn runs<'a>(&'a self, table: &'a PageTable) -> PageRuns<'a> {
+        PageRuns {
+            k: &self.k,
+            v: &self.v,
+            pages: &table.pages,
+            page_tokens: self.page_tokens,
+            page_elems: self.page_elems(),
+            remaining: table.len,
+            idx: 0,
+        }
+    }
+
+    /// Copy `table`'s K rows into one contiguous `[len, d]` panel —
+    /// test/debug helper for byte-level CoW assertions.
+    pub fn gather_k(&self, table: &PageTable) -> Vec<f32> {
+        let mut out = Vec::with_capacity(table.len * self.d);
+        for (kseg, _, rows) in self.runs(table) {
+            out.extend_from_slice(&kseg[..rows * self.d]);
+        }
+        out
+    }
+}
+
+/// Iterator over a request's K/V history as contiguous page segments:
+/// yields `(k_rows, v_rows, rows_in_segment)` with rows laid out
+/// `[rows, d]` row-major inside each segment.
+#[derive(Clone)]
+pub struct PageRuns<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    pages: &'a [u32],
+    page_tokens: usize,
+    page_elems: usize,
+    remaining: usize,
+    idx: usize,
+}
+
+impl<'a> Iterator for PageRuns<'a> {
+    type Item = (&'a [f32], &'a [f32], usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let p = self.pages[self.idx] as usize;
+        self.idx += 1;
+        let rows = self.remaining.min(self.page_tokens);
+        self.remaining -= rows;
+        let off = p * self.page_elems;
+        let n = rows * (self.page_elems / self.page_tokens);
+        Some((&self.k[off..off + n], &self.v[off..off + n], rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_alloc_free_and_reuse() {
+        let mut a = KvArena::new(3, 2, 0).unwrap();
+        let mut t = PageTable::new();
+        for i in 0..5 {
+            a.push(&mut t, &[i as f32; 3], &[-(i as f32); 3]).unwrap();
+        }
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.n_pages(), 3, "5 tokens at 2/page = 3 pages");
+        assert_eq!(a.pages_in_use(), 3);
+        assert_eq!(a.peak_pages(), 3);
+        let blob = a.allocated_pages();
+        a.release(&mut t);
+        assert_eq!(t.len(), 0);
+        assert_eq!(a.pages_in_use(), 0);
+        assert_eq!(a.allocated_pages(), blob, "release keeps the blob");
+        // a new request reuses freed pages, no blob growth
+        let mut t2 = PageTable::new();
+        for i in 0..6 {
+            a.push(&mut t2, &[i as f32; 3], &[0.0; 3]).unwrap();
+        }
+        assert_eq!(a.allocated_pages(), blob);
+        assert_eq!(a.gather_k(&t2), (0..6).flat_map(|i| [i as f32; 3]).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_arena_reports_cache_full_without_corrupting_the_table() {
+        let mut a = KvArena::new(2, 2, 2).unwrap(); // 4 tokens max
+        let mut t = PageTable::new();
+        for i in 0..4 {
+            a.push(&mut t, &[i as f32; 2], &[0.0; 2]).unwrap();
+        }
+        let err = a.push(&mut t, &[9.0; 2], &[9.0; 2]).unwrap_err();
+        assert_eq!(err, CacheFull { pages: 2 });
+        assert_eq!(t.len(), 4, "failed push must not grow the table");
+        assert_eq!(a.gather_k(&t).len(), 8);
+        // freeing makes the same arena serve the next request
+        a.release(&mut t);
+        let mut t2 = PageTable::new();
+        a.push(&mut t2, &[1.0; 2], &[1.0; 2]).unwrap();
+    }
+
+    #[test]
+    fn fork_shares_pages_and_cow_isolates_the_writer() {
+        let mut a = KvArena::new(2, 4, 0).unwrap();
+        let mut w = PageTable::new();
+        for i in 0..6 {
+            a.push(&mut w, &[i as f32; 2], &[i as f32; 2]).unwrap();
+        }
+        let r = a.fork(&w);
+        assert_eq!(a.pages_in_use(), 2, "fork must not copy pages");
+        let before = a.gather_k(&r);
+        // writer diverges: tail page (refcnt 2) is CoW-copied, full
+        // page stays shared
+        a.push(&mut w, &[100.0; 2], &[100.0; 2]).unwrap();
+        assert_eq!(a.pages_in_use(), 3, "CoW copies exactly the tail page");
+        assert_eq!(a.gather_k(&r), before, "sharer's bytes must not move");
+        assert_eq!(a.gather_k(&w)[12..14], [100.0; 2]);
+        // refcount-driven reclaim: releasing both frees everything
+        let mut r = r;
+        a.release(&mut w);
+        assert!(a.pages_in_use() > 0, "sharer still holds pages");
+        a.release(&mut r);
+        assert_eq!(a.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn reset_all_reclaims_everything() {
+        let mut a = KvArena::new(2, 1, 0).unwrap();
+        let mut t = PageTable::new();
+        for _ in 0..7 {
+            a.push(&mut t, &[1.0; 2], &[2.0; 2]).unwrap();
+        }
+        assert_eq!(a.peak_pages(), 7);
+        a.reset_all();
+        assert_eq!(a.pages_in_use(), 0);
+        assert_eq!(a.peak_pages(), 0);
+        assert_eq!(a.allocated_pages(), 7, "blob is kept for reuse");
+        let mut t2 = PageTable::new();
+        a.push(&mut t2, &[0.0; 2], &[0.0; 2]).unwrap();
+        assert_eq!(a.allocated_pages(), 7);
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        assert!(KvArena::new(0, 4, 0).is_err());
+        assert!(KvArena::new(4, 0, 0).is_err());
+    }
+}

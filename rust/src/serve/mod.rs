@@ -1,41 +1,51 @@
-//! Serving subsystem (DESIGN.md §10): KV-cache incremental decode for
-//! trained transformer blocks, and continuous batching over many
-//! concurrent requests.
+//! Serving subsystem (DESIGN.md §10, §14): paged-KV incremental decode
+//! for trained transformer blocks, and continuous batching over many
+//! concurrent requests under a bounded cache budget.
 //!
 //! The train→merge→serve pipeline: `quanta-ft train-block` fine-tunes
 //! the per-projection circuits, `AdapterSet::merge_all()` folds them
 //! into dense weights (the paper's zero-inference-overhead claim), and
 //! this layer serves the merged block — [`ServeBlock`] snapshots the
 //! deployment (merged GEMM fast path, or the streaming-adapter
-//! reference it is pinned against), [`DecodeState`] is the per-request
-//! grow-only K/V cache, and [`BatchScheduler`] packs ragged concurrent
-//! requests into pooled panel matmuls with admit/retire between steps.
+//! reference it is pinned against), [`DecodeState`] maps a request's
+//! K/V history through a [`PageTable`] into the one process-wide
+//! [`KvArena`] of fixed-size pages, and [`BatchScheduler`] packs
+//! ragged concurrent requests into pooled panel matmuls with
+//! admit/retire between steps, prompt admission running as chunked
+//! prefill.  Resident cache memory is bounded by tokens in flight
+//! (`--kv-pages` makes the bound hard), and [`KvArena::fork`] shares
+//! prefix pages copy-on-write.
 //!
 //! Requests are individually fault-isolated (DESIGN.md §11): each
 //! [`ServeOutput`] carries success-or-[`ServeError`], lifecycle limits
 //! (step deadline, token budget, bounded intake queue with a
-//! [`ShedPolicy`]) live on [`ServeConfig`], and healthy requests'
-//! outputs stay bitwise identical to a run without the faulty ones.
+//! [`ShedPolicy`], KV page budget) live on [`ServeConfig`], and
+//! healthy requests' outputs stay bitwise identical to a run without
+//! the faulty ones — cache exhaustion included.
 //!
 //! Depth-N deployments go through the same machinery: [`ServeModel`]
 //! stacks per-layer [`ServeBlock`]s, [`SessionState`] bundles the
-//! per-layer caches behind one request slot, and [`BatchScheduler`] is
-//! generic over the small [`DecodeEngine`] trait both deployments
-//! implement — the scheduler loop, error domains, deadlines, and shed
-//! policies are depth-blind.
+//! per-layer caches behind one request slot (all paging out of the
+//! same arena), and [`BatchScheduler`] is generic over the small
+//! [`DecodeEngine`] trait both deployments implement — the scheduler
+//! loop, error domains, deadlines, and shed policies are depth-blind.
 //!
 //! Exposed on the CLI as `quanta-ft serve` (`--layers N` for deep
-//! stacks); properties (decode ≡ full-recompute per position, merged ≡
-//! streaming at 1e-5, scheduler invariance under arrival order /
-//! `QFT_THREADS` / dispatch mode, per-request isolation of mixed
-//! batches) live in `rust/tests/serve_props.rs` and, at depth N,
-//! `rust/tests/deep_props.rs`.
+//! stacks; `--kv-pages`, `--page-size`, `--prefill-chunk` for the
+//! cache budget); properties (decode ≡ full-recompute per position,
+//! merged ≡ streaming at 1e-5, paged ≡ contiguous bitwise at every
+//! page size, scheduler invariance under arrival order / `QFT_THREADS`
+//! / dispatch mode, per-request isolation of mixed batches) live in
+//! `rust/tests/serve_props.rs`, `rust/tests/kv_props.rs` and, at depth
+//! N, `rust/tests/deep_props.rs`.
 
 pub mod decode;
+pub mod kv;
 pub mod model;
 pub mod scheduler;
 
-pub use decode::{DecodeState, ServeBlock};
+pub use decode::{DecodeScratch, DecodeState, ServeBlock};
+pub use kv::{default_page_tokens, CacheFull, KvArena, PageTable};
 pub use model::{DecodeEngine, ServeModel, SessionState};
 pub use scheduler::{
     BatchScheduler, ServeConfig, ServeError, ServeOutput, ServeRequest, ServeStats, ShedPolicy,

@@ -3,23 +3,28 @@
 //! continuous-batching scheduler drive a single block or a deep stack
 //! through the same loop.
 //!
-//! ## One session, N caches
+//! ## One session, N caches, one arena
 //!
 //! Each layer of a deep model attends over *its own* history — layer
 //! `l`'s K/V rows are projections of layer `l−1`'s outputs — so a
 //! request against a depth-N model needs N per-layer [`DecodeState`]s.
 //! [`SessionState`] bundles them behind the single slot the scheduler
-//! manages: admit/retire/recycle logic never learns about depth.
+//! manages: admit/retire/recycle logic never learns about depth.  All
+//! N page tables draw from the **same** [`KvArena`] (the scheduler
+//! owns exactly one), so the page budget bounds total resident cache
+//! across layers and requests at once.
 //!
 //! ## The engine trait
 //!
-//! [`BatchScheduler`](crate::serve::BatchScheduler) needs exactly
-//! three things from whatever it drives: the activation width
+//! [`BatchScheduler`](crate::serve::BatchScheduler) needs a handful of
+//! things from whatever it drives: the activation width
 //! ([`DecodeEngine::d`]), a batched one-token step
-//! ([`DecodeEngine::decode_step`]), and whether the deployment runs
-//! merged weights ([`DecodeEngine::is_merged`]) — plus session
-//! construction so retired slots can be recycled.  [`ServeBlock`]
-//! (session = one [`DecodeState`]) and [`ServeModel`] (session = one
+//! ([`DecodeEngine::decode_step`]), a chunked prompt admission pass
+//! ([`DecodeEngine::prefill`]), whether the deployment runs merged
+//! weights ([`DecodeEngine::is_merged`]) — plus session construction /
+//! recycling and the cache-exhaustion flag
+//! ([`DecodeEngine::session_failed`]).  [`ServeBlock`] (session = one
+//! [`DecodeState`]) and [`ServeModel`] (session = one
 //! [`SessionState`]) both implement it, so the PR 6 error domains,
 //! deadlines, token budgets, and shed policies apply to depth-N
 //! serving verbatim — same code, not same-shaped code.
@@ -32,16 +37,19 @@
 //! chained, so the PR 5 bitwise decode-parity argument applies per
 //! layer: streaming deep decode ≡ deep forward recompute **bitwise**,
 //! and merged ≡ streaming at the usual 1e-5×scale
-//! (`rust/tests/deep_props.rs`).
+//! (`rust/tests/deep_props.rs`).  [`ServeModel::prefill`] is the
+//! per-layer chunked prefill chained the same way.
 
 use crate::model::DeepModel;
-use crate::serve::decode::{DecodeState, ServeBlock};
+use crate::serve::decode::{DecodeScratch, DecodeState, ServeBlock};
+use crate::serve::kv::KvArena;
 use crate::util::error::{Error, Result};
 
 /// What the continuous-batching scheduler needs from a deployment.
 /// One session holds everything a single request slot must keep
-/// between steps (K/V caches at every layer); the engine itself is
-/// immutable and shared by all slots.
+/// between steps (page tables at every layer); the engine itself is
+/// immutable and shared by all slots, and all K/V storage lives in
+/// the caller's [`KvArena`].
 pub trait DecodeEngine {
     /// Per-request state behind one scheduler slot.
     type Session;
@@ -56,15 +64,43 @@ pub trait DecodeEngine {
     /// Fresh empty session for a new slot.
     fn new_session(&self) -> Self::Session;
 
-    /// Forget a session's history but keep its allocations (slot
-    /// recycling — see [`DecodeState::reset`]).
-    fn reset_session(&self, s: &mut Self::Session);
+    /// Forget a session's history, returning its pages to `arena`
+    /// (slot recycling — see [`DecodeState::reset`]).
+    fn reset_session(&self, s: &mut Self::Session, arena: &mut KvArena);
+
+    /// Whether any of the session's K/V pushes failed on arena
+    /// exhaustion — the scheduler quarantines such a request with
+    /// `ServeError::CacheExhausted`.
+    fn session_failed(s: &Self::Session) -> bool;
 
     /// Decode one new token for each of `sessions.len()` concurrent
     /// requests; `xs` is the row-major `[requests, d]` panel of new
-    /// inputs, and the returned panel holds each request's output at
-    /// its new position.
-    fn decode_step(&self, sessions: &mut [&mut Self::Session], xs: &[f32]) -> Result<Vec<f32>>;
+    /// inputs, and `out` is reset to the panel of each request's
+    /// output at its new position.
+    fn decode_step(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        sessions: &mut [&mut Self::Session],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Process `rows` consecutive prompt positions of **one** request
+    /// in a single batched pass; `out` is reset to the `[rows, d]`
+    /// output panel (the last row is the request's first generated
+    /// vector when the prompt ends here).  Bitwise equal to feeding
+    /// the rows one at a time through
+    /// [`decode_step`](DecodeEngine::decode_step).
+    fn prefill(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        session: &mut Self::Session,
+        xs: &[f32],
+        rows: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
 }
 
 impl DecodeEngine for ServeBlock {
@@ -82,17 +118,41 @@ impl DecodeEngine for ServeBlock {
         DecodeState::new(ServeBlock::d(self))
     }
 
-    fn reset_session(&self, s: &mut DecodeState) {
-        s.reset();
+    fn reset_session(&self, s: &mut DecodeState, arena: &mut KvArena) {
+        s.reset(arena);
     }
 
-    fn decode_step(&self, sessions: &mut [&mut DecodeState], xs: &[f32]) -> Result<Vec<f32>> {
-        ServeBlock::decode_step(self, sessions, xs)
+    fn session_failed(s: &DecodeState) -> bool {
+        s.failed()
+    }
+
+    fn decode_step(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        sessions: &mut [&mut DecodeState],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ServeBlock::decode_step(self, arena, scratch, sessions, xs, out)
+    }
+
+    fn prefill(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        session: &mut DecodeState,
+        xs: &[f32],
+        rows: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ServeBlock::prefill(self, arena, scratch, session, xs, rows, out)
     }
 }
 
 /// Per-request state for a depth-N deployment: one [`DecodeState`]
-/// per layer behind a single scheduler slot.
+/// per layer behind a single scheduler slot, all paging out of one
+/// shared arena.
 #[derive(Clone, Debug)]
 pub struct SessionState {
     layers: Vec<DecodeState>,
@@ -117,15 +177,31 @@ impl SessionState {
         self.len() == 0
     }
 
-    /// Forget every layer's cache, keep every allocation.
-    pub fn reset(&mut self) {
+    /// Whether any layer hit arena exhaustion mid-push.
+    pub fn failed(&self) -> bool {
+        self.layers.iter().any(|s| s.failed())
+    }
+
+    /// Forget every layer's cache, returning all pages to `arena`.
+    pub fn reset(&mut self, arena: &mut KvArena) {
         for s in &mut self.layers {
-            s.reset();
+            s.reset(arena);
         }
     }
 
-    fn layer_mut(&mut self, l: usize) -> &mut DecodeState {
+    /// Copy-on-write fork across every layer — see
+    /// [`DecodeState::fork`].
+    pub fn fork(&self, arena: &mut KvArena) -> SessionState {
+        SessionState { layers: self.layers.iter().map(|s| s.fork(arena)).collect() }
+    }
+
+    pub(crate) fn layer_mut(&mut self, l: usize) -> &mut DecodeState {
         &mut self.layers[l]
+    }
+
+    #[cfg(test)]
+    pub(crate) fn layer(&self, l: usize) -> &DecodeState {
+        &self.layers[l]
     }
 }
 
@@ -166,15 +242,7 @@ impl ServeModel {
         self.blocks.iter().all(|b| b.is_merged())
     }
 
-    /// Decode one new token for each concurrent request through the
-    /// whole stack: layer `l`'s [`ServeBlock::decode_step`] consumes
-    /// layer `l−1`'s output panel, and each request's session advances
-    /// one position at every layer.
-    pub fn decode_step(
-        &self,
-        sessions: &mut [&mut SessionState],
-        xs: &[f32],
-    ) -> Result<Vec<f32>> {
+    fn check_sessions(&self, sessions: &[&mut SessionState]) -> Result<()> {
         for (i, s) in sessions.iter().enumerate() {
             if s.depth() != self.depth() {
                 return Err(Error::Shape(format!(
@@ -184,18 +252,97 @@ impl ServeModel {
                 )));
             }
         }
-        let mut panel = xs.to_vec();
+        Ok(())
+    }
+
+    /// Decode one new token for each concurrent request through the
+    /// whole stack: layer `l`'s [`ServeBlock::decode_step`] consumes
+    /// layer `l−1`'s output panel, and each request's session advances
+    /// one position at every layer.  A session that exhausts the arena
+    /// at layer `l` is flagged and skipped by every later layer (its
+    /// states stop advancing); other sessions are bitwise unaffected.
+    pub fn decode_step(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        sessions: &mut [&mut SessionState],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.check_sessions(sessions)?;
+        let depth = self.depth();
+        scratch.chain.clear();
+        scratch.chain.extend_from_slice(xs);
         for (l, blk) in self.blocks.iter().enumerate() {
-            let mut layer_states: Vec<&mut DecodeState> =
-                sessions.iter_mut().map(|s| s.layer_mut(l)).collect();
-            panel = blk.decode_step(&mut layer_states, &panel)?;
+            let input = std::mem::take(&mut scratch.chain);
+            let r = {
+                let mut layer_states: Vec<&mut DecodeState> =
+                    sessions.iter_mut().map(|s| s.layer_mut(l)).collect();
+                blk.decode_step(arena, scratch, &mut layer_states, &input, out)
+            };
+            scratch.chain = input;
+            r?;
+            // a layer-l exhaustion must stop the deeper layers too, or
+            // the session's caches fall out of lockstep and leak pages
+            for s in sessions.iter_mut() {
+                if s.layers[l].failed() {
+                    for deeper in &mut s.layers[l + 1..] {
+                        deeper.failed = true;
+                    }
+                }
+            }
+            if l + 1 < depth {
+                std::mem::swap(&mut scratch.chain, out);
+            }
         }
-        Ok(panel)
+        Ok(())
+    }
+
+    /// Chunked prompt prefill through the whole stack for one
+    /// request: layer `l`'s [`ServeBlock::prefill`] consumes layer
+    /// `l−1`'s chunk output panel.  Bitwise equal to row-at-a-time
+    /// deep decode of the same rows, by the per-layer argument.
+    pub fn prefill(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        session: &mut SessionState,
+        xs: &[f32],
+        rows: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if session.depth() != self.depth() {
+            return Err(Error::Shape(format!(
+                "deep prefill: session has depth {}, model has {}",
+                session.depth(),
+                self.depth()
+            )));
+        }
+        let depth = self.depth();
+        scratch.chain.clear();
+        scratch.chain.extend_from_slice(xs);
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let input = std::mem::take(&mut scratch.chain);
+            let r = blk.prefill(arena, scratch, session.layer_mut(l), &input, rows, out);
+            scratch.chain = input;
+            r?;
+            if session.layers[l].failed() {
+                for deeper in &mut session.layers[l + 1..] {
+                    deeper.failed = true;
+                }
+                return Ok(());
+            }
+            if l + 1 < depth {
+                std::mem::swap(&mut scratch.chain, out);
+            }
+        }
+        Ok(())
     }
 
     /// Decode a whole teacher-forced sequence for one request — the
     /// incremental counterpart of [`DeepModel::forward`]`(xs, 1, seq)`,
     /// pinned against it per position by `rust/tests/deep_props.rs`.
+    /// Builds its own unbounded arena and scratch.
     pub fn decode_sequence(&self, xs: &[f32], seq: usize) -> Result<Vec<f32>> {
         let d = self.d();
         if seq == 0 || xs.len() != seq * d {
@@ -204,11 +351,20 @@ impl ServeModel {
                 xs.len()
             )));
         }
+        let mut arena = KvArena::unbounded(d);
+        let mut scratch = DecodeScratch::new();
         let mut session = SessionState::new(d, self.depth());
         let mut out = Vec::with_capacity(seq * d);
+        let mut step = Vec::new();
         for t in 0..seq {
-            let y = self.decode_step(&mut [&mut session], &xs[t * d..(t + 1) * d])?;
-            out.extend_from_slice(&y);
+            self.decode_step(
+                &mut arena,
+                &mut scratch,
+                &mut [&mut session],
+                &xs[t * d..(t + 1) * d],
+                &mut step,
+            )?;
+            out.extend_from_slice(&step);
         }
         Ok(out)
     }
@@ -229,12 +385,35 @@ impl DecodeEngine for ServeModel {
         SessionState::new(ServeModel::d(self), self.depth())
     }
 
-    fn reset_session(&self, s: &mut SessionState) {
-        s.reset();
+    fn reset_session(&self, s: &mut SessionState, arena: &mut KvArena) {
+        s.reset(arena);
     }
 
-    fn decode_step(&self, sessions: &mut [&mut SessionState], xs: &[f32]) -> Result<Vec<f32>> {
-        ServeModel::decode_step(self, sessions, xs)
+    fn session_failed(s: &SessionState) -> bool {
+        s.failed()
+    }
+
+    fn decode_step(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        sessions: &mut [&mut SessionState],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ServeModel::decode_step(self, arena, scratch, sessions, xs, out)
+    }
+
+    fn prefill(
+        &self,
+        arena: &mut KvArena,
+        scratch: &mut DecodeScratch,
+        session: &mut SessionState,
+        xs: &[f32],
+        rows: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ServeModel::prefill(self, arena, scratch, session, xs, rows, out)
     }
 }
 
@@ -272,24 +451,53 @@ mod tests {
         assert!(!sm.is_merged());
         assert_eq!(sm.depth(), 3);
         let d = sm.d();
+        let mut arena = KvArena::unbounded(d);
+        let mut scratch = DecodeScratch::new();
+        let mut out = Vec::new();
         let mut session = sm.new_session();
         assert!(session.is_empty());
         for t in 0..4 {
             let xs = vec![0.1 * (t as f32 + 1.0); d];
-            sm.decode_step(&mut [&mut session], &xs).unwrap();
+            sm.decode_step(&mut arena, &mut scratch, &mut [&mut session], &xs, &mut out).unwrap();
         }
         assert_eq!(session.len(), 4);
         for l in 0..3 {
-            assert_eq!(session.layers[l].len(), 4, "layer {l} cache out of lockstep");
+            assert_eq!(session.layer(l).len(), 4, "layer {l} cache out of lockstep");
         }
-        sm.reset_session(&mut session);
+        sm.reset_session(&mut session, &mut arena);
         assert!(session.is_empty());
+        assert_eq!(arena.pages_in_use(), 0, "reset must return every layer's pages");
         // depth-mismatched session and bad panel shapes are rejected
         let mut shallow = SessionState::new(d, 2);
         let row = vec![0.0f32; d];
-        assert!(sm.decode_step(&mut [&mut shallow], &row).is_err());
+        assert!(sm
+            .decode_step(&mut arena, &mut scratch, &mut [&mut shallow], &row, &mut out)
+            .is_err());
         let mut ok = sm.new_session();
-        assert!(sm.decode_step(&mut [&mut ok], &[0.0; 3]).is_err());
+        assert!(sm
+            .decode_step(&mut arena, &mut scratch, &mut [&mut ok], &[0.0; 3], &mut out)
+            .is_err());
         assert!(sm.decode_sequence(&[0.0; 4], 0).is_err());
+    }
+
+    #[test]
+    fn deep_prefill_matches_row_at_a_time_bitwise() {
+        let model = tiny_deep(2, 62);
+        let sm = ServeModel::streaming(&model);
+        let d = sm.d();
+        let mut rng = crate::util::rng::Rng::new(621);
+        let seq = 6;
+        let mut xs = vec![0.0f32; seq * d];
+        rng.fill_normal(&mut xs, 1.0);
+        // reference: one row per decode_step
+        let reference = sm.decode_sequence(&xs, seq).unwrap();
+        // chunked: whole prompt in one prefill
+        let mut arena = KvArena::new(d, 4, 0).unwrap();
+        let mut scratch = DecodeScratch::new();
+        let mut session = sm.new_session();
+        let mut out = Vec::new();
+        sm.prefill(&mut arena, &mut scratch, &mut session, &xs, seq, &mut out).unwrap();
+        assert_eq!(out, reference, "chunked deep prefill must be bitwise row-at-a-time");
+        assert_eq!(session.len(), seq);
     }
 }

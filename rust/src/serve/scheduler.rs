@@ -1,14 +1,19 @@
-//! Continuous-batching scheduler over the KV-cache decode step.
+//! Continuous-batching scheduler over the paged KV decode step.
 //!
 //! Many concurrent requests, ragged lengths, one token per request per
 //! iteration (the Orca-style "iteration-level" schedule): every loop
 //! turn the scheduler **admits** waiting requests into free slots,
-//! packs each active request's next input row into one `[active, d]`
-//! panel, runs a single [`DecodeEngine::decode_step`] (projections +
-//! MLP as pooled GEMMs over the whole panel, attention ragged per
-//! request), hands each request its new output row, and **retires**
-//! requests that produced their last token — freeing the slot for the
-//! next waiting request *between* steps, never mid-token.
+//! packs each *generating* request's next input row into one
+//! `[active, d]` panel, runs a single [`DecodeEngine::decode_step`]
+//! (projections + MLP as pooled GEMMs over the whole panel, attention
+//! ragged per request), hands each request its new output row, and
+//! **retires** requests that produced their last token — freeing the
+//! slot for the next waiting request *between* steps, never mid-token.
+//! Requests still inside their prompt are driven by **chunked
+//! prefill** instead ([`DecodeEngine::prefill`]): up to
+//! `prefill_chunk` prompt positions per iteration in one batched pass
+//! (0 = the whole prompt at admission), bitwise equal to feeding the
+//! rows one at a time but a fraction of the wallclock.
 //!
 //! The scheduler is generic over [`DecodeEngine`]: a single
 //! [`ServeBlock`] (the default — one [`DecodeState`](crate::serve::
@@ -18,12 +23,25 @@
 //! the *same* admit/pack/step/retire loop, so every lifecycle control
 //! and isolation property below applies to deep serving verbatim.
 //!
+//! ## Bounded cache memory (DESIGN.md §14)
+//!
+//! All per-request K/V history pages out of **one**
+//! [`KvArena`](crate::serve::KvArena) owned by the scheduler (the
+//! `Workspace`, locked once per [`BatchScheduler::run`]), together
+//! with one [`DecodeScratch`](crate::serve::DecodeScratch) of reusable
+//! activation buffers — the steady-state decode loop allocates
+//! nothing.  Resident cache is bounded by tokens in flight (a retired
+//! request's pages free immediately), and a `--kv-pages` budget turns
+//! would-be OOM into a *per-request* quarantine:
+//! [`ServeError::CacheExhausted`] retires exactly the request whose
+//! push found the arena full, releases its pages, and every other
+//! request keeps decoding bitwise unchanged.
+//!
 //! A request is a prompt panel plus a generation count: the prompt's
-//! rows are fed teacher-forced (one per iteration — prefill shares the
-//! same batched step as generation), the output at the final prompt
-//! position is the first generated vector, and each generated vector
-//! is fed back as the next input (greedy autoregression in activation
-//! space — this host model has no sampling head).
+//! rows are prefilled, the output at the final prompt position is the
+//! first generated vector, and each generated vector is fed back as
+//! the next input (greedy autoregression in activation space — this
+//! host model has no sampling head).
 //!
 //! ## Per-request error domains (DESIGN.md §11)
 //!
@@ -31,10 +49,11 @@
 //! success-or-[`ServeError`]: malformed requests (bad shape, `n_gen`
 //! 0, non-finite prompt, over the token budget) are **rejected at
 //! intake** and never enter the packed panel; a request whose decode
-//! output turns non-finite, or that outlives its step deadline, is
-//! **quarantined** — retired with an error at that step while the rest
-//! of the batch keeps running.  The bounded intake queue sheds
-//! overload per [`ShedPolicy`] instead of growing without limit.
+//! output turns non-finite, that outlives its step deadline, or that
+//! exhausts the KV page budget is **quarantined** — retired with an
+//! error at that step while the rest of the batch keeps running.  The
+//! bounded intake queue sheds overload per [`ShedPolicy`] instead of
+//! growing without limit.
 //!
 //! The key isolation invariant: **healthy requests' outputs are
 //! bitwise identical to a run without the faulty ones.**  It holds by
@@ -49,23 +68,25 @@
 //! ## Determinism contract
 //!
 //! Per-request outputs depend only on the request's own prompt — never
-//! on arrival order, batch packing, `max_batch`, `QFT_THREADS`, or the
-//! dispatch mode — because every kernel under the step is per-row
-//! batch-invariant (the engine's chunking contract) and attention
-//! reads only the request's own cache.  `rust/tests/serve_props.rs`
-//! pins this **bitwise** across arrival permutations, batch sizes, and
-//! thread counts.  (Shedding is the deliberate exception: which
-//! requests a full queue sheds depends on arrival order by
-//! definition.)  Retired sessions are recycled through
-//! [`DecodeEngine::reset_session`] (grow-only capacity) so a long
-//! serving run stops allocating cache once slots have seen their
-//! longest request.
+//! on arrival order, batch packing, `max_batch`, `QFT_THREADS`, the
+//! dispatch mode, the page size, or the prefill chunk — because every
+//! kernel under the step is per-row batch-invariant (the engine's
+//! chunking contract), attention reads only the request's own cache
+//! through its page table, and paged attention executes the same
+//! float ops in the same order as contiguous
+//! (`model::block::attn_row_segs`).  `rust/tests/serve_props.rs` and
+//! `rust/tests/kv_props.rs` pin this **bitwise** across arrival
+//! permutations, batch sizes, page sizes, prefill chunks, and thread
+//! counts.  (Shedding is the deliberate exception: which requests a
+//! full queue sheds depends on arrival order by definition.)
 
-use crate::serve::decode::ServeBlock;
+use crate::serve::decode::{DecodeScratch, ServeBlock};
+use crate::serve::kv::{self, KvArena};
 use crate::serve::model::DecodeEngine;
 use crate::util::error::{Error, Result};
 use crate::util::numeric::non_finite_at;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 /// One serving request: a prompt of `prompt_len` width-`d` vectors
 /// (row-major) and the number of vectors to generate after it.
@@ -103,6 +124,11 @@ pub enum ServeError {
     /// Quarantined mid-flight: still unfinished after `limit` resident
     /// scheduler steps.
     DeadlineExceeded { limit: usize },
+    /// Quarantined mid-flight: the KV arena's page budget (`pages`)
+    /// was exhausted when this request tried to cache its next token.
+    /// Its pages are released; every other request is bitwise
+    /// unaffected.
+    CacheExhausted { pages: usize },
     /// Shed by the bounded intake queue under overload.
     Shed,
 }
@@ -122,6 +148,9 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::DeadlineExceeded { limit } => {
                 write!(f, "quarantined: deadline of {limit} steps exceeded")
+            }
+            ServeError::CacheExhausted { pages } => {
+                write!(f, "quarantined: kv cache exhausted (page budget {pages})")
             }
             ServeError::Shed => write!(f, "shed: intake queue full"),
         }
@@ -148,7 +177,8 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Max scheduler steps a request may stay resident before it is
     /// quarantined with [`ServeError::DeadlineExceeded`] (0 = none).
-    /// A request needs `prompt_len + n_gen − 1` resident steps.
+    /// With whole-prompt prefill a request needs `n_gen` resident
+    /// steps; with `prefill_chunk` 1 it needs `prompt_len + n_gen − 1`.
     pub deadline_steps: usize,
     /// Max `prompt_len + n_gen` tokens per request; larger requests
     /// are rejected at intake with [`ServeError::OverBudget`] (0 =
@@ -159,6 +189,17 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Shed policy for a full intake queue.
     pub shed: ShedPolicy,
+    /// KV arena page budget shared by every request (0 = unbounded).
+    /// Exhaustion quarantines the requesting request with
+    /// [`ServeError::CacheExhausted`].
+    pub kv_pages: usize,
+    /// Tokens per KV page (≥ 1; default `QFT_KV_PAGE` else 16).
+    pub page_tokens: usize,
+    /// Prompt positions prefilled per scheduler iteration: 0 = the
+    /// whole remaining prompt at once (fastest), 1 = row-at-a-time
+    /// (the pre-paging schedule).  Any value yields bitwise identical
+    /// outputs; only wallclock and step accounting change.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -169,14 +210,18 @@ impl Default for ServeConfig {
             token_budget: 0,
             queue_cap: 0,
             shed: ShedPolicy::RejectNew,
+            kv_pages: 0,
+            page_tokens: kv::default_page_tokens(),
+            prefill_chunk: 0,
         }
     }
 }
 
 /// Builder-style deviations from [`ServeConfig::default`], one method
 /// per CLI flag (`--max-batch`, `--deadline`, `--token-budget`,
-/// `--queue-cap`, `--shed-policy`) so config construction reads the
-/// same at every site.
+/// `--queue-cap`, `--shed-policy`, `--kv-pages`, `--page-size`,
+/// `--prefill-chunk`) so config construction reads the same at every
+/// site.
 impl ServeConfig {
     pub fn with_max_batch(mut self, max_batch: usize) -> ServeConfig {
         self.max_batch = max_batch;
@@ -200,6 +245,21 @@ impl ServeConfig {
 
     pub fn with_shed_policy(mut self, shed: ShedPolicy) -> ServeConfig {
         self.shed = shed;
+        self
+    }
+
+    pub fn with_kv_pages(mut self, kv_pages: usize) -> ServeConfig {
+        self.kv_pages = kv_pages;
+        self
+    }
+
+    pub fn with_page_tokens(mut self, page_tokens: usize) -> ServeConfig {
+        self.page_tokens = page_tokens;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, prefill_chunk: usize) -> ServeConfig {
+        self.prefill_chunk = prefill_chunk;
         self
     }
 }
@@ -245,8 +305,9 @@ impl ServeOutput {
 pub struct ServeStats {
     /// Scheduler iterations executed.
     pub steps: usize,
-    /// Total decode rows processed (Σ per-step active requests) — the
-    /// token-throughput numerator.  Includes rows later quarantined.
+    /// Total rows processed (decode rows + prefilled prompt rows) —
+    /// the token-throughput numerator.  Includes rows later
+    /// quarantined.
     pub tokens: usize,
     /// Peak concurrently-active requests.
     pub peak_batch: usize,
@@ -263,6 +324,12 @@ pub struct ServeStats {
     /// stopped, the remaining queue was shed, in-flight requests ran to
     /// completion under their deadlines.
     pub drained: bool,
+    /// Peak KV pages resident at once during the run (the `--kv-pages`
+    /// budget's high-water mark).
+    pub pages_in_use: usize,
+    /// Peak resident K/V cache bytes during the run — the
+    /// bounded-memory headline the `kv_serve` bench gates on.
+    pub resident_kv_bytes: usize,
 }
 
 impl ServeStats {
@@ -280,10 +347,20 @@ impl ServeStats {
 struct Active<S> {
     req: ServeRequest,
     state: S,
-    /// Next prompt row to feed (== prompt_len ⇒ generating).
+    /// Prompt rows prefilled so far (== prompt_len ⇒ generating).
     fed: usize,
     generated: Vec<f32>,
     admitted_at: usize,
+}
+
+/// The scheduler's per-run mutable compute state: the one KV arena
+/// every session pages out of, and the reusable activation scratch.
+/// Behind a mutex only so `run(&self)` coexists with the `drain()`
+/// latch being shared across threads — the lock is taken once per run,
+/// never per step.
+struct Workspace {
+    arena: KvArena,
+    scratch: DecodeScratch,
 }
 
 /// Continuous-batching executor for one [`DecodeEngine`] deployment —
@@ -292,6 +369,7 @@ struct Active<S> {
 pub struct BatchScheduler<E: DecodeEngine = ServeBlock> {
     engine: E,
     cfg: ServeConfig,
+    ws: Mutex<Workspace>,
     /// Graceful-shutdown latch (DESIGN.md §13): set from a signal
     /// handler (or any thread) via [`BatchScheduler::drain`]; the run
     /// loop observes it between iterations, never mid-step.
@@ -310,7 +388,9 @@ impl<E: DecodeEngine> BatchScheduler<E> {
         if cfg.max_batch == 0 {
             return Err(Error::Config("scheduler: max_batch must be >= 1".into()));
         }
-        Ok(BatchScheduler { engine, cfg, drain: AtomicBool::new(false) })
+        let arena = KvArena::new(engine.d(), cfg.page_tokens, cfg.kv_pages)?;
+        let ws = Mutex::new(Workspace { arena, scratch: DecodeScratch::new() });
+        Ok(BatchScheduler { engine, cfg, ws, drain: AtomicBool::new(false) })
     }
 
     /// Begin a graceful drain: the run loop (this thread or another)
@@ -417,9 +497,17 @@ impl<E: DecodeEngine> BatchScheduler<E> {
             }
             queue.push_back(r);
         }
+        // one lock for the whole run; a previous run that died with an
+        // Err left the arena consistent, and reset_all reclaims every
+        // page regardless (sessions never outlive a run)
+        let mut guard = self.ws.lock().unwrap_or_else(|p| p.into_inner());
+        let ws = &mut *guard;
+        ws.arena.reset_all();
         let mut active: Vec<Active<E::Session>> = Vec::new();
         let mut free_states: Vec<E::Session> = Vec::new();
         let mut xs: Vec<f32> = Vec::new();
+        let mut dec_out: Vec<f32> = Vec::new();
+        let mut pre_out: Vec<f32> = Vec::new();
         let mut draining = false;
         while !queue.is_empty() || !active.is_empty() {
             // graceful drain: latch the request once, then stop
@@ -443,7 +531,7 @@ impl<E: DecodeEngine> BatchScheduler<E> {
             while !draining && active.len() < self.cfg.max_batch {
                 let Some(req) = queue.pop_front() else { break };
                 let mut state = free_states.pop().unwrap_or_else(|| self.engine.new_session());
-                self.engine.reset_session(&mut state);
+                self.engine.reset_session(&mut state, &mut ws.arena);
                 active.push(Active {
                     state,
                     fed: 0,
@@ -453,63 +541,147 @@ impl<E: DecodeEngine> BatchScheduler<E> {
                 });
             }
             stats.peak_batch = stats.peak_batch.max(active.len());
-            // pack each active request's next input row
+            // pack each GENERATING request's next input row (requests
+            // still inside their prompt prefill below instead)
             xs.clear();
+            let mut n_dec = 0usize;
             for a in &active {
-                if a.fed < a.req.prompt_len(d) {
-                    xs.extend_from_slice(&a.req.prompt[a.fed * d..(a.fed + 1) * d]);
-                } else {
-                    // autoregressive: feed back the latest generated row
+                if a.fed >= a.req.prompt_len(d) {
                     let g = a.generated.len();
                     xs.extend_from_slice(&a.generated[g - d..g]);
+                    n_dec += 1;
                 }
             }
-            let mut states: Vec<&mut E::Session> =
-                active.iter_mut().map(|a| &mut a.state).collect();
-            let out = self.engine.decode_step(&mut states, &xs)?;
-            drop(states);
+            dec_out.clear();
+            if n_dec > 0 {
+                let mut states: Vec<&mut E::Session> = active
+                    .iter_mut()
+                    .filter(|a| a.fed >= a.req.prompt_len(d))
+                    .map(|a| &mut a.state)
+                    .collect();
+                let r = self.engine.decode_step(
+                    &mut ws.arena,
+                    &mut ws.scratch,
+                    &mut states,
+                    &xs,
+                    &mut dec_out,
+                );
+                drop(states);
+                r?;
+            }
             stats.steps += 1;
-            stats.tokens += active.len();
+            stats.tokens += n_dec;
             // hand out rows; retire finished requests and quarantine
-            // faulty ones.  The panel row of request `i` is
-            // `out[i*d..]` in the PRE-retire active order, so the
-            // sweep drains the old vec and rebuilds the survivor list
-            // — removing in place (swap_remove) would silently remap
-            // later requests onto the wrong rows.
+            // faulty ones.  The decode panel row of the `gi`-th
+            // generating request is `dec_out[gi*d..]` in the
+            // PRE-retire active order, so the sweep drains the old vec
+            // and rebuilds the survivor list — removing in place
+            // (swap_remove) would silently remap later requests onto
+            // the wrong rows.  Prefilling requests run their chunk
+            // here, inside the sweep, so all retire paths share one
+            // exit.
             let old = std::mem::take(&mut active);
-            for (i, mut a) in old.into_iter().enumerate() {
-                let row = &out[i * d..(i + 1) * d];
-                a.fed += 1;
-                // quarantine a non-finite output immediately: the row
-                // never feeds back, and per-row kernel invariance means
-                // it never touched any other request's bits either
-                if non_finite_at(row).is_some() {
-                    outputs.push(ServeOutput {
-                        id: a.req.id,
-                        prompt_len: a.req.prompt_len(d),
-                        result: Err(ServeError::NonFiniteOutput { step: stats.steps }),
-                        admitted_at: a.admitted_at,
-                        finished_at: stats.steps,
-                    });
-                    stats.failed += 1;
-                    free_states.push(a.state);
-                    continue;
-                }
-                // the output at the last prompt position is the first
-                // generated vector; earlier prefill outputs are scored
-                // but not part of the response
-                if a.fed >= a.req.prompt_len(d) {
+            let mut gi = 0usize;
+            for mut a in old {
+                let plen = a.req.prompt_len(d);
+                let finished = |a: &Active<E::Session>, result, steps: usize| ServeOutput {
+                    id: a.req.id,
+                    prompt_len: plen,
+                    result,
+                    admitted_at: a.admitted_at,
+                    finished_at: steps,
+                };
+                if a.fed < plen {
+                    // chunked prefill: up to prefill_chunk prompt rows
+                    // in one batched pass (0 = all remaining)
+                    let left = plen - a.fed;
+                    let take = match self.cfg.prefill_chunk {
+                        0 => left,
+                        c => c.min(left),
+                    };
+                    let chunk = &a.req.prompt[a.fed * d..(a.fed + take) * d];
+                    self.engine.prefill(
+                        &mut ws.arena,
+                        &mut ws.scratch,
+                        &mut a.state,
+                        chunk,
+                        take,
+                        &mut pre_out,
+                    )?;
+                    a.fed += take;
+                    stats.tokens += take;
+                    if E::session_failed(&a.state) {
+                        let pages = ws.arena.max_pages();
+                        outputs.push(finished(
+                            &a,
+                            Err(ServeError::CacheExhausted { pages }),
+                            stats.steps,
+                        ));
+                        stats.failed += 1;
+                        self.engine.reset_session(&mut a.state, &mut ws.arena);
+                        free_states.push(a.state);
+                        continue;
+                    }
+                    if non_finite_at(&pre_out).is_some() {
+                        outputs.push(finished(
+                            &a,
+                            Err(ServeError::NonFiniteOutput { step: stats.steps }),
+                            stats.steps,
+                        ));
+                        stats.failed += 1;
+                        self.engine.reset_session(&mut a.state, &mut ws.arena);
+                        free_states.push(a.state);
+                        continue;
+                    }
+                    if a.fed >= plen {
+                        // the output at the last prompt position is
+                        // the first generated vector; earlier prefill
+                        // outputs are scored but not part of the
+                        // response
+                        a.generated.extend_from_slice(&pre_out[(take - 1) * d..take * d]);
+                    }
+                } else {
+                    let row = &dec_out[gi * d..(gi + 1) * d];
+                    gi += 1;
+                    // a push that found the arena full means the row
+                    // was computed without this token's cache entry:
+                    // quarantine before anything feeds back
+                    if E::session_failed(&a.state) {
+                        let pages = ws.arena.max_pages();
+                        outputs.push(finished(
+                            &a,
+                            Err(ServeError::CacheExhausted { pages }),
+                            stats.steps,
+                        ));
+                        stats.failed += 1;
+                        self.engine.reset_session(&mut a.state, &mut ws.arena);
+                        free_states.push(a.state);
+                        continue;
+                    }
+                    // quarantine a non-finite output immediately: the
+                    // row never feeds back, and per-row kernel
+                    // invariance means it never touched any other
+                    // request's bits either
+                    if non_finite_at(row).is_some() {
+                        outputs.push(finished(
+                            &a,
+                            Err(ServeError::NonFiniteOutput { step: stats.steps }),
+                            stats.steps,
+                        ));
+                        stats.failed += 1;
+                        self.engine.reset_session(&mut a.state, &mut ws.arena);
+                        free_states.push(a.state);
+                        continue;
+                    }
                     a.generated.extend_from_slice(row);
                 }
                 if a.generated.len() >= a.req.n_gen * d {
-                    outputs.push(ServeOutput {
-                        id: a.req.id,
-                        prompt_len: a.req.prompt_len(d),
-                        result: Ok(a.generated),
-                        admitted_at: a.admitted_at,
-                        finished_at: stats.steps,
-                    });
+                    let panel = std::mem::take(&mut a.generated);
+                    outputs.push(finished(&a, Ok(panel), stats.steps));
                     stats.completed += 1;
+                    // release the request's pages immediately — a
+                    // retired request must not hold arena budget
+                    self.engine.reset_session(&mut a.state, &mut ws.arena);
                     free_states.push(a.state);
                 } else if self.cfg.deadline_steps > 0
                     && stats.steps - a.admitted_at >= self.cfg.deadline_steps
@@ -517,22 +689,21 @@ impl<E: DecodeEngine> BatchScheduler<E> {
                     // unfinished at its deadline: quarantine (partial
                     // output is dropped — clients see an error, not a
                     // truncated panel silently posing as complete)
-                    outputs.push(ServeOutput {
-                        id: a.req.id,
-                        prompt_len: a.req.prompt_len(d),
-                        result: Err(ServeError::DeadlineExceeded {
-                            limit: self.cfg.deadline_steps,
-                        }),
-                        admitted_at: a.admitted_at,
-                        finished_at: stats.steps,
-                    });
+                    outputs.push(finished(
+                        &a,
+                        Err(ServeError::DeadlineExceeded { limit: self.cfg.deadline_steps }),
+                        stats.steps,
+                    ));
                     stats.failed += 1;
+                    self.engine.reset_session(&mut a.state, &mut ws.arena);
                     free_states.push(a.state);
                 } else {
                     active.push(a);
                 }
             }
         }
+        stats.pages_in_use = ws.arena.peak_pages();
+        stats.resident_kv_bytes = ws.arena.peak_resident_bytes();
         stats.wallclock_s = start.elapsed().as_secs_f64();
         outputs.sort_by_key(|o| o.id);
         Ok((outputs, stats))
@@ -585,6 +756,7 @@ mod tests {
         assert!(stats.peak_batch > 1, "crowd run never actually batched");
         assert_eq!(stats.completed, 5);
         assert_eq!(stats.failed + stats.shed, 0);
+        // prompt rows (prefilled) + decode rows, per request
         let want_tokens: usize = solo_out
             .iter()
             .map(|o| o.prompt_len + gen(o).len() / d - 1)
@@ -636,9 +808,10 @@ mod tests {
         let mut rng = Rng::new(93);
         let sb = tiny_serve_block(&mut rng);
         let d = sb.d();
-        // needs 2 + 8 - 1 = 9 resident steps; deadline is 4
+        // whole-prompt prefill: needs 1 + 8 - 1 = 8 resident steps;
+        // deadline is 4
         let long = mk_request(0, d, 2, 8, &mut rng);
-        // needs 2 + 2 - 1 = 3 steps; fits
+        // needs 1 + 2 - 1 = 2 steps; fits
         let short = mk_request(1, d, 2, 2, &mut rng);
         // 12 tokens > budget 10
         let fat = mk_request(2, d, 6, 6, &mut rng);
@@ -652,6 +825,31 @@ mod tests {
         let (solo, _) = plain.run(vec![short]).unwrap();
         assert_eq!(out[1].result, solo[0].result, "survivor perturbed by quarantined peers");
         assert_eq!((stats.completed, stats.failed, stats.shed), (1, 2, 0));
+    }
+
+    #[test]
+    fn page_budget_quarantines_the_exhausting_request_only() {
+        // kv_pages 4 at 1 token/page: a 7-token request exhausts the
+        // arena mid-decode and is quarantined; its pages free, and the
+        // next request completes bitwise equal to running alone
+        let mut rng = Rng::new(98);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let hog = mk_request(0, d, 2, 6, &mut rng); // wants 7 cached tokens
+        let small = mk_request(1, d, 1, 2, &mut rng); // wants 2
+        let cfg = ServeConfig::default()
+            .with_max_batch(1)
+            .with_kv_pages(4)
+            .with_page_tokens(1);
+        let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (out, stats) = sched.run(vec![hog, small.clone()]).unwrap();
+        assert_eq!(out[0].error(), Some(&ServeError::CacheExhausted { pages: 4 }));
+        let plain = BatchScheduler::new(sb, 1).unwrap();
+        let (solo, _) = plain.run(vec![small]).unwrap();
+        assert_eq!(out[1].result, solo[0].result, "survivor perturbed by the evicted hog");
+        assert_eq!((stats.completed, stats.failed, stats.shed), (1, 1, 0));
+        assert!(stats.pages_in_use <= 4, "budget was not enforced");
+        assert_eq!(stats.resident_kv_bytes, stats.pages_in_use * d * 2 * 4);
     }
 
     #[test]
@@ -684,9 +882,9 @@ mod tests {
 
     #[test]
     fn drain_sheds_queue_and_finishes_in_flight_bitwise() {
-        // 6 requests through 2 slots, drain after 2 steps: the 2
+        // 6 requests through 2 slots, drain after 2 steps: the
         // admitted requests finish with bits equal to the un-drained
-        // run; the 4 still queued are shed
+        // run; those still queued are shed
         let mut rng = Rng::new(96);
         let sb = tiny_serve_block(&mut rng);
         let d = sb.d();
@@ -709,7 +907,7 @@ mod tests {
         let mut rng2 = Rng::new(961);
         let sb2 = tiny_serve_block(&mut rng2);
         let d2 = sb2.d();
-        let long = mk_request(0, d2, 2, 8, &mut rng2); // needs 9 resident steps
+        let long = mk_request(0, d2, 2, 8, &mut rng2); // needs 8 resident steps
         let cfg = ServeConfig::default().with_max_batch(1).with_deadline(4);
         let sched2 = BatchScheduler::with_config(sb2, cfg).unwrap();
         let (out2, st2) = sched2.run_with_drain(vec![long], |steps| steps >= 1).unwrap();
@@ -747,14 +945,53 @@ mod tests {
         let sched = BatchScheduler::new(sb, 2).unwrap();
         let (out, stats) = sched.run(reqs).unwrap();
         for o in &out {
-            // prompt_len + n_gen - 1 decode steps per request
-            assert_eq!(o.steps_resident(), o.prompt_len + 3 - 1, "request {}", o.id);
+            // whole-prompt prefill (1 step) + n_gen - 1 decode steps
+            assert_eq!(o.steps_resident(), 1 + 3 - 1, "request {}", o.id);
             assert_eq!(gen(o).len(), 3 * d);
         }
-        // with max_batch 2 and 6 identical 4-step requests: 12 steps
-        assert_eq!(stats.steps, 12);
+        // with max_batch 2 and 6 identical 3-step requests: 9 steps
+        assert_eq!(stats.steps, 9);
+        // tokens still count every processed row: 6 × (2 + 3 - 1)
         assert_eq!(stats.tokens, 24);
         assert_eq!(stats.peak_batch, 2);
         assert_eq!(stats.completed, 6);
+        // the paged gauges are live: 2 slots × 5 tokens peak, and the
+        // arena reports bytes consistently
+        assert!(stats.pages_in_use > 0);
+        assert_eq!(
+            stats.resident_kv_bytes,
+            stats.pages_in_use * sched.config().page_tokens * d * 2 * 4
+        );
+    }
+
+    #[test]
+    fn prefill_chunk_changes_wallclock_shape_not_bits() {
+        // prefill_chunk 0 (whole prompt), 1 (row-at-a-time, the
+        // pre-paging schedule), and 3 must produce identical bits for
+        // every request — only step accounting may differ
+        let mut rng = Rng::new(99);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let reqs: Vec<ServeRequest> =
+            (0..4).map(|i| mk_request(i, d, 1 + i as usize * 2, 3, &mut rng)).collect();
+        let base = BatchScheduler::with_config(
+            sb.clone(),
+            ServeConfig::default().with_max_batch(2).with_prefill_chunk(1),
+        )
+        .unwrap();
+        let (base_out, base_stats) = base.run(reqs.clone()).unwrap();
+        for chunk in [0usize, 3] {
+            let cfg = ServeConfig::default().with_max_batch(2).with_prefill_chunk(chunk);
+            let sched = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+            let (out, stats) = sched.run(reqs.clone()).unwrap();
+            for (a, b) in base_out.iter().zip(&out) {
+                assert_eq!(a.result, b.result, "prefill_chunk {chunk} changed request {}", a.id);
+            }
+            assert_eq!(stats.tokens, base_stats.tokens, "rows processed must not change");
+            assert!(
+                stats.steps <= base_stats.steps,
+                "chunked prefill must not take more iterations than row-at-a-time"
+            );
+        }
     }
 }

@@ -9,12 +9,12 @@
 //!
 //! ```text
 //! spec  ::= kind [ '@' site ] [ ':' count ]
-//! kind  ::= 'panic' | 'nan' | 'torn-write' | 'crash'
+//! kind  ::= 'panic' | 'nan' | 'torn-write' | 'crash' | 'oom'
 //! ```
 //!
 //! * `site` names a probe point (`gemm`, `decode`, `loss`, `save`,
-//!   `step`, `snapshot`); omitted ⇒ the spec matches every probing
-//!   site.
+//!   `step`, `snapshot`, `alloc`); omitted ⇒ the spec matches every
+//!   probing site.
 //! * `count` is the 0-based probe index at which the spec fires, once
 //!   (each site keeps a process-wide counter); omitted ⇒ the spec
 //!   fires at **every** probe — e.g. `nan@loss` makes the trainer's
@@ -23,7 +23,10 @@
 //!
 //! Examples: `panic@gemm:3` panics the 4th GEMM chunk executed by the
 //! process; `nan@decode:7` poisons the 8th decode step's output;
-//! `torn-write` truncates every checkpoint write mid-stream.
+//! `torn-write` truncates every checkpoint write mid-stream;
+//! `oom@alloc:5` fails the 6th KV-arena page allocation as if the
+//! `--kv-pages` budget were exhausted (the `CacheExhausted` quarantine
+//! path, pinned in `fault_props`).
 //!
 //! The `crash` kind is the crash-consistency harness's kill switch: a
 //! matching [`crash_point`] **aborts the process** (no unwind, no
@@ -64,6 +67,9 @@ pub enum Fault {
     /// Abort the process at the probe point (crash-consistency path):
     /// acted on only by [`crash_point`].
     Crash,
+    /// Fail a KV-arena page allocation as if the page budget were
+    /// exhausted (the per-request `CacheExhausted` quarantine path).
+    Oom,
 }
 
 #[derive(Clone, Debug)]
@@ -114,6 +120,7 @@ fn parse(raw: &str) -> Vec<Spec> {
             "nan" => Fault::Nan,
             "torn-write" => Fault::TornWrite,
             "crash" => Fault::Crash,
+            "oom" => Fault::Oom,
             other => {
                 crate::warnlog!("QFT_FAULT: unknown kind {other:?}, spec ignored");
                 continue;
@@ -197,8 +204,12 @@ mod tests {
 
     #[test]
     fn grammar_parses() {
-        let specs = parse("panic@gemm:3, nan@decode:7 ,torn-write,nan@loss,crash@snapshot:1");
-        assert_eq!(specs.len(), 5);
+        let specs =
+            parse("panic@gemm:3, nan@decode:7 ,torn-write,nan@loss,crash@snapshot:1,oom@alloc:5");
+        assert_eq!(specs.len(), 6);
+        assert_eq!(specs[5].kind, Fault::Oom);
+        assert_eq!(specs[5].site.as_deref(), Some("alloc"));
+        assert_eq!(specs[5].at, Some(5));
         assert_eq!(specs[4].kind, Fault::Crash);
         assert_eq!(specs[4].site.as_deref(), Some("snapshot"));
         assert_eq!(specs[4].at, Some(1));

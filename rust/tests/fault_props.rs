@@ -10,6 +10,10 @@
 //! * **Decode quarantine**: an injected non-finite decode row fails
 //!   exactly one request; every other request's output stays bitwise
 //!   equal to the fault-free run.
+//! * **Cache-exhaustion quarantine**: an injected KV page-allocation
+//!   failure (`oom@alloc`) retires exactly the requesting request with
+//!   `CacheExhausted`, reclaims its pages, and leaves every survivor
+//!   bitwise unchanged.
 //! * **Checkpoint hardening**: a torn (crashed) write never damages
 //!   the previous checkpoint; truncated and bit-rotted files are
 //!   rejected without panic.
@@ -26,7 +30,7 @@ use quanta_ft::coordinator::checkpoint;
 use quanta_ft::coordinator::host_trainer::{finetune_host, val_loss_host, HostTrainConfig};
 use quanta_ft::data::synth::{teacher_student, SynthConfig, SynthTask};
 use quanta_ft::model::{BlockConfig, TrainableModel, TransformerBlock};
-use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeError, ServeRequest};
+use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeConfig, ServeError, ServeRequest};
 use quanta_ft::tensor::Tensor;
 use quanta_ft::util::error::Error;
 use quanta_ft::util::fault;
@@ -111,7 +115,9 @@ fn injected_faults_are_contained() {
 
     // ---- (b) nan@decode quarantines one victim, rest bitwise --------
     // the probe poisons panel row 0; request 0 is long enough to own
-    // row 0 when the 4th decode step fires
+    // row 0 when the 4th decode step fires (prefill is a separate
+    // path and never ticks the decode probe, so decode step 4 is
+    // scheduler step 5 — 1 prefill iteration + 4 decode iterations)
     let long_reqs: Vec<ServeRequest> =
         (0..4).map(|i| mk(i, 2, 5, &mut brng)).collect();
     let (clean, _) = sched.run(long_reqs.clone()).unwrap();
@@ -120,7 +126,7 @@ fn injected_faults_are_contained() {
     clear_fault();
     assert_eq!(
         faulted[0].error(),
-        Some(&ServeError::NonFiniteOutput { step: 4 }),
+        Some(&ServeError::NonFiniteOutput { step: 5 }),
         "victim request not quarantined: {:?}",
         faulted[0].result
     );
@@ -132,6 +138,47 @@ fn injected_faults_are_contained() {
         );
     }
     assert_eq!((stats.completed, stats.failed, stats.shed), (3, 1, 0));
+
+    // ---- (b2) oom@alloc quarantines the requester, rest bitwise -----
+    // page size 2: each 6-push request takes a page at prefill
+    // (allocations 0–3, one per request) and a second page at the
+    // first decode step (allocations 4–7).  Failing allocation 5 —
+    // request 1's second page — simulates an exhausted --kv-pages
+    // budget at that exact push: request 1 alone is quarantined with
+    // CacheExhausted, and every survivor is bitwise equal to the
+    // fault-free run
+    let paged_cfg = ServeConfig::default().with_max_batch(4).with_page_tokens(2);
+    let paged = BatchScheduler::with_config(sb.clone(), paged_cfg).unwrap();
+    let (clean, _) = paged.run(long_reqs.clone()).unwrap();
+    set_fault("oom@alloc:5");
+    let (faulted, stats) = paged.run(long_reqs.clone()).unwrap();
+    clear_fault();
+    assert_eq!(
+        faulted[1].error(),
+        Some(&ServeError::CacheExhausted { pages: 0 }),
+        "oom victim not quarantined: {:?}",
+        faulted[1].result
+    );
+    for (c, f) in clean.iter().zip(&faulted) {
+        if c.id == 1 {
+            continue;
+        }
+        assert_eq!(
+            c.result, f.result,
+            "request {} not bitwise equal to the oom-free run",
+            c.id
+        );
+    }
+    assert_eq!((stats.completed, stats.failed, stats.shed), (3, 1, 0));
+    // the one-shot spec fired; the same scheduler serves cleanly again
+    // and the quarantined request's pages were reclaimed (peak pages =
+    // 4 requests × 3 pages of 2 tokens)
+    let (again, ag_stats) = paged.run(long_reqs.clone()).unwrap();
+    for (c, g) in clean.iter().zip(&again) {
+        assert_eq!(c.result, g.result, "request {} differs after the oom run", c.id);
+    }
+    assert_eq!(ag_stats.completed, 4);
+    assert_eq!(ag_stats.pages_in_use, 12, "page accounting drifted after quarantine");
 
     // ---- (c) checkpoint torn-write / truncation / bit rot -----------
     let dir = std::env::temp_dir().join("qft_fault_props_ckpt");

@@ -1,0 +1,193 @@
+//! Paged-KV arena properties (DESIGN.md §14).
+//!
+//! What is pinned, and how hard:
+//!
+//! * **Paged decode is bitwise page-size-blind**: the same decode over
+//!   the same rows must produce identical bits at every page size —
+//!   including the degenerate 1-token page (a page boundary between
+//!   every position) — and at every `QFT_THREADS`, because
+//!   `attn_row_segs` walks page runs in position order with the same
+//!   serial accumulation the contiguous walk uses.  Streaming decode
+//!   through the arena is additionally pinned bitwise against the
+//!   block's full-recompute forward, so paging cannot drift from the
+//!   training semantics either.
+//! * **Allocator discipline**: a bounded arena fails the
+//!   `max_pages + 1`-th allocation with a structured [`CacheFull`]
+//!   that leaves the requesting table untouched, release returns every
+//!   page, and reuse reads back the new bytes exactly (pages are fully
+//!   overwritten before any read).
+//! * **CoW fork isolation**: a fork shares all pages (zero rows
+//!   copied, refcounts bumped); the first push into a shared tail page
+//!   copies only the filled prefix, after which parent and fork
+//!   diverge freely while the shared full pages stay shared.
+//!   Releasing both sides returns the arena to zero pages in use.
+//! * **Scheduler page budget**: a `--kv-pages` budget quarantines
+//!   exactly the request that exhausts it (`CacheExhausted`), leaves
+//!   the survivors bitwise unchanged, and reclaims retired requests'
+//!   pages for requests admitted later in the same run.
+//!
+//! Everything lives in ONE `#[test]`: `QFT_THREADS` is process-global
+//! env state, so sweeping it from parallel test threads would race
+//! (the `pool_props` convention).
+
+use quanta_ft::model::{BlockConfig, TransformerBlock};
+use quanta_ft::serve::{
+    BatchScheduler, CacheFull, DecodeScratch, DecodeState, KvArena, PageTable, ServeBlock,
+    ServeConfig, ServeError, ServeOutput, ServeRequest,
+};
+use quanta_ft::util::rng::Rng;
+
+fn trained_block(seed: u64, dims: Vec<usize>, heads: usize) -> TransformerBlock {
+    let mut rng = Rng::new(seed);
+    let cfg = BlockConfig::standard(dims, heads, 4);
+    let mut block = TransformerBlock::init(&cfg, &mut rng).unwrap();
+    block.randomize_circuits(0.25, &mut rng).unwrap();
+    block
+}
+
+/// Teacher-forced decode of `xs` through an arena with the given page
+/// size, one position per step — the paged counterpart of
+/// `TransformerBlock::forward`'s per-position rows.
+fn paged_decode(sb: &ServeBlock, xs: &[f32], seq: usize, page_tokens: usize) -> Vec<f32> {
+    let d = sb.d();
+    let mut arena = KvArena::new(d, page_tokens, 0).unwrap();
+    let mut scratch = DecodeScratch::new();
+    let mut state = DecodeState::new(d);
+    let mut out = Vec::with_capacity(seq * d);
+    let mut step = Vec::new();
+    for t in 0..seq {
+        let row = &xs[t * d..(t + 1) * d];
+        sb.decode_step(&mut arena, &mut scratch, &mut [&mut state], row, &mut step).unwrap();
+        out.extend_from_slice(&step);
+    }
+    assert_eq!(state.len(), seq);
+    assert_eq!(state.n_pages(), seq.div_ceil(page_tokens));
+    out
+}
+
+#[test]
+fn paged_kv_properties() {
+    // ---- (a) allocator discipline -----------------------------------
+    let d = 4usize;
+    {
+        let mut arena = KvArena::new(d, 2, 3).unwrap();
+        let mut t1 = PageTable::new();
+        for i in 0..6 {
+            arena.push(&mut t1, &[i as f32; 4], &[-(i as f32); 4]).unwrap();
+        }
+        assert_eq!(arena.pages_in_use(), 3);
+        // page 4 would exceed the bound: structured failure, table intact
+        let mut t2 = PageTable::new();
+        let err = arena.push(&mut t2, &[9.0; 4], &[9.0; 4]).unwrap_err();
+        assert_eq!(err, CacheFull { pages: 3 });
+        assert_eq!(t2.len(), 0, "failed push must leave the table untouched");
+        assert_eq!(t1.len(), 6, "failed push must not disturb other tables");
+        // release returns every page; the next sequence reuses them
+        // byte-exactly (pages are overwritten before any read)
+        arena.release(&mut t1);
+        assert_eq!(arena.pages_in_use(), 0);
+        for i in 0..5 {
+            arena.push(&mut t2, &[10.0 + i as f32; 4], &[0.5; 4]).unwrap();
+        }
+        let want: Vec<f32> = (0..5).flat_map(|i| vec![10.0 + i as f32; 4]).collect();
+        assert_eq!(arena.gather_k(&t2), want, "reused pages must read back the new bytes");
+        assert_eq!(arena.allocated_pages(), 3, "bounded arena never grows past its budget");
+    }
+
+    // ---- (b) CoW fork isolation + refcount reclaim ------------------
+    {
+        let mut arena = KvArena::new(d, 2, 0).unwrap();
+        let mut parent = PageTable::new();
+        for i in 0..5 {
+            arena.push(&mut parent, &[i as f32; 4], &[i as f32 + 0.5; 4]).unwrap();
+        }
+        let before = arena.gather_k(&parent);
+        let mut fork = arena.fork(&parent);
+        assert_eq!(arena.pages_in_use(), 3, "fork copies zero pages up front");
+        assert_eq!(arena.gather_k(&fork), before);
+        // fork's first push lands in the shared half-full tail page:
+        // CoW copies the one filled row, then the sides diverge
+        arena.push(&mut fork, &[100.0; 4], &[100.0; 4]).unwrap();
+        arena.push(&mut parent, &[200.0; 4], &[200.0; 4]).unwrap();
+        assert_eq!(arena.pages_in_use(), 4, "CoW split pays exactly one page");
+        let pk = arena.gather_k(&parent);
+        let fk = arena.gather_k(&fork);
+        assert_eq!(&pk[..5 * 4], &before[..], "parent prefix perturbed by fork's write");
+        assert_eq!(&fk[..5 * 4], &before[..], "fork prefix perturbed by parent's write");
+        assert_eq!(&pk[5 * 4..], &[200.0; 4], "parent tail wrong after divergence");
+        assert_eq!(&fk[5 * 4..], &[100.0; 4], "fork tail wrong after divergence");
+        arena.release(&mut fork);
+        assert_eq!(arena.pages_in_use(), 3, "shared pages must survive one side's release");
+        assert_eq!(arena.gather_k(&parent)[..5 * 4], before[..]);
+        arena.release(&mut parent);
+        assert_eq!(arena.pages_in_use(), 0, "refcounts must reclaim every page");
+    }
+
+    // ---- (c) paged ≡ contiguous, bitwise, across page sizes × threads
+    // the contiguous reference is a one-page arena (page_tokens = seq:
+    // a single run, exactly the pre-§14 layout); every smaller page
+    // size and every QFT_THREADS must reproduce it bit for bit, and
+    // streaming decode must stay bitwise on the forward recompute
+    let block = trained_block(400, vec![4, 4, 8], 4);
+    let dm = block.d();
+    let seq = 13usize; // not a multiple of any swept page size
+    let mut xs = vec![0.0f32; seq * dm];
+    Rng::new(401).fill_normal(&mut xs, 1.0);
+    let streaming = ServeBlock::streaming(&block);
+    let merged = ServeBlock::merged(&block).unwrap();
+    std::env::set_var("QFT_THREADS", "1");
+    let full = block.forward(&xs, 1, seq).unwrap();
+    let ref_streaming = paged_decode(&streaming, &xs, seq, seq);
+    let ref_merged = paged_decode(&merged, &xs, seq, seq);
+    assert_eq!(ref_streaming, full, "contiguous streaming decode drifted from forward");
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("QFT_THREADS", threads);
+        for page_tokens in [1usize, 4, 16] {
+            let got_s = paged_decode(&streaming, &xs, seq, page_tokens);
+            let got_m = paged_decode(&merged, &xs, seq, page_tokens);
+            assert_eq!(
+                got_s, ref_streaming,
+                "streaming decode differs at page_tokens={page_tokens} QFT_THREADS={threads}"
+            );
+            assert_eq!(
+                got_m, ref_merged,
+                "merged decode differs at page_tokens={page_tokens} QFT_THREADS={threads}"
+            );
+        }
+    }
+    std::env::remove_var("QFT_THREADS");
+
+    // ---- (d) scheduler page budget: quarantine + reclaim ------------
+    // 8 one-token pages, max_batch 2.  The hog (2 + 8 − 1 = 9 cached
+    // positions) exceeds the budget even alone and dies CacheExhausted
+    // on its 9th push; the short requests (3 pages each) fit alongside
+    // it — id 2 only because id 1's retirement returned its pages —
+    // and must finish bitwise equal to an unbounded run.
+    let mk = |id: u64, p_len: usize, n_gen: usize, seed: u64| {
+        let mut prompt = vec![0.0f32; p_len * dm];
+        Rng::new(seed).fill_normal(&mut prompt, 1.0);
+        ServeRequest { id, prompt, n_gen }
+    };
+    let reqs = vec![mk(0, 2, 8, 410), mk(1, 2, 2, 411), mk(2, 2, 2, 412)];
+    let free_cfg = ServeConfig::default().with_max_batch(2).with_page_tokens(1);
+    let free = BatchScheduler::with_config(merged.clone(), free_cfg).unwrap();
+    let (unbounded, _) = free.run(reqs.clone()).unwrap();
+    let tight = BatchScheduler::with_config(merged.clone(), free_cfg.with_kv_pages(8)).unwrap();
+    let (bounded, stats) = tight.run(reqs).unwrap();
+    assert_eq!((stats.completed, stats.failed, stats.shed), (2, 1, 0));
+    let by_id =
+        |outs: &[ServeOutput], id: u64| outs.iter().find(|o| o.id == id).unwrap().result.clone();
+    assert_eq!(
+        by_id(&bounded, 0).unwrap_err(),
+        ServeError::CacheExhausted { pages: 8 },
+        "the hog must die on the page budget"
+    );
+    for id in [1, 2] {
+        assert_eq!(
+            by_id(&bounded, id),
+            by_id(&unbounded, id),
+            "request {id} perturbed by a peer's cache exhaustion"
+        );
+    }
+    assert_eq!(stats.pages_in_use, 8, "peak pages must saturate exactly at the budget");
+}

@@ -238,7 +238,8 @@ fn decode_parity_and_scheduler_invariance() {
         let p_len = 1 + (id as usize % 4);
         let mut prompt = vec![0.0f32; p_len * d];
         rng.fill_normal(&mut prompt, 1.0);
-        // p_len + n_gen − 1 ≤ 7 resident steps: inside the deadline
+        // whole-prompt prefill ⇒ n_gen ≤ 4 resident steps: inside the
+        // deadline
         healthy.push(ServeRequest { id, prompt, n_gen: 2 + (id as usize % 3) });
     }
     let mut faulty = Vec::new();
@@ -251,7 +252,7 @@ fn decode_parity_and_scheduler_invariance() {
     faulty.push(ServeRequest { id: 203, prompt: nan_prompt, n_gen: 2 });
     let mut slow = vec![0.0f32; 2 * d];
     rng.fill_normal(&mut slow, 1.0);
-    // 2 + 20 − 1 = 21 resident steps > deadline 8 (tokens 22 ≤ budget)
+    // 1 + 20 − 1 = 20 resident steps > deadline 8 (tokens 22 ≤ budget)
     faulty.push(ServeRequest { id: 204, prompt: slow, n_gen: 20 });
     let mut fat = vec![0.0f32; 20 * d];
     rng.fill_normal(&mut fat, 1.0);
@@ -319,6 +320,33 @@ fn decode_parity_and_scheduler_invariance() {
         }
     }
     std::env::remove_var("QFT_THREADS");
+
+    // ---- (e) scratch reuse and prefill chunking are bitwise inert ---
+    // the scheduler reuses ONE DecodeScratch (and one KV arena) across
+    // every request, step, and run; a scheduler that has already
+    // served a full mixed load must produce bits identical to a
+    // freshly-built one, and any --prefill-chunk must match the
+    // row-at-a-time schedule exactly
+    // `sched` has executed 10 full mixed runs by now — its workspace
+    // buffers and arena blob are thoroughly warm
+    let (reused, _) = sched.run(healthy.clone()).unwrap();
+    let reused: Vec<(u64, Vec<f32>)> =
+        reused.into_iter().map(|o| (o.id, o.result.unwrap())).collect();
+    let fresh = run_scheduler(&sb, healthy.clone(), 5);
+    assert_eq!(reused, fresh, "reused workspace changed request bits");
+    for chunk in [1usize, 3, 0] {
+        let cfg = ServeConfig::default().with_max_batch(5).with_prefill_chunk(chunk);
+        let chunked = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (out, _) = chunked.run(healthy.clone()).unwrap();
+        for (o, (id, want)) in out.iter().zip(&fresh) {
+            assert_eq!(o.id, *id);
+            assert_eq!(
+                o.generated().unwrap(),
+                &want[..],
+                "prefill_chunk {chunk} changed request {id}"
+            );
+        }
+    }
 
     // bounded intake queue: shedding is arrival-order-dependent by
     // design, so it is pinned at a fixed order — both policies keep
