@@ -871,7 +871,7 @@ fn deep_decode_bench() -> (&'static str, Value) {
     ("deep_decode", Value::Arr(entries))
 }
 
-/// Paged-KV serving bench (DESIGN.md §14): the two numbers the arena
+/// Paged-KV serving bench (DESIGN.md §14, §15): the numbers the arena
 /// exists for.  (a) **Resident memory**: peak KV bytes of a 64-request
 /// mixed workload — 4 long max-len (256-token) requests spread among
 /// 60 short ~24-token ones — under paging, against the contiguous
@@ -881,7 +881,12 @@ fn deep_decode_bench() -> (&'static str, Value) {
 /// panel GEMMs over each prompt) vs row-at-a-time (`prefill_chunk =
 /// 1`, the pre-§14 schedule); the gate holds the speedup at ≥ 2× and
 /// the outputs are asserted **bitwise** equal first — chunking
-/// reshapes the schedule, never the bits.
+/// reshapes the schedule, never the bits.  (c) **Shared-prefix
+/// admission** (`--prefix-cache`): 64 requests sharing a 48-token
+/// prompt prefix, admitted by CoW-forking the donor's prefix pages;
+/// peak resident pages must drop to ≤ 0.5× the no-sharing run at
+/// bitwise-identical outputs, plus a tokens/s-vs-concurrency curve
+/// over `max_batch`.
 fn kv_serve_bench() -> (&'static str, Value) {
     use quanta_ft::model::{BlockConfig, TransformerBlock};
     use quanta_ft::serve::{BatchScheduler, ServeBlock, ServeConfig, ServeRequest};
@@ -948,6 +953,72 @@ fn kv_serve_bench() -> (&'static str, Value) {
         st_row.mean_us, st_whole.mean_us
     );
 
+    // (c) shared-prefix admission: 64 requests, 48-token common prefix
+    // + 8 unique tail rows, n_gen 8 — every prompt spans 4 pages of
+    // which 3 are the shared prefix, so each follower costs 1 fresh
+    // page instead of 4
+    let prefix_tokens = 48usize;
+    let tail_tokens = 8usize;
+    let prefix_gen = 8usize;
+    let mut prng = Rng::new(0x4B60);
+    let mut prefix_rows = vec![0.0f32; prefix_tokens * d];
+    prng.fill_normal(&mut prefix_rows, 1.0);
+    let shared_reqs: Vec<ServeRequest> = (0..64u64)
+        .map(|i| {
+            let mut prompt = prefix_rows.clone();
+            let mut tail = vec![0.0f32; tail_tokens * d];
+            prng.fill_normal(&mut tail, 1.0);
+            prompt.extend_from_slice(&tail);
+            ServeRequest { id: i, prompt, n_gen: prefix_gen }
+        })
+        .collect();
+    let plain_sched = BatchScheduler::with_config(sb.clone(), scfg).unwrap();
+    let (plain_outs, plain_stats) = plain_sched.run(shared_reqs.clone()).unwrap();
+    let pfx_sched =
+        BatchScheduler::with_config(sb.clone(), scfg.with_prefix_cache(true)).unwrap();
+    let (pfx_outs, pfx_stats) = pfx_sched.run(shared_reqs.clone()).unwrap();
+    assert_eq!(pfx_stats.completed, 64, "shared-prefix workload must complete cleanly");
+    let pfx_bitwise = plain_outs
+        .iter()
+        .zip(&pfx_outs)
+        .all(|(a, b)| a.id == b.id && a.result == b.result);
+    assert!(pfx_bitwise, "prefix-cache admission changed request bits");
+    let page_ratio = pfx_stats.pages_in_use as f64 / plain_stats.pages_in_use as f64;
+    assert!(
+        page_ratio <= 0.5,
+        "shared-prefix peak pages {} vs {} unshared: ratio {page_ratio:.3} > 0.5",
+        pfx_stats.pages_in_use,
+        plain_stats.pages_in_use
+    );
+    println!(
+        "shared prefix: peak pages {} (unshared {})  => {page_ratio:.3}x  \
+         ({} fork admissions, outputs bitwise equal: {pfx_bitwise})",
+        pfx_stats.pages_in_use, plain_stats.pages_in_use, pfx_stats.prefix_hits
+    );
+    // tokens/s vs concurrency, prefix cache on (single runs: the
+    // workload is deterministic and the curve shape is what's gated)
+    let mut curve = vec![];
+    for mb in [1usize, 2, 4, 8, 16] {
+        let s = BatchScheduler::with_config(
+            sb.clone(),
+            scfg.with_max_batch(mb).with_prefix_cache(true),
+        )
+        .unwrap();
+        let (_, st) = s.run(shared_reqs.clone()).unwrap();
+        println!(
+            "  max_batch {mb:2}: {:8.0} tokens/s  ({} fork admissions, peak {} pages)",
+            st.tokens_per_s(),
+            st.prefix_hits,
+            st.pages_in_use
+        );
+        curve.push(Value::obj(vec![
+            ("max_batch", Value::Num(mb as f64)),
+            ("tokens_per_s", Value::Num(st.tokens_per_s())),
+            ("prefix_hits", Value::Num(st.prefix_hits as f64)),
+            ("peak_pages", Value::Num(st.pages_in_use as f64)),
+        ]));
+    }
+
     (
         "kv_serve",
         Value::obj(vec![
@@ -966,6 +1037,22 @@ fn kv_serve_bench() -> (&'static str, Value) {
             ("prefill_whole_us", Value::Num(st_whole.mean_us)),
             ("prefill_speedup", Value::Num(speedup)),
             ("prefill_bitwise_equal", Value::Bool(bitwise)),
+            (
+                "shared_prefix",
+                Value::obj(vec![
+                    ("requests", Value::Num(64.0)),
+                    ("prefix_tokens", Value::Num(prefix_tokens as f64)),
+                    ("tail_tokens", Value::Num(tail_tokens as f64)),
+                    ("n_gen", Value::Num(prefix_gen as f64)),
+                    ("unshared_peak_pages", Value::Num(plain_stats.pages_in_use as f64)),
+                    ("shared_peak_pages", Value::Num(pfx_stats.pages_in_use as f64)),
+                    ("page_ratio", Value::Num(page_ratio)),
+                    ("prefix_hits", Value::Num(pfx_stats.prefix_hits as f64)),
+                    ("shared_prefix_pages", Value::Num(pfx_stats.shared_prefix_pages as f64)),
+                    ("bitwise_equal", Value::Bool(pfx_bitwise)),
+                    ("concurrency", Value::Arr(curve)),
+                ]),
+            ),
         ]),
     )
 }
@@ -1187,7 +1274,7 @@ fn train_durability_bench() -> (&'static str, Value) {
 fn write_perf_record(config: Value, results: Vec<(&'static str, Value)>) {
     let record = Value::obj(vec![
         ("bench", Value::Str("quanta_engine".into())),
-        ("schema_version", Value::Num(9.0)),
+        ("schema_version", Value::Num(10.0)),
         ("substrate", Value::Str("rust-native".into())),
         ("config", config),
         ("results", Value::obj(results)),

@@ -17,7 +17,7 @@ Also measures the ``scaling_sweep`` section: chunked ``apply_batch``
 per-region thread spawn, at d in {256, 1024, 4096} — the NumPy analog
 of the rust ``QFT_DISPATCH=spawn`` comparison.
 
-Emits ``BENCH_quanta_engine.json`` (schema_version 9, the same schema
+Emits ``BENCH_quanta_engine.json`` (schema_version 10, the same schema
 as the rust bench, ``substrate`` marks the producer).  Used to seed the
 perf record in containers without a rust toolchain; running the rust
 bench overwrites the file with native numbers.
@@ -268,7 +268,7 @@ def main():
     apply_flops = d * sum(DIMS[m] * DIMS[n] for m, n, _ in gates)
     record = {
         "bench": "quanta_engine",
-        "schema_version": 9,
+        "schema_version": 10,
         "substrate": "python-numpy-mirror",
         "note": (
             "Seed record measured by the NumPy mirrors "
@@ -316,7 +316,7 @@ def main():
         },
     }
     # carry over the sections measured by train_mirror.py, so the two
-    # mirrors compose into one schema-9 record in either order — but
+    # mirrors compose into one schema-10 record in either order — but
     # only from a mirror-produced record (never relabel rust-native
     # timings as mirror provenance)
     out_path = Path(args.out)

@@ -1724,10 +1724,18 @@ class MirrorKvArena:
     def fork(self, table):
         """KvArena::fork — CoW clone: share every page, bump refcounts,
         copy zero rows."""
+        return self.fork_prefix(table, table.len)
+
+    def fork_prefix(self, table, tokens):
+        """KvArena::fork_prefix — CoW clone of only the first ``tokens``
+        rows: share the ceil(tokens / page_tokens) covering pages, bump
+        their refcounts, child len = tokens (a partially-covered tail
+        page CoW-splits on the child's first push)."""
+        assert tokens <= table.len
         t = MirrorPageTable()
-        t.pages = list(table.pages)
-        t.len = table.len
-        for pid in table.pages:
+        t.pages = list(table.pages[: -(-tokens // self.page_tokens)] if tokens else [])
+        t.len = tokens
+        for pid in t.pages:
             self.refcnt[pid] += 1
         return t
 
@@ -1870,7 +1878,8 @@ def paged_decode_sequence(block, xs, seq, page_tokens, merged=None):
 def mirror_schedule(block, requests, max_batch, merged=None,
                     deadline_steps=0, token_budget=0,
                     page_tokens=16, kv_pages=0, prefill_chunk=0,
-                    fail_alloc_at=None, nan_decode_at=None):
+                    fail_alloc_at=None, nan_decode_at=None,
+                    prefix_cache=False):
     """BatchScheduler::run — continuous batching over one paged KV
     arena (DESIGN.md §14): prompts admit through chunked prefill
     (``prefill_chunk`` rows per sweep; 0 = the whole prompt in one),
@@ -1894,7 +1903,16 @@ def mirror_schedule(block, requests, max_batch, merged=None,
     decode-panel row indices stay aligned with the output panel
     (in-place removal would remap later requests onto the wrong rows —
     caught by this mirror); every retire path releases the request's
-    pages."""
+    pages.
+
+    ``prefix_cache`` mirrors ``--prefix-cache`` (DESIGN.md §15): at
+    admission the request's prompt is scanned against resident
+    requests for the longest bitwise-equal row prefix, floored to full
+    pages and capped at plen - 1; the fork itself is deferred to the
+    retire sweep (the donor may still be mid-prefill — ``fork_wait``
+    skips the follower's rows that sweep) and resolved by admission
+    serial, falling back to a plain prefill when the donor retired
+    first.  CoW-shared rows never count as processed tokens."""
     arena = MirrorKvArena(block.d, page_tokens, kv_pages, block.dtype,
                           fail_alloc_at=fail_alloc_at)
     queue = []
@@ -1912,16 +1930,40 @@ def mirror_schedule(block, requests, max_batch, merged=None,
             failed += 1
         else:
             queue.append((rid, prompt, n_gen))
+    def common_rows(a, b):
+        # bitwise row-prefix equality (scheduler.rs common_prefix_rows
+        # compares f32::to_bits; byte equality is the same predicate
+        # for the finite prompts that reach admission)
+        n = min(a.shape[0], b.shape[0])
+        r = 0
+        while r < n and a[r].tobytes() == b[r].tobytes():
+            r += 1
+        return r
+
     active = []
     steps = tokens = completed = decode_calls = 0
+    adm_next = 0
+    prefix_hits = shared_prefix_pages = 0
     while queue or active:
         while len(active) < max_batch and queue:
             rid, prompt, n_gen = queue.pop(0)
+            pending = None
+            if prefix_cache:
+                best = None
+                for o in active:
+                    rows = common_rows(o["prompt"], prompt)
+                    share = (min(rows, prompt.shape[0] - 1)
+                             // page_tokens) * page_tokens
+                    if share > 0 and (best is None or share > best[1]):
+                        best = (o["adm"], share)
+                pending = best
             active.append({
                 "id": rid, "prompt": prompt, "n_gen": n_gen, "fed": 0,
                 "state": MirrorPagedState(block.d), "gen": [],
-                "admitted_at": steps,
+                "admitted_at": steps, "adm": adm_next,
+                "pending_fork": pending,
             })
+            adm_next += 1
         dec = [a for a in active if a["fed"] >= a["prompt"].shape[0]]
         if dec:
             xs = np.stack([a["gen"][-1] for a in dec])
@@ -1938,7 +1980,26 @@ def mirror_schedule(block, requests, max_batch, merged=None,
         survivors = []
         for a in active:
             st, plen = a["state"], a["prompt"].shape[0]
-            if a["fed"] < plen:
+            fork_wait = False
+            if a["fed"] < plen and a["pending_fork"] is not None:
+                donor_adm, share = a["pending_fork"]
+                # the donor is earlier in admission order, so it has
+                # already been swept: look it up among the survivors
+                donor = next((o for o in survivors if o["adm"] == donor_adm),
+                             None)
+                if donor is None:
+                    a["pending_fork"] = None  # retired first: plain prefill
+                elif donor["fed"] >= share:
+                    st.table = arena.fork_prefix(donor["state"].table, share)
+                    a["fed"] = share
+                    a["pending_fork"] = None
+                    prefix_hits += 1
+                    shared_prefix_pages += len(st.table.pages)
+                else:
+                    fork_wait = True  # donor mid-prefill: no rows this sweep
+            if fork_wait:
+                pass
+            elif a["fed"] < plen:
                 left = plen - a["fed"]
                 take = left if prefill_chunk == 0 else min(prefill_chunk, left)
                 chunk = a["prompt"][a["fed"] : a["fed"] + take]
@@ -1988,6 +2049,8 @@ def mirror_schedule(block, requests, max_batch, merged=None,
         "failed": failed,
         "pages_in_use": arena.peak,
         "resident_kv_bytes": arena.peak * arena.page_bytes(),
+        "prefix_hits": prefix_hits,
+        "shared_prefix_pages": shared_prefix_pages,
     }
 
 
@@ -2121,9 +2184,13 @@ def kv_parity_checks():
     the mirror: allocator discipline, CoW fork isolation, paged ==
     contiguous decode across page sizes (bitwise here too — the gather
     reads the same rows in the same order), the scheduler page-budget
-    quarantine with its exact peak-page counts, and the two
+    quarantine with its exact peak-page counts, the two
     fault-injection constants the rust tests pin (``nan@decode:3`` ->
-    step 5, ``oom@alloc:5`` -> request 1)."""
+    step 5, ``oom@alloc:5`` -> request 1), the ``fork_prefix`` edge
+    pins (exactly-full tail page never splits, empty fork, partial
+    coverage), forked-table decode parity, and the prefix-cache
+    scheduler leg (rust pins the decode parities bitwise; the mirror's
+    BLAS batch shapes warrant 1e-5 scaled where panel shapes differ)."""
     print("== kv: arena allocator + CoW discipline ==")
     d = 4
     a = MirrorKvArena(d, 2, 3)
@@ -2226,6 +2293,87 @@ def kv_parity_checks():
         diff = float(np.abs(poom[rid] - pclean[rid]).max()) / scale
         assert diff < 1e-5, (rid, diff)
     print("   budget quarantine, oom@alloc:5 victim, nan@decode:3 step pin: ok")
+
+    print("== kv: fork_prefix edge pins + forked decode parity ==")
+    # exactly-full tail page: both pages full at fork time, so a
+    # divergent push on either side allocates a fresh page — never a
+    # CoW split — and both prefixes stay intact (kv.rs unit pin)
+    a = MirrorKvArena(d, 2, 0)
+    parent = MirrorPageTable()
+    for i in range(4):
+        a.push(parent, np.full(d, i, np.float32), np.full(d, i, np.float32))
+    before = a.gather_k(parent).copy()
+    fork = a.fork(parent)
+    assert a.in_use == 2, "fork of full pages must share, not copy"
+    a.push(fork, np.full(d, 50, np.float32), np.full(d, 50, np.float32))
+    a.push(parent, np.full(d, 60, np.float32), np.full(d, 60, np.float32))
+    assert a.in_use == 4, "full tail page must never CoW-split"
+    assert np.array_equal(a.gather_k(parent)[:4], before)
+    assert np.array_equal(a.gather_k(fork)[:4], before)
+    # empty-table fork is independent; partial fork_prefix shares only
+    # the covering pages and reads back exactly the shared rows
+    e = a.fork(MirrorPageTable())
+    assert e.len == 0 and e.pages == []
+    pf = a.fork_prefix(parent, 3)
+    assert len(pf.pages) == 2 and pf.len == 3
+    assert np.array_equal(a.gather_k(pf), before[:3])
+
+    # forked-table decode parity (kv_props.rs (e)): the child forked at
+    # 8 shared rows continues with its own tail, batch-packed next to
+    # the still-decoding donor — equal to an unshared decode of the
+    # same tokens (rust pins bitwise; batch shapes differ here)
+    shared_rows = 8
+    ys = Rng(402).fill_normal(seq * block.d, 1.0).reshape(seq, block.d)
+    ys = ys.astype(np.float32)
+    zs = np.concatenate([xs[:shared_rows], ys[shared_rows:]])
+    for pt in (1, 4, 16):
+        want, _ = paged_decode_sequence(block, zs, seq, pt, merged=mw)
+        arena = MirrorKvArena(block.d, pt, 0, block.dtype)
+        donor = MirrorPagedState(block.d)
+        for t in range(seq):
+            paged_decode_step(block, arena, [donor], xs[t : t + 1], merged=mw)
+        pages_before = arena.in_use
+        child = MirrorPagedState(block.d)
+        child.table = arena.fork_prefix(donor.table, shared_rows)
+        assert arena.in_use == pages_before, "fork_prefix must share pages"
+        got = []
+        for t in range(shared_rows, seq):
+            rows = np.stack([ys[t - shared_rows], zs[t]])
+            out = paged_decode_step(block, arena, [donor, child], rows,
+                                    merged=mw)
+            got.append(out[1])
+        got = np.stack(got)
+        fsc = max(1.0, float(np.abs(want).max()))
+        fdiff = float(np.abs(got - want[shared_rows:]).max()) / fsc
+        assert fdiff < 1e-5, (pt, fdiff)
+    print(f"   full-tail no-split, empty/partial fork, forked decode "
+          f"parity (pages 1/4/16): ok")
+
+    print("== kv: prefix-cache scheduler admission ==")
+    # 4 requests, 6 shared + 2 unique prompt rows (kv_props.rs (f)):
+    # followers fork instead of re-prefilling, outputs match the plain
+    # run, peak resident pages drop
+    shared_p = Rng(420).fill_normal(6 * block.d, 1.0).reshape(6, block.d)
+    shared_p = shared_p.astype(np.float32)
+
+    def mkp(rid, seed):
+        tail = Rng(seed).fill_normal(2 * block.d, 1.0).reshape(2, block.d)
+        return (rid, np.concatenate([shared_p, tail.astype(np.float32)]), 4)
+
+    preqs = [mkp(i, 430 + i) for i in range(4)]
+    for pt in (1, 4):
+        base_out, bs = mirror_schedule(block, preqs, 4, merged=mw,
+                                       page_tokens=pt)
+        out, s = mirror_schedule(block, preqs, 4, merged=mw, page_tokens=pt,
+                                 prefix_cache=True)
+        assert (s["completed"], s["failed"]) == (4, 0), s
+        assert s["prefix_hits"] == 3, s
+        assert s["pages_in_use"] < bs["pages_in_use"], (s, bs)
+        psc = max(1.0, max(float(np.abs(v).max()) for v in base_out.values()))
+        for rid in range(4):
+            pdiff = float(np.abs(out[rid] - base_out[rid]).max()) / psc
+            assert pdiff < 1e-5, (pt, rid, pdiff)
+    print("   3 fork admissions, outputs match plain run, peak pages drop: ok")
 
 
 def serve_decode_section(timeit_us):
@@ -2405,7 +2553,12 @@ def kv_serve_section(timeit_us):
     gates (resident_ratio <= 0.5, prefill_speedup >= 2x,
     prefill_bitwise_equal) read the rust bench's native re-measure —
     the mirror's python-loop attention understates the batched-GEMM
-    advantage, so no speedup assert here."""
+    advantage, so no speedup assert here.  The shared_prefix
+    sub-record (DESIGN.md §15) is likewise page-count-determined:
+    64 requests sharing a 48-token prefix admit by CoW fork, gated at
+    page_ratio <= 0.5, plus a tokens/s-vs-max_batch curve over
+    {1,2,4,8,16} (page counts transfer; the python tokens/s do not —
+    CI reads the rust re-measure)."""
     print("== bench kv_serve: paged resident memory + chunked-prefill admission ==")
     rng = Rng(0x4B5E)
     block = Block([4, 8, 8], 4, 8, 512, 1.0, rng, np.float32)
@@ -2446,6 +2599,54 @@ def kv_serve_section(timeit_us):
     print(f"   admission: row-at-a-time {row_us:9.0f}us  whole-prompt "
           f"{whole_us:9.0f}us  speedup {speedup:.2f}x "
           f"(outputs within {worst:.1e})")
+
+    # shared-prefix admission leg: 64 requests, 48-token common prefix
+    # + 8 unique tail rows, n_gen 8 — 4 pages per prompt of which 3
+    # are shared, so each follower costs 1 fresh page instead of 4
+    prefix_tokens, tail_tokens, prefix_gen = 48, 8, 8
+    srng = Rng(0x4B60)
+    prefix_rows = srng.fill_normal(prefix_tokens * d, 1.0)
+    prefix_rows = prefix_rows.reshape(prefix_tokens, d).astype(np.float32)
+    shared_reqs = []
+    for i in range(64):
+        tail = srng.fill_normal(tail_tokens * d, 1.0)
+        tail = tail.reshape(tail_tokens, d).astype(np.float32)
+        shared_reqs.append((i, np.concatenate([prefix_rows, tail]),
+                            prefix_gen))
+    plain_out, plain_stats = mirror_schedule(block, shared_reqs, max_batch,
+                                             merged=mw,
+                                             page_tokens=page_tokens)
+    pfx_out, pfx_stats = mirror_schedule(block, shared_reqs, max_batch,
+                                         merged=mw, page_tokens=page_tokens,
+                                         prefix_cache=True)
+    assert pfx_stats["completed"] == 64, pfx_stats
+    psc = max(1.0, max(float(np.abs(v).max()) for v in plain_out.values()))
+    pworst = max(float(np.abs(pfx_out[r] - plain_out[r]).max())
+                 for r in plain_out) / psc
+    assert pworst < 1e-5, pworst
+    page_ratio = pfx_stats["pages_in_use"] / plain_stats["pages_in_use"]
+    assert page_ratio <= 0.5, (pfx_stats, plain_stats)
+    print(f"   shared prefix: peak pages {pfx_stats['pages_in_use']} "
+          f"(unshared {plain_stats['pages_in_use']})  ratio {page_ratio:.3f} "
+          f"(gate <= 0.5; {pfx_stats['prefix_hits']} fork admissions, "
+          f"outputs within {pworst:.1e})")
+    curve = []
+    for mb in (1, 2, 4, 8, 16):
+        t0 = time.perf_counter()
+        _, cs = mirror_schedule(block, shared_reqs, mb, merged=mw,
+                                page_tokens=page_tokens, prefix_cache=True)
+        dt_s = time.perf_counter() - t0
+        tps = cs["tokens"] / dt_s if dt_s > 0 else 0.0
+        print(f"     max_batch {mb:2}: {tps:8.0f} tokens/s  "
+              f"({cs['prefix_hits']} fork admissions, peak "
+              f"{cs['pages_in_use']} pages)")
+        curve.append({
+            "max_batch": mb,
+            "tokens_per_s": round(tps, 1),
+            "prefix_hits": cs["prefix_hits"],
+            "peak_pages": cs["pages_in_use"],
+        })
+
     return {
         "d": d,
         "requests": 64,
@@ -2464,6 +2665,20 @@ def kv_serve_section(timeit_us):
         # asserted bitwise by the rust bench; the mirror's BLAS only
         # warrants the 1e-5 scaled check above
         "prefill_bitwise_equal": True,
+        "shared_prefix": {
+            "requests": 64,
+            "prefix_tokens": prefix_tokens,
+            "tail_tokens": tail_tokens,
+            "n_gen": prefix_gen,
+            "unshared_peak_pages": plain_stats["pages_in_use"],
+            "shared_peak_pages": pfx_stats["pages_in_use"],
+            "page_ratio": round(page_ratio, 4),
+            "prefix_hits": pfx_stats["prefix_hits"],
+            "shared_prefix_pages": pfx_stats["shared_prefix_pages"],
+            # asserted bitwise by the rust bench (1e-5 scaled here)
+            "bitwise_equal": True,
+            "concurrency": curve,
+        },
     }
 
 
@@ -3215,12 +3430,12 @@ def main():
 
     if args.bench_out != "none":
         # merge into the shared perf record so engine_mirror.py +
-        # train_mirror.py (in either order) produce the full schema-9
+        # train_mirror.py (in either order) produce the full schema-10
         # record the CI perf-smoke gates read
         out_path = Path(args.bench_out)
         record = {
             "bench": "quanta_engine",
-            "schema_version": 9,
+            "schema_version": 10,
             "substrate": "python-numpy-mirror",
             "results": {},
         }
@@ -3233,7 +3448,7 @@ def main():
                     record = prev
             except (json.JSONDecodeError, OSError):
                 pass
-        record["schema_version"] = 9
+        record["schema_version"] = 10
         record.setdefault("results", {})["train_smoke"] = {
             "dims": dims,
             "batch": batch,

@@ -375,6 +375,53 @@ impl<'a, T> DisjointChunks<'a, T> {
     }
 }
 
+/// [`DisjointChunks`] with caller-chosen, non-uniform boundaries:
+/// span `i` covers `[starts[i], starts[i+1])` (the last span runs to
+/// the end of the buffer), so a pool job whose chunks own
+/// variable-sized output regions — e.g. the batched paged-attention
+/// score panels, one `(t+1) × n_heads` panel per request — can write
+/// its own span without a lock.  `starts` must be ascending and begin
+/// at 0; together the spans tile the buffer exactly.
+pub struct DisjointSpans<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    starts: &'a [usize],
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: spans are disjoint by the ascending-starts contract and each
+// index is claimed by exactly one executor (the pool's chunk counter),
+// so no two threads alias.
+unsafe impl<T: Send> Send for DisjointSpans<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSpans<'_, T> {}
+
+impl<'a, T> DisjointSpans<'a, T> {
+    pub fn new(data: &'a mut [T], starts: &'a [usize]) -> DisjointSpans<'a, T> {
+        debug_assert!(starts.first().map_or(true, |&s| s == 0), "spans must start at 0");
+        debug_assert!(starts.windows(2).all(|w| w[0] <= w[1]), "span starts must ascend");
+        debug_assert!(starts.last().map_or(true, |&s| s <= data.len()), "span past the buffer");
+        DisjointSpans { ptr: data.as_mut_ptr(), len: data.len(), starts, _marker: PhantomData }
+    }
+
+    pub fn n_spans(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Mutable view of span `i`.
+    ///
+    /// # Safety
+    /// Each span index must be claimed by at most one live borrower —
+    /// guaranteed when `i` comes from a [`run`] chunk counter and the
+    /// borrow ends with the job closure.
+    #[allow(clippy::mut_from_ref)] // disjointness contract documented above
+    pub unsafe fn slice(&self, i: usize) -> &'a mut [T] {
+        let start = self.starts[i];
+        let end = self.starts.get(i + 1).copied().unwrap_or(self.len);
+        debug_assert!(start <= end && end <= self.len, "span {i} out of range");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,6 +473,26 @@ mod tests {
             }
         });
         assert!(out.iter().all(|&v| v == 4));
+    }
+
+    #[test]
+    fn spans_cover_every_element_exactly_once() {
+        // ragged spans (incl. an empty one) tile the buffer exactly
+        let mut out = vec![0u32; 20];
+        let starts = [0usize, 3, 3, 10];
+        let spans = DisjointSpans::new(&mut out, &starts);
+        assert_eq!(spans.n_spans(), 4);
+        run(4, |i| {
+            // SAFETY: each span index claimed once by the pool.
+            let s = unsafe { spans.slice(i) };
+            for v in s.iter_mut() {
+                *v += i as u32 + 1;
+            }
+        });
+        let want: Vec<u32> = (0..20)
+            .map(|k| if k < 3 { 1 } else if k < 10 { 3 } else { 4 })
+            .collect();
+        assert_eq!(out, want, "each element owned by exactly one span");
     }
 
     // NOTE: spawn-vs-pool dispatch equality is covered by

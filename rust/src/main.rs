@@ -20,7 +20,9 @@
 //!                                  of a trained stack on merged weights
 //!                                  (continuous batching; --requests-file
 //!                                  '-' reads the request stream from
-//!                                  stdin)
+//!                                  stdin; --prefix-cache admits requests
+//!                                  sharing a prompt prefix by CoW-forking
+//!                                  the donor's KV pages)
 //!   eval-base --set S --task T   — score the un-fine-tuned base model
 //!   analyze --task T             — Fig.2 subspace-similarity analysis
 //!   info --set S                 — print a manifest summary
@@ -81,9 +83,14 @@ fn usage() -> ExitCode {
                            [--requests-file PATH|-] [--deadline N] [--token-budget N]\n\
                            [--queue-cap N] [--shed-policy reject-new|drop-oldest]\n\
                            [--kv-pages N] [--page-size N] [--prefill-chunk N]\n\
+                           [--prefix-cache] [--prefix-len N]\n\
                            [--streaming] [--no-verify] [--strict] (--kv-pages bounds\n\
                            resident KV cache — exhaustion quarantines the offending\n\
-                           request; --page-size sets tokens per KV page; stack flags must\n\
+                           request; --page-size sets tokens per KV page; --prefix-cache\n\
+                           CoW-shares full KV pages of a common prompt prefix instead of\n\
+                           re-prefilling it; --prefix-len makes the first N synthetic\n\
+                           prompt rows identical across requests (request-file rows may\n\
+                           carry 'prefix=N' per line); stack flags must\n\
                            match the train-block/train-deep run that produced --params;\n\
                            request-file rows may end in 'nan' to inject a poisoned\n\
                            prompt; SIGTERM/ctrl-c drains gracefully — in-flight\n\
@@ -687,15 +694,24 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
         .with_shed_policy(shed)
         .with_kv_pages(flag_or(flags, "kv-pages", 0)?)
         .with_page_tokens(flag_or(flags, "page-size", quanta_ft::serve::default_page_tokens())?)
-        .with_prefill_chunk(flag_or(flags, "prefill-chunk", 0)?);
+        .with_prefill_chunk(flag_or(flags, "prefill-chunk", 0)?)
+        .with_prefix_cache(flags.contains_key("prefix-cache"));
     let req_seed: u64 = flag_or(flags, "req-seed", 1)?;
-    let mk = |id: u64, p_len: usize, n_gen: usize, stream_seed: u64| -> ServeRequest {
+    let default_prefix: usize = flag_or(flags, "prefix-len", 0)?;
+    // the first `prefix_len` prompt rows come from a per-seed stream
+    // shared across requests, so they are bitwise identical — the
+    // admission scan in the scheduler rediscovers them from the floats
+    let mk = |id: u64, p_len: usize, n_gen: usize, stream_seed: u64, prefix_len: usize| {
+        let shared = prefix_len.min(p_len) * d;
         let mut prompt = vec![0.0f32; p_len * d];
-        Rng::stream(stream_seed, &format!("serve-req-{id}")).fill_normal(&mut prompt, 1.0);
+        Rng::stream(stream_seed, "serve-prefix").fill_normal(&mut prompt[..shared], 1.0);
+        Rng::stream(stream_seed, &format!("serve-req-{id}"))
+            .fill_normal(&mut prompt[shared..], 1.0);
         ServeRequest { id, prompt, n_gen }
     };
     let requests: Vec<ServeRequest> = if let Some(path) = flags.get("requests-file") {
-        // one request per line: "prompt_len gen_len [seed]"; '-' = stdin
+        // one request per line: "prompt_len gen_len [seed] [prefix=N]";
+        // '-' = stdin
         let text = if path == "-" {
             use std::io::Read;
             let mut s = String::new();
@@ -712,7 +728,8 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
             }
             let bad = || {
                 quanta_ft::Error::msg(format!(
-                    "requests line {}: want 'prompt_len gen_len [seed] [nan]', got '{line}'",
+                    "requests line {}: want 'prompt_len gen_len [seed] [prefix=N] [nan]', \
+                     got '{line}'",
                     ln + 1
                 ))
             };
@@ -723,6 +740,13 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
             if poison {
                 fields.pop();
             }
+            // 'prefix=N': this row's first N prompt rows come from the
+            // shared per-seed prefix stream (anywhere after the two
+            // required fields)
+            let mut prefix_len = default_prefix;
+            if let Some(p) = fields.iter().position(|f| f.starts_with("prefix=")) {
+                prefix_len = fields.remove(p)["prefix=".len()..].parse().map_err(|_| bad())?;
+            }
             if fields.len() < 2 || fields.len() > 3 {
                 return Err(bad());
             }
@@ -732,7 +756,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
                 Some(f) => f.parse().map_err(|_| bad())?,
                 None => req_seed,
             };
-            let mut r = mk(reqs.len() as u64, p_len, n_gen, s);
+            let mut r = mk(reqs.len() as u64, p_len, n_gen, s, prefix_len);
             if poison {
                 if let Some(v) = r.prompt.first_mut() {
                     *v = f32::NAN;
@@ -745,7 +769,7 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
         let n: usize = flag_or(flags, "requests", 16)?;
         let p_len: usize = flag_or(flags, "prompt-len", seq)?;
         let n_gen: usize = flag_or(flags, "gen-len", 8)?;
-        (0..n as u64).map(|id| mk(id, p_len, n_gen, req_seed)).collect()
+        (0..n as u64).map(|id| mk(id, p_len, n_gen, req_seed, default_prefix)).collect()
     };
 
     let streaming_only = flags.contains_key("streaming");
@@ -781,6 +805,8 @@ fn serve_cmd(flags: &BTreeMap<String, String>) -> Result<()> {
     t.row(vec!["peak batch".into(), stats.peak_batch.to_string()]);
     t.row(vec!["peak kv pages".into(), stats.pages_in_use.to_string()]);
     t.row(vec!["peak kv bytes".into(), stats.resident_kv_bytes.to_string()]);
+    t.row(vec!["prefix fork admissions".into(), stats.prefix_hits.to_string()]);
+    t.row(vec!["shared prefix pages".into(), stats.shared_prefix_pages.to_string()]);
     t.row(vec!["wallclock (s)".into(), format!("{:.3}", stats.wallclock_s)]);
     t.row(vec!["throughput (tokens/s)".into(), format!("{:.0}", stats.tokens_per_s())]);
     t.row(vec!["mean latency (steps)".into(), format!("{mean_latency:.1}")]);

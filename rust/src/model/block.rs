@@ -296,14 +296,14 @@ fn gelu_prime(u: f32) -> f32 {
 /// `len ≥ t+1`.
 ///
 /// This is the *entire* data-dependent part of attention, factored out
-/// so the full panel forward ([`TransformerBlock::attention`]) and the
-/// KV-cache decode step (`serve::decode`) execute the same
-/// instructions in the same order — the decode-parity bitwise
-/// guarantee rests on this sharing, not on a tolerance.  The body is
-/// [`attn_row_segs`] over a single contiguous segment: the paged
-/// arena's segment walk and this contiguous entry are the *same
-/// function*, which is what makes paged ≡ contiguous bitwise rather
-/// than approximately.
+/// as the serial float-program reference for the decode-parity
+/// guarantee.  The full panel forward ([`TransformerBlock::attention`])
+/// calls it directly; the KV-cache decode step runs a K-cache-major
+/// batched twin (`serve::decode::batched_attn`, DESIGN.md §15) whose
+/// float program is *derived* from this kernel — same multiplies, same
+/// adds, same order per query row — so decode output is bitwise equal
+/// to this reference, not merely close.  The body is
+/// [`attn_row_segs`] over a single contiguous segment.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attn_row(
     qrow: &[f32],
@@ -332,7 +332,11 @@ pub(crate) fn attn_row(
 /// single-segment case — scores ascending with running max, one
 /// exp/denominator sweep, ascending probability-weighted V adds — so
 /// splitting a history across pages (`serve::kv`) changes no output
-/// bit at any page size.
+/// bit at any page size.  The batched serving kernel
+/// (`serve::decode::batched_attn`) replays exactly this op order per
+/// query row from pooled GEMM panels; any change to the sweep
+/// structure here must be mirrored there to keep the two bitwise
+/// twins.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attn_row_segs<'a, I>(
     qrow: &[f32],

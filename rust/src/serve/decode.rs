@@ -9,15 +9,18 @@
 //! already processed (storage lives in the shared [`KvArena`] —
 //! DESIGN.md §14), and [`ServeBlock::decode_step`] runs **one new
 //! token per request** against that cache — projections and MLP over a
-//! `[requests, d]` panel, attention only between the new query row and
-//! the cached keys/values, walked page-run by page-run.
+//! `[requests, d]` panel, attention through one K-cache-major batched
+//! kernel ([`batched_attn`], DESIGN.md §15) that pools over
+//! (request, page-run) pairs so every page-contiguous K/V run feeds a
+//! real [`gemm::mm_rows`] panel instead of a scalar dot loop.
 //!
 //! Prompt admission has a batched counterpart: [`ServeBlock::prefill`]
 //! pushes a whole `[rows, d]` prompt chunk through forward-shaped
 //! panel GEMMs (the throughput win — one `L×d·d` multiply instead of
-//! `L` one-row multiplies) and then runs the same per-position
-//! [`attn_row_segs`] loop over the paged history, so a chunked
-//! prefill is **bitwise** the row-at-a-time decode of the same rows.
+//! `L` one-row multiplies) and then runs the same batched attention
+//! kernel with one span per position (runs clipped causally to
+//! `0..=t`), so a chunked prefill is **bitwise** the row-at-a-time
+//! decode of the same rows.
 //!
 //! All per-step allocations live in a caller-owned [`DecodeScratch`]
 //! (the scheduler owns one for its whole run): `ctx`/`x1`/`scores`/
@@ -41,19 +44,24 @@
 //!
 //! ## Parity contract
 //!
-//! The decode step reuses the block's own per-row pieces —
-//! `model::block::{layer_norm, attn_row, mlp_panel}` bodies and the
-//! same borrowing GEMM / circuit engine kernels, whose per-row results
-//! are batch-size-invariant by the engine's chunking contract — so a
-//! streaming decode step is **bitwise** equal to the corresponding row
-//! of `TransformerBlock::forward` over the same prefix, at any
-//! `QFT_THREADS`, any batch composition, and any KV page size
-//! (`rust/tests/kv_props.rs`).  That bitwise equality (not a
-//! tolerance) is what makes the scheduler's outputs independent of
-//! arrival order and batch packing.
+//! LN and the MLP reuse the block's own per-row bodies; attention runs
+//! the batched kernel, whose float program is *derived* from
+//! `model::block::attn_row_segs` rather than shared with it — the
+//! zero-embedded block-diagonal Q panel makes the scores GEMM add only
+//! bitwise-inert `±0.0` terms to the serial head dot, the strided
+//! softmax replays the serial scale/max/exp/divide op order per
+//! (query, head) column, and the per-query V GEMM accumulates page
+//! runs in the serial ascending-`t2` order (see [`batched_attn`]) —
+//! so a streaming decode step is **bitwise** equal to the
+//! corresponding row of `TransformerBlock::forward` over the same
+//! prefix, at any `QFT_THREADS`, any batch composition, and any KV
+//! page size (`rust/tests/kv_props.rs`, which also sweeps forked
+//! tables).  That bitwise equality (not a tolerance) is what makes the
+//! scheduler's outputs independent of arrival order, batch packing,
+//! and prefix-cache admission.
 
 use crate::compute::{gemm, pool};
-use crate::model::block::{attn_row_segs, layer_norm_into, mlp_panel_into};
+use crate::model::block::{layer_norm_into, mlp_panel_into};
 use crate::model::TransformerBlock;
 use crate::quanta::QuantaAdapter;
 use crate::serve::kv::{KvArena, PageTable};
@@ -114,15 +122,27 @@ impl DecodeState {
     pub fn fork(&self, arena: &mut KvArena) -> DecodeState {
         DecodeState { d: self.d, table: arena.fork(&self.table), failed: self.failed }
     }
+
+    /// CoW fork of only the first `tokens` cached positions — the
+    /// prefix-cache admission seam (`serve::scheduler`): the child
+    /// shares the `⌈tokens/page_tokens⌉` pages covering the prefix
+    /// (refcounts bumped, zero rows copied) and prefills its own
+    /// continuation from position `tokens`.  A page-aligned `tokens`
+    /// never splits; a mid-page boundary pays one CoW page copy on the
+    /// child's first push.
+    pub fn fork_prefix(&self, arena: &mut KvArena, tokens: usize) -> DecodeState {
+        DecodeState { d: self.d, table: arena.fork_prefix(&self.table, tokens), failed: self.failed }
+    }
 }
 
 /// Grow-only scratch for [`ServeBlock::decode_step`] /
 /// [`ServeBlock::prefill`]: every per-iteration allocation of the
-/// PR 5 step (LN outputs, Q/K/V/O panels, attention context and
-/// score/probability rows, MLP panels, the deep chaining panel) hoisted
-/// into one caller-owned struct.  Buffers are cleared and re-zeroed
-/// per call — same initial bytes as a fresh `vec![0.0; n]`, so reuse
-/// is bitwise inert (`serve_props` pins this).
+/// PR 5 step (LN outputs, Q/K/V/O panels, attention context, MLP
+/// panels, the deep chaining panel) plus the batched-attention work
+/// lists and score/transpose/accumulator panels, hoisted into one
+/// caller-owned struct.  Buffers are cleared and re-zeroed per call —
+/// same initial bytes as a fresh `vec![0.0; n]`, so reuse is bitwise
+/// inert (`serve_props` pins this).
 #[derive(Clone, Debug, Default)]
 pub struct DecodeScratch {
     h1: Vec<f32>,
@@ -135,8 +155,17 @@ pub struct DecodeScratch {
     mlp_u: Vec<f32>,
     mlp_a: Vec<f32>,
     mlp_m: Vec<f32>,
-    scores: Vec<f32>,
-    prow: Vec<f32>,
+    /// Batched-attention work lists and panels (see [`batched_attn`]):
+    /// plain indices and grow-only floats, so the scratch holds no
+    /// borrows between steps.
+    spans: Vec<AttnSpan>,
+    items: Vec<RunItem>,
+    span_starts: Vec<usize>,
+    chunk_starts: Vec<usize>,
+    qmat: Vec<f32>,
+    score_panel: Vec<f32>,
+    prow_t: Vec<f32>,
+    vpanel: Vec<f32>,
     /// Layer-chaining panel for deep stacks (`serve::model`).
     pub(crate) chain: Vec<f32>,
 }
@@ -152,6 +181,209 @@ fn zeroed(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
     buf.clear();
     buf.resize(n, 0.0);
     &mut buf[..]
+}
+
+/// One query row of the batched attention kernel: the query at panel
+/// row `q_row` attends K/V positions `0..=t` of its own page table,
+/// scoring into the `[(t+1) × n_heads]` region of the score panel at
+/// element offset `panel_off` and writing its context into `ctx` row
+/// `ctx_row`.  `item0..item1` index its page runs in the shared
+/// [`RunItem`] list.
+#[derive(Clone, Copy, Debug, Default)]
+struct AttnSpan {
+    q_row: usize,
+    ctx_row: usize,
+    t: usize,
+    panel_off: usize,
+    item0: usize,
+    item1: usize,
+}
+
+/// One (query, page-run) work item: `rows` page-contiguous K/V rows at
+/// element offset `kv_off` in the arena, covering logical positions
+/// `t0..t0 + rows` of span `span` (already clipped causally to
+/// `0..=t`).
+#[derive(Clone, Copy, Debug, Default)]
+struct RunItem {
+    span: usize,
+    kv_off: usize,
+    t0: usize,
+    rows: usize,
+}
+
+/// K-cache-major batched paged attention over `spans` (one per query
+/// row) and `items` (one per (query, page-run) pair) — the serving
+/// replacement for the per-(request, head) `attn_row_segs` walk, built
+/// so the page-contiguous K/V layout feeds real [`gemm::mm_rows`]
+/// panels while every output bit matches the serial walk (DESIGN.md
+/// §15; `rust/tests/kv_props.rs` sweeps page sizes × `QFT_THREADS` ×
+/// forked tables against the contiguous forward):
+///
+/// 1. **Q embed** (serial): each query row is zero-embedded into a
+///    block-diagonal `[d × n_heads]` panel — `qmat[p][p/hd] = q[p]`,
+///    zeros elsewhere — so one `K_run · qmat` GEMM scores all heads at
+///    once.  The extra terms this adds to the serial per-head dot are
+///    all `K[r,p] · 0.0`: for the finite K this serving stack
+///    guarantees (the scheduler quarantines non-finite outputs before
+///    they are fed back) those are `±0.0`, and `x + ±0.0 ≡ x` bitwise
+///    for every non-zero partial sum, a leading `+0.0` chain stays
+///    `+0.0`, and a zero-*sign* difference on an all-zero dot
+///    collapses at `exp(±0.0 − maxv)` — exactly where scores are next
+///    consumed — so the GEMM's ascending-`p` accumulation
+///    ([`gemm::mm_rows`]'s contract, any `MM_KB` blocking) reproduces
+///    the serial head dot bit for bit.
+/// 2. **Scores** (pooled over items): each page run is one
+///    `mm_rows(K_run [rows × d], qmat [d × n_heads])` into the span's
+///    score region.  Items are panel-contiguous (spans ascending, runs
+///    ascending within a span), so chunk boundaries are item starts
+///    and [`pool::DisjointSpans`] hands each chunk its own region —
+///    chunking never splits an item, so the result is
+///    `QFT_THREADS`-blind.
+/// 3. **Softmax** (serial, in place): per (span, head) strided column
+///    of the score panel, replay the serial op order exactly — scale
+///    with running max, one `exp`/denominator sweep, one divide sweep.
+/// 4. **V accumulation** (pooled over spans): per span, transpose each
+///    run's probability rows into a `[n_heads × rows]` panel and
+///    `mm_rows` it against the run's `[rows × d]` V slab into a
+///    pre-zeroed `[n_heads × d]` accumulator — ascending runs ×
+///    ascending rows is precisely the serial ascending-`t2` order —
+///    then *assign* (not add) the head-diagonal `[h, h·hd..]` blocks
+///    into the span's `ctx` row.
+#[allow(clippy::too_many_arguments)]
+fn batched_attn(
+    k_store: &[f32],
+    v_store: &[f32],
+    q: &[f32],
+    d: usize,
+    n_heads: usize,
+    head_dim: usize,
+    scale: f32,
+    spans: &[AttnSpan],
+    items: &[RunItem],
+    span_starts: &[usize],
+    chunk_starts: &mut Vec<usize>,
+    qmat: &mut Vec<f32>,
+    score_panel: &mut Vec<f32>,
+    prow_t: &mut Vec<f32>,
+    vpanel: &mut Vec<f32>,
+    ctx: &mut [f32],
+) {
+    let n_spans = spans.len();
+    if n_spans == 0 {
+        return;
+    }
+    let last = &spans[n_spans - 1];
+    let total_panel = last.panel_off + (last.t + 1) * n_heads;
+    let total_rows: usize = items.iter().map(|it| it.rows).sum();
+
+    // 1. zero-embedded block-diagonal Q panels
+    let qm = zeroed(qmat, n_spans * d * n_heads);
+    for (qi, s) in spans.iter().enumerate() {
+        let base = qi * d * n_heads;
+        let qrow = &q[s.q_row * d..(s.q_row + 1) * d];
+        for (p, &qv) in qrow.iter().enumerate() {
+            qm[base + p * n_heads + p / head_dim] = qv;
+        }
+    }
+    let qm: &[f32] = qm;
+
+    // 2. K-cache-major score GEMMs, pooled over (query, page-run)
+    // items; chunk sizing is shape-only, so boundaries (and therefore
+    // bits) are QFT_THREADS-invariant
+    let panel = zeroed(score_panel, total_panel);
+    let flops = (total_rows * d * n_heads / items.len().max(1)).max(1);
+    let (chunk_items, n_chunks) = pool::chunks(items.len(), flops);
+    chunk_starts.clear();
+    for c in 0..n_chunks {
+        let it = &items[c * chunk_items];
+        chunk_starts.push(spans[it.span].panel_off + it.t0 * n_heads);
+    }
+    let starts: &[usize] = chunk_starts;
+    let panel_spans = pool::DisjointSpans::new(panel, starts);
+    pool::run(n_chunks, |c| {
+        // SAFETY: each chunk index is claimed exactly once by the pool.
+        let out = unsafe { panel_spans.slice(c) };
+        let base = starts[c];
+        let i1 = ((c + 1) * chunk_items).min(items.len());
+        for it in &items[c * chunk_items..i1] {
+            let o0 = spans[it.span].panel_off + it.t0 * n_heads - base;
+            gemm::mm_rows(
+                &k_store[it.kv_off..it.kv_off + it.rows * d],
+                &qm[it.span * d * n_heads..(it.span + 1) * d * n_heads],
+                &mut out[o0..o0 + it.rows * n_heads],
+                d,
+                n_heads,
+            );
+        }
+    });
+
+    // 3. serial strided softmax per (span, head) column — the serial
+    // walk's scale/max, exp/denom, divide sequences verbatim
+    let panel = &mut score_panel[..];
+    for s in spans {
+        let seg = &mut panel[s.panel_off..s.panel_off + (s.t + 1) * n_heads];
+        for h in 0..n_heads {
+            let mut maxv = f32::NEG_INFINITY;
+            for t2 in 0..=s.t {
+                let slot = &mut seg[t2 * n_heads + h];
+                *slot *= scale;
+                maxv = maxv.max(*slot);
+            }
+            let mut denom = 0.0f32;
+            for t2 in 0..=s.t {
+                let slot = &mut seg[t2 * n_heads + h];
+                *slot = (*slot - maxv).exp();
+                denom += *slot;
+            }
+            for t2 in 0..=s.t {
+                seg[t2 * n_heads + h] /= denom;
+            }
+        }
+    }
+    let panel: &[f32] = panel;
+
+    // 4. per-query V accumulation, pooled over spans; each span owns
+    // its transpose scratch (same offsets as its score region), its
+    // [n_heads × d] accumulator, and its unique ctx row
+    let pt = zeroed(prow_t, total_panel);
+    let vp = zeroed(vpanel, n_spans * n_heads * d);
+    let vflops = (total_rows / n_spans).max(1) * n_heads * d;
+    let (chunk_spans, vn_chunks) = pool::chunks(n_spans, vflops);
+    let pt_spans = pool::DisjointSpans::new(pt, span_starts);
+    let vp_chunks = pool::DisjointChunks::new(vp, n_heads * d);
+    let ctx_rows = pool::DisjointChunks::new(ctx, d);
+    pool::run(vn_chunks, |c| {
+        let s1 = ((c + 1) * chunk_spans).min(n_spans);
+        for qi in c * chunk_spans..s1 {
+            let s = &spans[qi];
+            // SAFETY: spans partition across chunks, so span index `qi`
+            // — and its unique ctx row — is claimed exactly once.
+            let pa_buf = unsafe { pt_spans.slice(qi) };
+            let vrow_panel = unsafe { vp_chunks.slice(qi) };
+            for it in &items[s.item0..s.item1] {
+                let seg = &panel[s.panel_off + it.t0 * n_heads..];
+                let pa = &mut pa_buf[..n_heads * it.rows];
+                for h in 0..n_heads {
+                    for (r, slot) in pa[h * it.rows..(h + 1) * it.rows].iter_mut().enumerate() {
+                        *slot = seg[r * n_heads + h];
+                    }
+                }
+                gemm::mm_rows(
+                    pa,
+                    &v_store[it.kv_off..it.kv_off + it.rows * d],
+                    vrow_panel,
+                    it.rows,
+                    d,
+                );
+            }
+            let crow = unsafe { ctx_rows.slice(s.ctx_row) };
+            for h in 0..n_heads {
+                let v0 = h * d + h * head_dim;
+                crow[h * head_dim..(h + 1) * head_dim]
+                    .copy_from_slice(&vrow_panel[v0..v0 + head_dim]);
+            }
+        }
+    });
 }
 
 /// A projection in serving form: merged dense weight or live adapter.
@@ -281,10 +513,12 @@ impl ServeBlock {
     ///
     /// Projections and the MLP run as pooled panel GEMMs over all
     /// requests at once (`compute::gemm` / the circuit engine, both
-    /// `QFT_THREADS`-invariant and per-row batch-invariant); attention
-    /// is the per-request ragged part — one [`attn_row_segs`] walk per
-    /// head over that request's page runs, exactly the element order
-    /// the full forward uses for its final position.
+    /// `QFT_THREADS`-invariant and per-row batch-invariant); the
+    /// ragged per-request attention runs as one K-cache-major
+    /// [`batched_attn`] kernel pooled over every (request, page-run)
+    /// pair — bitwise the element order the full forward's serial walk
+    /// uses for its final position (see the kernel's derivation
+    /// notes).
     ///
     /// A state whose K/V push hits arena exhaustion is flagged
     /// ([`DecodeState::failed`]) and its attention skipped (its output
@@ -359,11 +593,17 @@ impl ServeBlock {
         self.wq.apply_into(h1, rows, d, &mut scratch.q)?;
         self.wk.apply_into(h1, rows, d, &mut scratch.k)?;
         self.wv.apply_into(h1, rows, d, &mut scratch.v)?;
-        // attention: append this position's K/V, then one attn walk per
-        // head over the request's own page runs (ragged lengths — each
-        // request attends over its own history only)
+        // attention: serially append this position's K/V (keeping the
+        // arena mutation order deterministic), building the batched
+        // kernel's work lists — one span per live request, one item
+        // per page run of its history — then run the K-cache-major
+        // kernel once over the whole batch
         let (hd, scale) = (self.head_dim, 1.0 / (self.head_dim as f32).sqrt());
         let ctx = zeroed(&mut scratch.ctx, rows * d);
+        scratch.spans.clear();
+        scratch.items.clear();
+        scratch.span_starts.clear();
+        let mut panel_off = 0usize;
         for (i, state) in states.iter_mut().enumerate() {
             if state.failed {
                 continue; // quarantine pending: row i is never consumed
@@ -374,26 +614,45 @@ impl ServeBlock {
                 continue;
             }
             let t = state.table.len() - 1;
-            if scratch.scores.len() < t + 1 {
-                scratch.scores.resize(t + 1, 0.0);
-                scratch.prow.resize(t + 1, 0.0);
+            let item0 = scratch.items.len();
+            for (kv_off, t0, run_rows) in arena.run_offsets(&state.table) {
+                scratch.items.push(RunItem {
+                    span: scratch.spans.len(),
+                    kv_off,
+                    t0,
+                    rows: run_rows,
+                });
             }
-            for h in 0..self.n_heads {
-                let off = h * hd;
-                let qrow = &scratch.q[i * d + off..i * d + off + hd];
-                attn_row_segs(
-                    qrow,
-                    arena.runs(&state.table),
-                    d,
-                    off,
-                    t,
-                    scale,
-                    &mut scratch.scores,
-                    &mut scratch.prow[..t + 1],
-                    &mut ctx[i * d + off..i * d + off + hd],
-                );
-            }
+            scratch.span_starts.push(panel_off);
+            scratch.spans.push(AttnSpan {
+                q_row: i,
+                ctx_row: i,
+                t,
+                panel_off,
+                item0,
+                item1: scratch.items.len(),
+            });
+            panel_off += (t + 1) * self.n_heads;
         }
+        let (k_store, v_store) = arena.raw_kv();
+        batched_attn(
+            k_store,
+            v_store,
+            &scratch.q,
+            d,
+            self.n_heads,
+            hd,
+            scale,
+            &scratch.spans,
+            &scratch.items,
+            &scratch.span_starts,
+            &mut scratch.chunk_starts,
+            &mut scratch.qmat,
+            &mut scratch.score_panel,
+            &mut scratch.prow_t,
+            &mut scratch.vpanel,
+            ctx,
+        );
         self.wo.apply_into(ctx, rows, d, &mut scratch.attn)?;
         out.extend_from_slice(xs);
         for (o, &a) in out.iter_mut().zip(&scratch.attn) {
@@ -417,8 +676,10 @@ impl ServeBlock {
     /// Chunked prompt prefill for **one** request: process `rows`
     /// consecutive prompt positions in a single forward-shaped pass —
     /// LN and the Q/K/V/O/MLP panels batched over the whole chunk (the
-    /// admission-throughput win), all K/V rows pushed, then the same
-    /// per-position causal attention walk the one-row step runs.
+    /// admission-throughput win), all K/V rows pushed, then the
+    /// batched attention kernel with one span per position — page runs
+    /// clipped causally to `0..=t`, so each position scores the same
+    /// elements in the same serial-derived order as its one-row step.
     /// `out` is reset to the `[rows, d]` panel of block outputs; the
     /// chunk's last row is the request's next autoregressive input.
     ///
@@ -491,29 +752,59 @@ impl ServeBlock {
             }
         }
         if !state.failed {
-            let tmax = t0 + rows - 1;
-            if scratch.scores.len() < tmax + 1 {
-                scratch.scores.resize(tmax + 1, 0.0);
-                scratch.prow.resize(tmax + 1, 0.0);
-            }
+            // one span per chunk position, page runs clipped causally
+            // to rows 0..=t — position t0+j scores the same elements
+            // in the same order as its one-row decode step (the table
+            // may open with a CoW-forked prefix; shared pages walk
+            // identically to owned ones)
+            scratch.spans.clear();
+            scratch.items.clear();
+            scratch.span_starts.clear();
+            let mut panel_off = 0usize;
             for j in 0..rows {
                 let t = t0 + j;
-                for h in 0..self.n_heads {
-                    let off = h * hd;
-                    let qrow = &scratch.q[j * d + off..j * d + off + hd];
-                    attn_row_segs(
-                        qrow,
-                        arena.runs(&state.table),
-                        d,
-                        off,
-                        t,
-                        scale,
-                        &mut scratch.scores,
-                        &mut scratch.prow[..t + 1],
-                        &mut ctx[j * d + off..j * d + off + hd],
-                    );
+                let item0 = scratch.items.len();
+                for (kv_off, r0, run_rows) in arena.run_offsets(&state.table) {
+                    if r0 > t {
+                        break;
+                    }
+                    scratch.items.push(RunItem {
+                        span: scratch.spans.len(),
+                        kv_off,
+                        t0: r0,
+                        rows: run_rows.min(t + 1 - r0),
+                    });
                 }
+                scratch.span_starts.push(panel_off);
+                scratch.spans.push(AttnSpan {
+                    q_row: j,
+                    ctx_row: j,
+                    t,
+                    panel_off,
+                    item0,
+                    item1: scratch.items.len(),
+                });
+                panel_off += (t + 1) * self.n_heads;
             }
+            let (k_store, v_store) = arena.raw_kv();
+            batched_attn(
+                k_store,
+                v_store,
+                &scratch.q,
+                d,
+                self.n_heads,
+                hd,
+                scale,
+                &scratch.spans,
+                &scratch.items,
+                &scratch.span_starts,
+                &mut scratch.chunk_starts,
+                &mut scratch.qmat,
+                &mut scratch.score_panel,
+                &mut scratch.prow_t,
+                &mut scratch.vpanel,
+                ctx,
+            );
         }
         self.wo.apply_into(ctx, rows, d, &mut scratch.attn)?;
         out.extend_from_slice(xs);

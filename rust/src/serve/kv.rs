@@ -276,11 +276,45 @@ impl KvArena {
     /// an independent table over the same pages.  O(pages), zero row
     /// copies; divergence is handled lazily by [`KvArena::push`]'s
     /// CoW rule.
+    ///
+    /// Tail-page edge cases (the seams the prefix-cache scheduler and
+    /// beam/speculative forks actually hit, pinned in this module's
+    /// unit tests): forking a table whose tail page is filled to
+    /// exactly `page_tokens` shares *full* pages only, so **no CoW
+    /// split ever occurs** — either side's next push lands at slot 0
+    /// and allocates a fresh private page; forking an empty table
+    /// shares nothing and the fork grows fully independently.
     pub fn fork(&mut self, table: &PageTable) -> PageTable {
-        for &p in &table.pages {
+        self.fork_prefix(table, table.len)
+    }
+
+    /// [`KvArena::fork`] of the first `tokens` positions only: share
+    /// exactly the pages covering rows `0..tokens` (refcount bump, no
+    /// copies) and return a table of length `tokens`.  Pages past the
+    /// prefix stay private to `table` — the donor may keep pushing
+    /// rows beyond `tokens` without ever colliding with the fork.
+    ///
+    /// When `tokens` is a multiple of `page_tokens` (the prefix-cache
+    /// scheduler's page-granular case) every shared page is full, so
+    /// the fork's next push allocates a fresh page and no CoW split is
+    /// paid; a mid-page `tokens` shares the tail page too and the
+    /// fork's first push CoW-copies only its `tokens % page_tokens`
+    /// filled rows.
+    ///
+    /// # Panics
+    /// Debug-asserts `tokens <= table.len()`.
+    pub fn fork_prefix(&mut self, table: &PageTable, tokens: usize) -> PageTable {
+        debug_assert!(
+            tokens <= table.len,
+            "fork_prefix: {tokens} tokens from a {}-token table",
+            table.len
+        );
+        let n_pages = tokens.div_ceil(self.page_tokens);
+        let pages: Vec<u32> = table.pages[..n_pages].to_vec();
+        for &p in &pages {
             self.refcnt[p as usize] += 1;
         }
-        PageTable { pages: table.pages.clone(), len: table.len }
+        PageTable { pages, len: tokens }
     }
 
     /// Return every page `table` references (refcount-driven — shared
@@ -321,6 +355,31 @@ impl KvArena {
             remaining: table.len,
             idx: 0,
         }
+    }
+
+    /// The raw `(k, v)` page blobs — the K-cache-major storage the
+    /// batched attention kernel (`serve::decode`, DESIGN.md §15)
+    /// indexes directly via [`KvArena::run_offsets`], so its
+    /// per-(request, page-run) work items are plain offsets instead of
+    /// borrowed slices and can live in reusable scratch.
+    pub(crate) fn raw_kv(&self) -> (&[f32], &[f32]) {
+        (&self.k, &self.v)
+    }
+
+    /// [`KvArena::runs`] as plain indices: yields
+    /// `(elem_offset, first_row, rows)` per contiguous segment of
+    /// `table`, where the segment's K rows occupy
+    /// `raw_kv().0[elem_offset .. elem_offset + rows·d]` (V likewise)
+    /// and cover logical positions `first_row .. first_row + rows`.
+    pub(crate) fn run_offsets<'a>(
+        &self,
+        table: &'a PageTable,
+    ) -> impl Iterator<Item = (usize, usize, usize)> + 'a {
+        let (pt, pe, len) = (self.page_tokens, self.page_elems(), table.len);
+        table.pages.iter().enumerate().map(move |(i, &p)| {
+            let t0 = i * pt;
+            (p as usize * pe, t0, (len - t0).min(pt))
+        })
     }
 
     /// Copy `table`'s K rows into one contiguous `[len, d]` panel —
@@ -433,6 +492,135 @@ mod tests {
         assert!(a.pages_in_use() > 0, "sharer still holds pages");
         a.release(&mut r);
         assert_eq!(a.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn fork_of_exactly_full_tail_page_never_splits() {
+        // the page-granular prefix-cache case: every shared page is
+        // full, so NO CoW split may occur — the next push on either
+        // side allocates a fresh private page and the shared bytes
+        // never move
+        let mut a = KvArena::new(2, 3, 0).unwrap();
+        let mut parent = PageTable::new();
+        for i in 0..6 {
+            a.push(&mut parent, &[i as f32; 2], &[10.0 + i as f32; 2]).unwrap();
+        }
+        assert_eq!(parent.n_pages(), 2, "6 tokens at 3/page = 2 exactly-full pages");
+        let before_k = a.gather_k(&parent);
+        let child = a.fork(&parent);
+        assert_eq!(a.pages_in_use(), 2, "fork allocates nothing");
+        assert_eq!(child.len(), 6);
+        assert_eq!(child.pages, parent.pages, "same pages, shared");
+        for &p in &parent.pages {
+            assert_eq!(a.refcnt[p as usize], 2, "each full page holds both references");
+        }
+        // child's next push: slot 0 -> fresh page on the child ONLY,
+        // no filled-prefix copy (nothing to split)
+        let allocs_before = a.allocated_pages();
+        let mut child = child;
+        a.push(&mut child, &[100.0; 2], &[100.0; 2]).unwrap();
+        assert_eq!(a.pages_in_use(), 3, "one fresh page, zero CoW pages");
+        assert_eq!(child.n_pages(), 3);
+        assert_eq!(parent.n_pages(), 2, "parent untouched by the child's growth");
+        assert_eq!(a.refcnt[child.pages[2] as usize], 1, "tail page is private");
+        for &p in &parent.pages {
+            assert_eq!(a.refcnt[p as usize], 2, "shared pages keep both references");
+        }
+        // parent's next push likewise gets its own page; bytes of the
+        // shared prefix are byte-exact on both sides throughout
+        a.push(&mut parent, &[200.0; 2], &[200.0; 2]).unwrap();
+        assert_eq!(a.pages_in_use(), 4);
+        assert_ne!(parent.pages[2], child.pages[2], "divergent tails must not alias");
+        let pk = a.gather_k(&parent);
+        let ck = a.gather_k(&child);
+        assert_eq!(&pk[..12], &before_k[..], "parent prefix bytes moved");
+        assert_eq!(&ck[..12], &before_k[..], "child prefix bytes moved");
+        assert_eq!(&pk[12..], &[200.0; 2]);
+        assert_eq!(&ck[12..], &[100.0; 2]);
+        assert_eq!(a.allocated_pages(), allocs_before + 2, "exactly the two fresh tails");
+        a.release(&mut parent);
+        a.release(&mut child);
+        assert_eq!(a.pages_in_use(), 0, "refcounts reclaim shared and private alike");
+    }
+
+    #[test]
+    fn fork_of_empty_table_is_independent() {
+        let mut a = KvArena::new(2, 2, 0).unwrap();
+        let parent = PageTable::new();
+        let mut child = a.fork(&parent);
+        assert_eq!((child.len(), child.n_pages()), (0, 0));
+        assert_eq!(a.pages_in_use(), 0, "empty fork shares nothing");
+        // the fork is a fully independent table afterwards
+        a.push(&mut child, &[7.0; 2], &[8.0; 2]).unwrap();
+        assert_eq!(a.pages_in_use(), 1);
+        assert_eq!(a.refcnt[child.pages[0] as usize], 1);
+        assert_eq!(a.gather_k(&child), vec![7.0; 2]);
+        assert_eq!(parent.len(), 0);
+    }
+
+    #[test]
+    fn fork_prefix_shares_only_the_covered_pages() {
+        let mut a = KvArena::new(2, 2, 0).unwrap();
+        let mut parent = PageTable::new();
+        for i in 0..7 {
+            a.push(&mut parent, &[i as f32; 2], &[i as f32; 2]).unwrap();
+        }
+        assert_eq!(parent.n_pages(), 4);
+        // page-granular prefix (4 tokens = 2 full pages): pages past
+        // the prefix stay private to the parent
+        let mut child = a.fork_prefix(&parent, 4);
+        assert_eq!((child.len(), child.n_pages()), (4, 2));
+        assert_eq!(a.pages_in_use(), 4, "prefix fork allocates nothing");
+        assert_eq!(a.refcnt[parent.pages[0] as usize], 2);
+        assert_eq!(a.refcnt[parent.pages[1] as usize], 2);
+        assert_eq!(a.refcnt[parent.pages[2] as usize], 1, "unshared page must stay private");
+        assert_eq!(a.gather_k(&child), a.gather_k(&parent)[..4 * 2]);
+        // the child's next push is slot 0 on a fresh page — the
+        // parent's rows 4.. are invisible to and untouched by it
+        a.push(&mut child, &[50.0; 2], &[50.0; 2]).unwrap();
+        assert_eq!(a.gather_k(&parent)[4 * 2..5 * 2], [4.0; 2]);
+        assert_eq!(a.gather_k(&child)[4 * 2..], [50.0; 2]);
+        // a mid-page prefix (3 tokens) shares the half-full page and
+        // the child's first push CoW-copies exactly the filled row
+        let mut mid = a.fork_prefix(&parent, 3);
+        assert_eq!((mid.len(), mid.n_pages()), (3, 2));
+        let in_use = a.pages_in_use();
+        a.push(&mut mid, &[60.0; 2], &[60.0; 2]).unwrap();
+        assert_eq!(a.pages_in_use(), in_use + 1, "CoW split pays exactly one page");
+        assert_eq!(a.gather_k(&mid), vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 60.0, 60.0]);
+        assert_eq!(a.gather_k(&parent)[..7 * 2], {
+            let mut want = Vec::new();
+            for i in 0..7 {
+                want.extend_from_slice(&[i as f32; 2]);
+            }
+            want
+        });
+        a.release(&mut parent);
+        a.release(&mut child);
+        a.release(&mut mid);
+        assert_eq!(a.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn run_offsets_match_runs() {
+        let mut a = KvArena::new(2, 3, 0).unwrap();
+        let mut t = PageTable::new();
+        for i in 0..8 {
+            a.push(&mut t, &[i as f32; 2], &[-(i as f32); 2]).unwrap();
+        }
+        let (kd, vd) = a.raw_kv();
+        let offs: Vec<_> = a.run_offsets(&t).collect();
+        let runs: Vec<_> = a.runs(&t).collect();
+        assert_eq!(offs.len(), runs.len());
+        let mut t0_want = 0;
+        for ((off, t0, rows), (kseg, vseg, rrows)) in offs.iter().zip(&runs) {
+            assert_eq!(rows, rrows);
+            assert_eq!(*t0, t0_want);
+            assert_eq!(&kd[*off..off + rows * 2], &kseg[..rows * 2]);
+            assert_eq!(&vd[*off..off + rows * 2], &vseg[..rows * 2]);
+            t0_want += rows;
+        }
+        assert_eq!(t0_want, 8);
     }
 
     #[test]

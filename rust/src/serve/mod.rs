@@ -14,7 +14,13 @@
 //! admit/retire between steps, prompt admission running as chunked
 //! prefill.  Resident cache memory is bounded by tokens in flight
 //! (`--kv-pages` makes the bound hard), and [`KvArena::fork`] shares
-//! prefix pages copy-on-write.
+//! prefix pages copy-on-write.  With `--prefix-cache` the scheduler
+//! drives that seam itself (DESIGN.md §15): requests whose prompts
+//! share a page-aligned prefix with a resident request are admitted by
+//! CoW-forking the donor's prefix pages instead of re-prefilling them,
+//! and attention runs as one K-cache-major batched kernel
+//! (`decode::batched_attn`) that is bitwise equal to the serial
+//! reference at any batch shape, page size, or thread count.
 //!
 //! Requests are individually fault-isolated (DESIGN.md §11): each
 //! [`ServeOutput`] carries success-or-[`ServeError`], lifecycle limits
@@ -32,7 +38,8 @@
 //!
 //! Exposed on the CLI as `quanta-ft serve` (`--layers N` for deep
 //! stacks; `--kv-pages`, `--page-size`, `--prefill-chunk` for the
-//! cache budget); properties (decode ≡ full-recompute per position,
+//! cache budget; `--prefix-cache` for shared-prefix admission);
+//! properties (decode ≡ full-recompute per position,
 //! merged ≡ streaming at 1e-5, paged ≡ contiguous bitwise at every
 //! page size, scheduler invariance under arrival order / `QFT_THREADS`
 //! / dispatch mode, per-request isolation of mixed batches) live in

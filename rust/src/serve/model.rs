@@ -73,6 +73,24 @@ pub trait DecodeEngine {
     /// `ServeError::CacheExhausted`.
     fn session_failed(s: &Self::Session) -> bool;
 
+    /// CoW-fork the first `tokens` cached positions of `donor` into a
+    /// fresh session — the prefix-cache admission seam (and the hook
+    /// beam/speculative decode rides): the pages covering the prefix
+    /// are shared by refcount at every layer, zero rows are copied,
+    /// and the child prefills its own continuation from position
+    /// `tokens`.  `tokens` must not exceed the donor's cached length.
+    fn fork_session(
+        &self,
+        donor: &Self::Session,
+        arena: &mut KvArena,
+        tokens: usize,
+    ) -> Self::Session;
+
+    /// Arena pages the session currently maps, summed over all layers
+    /// — shared (forked) pages count once per mapping session, which
+    /// is what the scheduler's shared-pages stat wants to expose.
+    fn session_pages(s: &Self::Session) -> usize;
+
     /// Decode one new token for each of `sessions.len()` concurrent
     /// requests; `xs` is the row-major `[requests, d]` panel of new
     /// inputs, and `out` is reset to the panel of each request's
@@ -124,6 +142,14 @@ impl DecodeEngine for ServeBlock {
 
     fn session_failed(s: &DecodeState) -> bool {
         s.failed()
+    }
+
+    fn fork_session(&self, donor: &DecodeState, arena: &mut KvArena, tokens: usize) -> DecodeState {
+        donor.fork_prefix(arena, tokens)
+    }
+
+    fn session_pages(s: &DecodeState) -> usize {
+        s.n_pages()
     }
 
     fn decode_step(
@@ -193,6 +219,20 @@ impl SessionState {
     /// [`DecodeState::fork`].
     pub fn fork(&self, arena: &mut KvArena) -> SessionState {
         SessionState { layers: self.layers.iter().map(|s| s.fork(arena)).collect() }
+    }
+
+    /// CoW fork of the first `tokens` positions at every layer — see
+    /// [`DecodeState::fork_prefix`].  Layer caches advance in
+    /// lockstep, so one token count covers the whole stack.
+    pub fn fork_prefix(&self, arena: &mut KvArena, tokens: usize) -> SessionState {
+        SessionState {
+            layers: self.layers.iter().map(|s| s.fork_prefix(arena, tokens)).collect(),
+        }
+    }
+
+    /// Arena pages mapped across every layer.
+    pub fn n_pages(&self) -> usize {
+        self.layers.iter().map(|s| s.n_pages()).sum()
     }
 
     pub(crate) fn layer_mut(&mut self, l: usize) -> &mut DecodeState {
@@ -391,6 +431,19 @@ impl DecodeEngine for ServeModel {
 
     fn session_failed(s: &SessionState) -> bool {
         s.failed()
+    }
+
+    fn fork_session(
+        &self,
+        donor: &SessionState,
+        arena: &mut KvArena,
+        tokens: usize,
+    ) -> SessionState {
+        donor.fork_prefix(arena, tokens)
+    }
+
+    fn session_pages(s: &SessionState) -> usize {
+        s.n_pages()
     }
 
     fn decode_step(

@@ -79,6 +79,24 @@
 //! permutations, batch sizes, page sizes, prefill chunks, and thread
 //! counts.  (Shedding is the deliberate exception: which requests a
 //! full queue sheds depends on arrival order by definition.)
+//!
+//! ## Prefix-cache admission (DESIGN.md §15)
+//!
+//! With [`ServeConfig::prefix_cache`] on, intake looks for an active
+//! request whose prompt opens with the same rows (bitwise,
+//! `f32::to_bits`) as the arrival's.  The shared prefix — floored to
+//! whole pages, capped at the arrival's second-to-last prompt row —
+//! is then *forked* ([`DecodeEngine::fork_session`] →
+//! `KvArena::fork_prefix`) instead of re-prefilled: the follower's
+//! session maps the donor's prefix pages by refcount and prefills
+//! only its tail.  This cannot change any output bit: a K/V row is a
+//! function of its own input row alone, so the donor's cached prefix
+//! rows are bit-identical to the rows the follower would have
+//! computed — only resident pages and prefill work drop
+//! (`stats.prefix_hits` / `stats.shared_prefix_pages`).  The fork is
+//! deferred until the donor has prefilled past the shared prefix
+//! (same sweep under whole-prompt prefill), and falls back to a plain
+//! prefill if the donor retires first.
 
 use crate::serve::decode::{DecodeScratch, ServeBlock};
 use crate::serve::kv::{self, KvArena};
@@ -200,6 +218,12 @@ pub struct ServeConfig {
     /// (the pre-paging schedule).  Any value yields bitwise identical
     /// outputs; only wallclock and step accounting change.
     pub prefill_chunk: usize,
+    /// Prefix-cache admission: admit a request whose prompt opens with
+    /// an active request's rows (bitwise) by CoW-forking the shared
+    /// whole pages instead of re-prefilling them.  Outputs are bitwise
+    /// unchanged; resident pages and prefill rows drop (see the
+    /// module-level notes).
+    pub prefix_cache: bool,
 }
 
 impl Default for ServeConfig {
@@ -213,6 +237,7 @@ impl Default for ServeConfig {
             kv_pages: 0,
             page_tokens: kv::default_page_tokens(),
             prefill_chunk: 0,
+            prefix_cache: false,
         }
     }
 }
@@ -220,8 +245,8 @@ impl Default for ServeConfig {
 /// Builder-style deviations from [`ServeConfig::default`], one method
 /// per CLI flag (`--max-batch`, `--deadline`, `--token-budget`,
 /// `--queue-cap`, `--shed-policy`, `--kv-pages`, `--page-size`,
-/// `--prefill-chunk`) so config construction reads the same at every
-/// site.
+/// `--prefill-chunk`, `--prefix-cache`) so config construction reads
+/// the same at every site.
 impl ServeConfig {
     pub fn with_max_batch(mut self, max_batch: usize) -> ServeConfig {
         self.max_batch = max_batch;
@@ -260,6 +285,11 @@ impl ServeConfig {
 
     pub fn with_prefill_chunk(mut self, prefill_chunk: usize) -> ServeConfig {
         self.prefill_chunk = prefill_chunk;
+        self
+    }
+
+    pub fn with_prefix_cache(mut self, prefix_cache: bool) -> ServeConfig {
+        self.prefix_cache = prefix_cache;
         self
     }
 }
@@ -330,6 +360,13 @@ pub struct ServeStats {
     /// Peak resident K/V cache bytes during the run — the
     /// bounded-memory headline the `kv_serve` bench gates on.
     pub resident_kv_bytes: usize,
+    /// Prefix-cache fork admissions: requests admitted by CoW-sharing
+    /// a donor's prompt-prefix pages instead of re-prefilling them.
+    pub prefix_hits: usize,
+    /// Pages mapped by freshly forked sessions at fork time, summed
+    /// over admissions (a shared page counts once per borrowing
+    /// session) — the shared-pages row the serve CLI prints.
+    pub shared_prefix_pages: usize,
 }
 
 impl ServeStats {
@@ -347,10 +384,33 @@ impl ServeStats {
 struct Active<S> {
     req: ServeRequest,
     state: S,
-    /// Prompt rows prefilled so far (== prompt_len ⇒ generating).
+    /// Prompt rows cached so far — prefilled or CoW-shared
+    /// (== prompt_len ⇒ generating).
     fed: usize,
     generated: Vec<f32>,
     admitted_at: usize,
+    /// Admission serial, stable across sweep rebuilds — how a pending
+    /// fork names its donor.
+    adm: u64,
+    /// Deferred prefix fork: (donor admission serial, shared tokens).
+    /// Resolved in the retire sweep once the donor has prefilled past
+    /// the shared prefix; cleared (plain prefill) if the donor retires
+    /// first.
+    pending_fork: Option<(u64, usize)>,
+}
+
+/// Leading whole rows on which two row-major prompts agree bitwise
+/// (`f32::to_bits` equality, so ±0.0 and NaN payloads are distinct —
+/// exactly the cache-key semantics CoW page sharing needs).
+fn common_prefix_rows(a: &[f32], b: &[f32], d: usize) -> usize {
+    let max_rows = (a.len() / d).min(b.len() / d);
+    for r in 0..max_rows {
+        let (ra, rb) = (&a[r * d..(r + 1) * d], &b[r * d..(r + 1) * d]);
+        if ra.iter().zip(rb).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return r;
+        }
+    }
+    max_rows
 }
 
 /// The scheduler's per-run mutable compute state: the one KV arena
@@ -436,6 +496,32 @@ impl<E: DecodeEngine> BatchScheduler<E> {
         None
     }
 
+    /// Best prefix-cache donor for `req` among the active requests:
+    /// the first one sharing the most whole leading prompt rows
+    /// (bitwise), floored to whole pages and capped at `req`'s
+    /// second-to-last prompt row — the follower always computes its
+    /// own final prompt output, so its first generated vector never
+    /// depends on the fork.  Returns `(donor admission serial, shared
+    /// tokens)`.
+    fn find_donor(
+        &self,
+        active: &[Active<E::Session>],
+        req: &ServeRequest,
+        d: usize,
+    ) -> Option<(u64, usize)> {
+        let plen = req.prompt_len(d);
+        let pt = self.cfg.page_tokens;
+        let mut best: Option<(u64, usize)> = None;
+        for a in active {
+            let rows = common_prefix_rows(&a.req.prompt, &req.prompt, d);
+            let share = rows.min(plen - 1) / pt * pt;
+            if share > 0 && best.map_or(true, |(_, s)| share > s) {
+                best = Some((a.adm, share));
+            }
+        }
+        best
+    }
+
     /// Drive `requests` (admitted in the given order as slots free up)
     /// to completion; outputs are returned **sorted by id** so callers
     /// and tests compare runs independently of completion order.
@@ -505,6 +591,7 @@ impl<E: DecodeEngine> BatchScheduler<E> {
         ws.arena.reset_all();
         let mut active: Vec<Active<E::Session>> = Vec::new();
         let mut free_states: Vec<E::Session> = Vec::new();
+        let mut adm_next: u64 = 0;
         let mut xs: Vec<f32> = Vec::new();
         let mut dec_out: Vec<f32> = Vec::new();
         let mut pre_out: Vec<f32> = Vec::new();
@@ -527,18 +614,27 @@ impl<E: DecodeEngine> BatchScheduler<E> {
             if active.is_empty() && queue.is_empty() {
                 break;
             }
-            // admit into free slots, preserving arrival order
+            // admit into free slots, preserving arrival order; with
+            // the prefix cache on, each arrival scans the actives
+            // (including ones admitted just above, so groups arriving
+            // together chain off their first member) for the longest
+            // bitwise-shared prompt prefix
             while !draining && active.len() < self.cfg.max_batch {
                 let Some(req) = queue.pop_front() else { break };
                 let mut state = free_states.pop().unwrap_or_else(|| self.engine.new_session());
                 self.engine.reset_session(&mut state, &mut ws.arena);
+                let pending_fork =
+                    if self.cfg.prefix_cache { self.find_donor(&active, &req, d) } else { None };
                 active.push(Active {
                     state,
                     fed: 0,
                     generated: Vec::with_capacity(req.n_gen * d),
                     admitted_at: stats.steps,
+                    adm: adm_next,
+                    pending_fork,
                     req,
                 });
+                adm_next += 1;
             }
             stats.peak_batch = stats.peak_batch.max(active.len());
             // pack each GENERATING request's next input row (requests
@@ -591,7 +687,40 @@ impl<E: DecodeEngine> BatchScheduler<E> {
                     admitted_at: a.admitted_at,
                     finished_at: steps,
                 };
+                let mut fork_wait = false;
                 if a.fed < plen {
+                    // resolve a deferred prefix fork first: once the
+                    // donor (earlier in admission order, so already
+                    // swept this iteration) has prefilled past the
+                    // shared prefix, swap the follower's empty session
+                    // for a CoW fork of the prefix pages and prefill
+                    // only the tail.  A donor that retired forks
+                    // nothing — plain prefill.
+                    if let Some((donor_adm, share)) = a.pending_fork {
+                        match active.iter().find(|o| o.adm == donor_adm) {
+                            Some(donor) if donor.fed >= share => {
+                                let fork =
+                                    self.engine.fork_session(&donor.state, &mut ws.arena, share);
+                                let mut empty = std::mem::replace(&mut a.state, fork);
+                                self.engine.reset_session(&mut empty, &mut ws.arena);
+                                free_states.push(empty);
+                                a.fed = share;
+                                a.pending_fork = None;
+                                stats.prefix_hits += 1;
+                                stats.shared_prefix_pages += E::session_pages(&a.state);
+                            }
+                            // donor still inside the shared prefix
+                            // (small prefill_chunk): wait a sweep —
+                            // the deadline below stays live
+                            Some(_) => fork_wait = true,
+                            None => a.pending_fork = None,
+                        }
+                    }
+                }
+                if fork_wait {
+                    // no rows this iteration; falls through to the
+                    // deadline check / survivor re-push below
+                } else if a.fed < plen {
                     // chunked prefill: up to prefill_chunk prompt rows
                     // in one batched pass (0 = all remaining)
                     let left = plen - a.fed;
@@ -993,5 +1122,103 @@ mod tests {
                 "chunked prefill must not take more iterations than row-at-a-time"
             );
         }
+    }
+
+    #[test]
+    fn prefix_cache_forks_instead_of_reprefilling() {
+        // 4 requests sharing a 4-row prompt prefix (2 whole pages at
+        // page_tokens 2) with unique 2-row tails: the followers must
+        // fork the donor's prefix pages, skip the shared prefill rows,
+        // and still produce bitwise the plain-run outputs
+        let mut rng = Rng::new(101);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let mut shared = vec![0.0f32; 4 * d];
+        rng.fill_normal(&mut shared, 1.0);
+        let reqs: Vec<ServeRequest> = (0..4)
+            .map(|i| {
+                let mut prompt = shared.clone();
+                let mut tail = vec![0.0f32; 2 * d];
+                rng.fill_normal(&mut tail, 1.0);
+                prompt.extend_from_slice(&tail);
+                ServeRequest { id: i, prompt, n_gen: 3 }
+            })
+            .collect();
+        let cfg = ServeConfig::default().with_max_batch(4).with_page_tokens(2);
+        let plain = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (base, base_stats) = plain.run(reqs.clone()).unwrap();
+        assert_eq!(base_stats.prefix_hits, 0);
+        let sched = BatchScheduler::with_config(sb, cfg.with_prefix_cache(true)).unwrap();
+        let (out, stats) = sched.run(reqs).unwrap();
+        assert_eq!(stats.prefix_hits, 3, "every follower must fork, not re-prefill");
+        assert_eq!(stats.shared_prefix_pages, 3 * 2, "each fork maps the 2 shared pages");
+        for (a, b) in base.iter().zip(&out) {
+            assert_eq!(a.result, b.result, "prefix cache changed request {} bits", a.id);
+        }
+        assert!(
+            stats.pages_in_use < base_stats.pages_in_use,
+            "sharing must lower the resident-page peak ({} vs {})",
+            stats.pages_in_use,
+            base_stats.pages_in_use
+        );
+        // the 4 shared prompt rows are skipped by each of 3 followers
+        assert_eq!(base_stats.tokens - stats.tokens, 3 * 4);
+        assert_eq!((stats.completed, stats.failed, stats.shed), (4, 0, 0));
+    }
+
+    #[test]
+    fn prefix_cache_waits_for_chunked_donors_and_survives_retires() {
+        // regime 1 — prefill_chunk 1: the donor crosses the shared
+        // 2-row prefix one row per sweep, so the follower must wait a
+        // sweep before its fork resolves (fed 1 < share 2 at the first
+        // sweep, fork at the second)
+        let mut rng = Rng::new(102);
+        let sb = tiny_serve_block(&mut rng);
+        let d = sb.d();
+        let mut shared = vec![0.0f32; 2 * d];
+        rng.fill_normal(&mut shared, 1.0);
+        let mk = |shared: &[f32], id: u64, n_gen: usize, rng: &mut Rng| {
+            let mut prompt = shared.to_vec();
+            let mut tail = vec![0.0f32; d];
+            rng.fill_normal(&mut tail, 1.0);
+            prompt.extend_from_slice(&tail);
+            ServeRequest { id, prompt, n_gen }
+        };
+        let reqs = vec![mk(&shared, 0, 4, &mut rng), mk(&shared, 1, 4, &mut rng)];
+        let cfg = ServeConfig::default()
+            .with_max_batch(2)
+            .with_page_tokens(1)
+            .with_prefill_chunk(1);
+        let plain = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (base, _) = plain.run(reqs.clone()).unwrap();
+        let sched = BatchScheduler::with_config(sb.clone(), cfg.with_prefix_cache(true)).unwrap();
+        let (out, stats) = sched.run(reqs).unwrap();
+        for (a, b) in base.iter().zip(&out) {
+            assert_eq!(a.result, b.result, "request {} drifted under chunked forks", a.id);
+        }
+        assert_eq!(stats.prefix_hits, 1, "the follower must fork after waiting");
+        assert_eq!((stats.completed, stats.failed), (2, 0));
+
+        // regime 2 — the donor retires in the very sweep its follower
+        // was admitted (before the follower is processed): the pending
+        // fork must clear and fall back to a plain prefill.  Request 0
+        // shares nothing and just occupies the second slot; donor 1
+        // (n_gen 2) finishes its last decode row in the sweep that
+        // admits follower 2.
+        let mut rng2 = Rng::new(103);
+        let mut other = vec![0.0f32; 3 * d];
+        rng2.fill_normal(&mut other, 1.0);
+        let occupier = ServeRequest { id: 0, prompt: other, n_gen: 1 };
+        let reqs2 =
+            vec![occupier, mk(&shared, 1, 2, &mut rng2), mk(&shared, 2, 2, &mut rng2)];
+        let plain2 = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (base2, _) = plain2.run(reqs2.clone()).unwrap();
+        let sched2 = BatchScheduler::with_config(sb, cfg.with_prefix_cache(true)).unwrap();
+        let (out2, stats2) = sched2.run(reqs2).unwrap();
+        for (a, b) in base2.iter().zip(&out2) {
+            assert_eq!(a.result, b.result, "request {} drifted after its donor retired", a.id);
+        }
+        assert_eq!(stats2.prefix_hits, 0, "retired donor must not be forked");
+        assert_eq!((stats2.completed, stats2.failed, stats2.shed), (3, 0, 0));
     }
 }

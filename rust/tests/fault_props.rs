@@ -16,7 +16,9 @@
 //!   bitwise unchanged.
 //! * **Checkpoint hardening**: a torn (crashed) write never damages
 //!   the previous checkpoint; truncated and bit-rotted files are
-//!   rejected without panic.
+//!   rejected without panic; a forged v4 manifest with a *valid* CRC
+//!   claiming an absurd `n_streams` is rejected on the size bound
+//!   before any allocation.
 //! * **Trainer rollback**: an injected NaN loss triggers rollback +
 //!   LR backoff and the run still completes; a *persistent* NaN loss
 //!   exhausts the retries and returns a structured diverged outcome.
@@ -250,6 +252,36 @@ fn injected_faults_are_contained() {
     std::fs::write(&mpath, &rot_m).unwrap();
     let err = checkpoint::load_manifest(&mpath).unwrap_err().to_string();
     assert!(err.contains("CRC"), "manifest bit rot not caught by CRC: {err}");
+
+    // an oversized n_streams header with a *valid* CRC must fail on
+    // the size bound — before any allocation — not ride in under the
+    // checksum: patch the stream count in a good v4 image to u32::MAX
+    // and re-sign it (bitwise IEEE CRC-32, same check value the writer
+    // pins on "123456789")
+    fn crc32(bytes: &[u8]) -> u32 {
+        let mut c = !0u32;
+        for &b in bytes {
+            c ^= b as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { (c >> 1) ^ 0xEDB8_8320 } else { c >> 1 };
+            }
+        }
+        !c
+    }
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    let mut forged = good_m.clone();
+    // layout: magic(8) | crc(4) | meta_len(4) | meta | n_streams(4) | …
+    let meta_len = u32::from_le_bytes(forged[12..16].try_into().unwrap()) as usize;
+    let ns_off = 16 + meta_len;
+    forged[ns_off..ns_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let crc = crc32(&forged[12..]);
+    forged[8..12].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(&mpath, &forged).unwrap();
+    let err = checkpoint::load_manifest(&mpath).unwrap_err().to_string();
+    assert!(
+        !err.contains("CRC") && err.contains("streams"),
+        "oversized n_streams must be rejected on the size bound, got: {err}"
+    );
     std::fs::remove_dir_all(&dir).ok();
 
     // cross-kind probes never cross-fire: a torn-write spec at the

@@ -25,6 +25,16 @@
 //!   exactly the request that exhausts it (`CacheExhausted`), leaves
 //!   the survivors bitwise unchanged, and reclaims retired requests'
 //!   pages for requests admitted later in the same run.
+//! * **Forked-table decode parity**: a child forked from a donor's
+//!   prefix (`DecodeState::fork_prefix`) and continued with its own
+//!   rows is bitwise equal to an unshared request that prefilled the
+//!   same tokens — at every page size × `QFT_THREADS`, alone or
+//!   batch-packed next to its still-decoding donor, with zero pages
+//!   copied at fork time.
+//! * **Prefix-cache admission**: `--prefix-cache` runs end to end
+//!   through the scheduler — shared-prefix requests fork instead of
+//!   re-prefilling, outputs stay bitwise equal to the plain run, and
+//!   peak resident pages drop.
 //!
 //! Everything lives in ONE `#[test]`: `QFT_THREADS` is process-global
 //! env state, so sweeping it from parallel test threads would race
@@ -190,4 +200,112 @@ fn paged_kv_properties() {
         );
     }
     assert_eq!(stats.pages_in_use, 8, "peak pages must saturate exactly at the budget");
+
+    // ---- (e) forked-table decode parity, across page sizes × threads
+    // the donor decodes all 13 rows of xs; a child forked at 8 shared
+    // rows continues with zs's tail, batch-packed NEXT TO the donor —
+    // and must be bitwise equal to an unshared request that prefilled
+    // zs from scratch.  K/V rows depend only on their own input row,
+    // so the donor's cached prefix is bit-identical to what the child
+    // would have written.
+    let shared_rows = 8usize;
+    let mut ys = vec![0.0f32; seq * dm];
+    Rng::new(402).fill_normal(&mut ys, 1.0);
+    let mut zs = xs[..shared_rows * dm].to_vec();
+    zs.extend_from_slice(&ys[shared_rows * dm..]);
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("QFT_THREADS", threads);
+        for page_tokens in [1usize, 4, 16] {
+            let want = paged_decode(&merged, &zs, seq, page_tokens);
+            let mut arena = KvArena::new(dm, page_tokens, 0).unwrap();
+            let mut scratch = DecodeScratch::new();
+            let mut donor = DecodeState::new(dm);
+            let mut step = Vec::new();
+            for t in 0..seq {
+                merged
+                    .decode_step(
+                        &mut arena,
+                        &mut scratch,
+                        &mut [&mut donor],
+                        &xs[t * dm..(t + 1) * dm],
+                        &mut step,
+                    )
+                    .unwrap();
+            }
+            let pages_before = arena.pages_in_use();
+            let mut child = donor.fork_prefix(&mut arena, shared_rows);
+            assert_eq!(
+                arena.pages_in_use(),
+                pages_before,
+                "fork_prefix must share pages, not copy them (page_tokens={page_tokens})"
+            );
+            let mut got = Vec::new();
+            let mut rows = vec![0.0f32; 2 * dm];
+            for t in shared_rows..seq {
+                // donor keeps decoding fresh rows in slot 0; the child's
+                // output (slot 1) must not see it
+                rows[..dm].copy_from_slice(&ys[(t - shared_rows) * dm..(t - shared_rows + 1) * dm]);
+                rows[dm..].copy_from_slice(&zs[t * dm..(t + 1) * dm]);
+                merged
+                    .decode_step(
+                        &mut arena,
+                        &mut scratch,
+                        &mut [&mut donor, &mut child],
+                        &rows,
+                        &mut step,
+                    )
+                    .unwrap();
+                got.extend_from_slice(&step[dm..]);
+            }
+            assert_eq!(
+                got,
+                &want[shared_rows * dm..],
+                "forked decode differs from unshared at page_tokens={page_tokens} \
+                 QFT_THREADS={threads}"
+            );
+        }
+    }
+
+    // ---- (f) prefix-cache admission end to end through the scheduler
+    // 4 requests, 6 shared + 2 unique prompt rows, n_gen 4: with
+    // --prefix-cache the followers fork instead of re-prefilling; bits
+    // must match the plain run while peak resident pages drop
+    let mut shared_p = vec![0.0f32; 6 * dm];
+    Rng::new(420).fill_normal(&mut shared_p, 1.0);
+    let mkp = |id: u64, seed: u64| {
+        let mut prompt = shared_p.clone();
+        let mut tail = vec![0.0f32; 2 * dm];
+        Rng::new(seed).fill_normal(&mut tail, 1.0);
+        prompt.extend_from_slice(&tail);
+        ServeRequest { id, prompt, n_gen: 4 }
+    };
+    let preqs: Vec<ServeRequest> = (0..4).map(|i| mkp(i, 430 + i)).collect();
+    for threads in ["1", "8"] {
+        std::env::set_var("QFT_THREADS", threads);
+        for page_tokens in [1usize, 4] {
+            let cfg = ServeConfig::default().with_max_batch(4).with_page_tokens(page_tokens);
+            let plain = BatchScheduler::with_config(merged.clone(), cfg).unwrap();
+            let (base, base_stats) = plain.run(preqs.clone()).unwrap();
+            let caching =
+                BatchScheduler::with_config(merged.clone(), cfg.with_prefix_cache(true)).unwrap();
+            let (out, stats) = caching.run(preqs.clone()).unwrap();
+            for (a, b) in base.iter().zip(&out) {
+                assert_eq!(
+                    a.result, b.result,
+                    "request {} drifted under --prefix-cache at page_tokens={page_tokens} \
+                     QFT_THREADS={threads}",
+                    a.id
+                );
+            }
+            assert_eq!((stats.completed, stats.failed, stats.shed), (4, 0, 0));
+            assert_eq!(stats.prefix_hits, 3, "every follower must fork off the first request");
+            assert!(
+                stats.pages_in_use < base_stats.pages_in_use,
+                "prefix sharing must reduce peak pages ({} vs {} at page_tokens={page_tokens})",
+                stats.pages_in_use,
+                base_stats.pages_in_use
+            );
+        }
+    }
+    std::env::remove_var("QFT_THREADS");
 }

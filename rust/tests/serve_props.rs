@@ -24,6 +24,10 @@
 //!   and every healthy request's output is **bitwise identical** to
 //!   serving the healthy subset alone — again across thread counts and
 //!   arrival permutations.
+//! * **Stats single-count**: every submitted request increments exactly
+//!   one of `completed`/`failed`/`shed`, and the counters agree with
+//!   the per-request results — across shed policies, page budgets,
+//!   deadlines, and prefix-cache admission over the full mixed load.
 //!
 //! Everything lives in ONE `#[test]`: `QFT_THREADS` / `QFT_DISPATCH`
 //! are process-global env state, so sweeping them from parallel test
@@ -370,5 +374,41 @@ fn decode_parity_and_scheduler_invariance() {
                 assert_eq!(o.error(), Some(&ServeError::Shed), "{policy:?}: request {}", o.id);
             }
         }
+    }
+
+    // ---- (f) stats single-count invariant ---------------------------
+    // one output and exactly one counter increment per submission, no
+    // matter how a request leaves the system — completion, structured
+    // quarantine (reject / NaN / deadline / budget / cache exhaustion),
+    // or shedding — and no matter which admission path brought it in
+    let mixed_all: Vec<ServeRequest> = healthy.iter().cloned().chain(faulty).collect();
+    let base5 = ServeConfig::default().with_max_batch(5);
+    let sweep = [
+        ("baseline faults", base5.with_deadline(8).with_token_budget(30)),
+        ("reject-new", base5.with_queue_cap(2).with_shed_policy(ShedPolicy::RejectNew)),
+        (
+            "drop-oldest",
+            base5.with_deadline(8).with_queue_cap(3).with_shed_policy(ShedPolicy::DropOldest),
+        ),
+        ("tight pages", base5.with_page_tokens(1).with_kv_pages(6)),
+        ("prefix cache", base5.with_prefix_cache(true).with_page_tokens(2).with_deadline(8)),
+    ];
+    for (label, cfg) in sweep {
+        let s = BatchScheduler::with_config(sb.clone(), cfg).unwrap();
+        let (out, stats) = s.run(mixed_all.clone()).unwrap();
+        assert_eq!(out.len(), mixed_all.len(), "{label}: one output per submission");
+        let ok = out.iter().filter(|o| o.result.is_ok()).count();
+        let shed = out.iter().filter(|o| o.error() == Some(&ServeError::Shed)).count();
+        let failed = out.len() - ok - shed;
+        assert_eq!(
+            (stats.completed, stats.failed, stats.shed),
+            (ok, failed, shed),
+            "{label}: counters disagree with per-request results"
+        );
+        assert_eq!(
+            stats.completed + stats.failed + stats.shed,
+            mixed_all.len(),
+            "{label}: a submission was double-counted or dropped"
+        );
     }
 }
